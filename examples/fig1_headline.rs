@@ -1,0 +1,71 @@
+//! Fig. 1 — the headline cross-task comparison: one compact sweep over
+//! tasks x bit-widths x methods, the union of Tables 5-8 at reduced
+//! budget (this is the figure the paper opens with).
+//!
+//! Run:  cargo run --release --offline --example fig1_headline
+//!       [--size tiny] [--bits 4,3,2] [--ft-steps 60]
+
+use repro::config::args::Args;
+use repro::data::tasks::{ArithTask, ClassifyTask, McTask};
+use repro::data::ZipfMarkovCorpus;
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::train::{FinetuneData, LoraPosition};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits_list = args.u32_list_or("bits", &[4, 3, 2])?;
+    let ft_steps = args.usize_or("ft-steps", 60)?;
+    let methods = args.list_or("methods", &["qlora", "loftq", "apiq-bw"]);
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+
+    let corpus = ZipfMarkovCorpus::new(env.cfg.vocab, 17);
+    let glue = ClassifyTask::new(env.cfg.vocab, 3, 101);
+    let gsm = ArithTask::add(env.cfg.vocab, 909);
+    let cs = McTask::pattern(env.cfg.vocab, 1);
+
+    let mut table = TableBuilder::new(format!("Fig. 1 — headline sweep ({size})")).header(&[
+        "method", "bits", "WikiText* ppl", "GLUE* acc", "GSM8K* acc", "CS* acc",
+    ]);
+
+    for &bits in &bits_list {
+        for method in &methods {
+            // LM
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(&mut r, DEFAULT_RANK, DEFAULT_GROUP,
+                         &FinetuneData::Corpus(&corpus), ft_steps, 1e-3, LoraPosition::All)?;
+            let ppl = env.ppl(&r, DEFAULT_RANK, DEFAULT_GROUP, 4)?;
+            // GLUE*
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(&mut r, DEFAULT_RANK, DEFAULT_GROUP,
+                         &FinetuneData::Task(&glue), ft_steps, 1e-3, LoraPosition::All)?;
+            let acc_glue = env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, &glue, 6, true)?;
+            // GSM8K*
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(&mut r, DEFAULT_RANK, DEFAULT_GROUP,
+                         &FinetuneData::Task(&gsm), ft_steps, 1e-3, LoraPosition::All)?;
+            let acc_gsm = env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, &gsm, 6, false)?;
+            // commonsense*
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(&mut r, DEFAULT_RANK, DEFAULT_GROUP,
+                         &FinetuneData::Task(&cs), ft_steps, 1e-3, LoraPosition::All)?;
+            let acc_cs = env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, &cs, 6, true)?;
+
+            println!(
+                "[fig1] {method} {bits}-bit: ppl {ppl:.2} glue {:.1} gsm {:.1} cs {:.1}",
+                acc_glue * 100.0, acc_gsm * 100.0, acc_cs * 100.0
+            );
+            table.row(vec![
+                method.clone(),
+                bits.to_string(),
+                TableBuilder::num(ppl),
+                TableBuilder::pct(acc_glue),
+                TableBuilder::pct(acc_gsm),
+                TableBuilder::pct(acc_cs),
+            ]);
+        }
+    }
+    println!("{}", table.markdown());
+    Ok(())
+}

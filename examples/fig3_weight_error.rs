@@ -1,0 +1,88 @@
+//! Fig. 3 / Fig. A.1 — per-layer weight error ‖W − (Q + A·Bᵀ)‖_F.
+//!
+//! Left panel analogue:  e = ‖δW‖(QLoRA) − ‖δW‖(LoftQ)   (LoftQ wins)
+//! Middle panel analogue: e = ‖δW‖(LoftQ) − ‖δW‖(ApiQ)   (ApiQ mostly wins
+//! despite optimizing activations, the paper's "dual effectiveness")
+//!
+//! Run:  cargo run --release --offline --example fig3_weight_error
+//!       [--size tiny] [--bits 2]
+
+use repro::config::args::Args;
+use repro::metrics::{effective_weight, weight_error, TableBuilder};
+use repro::model::LINEAR_NAMES;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK, DEFAULT_SCALE};
+use repro::quant::{fakequant, nf_fakequant, QuantSpec};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits = args.u32_or("bits", 2)?;
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+    let spec = QuantSpec::new(bits, DEFAULT_GROUP);
+
+    println!("[fig3] quantizing with qlora/loftq/apiq-bw ...");
+    let r_qlora = env.quantize("qlora", bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+    let r_loftq = env.quantize("loftq", bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+    let r_apiq = env.quantize("apiq-bw", bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+
+    let mut table = TableBuilder::new(format!(
+        "Fig. 3 — weight error per layer ({size}, {bits}-bit): relative improvements"
+    ))
+    .header(&[
+        "layer",
+        "|dW| qlora",
+        "|dW| loftq",
+        "|dW| apiq",
+        "qlora-loftq",
+        "loftq-apiq",
+    ]);
+
+    let (mut wins_loftq, mut wins_apiq, mut total) = (0usize, 0usize, 0usize);
+    for b in 0..env.cfg.n_layers {
+        for lin in LINEAR_NAMES {
+            let key = env.cfg.weight_key(b, lin);
+            let w = env.params.require(&key)?;
+
+            // QLoRA: NF-quantized weights, B = 0 -> Q_eff = nf(W)
+            let e_qlora = weight_error(w, &nf_fakequant(w, bits, DEFAULT_GROUP)?)?;
+
+            // LoftQ: overridden Q + its A,B
+            let q_l = r_loftq.params.require(&key)?;
+            let qp_l = r_loftq.qparams.view(&env.cfg.qparam_prefix(b, lin));
+            let e_loftq = weight_error(w, &effective_weight(q_l, &qp_l, DEFAULT_SCALE)?)?;
+
+            // ApiQ: in-graph quantizer -> host fakequant with learned gamma/beta
+            let qp_a = r_apiq.qparams.view(&env.cfg.qparam_prefix(b, lin));
+            let q_a = fakequant(
+                r_apiq.params.require(&key)?,
+                qp_a.require("gamma")?,
+                qp_a.require("beta")?,
+                spec,
+            )?;
+            let e_apiq = weight_error(w, &effective_weight(&q_a, &qp_a, DEFAULT_SCALE)?)?;
+
+            total += 1;
+            if e_loftq < e_qlora {
+                wins_loftq += 1;
+            }
+            if e_apiq < e_loftq {
+                wins_apiq += 1;
+            }
+            table.row(vec![
+                key,
+                format!("{e_qlora:.4}"),
+                format!("{e_loftq:.4}"),
+                format!("{e_apiq:.4}"),
+                format!("{:+.4}", e_qlora - e_loftq),
+                format!("{:+.4}", e_loftq - e_apiq),
+            ]);
+        }
+    }
+    println!("{}", table.markdown());
+    println!(
+        "[fig3] LoftQ beats QLoRA on {wins_loftq}/{total} layers; \
+         ApiQ beats LoftQ on {wins_apiq}/{total} layers \
+         (paper: positive on most layers in both panels)"
+    );
+    Ok(())
+}

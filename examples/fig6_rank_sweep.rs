@@ -1,0 +1,59 @@
+//! Fig. 6 — WikiText* perplexity vs LoRA rank at 2-bit.
+//!
+//! Expected shape (paper): ApiQ nearly flat across ranks (rank-
+//! insensitive), LoftQ improves with rank but stays above ApiQ, QLoRA
+//! far above both at every rank.
+//!
+//! Run:  cargo run --release --offline --example fig6_rank_sweep
+//!       [--ranks 2,8,16,64] [--ft-steps 60]
+//!
+//! (tiny only — the rank-swept artifacts are emitted for tiny.)
+
+use repro::config::args::Args;
+use repro::data::ZipfMarkovCorpus;
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP};
+use repro::train::{FinetuneData, LoraPosition};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let ranks: Vec<usize> = args
+        .list_or("ranks", &["2", "8", "16", "64"])
+        .iter()
+        .map(|s| s.parse().unwrap_or(16))
+        .collect();
+    let ft_steps = args.usize_or("ft-steps", 60)?;
+    let methods = args.list_or("methods", &["qlora", "loftq", "apiq-bw"]);
+    let bits = args.u32_or("bits", 2)?;
+    let env = Env::prepare("artifacts", "tiny", repro::pipeline::default_pretrain_steps("tiny"), 17)?;
+    let corpus = ZipfMarkovCorpus::new(env.cfg.vocab, 17);
+
+    let mut header = vec!["method".to_string()];
+    header.extend(ranks.iter().map(|r| format!("r={r}")));
+    let mut table = TableBuilder::new(format!("Fig. 6 — ppl vs LoRA rank (tiny, {bits}-bit)"))
+        .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+
+    for method in &methods {
+        let mut row = vec![method.clone()];
+        for &rank in &ranks {
+            let name = format!("bw_calib_tiny_r{rank}_g{DEFAULT_GROUP}");
+            if !env.runtime.has_artifact(&name) {
+                println!("[fig6] skip r={rank} ({name} not built)");
+                row.push("-".into());
+                continue;
+            }
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, rank)?;
+            env.finetune(
+                &mut r, rank, DEFAULT_GROUP,
+                &FinetuneData::Corpus(&corpus), ft_steps, 1e-3, LoraPosition::All,
+            )?;
+            let ppl = env.ppl(&r, rank, DEFAULT_GROUP, 6)?;
+            println!("[fig6] {method} r={rank}: ppl {ppl:.3}");
+            row.push(TableBuilder::num(ppl));
+        }
+        table.row(row);
+    }
+    println!("{}", table.markdown());
+    println!("expected shape: ApiQ flat across ranks; others rank-hungry");
+    Ok(())
+}

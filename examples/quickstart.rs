@@ -1,0 +1,38 @@
+//! Quickstart: the whole ApiQ story in ~40 lines of public API.
+//!
+//!   1. pretrain a TinyLlama on the synthetic corpus (or reuse the cache)
+//!   2. quantize it to 2 bits with RTN (naive) and ApiQ-bw (the paper)
+//!   3. compare perplexity against the full-precision model
+//!
+//! Run:  make artifacts && cargo run --release --offline --example quickstart
+
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+
+fn main() -> repro::Result<()> {
+    // Pretrain (cached under checkpoints/) + calibration batches.
+    let env = Env::prepare("artifacts", "tiny", repro::pipeline::default_pretrain_steps("tiny"), 17)?;
+
+    let eval_batches = 6;
+    let fp = env.ppl_fp(eval_batches)?;
+    println!("full-precision perplexity: {fp:.3}");
+
+    let mut table = TableBuilder::new("Quickstart — 2-bit PTQ perplexity (tiny)")
+        .header(&["method", "ppl", "quant time (s)"]);
+    table.row(vec!["fp32".into(), TableBuilder::num(fp), "-".into()]);
+
+    for method in ["rtn", "apiq-bw"] {
+        let r = env.quantize(method, 2, DEFAULT_GROUP, DEFAULT_RANK)?;
+        let ppl = env.ppl(&r, DEFAULT_RANK, DEFAULT_GROUP, eval_batches)?;
+        println!("{method}: ppl {ppl:.3} ({:.1}s)", r.wall_secs);
+        table.row(vec![
+            method.into(),
+            TableBuilder::num(ppl),
+            format!("{:.1}", r.wall_secs),
+        ]);
+    }
+
+    println!("{}", table.markdown());
+    println!("expected shape: fp < apiq-bw << rtn (2-bit RTN collapses)");
+    Ok(())
+}

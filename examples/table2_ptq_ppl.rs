@@ -1,0 +1,45 @@
+//! Table 2 — ApiQ as post-training quantization (no finetuning):
+//! perplexity of QLoRA / LoftQ / ApiQ-lw / ApiQ-bw at 4/3/2 bits on two
+//! model sizes (the paper's 7B/13B axis -> our tiny/small).
+//!
+//! Expected shape (paper): ApiQ-bw best, ApiQ-lw second, gap widening at
+//! lower bits; QLoRA collapses at 3- and 2-bit.
+//!
+//! Run:  cargo run --release --offline --example table2_ptq_ppl
+//!       [--sizes tiny,small] [--bits 4,3,2] [--methods ...]
+
+use repro::config::args::Args;
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let sizes = args.list_or("sizes", &["tiny"]);
+    let bits_list = args.u32_list_or("bits", &[4, 3, 2])?;
+    let methods = args.list_or("methods", &["qlora", "loftq", "apiq-lw", "apiq-bw"]);
+    let eval_batches = args.usize_or("eval-batches", 6)?;
+
+    let mut table = TableBuilder::new("Table 2 — PTQ perplexity (lower is better)")
+        .header(&["method", "bits", "size", "ppl"]);
+
+    for size in &sizes {
+        let env = Env::prepare("artifacts", size, repro::pipeline::default_pretrain_steps(size), 17)?;
+        let fp = env.ppl_fp(eval_batches)?;
+        table.row(vec!["fp".into(), "16".into(), size.clone(), TableBuilder::num(fp)]);
+        for &bits in &bits_list {
+            for method in &methods {
+                let r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+                let ppl = env.ppl(&r, DEFAULT_RANK, DEFAULT_GROUP, eval_batches)?;
+                println!("[table2] {size} {method} {bits}-bit: ppl {ppl:.3}");
+                table.row(vec![
+                    method.clone(),
+                    bits.to_string(),
+                    size.clone(),
+                    TableBuilder::num(ppl),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.markdown());
+    Ok(())
+}

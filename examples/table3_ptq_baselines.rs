@@ -1,0 +1,62 @@
+//! Table 3 — ApiQ-bw vs standard PTQ methods (RTN, GPTQ, AWQ,
+//! OmniQuant) at group sizes 64 and 128.
+//!
+//! Expected shape (paper): ApiQ-bw smallest perplexity at every bit
+//! level, advantage growing at 2-bit; AWQ collapses at 2-bit; OmniQuant
+//! (= ApiQ minus LoRA) second-best.
+//!
+//! Run:  cargo run --release --offline --example table3_ptq_baselines
+//!       [--size tiny] [--bits 4,3,2] [--groups 64,128]
+
+use repro::config::args::Args;
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_RANK};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits_list = args.u32_list_or("bits", &[4, 3, 2])?;
+    let groups: Vec<usize> = args
+        .list_or("groups", &["64", "128"])
+        .iter()
+        .map(|s| s.parse().unwrap_or(64))
+        .collect();
+    let methods = args.list_or("methods", &["rtn", "gptq", "awq", "omniquant", "apiq-bw"]);
+    let eval_batches = args.usize_or("eval-batches", 6)?;
+
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+    let fp = env.ppl_fp(eval_batches)?;
+
+    let mut table = TableBuilder::new(format!("Table 3 — PTQ baselines ({size})"))
+        .header(&["method", "bits", "group", "ppl"]);
+    table.row(vec!["fp".into(), "16".into(), "-".into(), TableBuilder::num(fp)]);
+
+    for &bits in &bits_list {
+        for &group in &groups {
+            // group-128 artifacts exist for the learned methods only at
+            // the sizes emitted by aot.py; host-side methods work anywhere
+            for method in &methods {
+                let needs_g_artifact = matches!(method.as_str(), "omniquant" | "apiq-bw");
+                if needs_g_artifact && group != 64 {
+                    let name =
+                        format!("bw_calib_{size}_r{DEFAULT_RANK}_g{group}");
+                    if !env.runtime.has_artifact(&name) {
+                        println!("[table3] skip {method} g{group} (artifact {name} not built)");
+                        continue;
+                    }
+                }
+                let r = env.quantize(method, bits, group, DEFAULT_RANK)?;
+                let ppl = env.ppl(&r, DEFAULT_RANK, group, eval_batches)?;
+                println!("[table3] {method} {bits}-bit g{group}: ppl {ppl:.3}");
+                table.row(vec![
+                    method.clone(),
+                    bits.to_string(),
+                    group.to_string(),
+                    TableBuilder::num(ppl),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.markdown());
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Table 4 — quantization duration and peak memory.
+//!
+//! Duration is measured (wall clock of each quantizer on this host);
+//! peak memory combines the analytic model (paper-shape cross-check on
+//! Llama-2-7B dims) with the measured RSS of this process per method.
+//!
+//! Expected shape (paper): GPTQ fastest/leanest; ApiQ-lw slow but lean;
+//! ApiQ-bw ~3-4x faster than ApiQ-lw at higher memory; LoftQ most
+//! memory-hungry (SVD).
+//!
+//! Run:  cargo run --release --offline --example table4_quant_cost
+
+use repro::config::args::Args;
+use repro::metrics::memory::{ArchShape, MemoryModel};
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::quant::QuantSpec;
+
+fn rss_gb() -> f64 {
+    // VmHWM from /proc/self/status (peak resident set), in GB.
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0.0);
+                return kb / 1e6;
+            }
+        }
+    }
+    f64::NAN
+}
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits = args.u32_or("bits", 2)?;
+    let methods = args.list_or("methods", &["gptq", "loftq", "omniquant", "apiq-lw", "apiq-bw"]);
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+
+    let mut table = TableBuilder::new(format!("Table 4 — quantization cost ({size}, {bits}-bit)"))
+        .header(&[
+            "method",
+            "duration (s)",
+            "RSS high-water (GB)",
+            "model-peak @7B dims (GB)",
+        ]);
+
+    let model = MemoryModel::new(ArchShape::llama2_7b());
+    let spec = QuantSpec::new(bits, DEFAULT_GROUP);
+    let calib_tokens = 128 * 2048u64; // the paper's 128 x 2048-token setup
+
+    for method in &methods {
+        let r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+        let predicted = model.quantization_peak(method, spec, 64, calib_tokens) as f64 / 1e9;
+        println!("[table4] {method}: {:.1}s (model-peak {predicted:.1} GB @7B)", r.wall_secs);
+        table.row(vec![
+            method.clone(),
+            format!("{:.1}", r.wall_secs),
+            format!("{:.2}", rss_gb()),
+            format!("{predicted:.1}"),
+        ]);
+    }
+    println!("{}", table.markdown());
+    println!(
+        "expected shape: duration gptq < apiq-bw ~ omniquant < apiq-lw; \
+         model-peak loftq > apiq-bw > apiq-lw ~ gptq (Table 4)"
+    );
+    Ok(())
+}

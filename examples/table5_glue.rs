@@ -1,0 +1,65 @@
+//! Table 5 — natural language understanding (GLUE analogue).
+//!
+//! The paper finetunes encoder models on GLUE; our stand-in is k-way
+//! sequence classification over Markov "styles" (MNLI-like 3-way and
+//! SST-2-like 2-way), finetuned generatively with the label-token mask.
+//!
+//! Expected shape: at 2-bit, QLoRA far below LoftQ/ApiQ; ApiQ best
+//! average.
+//!
+//! Run:  cargo run --release --offline --example table5_glue
+//!       [--size tiny] [--bits 2] [--ft-steps 80]
+
+use repro::config::args::Args;
+use repro::data::tasks::ClassifyTask;
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::train::{FinetuneData, LoraPosition};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits = args.u32_or("bits", 2)?;
+    let ft_steps = args.usize_or("ft-steps", 80)?;
+    let methods = args.list_or("methods", &["qlora", "loftq", "apiq-lw", "apiq-bw"]);
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+
+    // MNLI* (3-way), SST-2* (2-way), RTE* (2-way, different seed)
+    let suites = [
+        ("MNLI*", ClassifyTask::new(env.cfg.vocab, 3, 101)),
+        ("SST-2*", ClassifyTask::new(env.cfg.vocab, 2, 202)),
+        ("RTE*", ClassifyTask::new(env.cfg.vocab, 2, 303)),
+    ];
+
+    let mut header = vec!["method".to_string(), "bits".to_string()];
+    header.extend(suites.iter().map(|(n, _)| n.to_string()));
+    header.push("avg".into());
+    let mut table = TableBuilder::new(format!("Table 5 — GLUE* accuracy ({size})"))
+        .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+
+    for method in &methods {
+        let mut accs = Vec::new();
+        for (name, task) in &suites {
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(
+                &mut r,
+                DEFAULT_RANK,
+                DEFAULT_GROUP,
+                &FinetuneData::Task(task),
+                ft_steps,
+                1e-3,
+                LoraPosition::All,
+            )?;
+            let acc = env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, task, 8, true)?;
+            println!("[table5] {method} {name}: {:.1}%", acc * 100.0);
+            accs.push(acc);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        let mut row = vec![method.clone(), bits.to_string()];
+        row.extend(accs.iter().map(|a| TableBuilder::pct(*a)));
+        row.push(TableBuilder::pct(avg));
+        table.row(row);
+    }
+    println!("{}", table.markdown());
+    Ok(())
+}

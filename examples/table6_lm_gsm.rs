@@ -1,0 +1,60 @@
+//! Table 6 — finetuning results: WikiText* perplexity and GSM8K*
+//! accuracy per method and bit-width.
+//!
+//! Expected shape (paper): ApiQ-bw best at every bit level, ApiQ-lw
+//! second; differences grow at 2-bit where QLoRA returns N.A.-grade
+//! numbers.
+//!
+//! Run:  cargo run --release --offline --example table6_lm_gsm
+//!       [--size tiny] [--bits 4,3,2] [--ft-steps 80]
+
+use repro::config::args::Args;
+use repro::data::tasks::ArithTask;
+use repro::data::ZipfMarkovCorpus;
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::train::{FinetuneData, LoraPosition};
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits_list = args.u32_list_or("bits", &[4, 3, 2])?;
+    let ft_steps = args.usize_or("ft-steps", 80)?;
+    let methods = args.list_or("methods", &["qlora", "loftq", "apiq-lw", "apiq-bw"]);
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+    let corpus = ZipfMarkovCorpus::new(env.cfg.vocab, 17);
+    let gsm = ArithTask::add(env.cfg.vocab, 909);
+
+    let mut table = TableBuilder::new(format!("Table 6 — finetune ppl/acc ({size})"))
+        .header(&["method", "bits", "WikiText* (ppl)", "GSM8K* (acc %)"]);
+
+    for &bits in &bits_list {
+        for method in &methods {
+            // WikiText*: finetune on the corpus, report held-out ppl
+            let mut r1 = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(
+                &mut r1, DEFAULT_RANK, DEFAULT_GROUP,
+                &FinetuneData::Corpus(&corpus), ft_steps, 1e-3, LoraPosition::All,
+            )?;
+            let ppl = env.ppl(&r1, DEFAULT_RANK, DEFAULT_GROUP, 6)?;
+
+            // GSM8K*: separate finetune on arithmetic
+            let mut r2 = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            env.finetune(
+                &mut r2, DEFAULT_RANK, DEFAULT_GROUP,
+                &FinetuneData::Task(&gsm), ft_steps, 1e-3, LoraPosition::All,
+            )?;
+            let acc = env.task_accuracy(&r2, DEFAULT_RANK, DEFAULT_GROUP, &gsm, 8, false)?;
+
+            println!("[table6] {method} {bits}-bit: ppl {ppl:.3}, acc {:.1}%", acc * 100.0);
+            table.row(vec![
+                method.clone(),
+                bits.to_string(),
+                TableBuilder::num(ppl),
+                TableBuilder::pct(acc),
+            ]);
+        }
+    }
+    println!("{}", table.markdown());
+    Ok(())
+}

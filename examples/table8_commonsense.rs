@@ -1,0 +1,64 @@
+//! Table 8 — commonsense reasoning: one quantized model finetuned on the
+//! combined training set of eight pattern-completion suites (the BoolQ /
+//! PIQA / ... / OBQA analogues), MC accuracy per suite.
+//!
+//! Expected shape (paper): 2-bit GPTQ-LoRA near chance, LoftQ partial,
+//! ApiQ-bw >10 points above LoftQ on average.
+//!
+//! Run:  cargo run --release --offline --example table8_commonsense
+//!       [--size tiny] [--bits 2] [--ft-steps 120]
+
+use repro::config::args::Args;
+use repro::data::tasks::{commonsense_suite, Task};
+use repro::metrics::TableBuilder;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::train::{FinetuneData, LoraPosition};
+
+const SUITE_NAMES: [&str; 8] =
+    ["BoolQ*", "PIQA*", "SIQA*", "HellaS*", "WinoG*", "ARC-e*", "ARC-c*", "OBQA*"];
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits_list = args.u32_list_or("bits", &[2])?;
+    let ft_steps = args.usize_or("ft-steps", 120)?;
+    let methods = args.list_or("methods", &["gptq", "loftq", "apiq-bw"]);
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+
+    let tasks = commonsense_suite(env.cfg.vocab);
+
+    let mut header = vec!["method".to_string(), "bits".to_string()];
+    header.extend(SUITE_NAMES.iter().map(|s| s.to_string()));
+    header.push("avg".into());
+    let mut table = TableBuilder::new(format!("Table 8 — commonsense MC accuracy ({size})"))
+        .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+
+    for &bits in &bits_list {
+        for method in &methods {
+            let mut r = env.quantize(method, bits, DEFAULT_GROUP, DEFAULT_RANK)?;
+            let mixture: Vec<&dyn Task> = tasks.iter().map(|t| t as &dyn Task).collect();
+            env.finetune(
+                &mut r,
+                DEFAULT_RANK,
+                DEFAULT_GROUP,
+                &FinetuneData::Mixture(mixture),
+                ft_steps,
+                1e-3,
+                LoraPosition::All,
+            )?;
+            let mut accs = Vec::new();
+            for (task, name) in tasks.iter().zip(SUITE_NAMES) {
+                let acc = env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, task, 6, true)?;
+                println!("[table8] {method} {bits}-bit {name}: {:.1}%", acc * 100.0);
+                accs.push(acc);
+            }
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            let mut row = vec![method.clone(), bits.to_string()];
+            row.extend(accs.iter().map(|a| TableBuilder::pct(*a)));
+            row.push(TableBuilder::pct(avg));
+            table.row(row);
+        }
+    }
+    println!("{}", table.markdown());
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Tables 9 & 10 — ApiQ-bw with DoRA vs QDoRA (§6: "ApiQ-bw for other
+//! PEFT").  QDoRA = naive RTN quantization + default-init DoRA adapters;
+//! ApiQ-bw+DoRA = the same adapter *initialized by block-wise ApiQ
+//! calibration* (LoftQ cannot do this — SVD has no answer to DoRA's
+//! multiplicative magnitude, §3.3).
+//!
+//! Expected shape (paper): ApiQ-bw+DoRA >> QDoRA at 2-bit on both the
+//! commonsense (T9) and arithmetic (T10) suites.
+//!
+//! Run:  cargo run --release --offline --example table9_10_dora
+//!       [--size tiny] [--ft-steps 120]
+
+use repro::config::args::Args;
+use repro::data::tasks::{arithmetic_suite, commonsense_suite, Task};
+use repro::metrics::TableBuilder;
+use repro::model::LINEAR_NAMES;
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::quantizers::{QuantResult, Quantizer};
+use repro::tensor::Tensor;
+use repro::train::{FinetuneData, LoraPosition};
+
+/// QDoRA baseline: RTN-style open-clip quantization at native bits with
+/// default DoRA init (mag = column norms of W, B = 0).
+fn qdora(env: &Env, bits: u32) -> repro::Result<QuantResult> {
+    let ctx = env.ctx(repro::quant::QuantSpec::new(bits, DEFAULT_GROUP), DEFAULT_RANK);
+    let mut qparams = env.cfg.init_qparams(ctx.spec, DEFAULT_RANK, true, 99);
+    // open clip (plain RTN grid) + mag = ||W||_col
+    for key in qparams.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qparams.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        }
+    }
+    for b in 0..env.cfg.n_layers {
+        for lin in LINEAR_NAMES {
+            let w = env.params.require(&env.cfg.weight_key(b, lin))?;
+            let (d_in, d_out) = env.cfg.linear_shape(lin);
+            let mut mag = Tensor::zeros(&[d_out]);
+            for c in 0..d_out {
+                let mut s = 0.0f32;
+                for r in 0..d_in {
+                    s += w.at2(r, c) * w.at2(r, c);
+                }
+                mag.data_mut()[c] = s.sqrt();
+            }
+            qparams.insert(format!("{}mag", env.cfg.qparam_prefix(b, lin)), mag);
+        }
+    }
+    Ok(QuantResult {
+        method: "qdora".into(),
+        params: env.params.clone(),
+        qparams,
+        eval_bits: bits as f32,
+        wall_secs: 0.0,
+    })
+}
+
+fn main() -> repro::Result<()> {
+    let args = Args::parse_env()?;
+    let size = args.str_or("size", "tiny");
+    let bits = args.u32_or("bits", 2)?;
+    let ft_steps = args.usize_or("ft-steps", 120)?;
+    let env = Env::prepare("artifacts", &size, repro::pipeline::default_pretrain_steps(&size), 17)?;
+
+    let cs_tasks = commonsense_suite(env.cfg.vocab);
+    let (ar_tasks, ar_names) = arithmetic_suite(env.cfg.vocab, 1234);
+
+    let mut t9 = TableBuilder::new(format!("Table 9 — DoRA commonsense ({size}, {bits}-bit)"))
+        .header(&["method", "avg acc %"]);
+    let mut t10 = TableBuilder::new(format!("Table 10 — DoRA arithmetic ({size}, {bits}-bit)"))
+        .header(&["method", "GSM8K*", "SVAMP*", "MAWPS*", "AQuA*", "avg"]);
+
+    for method in ["qdora", "apiq-bw-dora"] {
+        let make = || -> repro::Result<QuantResult> {
+            if method == "qdora" {
+                qdora(&env, bits)
+            } else {
+                let ctx = env.ctx(repro::quant::QuantSpec::new(bits, DEFAULT_GROUP), DEFAULT_RANK);
+                repro::quantizers::ApiQ::bw_dora().run(&ctx)
+            }
+        };
+
+        // Table 9: commonsense mixture
+        let mut r = make()?;
+        let mixture: Vec<&dyn Task> = cs_tasks.iter().map(|t| t as &dyn Task).collect();
+        env.finetune(&mut r, DEFAULT_RANK, DEFAULT_GROUP, &FinetuneData::Mixture(mixture),
+                     ft_steps, 1e-3, LoraPosition::All)?;
+        let mut accs = Vec::new();
+        for task in &cs_tasks {
+            accs.push(env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, task, 6, true)?);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        println!("[table9] {method}: avg {:.1}%", avg * 100.0);
+        t9.row(vec![method.into(), TableBuilder::pct(avg)]);
+
+        // Table 10: arithmetic mixture
+        let mut r = make()?;
+        let mixture: Vec<&dyn Task> = ar_tasks.iter().map(|t| t.as_ref()).collect();
+        env.finetune(&mut r, DEFAULT_RANK, DEFAULT_GROUP, &FinetuneData::Mixture(mixture),
+                     ft_steps, 1e-3, LoraPosition::All)?;
+        let mut row = vec![method.to_string()];
+        let mut accs = Vec::new();
+        for (task, name) in ar_tasks.iter().zip(&ar_names) {
+            let mc = name.starts_with("AQuA");
+            let acc = env.task_accuracy(&r, DEFAULT_RANK, DEFAULT_GROUP, task.as_ref(), 8, mc)?;
+            println!("[table10] {method} {name}: {:.1}%", acc * 100.0);
+            accs.push(acc);
+            row.push(TableBuilder::pct(acc));
+        }
+        row.push(TableBuilder::pct(accs.iter().sum::<f64>() / accs.len() as f64));
+        t10.row(row);
+    }
+
+    println!("{}", t9.markdown());
+    println!("{}", t10.markdown());
+    println!("expected shape: apiq-bw-dora >> qdora on both tables");
+    Ok(())
+}

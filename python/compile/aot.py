@@ -1,0 +1,217 @@
+"""AOT lowering: every L2 step -> artifacts/<name>.hlo.txt + .manifest.
+
+Interchange format is HLO *text* (NOT serialized HloModuleProto): jax>=0.5
+emits protos with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Each artifact gets a sidecar manifest the Rust runtime parses to bind
+buffers by name:
+
+    arg <flat/key> <f32|i32> <ndim> <dim0> <dim1> ...
+    ret <flat/key> <f32|i32> <ndim> <dim0> ...
+
+Ordering is the jax pytree flattening order (dicts by sorted key), which is
+exactly the parameter/tuple-element order of the lowered XLA computation.
+Lowering uses keep_unused=True so no argument is DCE'd out of the
+signature; an assertion cross-checks the program shape.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import steps
+
+DEFAULT_RANK = 16
+DEFAULT_GROUP = 64
+# Extra LoRA ranks for the Fig. 6 rank sweep (tiny model only).
+FIG6_RANKS = (2, 8, 64)
+# Extra quantization group for Table 3 (group-size ablation).
+TABLE3_GROUP = 128
+
+
+def flatten_with_names(tree) -> list[tuple[str, jax.ShapeDtypeStruct]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def dtype_tag(dt) -> str:
+    if dt == jnp.float32:
+        return "f32"
+    if dt == jnp.int32:
+        return "i32"
+    raise ValueError(f"unsupported artifact dtype {dt}")
+
+
+def lower_to_hlo_text(fn, arg_specs) -> tuple[str, int]:
+    lowered = jax.jit(fn, keep_unused=True).lower(arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    n_params = len(comp.program_shape().parameter_shapes())
+    return comp.as_hlo_text(), n_params
+
+
+def emit(name: str, builder, out_dir: str, force: bool, src_mtime: float) -> None:
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{name}.manifest")
+    if (
+        not force
+        and os.path.exists(hlo_path)
+        and os.path.exists(man_path)
+        and os.path.getmtime(hlo_path) >= src_mtime
+    ):
+        print(f"  [skip] {name}")
+        return
+
+    t0 = time.time()
+    fn, arg_specs = builder()
+    in_flat = flatten_with_names(arg_specs)
+    out_specs = jax.eval_shape(fn, arg_specs)
+    out_flat = flatten_with_names(out_specs)
+
+    text, n_params = lower_to_hlo_text(fn, arg_specs)
+    assert n_params == len(in_flat), (
+        f"{name}: lowered computation has {n_params} params, manifest has "
+        f"{len(in_flat)} (an argument was DCE'd despite keep_unused?)"
+    )
+
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(man_path, "w") as f:
+        for kind, flat in (("arg", in_flat), ("ret", out_flat)):
+            for key, spec in flat:
+                dims = " ".join(str(d) for d in spec.shape)
+                f.write(f"{kind} {key} {dtype_tag(spec.dtype)} {len(spec.shape)} {dims}".rstrip() + "\n")
+    print(f"  [ok]   {name}  ({len(text)/1e6:.2f} MB HLO, {len(in_flat)} args, {time.time()-t0:.1f}s)")
+
+
+def artifact_plan(sizes: list[str], rank: int, group: int) -> list[tuple[str, object]]:
+    """(name, builder-thunk) for every artifact in the standard set."""
+    plan: list[tuple[str, object]] = []
+    fq_shapes_done: set[tuple[int, int, int]] = set()
+
+    for s in sizes:
+        cfg = M.SIZES[s]
+        r, g = rank, group
+        plan.append((f"pretrain_step_{s}", lambda c=cfg: steps.build_pretrain_step(c)))
+        plan.append((f"logits_fp_{s}", lambda c=cfg: steps.build_logits_fp(c)))
+        plan.append((f"embed_fwd_{s}", lambda c=cfg: steps.build_embed_fwd(c)))
+        plan.append((f"block_inputs_fp_{s}", lambda c=cfg: steps.build_block_inputs_fp(c)))
+
+        def per_rg(s=s, cfg=cfg, r=r, g=g, tag=""):
+            items = [
+                (f"logits_q_{s}_r{r}_g{g}{tag}",
+                 lambda: steps.build_logits_q(cfg, r, g)),
+                (f"finetune_step_{s}_r{r}_g{g}{tag}",
+                 lambda: steps.build_finetune_step(cfg, r, g)),
+                (f"block_inputs_q_{s}_r{r}_g{g}{tag}",
+                 lambda: steps.build_block_inputs_q(cfg, r, g)),
+                (f"bw_calib_{s}_r{r}_g{g}{tag}",
+                 lambda: steps.build_bw_calib_step(cfg, r, g)),
+            ]
+            for d_in, d_out in sorted({cfg.linear_shape(l) for l in M.LINEAR_NAMES}):
+                items.append((
+                    f"lw_calib_{s}_{d_in}x{d_out}_r{r}_g{g}{tag}",
+                    lambda di=d_in, do=d_out: steps.build_lw_calib_step(cfg, di, do, r, g),
+                ))
+            return items
+
+        plan.extend(per_rg())
+
+        # DoRA variants (Tables 9/10) -- default rank/group only.
+        plan.append((f"logits_q_{s}_r{r}_g{g}_dora",
+                     lambda c=cfg, r=r, g=g: steps.build_logits_q(c, r, g, "dora")))
+        plan.append((f"finetune_step_{s}_r{r}_g{g}_dora",
+                     lambda c=cfg, r=r, g=g: steps.build_finetune_step(c, r, g, "dora")))
+        plan.append((f"bw_calib_{s}_r{r}_g{g}_dora",
+                     lambda c=cfg, r=r, g=g: steps.build_bw_calib_step(c, r, g, "dora")))
+
+        # Standalone fakequant (integration tests + packing cross-check).
+        for d_in, d_out in sorted({cfg.linear_shape(l) for l in M.LINEAR_NAMES}):
+            key = (d_in, d_out, g)
+            if key not in fq_shapes_done:
+                fq_shapes_done.add(key)
+                plan.append((
+                    f"fakequant_{d_in}x{d_out}_g{g}",
+                    lambda di=d_in, do=d_out, gg=g: steps.build_fakequant_apply(di, do, gg),
+                ))
+
+    # Table 3 group-size ablation artifacts (tiny + small, ApiQ-bw path).
+    for s in [x for x in sizes if x in ("tiny", "small")]:
+        cfg = M.SIZES[s]
+        g2 = TABLE3_GROUP
+        plan.append((f"logits_q_{s}_r{rank}_g{g2}",
+                     lambda c=cfg: steps.build_logits_q(c, rank, g2)))
+        plan.append((f"block_inputs_q_{s}_r{rank}_g{g2}",
+                     lambda c=cfg: steps.build_block_inputs_q(c, rank, g2)))
+        plan.append((f"bw_calib_{s}_r{rank}_g{g2}",
+                     lambda c=cfg: steps.build_bw_calib_step(c, rank, g2)))
+
+    # Fig. 6 rank sweep (tiny only).
+    if "tiny" in sizes:
+        cfg = M.SIZES["tiny"]
+        for r2 in FIG6_RANKS:
+            plan.append((f"logits_q_tiny_r{r2}_g{group}",
+                         lambda rr=r2: steps.build_logits_q(cfg, rr, group)))
+            plan.append((f"block_inputs_q_tiny_r{r2}_g{group}",
+                         lambda rr=r2: steps.build_block_inputs_q(cfg, rr, group)))
+            plan.append((f"bw_calib_tiny_r{r2}_g{group}",
+                         lambda rr=r2: steps.build_bw_calib_step(cfg, rr, group)))
+            plan.append((f"finetune_step_tiny_r{r2}_g{group}",
+                         lambda rr=r2: steps.build_finetune_step(cfg, rr, group)))
+
+    return plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    ap.add_argument("--rank", type=int, default=DEFAULT_RANK)
+    ap.add_argument("--group", type=int, default=DEFAULT_GROUP)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default="", help="comma-sep name substrings to emit")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    src_mtime = max(
+        os.path.getmtime(os.path.join(root, f))
+        for root, _, files in os.walk(src_dir)
+        for f in files
+        if f.endswith(".py")
+    )
+
+    sizes = [s for s in args.sizes.split(",") if s]
+    plan = artifact_plan(sizes, args.rank, args.group)
+    only = [o for o in args.only.split(",") if o]
+    if only:
+        plan = [(n, b) for n, b in plan if any(o in n for o in only)]
+
+    print(f"emitting {len(plan)} artifacts to {args.out}")
+    for name, builder in plan:
+        emit(name, builder, args.out, args.force, src_mtime)
+    print("done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (build-time only; lowered into L2 HLO artifacts)."""
+
+from . import ref
+from .fakequant import fakequant_pallas, make_fakequant
+from .qlora_matmul import qlora_matmul_pallas, make_qlora_matmul
+
+__all__ = [
+    "ref",
+    "fakequant_pallas",
+    "make_fakequant",
+    "qlora_matmul_pallas",
+    "make_qlora_matmul",
+]

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: group-wise uniform-affine fake quantization with
+learnable clipping (the compute core of ApiQ's Algorithm 1, lines 6-8).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's reference
+implementation does this on GPU with per-tensor CUDA ops; on TPU the right
+shape is a VMEM-resident tile that contains *whole quantization groups*, so
+min/max reduction, scale/zero computation and clamp-round-dequant never
+leave the scratchpad.  The BlockSpec below expresses exactly that schedule:
+grid cell (i, j) owns rows [i*gpb*group, (i+1)*gpb*group) x columns
+[j*block_n, (j+1)*block_n), i.e. `gpb` complete groups per cell.
+
+On this CPU image the kernel runs under ``interpret=True`` (real-TPU Pallas
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute);
+the default block sizes therefore cover the whole array (grid=1), which
+lowers to clean fused HLO with no while-loop overhead.  The TPU-tuned tile
+sizes are documented in DESIGN.md §Perf.
+
+Gradient rule: ``jax.custom_vjp`` whose backward is the VJP of the pure-jnp
+reference (kernels/ref.py).  That reference implements the straight-through
+estimator, so the backward is the paper's STE by construction and XLA fuses
+it into the surrounding calibration-step HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fakequant_kernel(w_ref, gamma_ref, beta_ref, bits_ref, o_ref, *, group: int):
+    """One grid cell: fake-quantize a (gpb*group, block_n) tile of W.
+
+    w_ref     : (gpb*group, block_n) tile of the weight
+    gamma_ref : (gpb, block_n) clipping logits for the tile's groups
+    beta_ref  : (gpb, block_n)
+    bits_ref  : (1, 1) traced bit-width (f32)
+    o_ref     : (gpb*group, block_n) dequantized output tile
+    """
+    w = w_ref[...]
+    rows, cols = w.shape
+    gpb = rows // group
+    wg = w.reshape(gpb, group, cols)
+
+    # Per-group extrema; the clip *range* is then modulated by sigmoid(γ/β).
+    wmax = jnp.max(wg, axis=1)
+    wmin = jnp.min(wg, axis=1)
+    hi = jax.nn.sigmoid(gamma_ref[...]) * wmax
+    lo = jax.nn.sigmoid(beta_ref[...]) * wmin
+
+    m_levels = 2.0 ** bits_ref[0, 0] - 1.0
+    s = jnp.maximum((hi - lo) / m_levels, 1e-8)
+    z = jnp.clip(jnp.round(-lo / s), 0.0, m_levels)
+
+    s3 = s[:, None, :]
+    z3 = z[:, None, :]
+    q = jnp.clip(jnp.round(wg / s3) + z3, 0.0, m_levels)
+    o_ref[...] = (s3 * (q - z3)).reshape(rows, cols)
+
+
+def fakequant_pallas(
+    w: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    bits: jax.Array,
+    *,
+    group: int,
+    block_rows: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Forward-only Pallas fake-quant. See module docstring for tiling."""
+    d_in, d_out = w.shape
+    block_rows = block_rows or d_in
+    block_n = block_n or d_out
+    assert block_rows % group == 0, "tile height must hold whole groups"
+    gpb = block_rows // group
+    grid = (d_in // block_rows, d_out // block_n)
+    bits2 = jnp.reshape(bits.astype(jnp.float32), (1, 1))
+
+    return pl.pallas_call(
+        functools.partial(_fakequant_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((gpb, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((gpb, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_in, d_out), w.dtype),
+        interpret=True,
+    )(w, gamma, beta, bits2)
+
+
+@functools.lru_cache(maxsize=None)
+def make_fakequant(group: int, block_rows: int | None = None, block_n: int | None = None):
+    """Build a differentiable fakequant(w, gamma, beta, bits) for a given
+    group size: Pallas forward, STE backward (VJP of the jnp reference)."""
+
+    @jax.custom_vjp
+    def fakequant(w, gamma, beta, bits):
+        return fakequant_pallas(
+            w, gamma, beta, bits, group=group, block_rows=block_rows, block_n=block_n
+        )
+
+    def _fwd(w, gamma, beta, bits):
+        return fakequant(w, gamma, beta, bits), (w, gamma, beta, bits)
+
+    def _bwd(res, ct):
+        w, gamma, beta, bits = res
+        _, vjp = jax.vjp(
+            lambda w_, g_, b_: ref.fakequant_ref(w_, g_, b_, bits, group), w, gamma, beta
+        )
+        dw, dg, db = vjp(ct)
+        return dw, dg, db, jnp.zeros_like(bits)
+
+    fakequant.defvjp(_fwd, _bwd)
+    return fakequant

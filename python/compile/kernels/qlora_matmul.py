@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: fused quantized-LoRA linear layer,
+
+    y = x @ (fakequant(W; gamma, beta, bits) + scale * A @ B^T)
+
+This is the request-path hot-spot of the reproduced system: every linear in
+the quantized model forward (PTQ eval, LoRA finetuning, activation-error
+metrics) goes through it.
+
+TPU schedule expressed by the BlockSpecs: grid cell (i, j) produces output
+tile (block_m, block_n).  It streams the full reduction dimension of X, W,
+A through VMEM, fake-quantizes W column-block-locally (whole groups -- the
+group axis is the reduction axis, so a column block contains complete
+groups), computes the base MXU matmul x @ q, and fuses the low-rank
+correction as a second pair of skinny matmuls (x @ A) @ B_tile^T.  On a
+real TPU both matmuls hit the 128x128 systolic array in bf16; here
+(interpret=True, CPU) the same structure lowers to fused HLO dots.
+
+Backward: custom_vjp via the jnp reference (STE semantics), fused by XLA
+into the calibration/finetune step HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _qlora_kernel(
+    x_ref, w_ref, gamma_ref, beta_ref, a_ref, b_ref, bits_ref, scale_ref, o_ref, *, group: int
+):
+    """One grid cell: output tile (block_m, block_n).
+
+    x_ref : (block_m, d_in)        w_ref : (d_in, block_n)
+    gamma_ref/beta_ref : (d_in//group, block_n)
+    a_ref : (d_in, r)              b_ref : (block_n, r)
+    bits_ref, scale_ref : (1, 1)
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    d_in, cols = w.shape
+    gpb = d_in // group
+    wg = w.reshape(gpb, group, cols)
+
+    wmax = jnp.max(wg, axis=1)
+    wmin = jnp.min(wg, axis=1)
+    hi = jax.nn.sigmoid(gamma_ref[...]) * wmax
+    lo = jax.nn.sigmoid(beta_ref[...]) * wmin
+    m_levels = 2.0 ** bits_ref[0, 0] - 1.0
+    s = jnp.maximum((hi - lo) / m_levels, 1e-8)
+    z = jnp.clip(jnp.round(-lo / s), 0.0, m_levels)
+    s3 = s[:, None, :]
+    z3 = z[:, None, :]
+    q = (s3 * (jnp.clip(jnp.round(wg / s3) + z3, 0.0, m_levels) - z3)).reshape(d_in, cols)
+
+    # Base matmul + fused low-rank correction (low-rank-first ordering).
+    base = jnp.dot(x, q)
+    corr = jnp.dot(jnp.dot(x, a_ref[...]), b_ref[...].T)
+    o_ref[...] = base + scale_ref[0, 0] * corr
+
+
+def qlora_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    bits: jax.Array,
+    scale: jax.Array,
+    *,
+    group: int,
+    block_m: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Forward-only fused kernel. x: (m, d_in) -> (m, d_out)."""
+    m, d_in = x.shape
+    _, d_out = w.shape
+    r = a.shape[1]
+    block_m = block_m or m
+    block_n = block_n or d_out
+    grid = (m // block_m, d_out // block_n)
+    gpc = d_in // group
+    bits2 = jnp.reshape(bits.astype(jnp.float32), (1, 1))
+    scale2 = jnp.reshape(scale.astype(jnp.float32), (1, 1))
+
+    return pl.pallas_call(
+        functools.partial(_qlora_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((gpc, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((gpc, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        interpret=True,
+    )(x, w, gamma, beta, a, b, bits2, scale2)
+
+
+@functools.lru_cache(maxsize=None)
+def make_qlora_matmul(group: int, block_m: int | None = None, block_n: int | None = None):
+    """Differentiable fused quantized-LoRA matmul for a given group size.
+
+    Pallas forward; backward = VJP of the jnp reference (STE through the
+    quantizer, exact gradients for x, A, B, gamma, beta).
+    """
+
+    @jax.custom_vjp
+    def qlora_matmul(x, w, gamma, beta, a, b, bits, scale):
+        return qlora_matmul_pallas(
+            x, w, gamma, beta, a, b, bits, scale,
+            group=group, block_m=block_m, block_n=block_n,
+        )
+
+    def _fwd(x, w, gamma, beta, a, b, bits, scale):
+        return qlora_matmul(x, w, gamma, beta, a, b, bits, scale), (
+            x, w, gamma, beta, a, b, bits, scale,
+        )
+
+    def _bwd(res, ct):
+        x, w, gamma, beta, a, b, bits, scale = res
+        _, vjp = jax.vjp(
+            lambda x_, w_, g_, be_, a_, b_: ref.qlora_matmul_ref(
+                x_, w_, g_, be_, a_, b_, bits, scale, group
+            ),
+            x, w, gamma, beta, a, b,
+        )
+        dx, dw, dg, dbe, da, db = vjp(ct)
+        return dx, dw, dg, dbe, da, db, jnp.zeros_like(bits), jnp.zeros_like(scale)
+
+    qlora_matmul.defvjp(_fwd, _bwd)
+    return qlora_matmul

@@ -1,0 +1,140 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the *semantics* of the kernels: every Pallas kernel in this
+package must match its reference here to ~1e-5 (checked by pytest +
+hypothesis in python/tests/test_kernel.py). They are also used as the
+backward rule of the kernels' ``jax.custom_vjp`` wrappers, which gives the
+exact straight-through-estimator (STE) gradients the ApiQ paper's
+Algorithm 1 requires (round is an identity in the backward pass, clipping
+masks the gradient).
+
+Conventions (match the paper, §2 and §4):
+  W  : (d_in, d_out)   -- activations are row vectors, y = x @ W
+  A  : (d_in, r), B : (d_out, r), low-rank term A @ B^T
+  gamma, beta : (d_in // group, d_out) learnable clipping logits; the
+      effective clip range is [sigmoid(beta)*min_g(W), sigmoid(gamma)*max_g(W)]
+      per quantization group (a group = `group` consecutive input rows of
+      one output column, as in OmniQuant / the paper's "group size 64").
+  bits : a *traced* f32 scalar so one AOT artifact serves b in {2,3,4,16};
+      bits=16 makes fakequant a near-identity (used to route host-side
+      dequantized baselines through the same HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """Round with a straight-through gradient (Bengio et al., 2013)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def group_minmax(w: jax.Array, group: int) -> tuple[jax.Array, jax.Array]:
+    """Per-group (min, max) over `group` consecutive rows of each column.
+
+    w: (d_in, d_out) -> each of shape (d_in // group, d_out).
+    The row extrema are treated as stop-gradient constants: the clipping
+    *range* is controlled by gamma/beta, not by moving the extrema (same
+    choice as OmniQuant's learnable clipping).
+    """
+    d_in, d_out = w.shape
+    assert d_in % group == 0, f"d_in={d_in} not divisible by group={group}"
+    wg = w.reshape(d_in // group, group, d_out)
+    wmax = jax.lax.stop_gradient(jnp.max(wg, axis=1))
+    wmin = jax.lax.stop_gradient(jnp.min(wg, axis=1))
+    return wmin, wmax
+
+
+def quant_params(
+    w: jax.Array, gamma: jax.Array, beta: jax.Array, bits: jax.Array, group: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scale s, zero-point z and max level M for the paper's Eq. (1)/(3)
+    with the learnable clipping of §4.3.
+
+    Returns (s, z, M): s, z of shape (d_in//group, d_out), M scalar.
+    z is kept fractional under STE (rounded in fwd, identity in bwd) and
+    clamped to the representable range [0, M].
+    """
+    wmin, wmax = group_minmax(w, group)
+    hi = jax.nn.sigmoid(gamma) * wmax
+    lo = jax.nn.sigmoid(beta) * wmin
+    m_levels = 2.0**bits - 1.0
+    s = jnp.maximum((hi - lo) / m_levels, 1e-8)
+    z = jnp.clip(ste_round(-lo / s), 0.0, m_levels)
+    return s, z, m_levels
+
+
+def fakequant_ref(
+    w: jax.Array, gamma: jax.Array, beta: jax.Array, bits: jax.Array, group: int
+) -> jax.Array:
+    """Quantize-dequantize (Eq. 3) with learnable clipping, group-wise.
+
+    Q = s * (clamp(round(W/s) + z, 0, 2^b - 1) - z)
+    Differentiable everywhere via STE; gradients flow to gamma/beta through
+    s and z, and to W as a pass-through masked by the clip range.
+    """
+    d_in, d_out = w.shape
+    s, z, m_levels = quant_params(w, gamma, beta, bits, group)
+    wg = w.reshape(d_in // group, group, d_out)
+    s3 = s[:, None, :]
+    z3 = z[:, None, :]
+    q = jnp.clip(ste_round(wg / s3) + z3, 0.0, m_levels)
+    qd = s3 * (q - z3)
+    return qd.reshape(d_in, d_out)
+
+
+def lora_matmul_ref(
+    x: jax.Array, q: jax.Array, a: jax.Array, b: jax.Array, scale: jax.Array
+) -> jax.Array:
+    """y = x @ (Q + scale * A @ B^T), computed low-rank-first.
+
+    x: (m, d_in); q: (d_in, d_out); a: (d_in, r); b: (d_out, r).
+    """
+    return x @ q + (x @ a) @ b.T * scale
+
+
+def qlora_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    bits: jax.Array,
+    scale: jax.Array,
+    group: int,
+) -> jax.Array:
+    """Fused quantized-LoRA linear: y = x @ (fakequant(W) + scale*A@B^T).
+
+    This is the paper's quantized forward (QLoRA-style linear) and the
+    target of the fused L1 kernel.
+    """
+    q = fakequant_ref(w, gamma, beta, bits, group)
+    return lora_matmul_ref(x, q, a, b, scale)
+
+
+def dora_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    mag: jax.Array,
+    bits: jax.Array,
+    scale: jax.Array,
+    group: int,
+) -> jax.Array:
+    """DoRA (Liu et al., 2024) on a quantized base: the merged weight is
+    decomposed into column direction and a trainable magnitude `mag`:
+
+        W' = mag * (Q + scale*A@B^T) / ||Q + scale*A@B^T||_col
+
+    Used for the Table 9/10 reproduction (ApiQ-bw with DoRA vs QDoRA).
+    """
+    q = fakequant_ref(w, gamma, beta, bits, group)
+    merged = q + a @ b.T * scale
+    col_norm = jnp.sqrt(jnp.sum(merged * merged, axis=0, keepdims=True) + 1e-8)
+    return x @ (merged * (mag[None, :] / col_norm))

@@ -1,0 +1,315 @@
+"""L2: the JAX model family (TinyLlama) and its quantized-LoRA variants.
+
+Decoder-only Llama-2-style transformer: RMSNorm, rotary position
+embeddings, causal multi-head attention, SwiGLU FFN, untied LM head.
+Every linear layer can run in three modes:
+
+  fp    : y = x @ W                              (pretraining, fp stream)
+  lora  : y = x @ (fakequant(W) + s·A·Bᵀ)        (fused L1 Pallas kernel)
+  dora  : y = x @ (m ⊙ (Q + s·A·Bᵀ)/‖·‖_col)     (Table 9/10 adapter)
+
+Parameters live in *flat string-keyed dicts* so that the Rust coordinator
+can bind buffers by name (see aot.py manifest emission).  Keys:
+
+  embed                       (V, d)
+  blocks.{i}.attn_norm        (d,)
+  blocks.{i}.{wq|wk|wv|wo}    (d, d)
+  blocks.{i}.ffn_norm         (d,)
+  blocks.{i}.{wgate|wup}      (d, f)
+  blocks.{i}.wdown            (f, d)
+  final_norm                  (d,)
+  lm_head                     (d, V)
+
+Quant/adapter params for linear `L` of block `i` (group g, rank r):
+
+  blocks.{i}.{L}.gamma        (d_in/g, d_out)
+  blocks.{i}.{L}.beta         (d_in/g, d_out)
+  blocks.{i}.{L}.lora_a       (d_in, r)
+  blocks.{i}.{L}.lora_b       (d_out, r)
+  blocks.{i}.{L}.mag          (d_out,)          [dora only]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import make_qlora_matmul
+from .kernels import ref as kref
+
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+# Calibration order within a block, per the paper (§4.1): q,k,v -> o ->
+# gate,up -> down.  Stages share the same input activation.
+CALIB_STAGES = (("wq", "wk", "wv"), ("wo",), ("wgate", "wup"), ("wdown",))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    seq_len: int         # T baked into all artifacts of this size
+    batch: int           # train/eval batch baked into step artifacts
+    calib_batch: int     # calibration sequences per calib-step call
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def linear_shape(self, name: str) -> tuple[int, int]:
+        d, f = self.d_model, self.d_ffn
+        return {
+            "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "wgate": (d, f), "wup": (d, f), "wdown": (f, d),
+        }[name]
+
+
+# The family reproduces the paper's 7B-vs-13B axis at laptop scale; `base`
+# is the ~100M end-to-end validation model (DESIGN.md §3, §6).
+SIZES: dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=256, n_layers=4, n_heads=4,
+                        d_ffn=768, seq_len=128, batch=8, calib_batch=8),
+    "small": ModelConfig("small", vocab=2048, d_model=512, n_layers=8, n_heads=8,
+                         d_ffn=1408, seq_len=256, batch=4, calib_batch=4),
+    "base": ModelConfig("base", vocab=4096, d_model=768, n_layers=12, n_heads=12,
+                        d_ffn=2176, seq_len=256, batch=2, calib_batch=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec construction (shapes only; init happens in Rust).
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Flat name -> shape for the full-precision model parameters."""
+    s: dict[str, tuple[int, ...]] = {
+        "embed": (cfg.vocab, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab),
+    }
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        s[p + "attn_norm"] = (cfg.d_model,)
+        s[p + "ffn_norm"] = (cfg.d_model,)
+        for lin in LINEAR_NAMES:
+            s[p + lin] = cfg.linear_shape(lin)
+    return s
+
+
+def qparam_specs(
+    cfg: ModelConfig, rank: int, group: int, adapter: str = "lora"
+) -> dict[str, tuple[int, ...]]:
+    """Flat name -> shape for quantization + adapter parameters."""
+    s: dict[str, tuple[int, ...]] = {}
+    for i in range(cfg.n_layers):
+        for lin in LINEAR_NAMES:
+            d_in, d_out = cfg.linear_shape(lin)
+            p = f"blocks.{i}.{lin}."
+            s[p + "gamma"] = (d_in // group, d_out)
+            s[p + "beta"] = (d_in // group, d_out)
+            s[p + "lora_a"] = (d_in, rank)
+            s[p + "lora_b"] = (d_out, rank)
+            if adapter == "dora":
+                s[p + "mag"] = (d_out,)
+    return s
+
+
+def block_param_specs(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Per-block fp params with block-local names (no `blocks.{i}.`)."""
+    s: dict[str, tuple[int, ...]] = {
+        "attn_norm": (cfg.d_model,), "ffn_norm": (cfg.d_model,),
+    }
+    for lin in LINEAR_NAMES:
+        s[lin] = cfg.linear_shape(lin)
+    return s
+
+
+def block_qparam_specs(
+    cfg: ModelConfig, rank: int, group: int, adapter: str = "lora"
+) -> dict[str, tuple[int, ...]]:
+    s: dict[str, tuple[int, ...]] = {}
+    for lin in LINEAR_NAMES:
+        d_in, d_out = cfg.linear_shape(lin)
+        s[f"{lin}.gamma"] = (d_in // group, d_out)
+        s[f"{lin}.beta"] = (d_in // group, d_out)
+        s[f"{lin}.lora_a"] = (d_in, rank)
+        s[f"{lin}.lora_b"] = (d_out, rank)
+        if adapter == "dora":
+            s[f"{lin}.mag"] = (d_out,)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Linear-layer modes
+# ---------------------------------------------------------------------------
+
+def linear_fp(x2d: jax.Array, w: jax.Array) -> jax.Array:
+    return x2d @ w
+
+
+def linear_qlora(
+    x2d: jax.Array, w: jax.Array, qp: dict[str, jax.Array],
+    bits: jax.Array, scale: jax.Array, group: int,
+) -> jax.Array:
+    """Quantized + LoRA linear through the fused L1 Pallas kernel."""
+    qm = make_qlora_matmul(group)
+    return qm(x2d, w, qp["gamma"], qp["beta"], qp["lora_a"], qp["lora_b"], bits, scale)
+
+
+def linear_qdora(
+    x2d: jax.Array, w: jax.Array, qp: dict[str, jax.Array],
+    bits: jax.Array, scale: jax.Array, group: int,
+) -> jax.Array:
+    """Quantized + DoRA linear (magnitude/direction decomposition)."""
+    return kref.dora_matmul_ref(
+        x2d, w, qp["gamma"], qp["beta"], qp["lora_a"], qp["lora_b"], qp["mag"],
+        bits, scale, group,
+    )
+
+
+def make_linear(mode: str, qparams: dict[str, jax.Array] | None,
+                bits: jax.Array | None, scale: jax.Array | None,
+                group: int, prefix: str = ""):
+    """Returns linear(name, x2d, w) for the requested mode.
+
+    `qparams` is a flat dict; `prefix` selects the block (e.g. "blocks.3.")
+    or "" when qparams already uses block-local names.
+    """
+    if mode == "fp":
+        return lambda name, x2d, w: linear_fp(x2d, w)
+
+    fn = {"lora": linear_qlora, "dora": linear_qdora}[mode]
+
+    def linear(name: str, x2d: jax.Array, w: jax.Array) -> jax.Array:
+        keys = ("gamma", "beta", "lora_a", "lora_b", "mag")
+        qp = {k: qparams[f"{prefix}{name}.{k}"]
+              for k in keys if f"{prefix}{name}.{k}" in qparams}
+        return fn(x2d, w, qp, bits, scale, group)
+
+    return linear
+
+
+# ---------------------------------------------------------------------------
+# Transformer building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-5) * w
+
+
+@functools.lru_cache(maxsize=None)
+def _rope_tables(seq_len: int, head_dim: int):
+    # numpy (not jnp) so the tables embed as HLO constants; concrete
+    # jax.Arrays would be hoisted into extra lowered parameters, breaking
+    # the artifact manifest contract.
+    import numpy as np
+
+    pos = np.arange(seq_len, dtype=np.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+    ang = pos * inv[None, :]                      # (T, hd/2)
+    return np.cos(ang), np.sin(ang)
+
+
+def apply_rope(x: jax.Array) -> jax.Array:
+    """x: (B, H, T, hd) -> rotated. Pairs are (even, odd) interleaved."""
+    _, _, t, hd = x.shape
+    cos, sin = _rope_tables(t, hd)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def block_forward(
+    cfg: ModelConfig, bp: dict[str, jax.Array], x: jax.Array, linear,
+    prefix: str = "", collect: bool = False,
+):
+    """One transformer block.  x: (B, T, d).
+
+    With collect=True also returns the inputs to each linear layer (the
+    X / X^q activations ApiQ's calibration needs, in CALIB_STAGES order)
+    and the attention/FFN branch outputs -- the coordinator uses these for
+    Algorithm 1 and for the Fig. 4 activation-error metric.
+    """
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    g = lambda name: bp[prefix + name]
+
+    attn_in = rmsnorm(x, g("attn_norm"))              # input to wq/wk/wv
+    a2 = attn_in.reshape(b * t, d)
+    q = linear("wq", a2, g("wq")).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = linear("wk", a2, g("wk")).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = linear("wv", a2, g("wv")).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q)
+    k = apply_rope(k)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    o_in = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)  # input to wo
+    attn_out = linear("wo", o_in.reshape(b * t, d), g("wo")).reshape(b, t, d)
+    x1 = x + attn_out
+
+    ffn_in = rmsnorm(x1, g("ffn_norm"))               # input to wgate/wup
+    f2 = ffn_in.reshape(b * t, d)
+    gate = linear("wgate", f2, g("wgate"))
+    up = linear("wup", f2, g("wup"))
+    down_in = (jax.nn.silu(gate) * up).reshape(b, t, cfg.d_ffn)  # input to wdown
+    ffn_out = linear("wdown", down_in.reshape(b * t, cfg.d_ffn),
+                     g("wdown")).reshape(b, t, d)
+    out = x1 + ffn_out
+
+    if not collect:
+        return out
+    acts = {
+        "attn_in": attn_in,   # X for wq, wk, wv
+        "o_in": o_in,         # X for wo
+        "ffn_in": ffn_in,     # X for wgate, wup
+        "down_in": down_in,   # X for wdown
+        "attn_out": attn_out,
+        "ffn_out": ffn_out,
+    }
+    return out, acts
+
+
+def model_forward(
+    cfg: ModelConfig, params: dict[str, jax.Array], tokens: jax.Array,
+    mode: str = "fp", qparams: dict[str, jax.Array] | None = None,
+    bits: jax.Array | None = None, scale: jax.Array | None = None,
+    group: int = 64,
+) -> jax.Array:
+    """tokens: (B, T) int32 -> logits (B*T, V)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    for i in range(cfg.n_layers):
+        prefix = f"blocks.{i}."
+        linear = make_linear(mode, qparams, bits, scale, group, prefix=prefix)
+        x = block_forward(cfg, params, x, linear, prefix=prefix)
+    x = rmsnorm(x, params["final_norm"])
+    return x.reshape(-1, cfg.d_model) @ params["lm_head"]
+
+
+def next_token_loss(
+    cfg: ModelConfig, logits: jax.Array, tokens: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Masked next-token cross entropy.
+
+    logits: (B*T, V); tokens: (B, T); mask: (B, T) weighting the *target*
+    position t (i.e. mask[b, t] applies to predicting tokens[b, t] from
+    position t-1).  Positions 0 and padding get mask 0 from the Rust side.
+    """
+    b, t = tokens.shape
+    logp = jax.nn.log_softmax(logits.reshape(b, t, cfg.vocab), axis=-1)
+    pred = logp[:, :-1, :]                                # predicts t=1..T-1
+    tgt = tokens[:, 1:]
+    m = mask[:, 1:]
+    nll = -jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,416 @@
+"""L2: the AOT-able step functions (the paper's Algorithm 1 and friends).
+
+Every public ``build_*`` function returns ``(fn, arg_specs)`` where
+
+  fn        : a pure function  dict -> dict  (single pytree in, pytree out)
+  arg_specs : nested dict of jax.ShapeDtypeStruct mirroring fn's argument
+
+aot.py lowers ``jax.jit(fn, keep_unused=True)`` on ``arg_specs`` to HLO
+text and emits a name-ordered manifest so the Rust coordinator can bind
+buffers by flat key.  Single-dict signatures keep the flattening order
+deterministic (jax flattens dicts by sorted key).
+
+Optimizer state is threaded *through* the artifacts (moments in, moments
+out): Rust stays a pure orchestrator and a step is one PJRT execute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import make_qlora_matmul
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def specs_of(shapes: dict[str, tuple[int, ...]]) -> dict[str, jax.ShapeDtypeStruct]:
+    return {k: f32(*v) for k, v in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# AdamW (in-graph, bias-corrected, decoupled weight decay)
+# ---------------------------------------------------------------------------
+
+def adamw_update(
+    params: dict, grads: dict, m: dict, v: dict, t: jax.Array,
+    lr: jax.Array, wd: jax.Array, lr_mul: dict | None = None,
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+) -> tuple[dict, dict, dict]:
+    """One AdamW step over a flat dict of tensors. `t` is the 1-based step
+    count (traced f32). `lr_mul` optionally scales lr per key (used for the
+    Table 1 LoRA-position ablation and the theta-vs-AB split of Table A.1).
+    """
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    for k in params:
+        g = grads[k]
+        m2 = b1 * m[k] + (1.0 - b1) * g
+        v2 = b2 * v[k] + (1.0 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step_lr = lr * lr_mul[k] if lr_mul is not None else lr
+        new_p[k] = params[k] - step_lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * params[k])
+        new_m[k] = m2
+        new_v[k] = v2
+    return new_p, new_m, new_v
+
+
+def zeros_like_specs(shapes: dict[str, tuple[int, ...]]) -> dict[str, jax.ShapeDtypeStruct]:
+    return {k: f32(*v) for k, v in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# Pretraining step (creates the "pretrained LLM" substrate, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def build_pretrain_step(cfg: M.ModelConfig):
+    pshapes = M.param_specs(cfg)
+
+    def fn(args):
+        params, m, v = args["params"], args["m"], args["v"]
+
+        def loss_fn(p):
+            logits = M.model_forward(cfg, p, args["tokens"], mode="fp")
+            return M.next_token_loss(cfg, logits, args["tokens"], args["mask"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        p2, m2, v2 = adamw_update(params, grads, m, v, args["t"], args["lr"], args["wd"])
+        return {"params": p2, "m": m2, "v": v2, "loss": loss}
+
+    arg_specs = {
+        "params": specs_of(pshapes),
+        "m": specs_of(pshapes),
+        "v": specs_of(pshapes),
+        "tokens": i32(cfg.batch, cfg.seq_len),
+        "mask": f32(cfg.batch, cfg.seq_len),
+        "t": f32(),
+        "lr": f32(),
+        "wd": f32(),
+    }
+    return fn, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# Full-model logits (eval fwd; Rust computes ppl / accuracy host-side)
+# ---------------------------------------------------------------------------
+
+def build_logits_fp(cfg: M.ModelConfig):
+    pshapes = M.param_specs(cfg)
+
+    def fn(args):
+        logits = M.model_forward(cfg, args["params"], args["tokens"], mode="fp")
+        return {"logits": logits.reshape(cfg.batch, cfg.seq_len, cfg.vocab)}
+
+    arg_specs = {
+        "params": specs_of(pshapes),
+        "tokens": i32(cfg.batch, cfg.seq_len),
+    }
+    return fn, arg_specs
+
+
+def build_logits_q(cfg: M.ModelConfig, rank: int, group: int, adapter: str = "lora"):
+    pshapes = M.param_specs(cfg)
+    qshapes = M.qparam_specs(cfg, rank, group, adapter)
+
+    def fn(args):
+        logits = M.model_forward(
+            cfg, args["params"], args["tokens"], mode=adapter,
+            qparams=args["qparams"], bits=args["bits"], scale=args["scale"],
+            group=group,
+        )
+        return {"logits": logits.reshape(cfg.batch, cfg.seq_len, cfg.vocab)}
+
+    arg_specs = {
+        "params": specs_of(pshapes),
+        "qparams": specs_of(qshapes),
+        "tokens": i32(cfg.batch, cfg.seq_len),
+        "bits": f32(),
+        "scale": f32(),
+    }
+    return fn, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# LoRA / DoRA finetuning step on the frozen quantized model (QLoRA-style)
+# ---------------------------------------------------------------------------
+
+TRAINABLE_SUFFIXES = {"lora": ("lora_a", "lora_b"), "dora": ("lora_a", "lora_b", "mag")}
+ATTN_LINEARS = ("wq", "wk", "wv", "wo")
+
+
+def build_finetune_step(cfg: M.ModelConfig, rank: int, group: int, adapter: str = "lora"):
+    pshapes = M.param_specs(cfg)
+    qshapes = M.qparam_specs(cfg, rank, group, adapter)
+    suffixes = TRAINABLE_SUFFIXES[adapter]
+    train_keys = [k for k in qshapes if k.rsplit(".", 1)[1] in suffixes]
+    tshapes = {k: qshapes[k] for k in train_keys}
+
+    def lin_of(key: str) -> str:
+        return key.split(".")[2]  # blocks.{i}.{lin}.{suffix}
+
+    def fn(args):
+        qparams, m, v = args["qparams"], args["m"], args["v"]
+
+        def loss_fn(train_sub):
+            qp = dict(qparams)
+            qp.update(train_sub)
+            logits = M.model_forward(
+                cfg, args["params"], args["tokens"], mode=adapter, qparams=qp,
+                bits=args["bits"], scale=args["scale"], group=group,
+            )
+            return M.next_token_loss(cfg, logits, args["tokens"], args["mask"])
+
+        train_sub = {k: qparams[k] for k in train_keys}
+        loss, grads = jax.value_and_grad(loss_fn)(train_sub)
+        # Table 1 ablation: per-position LR multipliers (0 freezes a group).
+        lr_mul = {
+            k: args["lr_attn_mul"] if lin_of(k) in ATTN_LINEARS else args["lr_ffn_mul"]
+            for k in train_keys
+        }
+        p2, m2, v2 = adamw_update(
+            train_sub, grads, m, v, args["t"], args["lr"], args["wd"], lr_mul=lr_mul
+        )
+        q2 = dict(qparams)
+        q2.update(p2)
+        return {"qparams": q2, "m": m2, "v": v2, "loss": loss}
+
+    arg_specs = {
+        "params": specs_of(pshapes),
+        "qparams": specs_of(qshapes),
+        "m": specs_of(tshapes),
+        "v": specs_of(tshapes),
+        "tokens": i32(cfg.batch, cfg.seq_len),
+        "mask": f32(cfg.batch, cfg.seq_len),
+        "t": f32(),
+        "lr": f32(),
+        "wd": f32(),
+        "bits": f32(),
+        "scale": f32(),
+        "lr_attn_mul": f32(),
+        "lr_ffn_mul": f32(),
+    }
+    return fn, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# Block-granular forwards (calibration streams + Fig. 4 metrics)
+# ---------------------------------------------------------------------------
+
+ACT_KEYS = ("attn_in", "o_in", "ffn_in", "down_in", "attn_out", "ffn_out")
+
+
+def build_embed_fwd(cfg: M.ModelConfig):
+    def fn(args):
+        return {"x": jnp.take(args["embed"], args["tokens"], axis=0)}
+
+    arg_specs = {
+        "embed": f32(cfg.vocab, cfg.d_model),
+        "tokens": i32(cfg.calib_batch, cfg.seq_len),
+    }
+    return fn, arg_specs
+
+
+def build_block_inputs_fp(cfg: M.ModelConfig):
+    bshapes = M.block_param_specs(cfg)
+
+    def fn(args):
+        linear = M.make_linear("fp", None, None, None, 64)
+        out, acts = M.block_forward(cfg, args["bp"], args["x"], linear, collect=True)
+        return {"out": out, **{k: acts[k] for k in ACT_KEYS}}
+
+    arg_specs = {
+        "bp": specs_of(bshapes),
+        "x": f32(cfg.calib_batch, cfg.seq_len, cfg.d_model),
+    }
+    return fn, arg_specs
+
+
+def build_block_inputs_q(cfg: M.ModelConfig, rank: int, group: int, adapter: str = "lora"):
+    bshapes = M.block_param_specs(cfg)
+    bqshapes = M.block_qparam_specs(cfg, rank, group, adapter)
+
+    def fn(args):
+        linear = M.make_linear(
+            adapter, args["bqp"], args["bits"], args["scale"], group, prefix=""
+        )
+        out, acts = M.block_forward(cfg, args["bp"], args["x"], linear, collect=True)
+        return {"out": out, **{k: acts[k] for k in ACT_KEYS}}
+
+    arg_specs = {
+        "bp": specs_of(bshapes),
+        "bqp": specs_of(bqshapes),
+        "x": f32(cfg.calib_batch, cfg.seq_len, cfg.d_model),
+        "bits": f32(),
+        "scale": f32(),
+    }
+    return fn, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# ApiQ-lw calibration step (Algorithm 1, one linear layer)
+# ---------------------------------------------------------------------------
+
+LW_QP_KEYS = ("gamma", "beta", "lora_a", "lora_b")
+
+
+def build_lw_calib_step(cfg: M.ModelConfig, d_in: int, d_out: int, rank: int, group: int):
+    """One gradient step of Eq. (4) for a (d_in, d_out) linear layer.
+
+    Inputs X / X^q arrive as (calib_tokens, d_in); the target Y = X·W is
+    computed in-graph (no grad).  Trainables: gamma, beta, lora_a, lora_b,
+    with the paper's separate LR/WD for Θ={γ,β} vs {A,B} (Table A.1).
+    Setting lr_ab = 0 degrades this exactly to OmniQuant-lite (learnable
+    clipping without LoRA) -- the Table 3 baseline.
+    """
+    n_tok = cfg.calib_batch * cfg.seq_len
+    qp_shapes = {
+        "gamma": (d_in // group, d_out),
+        "beta": (d_in // group, d_out),
+        "lora_a": (d_in, rank),
+        "lora_b": (d_out, rank),
+    }
+    qm = make_qlora_matmul(group)
+
+    def fn(args):
+        w = args["w"]
+        y = jax.lax.stop_gradient(args["x"] @ w)
+
+        def loss_fn(qp):
+            yq = qm(args["xq"], w, qp["gamma"], qp["beta"], qp["lora_a"],
+                    qp["lora_b"], args["bits"], args["scale"])
+            return jnp.mean((y - yq) ** 2)
+
+        qp = {k: args["qp"][k] for k in LW_QP_KEYS}
+        loss, grads = jax.value_and_grad(loss_fn)(qp)
+        lr_mul = {
+            "gamma": args["lr_gb"], "beta": args["lr_gb"],
+            "lora_a": args["lr_ab"], "lora_b": args["lr_ab"],
+        }
+        wd_mul = {
+            "gamma": args["wd_gb"], "beta": args["wd_gb"],
+            "lora_a": args["wd_ab"], "lora_b": args["wd_ab"],
+        }
+        # AdamW with per-group lr and wd: fold wd into the update manually.
+        new_qp, new_m, new_v = {}, {}, {}
+        bc1 = 1.0 - 0.9 ** args["t"]
+        bc2 = 1.0 - 0.999 ** args["t"]
+        for k in LW_QP_KEYS:
+            g = grads[k]
+            m2 = 0.9 * args["m"][k] + 0.1 * g
+            v2 = 0.999 * args["v"][k] + 0.001 * g * g
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + 1e-8) + wd_mul[k] * qp[k]
+            new_qp[k] = qp[k] - lr_mul[k] * upd
+            new_m[k] = m2
+            new_v[k] = v2
+        return {"qp": new_qp, "m": new_m, "v": new_v, "loss": loss}
+
+    arg_specs = {
+        "w": f32(d_in, d_out),
+        "qp": specs_of(qp_shapes),
+        "m": specs_of(qp_shapes),
+        "v": specs_of(qp_shapes),
+        "x": f32(n_tok, d_in),
+        "xq": f32(n_tok, d_in),
+        "t": f32(),
+        "lr_ab": f32(),
+        "lr_gb": f32(),
+        "wd_ab": f32(),
+        "wd_gb": f32(),
+        "bits": f32(),
+        "scale": f32(),
+    }
+    return fn, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# ApiQ-bw calibration step (whole transformer block, §4.2)
+# ---------------------------------------------------------------------------
+
+def build_bw_calib_step(cfg: M.ModelConfig, rank: int, group: int, adapter: str = "lora"):
+    bshapes = M.block_param_specs(cfg)
+    bqshapes = M.block_qparam_specs(cfg, rank, group, adapter)
+    suffixes = ("gamma", "beta") + TRAINABLE_SUFFIXES[adapter]
+    train_keys = [k for k in bqshapes if k.rsplit(".", 1)[1] in suffixes]
+    tshapes = {k: bqshapes[k] for k in train_keys}
+
+    def fn(args):
+        bp = args["bp"]
+        linear_fp = M.make_linear("fp", None, None, None, group)
+        y = jax.lax.stop_gradient(M.block_forward(cfg, bp, args["x"], linear_fp))
+
+        def loss_fn(train_sub):
+            bqp = dict(args["bqp"])
+            bqp.update(train_sub)
+            linear_q = M.make_linear(adapter, bqp, args["bits"], args["scale"], group)
+            yq = M.block_forward(cfg, bp, args["xq"], linear_q)
+            return jnp.mean((y - yq) ** 2)
+
+        train_sub = {k: args["bqp"][k] for k in train_keys}
+        loss, grads = jax.value_and_grad(loss_fn)(train_sub)
+
+        def is_theta(k: str) -> bool:
+            return k.rsplit(".", 1)[1] in ("gamma", "beta")
+
+        new_p, new_m, new_v = {}, {}, {}
+        bc1 = 1.0 - 0.9 ** args["t"]
+        bc2 = 1.0 - 0.999 ** args["t"]
+        for k in train_keys:
+            g = grads[k]
+            m2 = 0.9 * args["m"][k] + 0.1 * g
+            v2 = 0.999 * args["v"][k] + 0.001 * g * g
+            lr = args["lr_gb"] if is_theta(k) else args["lr_ab"]
+            wd = args["wd_gb"] if is_theta(k) else args["wd_ab"]
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + 1e-8) + wd * train_sub[k]
+            new_p[k] = train_sub[k] - lr * upd
+            new_m[k] = m2
+            new_v[k] = v2
+        bqp2 = dict(args["bqp"])
+        bqp2.update(new_p)
+        return {"bqp": bqp2, "m": new_m, "v": new_v, "loss": loss}
+
+    arg_specs = {
+        "bp": specs_of(bshapes),
+        "bqp": specs_of(bqshapes),
+        "m": specs_of(tshapes),
+        "v": specs_of(tshapes),
+        "x": f32(cfg.calib_batch, cfg.seq_len, cfg.d_model),
+        "xq": f32(cfg.calib_batch, cfg.seq_len, cfg.d_model),
+        "t": f32(),
+        "lr_ab": f32(),
+        "lr_gb": f32(),
+        "wd_ab": f32(),
+        "wd_gb": f32(),
+        "bits": f32(),
+        "scale": f32(),
+    }
+    return fn, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# Standalone fakequant apply (Rust integration tests + final packing check)
+# ---------------------------------------------------------------------------
+
+def build_fakequant_apply(d_in: int, d_out: int, group: int):
+    from .kernels import make_fakequant
+
+    fq = make_fakequant(group)
+
+    def fn(args):
+        return {"q": fq(args["w"], args["gamma"], args["beta"], args["bits"])}
+
+    arg_specs = {
+        "w": f32(d_in, d_out),
+        "gamma": f32(d_in // group, d_out),
+        "beta": f32(d_in // group, d_out),
+        "bits": f32(),
+    }
+    return fn, arg_specs

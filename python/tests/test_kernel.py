@@ -1,0 +1,285 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes/bit-widths/group sizes; assert_allclose against
+ref.  This is the CORE correctness signal for the quantization math that
+everything downstream (calibration, finetuning, Rust packing) relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fakequant_pallas,
+    make_fakequant,
+    make_qlora_matmul,
+    qlora_matmul_pallas,
+    ref,
+)
+
+
+def rand(key, *shape, scale=0.1):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# fakequant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2.0, 3.0, 4.0, 8.0])
+@pytest.mark.parametrize("shape,group", [((128, 64), 64), ((256, 128), 64), ((128, 32), 32)])
+def test_fakequant_matches_ref(bits, shape, group):
+    w = rand(0, *shape)
+    gpc = shape[0] // group
+    gamma = jnp.full((gpc, shape[1]), 4.0)
+    beta = jnp.full((gpc, shape[1]), 4.0)
+    b = jnp.float32(bits)
+    out_p = fakequant_pallas(w, gamma, beta, b, group=group)
+    out_r = ref.fakequant_ref(w, gamma, beta, b, group)
+    np.testing.assert_allclose(out_p, out_r, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    groups_per_col=st.integers(1, 4),
+    group=st.sampled_from([16, 32, 64]),
+    d_out=st.sampled_from([16, 48, 128]),
+    bits=st.sampled_from([2.0, 3.0, 4.0]),
+    seed=st.integers(0, 2**16),
+    gb_val=st.floats(-2.0, 6.0),
+)
+def test_fakequant_hypothesis(groups_per_col, group, d_out, bits, seed, gb_val):
+    d_in = groups_per_col * group
+    w = rand(seed, d_in, d_out, scale=0.5)
+    gamma = jnp.full((groups_per_col, d_out), gb_val)
+    beta = jnp.full((groups_per_col, d_out), gb_val)
+    b = jnp.float32(bits)
+    out_p = fakequant_pallas(w, gamma, beta, b, group=group)
+    out_r = ref.fakequant_ref(w, gamma, beta, b, group)
+    np.testing.assert_allclose(out_p, out_r, atol=1e-5)
+
+
+def test_fakequant_levels_are_discrete():
+    """Q/s + z must land on at most 2^b integer levels per group."""
+    w = rand(1, 64, 8, scale=1.0)
+    gamma = jnp.full((1, 8), 4.0)
+    beta = jnp.full((1, 8), 4.0)
+    q = fakequant_pallas(w, gamma, beta, jnp.float32(2.0), group=64)
+    for col in range(8):
+        levels = np.unique(np.round(np.asarray(q[:, col]), 6))
+        assert len(levels) <= 4, f"2-bit column has {len(levels)} levels"
+
+
+def test_fakequant_bits16_near_identity():
+    w = rand(2, 128, 64)
+    gamma = jnp.full((2, 64), 20.0)
+    beta = jnp.full((2, 64), 20.0)
+    q = fakequant_pallas(w, gamma, beta, jnp.float32(16.0), group=64)
+    np.testing.assert_allclose(q, w, atol=1e-4)
+
+
+def test_fakequant_error_decreases_with_bits():
+    w = rand(3, 256, 64, scale=0.3)
+    gamma = jnp.full((4, 64), 4.0)
+    beta = jnp.full((4, 64), 4.0)
+    errs = []
+    for bits in (2.0, 3.0, 4.0, 8.0):
+        q = fakequant_pallas(w, gamma, beta, jnp.float32(bits), group=64)
+        errs.append(float(jnp.linalg.norm(q - w)))
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_fakequant_grad_matches_ref():
+    w = rand(4, 128, 32)
+    gamma = jnp.full((2, 32), 4.0)
+    beta = jnp.full((2, 32), 4.0)
+    bits = jnp.float32(2.0)
+    fq = make_fakequant(64)
+    tgt = rand(5, 128, 32)
+
+    def loss_p(w_, g_, b_):
+        return jnp.mean((fq(w_, g_, b_, bits) - tgt) ** 2)
+
+    def loss_r(w_, g_, b_):
+        return jnp.mean((ref.fakequant_ref(w_, g_, b_, bits, 64) - tgt) ** 2)
+
+    gp = jax.grad(loss_p, argnums=(0, 1, 2))(w, gamma, beta)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(w, gamma, beta)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+def test_fakequant_gamma_grad_direction():
+    """Widening gamma from a shrunken clip range must reduce clipping error
+    for a weight matrix with outliers -> gradient should be negative (push
+    gamma up) when the range is too narrow."""
+    w = rand(6, 64, 16, scale=1.0)
+    gamma = jnp.full((1, 16), -2.0)  # sigmoid ~= 0.12: heavy clipping
+    beta = jnp.full((1, 16), -2.0)
+    bits = jnp.float32(4.0)
+    fq = make_fakequant(64)
+
+    def loss(g_, b_):
+        return jnp.mean((fq(w, g_, b_, bits) - w) ** 2)
+
+    dg, db = jax.grad(loss, argnums=(0, 1))(gamma, beta)
+    # loss should decrease as clip range expands
+    assert float(jnp.mean(dg)) < 0.0
+    assert float(jnp.mean(db)) < 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused qlora matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2.0, 4.0])
+@pytest.mark.parametrize("m,d_in,d_out,r,group", [
+    (16, 128, 64, 8, 64), (8, 256, 128, 4, 64), (32, 64, 64, 16, 32),
+])
+def test_qlora_matmul_matches_ref(bits, m, d_in, d_out, r, group):
+    x = rand(10, m, d_in, scale=1.0)
+    w = rand(11, d_in, d_out)
+    gpc = d_in // group
+    gamma = jnp.full((gpc, d_out), 4.0)
+    beta = jnp.full((gpc, d_out), 4.0)
+    a = rand(12, d_in, r)
+    b = rand(13, d_out, r)
+    bb = jnp.float32(bits)
+    sc = jnp.float32(1.0)
+    out_p = qlora_matmul_pallas(x, w, gamma, beta, a, b, bb, sc, group=group)
+    out_r = ref.qlora_matmul_ref(x, w, gamma, beta, a, b, bb, sc, group)
+    np.testing.assert_allclose(out_p, out_r, atol=1e-4)
+
+
+def test_qlora_matmul_tiled_grid():
+    """Multi-cell grid must agree with single-cell (tiling correctness)."""
+    x = rand(20, 64, 128, scale=1.0)
+    w = rand(21, 128, 128)
+    gamma = jnp.full((2, 128), 4.0)
+    beta = jnp.full((2, 128), 4.0)
+    a = rand(22, 128, 8)
+    b = rand(23, 128, 8)
+    bb = jnp.float32(3.0)
+    sc = jnp.float32(1.0)
+    full = qlora_matmul_pallas(x, w, gamma, beta, a, b, bb, sc, group=64)
+    tiled = qlora_matmul_pallas(
+        x, w, gamma, beta, a, b, bb, sc, group=64, block_m=32, block_n=64
+    )
+    np.testing.assert_allclose(tiled, full, atol=1e-5)
+
+
+def test_fakequant_tiled_grid():
+    w = rand(24, 256, 128)
+    gamma = jnp.full((4, 128), 4.0)
+    beta = jnp.full((4, 128), 4.0)
+    bb = jnp.float32(2.0)
+    full = fakequant_pallas(w, gamma, beta, bb, group=64)
+    tiled = fakequant_pallas(w, gamma, beta, bb, group=64, block_rows=128, block_n=64)
+    np.testing.assert_allclose(tiled, full, atol=1e-6)
+
+
+def test_qlora_zero_b_is_plain_quant():
+    """With B=0 the fused kernel must equal x @ fakequant(W) (QLoRA init)."""
+    x = rand(30, 16, 128, scale=1.0)
+    w = rand(31, 128, 64)
+    gamma = jnp.full((2, 64), 4.0)
+    beta = jnp.full((2, 64), 4.0)
+    a = rand(32, 128, 8)
+    b = jnp.zeros((64, 8))
+    bb = jnp.float32(2.0)
+    out = qlora_matmul_pallas(x, w, gamma, beta, a, b, bb, jnp.float32(1.0), group=64)
+    q = fakequant_pallas(w, gamma, beta, bb, group=64)
+    np.testing.assert_allclose(out, x @ q, atol=1e-5)
+
+
+def test_qlora_grad_matches_ref():
+    x = rand(40, 32, 128, scale=1.0)
+    w = rand(41, 128, 64)
+    gamma = jnp.full((2, 64), 4.0)
+    beta = jnp.full((2, 64), 4.0)
+    a = rand(42, 128, 8)
+    b = rand(43, 64, 8)
+    bits = jnp.float32(2.0)
+    sc = jnp.float32(1.0)
+    qm = make_qlora_matmul(64)
+    y = x @ w
+
+    def loss_p(a_, b_, g_, be_):
+        return jnp.mean((qm(x, w, g_, be_, a_, b_, bits, sc) - y) ** 2)
+
+    def loss_r(a_, b_, g_, be_):
+        return jnp.mean((ref.qlora_matmul_ref(x, w, g_, be_, a_, b_, bits, sc, 64) - y) ** 2)
+
+    gp = jax.grad(loss_p, argnums=(0, 1, 2, 3))(a, b, gamma, beta)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2, 3))(a, b, gamma, beta)
+    for p_, r_ in zip(gp, gr):
+        np.testing.assert_allclose(p_, r_, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([4, 16, 64]),
+    r=st.sampled_from([1, 4, 16]),
+    bits=st.sampled_from([2.0, 3.0, 4.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_qlora_hypothesis(m, r, bits, seed):
+    d_in, d_out, group = 128, 64, 64
+    x = rand(seed, m, d_in, scale=1.0)
+    w = rand(seed + 1, d_in, d_out)
+    gamma = jnp.full((2, d_out), 4.0)
+    beta = jnp.full((2, d_out), 4.0)
+    a = rand(seed + 2, d_in, r)
+    b = rand(seed + 3, d_out, r)
+    bb = jnp.float32(bits)
+    sc = jnp.float32(2.0)
+    out_p = qlora_matmul_pallas(x, w, gamma, beta, a, b, bb, sc, group=group)
+    out_r = ref.qlora_matmul_ref(x, w, gamma, beta, a, b, bb, sc, group)
+    np.testing.assert_allclose(out_p, out_r, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Calibration dynamics: one lw-style optimization actually reduces Eq. (4)
+# ---------------------------------------------------------------------------
+
+def test_apiq_objective_decreases():
+    """Mini ApiQ-lw run: activation error must drop vs the QLoRA init.
+
+    This is the paper's core claim at unit scale (Fig. 4 / Table 2 shape).
+    """
+    d_in, d_out, r, group = 128, 64, 8, 64
+    x = rand(50, 256, d_in, scale=1.0)
+    w = rand(51, d_in, d_out, scale=0.2)
+    gamma = jnp.full((2, d_out), 4.0)
+    beta = jnp.full((2, d_out), 4.0)
+    a = rand(52, d_in, r, scale=0.01)
+    b = jnp.zeros((d_out, r))
+    bits = jnp.float32(2.0)
+    sc = jnp.float32(1.0)
+    qm = make_qlora_matmul(group)
+    y = x @ w
+
+    def loss_fn(params):
+        a_, b_, g_, be_ = params
+        yq = qm(x, w, g_, be_, a_, b_, bits, sc)
+        return jnp.mean((y - yq) ** 2)
+
+    params = (a, b, gamma, beta)
+    loss0 = float(loss_fn(params))
+    # Adam, as in Algorithm 1 (plain SGD stalls at B=0 where dA = 0).
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    m = tuple(jnp.zeros_like(p) for p in params)
+    v = tuple(jnp.zeros_like(p) for p in params)
+    lr = 5e-3
+    for t in range(1, 61):
+        g = grad_fn(params)
+        m = tuple(0.9 * mi + 0.1 * gi for mi, gi in zip(m, g))
+        v = tuple(0.999 * vi + 0.001 * gi * gi for vi, gi in zip(v, g))
+        params = tuple(
+            p - lr * (mi / (1 - 0.9**t)) / (jnp.sqrt(vi / (1 - 0.999**t)) + 1e-8)
+            for p, mi, vi in zip(params, m, v)
+        )
+    loss1 = float(loss_fn(params))
+    assert loss1 < 0.8 * loss0, (loss0, loss1)

@@ -1,0 +1,172 @@
+"""L2 model correctness: shapes, invariants, fp-vs-quant consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.SIZES["tiny"]
+
+
+def init_params(cfg, seed=0, scale=0.05):
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in M.param_specs(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            params[name] = jnp.ones(shape)
+        else:
+            params[name] = jax.random.normal(sub, shape) * scale
+    return params
+
+
+def init_qparams(cfg, rank, group, adapter="lora", seed=1, a_scale=0.01):
+    key = jax.random.PRNGKey(seed)
+    qp = {}
+    for name, shape in M.qparam_specs(cfg, rank, group, adapter).items():
+        key, sub = jax.random.split(key)
+        leaf = name.rsplit(".", 1)[1]
+        if leaf in ("gamma", "beta"):
+            qp[name] = jnp.full(shape, 4.0)
+        elif leaf == "lora_a":
+            qp[name] = jax.random.normal(sub, shape) * a_scale
+        elif leaf == "lora_b":
+            qp[name] = jnp.zeros(shape)
+        elif leaf == "mag":
+            qp[name] = jnp.ones(shape)
+    return qp
+
+
+def toks(cfg, seed=7):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (cfg.batch, cfg.seq_len), 0, cfg.vocab
+    ).astype(jnp.int32)
+
+
+def test_fp_forward_shape():
+    params = init_params(CFG)
+    logits = M.model_forward(CFG, params, toks(CFG))
+    assert logits.shape == (CFG.batch * CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = init_params(CFG)
+    t1 = toks(CFG)
+    t2 = t1.at[:, -1].set((t1[:, -1] + 1) % CFG.vocab)
+    l1 = M.model_forward(CFG, params, t1).reshape(CFG.batch, CFG.seq_len, -1)
+    l2 = M.model_forward(CFG, params, t2).reshape(CFG.batch, CFG.seq_len, -1)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], atol=1e-5)
+    assert float(jnp.max(jnp.abs(l1[:, -1] - l2[:, -1]))) > 1e-6
+
+
+def test_quant_forward_high_bits_matches_fp():
+    """bits=16 with open clipping and B=0 must reproduce the fp model."""
+    params = init_params(CFG)
+    qp = init_qparams(CFG, rank=16, group=64)
+    for k in list(qp):
+        if k.endswith("gamma") or k.endswith("beta"):
+            qp[k] = jnp.full_like(qp[k], 20.0)
+    t = toks(CFG)
+    l_fp = M.model_forward(CFG, params, t)
+    l_q = M.model_forward(
+        CFG, params, t, mode="lora", qparams=qp,
+        bits=jnp.float32(16.0), scale=jnp.float32(1.0), group=64,
+    )
+    np.testing.assert_allclose(l_q, l_fp, atol=0.05)
+
+
+def test_quant_forward_2bit_differs():
+    params = init_params(CFG)
+    qp = init_qparams(CFG, rank=16, group=64)
+    t = toks(CFG)
+    l_fp = M.model_forward(CFG, params, t)
+    l_q = M.model_forward(
+        CFG, params, t, mode="lora", qparams=qp,
+        bits=jnp.float32(2.0), scale=jnp.float32(1.0), group=64,
+    )
+    assert float(jnp.max(jnp.abs(l_q - l_fp))) > 0.01
+
+
+def test_dora_forward_shape():
+    params = init_params(CFG)
+    qp = init_qparams(CFG, rank=16, group=64, adapter="dora")
+    l_q = M.model_forward(
+        CFG, params, toks(CFG), mode="dora", qparams=qp,
+        bits=jnp.float32(2.0), scale=jnp.float32(1.0), group=64,
+    )
+    assert l_q.shape == (CFG.batch * CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(l_q)))
+
+
+def test_block_collect_activations():
+    params = init_params(CFG)
+    bp = {k.split(".", 2)[2]: v for k, v in params.items() if k.startswith("blocks.0.")}
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, CFG.seq_len, CFG.d_model))
+    linear = M.make_linear("fp", None, None, None, 64)
+    out, acts = M.block_forward(CFG, bp, x, linear, collect=True)
+    assert out.shape == x.shape
+    assert acts["attn_in"].shape == x.shape
+    assert acts["down_in"].shape == (2, CFG.seq_len, CFG.d_ffn)
+    # residual identity: out = x + attn_out + ffn_out
+    np.testing.assert_allclose(
+        out, x + acts["attn_out"] + acts["ffn_out"], atol=1e-5
+    )
+
+
+def test_loss_masking():
+    params = init_params(CFG)
+    t = toks(CFG)
+    logits = M.model_forward(CFG, params, t)
+    full = M.next_token_loss(CFG, logits, t, jnp.ones_like(t, dtype=jnp.float32))
+    half_mask = jnp.concatenate(
+        [jnp.zeros((CFG.batch, CFG.seq_len // 2)),
+         jnp.ones((CFG.batch, CFG.seq_len // 2))], axis=1
+    )
+    half = M.next_token_loss(CFG, logits, t, half_mask)
+    assert full != half
+    zero = M.next_token_loss(CFG, logits, t, jnp.zeros_like(half_mask))
+    assert float(zero) == 0.0
+
+
+def test_loss_is_log_vocab_at_init():
+    """Random near-zero init ⇒ uniform logits ⇒ loss ≈ ln(V)."""
+    params = init_params(CFG, scale=0.001)
+    t = toks(CFG)
+    logits = M.model_forward(CFG, params, t)
+    loss = M.next_token_loss(CFG, logits, t, jnp.ones_like(t, dtype=jnp.float32))
+    assert abs(float(loss) - float(jnp.log(CFG.vocab))) < 0.1
+
+
+@pytest.mark.parametrize("size", ["tiny", "small"])
+def test_param_specs_complete(size):
+    cfg = M.SIZES[size]
+    specs = M.param_specs(cfg)
+    assert len(specs) == 3 + cfg.n_layers * (2 + len(M.LINEAR_NAMES))
+    n_params = sum(int(np.prod(s)) for s in specs.values())
+    if size == "tiny":
+        assert 3e6 < n_params < 5e6, n_params
+    else:
+        assert 25e6 < n_params < 35e6, n_params
+
+
+def test_base_is_about_100m():
+    cfg = M.SIZES["base"]
+    n = sum(int(np.prod(s)) for s in M.param_specs(cfg).values())
+    assert 85e6 < n < 115e6, n
+
+
+def test_qparam_specs_group_divisibility():
+    for size in ("tiny", "small", "base"):
+        cfg = M.SIZES[size]
+        for g in (64, 128):
+            specs = M.qparam_specs(cfg, 16, g)
+            for name, shape in specs.items():
+                if name.endswith("gamma"):
+                    lin = name.split(".")[2]
+                    d_in, d_out = cfg.linear_shape(lin)
+                    assert shape == (d_in // g, d_out)

@@ -1,0 +1,214 @@
+"""L2 step-function tests: each AOT-able step behaves as its contract says
+(losses drop, optimizer states thread, manifest flattening is stable)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import steps
+from compile.aot import flatten_with_names
+
+from .test_model import init_params, init_qparams, toks
+
+CFG = M.SIZES["tiny"]
+
+
+def zeros_like_tree(specs):
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def scalars(**kw):
+    return {k: jnp.float32(v) for k, v in kw.items()}
+
+
+def test_pretrain_step_reduces_loss():
+    fn, arg_specs = steps.build_pretrain_step(CFG)
+    params = init_params(CFG, scale=0.02)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    t = toks(CFG)
+    mask = jnp.ones_like(t, dtype=jnp.float32)
+    jfn = jax.jit(fn)
+    losses = []
+    state = {"params": params, "m": m, "v": v}
+    for i in range(8):
+        out = jfn({**state, "tokens": t, "mask": mask,
+                   **scalars(t=float(i + 1), lr=3e-3, wd=0.0)})
+        state = {"params": out["params"], "m": out["m"], "v": out["v"]}
+        losses.append(float(out["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_lw_calib_step_reduces_activation_error():
+    d_in, d_out, r, g = 256, 256, 16, 64
+    fn, arg_specs = steps.build_lw_calib_step(CFG, d_in, d_out, r, g)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (d_in, d_out)) * 0.1
+    n_tok = CFG.calib_batch * CFG.seq_len
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_tok, d_in))
+    qp = {
+        "gamma": jnp.full((d_in // g, d_out), 4.0),
+        "beta": jnp.full((d_in // g, d_out), 4.0),
+        "lora_a": jax.random.normal(jax.random.PRNGKey(2), (d_in, r)) * 0.01,
+        "lora_b": jnp.zeros((d_out, r)),
+    }
+    m = {k: jnp.zeros_like(v) for k, v in qp.items()}
+    v = {k: jnp.zeros_like(x_) for k, x_ in qp.items()}
+    jfn = jax.jit(fn)
+    losses = []
+    for i in range(25):
+        out = jfn({
+            "w": w, "qp": qp, "m": m, "v": v, "x": x, "xq": x,
+            **scalars(t=float(i + 1), lr_ab=5e-3, lr_gb=5e-3,
+                      wd_ab=0.0, wd_gb=0.0, bits=2.0, scale=1.0),
+        })
+        qp, m, v = out["qp"], out["m"], out["v"]
+        losses.append(float(out["loss"]))
+    assert losses[-1] < 0.85 * losses[0], (losses[0], losses[-1])
+
+
+def test_lw_calib_with_zero_ab_lr_is_omniquant():
+    """lr_ab=0 must leave A,B untouched (OmniQuant-lite mode)."""
+    d_in, d_out, r, g = 256, 256, 16, 64
+    fn, _ = steps.build_lw_calib_step(CFG, d_in, d_out, r, g)
+    w = jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out)) * 0.1
+    n_tok = CFG.calib_batch * CFG.seq_len
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_tok, d_in))
+    a0 = jax.random.normal(jax.random.PRNGKey(2), (d_in, r)) * 0.01
+    qp = {
+        "gamma": jnp.full((d_in // g, d_out), 4.0),
+        "beta": jnp.full((d_in // g, d_out), 4.0),
+        "lora_a": a0,
+        "lora_b": jnp.zeros((d_out, r)),
+    }
+    m = {k: jnp.zeros_like(v) for k, v in qp.items()}
+    v = {k: jnp.zeros_like(x_) for k, x_ in qp.items()}
+    out = jax.jit(fn)({
+        "w": w, "qp": qp, "m": m, "v": v, "x": x, "xq": x,
+        **scalars(t=1.0, lr_ab=0.0, lr_gb=5e-3, wd_ab=0.0, wd_gb=0.0,
+                  bits=2.0, scale=1.0),
+    })
+    np.testing.assert_allclose(out["qp"]["lora_a"], a0, atol=0)
+    np.testing.assert_allclose(out["qp"]["lora_b"], 0.0, atol=0)
+    assert float(jnp.max(jnp.abs(out["qp"]["gamma"] - 4.0))) > 0
+
+
+def test_bw_calib_step_reduces_block_error():
+    fn, _ = steps.build_bw_calib_step(CFG, rank=16, group=64)
+    params = init_params(CFG, scale=0.05)
+    bp = {k.split(".", 2)[2]: v for k, v in params.items() if k.startswith("blocks.0.")}
+    qspecs = M.block_qparam_specs(CFG, 16, 64)
+    key = jax.random.PRNGKey(5)
+    bqp = {}
+    for name, shape in qspecs.items():
+        key, sub = jax.random.split(key)
+        leaf = name.rsplit(".", 1)[1]
+        bqp[name] = {
+            "gamma": jnp.full(shape, 4.0), "beta": jnp.full(shape, 4.0),
+            "lora_a": jax.random.normal(sub, shape) * 0.01,
+            "lora_b": jnp.zeros(shape),
+        }[leaf]
+    train_keys = [k for k in qspecs]
+    m = {k: jnp.zeros(qspecs[k]) for k in train_keys}
+    v = {k: jnp.zeros(qspecs[k]) for k in train_keys}
+    x = jax.random.normal(jax.random.PRNGKey(6),
+                          (CFG.calib_batch, CFG.seq_len, CFG.d_model)) * 0.5
+    jfn = jax.jit(fn)
+    losses = []
+    for i in range(15):
+        out = jfn({
+            "bp": bp, "bqp": bqp, "m": m, "v": v, "x": x, "xq": x,
+            **scalars(t=float(i + 1), lr_ab=2e-3, lr_gb=2e-3,
+                      wd_ab=0.0, wd_gb=0.0, bits=2.0, scale=1.0),
+        })
+        bqp, m, v = out["bqp"], out["m"], out["v"]
+        losses.append(float(out["loss"]))
+    assert losses[-1] < 0.85 * losses[0], (losses[0], losses[-1])
+
+
+def test_finetune_step_only_updates_adapters():
+    fn, _ = steps.build_finetune_step(CFG, rank=16, group=64)
+    params = init_params(CFG, scale=0.02)
+    qp = init_qparams(CFG, 16, 64)
+    train_keys = [k for k in qp if k.rsplit(".", 1)[1] in ("lora_a", "lora_b")]
+    m = {k: jnp.zeros_like(qp[k]) for k in train_keys}
+    v = {k: jnp.zeros_like(qp[k]) for k in train_keys}
+    t = toks(CFG)
+    mask = jnp.ones_like(t, dtype=jnp.float32)
+    out = jax.jit(fn)({
+        "params": params, "qparams": qp, "m": m, "v": v, "tokens": t, "mask": mask,
+        **scalars(t=1.0, lr=1e-3, wd=0.0, bits=4.0, scale=1.0,
+                  lr_attn_mul=1.0, lr_ffn_mul=1.0),
+    })
+    # gamma/beta frozen during finetuning
+    for k in qp:
+        leaf = k.rsplit(".", 1)[1]
+        if leaf in ("gamma", "beta"):
+            np.testing.assert_allclose(out["qparams"][k], qp[k], atol=0)
+    # adapters moved
+    moved = sum(
+        float(jnp.max(jnp.abs(out["qparams"][k] - qp[k]))) > 0 for k in train_keys
+    )
+    assert moved >= len(train_keys) // 2
+    assert float(out["loss"]) > 0
+
+
+def test_finetune_step_position_freezing():
+    """lr_attn_mul=0 must freeze attention adapters (Table 1 machinery)."""
+    fn, _ = steps.build_finetune_step(CFG, rank=16, group=64)
+    params = init_params(CFG, scale=0.02)
+    qp = init_qparams(CFG, 16, 64)
+    train_keys = [k for k in qp if k.rsplit(".", 1)[1] in ("lora_a", "lora_b")]
+    m = {k: jnp.zeros_like(qp[k]) for k in train_keys}
+    v = {k: jnp.zeros_like(qp[k]) for k in train_keys}
+    t = toks(CFG)
+    out = jax.jit(fn)({
+        "params": params, "qparams": qp, "m": m, "v": v, "tokens": t,
+        "mask": jnp.ones_like(t, dtype=jnp.float32),
+        **scalars(t=1.0, lr=1e-3, wd=0.0, bits=4.0, scale=1.0,
+                  lr_attn_mul=0.0, lr_ffn_mul=1.0),
+    })
+    for k in train_keys:
+        lin = k.split(".")[2]
+        delta = float(jnp.max(jnp.abs(out["qparams"][k] - qp[k])))
+        if lin in ("wq", "wk", "wv", "wo"):
+            assert delta == 0.0, k
+    ffn_moved = [
+        k for k in train_keys
+        if k.split(".")[2] in ("wgate", "wup", "wdown")
+        and float(jnp.max(jnp.abs(out["qparams"][k] - qp[k]))) > 0
+    ]
+    assert ffn_moved
+
+
+def test_block_inputs_fp_q_consistency():
+    """At bits=16 / open clip / B=0 the q-stream must track the fp stream."""
+    fn_fp, _ = steps.build_block_inputs_fp(CFG)
+    fn_q, _ = steps.build_block_inputs_q(CFG, rank=16, group=64)
+    params = init_params(CFG, scale=0.05)
+    bp = {k.split(".", 2)[2]: v for k, v in params.items() if k.startswith("blocks.0.")}
+    qspecs = M.block_qparam_specs(CFG, 16, 64)
+    bqp = {}
+    for name, shape in qspecs.items():
+        leaf = name.rsplit(".", 1)[1]
+        bqp[name] = {
+            "gamma": jnp.full(shape, 20.0), "beta": jnp.full(shape, 20.0),
+            "lora_a": jnp.zeros(shape), "lora_b": jnp.zeros(shape),
+        }[leaf]
+    x = jax.random.normal(jax.random.PRNGKey(9),
+                          (CFG.calib_batch, CFG.seq_len, CFG.d_model)) * 0.5
+    out_fp = jax.jit(fn_fp)({"bp": bp, "x": x})
+    out_q = jax.jit(fn_q)({"bp": bp, "bqp": bqp, "x": x,
+                           **scalars(bits=16.0, scale=1.0)})
+    for k in ("out", "attn_in", "o_in", "ffn_in", "down_in"):
+        np.testing.assert_allclose(out_q[k], out_fp[k], atol=1e-3, rtol=1e-4)
+
+
+def test_manifest_flattening_is_sorted_and_stable():
+    _, arg_specs = steps.build_lw_calib_step(CFG, 256, 256, 16, 64)
+    flat = flatten_with_names(arg_specs)
+    names = [n for n, _ in flat]
+    assert names == sorted(names)
+    _, arg_specs2 = steps.build_lw_calib_step(CFG, 256, 256, 16, 64)
+    assert names == [n for n, _ in flatten_with_names(arg_specs2)]

@@ -1,0 +1,99 @@
+//! Bench: the ApiQ calibration pipeline at step granularity — lw-calib
+//! steps per layer shape, bw-calib steps, stream advancement — the
+//! numbers behind the Table 4 lw-vs-bw duration ratio and the §Perf
+//! optimization log in EXPERIMENTS.md.
+
+use repro::benchharness::Bench;
+use repro::calib::CalibStreams;
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::model::TINY;
+use repro::quant::QuantSpec;
+use repro::runtime::{Bindings, Runtime};
+use repro::tensor::{Rng, Tensor};
+
+fn main() {
+    let mut bench = Bench::new();
+    let Ok(runtime) = Runtime::new("artifacts") else {
+        bench.finish("calibration (no PJRT)");
+        return;
+    };
+    if !runtime.has_artifact("lw_calib_tiny_256x256_r16_g64") {
+        println!("note  artifacts missing; run `make artifacts`");
+        bench.finish("calibration");
+        return;
+    }
+
+    let params = TINY.init_params(11);
+    let qparams = TINY.init_qparams(QuantSpec::new(2, 64), 16, false, 12);
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 11);
+    let batcher = Batcher::new(TINY.calib_batch, TINY.seq_len);
+    let mut crng = Rng::new(15);
+    let calib: Vec<_> = (0..2).map(|_| batcher.lm_batch(&corpus, &mut crng)).collect();
+    let n_tok = TINY.calib_batch * TINY.seq_len;
+
+    // lw calib step per layer shape
+    for (d_in, d_out) in [(256usize, 256usize), (256, 768), (768, 256)] {
+        let name = format!("lw_calib_tiny_{d_in}x{d_out}_r16_g64");
+        let mut rng = Rng::new(16);
+        let w = Tensor::randn(&[d_in, d_out], 0.1, &mut rng);
+        let x = Tensor::randn(&[n_tok, d_in], 1.0, &mut rng);
+        let qp = {
+            let mut ps = repro::model::ParamStore::new();
+            ps.insert("gamma", Tensor::full(&[d_in / 64, d_out], 4.0));
+            ps.insert("beta", Tensor::full(&[d_in / 64, d_out], 4.0));
+            ps.insert("lora_a", Tensor::kaiming(&[d_in, 16], &mut rng));
+            ps.insert("lora_b", Tensor::zeros(&[d_out, 16]));
+            ps
+        };
+        let m = qp.zeros_like();
+        let v = qp.zeros_like();
+        bench.run(&format!("lw_calib_step_{d_in}x{d_out}"), 1, 5, || {
+            let bind = Bindings::new()
+                .tensor("w", &w)
+                .group("qp", &qp)
+                .group("m", &m)
+                .group("v", &v)
+                .tensor("x", &x)
+                .tensor("xq", &x)
+                .scalar("t", 1.0)
+                .scalar("lr_ab", 1e-3)
+                .scalar("lr_gb", 5e-3)
+                .scalar("wd_ab", 0.0)
+                .scalar("wd_gb", 0.0)
+                .scalar("bits", 2.0)
+                .scalar("scale", 1.0);
+            std::hint::black_box(runtime.run(&name, &bind).unwrap());
+        });
+    }
+
+    // stream machinery
+    let mut streams = CalibStreams::init(&runtime, TINY, &params, &calib).unwrap();
+    let bp = params.view("blocks.0.");
+    let bqp = qparams.view("blocks.0.");
+    bench.run("stream_advance_fp_block", 1, 5, || {
+        let mut s2 = CalibStreams {
+            cfg: streams.cfg,
+            x_fp: streams.x_fp.clone(),
+            x_q: streams.x_q.clone(),
+        };
+        s2.advance_fp(&runtime, &bp).unwrap();
+        std::hint::black_box(&s2);
+    });
+    bench.run("stream_advance_q_block", 1, 5, || {
+        let mut s2 = CalibStreams {
+            cfg: streams.cfg,
+            x_fp: streams.x_fp.clone(),
+            x_q: streams.x_q.clone(),
+        };
+        s2.advance_q(&runtime, &bp, &bqp, 16, 64, 2.0, 1.0).unwrap();
+        std::hint::black_box(&s2);
+    });
+    // keep streams "used" for the borrow checker's sake
+    streams.sync_q_to_fp();
+
+    // derived ratio: a full lw block (4 stages x layers x epochs) vs a bw
+    // block (epochs) from the measured step times gets reported by the
+    // quantizers bench; here we report the per-step per-token cost.
+    bench.note(format!("calib token batch = {n_tok} tokens"));
+    bench.finish("calibration");
+}

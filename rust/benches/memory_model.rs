@@ -1,0 +1,53 @@
+//! Bench/report: the Fig. 2 memory-accounting table at Llama-2-7B scale
+//! (exact paper cross-check) and Table 4 quantization-peak predictions.
+//! Analytic, so "benchmarking" here means validating the numbers against
+//! the paper's and printing them for EXPERIMENTS.md.
+
+use repro::benchharness::Bench;
+use repro::metrics::memory::{ArchShape, MemoryBreakdown, MemoryModel, Regime};
+use repro::quant::QuantSpec;
+
+fn main() {
+    let mut bench = Bench::new();
+    let m = MemoryModel::new(ArchShape::llama2_7b());
+
+    println!("Fig. 2 cross-check (Llama-2-7B, GB):");
+    for (name, regime, paper_w, paper_opt) in [
+        ("full-ft", Regime::FullFt, 12.6, 26.4),
+        ("lora-r64", Regime::Lora { rank: 64 }, 12.6, 5.3),
+        ("qlora-4bit-r64", Regime::QLora { rank: 64, spec: QuantSpec::new(4, 64) }, 4.6, 5.3),
+    ] {
+        let b = m.breakdown(regime);
+        let w = MemoryBreakdown::gb(b.weights);
+        let o = MemoryBreakdown::gb(b.optimizer);
+        println!(
+            "  {name:<16} weights {w:6.1} (paper {paper_w:5.1})   optimizer {o:6.1} (paper {paper_opt:5.1})   total {:6.1}",
+            MemoryBreakdown::gb(b.total())
+        );
+        bench.note(format!(
+            "{name}: weights {w:.1}GB vs paper {paper_w}GB ({:+.0}%), optimizer {o:.1}GB vs paper {paper_opt}GB",
+            (w - paper_w) / paper_w * 100.0
+        ));
+    }
+
+    println!("\nTable 4 peak-memory predictions (Llama-2-7B, 2-bit, GB):");
+    let spec = QuantSpec::new(2, 64);
+    let calib = 128 * 2048u64;
+    for (method, paper_gb) in [
+        ("gptq", 6.0),
+        ("omniquant", 12.0),
+        ("loftq", 14.0),
+        ("apiq-lw", 6.0),
+        ("apiq-bw", 12.0),
+    ] {
+        let gb = m.quantization_peak(method, spec, 64, calib) as f64 / 1e9;
+        println!("  {method:<10} {gb:6.1} (paper {paper_gb:5.1})");
+        bench.note(format!("{method}: peak {gb:.1}GB vs paper {paper_gb}GB"));
+    }
+
+    // time the model itself (trivially fast — the point is it's analytic)
+    bench.run("memory_breakdown_eval", 10, 100, || {
+        std::hint::black_box(m.breakdown(Regime::QLora { rank: 64, spec }));
+    });
+    bench.finish("memory_model");
+}

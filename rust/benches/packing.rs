@@ -1,0 +1,54 @@
+//! Bench: bit-packing / unpacking and host fake-quant throughput — the
+//! storage path every deployed quantized layer goes through (supports the
+//! Fig. 2 / Table 4 storage-format claims with measured numbers).
+
+use repro::benchharness::Bench;
+use repro::quant::affine::{open_clip, quantize_ints};
+use repro::quant::{fakequant, nf_fakequant, pack_codes, unpack_codes, QuantSpec};
+use repro::tensor::{Rng, Tensor};
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(1);
+    // Llama-2-7B's largest layer shape scaled down 4x per dim
+    let (d_in, d_out) = (1024, 2752);
+    let w = Tensor::randn(&[d_in, d_out], 0.1, &mut rng);
+    let (g, b) = open_clip(d_in, d_out, 64);
+    let n = d_in * d_out;
+
+    for bits in [2u32, 3, 4] {
+        let spec = QuantSpec::new(bits, 64);
+        let (codes, _, _) = quantize_ints(&w, &g, &b, spec).unwrap();
+
+        let r = bench.run(&format!("quantize_ints_{bits}bit_{d_in}x{d_out}"), 1, 5, || {
+            std::hint::black_box(quantize_ints(&w, &g, &b, spec).unwrap());
+        });
+        let mean_s = r.mean_s;
+        bench.note(format!(
+            "quantize {bits}-bit: {:.1} Mweights/s",
+            n as f64 / mean_s / 1e6
+        ));
+
+        let r = bench.run(&format!("pack_codes_{bits}bit"), 1, 10, || {
+            std::hint::black_box(pack_codes(&codes, bits));
+        });
+        let mean_s = r.mean_s;
+        bench.note(format!("pack {bits}-bit: {:.1} Mcodes/s", n as f64 / mean_s / 1e6));
+
+        let packed = pack_codes(&codes, bits);
+        let r = bench.run(&format!("unpack_codes_{bits}bit"), 1, 10, || {
+            std::hint::black_box(unpack_codes(&packed, bits, n));
+        });
+        let mean_s = r.mean_s;
+        bench.note(format!("unpack {bits}-bit: {:.1} Mcodes/s", n as f64 / mean_s / 1e6));
+    }
+
+    bench.run("fakequant_affine_2bit", 1, 5, || {
+        std::hint::black_box(fakequant(&w, &g, &b, QuantSpec::new(2, 64)).unwrap());
+    });
+    bench.run("fakequant_nf_2bit", 1, 3, || {
+        std::hint::black_box(nf_fakequant(&w, 2, 64).unwrap());
+    });
+
+    bench.finish("packing");
+}

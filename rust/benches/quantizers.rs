@@ -1,0 +1,75 @@
+//! Bench: end-to-end quantizer wall-clock per method (the Table 4
+//! duration column, regenerated on this host at tiny scale) plus the
+//! layer-level kernels of the host-side baselines (GPTQ column loop,
+//! AWQ grid search, LoftQ SVD iteration).
+
+use repro::benchharness::Bench;
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::model::TINY;
+use repro::pipeline::{DEFAULT_GROUP, DEFAULT_RANK};
+use repro::quant::QuantSpec;
+use repro::quantizers::{by_name, AwqLite, Gptq, LoftQ, QuantizeCtx};
+use repro::runtime::Runtime;
+use repro::tensor::{Rng, Tensor};
+
+fn main() {
+    let mut bench = Bench::new();
+
+    // --- layer-level kernels (no artifacts needed) ---
+    let mut rng = Rng::new(2);
+    let (d_in, d_out) = (256, 256);
+    let w = Tensor::randn(&[d_in, d_out], 0.1, &mut rng);
+    let x = Tensor::randn(&[512, d_in], 1.0, &mut rng);
+    let spec = QuantSpec::new(2, 64);
+
+    let h = x.transpose().unwrap().matmul(&x).unwrap().scale(2.0);
+    bench.run("gptq_layer_256x256", 1, 3, || {
+        std::hint::black_box(Gptq::default().quantize_layer(&w, &h, spec).unwrap());
+    });
+    bench.run("awq_layer_256x256", 1, 3, || {
+        std::hint::black_box(AwqLite::default().quantize_layer(&w, &x, spec).unwrap());
+    });
+    let mut srng = Rng::new(3);
+    bench.run("loftq_layer_256x256_r16", 1, 3, || {
+        std::hint::black_box(
+            LoftQ::default().decompose(&w, 2, 64, 16, &mut srng).unwrap(),
+        );
+    });
+
+    // --- whole-model quantization (needs artifacts + a model) ---
+    let Ok(runtime) = Runtime::new("artifacts") else {
+        bench.finish("quantizers (no PJRT)");
+        return;
+    };
+    if !runtime.has_artifact("bw_calib_tiny_r16_g64") {
+        println!("note  artifacts missing; skipping whole-model benches");
+        bench.finish("quantizers");
+        return;
+    }
+    let params = TINY.init_params(11);
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 11);
+    let batcher = Batcher::new(TINY.calib_batch, TINY.seq_len);
+    let mut crng = Rng::new(12);
+    let calib: Vec<_> = (0..2).map(|_| batcher.lm_batch(&corpus, &mut crng)).collect();
+
+    for method in ["rtn", "qlora", "gptq", "awq", "loftq", "omniquant", "apiq-lw", "apiq-bw"] {
+        let q = by_name(method).unwrap();
+        let ctx = QuantizeCtx {
+            runtime: &runtime,
+            cfg: TINY,
+            params: &params,
+            spec,
+            rank: DEFAULT_RANK,
+            scale: 1.0,
+            calib: &calib,
+            seed: 5,
+            verbose: false,
+        };
+        // single iteration: these are seconds-scale "Table 4 duration" runs
+        bench.run(&format!("quantize_tiny_2bit_{method}"), 0, 1, || {
+            std::hint::black_box(q.quantize(&ctx).unwrap());
+        });
+    }
+    bench.note("Table 4 shape check: gptq fastest; apiq-bw ~3-4x faster than apiq-lw".to_string());
+    bench.finish("quantizers");
+}

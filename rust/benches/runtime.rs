@@ -1,0 +1,114 @@
+//! Bench: PJRT runtime hot path — artifact execute latency for the three
+//! step kinds on the request path (eval forward, finetune step, bw-calib
+//! step), plus the host<->literal marshalling overhead the L3 coordinator
+//! adds on top of pure XLA execution.
+
+use repro::benchharness::Bench;
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::model::TINY;
+use repro::quant::QuantSpec;
+use repro::runtime::{Bindings, Runtime};
+use repro::tensor::{Rng, Tensor};
+
+fn main() {
+    let mut bench = Bench::new();
+    let Ok(runtime) = Runtime::new("artifacts") else {
+        bench.finish("runtime (no PJRT)");
+        return;
+    };
+    if !runtime.has_artifact("logits_fp_tiny") {
+        println!("note  artifacts missing; run `make artifacts`");
+        bench.finish("runtime");
+        return;
+    }
+
+    let params = TINY.init_params(11);
+    let qparams = TINY.init_qparams(QuantSpec::new(2, 64), 16, false, 12);
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 11);
+    let batch = Batcher::new(TINY.batch, TINY.seq_len).lm_batch(&corpus, &mut Rng::new(13));
+    let n_tok = (TINY.batch * TINY.seq_len) as f64;
+
+    // eval forward, fp vs quantized (the pallas-kerneled path)
+    let r = bench.run("exec_logits_fp_tiny", 2, 8, || {
+        let bind = Bindings::new().group("params", &params).int("tokens", &batch.tokens);
+        std::hint::black_box(runtime.run("logits_fp_tiny", &bind).unwrap());
+    });
+    let fp_mean = r.mean_s;
+    bench.note(format!("fp forward: {:.0} tokens/s", n_tok / fp_mean));
+
+    let r = bench.run("exec_logits_q_tiny_2bit", 2, 8, || {
+        let bind = Bindings::new()
+            .group("params", &params)
+            .group("qparams", &qparams)
+            .int("tokens", &batch.tokens)
+            .scalar("bits", 2.0)
+            .scalar("scale", 1.0);
+        std::hint::black_box(runtime.run("logits_q_tiny_r16_g64", &bind).unwrap());
+    });
+    let q_mean = r.mean_s;
+    bench.note(format!(
+        "quantized forward: {:.0} tokens/s ({:.2}x fp)",
+        n_tok / q_mean,
+        q_mean / fp_mean
+    ));
+
+    // finetune step (fwd+bwd+adam in one execute)
+    let trainable = |k: &str| k.ends_with("lora_a") || k.ends_with("lora_b");
+    let m = qparams.filtered(trainable).zeros_like();
+    let v = m.clone();
+    bench.run("exec_finetune_step_tiny", 1, 5, || {
+        let bind = Bindings::new()
+            .group("params", &params)
+            .group("qparams", &qparams)
+            .group("m", &m)
+            .group("v", &v)
+            .int("tokens", &batch.tokens)
+            .tensor("mask", &batch.mask)
+            .scalar("t", 1.0)
+            .scalar("lr", 1e-3)
+            .scalar("wd", 0.0)
+            .scalar("bits", 2.0)
+            .scalar("scale", 1.0)
+            .scalar("lr_attn_mul", 1.0)
+            .scalar("lr_ffn_mul", 1.0);
+        std::hint::black_box(runtime.run("finetune_step_tiny_r16_g64", &bind).unwrap());
+    });
+
+    // bw calibration step (the ApiQ inner loop)
+    let bp = params.view("blocks.0.");
+    let bqp = qparams.view("blocks.0.");
+    let mb = bqp.zeros_like();
+    let vb = mb.clone();
+    let x = Tensor::zeros(&[TINY.calib_batch, TINY.seq_len, TINY.d_model]);
+    bench.run("exec_bw_calib_step_tiny", 1, 5, || {
+        let bind = Bindings::new()
+            .group("bp", &bp)
+            .group("bqp", &bqp)
+            .group("m", &mb)
+            .group("v", &vb)
+            .tensor("x", &x)
+            .tensor("xq", &x)
+            .scalar("t", 1.0)
+            .scalar("lr_ab", 1e-3)
+            .scalar("lr_gb", 5e-3)
+            .scalar("wd_ab", 0.0)
+            .scalar("wd_gb", 0.0)
+            .scalar("bits", 2.0)
+            .scalar("scale", 1.0);
+        std::hint::black_box(runtime.run("bw_calib_tiny_r16_g64", &bind).unwrap());
+    });
+
+    // marshalling overhead: Bindings -> literals without compute, measured
+    // through the cheapest artifact (embed_fwd)
+    let embed = params.get("embed").unwrap().clone();
+    let toks = Batcher::new(TINY.calib_batch, TINY.seq_len)
+        .lm_batch(&corpus, &mut Rng::new(14))
+        .tokens;
+    bench.run("exec_embed_fwd_tiny (marshal-dominated)", 2, 10, || {
+        let bind = Bindings::new().tensor("embed", &embed).int("tokens", &toks);
+        std::hint::black_box(runtime.run("embed_fwd_tiny", &bind).unwrap());
+    });
+
+    println!("\n{}", runtime.stats_report());
+    bench.finish("runtime");
+}

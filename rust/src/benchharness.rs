@@ -1,0 +1,124 @@
+//! Minimal criterion-style benchmark harness (the offline registry has no
+//! `criterion`; see Cargo.toml note).  Provides warmup + timed iterations
+//! with mean / stddev / min / p50 reporting and a stable text format that
+//! `cargo bench` prints and EXPERIMENTS.md quotes.
+
+use std::time::Instant;
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters={:<4} mean={} std={} min={} p50={}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            fmt_time(self.p50_s),
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// The harness: collects results, prints a summary at the end.
+#[derive(Default)]
+pub struct Bench {
+    results: Vec<BenchResult>,
+    /// Extra free-form lines (throughput numbers etc.) echoed in the summary.
+    notes: Vec<String>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench::default()
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` unmeasured calls.
+    pub fn run(&mut self, name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: times[0],
+            p50_s: times[times.len() / 2],
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Record a derived metric line (e.g. tokens/s).
+    pub fn note(&mut self, line: impl Into<String>) {
+        let line = line.into();
+        println!("note  {line}");
+        self.notes.push(line);
+    }
+
+    /// Print the final summary block (what `cargo bench` output captures).
+    pub fn finish(&self, suite: &str) {
+        println!("\n==== bench suite: {suite} ====");
+        for r in &self.results {
+            println!("{}", r.report());
+        }
+        for n in &self.notes {
+            println!("note  {n}");
+        }
+        println!("==== end {suite} ====");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders() {
+        let mut b = Bench::new();
+        let r = b.run("sleepless", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.p50_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn formats_times() {
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_time(0.002).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Calibration machinery: the dual activation streams of ApiQ.
+//!
+//! The paper's key mechanism (§4.1) is that the quantized model is
+//! calibrated against the *full-precision* model's activations while its
+//! own inputs come from the *quantized* stream:
+//!
+//! ```text
+//! X   — output of the previous full-precision block   (target side)
+//! X^q — output of the previous *quantized* block      (input side)
+//! ```
+//!
+//! so each block/layer learns to undo the error accumulated upstream.
+//! `CalibStreams` owns both streams (one pair per calibration batch) and
+//! advances them block by block through the `block_inputs_{fp,q}`
+//! artifacts, exposing the per-linear input activations Algorithm 1 needs
+//! and the Fig. 4 activation-error probes.
+
+use crate::data::Batch;
+use crate::error::Result;
+use crate::model::{LinearKind, ModelConfig, ParamStore};
+use crate::runtime::{Bindings, Runtime};
+use crate::tensor::Tensor;
+
+/// Collected per-linear activations of one block execution.
+#[derive(Clone, Debug)]
+pub struct BlockActs {
+    /// Input to wq/wk/wv (post attn-norm), (B, T, d).
+    pub attn_in: Tensor,
+    /// Input to wo, (B, T, d).
+    pub o_in: Tensor,
+    /// Input to wgate/wup (post ffn-norm), (B, T, d).
+    pub ffn_in: Tensor,
+    /// Input to wdown, (B, T, ffn).
+    pub down_in: Tensor,
+    /// Block output, (B, T, d).
+    pub out: Tensor,
+}
+
+impl BlockActs {
+    /// The input activation feeding a given linear, flattened to
+    /// (B*T, d_in) as the lw-calibration artifacts expect.
+    pub fn input_for(&self, lin: LinearKind) -> Result<Tensor> {
+        let t = match lin.input_activation() {
+            "attn_in" => &self.attn_in,
+            "o_in" => &self.o_in,
+            "ffn_in" => &self.ffn_in,
+            "down_in" => &self.down_in,
+            other => unreachable!("unknown activation {other}"),
+        };
+        let s = t.shape();
+        t.clone().reshape(&[s[0] * s[1], s[2]])
+    }
+}
+
+/// The dual streams over a fixed set of calibration batches.
+pub struct CalibStreams {
+    pub cfg: ModelConfig,
+    /// Embedded inputs per batch for the fp stream, (B, T, d).
+    pub x_fp: Vec<Tensor>,
+    /// Same for the quantized stream.
+    pub x_q: Vec<Tensor>,
+}
+
+impl CalibStreams {
+    /// Embed the calibration token batches (both streams start equal —
+    /// the embedding layer is not quantized, as in the paper).
+    pub fn init(runtime: &Runtime, cfg: ModelConfig, params: &ParamStore, batches: &[Batch]) -> Result<Self> {
+        let name = format!("embed_fwd_{}", cfg.name);
+        let embed = params.require("embed")?;
+        let mut x_fp = Vec::with_capacity(batches.len());
+        for b in batches {
+            let bind = Bindings::new().tensor("embed", embed).int("tokens", &b.tokens);
+            let mut out = runtime.run(&name, &bind)?;
+            x_fp.push(out.take("x")?);
+        }
+        let x_q = x_fp.clone();
+        Ok(CalibStreams { cfg, x_fp, x_q })
+    }
+
+    /// Run `block_inputs_fp` for batch `i` of the fp stream.
+    pub fn fp_acts(&self, runtime: &Runtime, bp: &ParamStore, i: usize) -> Result<BlockActs> {
+        let name = format!("block_inputs_fp_{}", self.cfg.name);
+        let bind = Bindings::new().group("bp", bp).tensor("x", &self.x_fp[i]);
+        let mut out = runtime.run(&name, &bind)?;
+        Ok(BlockActs {
+            attn_in: out.take("attn_in")?,
+            o_in: out.take("o_in")?,
+            ffn_in: out.take("ffn_in")?,
+            down_in: out.take("down_in")?,
+            out: out.take("out")?,
+        })
+    }
+
+    /// Run `block_inputs_q` for batch `i` of the quantized stream with the
+    /// current block qparams.
+    #[allow(clippy::too_many_arguments)]
+    pub fn q_acts(
+        &self,
+        runtime: &Runtime,
+        bp: &ParamStore,
+        bqp: &ParamStore,
+        i: usize,
+        rank: usize,
+        group: usize,
+        bits: f32,
+        scale: f32,
+    ) -> Result<BlockActs> {
+        let name = format!("block_inputs_q_{}_r{rank}_g{group}", self.cfg.name);
+        let bind = Bindings::new()
+            .group("bp", bp)
+            .group("bqp", bqp)
+            .tensor("x", &self.x_q[i])
+            .scalar("bits", bits)
+            .scalar("scale", scale);
+        let mut out = runtime.run(&name, &bind)?;
+        Ok(BlockActs {
+            attn_in: out.take("attn_in")?,
+            o_in: out.take("o_in")?,
+            ffn_in: out.take("ffn_in")?,
+            down_in: out.take("down_in")?,
+            out: out.take("out")?,
+        })
+    }
+
+    /// Advance the fp stream past a block.
+    pub fn advance_fp(&mut self, runtime: &Runtime, bp: &ParamStore) -> Result<()> {
+        for i in 0..self.x_fp.len() {
+            let acts = self.fp_acts(runtime, bp, i)?;
+            self.x_fp[i] = acts.out;
+        }
+        Ok(())
+    }
+
+    /// Advance the quantized stream past a block with final qparams.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance_q(
+        &mut self,
+        runtime: &Runtime,
+        bp: &ParamStore,
+        bqp: &ParamStore,
+        rank: usize,
+        group: usize,
+        bits: f32,
+        scale: f32,
+    ) -> Result<()> {
+        for i in 0..self.x_q.len() {
+            let acts = self.q_acts(runtime, bp, bqp, i, rank, group, bits, scale)?;
+            self.x_q[i] = acts.out;
+        }
+        Ok(())
+    }
+
+    /// Mirror the fp stream into the q stream (used by weight-error-only
+    /// baselines whose "quantized stream" is the fp one).
+    pub fn sync_q_to_fp(&mut self) {
+        self.x_q = self.x_fp.clone();
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.x_fp.len()
+    }
+}

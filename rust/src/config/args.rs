@@ -1,0 +1,153 @@
+//! Minimal CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports `subcommand --flag value --bool-flag` with typed accessors and
+//! an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: positional subcommand + `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                // --key=value or --key value or --bool-flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = item;
+            } else {
+                out.positionals.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> Result<u32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect(),
+        }
+    }
+
+    pub fn u32_list_or(&self, key: &str, default: &[u32]) -> Result<Vec<u32>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().map_err(|e| Error::config(format!("--{key}: {e}"))))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("quantize --size small --bits 2 --verbose");
+        assert_eq!(a.command, "quantize");
+        assert_eq!(a.str_or("size", "x"), "small");
+        assert_eq!(a.u32_or("bits", 0).unwrap(), 2);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("eval --bits=3 --lr=1e-3");
+        assert_eq!(a.u32_or("bits", 0).unwrap(), 3);
+        assert!((a.f32_or("lr", 0.0).unwrap() - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --bits 2,3,4 --methods apiq-bw,loftq");
+        assert_eq!(a.u32_list_or("bits", &[]).unwrap(), vec![2, 3, 4]);
+        assert_eq!(a.list_or("methods", &[]), vec!["apiq-bw", "loftq"]);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("report memory");
+        assert_eq!(a.command, "report");
+        assert_eq!(a.positionals, vec!["memory"]);
+    }
+
+    #[test]
+    fn bad_typed_flag_errors() {
+        let a = parse("x --bits lots");
+        assert!(a.u32_or("bits", 0).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Configuration: a dependency-free key=value config format with
+//! sections, typed accessors, and CLI `-o key=value` overrides.
+//!
+//! Format (TOML-lite):
+//!
+//! ```text
+//! # comment
+//! [experiment]
+//! size = small
+//! bits = 2,3,4
+//! methods = qlora,loftq,apiq-bw
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed config: "section.key" -> raw string value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[') {
+                let sec = sec
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {}: unterminated section", ln + 1)))?;
+                section = sec.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("line {}: expected key = value", ln + 1)))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::io(format!("{}: {e}", path.as_ref().display())))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a CLI override "section.key=value".
+    pub fn set_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("override '{kv}' is not key=value")))?;
+        self.map.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::config(format!("{key}={v}: {e}"))),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::config(format!("{key}={v}: {e}"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::config(format!("{key}={v}: {e}"))),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(Error::config(format!("{key}={v}: not a bool"))),
+        }
+    }
+
+    /// Comma-separated list accessor.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect(),
+        }
+    }
+
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().map_err(|e| Error::config(format!("{key}: {e}"))))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# experiment config
+[experiment]
+size = small
+bits = 2,3,4
+steps = 200
+lr = 3e-4
+verbose = true
+";
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("experiment.size", "x"), "small");
+        assert_eq!(c.usize_or("experiment.steps", 0).unwrap(), 200);
+        assert!((c.f32_or("experiment.lr", 0.0).unwrap() - 3e-4).abs() < 1e-9);
+        assert!(c.bool_or("experiment.verbose", false).unwrap());
+        assert_eq!(
+            c.usize_list_or("experiment.bits", &[]).unwrap(),
+            vec![2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7).unwrap(), 7);
+        assert_eq!(c.list_or("nope", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("experiment.size=tiny").unwrap();
+        assert_eq!(c.str_or("experiment.size", "x"), "tiny");
+        assert!(c.set_override("no-equals-sign").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("keyonly\n").is_err());
+    }
+}
+pub mod args;

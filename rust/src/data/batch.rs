@@ -1,0 +1,82 @@
+//! Batching: collect sequences / task samples into the fixed (B, T)
+//! buffers the AOT artifacts expect.
+
+use crate::data::tasks::{Task, TaskSample};
+use crate::data::ZipfMarkovCorpus;
+use crate::tensor::{IntTensor, Rng, Tensor};
+
+/// A (tokens, mask) pair shaped (B, T), plus the per-sample metadata
+/// needed for accuracy scoring.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: IntTensor,
+    pub mask: Tensor,
+    pub samples: Vec<TaskSample>,
+}
+
+/// Produces batches from a corpus or task with the artifact's (B, T).
+pub struct Batcher {
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, seq_len: usize) -> Self {
+        Batcher { batch, seq_len }
+    }
+
+    /// LM batch from the corpus (mask = 1 everywhere; the shifted loss
+    /// ignores position 0 by construction).
+    pub fn lm_batch(&self, corpus: &ZipfMarkovCorpus, rng: &mut Rng) -> Batch {
+        let (toks, mask) = corpus.batch(self.batch, self.seq_len, rng);
+        Batch {
+            tokens: IntTensor::new(vec![self.batch, self.seq_len], toks).unwrap(),
+            mask: Tensor::new(vec![self.batch, self.seq_len], mask).unwrap(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Task batch: B independent samples.
+    pub fn task_batch(&self, task: &dyn Task, rng: &mut Rng) -> Batch {
+        let mut toks = Vec::with_capacity(self.batch * self.seq_len);
+        let mut mask = Vec::with_capacity(self.batch * self.seq_len);
+        let mut samples = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let s = task.sample(self.seq_len, rng);
+            toks.extend(&s.tokens);
+            mask.extend(&s.mask);
+            samples.push(s);
+        }
+        Batch {
+            tokens: IntTensor::new(vec![self.batch, self.seq_len], toks).unwrap(),
+            mask: Tensor::new(vec![self.batch, self.seq_len], mask).unwrap(),
+            samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::ArithTask;
+
+    #[test]
+    fn lm_batch_shapes() {
+        let c = ZipfMarkovCorpus::new(512, 1);
+        let b = Batcher::new(4, 32).lm_batch(&c, &mut Rng::new(2));
+        assert_eq!(b.tokens.shape(), &[4, 32]);
+        assert_eq!(b.mask.shape(), &[4, 32]);
+    }
+
+    #[test]
+    fn task_batch_keeps_samples() {
+        let t = ArithTask::add(512, 1);
+        let b = Batcher::new(3, 64).task_batch(&t, &mut Rng::new(4));
+        assert_eq!(b.samples.len(), 3);
+        assert_eq!(b.tokens.data().len(), 3 * 64);
+        // row i of tokens == samples[i].tokens
+        for (i, s) in b.samples.iter().enumerate() {
+            assert_eq!(&b.tokens.data()[i * 64..(i + 1) * 64], &s.tokens[..]);
+        }
+    }
+}

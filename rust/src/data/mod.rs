@@ -1,0 +1,73 @@
+//! Synthetic data substrates (DESIGN.md §3 substitutions).
+//!
+//! The paper evaluates on WikiText-2 / C4 (language modeling), GSM8K /
+//! Math10K (arithmetic), GLUE (classification) and eight commonsense
+//! suites.  None of these can ship inside this image, so each is replaced
+//! by a *generator* producing the same task shape over the TinyLlama
+//! vocabularies: a Zipf-Markov corpus for LM, templated arithmetic word
+//! problems, Markov-style classification, and pattern-completion
+//! multiple choice.  All generators are deterministic from a seed.
+
+pub mod batch;
+pub mod corpus;
+pub mod tasks;
+
+pub use batch::{Batch, Batcher};
+pub use corpus::ZipfMarkovCorpus;
+pub use tasks::{ArithTask, ClassifyTask, McTask, Task, TaskKind, TaskSample};
+
+/// Reserved token ids shared by all generators (vocab >= 64 assumed).
+pub mod vocab {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const SEP: i32 = 2;
+    pub const EQ: i32 = 3;
+    pub const PLUS: i32 = 4;
+    pub const MINUS: i32 = 5;
+    pub const TIMES: i32 = 6;
+    pub const QMARK: i32 = 7;
+    pub const ANS: i32 = 8;
+    /// Digits 0..=9 at ids 10..=19.
+    pub const DIGIT0: i32 = 10;
+    /// Class labels at ids 20..=27 (8 classes max).
+    pub const LABEL0: i32 = 20;
+    /// Multiple-choice markers A..D at ids 28..=31.
+    pub const CHOICE0: i32 = 28;
+    /// First "word" id; words occupy [WORD0, vocab).
+    pub const WORD0: i32 = 32;
+
+    pub fn digit(d: u32) -> i32 {
+        DIGIT0 + d as i32
+    }
+
+    pub fn label(c: usize) -> i32 {
+        LABEL0 + c as i32
+    }
+
+    /// Render a non-negative number as digit tokens (most significant first).
+    pub fn number_tokens(mut n: u32) -> Vec<i32> {
+        if n == 0 {
+            return vec![digit(0)];
+        }
+        let mut ds = Vec::new();
+        while n > 0 {
+            ds.push(digit(n % 10));
+            n /= 10;
+        }
+        ds.reverse();
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vocab::*;
+
+    #[test]
+    fn number_tokens_render() {
+        assert_eq!(number_tokens(0), vec![digit(0)]);
+        assert_eq!(number_tokens(7), vec![digit(7)]);
+        assert_eq!(number_tokens(42), vec![digit(4), digit(2)]);
+        assert_eq!(number_tokens(130), vec![digit(1), digit(3), digit(0)]);
+    }
+}

@@ -1,0 +1,445 @@
+//! Downstream task generators — the GSM8K / GLUE / commonsense stand-ins.
+//!
+//! Every task produces `TaskSample`s: a token sequence, a target mask
+//! (1.0 on positions whose *prediction* is scored/trained, matching the
+//! shifted-loss convention of `model.next_token_loss`), and the answer
+//! span for accuracy scoring.
+//!
+//! Task roster (paper experiment -> generator):
+//!   GSM8K        -> ArithTask::add (2-digit addition word problems)
+//!   SVAMP        -> ArithTask::sub (subtraction, result >= 0)
+//!   MAWPS        -> ArithTask::mul1 (single-digit products)
+//!   AQuA         -> McTask::arith_mc (arithmetic multiple choice)
+//!   GLUE-*       -> ClassifyTask (k-way Markov-style classification)
+//!   commonsense  -> McTask::pattern (pattern-completion MC, 8 variants)
+
+use crate::data::corpus::ZipfMarkovCorpus;
+use crate::data::vocab;
+use crate::tensor::Rng;
+
+/// One training/eval instance.
+#[derive(Clone, Debug)]
+pub struct TaskSample {
+    /// Token ids, padded to the caller's sequence length with PAD.
+    pub tokens: Vec<i32>,
+    /// Loss/score mask aligned to `tokens` (1.0 where the *target* at that
+    /// position is trained/scored).
+    pub mask: Vec<f32>,
+    /// Positions (indices into `tokens`) holding the answer tokens.
+    pub answer_pos: Vec<usize>,
+    /// The correct answer tokens at those positions.
+    pub answer: Vec<i32>,
+    /// For MC tasks: candidate answer tokens (first is NOT necessarily
+    /// correct; `answer` holds the correct one). Empty for generative.
+    pub choices: Vec<i32>,
+}
+
+/// Kinds of tasks in the suite (used by the pipeline/CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    ArithAdd,
+    ArithSub,
+    ArithMul,
+    ArithMc,
+    Classify(usize),
+    PatternMc(u64),
+}
+
+impl TaskKind {
+    pub fn name(&self) -> String {
+        match self {
+            TaskKind::ArithAdd => "arith_add(gsm8k)".into(),
+            TaskKind::ArithSub => "arith_sub(svamp)".into(),
+            TaskKind::ArithMul => "arith_mul(mawps)".into(),
+            TaskKind::ArithMc => "arith_mc(aqua)".into(),
+            TaskKind::Classify(k) => format!("classify{k}(glue)"),
+            TaskKind::PatternMc(v) => format!("pattern_mc{v}(commonsense)"),
+        }
+    }
+}
+
+/// Common interface: generate one sample of at most `seq_len` tokens.
+pub trait Task {
+    fn sample(&self, seq_len: usize, rng: &mut Rng) -> TaskSample;
+    fn kind(&self) -> TaskKind;
+}
+
+fn pad_to(mut tokens: Vec<i32>, mut mask: Vec<f32>, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    tokens.truncate(seq_len);
+    mask.truncate(seq_len);
+    while tokens.len() < seq_len {
+        tokens.push(vocab::PAD);
+        mask.push(0.0);
+    }
+    (tokens, mask)
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic (generative): context words, "a OP b = c"
+// ---------------------------------------------------------------------------
+
+/// Templated arithmetic word problems.
+#[derive(Clone, Debug)]
+pub struct ArithTask {
+    pub kind: TaskKind,
+    corpus: ZipfMarkovCorpus,
+}
+
+impl ArithTask {
+    pub fn add(vocab_size: usize, seed: u64) -> Self {
+        ArithTask { kind: TaskKind::ArithAdd, corpus: ZipfMarkovCorpus::new(vocab_size, seed) }
+    }
+
+    pub fn sub(vocab_size: usize, seed: u64) -> Self {
+        ArithTask { kind: TaskKind::ArithSub, corpus: ZipfMarkovCorpus::new(vocab_size, seed) }
+    }
+
+    pub fn mul1(vocab_size: usize, seed: u64) -> Self {
+        ArithTask { kind: TaskKind::ArithMul, corpus: ZipfMarkovCorpus::new(vocab_size, seed) }
+    }
+
+    fn operands(&self, rng: &mut Rng) -> (u32, u32, u32, i32) {
+        match self.kind {
+            TaskKind::ArithAdd => {
+                let a = rng.below(50) as u32;
+                let b = rng.below(50) as u32;
+                (a, b, a + b, vocab::PLUS)
+            }
+            TaskKind::ArithSub => {
+                let a = rng.below(50) as u32;
+                let b = rng.below((a + 1) as usize) as u32;
+                (a, b, a - b, vocab::MINUS)
+            }
+            TaskKind::ArithMul => {
+                let a = rng.below(10) as u32;
+                let b = rng.below(10) as u32;
+                (a, b, a * b, vocab::TIMES)
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+impl Task for ArithTask {
+    fn sample(&self, seq_len: usize, rng: &mut Rng) -> TaskSample {
+        let (a, b, c, op) = self.operands(rng);
+        // "word problem" dressing: a few corpus words before the equation
+        let dress = 3 + rng.below(5);
+        let mut tokens = vec![vocab::BOS];
+        let ctx = self.corpus.sequence(dress + 1, rng);
+        tokens.extend(&ctx[1..]); // skip its BOS
+        tokens.extend(vocab::number_tokens(a));
+        tokens.push(op);
+        tokens.extend(vocab::number_tokens(b));
+        tokens.push(vocab::EQ);
+        let ans = vocab::number_tokens(c);
+        let ans_start = tokens.len();
+        tokens.extend(&ans);
+        tokens.push(vocab::SEP);
+        let mut mask = vec![0.0f32; tokens.len()];
+        let answer_pos: Vec<usize> = (ans_start..ans_start + ans.len()).collect();
+        for &p in &answer_pos {
+            mask[p] = 1.0; // trains/scores the prediction OF this position
+        }
+        let (tokens, mask) = pad_to(tokens, mask, seq_len);
+        TaskSample { tokens, mask, answer_pos, answer: ans, choices: vec![] }
+    }
+
+    fn kind(&self) -> TaskKind {
+        self.kind
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Classification (GLUE-analogue): k Markov styles, predict the style label
+// ---------------------------------------------------------------------------
+
+/// k-way sequence classification: each class is a differently-seeded
+/// Markov source; the model must predict the class token after QMARK.
+#[derive(Clone, Debug)]
+pub struct ClassifyTask {
+    pub classes: usize,
+    sources: Vec<ZipfMarkovCorpus>,
+}
+
+impl ClassifyTask {
+    pub fn new(vocab_size: usize, classes: usize, seed: u64) -> Self {
+        assert!(classes <= 8);
+        let sources = (0..classes)
+            .map(|c| ZipfMarkovCorpus::new(vocab_size, seed.wrapping_add(1000 * c as u64 + 1)))
+            .collect();
+        ClassifyTask { classes, sources }
+    }
+}
+
+impl Task for ClassifyTask {
+    fn sample(&self, seq_len: usize, rng: &mut Rng) -> TaskSample {
+        let cls = rng.below(self.classes);
+        let body_len = (seq_len - 4).min(24 + rng.below(16));
+        let body = self.sources[cls].sequence(body_len + 1, rng);
+        let mut tokens = vec![vocab::BOS];
+        tokens.extend(&body[1..]);
+        tokens.push(vocab::QMARK);
+        let ans_pos = tokens.len();
+        let label = vocab::label(cls);
+        tokens.push(label);
+        tokens.push(vocab::SEP);
+        let mut mask = vec![0.0f32; tokens.len()];
+        mask[ans_pos] = 1.0;
+        let (tokens, mask) = pad_to(tokens, mask, seq_len);
+        TaskSample {
+            tokens,
+            mask,
+            answer_pos: vec![ans_pos],
+            answer: vec![label],
+            choices: (0..self.classes).map(vocab::label).collect(),
+        }
+    }
+
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classify(self.classes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multiple choice (commonsense / AQuA analogue)
+// ---------------------------------------------------------------------------
+
+/// Pattern-completion multiple choice: the context establishes a periodic
+/// word pattern; the correct choice continues it, distractors don't.
+/// `variant` seeds a distinct task "flavor" (period 2/3/4, offset), giving
+/// the eight commonsense-suite stand-ins.
+#[derive(Clone, Debug)]
+pub struct McTask {
+    pub variant: u64,
+    vocab_size: usize,
+    arith: bool,
+}
+
+impl McTask {
+    pub fn pattern(vocab_size: usize, variant: u64) -> Self {
+        McTask { variant, vocab_size, arith: false }
+    }
+
+    /// AQuA-analogue: arithmetic with MC answers.
+    pub fn arith_mc(vocab_size: usize, variant: u64) -> Self {
+        McTask { variant, vocab_size, arith: true }
+    }
+
+    fn n_words(&self) -> i32 {
+        self.vocab_size as i32 - vocab::WORD0
+    }
+}
+
+impl Task for McTask {
+    fn sample(&self, seq_len: usize, rng: &mut Rng) -> TaskSample {
+        if self.arith {
+            // a + b = ? with 4 digit-pair choices
+            let a = rng.below(30) as u32;
+            let b = rng.below(30) as u32;
+            let c = a + b;
+            let mut tokens = vec![vocab::BOS];
+            tokens.extend(vocab::number_tokens(a));
+            tokens.push(vocab::PLUS);
+            tokens.extend(vocab::number_tokens(b));
+            tokens.push(vocab::EQ);
+            tokens.push(vocab::QMARK);
+            let ans_pos = tokens.len();
+            // single-token answer: tens digit of c (keeps MC single-token)
+            let correct = vocab::digit(c / 10);
+            tokens.push(correct);
+            tokens.push(vocab::SEP);
+            let mut mask = vec![0.0f32; tokens.len()];
+            mask[ans_pos] = 1.0;
+            let mut choices = vec![correct];
+            while choices.len() < 4 {
+                let d = vocab::digit(rng.below(10) as u32);
+                if !choices.contains(&d) {
+                    choices.push(d);
+                }
+            }
+            rng.shuffle(&mut choices[..]);
+            let (tokens, mask) = pad_to(tokens, mask, seq_len);
+            return TaskSample {
+                tokens,
+                mask,
+                answer_pos: vec![ans_pos],
+                answer: vec![correct],
+                choices,
+            };
+        }
+
+        // pattern completion: period p in {2,3,4} derived from variant
+        let p = 2 + (self.variant % 3) as usize;
+        let mut motif: Vec<i32> = Vec::with_capacity(p);
+        while motif.len() < p {
+            let w = vocab::WORD0 + rng.below(self.n_words() as usize) as i32;
+            if !motif.contains(&w) {
+                motif.push(w);
+            }
+        }
+        let reps = 3 + rng.below(4);
+        let mut tokens = vec![vocab::BOS];
+        for i in 0..reps * p + (p - 1) {
+            tokens.push(motif[i % p]);
+        }
+        tokens.push(vocab::QMARK);
+        let ans_pos = tokens.len();
+        let correct = motif[(reps * p + (p - 1)) % p];
+        tokens.push(correct);
+        tokens.push(vocab::SEP);
+        let mut mask = vec![0.0f32; tokens.len()];
+        mask[ans_pos] = 1.0;
+        let mut choices = vec![correct];
+        while choices.len() < 4 {
+            let w = vocab::WORD0 + rng.below(self.n_words() as usize) as i32;
+            if !choices.contains(&w) {
+                choices.push(w);
+            }
+        }
+        rng.shuffle(&mut choices[..]);
+        let (tokens, mask) = pad_to(tokens, mask, seq_len);
+        TaskSample {
+            tokens,
+            mask,
+            answer_pos: vec![ans_pos],
+            answer: vec![correct],
+            choices,
+        }
+    }
+
+    fn kind(&self) -> TaskKind {
+        if self.arith {
+            TaskKind::ArithMc
+        } else {
+            TaskKind::PatternMc(self.variant)
+        }
+    }
+}
+
+/// The eight commonsense-suite stand-ins (BoolQ..OBQA in the paper).
+pub fn commonsense_suite(vocab_size: usize) -> Vec<McTask> {
+    (0..8).map(|v| McTask::pattern(vocab_size, v)).collect()
+}
+
+/// The four arithmetic test sets of Table 7 (GSM8K, SVAMP, MAWPS, AQuA).
+pub fn arithmetic_suite(vocab_size: usize, seed: u64) -> (Vec<Box<dyn Task>>, Vec<String>) {
+    let tasks: Vec<Box<dyn Task>> = vec![
+        Box::new(ArithTask::add(vocab_size, seed)),
+        Box::new(ArithTask::sub(vocab_size, seed + 1)),
+        Box::new(ArithTask::mul1(vocab_size, seed + 2)),
+        Box::new(McTask::arith_mc(vocab_size, 3)),
+    ];
+    let names = vec!["GSM8K*".into(), "SVAMP*".into(), "MAWPS*".into(), "AQuA*".into()];
+    (tasks, names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arith_answer_is_correct_sum() {
+        let t = ArithTask::add(512, 1);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let s = t.sample(128, &mut rng);
+            // locate EQ; digits after it (until SEP) must equal answer
+            let eq = s.tokens.iter().position(|&x| x == vocab::EQ).unwrap();
+            let mut ans = Vec::new();
+            for &tok in &s.tokens[eq + 1..] {
+                if tok == vocab::SEP {
+                    break;
+                }
+                ans.push(tok);
+            }
+            assert_eq!(ans, s.answer);
+            // mask exactly covers answer positions
+            let on: Vec<usize> = s
+                .mask
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| m > 0.0)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(on, s.answer_pos);
+        }
+    }
+
+    #[test]
+    fn sub_never_negative() {
+        let t = ArithTask::sub(512, 3);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let s = t.sample(64, &mut rng);
+            assert!(!s.answer.is_empty());
+        }
+    }
+
+    #[test]
+    fn classify_label_in_range() {
+        let t = ClassifyTask::new(512, 3, 5);
+        let mut rng = Rng::new(6);
+        for _ in 0..30 {
+            let s = t.sample(128, &mut rng);
+            assert!(s.answer[0] >= vocab::LABEL0 && s.answer[0] < vocab::LABEL0 + 3);
+            assert_eq!(s.choices.len(), 3);
+        }
+    }
+
+    #[test]
+    fn classify_styles_differ() {
+        // Samples of different classes should have different token stats.
+        let t = ClassifyTask::new(512, 2, 5);
+        let mut rng = Rng::new(7);
+        let (mut c0, mut c1) = (Vec::new(), Vec::new());
+        for _ in 0..200 {
+            let s = t.sample(64, &mut rng);
+            let sum: i64 = s.tokens.iter().map(|&x| x as i64).sum();
+            if s.answer[0] == vocab::label(0) {
+                c0.push(sum);
+            } else {
+                c1.push(sum);
+            }
+        }
+        let m0 = c0.iter().sum::<i64>() as f64 / c0.len() as f64;
+        let m1 = c1.iter().sum::<i64>() as f64 / c1.len() as f64;
+        assert!((m0 - m1).abs() > 1.0, "class styles indistinguishable");
+    }
+
+    #[test]
+    fn mc_correct_choice_present_and_unique() {
+        let t = McTask::pattern(512, 2);
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let s = t.sample(64, &mut rng);
+            assert_eq!(s.choices.len(), 4);
+            assert_eq!(s.choices.iter().filter(|&&c| c == s.answer[0]).count(), 1);
+        }
+    }
+
+    #[test]
+    fn mc_pattern_is_deducible() {
+        // The correct answer must actually continue the motif: token at
+        // answer_pos - p equals the answer (period p).
+        let t = McTask::pattern(512, 0); // period 2
+        let mut rng = Rng::new(9);
+        let s = t.sample(64, &mut rng);
+        let p = 2;
+        assert_eq!(s.tokens[s.answer_pos[0] - p - 1], s.answer[0]); // -1 skips QMARK
+    }
+
+    #[test]
+    fn padding_is_masked() {
+        let t = ArithTask::add(512, 1);
+        let mut rng = Rng::new(10);
+        let s = t.sample(128, &mut rng);
+        assert_eq!(s.tokens.len(), 128);
+        assert_eq!(s.mask.len(), 128);
+        for (tok, m) in s.tokens.iter().zip(&s.mask) {
+            if *tok == vocab::PAD {
+                assert_eq!(*m, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Crate-wide error type. Deliberately small: everything funnels into a
+//! String-carrying enum so library consumers get readable failures without
+//! pulling an error-handling framework into the public API.
+
+use std::fmt;
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes of the reproduction stack.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (compile, execute, literal conversion).
+    Xla(String),
+    /// Filesystem / checkpoint / artifact-IO failures.
+    Io(String),
+    /// Artifact manifest problems (missing key, shape mismatch, ...).
+    Manifest(String),
+    /// Shape or dimension mismatch in host-side tensor math.
+    Shape(String),
+    /// Configuration parsing / validation problems.
+    Config(String),
+    /// Numerical failure (non-finite loss, singular matrix, ...).
+    Numeric(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Io(m) => write!(f, "io: {m}"),
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Shape(m) => write!(f, "shape: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Numeric(m) => write!(f, "numeric: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Shorthand constructors used throughout the crate.
+impl Error {
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn manifest(msg: impl Into<String>) -> Self {
+        Error::Manifest(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn numeric(msg: impl Into<String>) -> Self {
+        Error::Numeric(msg.into())
+    }
+    pub fn io(msg: impl Into<String>) -> Self {
+        Error::Io(msg.into())
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation: perplexity over the synthetic corpus and accuracy over the
+//! downstream task suites, computed host-side from artifact logits.
+
+pub mod ppl;
+pub mod scoring;
+
+pub use ppl::{nll_from_logits, Evaluator, ModelMode};
+pub use scoring::{accuracy_from_logits, mc_accuracy_from_logits};

@@ -1,0 +1,170 @@
+//! Perplexity evaluation (the Table 2 / Table 3 / Table 6 metric).
+//!
+//! The artifacts return raw logits (B, T, V); the shifted masked NLL is
+//! computed here, matching `model.next_token_loss` exactly: the mask at
+//! target position t weights the prediction of tokens[t] from t-1.
+
+use crate::data::Batch;
+use crate::error::Result;
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::{Bindings, Runtime};
+use crate::tensor::Tensor;
+
+/// Which model path evaluates the batch.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelMode {
+    /// Full-precision artifact (`logits_fp_<size>`).
+    Fp,
+    /// Quantized + adapter artifact (`logits_q_<size>_r<r>_g<g>[_dora]`)
+    /// with runtime bits/scale.
+    Quant { rank: usize, group: usize, bits: f32, scale: f32, dora: bool },
+}
+
+impl ModelMode {
+    pub fn artifact_name(&self, size: &str) -> String {
+        match self {
+            ModelMode::Fp => format!("logits_fp_{size}"),
+            ModelMode::Quant { rank, group, dora, .. } => {
+                let suffix = if *dora { "_dora" } else { "" };
+                format!("logits_q_{size}_r{rank}_g{group}{suffix}")
+            }
+        }
+    }
+}
+
+/// (sum_nll, sum_mask) for one batch of logits.
+pub fn nll_from_logits(logits: &Tensor, batch: &Batch, vocab: usize) -> (f64, f64) {
+    let dims = logits.shape();
+    let (b, t) = (dims[0], dims[1]);
+    debug_assert_eq!(dims[2], vocab);
+    let toks = batch.tokens.data();
+    let mask = batch.mask.data();
+    let data = logits.data();
+    let mut sum_nll = 0.0f64;
+    let mut sum_m = 0.0f64;
+    for bi in 0..b {
+        for ti in 1..t {
+            let m = mask[bi * t + ti] as f64;
+            if m == 0.0 {
+                continue;
+            }
+            // predicting tokens[bi, ti] from logits at position ti-1
+            let row = &data[(bi * t + ti - 1) * vocab..(bi * t + ti) * vocab];
+            let tgt = toks[bi * t + ti] as usize;
+            // stable log-softmax
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let lse: f32 = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            sum_nll += m * (lse - row[tgt]) as f64;
+            sum_m += m;
+        }
+    }
+    (sum_nll, sum_m)
+}
+
+/// Drives logits artifacts over batches and aggregates metrics.
+pub struct Evaluator<'r> {
+    pub runtime: &'r Runtime,
+    pub cfg: ModelConfig,
+}
+
+impl<'r> Evaluator<'r> {
+    pub fn new(runtime: &'r Runtime, cfg: ModelConfig) -> Self {
+        Evaluator { runtime, cfg }
+    }
+
+    /// Raw logits for one batch.
+    pub fn logits(
+        &self,
+        mode: &ModelMode,
+        params: &ParamStore,
+        qparams: Option<&ParamStore>,
+        batch: &Batch,
+    ) -> Result<Tensor> {
+        let name = mode.artifact_name(self.cfg.name);
+        let mut b = Bindings::new().group("params", params).int("tokens", &batch.tokens);
+        if let ModelMode::Quant { bits, scale, .. } = mode {
+            let qp = qparams.expect("quant mode needs qparams");
+            b = b.group("qparams", qp).scalar("bits", *bits).scalar("scale", *scale);
+        }
+        let mut out = self.runtime.run(&name, &b)?;
+        out.take("logits")
+    }
+
+    /// Perplexity over a set of batches: exp(total_nll / total_tokens).
+    pub fn perplexity(
+        &self,
+        mode: &ModelMode,
+        params: &ParamStore,
+        qparams: Option<&ParamStore>,
+        batches: &[Batch],
+    ) -> Result<f64> {
+        let mut nll = 0.0f64;
+        let mut cnt = 0.0f64;
+        for batch in batches {
+            let logits = self.logits(mode, params, qparams, batch)?;
+            let (n, c) = nll_from_logits(&logits, batch, self.cfg.vocab);
+            nll += n;
+            cnt += c;
+        }
+        if cnt == 0.0 {
+            return Ok(f64::NAN);
+        }
+        Ok((nll / cnt).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Batcher, ZipfMarkovCorpus};
+    use crate::tensor::{IntTensor, Rng};
+
+    fn tiny_batch() -> Batch {
+        let c = ZipfMarkovCorpus::new(64, 1); // vocab must exceed WORD0
+        Batcher::new(2, 4).lm_batch(&c, &mut Rng::new(2))
+    }
+
+    #[test]
+    fn uniform_logits_give_log_vocab() {
+        let b = tiny_batch();
+        let v = 64usize;
+        let logits = Tensor::zeros(&[2, 4, v]);
+        let (nll, cnt) = nll_from_logits(&logits, &b, v);
+        assert!(cnt > 0.0);
+        let mean = nll / cnt;
+        assert!((mean - (v as f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn perfect_logits_give_zero_nll() {
+        // one-hot logits with huge margin at the target
+        let b = tiny_batch();
+        let v = 64usize;
+        let mut logits = Tensor::zeros(&[2, 4, v]);
+        let toks = b.tokens.data().to_vec();
+        for bi in 0..2 {
+            for ti in 1..4 {
+                let tgt = toks[bi * 4 + ti] as usize;
+                let base = (bi * 4 + ti - 1) * v;
+                logits.data_mut()[base + tgt] = 100.0;
+            }
+        }
+        let (nll, cnt) = nll_from_logits(&logits, &b, v);
+        assert!(nll / cnt < 1e-5);
+    }
+
+    #[test]
+    fn mask_excludes_positions() {
+        let v = 64usize;
+        let toks = IntTensor::new(vec![1, 4], vec![1, 2, 3, 4]).unwrap();
+        let mask_full = Tensor::new(vec![1, 4], vec![1.0; 4]).unwrap();
+        let mask_half = Tensor::new(vec![1, 4], vec![0.0, 0.0, 1.0, 1.0]).unwrap();
+        let logits = Tensor::zeros(&[1, 4, v]);
+        let bf = Batch { tokens: toks.clone(), mask: mask_full, samples: vec![] };
+        let bh = Batch { tokens: toks, mask: mask_half, samples: vec![] };
+        let (_, c_full) = nll_from_logits(&logits, &bf, v);
+        let (_, c_half) = nll_from_logits(&logits, &bh, v);
+        assert_eq!(c_full, 3.0); // t=1..3
+        assert_eq!(c_half, 2.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Task accuracy scoring from artifact logits.
+//!
+//! * Generative tasks (arithmetic, classification): exact match of the
+//!   argmax prediction on every answer position (teacher-forced greedy
+//!   decoding — the standard proxy when no sampling loop exists).
+//! * Multiple choice: restrict the answer position's logits to the
+//!   candidate tokens and take the argmax (the paper's commonsense
+//!   suites are scored analogously by sequence likelihood).
+
+use crate::data::Batch;
+use crate::tensor::Tensor;
+
+/// Exact-match accuracy on the answer span of each sample in a batch.
+/// Returns (n_correct, n_samples).
+pub fn accuracy_from_logits(logits: &Tensor, batch: &Batch, vocab: usize) -> (usize, usize) {
+    let dims = logits.shape();
+    let t = dims[1];
+    debug_assert_eq!(dims[2], vocab);
+    let data = logits.data();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (bi, s) in batch.samples.iter().enumerate() {
+        if s.answer_pos.is_empty() {
+            continue;
+        }
+        total += 1;
+        let mut ok = true;
+        for (k, &pos) in s.answer_pos.iter().enumerate() {
+            if pos == 0 || pos >= t {
+                ok = false;
+                break;
+            }
+            // prediction of tokens[pos] comes from logits at pos-1
+            let row = &data[(bi * t + pos - 1) * vocab..(bi * t + pos) * vocab];
+            let pred = argmax(row);
+            if pred as i32 != s.answer[k] {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            correct += 1;
+        }
+    }
+    (correct, total)
+}
+
+/// Multiple-choice accuracy: answer position logits restricted to choices.
+pub fn mc_accuracy_from_logits(logits: &Tensor, batch: &Batch, vocab: usize) -> (usize, usize) {
+    let dims = logits.shape();
+    let t = dims[1];
+    let data = logits.data();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (bi, s) in batch.samples.iter().enumerate() {
+        if s.choices.is_empty() || s.answer_pos.is_empty() {
+            continue;
+        }
+        total += 1;
+        let pos = s.answer_pos[0];
+        if pos == 0 || pos >= t {
+            continue;
+        }
+        let row = &data[(bi * t + pos - 1) * vocab..(bi * t + pos) * vocab];
+        let best = s
+            .choices
+            .iter()
+            .max_by(|&&a, &&b| row[a as usize].partial_cmp(&row[b as usize]).unwrap())
+            .copied()
+            .unwrap();
+        if best == s.answer[0] {
+            correct += 1;
+        }
+    }
+    (correct, total)
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TaskSample;
+    use crate::tensor::IntTensor;
+
+    fn sample_batch(vocab: usize) -> (Tensor, Batch) {
+        // one sample, answer token 5 at position 2
+        let tokens = IntTensor::new(vec![1, 4], vec![1, 3, 5, 2]).unwrap();
+        let mask = Tensor::new(vec![1, 4], vec![0.0, 0.0, 1.0, 0.0]).unwrap();
+        let s = TaskSample {
+            tokens: vec![1, 3, 5, 2],
+            mask: vec![0.0, 0.0, 1.0, 0.0],
+            answer_pos: vec![2],
+            answer: vec![5],
+            choices: vec![5, 6, 7, 8],
+        };
+        let mut logits = Tensor::zeros(&[1, 4, vocab]);
+        // position 1 predicts position 2: put mass on token 5
+        logits.data_mut()[vocab + 5] = 10.0;
+        (logits, Batch { tokens, mask, samples: vec![s] })
+    }
+
+    #[test]
+    fn generative_correct() {
+        let (logits, b) = sample_batch(16);
+        assert_eq!(accuracy_from_logits(&logits, &b, 16), (1, 1));
+    }
+
+    #[test]
+    fn generative_wrong_when_argmax_elsewhere() {
+        let (mut logits, b) = sample_batch(16);
+        logits.data_mut()[16 + 9] = 20.0; // stronger wrong token
+        assert_eq!(accuracy_from_logits(&logits, &b, 16), (0, 1));
+    }
+
+    #[test]
+    fn mc_restricts_to_choices() {
+        let (mut logits, b) = sample_batch(16);
+        // a non-choice token dominates, but among choices 5 still wins
+        logits.data_mut()[16 + 2] = 50.0;
+        assert_eq!(accuracy_from_logits(&logits, &b, 16), (0, 1));
+        assert_eq!(mc_accuracy_from_logits(&logits, &b, 16), (1, 1));
+    }
+}

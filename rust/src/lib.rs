@@ -1,0 +1,40 @@
+//! # apiq-repro — ApiQ: Finetuning of 2-Bit Quantized Large Language Models
+//!
+//! A full-system reproduction of *ApiQ* (Liao et al., EMNLP 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for group-wise
+//!   fake quantization with learnable clipping and the fused
+//!   quantized-LoRA matmul (STE gradients via `custom_vjp`).
+//! * **L2** (`python/compile/`): the TinyLlama model family plus every
+//!   AOT-able step (pretrain, calibrate, finetune, eval), lowered once to
+//!   HLO-text artifacts by `make artifacts`.
+//! * **L3** (this crate): the coordinator — quantizer registry (RTN,
+//!   GPTQ, AWQ-lite, LoftQ, OmniQuant-lite, ApiQ-lw, ApiQ-bw), the
+//!   activation-stream calibration pipeline of the paper's Algorithm 1,
+//!   training/evaluation drivers, synthetic data substrates, metrics, and
+//!   the experiment registry mapping every paper table/figure to a
+//!   runnable binary.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained, executing the HLO artifacts through PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod benchharness;
+pub mod calib;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod quantizers;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+pub use error::{Error, Result};

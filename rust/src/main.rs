@@ -1,0 +1,212 @@
+//! `repro` — the ApiQ reproduction CLI (L3 leader entrypoint).
+//!
+//! Subcommands mirror the experiment pipeline stages:
+//!
+//!   repro pretrain  --size small --steps 300
+//!   repro quantize  --size small --method apiq-bw --bits 2
+//!   repro eval      --size small --method apiq-bw --bits 2
+//!   repro finetune  --size small --method apiq-bw --bits 2 --data corpus
+//!   repro report memory
+//!   repro artifacts
+//!
+//! The per-paper-table drivers live in `examples/` (see DESIGN.md §5).
+
+use repro::config::args::Args;
+use repro::data::tasks::{ArithTask, ClassifyTask};
+use repro::data::ZipfMarkovCorpus;
+use repro::metrics::{MemoryModel, TableBuilder};
+use repro::model::{checkpoint, ModelConfig};
+use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
+use repro::quant::QuantSpec;
+use repro::train::{FinetuneData, LoraPosition, Pretrainer};
+
+const USAGE: &str = "\
+repro — ApiQ (EMNLP 2024) reproduction coordinator
+
+USAGE: repro <command> [--flags]
+
+COMMANDS
+  pretrain   --size S --steps N                      pretrain + save checkpoint
+  quantize   --size S --method M --bits B            quantize, save qparams
+  eval       --size S --method M --bits B            PTQ perplexity vs fp
+  finetune   --size S --method M --bits B --data D   quantize + adapter finetune
+  report     memory|params                           analytic reports
+  artifacts                                          list compiled artifacts
+
+COMMON FLAGS
+  --artifacts DIR   (default: artifacts)
+  --seed N          (default: 17)
+  --rank R          (default: 16)      --group G     (default: 64)
+  --pretrain-steps N (default: 300)
+
+METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
+";
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.command.is_empty() || args.flag("help") {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Args) -> repro::Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let seed = args.u64_or("seed", 17)?;
+    let rank = args.usize_or("rank", DEFAULT_RANK)?;
+    let group = args.usize_or("group", DEFAULT_GROUP)?;
+    let bits = args.u32_or("bits", 2)?;
+    let size = args.str_or("size", "tiny");
+    let method = args.str_or("method", "apiq-bw");
+    let pretrain_steps = args.usize_or("pretrain-steps", 300)?;
+
+    match args.command.as_str() {
+        "pretrain" => {
+            let steps = args.usize_or("steps", 300)?;
+            let runtime = repro::runtime::Runtime::new(&artifacts)?;
+            let cfg = ModelConfig::by_name(&size)?;
+            let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed);
+            let mut params = cfg.init_params(seed);
+            let trainer = Pretrainer::new(&runtime, cfg, steps);
+            let report = trainer.train(&mut params, &corpus, steps, seed ^ 0x7EA1)?;
+            let path = format!("checkpoints/pretrained_{}_{}_{}.ckpt", cfg.name, steps, seed);
+            checkpoint::save(&params, &path)?;
+            println!(
+                "pretrained {} for {} steps: loss {:.4} -> {:.4} ({:.1}s); saved {path}",
+                cfg.name,
+                steps,
+                report.losses.first().copied().unwrap_or(f32::NAN),
+                report.tail_mean(10),
+                report.wall_secs
+            );
+        }
+        "quantize" => {
+            let env = Env::prepare(&artifacts, &size, pretrain_steps, seed)?;
+            let r = env.quantize(&method, bits, group, rank)?;
+            let path = format!("checkpoints/qparams_{size}_{method}_{bits}b_r{rank}_g{group}.ckpt");
+            checkpoint::save(&r.qparams, &path)?;
+            println!(
+                "quantized {size} with {method} at {bits}-bit in {:.1}s; qparams -> {path}",
+                r.wall_secs
+            );
+        }
+        "eval" => {
+            let eval_batches = args.usize_or("eval-batches", 8)?;
+            let env = Env::prepare(&artifacts, &size, pretrain_steps, seed)?;
+            let fp = env.ppl_fp(eval_batches)?;
+            let r = env.quantize(&method, bits, group, rank)?;
+            let q = env.ppl(&r, rank, group, eval_batches)?;
+            let mut t = TableBuilder::new(format!("PTQ perplexity ({size}, {bits}-bit, g{group})"))
+                .header(&["model", "ppl"]);
+            t.row(vec!["fp32".into(), TableBuilder::num(fp)]);
+            t.row(vec![method.clone(), TableBuilder::num(q)]);
+            println!("{}", t.markdown());
+        }
+        "finetune" => {
+            let data = args.str_or("data", "corpus");
+            let steps = args.usize_or("steps", 100)?;
+            let lr = args.f32_or("lr", 1e-3)?;
+            let position = args.str_or("position", "all");
+            let env = Env::prepare(&artifacts, &size, pretrain_steps, seed)?;
+            let mut r = env.quantize(&method, bits, group, rank)?;
+            let arith = ArithTask::add(env.cfg.vocab, seed ^ 0xA17);
+            let clf = ClassifyTask::new(env.cfg.vocab, 3, seed ^ 0xC1F);
+            let ft_data = match data.as_str() {
+                "arith" => FinetuneData::Task(&arith),
+                "classify" => FinetuneData::Task(&clf),
+                _ => FinetuneData::Corpus(&env.corpus),
+            };
+            let pos = LoraPosition::parse(&position);
+            let report = env.finetune(&mut r, rank, group, &ft_data, steps, lr, pos)?;
+            let ppl = env.ppl(&r, rank, group, 8)?;
+            println!(
+                "finetuned {method} {bits}-bit on {data} for {steps} steps (loss {:.4} -> {:.4}); eval ppl {:.3}",
+                report.losses.first().copied().unwrap_or(f32::NAN),
+                report.tail_mean(10),
+                ppl
+            );
+            if data == "arith" {
+                let acc = env.task_accuracy(&r, rank, group, &arith, 8, false)?;
+                println!("arith accuracy: {:.1}%", acc * 100.0);
+            }
+        }
+        "report" => match args.positionals.first().map(String::as_str) {
+            Some("memory") => print_memory_report(),
+            Some("params") => print_param_report(),
+            other => eprintln!("unknown report {other:?} (try: memory, params)"),
+        },
+        "artifacts" => {
+            let dir = std::path::Path::new(&artifacts);
+            let mut names: Vec<String> = std::fs::read_dir(dir)
+                .map_err(|e| repro::Error::io(format!("{}: {e}", dir.display())))?
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    e.file_name()
+                        .to_str()
+                        .and_then(|n| n.strip_suffix(".hlo.txt").map(String::from))
+                })
+                .collect();
+            names.sort();
+            for n in &names {
+                println!("{n}");
+            }
+            println!("{} artifacts", names.len());
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 2 regeneration: memory accounting for the Llama-2-7B shape.
+fn print_memory_report() {
+    use repro::metrics::memory::{ArchShape, MemoryBreakdown, Regime};
+    let mut t = TableBuilder::new("Fig. 2 — finetuning memory (GB), Llama-2-7B shape")
+        .header(&["regime", "weights", "optimizer", "gradients", "activations", "total"]);
+    let m = MemoryModel::new(ArchShape::llama2_7b());
+    for (name, regime) in [
+        ("Full FT (bf16+Adam)", Regime::FullFt),
+        ("LoRA r=64", Regime::Lora { rank: 64 }),
+        ("QLoRA 4-bit r=64", Regime::QLora { rank: 64, spec: QuantSpec::new(4, 64) }),
+        ("QLoRA 2-bit r=64", Regime::QLora { rank: 64, spec: QuantSpec::new(2, 64) }),
+    ] {
+        let b = m.breakdown(regime);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", MemoryBreakdown::gb(b.weights)),
+            format!("{:.1}", MemoryBreakdown::gb(b.optimizer)),
+            format!("{:.1}", MemoryBreakdown::gb(b.gradients)),
+            format!("{:.1}", MemoryBreakdown::gb(b.activations)),
+            format!("{:.1}", MemoryBreakdown::gb(b.total())),
+        ]);
+    }
+    println!("{}", t.markdown());
+}
+
+fn print_param_report() {
+    let mut t =
+        TableBuilder::new("Model family").header(&["size", "params", "layers", "d_model", "vocab"]);
+    for size in ["tiny", "small", "base"] {
+        let cfg = ModelConfig::by_name(size).unwrap();
+        t.row(vec![
+            size.into(),
+            format!("{:.1}M", cfg.n_params() as f64 / 1e6),
+            cfg.n_layers.to_string(),
+            cfg.d_model.to_string(),
+            cfg.vocab.to_string(),
+        ]);
+    }
+    println!("{}", t.markdown());
+}

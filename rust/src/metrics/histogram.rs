@@ -1,0 +1,162 @@
+//! Value histograms (Fig. 5 / A.2–A.5: distributions of Q, A, B).
+//!
+//! Renders as an ASCII sparkline table so the paper's histogram figures
+//! can be regenerated in a terminal / EXPERIMENTS.md.
+
+/// Fixed-range histogram with uniform bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub n: u64,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], n: 0, underflow: 0, overflow: 0 }
+    }
+
+    /// Build over data with range = (min, max) of the data.
+    pub fn auto(data: &[f32], bins: usize) -> Self {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() || lo == hi {
+            lo = -1.0;
+            hi = 1.0;
+        }
+        let mut h = Histogram::new(lo, hi + (hi - lo) * 1e-6, bins);
+        h.extend(data);
+        h
+    }
+
+    pub fn add(&mut self, v: f32) {
+        self.n += 1;
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n_bins = self.counts.len();
+            let b = ((v - self.lo) / (self.hi - self.lo) * n_bins as f32) as usize;
+            self.counts[b.min(n_bins - 1)] += 1;
+        }
+    }
+
+    pub fn extend(&mut self, data: &[f32]) {
+        for &v in data {
+            self.add(v);
+        }
+    }
+
+    /// Number of bins with any mass (distinct-level detector: a b-bit
+    /// quantized weight has <= 2^b populated levels per group scale).
+    pub fn populated_bins(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Width of the central interval holding `frac` of the mass
+    /// (the Fig. 5 "distribution span" comparison between ApiQ and LoftQ).
+    pub fn central_span(&self, frac: f32) -> f32 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (self.n as f32 * frac) as u64;
+        let bin_w = (self.hi - self.lo) / self.counts.len() as f32;
+        // expand symmetric window around the median bin
+        let mut cum = 0u64;
+        let mut median_bin = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum * 2 >= self.n {
+                median_bin = i;
+                break;
+            }
+        }
+        let mut mass = self.counts[median_bin];
+        let (mut l, mut r) = (median_bin, median_bin);
+        while mass < target && (l > 0 || r + 1 < self.counts.len()) {
+            let left_gain = if l > 0 { self.counts[l - 1] } else { 0 };
+            let right_gain = if r + 1 < self.counts.len() { self.counts[r + 1] } else { 0 };
+            if left_gain >= right_gain && l > 0 {
+                l -= 1;
+                mass += left_gain;
+            } else if r + 1 < self.counts.len() {
+                r += 1;
+                mass += right_gain;
+            } else if l > 0 {
+                l -= 1;
+                mass += left_gain;
+            }
+        }
+        (r - l + 1) as f32 * bin_w
+    }
+
+    /// ASCII rendering (one row per bin, '#' bar scaled to the max bin).
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bin_w = (self.hi - self.lo) / self.counts.len() as f32;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let x = self.lo + bin_w * i as f32;
+            let bar = (c as f64 / max as f64 * width as f64) as usize;
+            out.push_str(&format!("{x:>9.4} | {} {c}\n", "#".repeat(bar)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_bounds() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.extend(&[0.05, 0.15, 0.15, 0.95, -0.5, 2.0]);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.n, 6);
+    }
+
+    #[test]
+    fn auto_covers_data() {
+        let data = vec![-3.0, 0.0, 5.0, 1.0];
+        let h = Histogram::auto(&data, 8);
+        assert_eq!(h.underflow + h.overflow, 0);
+        assert_eq!(h.counts.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn populated_bins_detects_discrete_levels() {
+        // 2-bit-like data: 4 distinct values
+        let mut data = Vec::new();
+        for _ in 0..100 {
+            data.extend_from_slice(&[-0.3, -0.1, 0.1, 0.3]);
+        }
+        let h = Histogram::auto(&data, 64);
+        assert_eq!(h.populated_bins(), 4);
+    }
+
+    #[test]
+    fn central_span_narrower_for_concentrated() {
+        let narrow: Vec<f32> = (0..1000).map(|i| (i % 10) as f32 * 0.001).collect();
+        let wide: Vec<f32> = (0..1000).map(|i| (i % 10) as f32 * 0.1).collect();
+        let hn = Histogram::new(-1.0, 1.0, 100);
+        let mut hn = hn;
+        hn.extend(&narrow);
+        let mut hw = Histogram::new(-1.0, 1.0, 100);
+        hw.extend(&wide);
+        assert!(hn.central_span(0.9) < hw.central_span(0.9));
+    }
+}

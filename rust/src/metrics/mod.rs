@@ -1,0 +1,71 @@
+//! Metrics: the paper's diagnostic quantities (weight error of Fig. 3 /
+//! A.1, activation error of Fig. 4, the Q/A/B histograms of Fig. 5, and
+//! the GPU-memory accounting of Fig. 2 / Table 4) plus table emitters.
+
+pub mod histogram;
+pub mod memory;
+pub mod table;
+
+pub use histogram::Histogram;
+pub use memory::MemoryModel;
+pub use table::TableBuilder;
+
+use crate::error::Result;
+use crate::model::ParamStore;
+use crate::tensor::Tensor;
+
+/// ‖W − (Q + A·Bᵀ·scale)‖_F — the weight error of Fig. 3 / Fig. A.1.
+pub fn weight_error(w: &Tensor, q_eff: &Tensor) -> Result<f32> {
+    Ok(w.sub(q_eff)?.fro_norm())
+}
+
+/// Effective quantized weight Q + scale·A·Bᵀ for one linear layer, given
+/// its qparam view (`gamma`,`beta`,`lora_a`,`lora_b`) and a dequantized Q.
+pub fn effective_weight(q: &Tensor, qp: &ParamStore, scale: f32) -> Result<Tensor> {
+    let a = qp.require("lora_a")?;
+    let b = qp.require("lora_b")?;
+    let ab = a.matmul(&b.transpose()?)?;
+    q.add(&ab.scale(scale))
+}
+
+/// Per-token activation error ‖X·W − Y_q‖_F / n_tokens (Fig. 4's metric),
+/// where `y` = X·W (fp stream) and `yq` the quantized layer's output.
+pub fn activation_error_per_token(y: &Tensor, yq: &Tensor) -> Result<f32> {
+    let n_tok = y.shape()[0] as f32;
+    Ok(y.sub(yq)?.fro_norm() / n_tok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn weight_error_zero_for_identical() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        assert_eq!(weight_error(&w, &w).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn effective_weight_includes_lowrank() {
+        let mut rng = Rng::new(2);
+        let q = Tensor::zeros(&[4, 4]);
+        let mut qp = ParamStore::new();
+        let a = Tensor::randn(&[4, 2], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 2], 1.0, &mut rng);
+        let expect = a.matmul(&b.transpose().unwrap()).unwrap().scale(2.0);
+        qp.insert("lora_a", a);
+        qp.insert("lora_b", b);
+        let eff = effective_weight(&q, &qp, 2.0).unwrap();
+        assert!(eff.sub(&expect).unwrap().fro_norm() < 1e-6);
+    }
+
+    #[test]
+    fn act_error_normalizes_by_tokens() {
+        let y = Tensor::full(&[10, 4], 1.0);
+        let yq = Tensor::full(&[10, 4], 0.0);
+        let e = activation_error_per_token(&y, &yq).unwrap();
+        assert!((e - (40f32).sqrt() / 10.0).abs() < 1e-6);
+    }
+}

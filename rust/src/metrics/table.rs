@@ -1,0 +1,128 @@
+//! Markdown/CSV table emitter — every experiment binary prints its paper
+//! table through this, so EXPERIMENTS.md rows are copy-pasteable.
+
+/// Simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct TableBuilder {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: impl Into<String>) -> Self {
+        TableBuilder { title: title.into(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    /// Format a float with sensible precision for ppl/acc cells, matching
+    /// the paper's style (big perplexities in scientific notation).
+    pub fn num(v: f64) -> String {
+        if !v.is_finite() {
+            "N.A.".into()
+        } else if v.abs() >= 1e4 {
+            format!("{v:.1e}")
+        } else if v.abs() >= 100.0 {
+            format!("{v:.1}")
+        } else {
+            format!("{v:.2}")
+        }
+    }
+
+    pub fn pct(v: f64) -> String {
+        if v.is_finite() {
+            format!("{:.1}", v * 100.0)
+        } else {
+            "N.A.".into()
+        }
+    }
+
+    /// Render as a GitHub-markdown table with an underlined title.
+    pub fn markdown(&self) -> String {
+        let ncols = self.header.len().max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |row: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = row.get(i).map(String::as_str).unwrap_or("");
+                s.push_str(&format!(" {cell:<w$} |", w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// CSV rendering (for downstream plotting).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_aligned() {
+        let mut t = TableBuilder::new("Table X").header(&["method", "ppl"]);
+        t.row_strs(&["ApiQ-bw", "7.59"]);
+        t.row_strs(&["QLoRA", "1.8e5"]);
+        let md = t.markdown();
+        assert!(md.contains("### Table X"));
+        assert!(md.contains("| ApiQ-bw |"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(TableBuilder::num(7.593), "7.59");
+        assert_eq!(TableBuilder::num(431.97), "432.0");
+        assert_eq!(TableBuilder::num(1.8e5), "1.8e5");
+        assert_eq!(TableBuilder::num(f64::NAN), "N.A.");
+    }
+
+    #[test]
+    fn csv_roundtrip_columns() {
+        let mut t = TableBuilder::new("t").header(&["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        assert_eq!(t.csv(), "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,137 @@
+//! Versioned binary checkpoints for `ParamStore`s.
+//!
+//! Format (little-endian):
+//!   magic  "APIQCKPT"  (8 bytes)
+//!   version u32
+//!   n_entries u32
+//!   per entry:
+//!     key_len u32, key bytes (utf-8)
+//!     rank u32, dims u64 * rank
+//!     f32 payload
+//!
+//! Simple, dependency-free, and byte-exact across runs — checkpoints are
+//! part of the experiment pipeline (pretrain -> quantize -> finetune each
+//! run as separate CLI invocations).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::ParamStore;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"APIQCKPT";
+const VERSION: u32 = 1;
+
+/// Write a store to `path` (creates parent dirs).
+pub fn save(store: &ParamStore, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(store.len() as u32).to_le_bytes())?;
+    for (k, t) in store.iter() {
+        w.write_all(&(k.len() as u32).to_le_bytes())?;
+        w.write_all(k.as_bytes())?;
+        w.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // bulk write of the f32 payload
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+        };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a store from `path`.
+pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).map_err(|e| Error::io(format!("{}: {e}", path.display())))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::io(format!("{}: not an APIQ checkpoint", path.display())));
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != VERSION {
+        return Err(Error::io(format!("unsupported checkpoint version {ver}")));
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut store = ParamStore::new();
+    for _ in 0..n {
+        let klen = read_u32(&mut r)? as usize;
+        let mut kbuf = vec![0u8; klen];
+        r.read_exact(&mut kbuf)?;
+        let key = String::from_utf8(kbuf)
+            .map_err(|e| Error::io(format!("bad key utf8: {e}")))?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut db = [0u8; 8];
+            r.read_exact(&mut db)?;
+            shape.push(u64::from_le_bytes(db) as usize);
+        }
+        let count: usize = shape.iter().product();
+        let mut data = vec![0f32; count];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, count * 4)
+        };
+        r.read_exact(bytes)?;
+        store.insert(key, Tensor::new(shape, data)?);
+    }
+    Ok(store)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut ps = ParamStore::new();
+        ps.insert("a.b", Tensor::randn(&[3, 5], 1.0, &mut rng));
+        ps.insert("scalarish", Tensor::scalar(7.5));
+        ps.insert("vec", Tensor::from_vec(vec![1.0, 2.0, 3.0]));
+        let dir = std::env::temp_dir().join("apiq_ckpt_test");
+        let path = dir.join("test.ckpt");
+        save(&ps, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("a.b").unwrap(), ps.get("a.b").unwrap());
+        assert_eq!(back.get("scalarish").unwrap().item(), 7.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("apiq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load("/definitely/not/here.ckpt").is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Model-side substrate: configs mirroring `python/compile/model.py`,
+//! the named parameter store, block topology (calibration order), adapter
+//! state, and versioned binary checkpoints.
+
+pub mod checkpoint;
+pub mod store;
+pub mod topology;
+
+pub use store::ParamStore;
+pub use topology::{LinearKind, CALIB_STAGES, LINEAR_NAMES};
+
+use crate::error::{Error, Result};
+use crate::quant::QuantSpec;
+use crate::tensor::{Rng, Tensor};
+
+/// Mirror of the Python `ModelConfig` — MUST stay in sync with
+/// `python/compile/model.py::SIZES` (the AOT artifacts bake these shapes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub calib_batch: usize,
+}
+
+pub const TINY: ModelConfig = ModelConfig {
+    name: "tiny", vocab: 512, d_model: 256, n_layers: 4, n_heads: 4,
+    d_ffn: 768, seq_len: 128, batch: 8, calib_batch: 8,
+};
+pub const SMALL: ModelConfig = ModelConfig {
+    name: "small", vocab: 2048, d_model: 512, n_layers: 8, n_heads: 8,
+    d_ffn: 1408, seq_len: 256, batch: 4, calib_batch: 4,
+};
+pub const BASE: ModelConfig = ModelConfig {
+    name: "base", vocab: 4096, d_model: 768, n_layers: 12, n_heads: 12,
+    d_ffn: 2176, seq_len: 256, batch: 2, calib_batch: 2,
+};
+
+impl ModelConfig {
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        match name {
+            "tiny" => Ok(TINY),
+            "small" => Ok(SMALL),
+            "base" => Ok(BASE),
+            _ => Err(Error::config(format!("unknown model size '{name}'"))),
+        }
+    }
+
+    /// (d_in, d_out) of a named linear layer.
+    pub fn linear_shape(&self, lin: LinearKind) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ffn);
+        match lin {
+            LinearKind::Wq | LinearKind::Wk | LinearKind::Wv | LinearKind::Wo => (d, d),
+            LinearKind::Wgate | LinearKind::Wup => (d, f),
+            LinearKind::Wdown => (f, d),
+        }
+    }
+
+    /// Total fp parameter count.
+    pub fn n_params(&self) -> usize {
+        let mut n = self.vocab * self.d_model * 2 + self.d_model; // embed, head, final_norm
+        for lin in LINEAR_NAMES {
+            let (a, b) = self.linear_shape(lin);
+            n += a * b * self.n_layers;
+        }
+        n += 2 * self.d_model * self.n_layers; // norms
+        n
+    }
+
+    /// Initialize full-precision parameters (Rust owns init; artifacts
+    /// only consume buffers).  GPT-2-style scaled normal init.
+    pub fn init_params(&self, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut ps = ParamStore::new();
+        let std = 0.02f32;
+        let resid_std = std / (2.0 * self.n_layers as f32).sqrt();
+        ps.insert("embed", Tensor::randn(&[self.vocab, self.d_model], std, &mut rng));
+        ps.insert("final_norm", Tensor::full(&[self.d_model], 1.0));
+        ps.insert("lm_head", Tensor::randn(&[self.d_model, self.vocab], std, &mut rng));
+        for i in 0..self.n_layers {
+            let p = format!("blocks.{i}.");
+            ps.insert(format!("{p}attn_norm"), Tensor::full(&[self.d_model], 1.0));
+            ps.insert(format!("{p}ffn_norm"), Tensor::full(&[self.d_model], 1.0));
+            for lin in LINEAR_NAMES {
+                let (a, b) = self.linear_shape(lin);
+                // residual-path projections get the depth-scaled init
+                let s = match lin {
+                    LinearKind::Wo | LinearKind::Wdown => resid_std,
+                    _ => std,
+                };
+                ps.insert(format!("{p}{}", lin.as_str()), Tensor::randn(&[a, b], s, &mut rng));
+            }
+        }
+        ps
+    }
+
+    /// Initialize quant/adapter params for all linears:
+    /// gamma=beta=4 (paper §4.3), A ~ Kaiming, B = 0, mag = 1 (dora).
+    pub fn init_qparams(&self, spec: QuantSpec, rank: usize, dora: bool, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut ps = ParamStore::new();
+        for i in 0..self.n_layers {
+            for lin in LINEAR_NAMES {
+                let (d_in, d_out) = self.linear_shape(lin);
+                let g = d_in / spec.group;
+                let p = format!("blocks.{i}.{}.", lin.as_str());
+                ps.insert(format!("{p}gamma"), Tensor::full(&[g, d_out], 4.0));
+                ps.insert(format!("{p}beta"), Tensor::full(&[g, d_out], 4.0));
+                ps.insert(format!("{p}lora_a"), Tensor::kaiming(&[d_in, rank], &mut rng));
+                ps.insert(format!("{p}lora_b"), Tensor::zeros(&[d_out, rank]));
+                if dora {
+                    ps.insert(format!("{p}mag"), Tensor::full(&[d_out], 1.0));
+                }
+            }
+        }
+        ps
+    }
+
+    /// Flat key of a linear weight.
+    pub fn weight_key(&self, block: usize, lin: LinearKind) -> String {
+        format!("blocks.{block}.{}", lin.as_str())
+    }
+
+    /// Flat key prefix of a linear's qparams.
+    pub fn qparam_prefix(&self, block: usize, lin: LinearKind) -> String {
+        format!("blocks.{block}.{}.", lin.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper_scale_axis() {
+        assert!(TINY.n_params() < SMALL.n_params());
+        assert!(SMALL.n_params() < BASE.n_params());
+        assert!(BASE.n_params() > 85_000_000 && BASE.n_params() < 115_000_000);
+    }
+
+    #[test]
+    fn init_params_complete() {
+        let ps = TINY.init_params(1);
+        assert_eq!(ps.len(), 3 + TINY.n_layers * (2 + LINEAR_NAMES.len()));
+        assert_eq!(ps.get("embed").unwrap().shape(), &[512, 256]);
+        assert_eq!(ps.get("blocks.3.wdown").unwrap().shape(), &[768, 256]);
+    }
+
+    #[test]
+    fn init_qparams_shapes() {
+        let spec = QuantSpec::new(2, 64);
+        let qp = TINY.init_qparams(spec, 16, false, 2);
+        assert_eq!(qp.get("blocks.0.wq.gamma").unwrap().shape(), &[4, 256]);
+        assert_eq!(qp.get("blocks.0.wgate.lora_a").unwrap().shape(), &[256, 16]);
+        assert_eq!(qp.get("blocks.0.wdown.lora_b").unwrap().shape(), &[256, 16]);
+        assert!(qp.get("blocks.0.wq.mag").is_none());
+        let qd = TINY.init_qparams(spec, 16, true, 2);
+        assert_eq!(qd.get("blocks.0.wq.mag").unwrap().shape(), &[256]);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = TINY.init_params(42);
+        let b = TINY.init_params(42);
+        assert_eq!(a.get("embed").unwrap(), b.get("embed").unwrap());
+    }
+
+    #[test]
+    fn lora_b_zero_init() {
+        let qp = TINY.init_qparams(QuantSpec::new(2, 64), 8, false, 3);
+        assert_eq!(qp.get("blocks.1.wo.lora_b").unwrap().fro_norm(), 0.0);
+        assert!(qp.get("blocks.1.wo.lora_a").unwrap().fro_norm() > 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Named parameter store: the host-side source of truth for every tensor
+//! the artifacts consume (model weights, quant params, optimizer moments).
+//!
+//! Ordered map (BTreeMap) so iteration order matches the artifact
+//! manifests' sorted-key flattening.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Flat-name -> Tensor map with helpers for prefix views and merging.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        ParamStore { map: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, t: Tensor) {
+        self.map.insert(key.into(), t);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Tensor> {
+        self.map.get(key)
+    }
+
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(key)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&Tensor> {
+        self.map
+            .get(key)
+            .ok_or_else(|| Error::manifest(format!("missing param '{key}'")))
+    }
+
+    pub fn remove(&mut self, key: &str) -> Option<Tensor> {
+        self.map.remove(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    /// All (key, tensor) pairs under a prefix, with the prefix stripped.
+    /// Used to slice one block's params out of the full store:
+    /// `view("blocks.3.")` yields keys like `wq`, `wq.gamma`, ...
+    pub fn view(&self, prefix: &str) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (k, v) in &self.map {
+            if let Some(rest) = k.strip_prefix(prefix) {
+                out.insert(rest.to_string(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Write back a prefix view produced by `view`.
+    pub fn absorb(&mut self, prefix: &str, sub: &ParamStore) {
+        for (k, v) in sub.iter() {
+            self.map.insert(format!("{prefix}{k}"), v.clone());
+        }
+    }
+
+    /// Merge another store (other wins on conflicts).
+    pub fn merge(&mut self, other: ParamStore) {
+        for (k, v) in other.map {
+            self.map.insert(k, v);
+        }
+    }
+
+    /// Zero-filled clone (optimizer moment init).
+    pub fn zeros_like(&self) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (k, v) in &self.map {
+            out.insert(k.clone(), Tensor::zeros(v.shape()));
+        }
+        out
+    }
+
+    /// Keep only entries whose key passes the filter.
+    pub fn filtered(&self, pred: impl Fn(&str) -> bool) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (k, v) in &self.map {
+            if pred(k) {
+                out.insert(k.clone(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Total number of f32 elements (for memory accounting).
+    pub fn n_elements(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Check all tensors are finite; returns the first offending key.
+    pub fn check_finite(&self) -> Result<()> {
+        for (k, v) in &self.map {
+            if !v.all_finite() {
+                return Err(Error::numeric(format!("non-finite values in '{k}'")));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromIterator<(String, Tensor)> for ParamStore {
+    fn from_iter<I: IntoIterator<Item = (String, Tensor)>>(iter: I) -> Self {
+        ParamStore { map: iter.into_iter().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        let mut ps = ParamStore::new();
+        ps.insert("blocks.0.wq", Tensor::full(&[2, 2], 1.0));
+        ps.insert("blocks.0.wq.gamma", Tensor::full(&[1, 2], 4.0));
+        ps.insert("blocks.1.wq", Tensor::full(&[2, 2], 2.0));
+        ps.insert("embed", Tensor::full(&[4, 2], 0.5));
+        ps
+    }
+
+    #[test]
+    fn view_strips_prefix() {
+        let v = store().view("blocks.0.");
+        assert_eq!(v.len(), 2);
+        assert!(v.contains("wq"));
+        assert!(v.contains("wq.gamma"));
+    }
+
+    #[test]
+    fn absorb_roundtrip() {
+        let mut ps = store();
+        let mut v = ps.view("blocks.0.");
+        v.get_mut("wq").unwrap().data_mut()[0] = 9.0;
+        ps.absorb("blocks.0.", &v);
+        assert_eq!(ps.get("blocks.0.wq").unwrap().data()[0], 9.0);
+        assert_eq!(ps.get("blocks.1.wq").unwrap().data()[0], 2.0);
+    }
+
+    #[test]
+    fn zeros_like_preserves_shapes() {
+        let z = store().zeros_like();
+        assert_eq!(z.get("embed").unwrap().shape(), &[4, 2]);
+        assert_eq!(z.get("embed").unwrap().fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn require_errors_on_missing() {
+        assert!(store().require("nope").is_err());
+    }
+
+    #[test]
+    fn check_finite_catches_nan() {
+        let mut ps = store();
+        ps.get_mut("embed").unwrap().data_mut()[0] = f32::NAN;
+        assert!(ps.check_finite().is_err());
+    }
+
+    #[test]
+    fn keys_sorted() {
+        let ps = store();
+        let keys: Vec<_> = ps.keys().cloned().collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

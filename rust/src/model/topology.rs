@@ -1,0 +1,104 @@
+//! Block topology: the seven linear layers of a Llama-style block and the
+//! paper's calibration order (§4.1: "the optimization should start with
+//! the key, query, and value projection layers, followed by the output
+//! projection layer, then the gate and up projection layer, and finally
+//! the down projection layer").
+
+/// The linear layers of one transformer block, in forward order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    Wgate,
+    Wup,
+    Wdown,
+}
+
+impl LinearKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LinearKind::Wq => "wq",
+            LinearKind::Wk => "wk",
+            LinearKind::Wv => "wv",
+            LinearKind::Wo => "wo",
+            LinearKind::Wgate => "wgate",
+            LinearKind::Wup => "wup",
+            LinearKind::Wdown => "wdown",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        LINEAR_NAMES.into_iter().find(|l| l.as_str() == s)
+    }
+
+    /// Is this an attention-side linear (for the Table 1 position split)?
+    pub fn is_attention(&self) -> bool {
+        matches!(
+            self,
+            LinearKind::Wq | LinearKind::Wk | LinearKind::Wv | LinearKind::Wo
+        )
+    }
+
+    /// Which collected activation feeds this linear
+    /// (key into the `block_inputs_*` artifact outputs).
+    pub fn input_activation(&self) -> &'static str {
+        match self {
+            LinearKind::Wq | LinearKind::Wk | LinearKind::Wv => "attn_in",
+            LinearKind::Wo => "o_in",
+            LinearKind::Wgate | LinearKind::Wup => "ffn_in",
+            LinearKind::Wdown => "down_in",
+        }
+    }
+}
+
+/// All linears in forward order.
+pub const LINEAR_NAMES: [LinearKind; 7] = [
+    LinearKind::Wq,
+    LinearKind::Wk,
+    LinearKind::Wv,
+    LinearKind::Wo,
+    LinearKind::Wgate,
+    LinearKind::Wup,
+    LinearKind::Wdown,
+];
+
+/// The paper's sequential calibration stages within a block.
+pub const CALIB_STAGES: [&[LinearKind]; 4] = [
+    &[LinearKind::Wq, LinearKind::Wk, LinearKind::Wv],
+    &[LinearKind::Wo],
+    &[LinearKind::Wgate, LinearKind::Wup],
+    &[LinearKind::Wdown],
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_cover_all_linears_once() {
+        let mut seen = Vec::new();
+        for stage in CALIB_STAGES {
+            for l in stage.iter() {
+                assert!(!seen.contains(l));
+                seen.push(*l);
+            }
+        }
+        assert_eq!(seen.len(), LINEAR_NAMES.len());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for l in LINEAR_NAMES {
+            assert_eq!(LinearKind::from_str(l.as_str()), Some(l));
+        }
+        assert_eq!(LinearKind::from_str("nope"), None);
+    }
+
+    #[test]
+    fn attention_split() {
+        let attn: Vec<_> = LINEAR_NAMES.iter().filter(|l| l.is_attention()).collect();
+        assert_eq!(attn.len(), 4);
+    }
+}

@@ -1,0 +1,220 @@
+//! Experiment pipeline: the shared plumbing every table/figure binary
+//! uses — pretrain-or-load, calibration batches, quantize, evaluate,
+//! finetune — so the `examples/` drivers stay declarative.
+
+use std::path::PathBuf;
+
+use crate::data::{Batch, Batcher, Task, ZipfMarkovCorpus};
+use crate::error::Result;
+use crate::eval::{accuracy_from_logits, mc_accuracy_from_logits, Evaluator, ModelMode};
+use crate::model::{checkpoint, ModelConfig, ParamStore};
+use crate::quant::QuantSpec;
+use crate::quantizers::{by_name, ApiQ, ApiQHyper, QuantResult, QuantizeCtx, Quantizer};
+use crate::runtime::Runtime;
+use crate::tensor::Rng;
+use crate::train::{FinetuneData, Finetuner, LoraPosition, Pretrainer, TrainReport};
+
+/// Defaults mirrored by the artifact plan in `python/compile/aot.py`.
+pub const DEFAULT_RANK: usize = 16;
+pub const DEFAULT_GROUP: usize = 64;
+pub const DEFAULT_SCALE: f32 = 1.0;
+/// Calibration set: n_batches of calib_batch sequences each — the stand-in
+/// for the paper's "128 sentences from WikiText-2".
+pub const DEFAULT_CALIB_BATCHES: usize = 4;
+
+/// Default pretraining budget per model size (CPU-host calibrated: the
+/// tiny model needs ~1.5k steps before 2-bit quantization meaningfully
+/// damages it — an undertrained model has no knowledge to forget).
+pub fn default_pretrain_steps(size: &str) -> usize {
+    match size {
+        "base" => 120,
+        "small" => 200,
+        _ => 1500,
+    }
+}
+
+/// A prepared experiment environment.
+pub struct Env {
+    pub runtime: Runtime,
+    pub cfg: ModelConfig,
+    pub params: ParamStore,
+    pub corpus: ZipfMarkovCorpus,
+    pub calib: Vec<Batch>,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Env {
+    /// Pretrain (or load a cached checkpoint) and build calibration data.
+    pub fn prepare(
+        artifacts_dir: impl Into<PathBuf>,
+        size: &str,
+        pretrain_steps: usize,
+        seed: u64,
+    ) -> Result<Env> {
+        let runtime = Runtime::new(artifacts_dir)?;
+        let cfg = ModelConfig::by_name(size)?;
+        let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed);
+        let ckpt = PathBuf::from("checkpoints").join(format!(
+            "pretrained_{}_{pretrain_steps}_{seed}.ckpt",
+            cfg.name
+        ));
+        let params = if ckpt.exists() {
+            eprintln!("[env] loading cached checkpoint {}", ckpt.display());
+            checkpoint::load(&ckpt)?
+        } else {
+            eprintln!(
+                "[env] pretraining {} ({} params) for {pretrain_steps} steps ...",
+                cfg.name,
+                cfg.n_params()
+            );
+            let mut params = cfg.init_params(seed);
+            let trainer = Pretrainer::new(&runtime, cfg, pretrain_steps);
+            let report = trainer.train(&mut params, &corpus, pretrain_steps, seed ^ 0x7EA1)?;
+            eprintln!(
+                "[env] pretraining done: loss {:.4} -> {:.4} in {:.1}s",
+                report.losses.first().copied().unwrap_or(f32::NAN),
+                report.tail_mean(10),
+                report.wall_secs
+            );
+            checkpoint::save(&params, &ckpt)?;
+            params
+        };
+        let batcher = Batcher::new(cfg.calib_batch, cfg.seq_len);
+        let mut crng = Rng::new(seed ^ 0xCA11B);
+        let calib = (0..DEFAULT_CALIB_BATCHES)
+            .map(|_| batcher.lm_batch(&corpus, &mut crng))
+            .collect();
+        Ok(Env { runtime, cfg, params, corpus, calib, seed, verbose: true })
+    }
+
+    /// Build a QuantizeCtx for this env.
+    pub fn ctx(&self, spec: QuantSpec, rank: usize) -> QuantizeCtx<'_> {
+        QuantizeCtx {
+            runtime: &self.runtime,
+            cfg: self.cfg,
+            params: &self.params,
+            spec,
+            rank,
+            scale: DEFAULT_SCALE,
+            calib: &self.calib,
+            seed: self.seed,
+            verbose: self.verbose,
+        }
+    }
+
+    /// Run a named quantizer at (bits, group, rank).
+    pub fn quantize(&self, method: &str, bits: u32, group: usize, rank: usize) -> Result<QuantResult> {
+        let q = by_name(method)?;
+        q.run(&self.ctx(QuantSpec::new(bits, group), rank))
+    }
+
+    /// Run an ApiQ variant with explicit hyper-parameters.
+    pub fn quantize_apiq(
+        &self,
+        apiq: ApiQ,
+        bits: u32,
+        group: usize,
+        rank: usize,
+        hyper: ApiQHyper,
+    ) -> Result<QuantResult> {
+        let q = apiq.with_hyper(hyper);
+        q.run(&self.ctx(QuantSpec::new(bits, group), rank))
+    }
+
+    /// Held-out LM eval batches (disjoint RNG stream from training).
+    pub fn eval_batches(&self, n: usize) -> Vec<Batch> {
+        let batcher = Batcher::new(self.cfg.batch, self.cfg.seq_len);
+        let mut rng = Rng::new(self.seed ^ 0xE7A1);
+        (0..n).map(|_| batcher.lm_batch(&self.corpus, &mut rng)).collect()
+    }
+
+    /// Held-out task eval batches.
+    pub fn task_batches(&self, task: &dyn Task, n: usize) -> Vec<Batch> {
+        let batcher = Batcher::new(self.cfg.batch, self.cfg.seq_len);
+        let mut rng = Rng::new(self.seed ^ 0x7A5C);
+        (0..n).map(|_| batcher.task_batch(task, &mut rng)).collect()
+    }
+
+    fn mode_for(&self, r: &QuantResult, rank: usize, group: usize, dora: bool) -> ModelMode {
+        ModelMode::Quant {
+            rank,
+            group,
+            bits: r.eval_bits,
+            scale: DEFAULT_SCALE,
+            dora,
+        }
+    }
+
+    /// Perplexity of a quantized model on held-out corpus batches.
+    pub fn ppl(&self, r: &QuantResult, rank: usize, group: usize, n_batches: usize) -> Result<f64> {
+        let ev = Evaluator::new(&self.runtime, self.cfg);
+        let batches = self.eval_batches(n_batches);
+        let dora = r.method.contains("dora");
+        ev.perplexity(&self.mode_for(r, rank, group, dora), &r.params, Some(&r.qparams), &batches)
+    }
+
+    /// Full-precision reference perplexity.
+    pub fn ppl_fp(&self, n_batches: usize) -> Result<f64> {
+        let ev = Evaluator::new(&self.runtime, self.cfg);
+        let batches = self.eval_batches(n_batches);
+        ev.perplexity(&ModelMode::Fp, &self.params, None, &batches)
+    }
+
+    /// Task accuracy (generative exact-match or MC depending on samples).
+    pub fn task_accuracy(
+        &self,
+        r: &QuantResult,
+        rank: usize,
+        group: usize,
+        task: &dyn Task,
+        n_batches: usize,
+        mc: bool,
+    ) -> Result<f64> {
+        let ev = Evaluator::new(&self.runtime, self.cfg);
+        let dora = r.method.contains("dora");
+        let mode = self.mode_for(r, rank, group, dora);
+        let batches = self.task_batches(task, n_batches);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in &batches {
+            let logits = ev.logits(&mode, &r.params, Some(&r.qparams), b)?;
+            let (c, t) = if mc {
+                mc_accuracy_from_logits(&logits, b, self.cfg.vocab)
+            } else {
+                accuracy_from_logits(&logits, b, self.cfg.vocab)
+            };
+            correct += c;
+            total += t;
+        }
+        Ok(if total == 0 { f64::NAN } else { correct as f64 / total as f64 })
+    }
+
+    /// Finetune a quantizer result's adapters on `data`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn finetune(
+        &self,
+        r: &mut QuantResult,
+        rank: usize,
+        group: usize,
+        data: &FinetuneData,
+        steps: usize,
+        lr: f32,
+        position: LoraPosition,
+    ) -> Result<TrainReport> {
+        let mut ft = Finetuner::new(&self.runtime, self.cfg, rank, group, steps);
+        ft.schedule = crate::train::LrSchedule::linear_warmup(lr, steps, steps / 10 + 1);
+        ft.position = position;
+        ft.dora = r.method.contains("dora");
+        ft.log_every = if self.verbose { 25 } else { 0 };
+        ft.train(
+            &r.params,
+            &mut r.qparams,
+            r.eval_bits,
+            DEFAULT_SCALE,
+            data,
+            steps,
+            self.seed ^ 0xF17E,
+        )
+    }
+}

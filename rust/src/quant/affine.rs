@@ -1,0 +1,270 @@
+//! Host-side uniform affine quantization — bit-compatible with the L1
+//! Pallas kernel / jnp reference (`python/compile/kernels/ref.py`).
+//!
+//! Semantics (paper Eq. 1/3 with §4.3 learnable clipping):
+//!
+//!   per group g (= `group` consecutive input rows of one output column):
+//!     hi = sigmoid(gamma) * max(W_g)     lo = sigmoid(beta) * min(W_g)
+//!     s  = max((hi - lo) / (2^b - 1), 1e-8)
+//!     z  = clamp(round(-lo / s), 0, 2^b - 1)
+//!     q  = clamp(round(w / s) + z, 0, 2^b - 1)        (stored integer)
+//!     Q  = s * (q - z)                                 (dequantized)
+//!
+//! The Rust copy exists because the coordinator must (a) run the RTN /
+//! GPTQ / AWQ / LoftQ baselines entirely host-side, and (b) produce the
+//! final *packed* integer codes from the calibrated (gamma, beta).  An
+//! integration test cross-checks it against the `fakequant_*` HLO
+//! artifacts to ~1e-6.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Static description of a quantization configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    /// Bit-width b (2, 3, 4 in the paper; 16 = effectively identity).
+    pub bits: u32,
+    /// Group size along the input dimension (64 or 128 in the paper).
+    pub group: usize,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u32, group: usize) -> Self {
+        QuantSpec { bits, group }
+    }
+
+    /// Number of representable levels minus one (2^b - 1).
+    pub fn max_level(&self) -> f32 {
+        (2u64.pow(self.bits) - 1) as f32
+    }
+
+    /// Groups per column for a (d_in, d_out) weight.
+    pub fn groups(&self, d_in: usize) -> Result<usize> {
+        if d_in % self.group != 0 {
+            return Err(Error::shape(format!(
+                "d_in {} not divisible by group {}",
+                d_in, self.group
+            )));
+        }
+        Ok(d_in / self.group)
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Round-half-to-even, matching XLA/jnp `round` semantics.
+#[inline]
+fn round_ties_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Per-group scale/zero-point for `w` (d_in x d_out) under (gamma, beta)
+/// clipping logits of shape (d_in/group, d_out).
+/// Returns (scales, zeros), both (d_in/group, d_out).
+pub fn scales_zeros(
+    w: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    spec: QuantSpec,
+) -> Result<(Tensor, Tensor)> {
+    let (d_in, d_out) = (w.rows(), w.cols());
+    let n_groups = spec.groups(d_in)?;
+    if gamma.shape() != [n_groups, d_out] || beta.shape() != [n_groups, d_out] {
+        return Err(Error::shape(format!(
+            "gamma/beta shape {:?}/{:?}, want [{}, {}]",
+            gamma.shape(),
+            beta.shape(),
+            n_groups,
+            d_out
+        )));
+    }
+    let m = spec.max_level();
+    let mut s = Tensor::zeros(&[n_groups, d_out]);
+    let mut z = Tensor::zeros(&[n_groups, d_out]);
+    for gi in 0..n_groups {
+        for c in 0..d_out {
+            let mut wmin = f32::INFINITY;
+            let mut wmax = f32::NEG_INFINITY;
+            for r in 0..spec.group {
+                let v = w.at2(gi * spec.group + r, c);
+                wmin = wmin.min(v);
+                wmax = wmax.max(v);
+            }
+            let hi = sigmoid(gamma.at2(gi, c)) * wmax;
+            let lo = sigmoid(beta.at2(gi, c)) * wmin;
+            let sc = ((hi - lo) / m).max(1e-8);
+            let zp = round_ties_even(-lo / sc).clamp(0.0, m);
+            s.set2(gi, c, sc);
+            z.set2(gi, c, zp);
+        }
+    }
+    Ok((s, z))
+}
+
+/// Integer codes q in [0, 2^b - 1] for `w`. Returns (codes, scales, zeros);
+/// codes as u32 (any bit-width up to 16), row-major (d_in, d_out).
+pub fn quantize_ints(
+    w: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    spec: QuantSpec,
+) -> Result<(Vec<u32>, Tensor, Tensor)> {
+    let (s, z) = scales_zeros(w, gamma, beta, spec)?;
+    let (d_in, d_out) = (w.rows(), w.cols());
+    let m = spec.max_level();
+    let mut codes = vec![0u32; d_in * d_out];
+    for r in 0..d_in {
+        let gi = r / spec.group;
+        for c in 0..d_out {
+            let q = (round_ties_even(w.at2(r, c) / s.at2(gi, c)) + z.at2(gi, c))
+                .clamp(0.0, m);
+            codes[r * d_out + c] = q as u32;
+        }
+    }
+    Ok((codes, s, z))
+}
+
+/// Dequantize integer codes back to f32: Q = s * (q - z).
+pub fn dequantize(
+    codes: &[u32],
+    scales: &Tensor,
+    zeros: &Tensor,
+    d_in: usize,
+    d_out: usize,
+    group: usize,
+) -> Result<Tensor> {
+    if codes.len() != d_in * d_out {
+        return Err(Error::shape("dequantize: code count mismatch"));
+    }
+    let mut out = Tensor::zeros(&[d_in, d_out]);
+    for r in 0..d_in {
+        let gi = r / group;
+        for c in 0..d_out {
+            let q = codes[r * d_out + c] as f32;
+            out.set2(r, c, scales.at2(gi, c) * (q - zeros.at2(gi, c)));
+        }
+    }
+    Ok(out)
+}
+
+/// Quantize-dequantize in one call (the fake-quant used everywhere).
+pub fn fakequant(w: &Tensor, gamma: &Tensor, beta: &Tensor, spec: QuantSpec) -> Result<Tensor> {
+    let (codes, s, z) = quantize_ints(w, gamma, beta, spec)?;
+    dequantize(&codes, &s, &z, w.rows(), w.cols(), spec.group)
+}
+
+/// RTN default clipping: gamma = beta = +inf effectively (sigmoid -> 1).
+/// The paper's init gamma = beta = 4 (sigma(4) ~ 0.982) is used by the
+/// learned quantizers; RTN proper uses the full range.
+pub fn open_clip(d_in: usize, d_out: usize, group: usize) -> (Tensor, Tensor) {
+    let g = d_in / group;
+    (Tensor::full(&[g, d_out], 30.0), Tensor::full(&[g, d_out], 30.0))
+}
+
+/// The paper's learnable-clip initialization (gamma = beta = 4).
+pub fn paper_init_clip(d_in: usize, d_out: usize, group: usize) -> (Tensor, Tensor) {
+    let g = d_in / group;
+    (Tensor::full(&[g, d_out], 4.0), Tensor::full(&[g, d_out], 4.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn spec2() -> QuantSpec {
+        QuantSpec::new(2, 64)
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[128, 16], 0.1, &mut rng);
+        let (g, b) = paper_init_clip(128, 16, 64);
+        let (codes, _, _) = quantize_ints(&w, &g, &b, spec2()).unwrap();
+        assert!(codes.iter().all(|&c| c <= 3));
+    }
+
+    #[test]
+    fn roundtrip_is_idempotent() {
+        // fakequant(fakequant(w)) == fakequant(w): already-quantized values
+        // land exactly on levels.
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[64, 8], 0.2, &mut rng);
+        let (g, b) = open_clip(64, 8, 64);
+        let q1 = fakequant(&w, &g, &b, spec2()).unwrap();
+        let q2 = fakequant(&q1, &g, &b, spec2()).unwrap();
+        let err = q1.sub(&q2).unwrap().fro_norm();
+        assert!(err < 1e-5, "err {err}");
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[256, 32], 0.3, &mut rng);
+        let (g, b) = open_clip(256, 32, 64);
+        let mut last = f32::INFINITY;
+        for bits in [2u32, 3, 4, 8] {
+            let q = fakequant(&w, &g, &b, QuantSpec::new(bits, 64)).unwrap();
+            let e = q.sub(&w).unwrap().fro_norm();
+            assert!(e < last, "bits {bits}: {e} !< {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn tighter_clip_changes_levels() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[64, 4], 1.0, &mut rng);
+        let (g_open, b_open) = open_clip(64, 4, 64);
+        let g_tight = Tensor::full(&[1, 4], -1.0);
+        let b_tight = Tensor::full(&[1, 4], -1.0);
+        let q_open = fakequant(&w, &g_open, &b_open, spec2()).unwrap();
+        let q_tight = fakequant(&w, &g_tight, &b_tight, spec2()).unwrap();
+        assert!(q_open.sub(&q_tight).unwrap().fro_norm() > 1e-3);
+        // tight clip shrinks the dynamic range of the dequantized values
+        assert!(q_tight.abs_max() < q_open.abs_max());
+    }
+
+    #[test]
+    fn groupwise_independence() {
+        // Scaling one group's weights must not change another group's codes.
+        let mut rng = Rng::new(5);
+        let mut w = Tensor::randn(&[128, 4], 0.1, &mut rng);
+        let (g, b) = open_clip(128, 4, 64);
+        let (codes1, _, _) = quantize_ints(&w, &g, &b, spec2()).unwrap();
+        for r in 64..128 {
+            for c in 0..4 {
+                let v = w.at2(r, c) * 10.0;
+                w.set2(r, c, v);
+            }
+        }
+        let (codes2, _, _) = quantize_ints(&w, &g, &b, spec2()).unwrap();
+        // group 0 codes unchanged
+        assert_eq!(&codes1[..64 * 4], &codes2[..64 * 4]);
+    }
+
+    #[test]
+    fn bits16_near_identity() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(&[64, 8], 0.2, &mut rng);
+        let (g, b) = open_clip(64, 8, 64);
+        let q = fakequant(&w, &g, &b, QuantSpec::new(16, 64)).unwrap();
+        let rel = q.sub(&w).unwrap().fro_norm() / w.fro_norm();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+}

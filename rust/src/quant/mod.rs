@@ -1,0 +1,11 @@
+//! Quantization substrate: the paper's uniform affine quantizer (Eq. 1/3)
+//! with learnable clipping, sub-byte bit-packing for storage, and the
+//! NF-codebook variant used by the QLoRA baseline.
+
+pub mod affine;
+pub mod nf;
+pub mod pack;
+
+pub use affine::{dequantize, fakequant, quantize_ints, QuantSpec};
+pub use nf::nf_fakequant;
+pub use pack::{pack_codes, unpack_codes, PackedLinear};

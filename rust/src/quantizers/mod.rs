@@ -1,0 +1,132 @@
+//! The quantizer registry: the paper's method (ApiQ-lw / ApiQ-bw) plus
+//! every baseline it compares against (Tables 2, 3, 5–8):
+//!
+//! | paper name  | module    | mechanism                                        |
+//! |-------------|-----------|--------------------------------------------------|
+//! | RTN         | `rtn`     | round-to-nearest uniform affine, open clip       |
+//! | QLoRA       | `rtn`     | NF-codebook round-to-nearest (Dettmers 2023)     |
+//! | GPTQ(-LoRA) | `gptq`    | Hessian-aware OBQ column updates (Frantar 2022)  |
+//! | AWQ         | `awq`     | activation-aware per-channel scale (Lin 2023)    |
+//! | LoftQ       | `loftq`   | alternating NF-quant / SVD low-rank fit (Li 2023)|
+//! | OmniQuant   | `apiq`    | ApiQ-lw with the LoRA LR pinned to 0 (Shao 2023) |
+//! | ApiQ-lw     | `apiq`    | Algorithm 1, layer-wise                          |
+//! | ApiQ-bw     | `apiq`    | Algorithm 1, block-wise (§4.2)                   |
+//!
+//! Every quantizer returns a `QuantResult` that plugs into the same eval
+//! and finetune paths: baselines that produce an explicit dequantized Q
+//! override the weight store and set `eval_bits = 16` (the in-graph
+//! fake-quant becomes an identity); learned-clipping methods keep the
+//! original weights and quantize in-graph at native bits.
+
+pub mod apiq;
+pub mod awq;
+pub mod gptq;
+pub mod loftq;
+pub mod rtn;
+
+pub use apiq::{ApiQ, ApiQHyper, ApiQMode};
+pub use awq::AwqLite;
+pub use gptq::Gptq;
+pub use loftq::LoftQ;
+pub use rtn::{QLoraNf, Rtn};
+
+use std::time::Instant;
+
+use crate::calib::CalibStreams;
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::QuantSpec;
+use crate::runtime::Runtime;
+
+/// Shared context handed to every quantizer.
+pub struct QuantizeCtx<'a> {
+    pub runtime: &'a Runtime,
+    pub cfg: ModelConfig,
+    /// Full-precision pretrained parameters.
+    pub params: &'a ParamStore,
+    pub spec: QuantSpec,
+    pub rank: usize,
+    /// LoRA scale (alpha/r), runtime scalar for the fused kernel.
+    pub scale: f32,
+    /// Calibration token batches (the "128 sentences" of the paper).
+    pub calib: &'a [Batch],
+    pub seed: u64,
+    /// Print per-block progress.
+    pub verbose: bool,
+}
+
+/// What a quantizer hands back to the pipeline.
+pub struct QuantResult {
+    pub method: String,
+    /// Possibly weight-overridden parameter store (baselines producing an
+    /// explicit dequantized Q). Otherwise a clone of the input params.
+    pub params: ParamStore,
+    /// gamma/beta/lora_a/lora_b (+ mag) for every linear.
+    pub qparams: ParamStore,
+    /// bits scalar for the eval/finetune artifacts: native bits for
+    /// in-graph quantizers, 16.0 when `params` already holds Q.
+    pub eval_bits: f32,
+    /// Wall-clock of the quantization step (Table 4, duration column).
+    pub wall_secs: f64,
+}
+
+/// A quantization method.
+pub trait Quantizer {
+    fn name(&self) -> String;
+    fn quantize(&self, ctx: &QuantizeCtx) -> Result<QuantResult>;
+
+    /// Timed wrapper filling `wall_secs`.
+    fn run(&self, ctx: &QuantizeCtx) -> Result<QuantResult> {
+        let t0 = Instant::now();
+        let mut r = self.quantize(ctx)?;
+        r.wall_secs = t0.elapsed().as_secs_f64();
+        if ctx.verbose {
+            eprintln!("[quant] {} done in {:.1}s", r.method, r.wall_secs);
+        }
+        Ok(r)
+    }
+}
+
+/// Construct a quantizer by its CLI name.
+pub fn by_name(name: &str) -> Result<Box<dyn Quantizer>> {
+    Ok(match name {
+        "rtn" => Box::new(Rtn),
+        "qlora" => Box::new(QLoraNf),
+        "gptq" => Box::new(Gptq::default()),
+        "awq" => Box::new(AwqLite::default()),
+        "loftq" => Box::new(LoftQ::default()),
+        "omniquant" => Box::new(ApiQ::omniquant()),
+        "apiq-lw" => Box::new(ApiQ::lw()),
+        "apiq-bw" => Box::new(ApiQ::bw()),
+        "apiq-bw-dora" => Box::new(ApiQ::bw_dora()),
+        _ => return Err(Error::config(format!("unknown quantizer '{name}'"))),
+    })
+}
+
+/// All method names in the paper's comparison order.
+pub const ALL_METHODS: [&str; 8] = [
+    "rtn", "qlora", "gptq", "awq", "loftq", "omniquant", "apiq-lw", "apiq-bw",
+];
+
+/// Helper shared by baselines: qparams with open clipping, Kaiming A,
+/// zero B (the "QLoRA default init" the paper criticizes in §3.1).
+pub fn default_adapter_qparams(ctx: &QuantizeCtx, open_clip: bool) -> ParamStore {
+    let mut qp = ctx.cfg.init_qparams(ctx.spec, ctx.rank, false, ctx.seed ^ 0xADA7);
+    if open_clip {
+        for key in qp.keys().cloned().collect::<Vec<_>>() {
+            if key.ends_with(".gamma") || key.ends_with(".beta") {
+                let t = qp.get_mut(&key).unwrap();
+                for v in t.data_mut() {
+                    *v = 30.0; // sigmoid(30) == 1.0 in f32
+                }
+            }
+        }
+    }
+    qp
+}
+
+/// Helper: fresh calib streams for methods that need activations.
+pub fn init_streams(ctx: &QuantizeCtx) -> Result<CalibStreams> {
+    CalibStreams::init(ctx.runtime, ctx.cfg, ctx.params, ctx.calib)
+}

@@ -1,0 +1,166 @@
+//! Artifact manifest parsing.
+//!
+//! Line format (emitted by `python/compile/aot.py`):
+//!
+//!   arg params/blocks.0.wq f32 2 256 256
+//!   arg t f32 0
+//!   ret loss f32 0
+//!
+//! Order of `arg` lines == PJRT parameter order; order of `ret` lines ==
+//! output tuple order.  Both orders are the jax pytree flattening
+//! (sorted dict keys), which the Rust side never needs to re-derive —
+//! it just binds by key.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Element type of an artifact buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => Err(Error::manifest(format!("unknown dtype '{s}'"))),
+        }
+    }
+}
+
+/// One argument or return buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferSpec {
+    pub key: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl BufferSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest of one artifact.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub args: Vec<BufferSpec>,
+    pub rets: Vec<BufferSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn parse(name: &str, text: &str) -> Result<Self> {
+        let mut spec = ArtifactSpec { name: name.to_string(), ..Default::default() };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kind = it.next().unwrap();
+            let key = it
+                .next()
+                .ok_or_else(|| Error::manifest(format!("{name}:{lineno}: missing key")))?
+                .to_string();
+            let dtype = DType::parse(
+                it.next()
+                    .ok_or_else(|| Error::manifest(format!("{name}:{lineno}: missing dtype")))?,
+            )?;
+            let ndim: usize = it
+                .next()
+                .ok_or_else(|| Error::manifest(format!("{name}:{lineno}: missing ndim")))?
+                .parse()
+                .map_err(|e| Error::manifest(format!("{name}:{lineno}: bad ndim: {e}")))?;
+            let shape: Vec<usize> = it
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|e| Error::manifest(format!("{name}:{lineno}: bad dim: {e}")))
+                })
+                .collect::<Result<_>>()?;
+            if shape.len() != ndim {
+                return Err(Error::manifest(format!(
+                    "{name}:{lineno}: ndim {ndim} but {} dims",
+                    shape.len()
+                )));
+            }
+            let buf = BufferSpec { key, dtype, shape };
+            match kind {
+                "arg" => spec.args.push(buf),
+                "ret" => spec.rets.push(buf),
+                _ => return Err(Error::manifest(format!("{name}:{lineno}: bad kind '{kind}'"))),
+            }
+        }
+        if spec.args.is_empty() {
+            return Err(Error::manifest(format!("{name}: no args parsed")));
+        }
+        Ok(spec)
+    }
+
+    pub fn parse_file(name: &str, path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("{}: {e}", path.display())))?;
+        Self::parse(name, &text)
+    }
+
+    /// Total input bytes per execution (for the perf model).
+    pub fn input_bytes(&self) -> usize {
+        self.args.iter().map(|a| a.n_elements() * 4).sum()
+    }
+
+    pub fn output_bytes(&self) -> usize {
+        self.rets.iter().map(|a| a.n_elements() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+arg params/blocks.0.wq f32 2 256 256
+arg t f32 0
+arg tokens i32 2 8 128
+ret loss f32 0
+ret logits f32 3 8 128 512
+";
+
+    #[test]
+    fn parses_sample() {
+        let s = ArtifactSpec::parse("x", SAMPLE).unwrap();
+        assert_eq!(s.args.len(), 3);
+        assert_eq!(s.rets.len(), 2);
+        assert_eq!(s.args[0].key, "params/blocks.0.wq");
+        assert_eq!(s.args[0].shape, vec![256, 256]);
+        assert_eq!(s.args[1].shape, Vec::<usize>::new());
+        assert_eq!(s.args[2].dtype, DType::I32);
+        assert_eq!(s.rets[1].n_elements(), 8 * 128 * 512);
+    }
+
+    #[test]
+    fn rejects_bad_ndim() {
+        assert!(ArtifactSpec::parse("x", "arg a f32 2 5\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        assert!(ArtifactSpec::parse("x", "zzz a f32 0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(ArtifactSpec::parse("x", "").is_err());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let s = ArtifactSpec::parse("x", SAMPLE).unwrap();
+        assert_eq!(s.input_bytes(), (256 * 256 + 1 + 8 * 128) * 4);
+        assert_eq!(s.output_bytes(), (1 + 8 * 128 * 512) * 4);
+    }
+}

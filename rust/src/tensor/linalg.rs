@@ -1,0 +1,229 @@
+//! Dense linear algebra needed by the baseline quantizers.
+//!
+//! * `cholesky_in_place` — for GPTQ's Hessian-inverse factorization
+//!   (Frantar et al., 2022 run their column updates off a Cholesky of
+//!   H^-1; we factor (H + λI) and solve).
+//! * `svd_topk` — truncated SVD via subspace (block power) iteration, for
+//!   LoftQ's per-iteration low-rank fit of the residual W - Q
+//!   (Li et al., 2023, Eq. 2).
+
+use crate::error::{Error, Result};
+use crate::tensor::{Rng, Tensor};
+
+/// In-place lower Cholesky factorization: A = L L^T (A must be SPD, row
+/// major n x n). Returns Err on a non-positive pivot.
+pub fn cholesky_in_place(a: &mut [f32], n: usize) -> Result<()> {
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 {
+            return Err(Error::numeric(format!(
+                "cholesky: non-positive pivot {d} at {j}"
+            )));
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / d;
+        }
+        // zero the strictly-upper part for cleanliness
+        for k in (j + 1)..n {
+            a[j * n + k] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve L y = b then L^T x = y given the lower factor from
+/// `cholesky_in_place` (i.e. solves (L L^T) x = b).
+pub fn cholesky_solve(l: &[f32], n: usize, b: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Truncated SVD of `a` (m x n): returns (U_k: m x k, S_k: k, V_k: n x k)
+/// with a ~= U_k diag(S_k) V_k^T, via subspace iteration on A^T A with
+/// QR re-orthonormalization.  `iters` ~ 30 is plenty for LoftQ's use
+/// (the residual spectrum decays fast).
+pub fn svd_topk(a: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> Result<(Tensor, Vec<f32>, Tensor)> {
+    if a.rank() != 2 {
+        return Err(Error::shape("svd_topk wants rank 2"));
+    }
+    let (m, n) = (a.rows(), a.cols());
+    let k = k.min(m.min(n));
+    // V: n x k orthonormal
+    let mut v = Tensor::randn(&[n, k], 1.0, rng);
+    orthonormalize_cols(&mut v);
+    let at = a.transpose()?;
+    for _ in 0..iters {
+        // V <- orth(A^T (A V))
+        let av = a.matmul(&v)?;          // m x k
+        let mut atav = at.matmul(&av)?;  // n x k
+        orthonormalize_cols(&mut atav);
+        v = atav;
+    }
+    // U S = A V ; sigma_i = ||A v_i||, u_i = A v_i / sigma_i
+    let av = a.matmul(&v)?; // m x k
+    let mut sig = vec![0.0f32; k];
+    let mut u = Tensor::zeros(&[m, k]);
+    for j in 0..k {
+        let mut s = 0.0f32;
+        for i in 0..m {
+            let x = av.at2(i, j);
+            s += x * x;
+        }
+        let s = s.sqrt();
+        sig[j] = s;
+        if s > 1e-20 {
+            for i in 0..m {
+                u.set2(i, j, av.at2(i, j) / s);
+            }
+        }
+    }
+    // Order by decreasing singular value.
+    let mut idx: Vec<usize> = (0..k).collect();
+    idx.sort_by(|&i, &j| sig[j].partial_cmp(&sig[i]).unwrap());
+    let mut u2 = Tensor::zeros(&[m, k]);
+    let mut v2 = Tensor::zeros(&[n, k]);
+    let mut s2 = vec![0.0f32; k];
+    for (jj, &j) in idx.iter().enumerate() {
+        s2[jj] = sig[j];
+        for i in 0..m {
+            u2.set2(i, jj, u.at2(i, j));
+        }
+        for i in 0..n {
+            v2.set2(i, jj, v.at2(i, j));
+        }
+    }
+    Ok((u2, s2, v2))
+}
+
+/// Modified Gram-Schmidt on the columns of `v` (in place).
+fn orthonormalize_cols(v: &mut Tensor) {
+    let (n, k) = (v.rows(), v.cols());
+    for j in 0..k {
+        for p in 0..j {
+            let mut dot = 0.0f32;
+            for i in 0..n {
+                dot += v.at2(i, j) * v.at2(i, p);
+            }
+            for i in 0..n {
+                let x = v.at2(i, j) - dot * v.at2(i, p);
+                v.set2(i, j, x);
+            }
+        }
+        let mut nrm = 0.0f32;
+        for i in 0..n {
+            nrm += v.at2(i, j) * v.at2(i, j);
+        }
+        let nrm = nrm.sqrt().max(1e-20);
+        for i in 0..n {
+            let x = v.at2(i, j) / nrm;
+            v.set2(i, j, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        cholesky_in_place(&mut a, 2).unwrap();
+        assert_eq!(a, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn cholesky_known() {
+        // A = [[4, 2], [2, 3]] -> L = [[2, 0], [1, sqrt(2)]]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        cholesky_in_place(&mut a, 2).unwrap();
+        assert!((a[0] - 2.0).abs() < 1e-6);
+        assert!((a[2] - 1.0).abs() < 1e-6);
+        assert!((a[3] - 2.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_in_place(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn cholesky_solve_roundtrip() {
+        let mut rng = Rng::new(4);
+        let n = 8;
+        let g = Tensor::randn(&[n, n], 1.0, &mut rng);
+        // SPD: A = G G^T + n I
+        let mut a = g.matmul(&g.transpose().unwrap()).unwrap();
+        for i in 0..n {
+            let v = a.at2(i, i) + n as f32;
+            a.set2(i, i, v);
+        }
+        let x_true: Vec<f32> = (0..n).map(|i| i as f32 - 3.0).collect();
+        let xt = Tensor::new(vec![n, 1], x_true.clone()).unwrap();
+        let b = a.matmul(&xt).unwrap();
+        let mut l = a.data().to_vec();
+        cholesky_in_place(&mut l, n).unwrap();
+        let x = cholesky_solve(&l, n, b.data());
+        for (xa, xb) in x.iter().zip(&x_true) {
+            assert!((xa - xb).abs() < 1e-2, "{xa} vs {xb}");
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_low_rank() {
+        let mut rng = Rng::new(9);
+        let (m, n, r) = (24, 16, 3);
+        let u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let v = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let a = u.matmul(&v).unwrap();
+        let (uu, ss, vv) = svd_topk(&a, r, 40, &mut rng).unwrap();
+        // reconstruct
+        let mut rec = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for l in 0..r {
+                    s += uu.at2(i, l) * ss[l] * vv.at2(j, l);
+                }
+                rec.set2(i, j, s);
+            }
+        }
+        let err = rec.sub(&a).unwrap().fro_norm() / a.fro_norm();
+        assert!(err < 1e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn svd_singular_values_sorted() {
+        let mut rng = Rng::new(10);
+        let a = Tensor::randn(&[20, 20], 1.0, &mut rng);
+        let (_, s, _) = svd_topk(&a, 5, 40, &mut rng).unwrap();
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+    }
+}

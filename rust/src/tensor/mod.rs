@@ -1,0 +1,348 @@
+//! Host-side dense tensor math.
+//!
+//! Everything the coordinator computes *outside* the HLO artifacts lives
+//! here: quantizer baselines (GPTQ Hessians, LoftQ SVD), metrics (weight /
+//! activation errors, histograms), parameter initialization, and the
+//! perplexity / accuracy evaluators that consume artifact logits.
+//!
+//! Deliberately f32-only and row-major; this is a coordinator substrate,
+//! not a training framework — the heavy math runs in XLA.
+
+pub mod linalg;
+pub mod rng;
+
+pub use linalg::{cholesky_in_place, svd_topk};
+pub use rng::Rng;
+
+use crate::error::{Error, Result};
+
+/// Row-major dense f32 tensor with dynamic rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create from shape + data; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// Gaussian init, N(0, std^2).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Kaiming-uniform init for a (fan_in, fan_out) matrix (LoRA-A style).
+    pub fn kaiming(shape: &[usize], rng: &mut Rng) -> Self {
+        let fan_in = shape[0] as f32;
+        let bound = (1.0_f32 / fan_in).sqrt() * 3.0_f32.sqrt();
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.uniform(-bound, bound)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+
+    /// Number of rows for a rank-2 tensor.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Number of cols for a rank-2 tensor.
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::shape(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Matrix product (self: m x k) @ (other: k x n) -> m x n.
+    ///
+    /// Blocked i-k-j loop: the innermost j-loop is auto-vectorizable and
+    /// walks both `out` and `other` contiguously.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.cols() != other.rows() {
+            return Err(Error::shape(format!(
+                "matmul {:?} @ {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let (m, k, n) = (self.rows(), self.cols(), other.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for l in 0..k {
+                let a = self.data[i * k + l];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[l * n..(l + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Transpose of a rank-2 tensor.
+    pub fn transpose(&self) -> Result<Tensor> {
+        if self.rank() != 2 {
+            return Err(Error::shape("transpose wants rank 2"));
+        }
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Elementwise subtraction.
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!(
+                "sub {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    /// Elementwise addition.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!(
+                "add {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    /// Scale by a constant.
+    pub fn scale(&self, c: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|v| v * c).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    /// Check every element is finite (NaN/Inf guard on artifact outputs).
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// Extract row i of a rank-2 tensor as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let n = self.cols();
+        &self.data[i * n..(i + 1) * n]
+    }
+}
+
+/// Int32 tensor for token buffers (artifact `i32` inputs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "int shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(IntTensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        IntTensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(a.matmul(&i).unwrap(), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let tt = a.transpose().unwrap().transpose().unwrap();
+        assert_eq!(a, tt);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let a = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(42);
+        let t = Tensor::randn(&[100, 100], 2.0, &mut rng);
+        assert!(t.mean().abs() < 0.05);
+        let var = t.data().iter().map(|v| v * v).sum::<f32>() / t.len() as f32;
+        assert!((var.sqrt() - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(t.clone().reshape(&[2, 8]).is_ok());
+        assert!(t.reshape(&[3, 5]).is_err());
+    }
+}

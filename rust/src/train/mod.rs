@@ -1,0 +1,242 @@
+//! Training drivers: full-precision pretraining (creates the "pretrained
+//! LLM" substrate) and QLoRA-style adapter finetuning on the frozen
+//! quantized base — both one-PJRT-execute-per-step through the AOT
+//! artifacts, with optimizer state threaded through the step signature.
+
+pub mod schedule;
+
+pub use schedule::{LrSchedule, ScheduleKind};
+
+use crate::data::{Batch, Batcher, Task, ZipfMarkovCorpus};
+use crate::error::Result;
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::{Bindings, Runtime};
+use crate::tensor::Rng;
+
+/// Where adapter LR multipliers go (Table 1 positions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoraPosition {
+    All,
+    FfnOnly,
+    AttnOnly,
+}
+
+impl LoraPosition {
+    pub fn muls(&self) -> (f32, f32) {
+        match self {
+            LoraPosition::All => (1.0, 1.0),
+            LoraPosition::FfnOnly => (0.0, 1.0),
+            LoraPosition::AttnOnly => (1.0, 0.0),
+        }
+    }
+
+    pub fn parse(s: &str) -> Self {
+        match s {
+            "ffn" => LoraPosition::FfnOnly,
+            "attn" => LoraPosition::AttnOnly,
+            _ => LoraPosition::All,
+        }
+    }
+}
+
+/// Shared training report (loss curve + wall time).
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub wall_secs: f64,
+    pub steps: usize,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the last k steps (smoother than the final step).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let n = self.losses.len();
+        let tail = &self.losses[n.saturating_sub(k)..];
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Full-precision pretraining on the synthetic corpus.
+pub struct Pretrainer<'r> {
+    pub runtime: &'r Runtime,
+    pub cfg: ModelConfig,
+    pub schedule: LrSchedule,
+    pub wd: f32,
+    pub log_every: usize,
+}
+
+impl<'r> Pretrainer<'r> {
+    pub fn new(runtime: &'r Runtime, cfg: ModelConfig, steps: usize) -> Self {
+        Pretrainer {
+            runtime,
+            cfg,
+            schedule: LrSchedule::cosine(3e-3, steps, steps / 20 + 1),
+            wd: 0.01,
+            log_every: 20,
+        }
+    }
+
+    /// Train `params` in place for `steps` steps; returns the loss curve.
+    pub fn train(
+        &self,
+        params: &mut ParamStore,
+        corpus: &ZipfMarkovCorpus,
+        steps: usize,
+        seed: u64,
+    ) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let name = format!("pretrain_step_{}", self.cfg.name);
+        let batcher = Batcher::new(self.cfg.batch, self.cfg.seq_len);
+        let mut rng = Rng::new(seed);
+        let mut m = params.zeros_like();
+        let mut v = params.zeros_like();
+        let mut report = TrainReport::default();
+        for step in 1..=steps {
+            let batch = batcher.lm_batch(corpus, &mut rng);
+            let lr = self.schedule.lr_at(step);
+            let bind = Bindings::new()
+                .group("params", params)
+                .group("m", &m)
+                .group("v", &v)
+                .int("tokens", &batch.tokens)
+                .tensor("mask", &batch.mask)
+                .scalar("t", step as f32)
+                .scalar("lr", lr)
+                .scalar("wd", self.wd);
+            let out = self.runtime.run(&name, &bind)?;
+            *params = out.group("params");
+            m = out.group("m");
+            v = out.group("v");
+            let loss = out.scalar("loss")?;
+            report.losses.push(loss);
+            if self.log_every > 0 && step % self.log_every == 0 {
+                eprintln!("[pretrain {}] step {step}/{steps} lr {lr:.2e} loss {loss:.4}", self.cfg.name);
+            }
+        }
+        report.steps = steps;
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+/// What the finetuner trains on.
+pub enum FinetuneData<'a> {
+    /// Language modeling on the corpus (Table 6 WikiText analogue).
+    Corpus(&'a ZipfMarkovCorpus),
+    /// A single task (Table 6 GSM8K analogue / Table 5 GLUE analogue).
+    Task(&'a dyn Task),
+    /// A uniform mixture of tasks (Tables 7/8 multi-task setting).
+    Mixture(Vec<&'a dyn Task>),
+}
+
+/// Adapter finetuning on the frozen quantized base.
+pub struct Finetuner<'r> {
+    pub runtime: &'r Runtime,
+    pub cfg: ModelConfig,
+    pub rank: usize,
+    pub group: usize,
+    pub dora: bool,
+    pub schedule: LrSchedule,
+    pub wd: f32,
+    pub position: LoraPosition,
+    pub log_every: usize,
+}
+
+impl<'r> Finetuner<'r> {
+    pub fn new(runtime: &'r Runtime, cfg: ModelConfig, rank: usize, group: usize, steps: usize) -> Self {
+        Finetuner {
+            runtime,
+            cfg,
+            rank,
+            group,
+            dora: false,
+            schedule: LrSchedule::linear_warmup(1e-3, steps, steps / 10 + 1),
+            wd: 0.0,
+            position: LoraPosition::All,
+            log_every: 20,
+        }
+    }
+
+    fn artifact(&self) -> String {
+        let suffix = if self.dora { "_dora" } else { "" };
+        format!(
+            "finetune_step_{}_r{}_g{}{}",
+            self.cfg.name, self.rank, self.group, suffix
+        )
+    }
+
+    fn next_batch(&self, data: &FinetuneData, batcher: &Batcher, rng: &mut Rng) -> Batch {
+        match data {
+            FinetuneData::Corpus(c) => batcher.lm_batch(c, rng),
+            FinetuneData::Task(t) => batcher.task_batch(*t, rng),
+            FinetuneData::Mixture(ts) => {
+                let i = rng.below(ts.len());
+                batcher.task_batch(ts[i], rng)
+            }
+        }
+    }
+
+    /// Finetune adapters in `qparams` (in place); base `params` frozen.
+    /// `bits` is the eval_bits of the quantizer result.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &self,
+        params: &ParamStore,
+        qparams: &mut ParamStore,
+        bits: f32,
+        scale: f32,
+        data: &FinetuneData,
+        steps: usize,
+        seed: u64,
+    ) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let name = self.artifact();
+        let batcher = Batcher::new(self.cfg.batch, self.cfg.seq_len);
+        let mut rng = Rng::new(seed);
+        let trainable = |k: &str| {
+            let leaf = k.rsplit('.').next().unwrap_or("");
+            matches!(leaf, "lora_a" | "lora_b") || (self.dora && leaf == "mag")
+        };
+        let mut m = qparams.filtered(trainable).zeros_like();
+        let mut v = m.clone();
+        let (mul_attn, mul_ffn) = self.position.muls();
+        let mut report = TrainReport::default();
+        for step in 1..=steps {
+            let batch = self.next_batch(data, &batcher, &mut rng);
+            let lr = self.schedule.lr_at(step);
+            let bind = Bindings::new()
+                .group("params", params)
+                .group("qparams", qparams)
+                .group("m", &m)
+                .group("v", &v)
+                .int("tokens", &batch.tokens)
+                .tensor("mask", &batch.mask)
+                .scalar("t", step as f32)
+                .scalar("lr", lr)
+                .scalar("wd", self.wd)
+                .scalar("bits", bits)
+                .scalar("scale", scale)
+                .scalar("lr_attn_mul", mul_attn)
+                .scalar("lr_ffn_mul", mul_ffn);
+            let out = self.runtime.run(&name, &bind)?;
+            *qparams = out.group("qparams");
+            m = out.group("m");
+            v = out.group("v");
+            let loss = out.scalar("loss")?;
+            report.losses.push(loss);
+            if self.log_every > 0 && step % self.log_every == 0 {
+                eprintln!("[finetune {}] step {step}/{steps} loss {loss:.4}", self.cfg.name);
+            }
+        }
+        report.steps = steps;
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}

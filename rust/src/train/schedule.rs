@@ -1,0 +1,88 @@
+//! Learning-rate schedules (cosine / linear with warmup — the paper's
+//! Table A.4 finetuning recipes).
+
+/// Schedule shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Constant,
+    Cosine,
+    Linear,
+}
+
+/// LR schedule with linear warmup then decay to ~0.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub kind: ScheduleKind,
+    pub peak: f32,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn constant(peak: f32) -> Self {
+        LrSchedule { kind: ScheduleKind::Constant, peak, total_steps: 1, warmup_steps: 0 }
+    }
+
+    pub fn cosine(peak: f32, total: usize, warmup: usize) -> Self {
+        LrSchedule { kind: ScheduleKind::Cosine, peak, total_steps: total.max(1), warmup_steps: warmup }
+    }
+
+    pub fn linear_warmup(peak: f32, total: usize, warmup: usize) -> Self {
+        LrSchedule { kind: ScheduleKind::Linear, peak, total_steps: total.max(1), warmup_steps: warmup }
+    }
+
+    /// LR at 1-based step.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.kind == ScheduleKind::Constant {
+            return self.peak;
+        }
+        if self.warmup_steps > 0 && step <= self.warmup_steps {
+            return self.peak * step as f32 / self.warmup_steps as f32;
+        }
+        let after = (step - self.warmup_steps) as f32;
+        let span = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+        let frac = (after / span).clamp(0.0, 1.0);
+        match self.kind {
+            ScheduleKind::Cosine => self.peak * 0.5 * (1.0 + (std::f32::consts::PI * frac).cos()),
+            ScheduleKind::Linear => self.peak * (1.0 - frac),
+            ScheduleKind::Constant => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::cosine(1.0, 100, 10);
+        assert!(s.lr_at(1) < s.lr_at(5));
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = LrSchedule::cosine(1.0, 100, 0);
+        assert!(s.lr_at(100) < 1e-3);
+        assert!(s.lr_at(50) > 0.3 && s.lr_at(50) < 0.7);
+    }
+
+    #[test]
+    fn linear_decays_monotonically() {
+        let s = LrSchedule::linear_warmup(1.0, 100, 10);
+        let mut last = f32::INFINITY;
+        for step in 10..=100 {
+            let lr = s.lr_at(step);
+            assert!(lr <= last + 1e-9);
+            last = lr;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.5);
+        assert_eq!(s.lr_at(1), 0.5);
+        assert_eq!(s.lr_at(1000), 0.5);
+    }
+}

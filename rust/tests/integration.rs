@@ -1,0 +1,260 @@
+//! Integration tests over the full stack: HLO artifacts + PJRT runtime +
+//! coordinator.  These need `make artifacts` to have produced the tiny
+//! artifacts; they self-skip (with a loud message) when missing so unit
+//! test runs stay green on a fresh checkout.
+
+use repro::calib::CalibStreams;
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::eval::{nll_from_logits, Evaluator, ModelMode};
+use repro::model::{ParamStore, TINY};
+use repro::quant::{fakequant, QuantSpec};
+use repro::runtime::{Bindings, Runtime};
+use repro::tensor::{Rng, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let rt = Runtime::new("artifacts").ok()?;
+    if !rt.has_artifact("logits_fp_tiny") {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(rt)
+}
+
+fn tiny_setup(rt: &Runtime) -> (ParamStore, ZipfMarkovCorpus) {
+    let params = TINY.init_params(11);
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 11);
+    let _ = rt;
+    (params, corpus)
+}
+
+#[test]
+fn fakequant_artifact_matches_host_quantizer() {
+    // THE cross-layer consistency check: the Rust affine quantizer must be
+    // bit-compatible with the L1 Pallas kernel lowered into the artifact.
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let w = Tensor::randn(&[256, 256], 0.1, &mut rng);
+    let spec = QuantSpec::new(2, 64);
+    let gamma = Tensor::full(&[4, 256], 4.0);
+    let beta = Tensor::full(&[4, 256], 4.0);
+    let host = fakequant(&w, &gamma, &beta, spec).unwrap();
+
+    let bind = Bindings::new()
+        .tensor("w", &w)
+        .tensor("gamma", &gamma)
+        .tensor("beta", &beta)
+        .scalar("bits", 2.0);
+    let out = rt.run("fakequant_256x256_g64", &bind).unwrap();
+    let dev = out.get("q").unwrap();
+    let diff = host.sub(dev).unwrap().fro_norm() / host.fro_norm().max(1e-9);
+    assert!(diff < 1e-5, "host vs artifact fakequant rel diff {diff}");
+}
+
+#[test]
+fn fakequant_artifact_matches_host_at_all_bits() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(4);
+    let w = Tensor::randn(&[256, 768], 0.2, &mut rng);
+    let gamma = Tensor::full(&[4, 768], 4.0);
+    let beta = Tensor::full(&[4, 768], 4.0);
+    for bits in [2u32, 3, 4] {
+        let spec = QuantSpec::new(bits, 64);
+        let host = fakequant(&w, &gamma, &beta, spec).unwrap();
+        let bind = Bindings::new()
+            .tensor("w", &w)
+            .tensor("gamma", &gamma)
+            .tensor("beta", &beta)
+            .scalar("bits", bits as f32);
+        let out = rt.run("fakequant_256x768_g64", &bind).unwrap();
+        let diff = host.sub(out.get("q").unwrap()).unwrap().fro_norm();
+        assert!(diff < 1e-3, "bits={bits}: diff {diff}");
+    }
+}
+
+#[test]
+fn logits_fp_finite_and_causal_shape() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (params, corpus) = tiny_setup(&rt);
+    let batch = Batcher::new(TINY.batch, TINY.seq_len).lm_batch(&corpus, &mut Rng::new(5));
+    let ev = Evaluator::new(&rt, TINY);
+    let logits = ev.logits(&ModelMode::Fp, &params, None, &batch).unwrap();
+    assert_eq!(logits.shape(), &[TINY.batch, TINY.seq_len, TINY.vocab]);
+    assert!(logits.all_finite());
+    let (nll, cnt) = nll_from_logits(&logits, &batch, TINY.vocab);
+    // untrained model ≈ uniform -> mean nll ≈ ln(V)
+    let mean = nll / cnt;
+    assert!((mean - (TINY.vocab as f64).ln()).abs() < 0.5, "mean nll {mean}");
+}
+
+#[test]
+fn quant_identity_path_matches_fp() {
+    // bits=16 + open clip + B=0 through logits_q must reproduce logits_fp.
+    let Some(rt) = runtime_or_skip() else { return };
+    let (params, corpus) = tiny_setup(&rt);
+    let mut qp = TINY.init_qparams(QuantSpec::new(16, 64), 16, false, 7);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with("gamma") || key.ends_with("beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        }
+    }
+    let batch = Batcher::new(TINY.batch, TINY.seq_len).lm_batch(&corpus, &mut Rng::new(6));
+    let ev = Evaluator::new(&rt, TINY);
+    let l_fp = ev.logits(&ModelMode::Fp, &params, None, &batch).unwrap();
+    let mode = ModelMode::Quant { rank: 16, group: 64, bits: 16.0, scale: 1.0, dora: false };
+    let l_q = ev.logits(&mode, &params, Some(&qp), &batch).unwrap();
+    let diff = l_fp.sub(&l_q).unwrap().abs_max();
+    assert!(diff < 0.05, "identity-quant logits differ by {diff}");
+}
+
+#[test]
+fn pretrain_step_decreases_loss_through_runtime() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (mut params, corpus) = tiny_setup(&rt);
+    let trainer = repro::train::Pretrainer::new(&rt, TINY, 12);
+    let report = trainer.train(&mut params, &corpus, 12, 9).unwrap();
+    assert_eq!(report.losses.len(), 12);
+    assert!(
+        report.losses[11] < report.losses[0],
+        "loss did not decrease: {:?}",
+        report.losses
+    );
+    params.check_finite().unwrap();
+}
+
+#[test]
+fn calib_streams_propagate_and_diverge() {
+    // With 2-bit quantization and default init, the q stream must diverge
+    // from the fp stream as it passes blocks (the §3.2 error accumulation).
+    let Some(rt) = runtime_or_skip() else { return };
+    let (params, corpus) = tiny_setup(&rt);
+    let batcher = Batcher::new(TINY.calib_batch, TINY.seq_len);
+    let batches = vec![batcher.lm_batch(&corpus, &mut Rng::new(10))];
+    let mut streams = CalibStreams::init(&rt, TINY, &params, &batches).unwrap();
+    let qp = TINY.init_qparams(QuantSpec::new(2, 64), 16, false, 8);
+    let mut divergences = Vec::new();
+    for b in 0..TINY.n_layers {
+        let bp = params.view(&format!("blocks.{b}."));
+        let bqp = qp.view(&format!("blocks.{b}."));
+        streams.advance_q(&rt, &bp, &bqp, 16, 64, 2.0, 1.0).unwrap();
+        streams.advance_fp(&rt, &bp).unwrap();
+        let d = streams.x_fp[0].sub(&streams.x_q[0]).unwrap().fro_norm();
+        divergences.push(d);
+    }
+    assert!(divergences[0] > 0.0);
+    // error accumulates through depth (documented §3.2 behaviour)
+    assert!(
+        divergences[TINY.n_layers - 1] > divergences[0],
+        "{divergences:?}"
+    );
+}
+
+#[test]
+fn apiq_bw_reduces_activation_error_vs_rtn_init() {
+    // Small-budget ApiQ-bw on one env: the calibrated q-stream must track
+    // the fp stream better than the uncalibrated one (the paper's core
+    // mechanism at integration scale).
+    let Some(rt) = runtime_or_skip() else { return };
+    let (params, corpus) = tiny_setup(&rt);
+    let batcher = Batcher::new(TINY.calib_batch, TINY.seq_len);
+    let batches: Vec<_> = (0..2).map(|i| batcher.lm_batch(&corpus, &mut Rng::new(20 + i))).collect();
+
+    let divergence = |qp: &ParamStore| {
+        let mut streams = CalibStreams::init(&rt, TINY, &params, &batches).unwrap();
+        for b in 0..TINY.n_layers {
+            let bp = params.view(&format!("blocks.{b}."));
+            let bqp = qp.view(&format!("blocks.{b}."));
+            streams.advance_q(&rt, &bp, &bqp, 16, 64, 2.0, 1.0).unwrap();
+            streams.advance_fp(&rt, &bp).unwrap();
+        }
+        streams.x_fp[0].sub(&streams.x_q[0]).unwrap().fro_norm()
+    };
+
+    let qp_init = TINY.init_qparams(QuantSpec::new(2, 64), 16, false, 8);
+    let err_before = divergence(&qp_init);
+
+    let ctx = repro::quantizers::QuantizeCtx {
+        runtime: &rt,
+        cfg: TINY,
+        params: &params,
+        spec: QuantSpec::new(2, 64),
+        rank: 16,
+        scale: 1.0,
+        calib: &batches,
+        seed: 8,
+        verbose: false,
+    };
+    use repro::quantizers::Quantizer;
+    let apiq = repro::quantizers::ApiQ::bw().with_hyper(repro::quantizers::ApiQHyper {
+        epochs: 4,
+        ..Default::default()
+    });
+    let result = apiq.quantize(&ctx).unwrap();
+    let err_after = divergence(&result.qparams);
+    assert!(
+        err_after < err_before,
+        "apiq-bw did not reduce stream divergence: {err_before} -> {err_after}"
+    );
+}
+
+#[test]
+fn finetune_step_reduces_task_loss_through_runtime() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (params, _) = tiny_setup(&rt);
+    let qp0 = TINY.init_qparams(QuantSpec::new(4, 64), 16, false, 9);
+    let task = repro::data::tasks::ArithTask::add(TINY.vocab, 4);
+    let ft = repro::train::Finetuner::new(&rt, TINY, 16, 64, 30);
+    let mut qp = qp0;
+    let report = ft
+        .train(
+            &params,
+            &mut qp,
+            4.0,
+            1.0,
+            &repro::train::FinetuneData::Task(&task),
+            30,
+            13,
+        )
+        .unwrap();
+    let first3: f32 = report.losses[..3].iter().sum::<f32>() / 3.0;
+    let last3 = report.tail_mean(3);
+    assert!(last3 < first3, "{first3} -> {last3}");
+}
+
+#[test]
+fn runtime_rejects_bad_bindings() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // missing binding
+    let bind = Bindings::new();
+    assert!(rt.run("fakequant_256x256_g64", &bind).is_err());
+    // wrong shape
+    let w = Tensor::zeros(&[128, 256]);
+    let gamma = Tensor::full(&[4, 256], 4.0);
+    let beta = Tensor::full(&[4, 256], 4.0);
+    let bind = Bindings::new()
+        .tensor("w", &w)
+        .tensor("gamma", &gamma)
+        .tensor("beta", &beta)
+        .scalar("bits", 2.0);
+    let err = rt.run("fakequant_256x256_g64", &bind);
+    assert!(err.is_err());
+    // unknown artifact
+    assert!(rt.run("nonexistent_artifact", &Bindings::new()).is_err());
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (params, corpus) = tiny_setup(&rt);
+    let dir = std::env::temp_dir().join("apiq_it_ckpt");
+    let path = dir.join("params.ckpt");
+    repro::model::checkpoint::save(&params, &path).unwrap();
+    let params2 = repro::model::checkpoint::load(&path).unwrap();
+    let batch = Batcher::new(TINY.batch, TINY.seq_len).lm_batch(&corpus, &mut Rng::new(30));
+    let ev = Evaluator::new(&rt, TINY);
+    let l1 = ev.logits(&ModelMode::Fp, &params, None, &batch).unwrap();
+    let l2 = ev.logits(&ModelMode::Fp, &params2, None, &batch).unwrap();
+    assert_eq!(l1, l2);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,268 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! The offline registry has no `proptest`, so this file carries a minimal
+//! in-tree property harness (`for_cases`): deterministic seeded random
+//! cases with failure reporting of the offending seed — the same workflow
+//! (shrinking aside) as a proptest run with a fixed RNG.
+
+use repro::data::tasks::{ArithTask, ClassifyTask, McTask, Task};
+use repro::data::{vocab, ZipfMarkovCorpus};
+use repro::quant::{fakequant, nf_fakequant, pack_codes, quantize_ints, unpack_codes, QuantSpec};
+use repro::quant::affine::{open_clip, paper_init_clip, scales_zeros};
+use repro::tensor::{svd_topk, Rng, Tensor};
+
+/// Run `f` over `n` seeded cases; panic with the seed on failure.
+fn for_cases(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xBEEF ^ (seed * 7919));
+        // run in place; assertion failures identify the case via the
+        // message below when running with --nocapture + RUST_BACKTRACE
+        eprintln!("[property] case seed {seed}");
+        f(&mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quant_codes_always_in_range() {
+    for_cases(20, |rng| {
+        let bits = [2u32, 3, 4][rng.below(3)];
+        let group = [32usize, 64][rng.below(2)];
+        let gpc = 1 + rng.below(3);
+        let d_in = group * gpc;
+        let d_out = 8 + rng.below(56);
+        let w = Tensor::randn(&[d_in, d_out], rng.uniform(0.01, 2.0), rng);
+        let (g, b) = paper_init_clip(d_in, d_out, group);
+        let spec = QuantSpec::new(bits, group);
+        let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
+        let max = (1u32 << bits) - 1;
+        assert!(codes.iter().all(|&c| c <= max));
+        // scales positive, zeros in range
+        assert!(s.data().iter().all(|&v| v > 0.0));
+        assert!(z.data().iter().all(|&v| (0.0..=max as f32).contains(&v)));
+    });
+}
+
+#[test]
+fn prop_fakequant_error_bounded_by_scale() {
+    // |w - Q(w)| <= s/2 for every unclipped weight (grid property).
+    for_cases(15, |rng| {
+        let d_in = 64;
+        let d_out = 16;
+        let w = Tensor::randn(&[d_in, d_out], 0.3, rng);
+        let (g, b) = open_clip(d_in, d_out, 64);
+        let spec = QuantSpec::new(3, 64);
+        let (s, _) = scales_zeros(&w, &g, &b, spec).unwrap();
+        let q = fakequant(&w, &g, &b, spec).unwrap();
+        for r in 0..d_in {
+            for c in 0..d_out {
+                let err = (w.at2(r, c) - q.at2(r, c)).abs();
+                // open clip: nothing is clipped, so grid bound holds
+                assert!(
+                    err <= s.at2(0, c) * 0.5 + 1e-5,
+                    "err {err} > s/2 {}",
+                    s.at2(0, c) * 0.5
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    for_cases(30, |rng| {
+        let bits = [2u32, 3, 4, 5, 8][rng.below(5)];
+        let n = 1 + rng.below(2000);
+        let mask = (1u32 << bits) - 1;
+        let codes: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32 & mask).collect();
+        let packed = pack_codes(&codes, bits);
+        assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
+        assert_eq!(unpack_codes(&packed, bits, n), codes);
+    });
+}
+
+#[test]
+fn prop_nf_fakequant_idempotent() {
+    for_cases(10, |rng| {
+        let w = Tensor::randn(&[128, 8], rng.uniform(0.05, 1.0), rng);
+        let q1 = nf_fakequant(&w, 3, 64).unwrap();
+        let q2 = nf_fakequant(&q1, 3, 64).unwrap();
+        let d = q1.sub(&q2).unwrap().fro_norm();
+        assert!(d < 1e-5, "nf not idempotent: {d}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Linalg invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_svd_reconstruction_never_worse_than_zero_rank() {
+    for_cases(10, |rng| {
+        let m = 16 + rng.below(32);
+        let n = 16 + rng.below(32);
+        let a = Tensor::randn(&[m, n], 1.0, rng);
+        let k = 1 + rng.below(6);
+        let (u, s, v) = svd_topk(&a, k, 25, rng).unwrap();
+        let mut rec = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for l in 0..k {
+                    acc += u.at2(i, l) * s[l] * v.at2(j, l);
+                }
+                rec.set2(i, j, acc);
+            }
+        }
+        let resid = a.sub(&rec).unwrap().fro_norm();
+        assert!(resid <= a.fro_norm() * 1.0001, "rank-{k} residual grew");
+        // singular values non-negative, sorted
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    });
+}
+
+#[test]
+fn prop_matmul_matches_naive() {
+    for_cases(10, |rng| {
+        let (m, k, n) = (1 + rng.below(20), 1 + rng.below(20), 1 + rng.below(20));
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let c = a.matmul(&b).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for l in 0..k {
+                    s += a.at2(i, l) * b.at2(l, j);
+                }
+                assert!((c.at2(i, j) - s).abs() < 1e-3);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data-substrate invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_corpus_tokens_in_vocab() {
+    for_cases(10, |rng| {
+        let vocab_size = 64 + rng.below(1984);
+        let corpus = ZipfMarkovCorpus::new(vocab_size, rng.next_u64());
+        let len = 16 + rng.below(240);
+        let seq = corpus.sequence(len, rng);
+        assert_eq!(seq.len(), len);
+        assert!(seq.iter().all(|&t| (0..vocab_size as i32).contains(&t)));
+    });
+}
+
+#[test]
+fn prop_task_samples_well_formed() {
+    for_cases(15, |rng| {
+        let tasks: Vec<Box<dyn Task>> = vec![
+            Box::new(ArithTask::add(512, rng.next_u64())),
+            Box::new(ArithTask::sub(512, rng.next_u64())),
+            Box::new(ArithTask::mul1(512, rng.next_u64())),
+            Box::new(ClassifyTask::new(512, 2 + rng.below(6), rng.next_u64())),
+            Box::new(McTask::pattern(512, rng.next_u64() % 8)),
+            Box::new(McTask::arith_mc(512, 3)),
+        ];
+        let seq_len = 64 + rng.below(64);
+        for t in &tasks {
+            let s = t.sample(seq_len, rng);
+            assert_eq!(s.tokens.len(), seq_len);
+            assert_eq!(s.mask.len(), seq_len);
+            assert_eq!(s.answer_pos.len(), s.answer.len());
+            // mask positions == answer positions, all within range, not 0
+            for (&p, &a) in s.answer_pos.iter().zip(&s.answer) {
+                assert!(p > 0 && p < seq_len);
+                assert_eq!(s.tokens[p], a);
+                assert!(s.mask[p] > 0.0);
+            }
+            let mask_on = s.mask.iter().filter(|&&m| m > 0.0).count();
+            assert_eq!(mask_on, s.answer_pos.len());
+            // answers never PAD/BOS
+            assert!(s.answer.iter().all(|&a| a != vocab::PAD && a != vocab::BOS));
+        }
+    });
+}
+
+#[test]
+fn prop_arith_answers_match_semantics() {
+    for_cases(20, |rng| {
+        let t = ArithTask::add(512, rng.next_u64());
+        let s = t.sample(128, rng);
+        // decode "a + b = c" from tokens and check the arithmetic
+        let toks = &s.tokens;
+        let plus = toks.iter().position(|&x| x == vocab::PLUS).unwrap();
+        let eq = toks.iter().position(|&x| x == vocab::EQ).unwrap();
+        let read_num = |range: &[i32]| -> u32 {
+            range
+                .iter()
+                .filter(|&&x| (vocab::DIGIT0..vocab::DIGIT0 + 10).contains(&x))
+                .fold(0u32, |acc, &d| acc * 10 + (d - vocab::DIGIT0) as u32)
+        };
+        // digits of a immediately precede PLUS; of b between PLUS and EQ
+        let a_start = (0..plus)
+            .rev()
+            .take_while(|&i| (vocab::DIGIT0..vocab::DIGIT0 + 10).contains(&toks[i]))
+            .last()
+            .unwrap();
+        let a = read_num(&toks[a_start..plus]);
+        let b = read_num(&toks[plus + 1..eq]);
+        let c = read_num(&s.answer);
+        assert_eq!(a + b, c, "bad sample: {a} + {b} != {c}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Store / checkpoint invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_stores() {
+    for_cases(10, |rng| {
+        let mut ps = repro::model::ParamStore::new();
+        let n = 1 + rng.below(20);
+        for i in 0..n {
+            let rank = 1 + rng.below(3);
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(12)).collect();
+            ps.insert(format!("k{i}.sub.{}", rng.below(100)), Tensor::randn(&shape, 1.0, rng));
+        }
+        let path = std::env::temp_dir().join(format!("apiq_prop_{}.ckpt", rng.next_u64()));
+        repro::model::checkpoint::save(&ps, &path).unwrap();
+        let back = repro::model::checkpoint::load(&path).unwrap();
+        assert_eq!(back.len(), ps.len());
+        for (k, v) in ps.iter() {
+            assert_eq!(back.get(k).unwrap(), v);
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_view_absorb_identity() {
+    for_cases(10, |rng| {
+        let mut ps = repro::model::ParamStore::new();
+        for b in 0..3 {
+            for lin in ["wq", "wo"] {
+                ps.insert(format!("blocks.{b}.{lin}"), Tensor::randn(&[4, 4], 1.0, rng));
+            }
+        }
+        let orig = ps.clone();
+        for b in 0..3 {
+            let prefix = format!("blocks.{b}.");
+            let v = ps.view(&prefix);
+            ps.absorb(&prefix, &v);
+        }
+        for (k, t) in orig.iter() {
+            assert_eq!(ps.get(k).unwrap(), t);
+        }
+    });
+}
