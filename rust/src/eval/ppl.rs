@@ -6,7 +6,9 @@
 
 use crate::data::Batch;
 use crate::error::Result;
+use crate::infer::PackedModel;
 use crate::model::{ModelConfig, ParamStore};
+use crate::quant::QuantSpec;
 use crate::runtime::{Bindings, Runtime};
 use crate::tensor::Tensor;
 
@@ -18,9 +20,17 @@ pub enum ModelMode {
     /// Quantized + adapter artifact (`logits_q_<size>_r<r>_g<g>[_dora]`)
     /// with runtime bits/scale.
     Quant { rank: usize, group: usize, bits: f32, scale: f32, dora: bool },
+    /// Native host engine, full precision — no artifacts required.
+    NativeFp,
+    /// Native host engine over packed weights + adapters — no artifacts
+    /// required.  `bits > 8` (e.g. 16 for weight-override baselines)
+    /// serves the stored weights densely.
+    NativeQuant { bits: u32, group: usize, scale: f32 },
 }
 
 impl ModelMode {
+    /// Artifact file stem for artifact-backed modes; native modes carry a
+    /// descriptive placeholder (they never touch the artifacts directory).
     pub fn artifact_name(&self, size: &str) -> String {
         match self {
             ModelMode::Fp => format!("logits_fp_{size}"),
@@ -28,7 +38,14 @@ impl ModelMode {
                 let suffix = if *dora { "_dora" } else { "" };
                 format!("logits_q_{size}_r{rank}_g{group}{suffix}")
             }
+            ModelMode::NativeFp => format!("native_fp_{size}"),
+            ModelMode::NativeQuant { .. } => format!("native_q_{size}"),
         }
+    }
+
+    /// Does this mode run on the native host engine (artifact-free)?
+    pub fn is_native(&self) -> bool {
+        matches!(self, ModelMode::NativeFp | ModelMode::NativeQuant { .. })
     }
 }
 
@@ -72,6 +89,39 @@ impl<'r> Evaluator<'r> {
         Evaluator { runtime, cfg }
     }
 
+    /// Build the native host model for a native mode.  Packing is
+    /// O(model size); callers looping over batches should build once and
+    /// call `PackedModel::logits` directly (as `perplexity` does) rather
+    /// than going through `Evaluator::logits` per batch.
+    pub fn native_model(
+        &self,
+        mode: &ModelMode,
+        params: &ParamStore,
+        qparams: Option<&ParamStore>,
+    ) -> Result<PackedModel> {
+        match mode {
+            ModelMode::NativeFp => {
+                PackedModel::build(self.cfg, params, None, QuantSpec::new(16, 64), 1.0)
+            }
+            ModelMode::NativeQuant { bits, group, scale } => {
+                let qp = qparams.ok_or_else(|| {
+                    crate::error::Error::config(
+                        "ModelMode::NativeQuant requires qparams (gamma/beta/lora); \
+                         use ModelMode::NativeFp for the full-precision reference",
+                    )
+                })?;
+                PackedModel::build(
+                    self.cfg,
+                    params,
+                    Some(qp),
+                    QuantSpec::new(*bits, *group),
+                    *scale,
+                )
+            }
+            _ => unreachable!("native_model called on an artifact mode"),
+        }
+    }
+
     /// Raw logits for one batch.
     pub fn logits(
         &self,
@@ -80,6 +130,9 @@ impl<'r> Evaluator<'r> {
         qparams: Option<&ParamStore>,
         batch: &Batch,
     ) -> Result<Tensor> {
+        if mode.is_native() {
+            return self.native_model(mode, params, qparams)?.logits(&batch.tokens);
+        }
         let name = mode.artifact_name(self.cfg.name);
         let mut b = Bindings::new().group("params", params).int("tokens", &batch.tokens);
         if let ModelMode::Quant { bits, scale, .. } = mode {
@@ -91,6 +144,7 @@ impl<'r> Evaluator<'r> {
     }
 
     /// Perplexity over a set of batches: exp(total_nll / total_tokens).
+    /// Native modes build the host model once and reuse it per batch.
     pub fn perplexity(
         &self,
         mode: &ModelMode,
@@ -98,10 +152,18 @@ impl<'r> Evaluator<'r> {
         qparams: Option<&ParamStore>,
         batches: &[Batch],
     ) -> Result<f64> {
+        let native = if mode.is_native() {
+            Some(self.native_model(mode, params, qparams)?)
+        } else {
+            None
+        };
         let mut nll = 0.0f64;
         let mut cnt = 0.0f64;
         for batch in batches {
-            let logits = self.logits(mode, params, qparams, batch)?;
+            let logits = match &native {
+                Some(m) => m.logits(&batch.tokens)?,
+                None => self.logits(mode, params, qparams, batch)?,
+            };
             let (n, c) = nll_from_logits(&logits, batch, self.cfg.vocab);
             nll += n;
             cnt += c;

@@ -1,0 +1,629 @@
+//! Native packed-weight inference engine — serving without artifacts.
+//!
+//! The ROADMAP's serving scenario: run a quantized model host-side with
+//! no XLA/PJRT toolchain and no `artifacts/` directory.  The engine
+//! mirrors `python/compile/model.py` exactly (RMSNorm eps 1e-5,
+//! interleaved RoPE, causal softmax attention, SwiGLU, untied head) but
+//! consumes *storage-form* weights: every linear is either a
+//! `PackedLinear` (sub-byte codes + group metadata, multiplied through
+//! the fused dequantize-on-the-fly GEMM `PackedLinear::matmul_fused`) or
+//! a dense f32 fallback (for baselines that ship dequantized weights,
+//! and for full-precision reference runs).  LoRA adapters ride along as
+//! `y += scale * (x·A)·Bᵀ`; DoRA's column rescale `mag/‖Q + s·A·Bᵀ‖_col`
+//! is precomputed at build time so the serving path stays two GEMMs.
+//!
+//! Entry points:
+//!   * [`PackedModel::build`] / [`PackedModel::from_quant_result`]
+//!   * [`PackedModel::logits`] — batched forward, (B, T) -> (B, T, V)
+//!   * [`generate_greedy`] — batched greedy decoding with a tokens/sec
+//!     and resident-bytes report (`repro generate`, `repro bench-infer`)
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::model::{LinearKind, ModelConfig, ParamStore};
+use crate::quant::affine::quantize_ints;
+use crate::quant::{PackedLinear, QuantSpec};
+use crate::quantizers::QuantResult;
+use crate::tensor::{IntTensor, Tensor};
+
+/// LoRA/DoRA adapter state for one linear, serving-form.
+pub struct Adapter {
+    /// (d_in, r)
+    pub a: Tensor,
+    /// Bᵀ, stored pre-transposed: (r, d_out).
+    pub b_t: Tensor,
+    /// LoRA scale (alpha / r).
+    pub scale: f32,
+    /// DoRA per-output-column rescale `mag_c / ‖Q + scale·A·Bᵀ‖_col`,
+    /// precomputed at build time; `None` for plain LoRA.
+    pub col_scale: Option<Vec<f32>>,
+}
+
+/// Storage form of one linear's base weight.
+pub enum LayerWeight {
+    /// Sub-byte packed codes (the 2/3/4-bit serving path).
+    Packed(PackedLinear),
+    /// Dense f32 (fp reference, or baselines that ship dequantized Q).
+    Dense(Tensor),
+}
+
+/// One servable linear: base weight + optional adapter.
+pub struct PackedLayer {
+    pub weight: LayerWeight,
+    pub adapter: Option<Adapter>,
+}
+
+impl PackedLayer {
+    /// y = x @ W' for x (n, d_in), where W' includes the adapter and, for
+    /// DoRA, the column rescale.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let mut y = match &self.weight {
+            LayerWeight::Packed(pl) => pl.matmul_fused(x)?,
+            LayerWeight::Dense(w) => x.matmul(w)?,
+        };
+        if let Some(ad) = &self.adapter {
+            let low = x.matmul(&ad.a)?.matmul(&ad.b_t)?; // (n, d_out)
+            for (yv, lv) in y.data_mut().iter_mut().zip(low.data()) {
+                *yv += ad.scale * lv;
+            }
+            if let Some(cs) = &ad.col_scale {
+                for row in y.data_mut().chunks_mut(cs.len()) {
+                    for (v, &c) in row.iter_mut().zip(cs.iter()) {
+                        *v *= c;
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// Bytes resident for this layer's weights + adapter.
+    pub fn resident_bytes(&self) -> usize {
+        let w = match &self.weight {
+            LayerWeight::Packed(pl) => pl.storage_bytes(),
+            LayerWeight::Dense(t) => t.len() * 4,
+        };
+        let a = match &self.adapter {
+            Some(ad) => {
+                (ad.a.len() + ad.b_t.len()) * 4
+                    + ad.col_scale.as_ref().map(|c| c.len() * 4).unwrap_or(0)
+            }
+            None => 0,
+        };
+        w + a
+    }
+
+    fn weight_elems(&self) -> usize {
+        match &self.weight {
+            LayerWeight::Packed(pl) => pl.d_in * pl.d_out,
+            LayerWeight::Dense(t) => t.len(),
+        }
+    }
+}
+
+/// One transformer block in serving form.
+pub struct PackedBlock {
+    pub attn_norm: Tensor,
+    pub ffn_norm: Tensor,
+    pub wq: PackedLayer,
+    pub wk: PackedLayer,
+    pub wv: PackedLayer,
+    pub wo: PackedLayer,
+    pub wgate: PackedLayer,
+    pub wup: PackedLayer,
+    pub wdown: PackedLayer,
+}
+
+/// A whole model in serving form.
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    pub spec: QuantSpec,
+    pub embed: Tensor,
+    pub final_norm: Tensor,
+    pub lm_head: Tensor,
+    pub blocks: Vec<PackedBlock>,
+}
+
+// ---------------------------------------------------------------------------
+// Numerics shared by the forward pass (mirror python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+const RMSNORM_EPS: f32 = 1e-5;
+
+/// Row-wise RMSNorm in place: x <- x * rsqrt(mean(x^2) + eps) * w.
+fn rmsnorm_rows(data: &mut [f32], d: usize, w: &[f32]) {
+    for row in data.chunks_mut(d) {
+        let var = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + RMSNORM_EPS).sqrt();
+        for (v, &wj) in row.iter_mut().zip(w.iter()) {
+            *v *= inv * wj;
+        }
+    }
+}
+
+/// RoPE cos/sin tables for positions [0, t) at `half = head_dim/2` freqs.
+struct RopeTables {
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    half: usize,
+}
+
+impl RopeTables {
+    fn new(t: usize, head_dim: usize) -> Self {
+        let half = head_dim / 2;
+        let mut cos = Vec::with_capacity(t * half);
+        let mut sin = Vec::with_capacity(t * half);
+        for pos in 0..t {
+            for j in 0..half {
+                let inv = 1.0 / 10000f32.powf(2.0 * j as f32 / head_dim as f32);
+                let ang = pos as f32 * inv;
+                cos.push(ang.cos());
+                sin.push(ang.sin());
+            }
+        }
+        RopeTables { cos, sin, half }
+    }
+}
+
+/// Rotate interleaved (even, odd) pairs of every head, in place.
+/// `data` is (b*t, d) row-major with d = h * hd.
+fn apply_rope(data: &mut [f32], b: usize, t: usize, h: usize, hd: usize, rope: &RopeTables) {
+    let d = h * hd;
+    let half = rope.half;
+    for bi in 0..b {
+        for ti in 0..t {
+            let row = &mut data[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+            for head in 0..h {
+                for j in 0..half {
+                    let c = rope.cos[ti * half + j];
+                    let s = rope.sin[ti * half + j];
+                    let i0 = head * hd + 2 * j;
+                    let x1 = row[i0];
+                    let x2 = row[i0 + 1];
+                    row[i0] = x1 * c - x2 * s;
+                    row[i0 + 1] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+fn build_layer(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    qparams: Option<&ParamStore>,
+    block: usize,
+    lin: LinearKind,
+    spec: QuantSpec,
+    scale: f32,
+) -> Result<PackedLayer> {
+    let (d_in, d_out) = cfg.linear_shape(lin);
+    let w = params.require(&cfg.weight_key(block, lin))?;
+    if w.shape() != [d_in, d_out] {
+        return Err(Error::shape(format!(
+            "linear {} block {block}: weight {:?}, want [{d_in}, {d_out}]",
+            lin.as_str(),
+            w.shape()
+        )));
+    }
+    let prefix = cfg.qparam_prefix(block, lin);
+
+    let weight = match qparams {
+        Some(qp) if spec.bits <= 8 => {
+            let gamma = qp.require(&format!("{prefix}gamma"))?;
+            let beta = qp.require(&format!("{prefix}beta"))?;
+            let (codes, s, z) = quantize_ints(w, gamma, beta, spec)?;
+            LayerWeight::Packed(PackedLinear::from_codes(&codes, s, z, d_in, d_out, spec)?)
+        }
+        _ => LayerWeight::Dense(w.clone()),
+    };
+
+    let adapter = match qparams {
+        None => None,
+        Some(qp) => {
+            let a = qp.require(&format!("{prefix}lora_a"))?.clone();
+            let b_t = qp.require(&format!("{prefix}lora_b"))?.transpose()?;
+            let col_scale = match qp.get(&format!("{prefix}mag")) {
+                None => None,
+                Some(mag) => {
+                    // DoRA: mag_c / ||Q + scale*A*B^T||_col, the +1e-8
+                    // inside the sqrt matching kernels/ref.py.
+                    let q = match &weight {
+                        LayerWeight::Packed(pl) => pl.dequantize()?,
+                        LayerWeight::Dense(t) => t.clone(),
+                    };
+                    let ab = a.matmul(&b_t)?; // (d_in, d_out)
+                    let mut sumsq = vec![0.0f32; d_out];
+                    for r in 0..d_in {
+                        let qrow = q.row(r);
+                        let abrow = ab.row(r);
+                        for c in 0..d_out {
+                            let m = qrow[c] + scale * abrow[c];
+                            sumsq[c] += m * m;
+                        }
+                    }
+                    Some(
+                        mag.data()
+                            .iter()
+                            .zip(&sumsq)
+                            .map(|(&m, &s)| m / (s + 1e-8).sqrt())
+                            .collect(),
+                    )
+                }
+            };
+            Some(Adapter { a, b_t, scale, col_scale })
+        }
+    };
+
+    Ok(PackedLayer { weight, adapter })
+}
+
+impl PackedModel {
+    /// Build a servable model from flat parameter stores.
+    ///
+    /// * `qparams = None` -> full-precision reference (dense, no adapters).
+    /// * `spec.bits <= 8` -> linears are packed via the affine quantizer
+    ///   with the store's gamma/beta clipping (bit-identical to the
+    ///   in-graph fake-quant path).
+    /// * `spec.bits > 8` (e.g. 16) -> linears stay dense f32 — the path
+    ///   for baselines whose `params` already hold dequantized Q.
+    pub fn build(
+        cfg: ModelConfig,
+        params: &ParamStore,
+        qparams: Option<&ParamStore>,
+        spec: QuantSpec,
+        scale: f32,
+    ) -> Result<Self> {
+        let embed = params.require("embed")?.clone();
+        let final_norm = params.require("final_norm")?.clone();
+        let lm_head = params.require("lm_head")?.clone();
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            let lay = |lin: LinearKind| build_layer(&cfg, params, qparams, b, lin, spec, scale);
+            blocks.push(PackedBlock {
+                attn_norm: params.require(&format!("blocks.{b}.attn_norm"))?.clone(),
+                ffn_norm: params.require(&format!("blocks.{b}.ffn_norm"))?.clone(),
+                wq: lay(LinearKind::Wq)?,
+                wk: lay(LinearKind::Wk)?,
+                wv: lay(LinearKind::Wv)?,
+                wo: lay(LinearKind::Wo)?,
+                wgate: lay(LinearKind::Wgate)?,
+                wup: lay(LinearKind::Wup)?,
+                wdown: lay(LinearKind::Wdown)?,
+            });
+        }
+        Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks })
+    }
+
+    /// Build from any quantizer's `QuantResult`: in-graph quantizers
+    /// (rtn, omniquant, apiq-*) pack at their native bits; weight-override
+    /// baselines (eval_bits 16) serve their dequantized weights densely.
+    pub fn from_quant_result(
+        cfg: ModelConfig,
+        r: &QuantResult,
+        group: usize,
+        scale: f32,
+    ) -> Result<Self> {
+        let bits = r.eval_bits.round() as u32;
+        Self::build(cfg, &r.params, Some(&r.qparams), QuantSpec::new(bits, group), scale)
+    }
+
+    /// Batched forward: tokens (B, T) -> logits (B, T, V).
+    pub fn logits(&self, tokens: &IntTensor) -> Result<Tensor> {
+        if tokens.shape().len() != 2 {
+            return Err(Error::shape("PackedModel::logits wants (B, T) tokens"));
+        }
+        let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+        let d = self.cfg.d_model;
+        let vocab = self.cfg.vocab;
+        let h = self.cfg.n_heads;
+        let hd = d / h;
+        let rope = RopeTables::new(t, hd);
+
+        // Embed.
+        let mut x = Tensor::zeros(&[b * t, d]);
+        {
+            let xd = x.data_mut();
+            for (i, &tok) in tokens.data().iter().enumerate() {
+                let tok = (tok.max(0) as usize).min(vocab - 1);
+                xd[i * d..(i + 1) * d].copy_from_slice(self.embed.row(tok));
+            }
+        }
+
+        for block in &self.blocks {
+            x = block.forward(&self.cfg, &x, b, t, &rope)?;
+        }
+
+        rmsnorm_rows(x.data_mut(), d, self.final_norm.data());
+        let logits = x.matmul(&self.lm_head)?;
+        logits.reshape(&[b, t, vocab])
+    }
+
+    /// Actual bytes resident for serving (packed codes + metadata + dense
+    /// f32 tensors + adapters) — the measured counterpart of
+    /// `MemoryModel::inference_weights`.
+    pub fn resident_bytes(&self) -> usize {
+        let mut total = (self.embed.len() + self.final_norm.len() + self.lm_head.len()) * 4;
+        for blk in &self.blocks {
+            total += (blk.attn_norm.len() + blk.ffn_norm.len()) * 4;
+            for lay in [
+                &blk.wq, &blk.wk, &blk.wv, &blk.wo, &blk.wgate, &blk.wup, &blk.wdown,
+            ] {
+                total += lay.resident_bytes();
+            }
+        }
+        total
+    }
+
+    /// Were LoRA/DoRA adapters built into the serving path?
+    pub fn has_adapters(&self) -> bool {
+        self.blocks
+            .first()
+            .map(|b| b.wq.adapter.is_some())
+            .unwrap_or(false)
+    }
+
+    /// Average bits per linear-layer weight as stored (dense layers count
+    /// as 32-bit) — the serving analogue of the paper's §5.1 caveat.
+    pub fn effective_bits(&self) -> f64 {
+        let mut bits = 0.0f64;
+        let mut elems = 0usize;
+        for blk in &self.blocks {
+            for lay in [
+                &blk.wq, &blk.wk, &blk.wv, &blk.wo, &blk.wgate, &blk.wup, &blk.wdown,
+            ] {
+                let n = lay.weight_elems();
+                let b = match &lay.weight {
+                    LayerWeight::Packed(pl) => pl.effective_bits(),
+                    LayerWeight::Dense(_) => 32.0,
+                };
+                bits += b * n as f64;
+                elems += n;
+            }
+        }
+        if elems == 0 {
+            0.0
+        } else {
+            bits / elems as f64
+        }
+    }
+}
+
+impl PackedBlock {
+    /// One block over x (b*t, d); returns the block output (b*t, d).
+    fn forward(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        b: usize,
+        t: usize,
+        rope: &RopeTables,
+    ) -> Result<Tensor> {
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let hd = d / h;
+
+        // -- attention branch --
+        let mut attn_in = x.clone();
+        rmsnorm_rows(attn_in.data_mut(), d, self.attn_norm.data());
+        let mut q = self.wq.forward(&attn_in)?;
+        let mut k = self.wk.forward(&attn_in)?;
+        let v = self.wv.forward(&attn_in)?;
+        apply_rope(q.data_mut(), b, t, h, hd, rope);
+        apply_rope(k.data_mut(), b, t, h, hd, rope);
+
+        // causal softmax attention, per (batch, head)
+        let mut ctx = Tensor::zeros(&[b * t, d]);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let (qd, kd, vd) = (q.data(), k.data(), v.data());
+        let cd = ctx.data_mut();
+        let mut probs = vec![0.0f32; t];
+        for bi in 0..b {
+            for head in 0..h {
+                let off = head * hd;
+                for tq in 0..t {
+                    let qrow = &qd[(bi * t + tq) * d + off..(bi * t + tq) * d + off + hd];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (tk, p) in probs.iter_mut().enumerate().take(tq + 1) {
+                        let krow = &kd[(bi * t + tk) * d + off..(bi * t + tk) * d + off + hd];
+                        let mut s = 0.0f32;
+                        for j in 0..hd {
+                            s += qrow[j] * krow[j];
+                        }
+                        let s = s * inv_sqrt;
+                        *p = s;
+                        mx = mx.max(s);
+                    }
+                    let mut denom = 0.0f32;
+                    for p in probs.iter_mut().take(tq + 1) {
+                        *p = (*p - mx).exp();
+                        denom += *p;
+                    }
+                    let inv = 1.0 / denom;
+                    let crow_start = (bi * t + tq) * d + off;
+                    for tk in 0..=tq {
+                        let p = probs[tk] * inv;
+                        let vrow = &vd[(bi * t + tk) * d + off..(bi * t + tk) * d + off + hd];
+                        let crow = &mut cd[crow_start..crow_start + hd];
+                        for j in 0..hd {
+                            crow[j] += p * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        let attn_out = self.wo.forward(&ctx)?;
+        let x1 = x.add(&attn_out)?;
+
+        // -- FFN branch (SwiGLU) --
+        let mut ffn_in = x1.clone();
+        rmsnorm_rows(ffn_in.data_mut(), d, self.ffn_norm.data());
+        let mut hidden = self.wgate.forward(&ffn_in)?;
+        let up = self.wup.forward(&ffn_in)?;
+        for (g, &u) in hidden.data_mut().iter_mut().zip(up.data()) {
+            let gv = *g;
+            *g = gv / (1.0 + (-gv).exp()) * u; // silu(gate) * up
+        }
+        let ffn_out = self.wdown.forward(&hidden)?;
+        x1.add(&ffn_out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Greedy decoding
+// ---------------------------------------------------------------------------
+
+/// Outcome of a batched greedy generation run.
+pub struct GenReport {
+    /// Per-sequence token ids, prompt + generated.
+    pub tokens: Vec<Vec<i32>>,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub wall_secs: f64,
+}
+
+impl GenReport {
+    /// Generated tokens per second across the batch.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        (self.tokens.len() * self.new_tokens) as f64 / self.wall_secs
+    }
+}
+
+/// Batched greedy decoding: extend `prompt` (B, T0) by `max_new` argmax
+/// tokens.  Full-prefix recompute per step (KV caching is the next item
+/// on the serving backlog — see ROADMAP).
+pub fn generate_greedy(
+    model: &PackedModel,
+    prompt: &IntTensor,
+    max_new: usize,
+) -> Result<GenReport> {
+    if prompt.shape().len() != 2 || prompt.shape()[0] == 0 || prompt.shape()[1] == 0 {
+        return Err(Error::shape("generate_greedy wants non-empty (B, T0) prompt"));
+    }
+    let (b, t0) = (prompt.shape()[0], prompt.shape()[1]);
+    let vocab = model.cfg.vocab;
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|i| prompt.data()[i * t0..(i + 1) * t0].to_vec())
+        .collect();
+    let start = Instant::now();
+    for _ in 0..max_new {
+        let cur = rows[0].len();
+        let flat: Vec<i32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        let toks = IntTensor::new(vec![b, cur], flat)?;
+        let logits = model.logits(&toks)?;
+        let data = logits.data();
+        for (bi, row) in rows.iter_mut().enumerate() {
+            let last = &data[(bi * cur + cur - 1) * vocab..(bi * cur + cur) * vocab];
+            row.push(argmax(last) as i32);
+        }
+    }
+    Ok(GenReport {
+        tokens: rows,
+        prompt_len: t0,
+        new_tokens: max_new,
+        wall_secs: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let mut data = vec![3.0f32, 3.0, 3.0, 3.0];
+        let w = vec![1.0f32; 4];
+        rmsnorm_rows(&mut data, 4, &w);
+        for v in data {
+            assert!((v - 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(3);
+        let (b, t, h, hd) = (1, 4, 2, 8);
+        let x = Tensor::randn(&[b * t, h * hd], 1.0, &mut rng);
+        let mut y = x.clone();
+        let rope = RopeTables::new(t, hd);
+        apply_rope(y.data_mut(), b, t, h, hd, &rope);
+        // rotations preserve the per-pair norm
+        for i in 0..b * t * h * hd / 2 {
+            let (a0, a1) = (x.data()[2 * i], x.data()[2 * i + 1]);
+            let (b0, b1) = (y.data()[2 * i], y.data()[2 * i + 1]);
+            let na = a0 * a0 + a1 * a1;
+            let nb = b0 * b0 + b1 * b1;
+            assert!((na - nb).abs() < 1e-3, "pair {i}: {na} vs {nb}");
+        }
+        // position 0 is the identity rotation
+        assert_eq!(&x.data()[..h * hd], &y.data()[..h * hd]);
+    }
+
+    #[test]
+    fn adapter_lowrank_and_dora_rescale() {
+        let mut rng = Rng::new(5);
+        let (d_in, d_out, r) = (8, 6, 2);
+        let w = Tensor::randn(&[d_in, d_out], 0.5, &mut rng);
+        let a = Tensor::randn(&[d_in, r], 0.5, &mut rng);
+        let bmat = Tensor::randn(&[d_out, r], 0.5, &mut rng);
+        let b_t = bmat.transpose().unwrap();
+        let scale = 0.7f32;
+
+        // dense reference: x @ (W + scale*A*B^T)
+        let ab = a.matmul(&b_t).unwrap();
+        let merged = w.add(&ab.scale(scale)).unwrap();
+        let x = Tensor::randn(&[3, d_in], 1.0, &mut rng);
+        let want = x.matmul(&merged).unwrap();
+
+        let layer = PackedLayer {
+            weight: LayerWeight::Dense(w.clone()),
+            adapter: Some(Adapter { a: a.clone(), b_t: b_t.clone(), scale, col_scale: None }),
+        };
+        let got = layer.forward(&x).unwrap();
+        let rel = got.sub(&want).unwrap().fro_norm() / want.fro_norm();
+        assert!(rel < 1e-5, "lora rel {rel}");
+
+        // DoRA: column rescale by mag / ||merged||_col
+        let mut col_scale = vec![0.0f32; d_out];
+        let mag = 1.5f32;
+        for c in 0..d_out {
+            let mut s = 0.0f32;
+            for row in 0..d_in {
+                s += merged.at2(row, c) * merged.at2(row, c);
+            }
+            col_scale[c] = mag / (s + 1e-8).sqrt();
+        }
+        let dora = PackedLayer {
+            weight: LayerWeight::Dense(w),
+            adapter: Some(Adapter { a, b_t, scale, col_scale: Some(col_scale.clone()) }),
+        };
+        let got2 = dora.forward(&x).unwrap();
+        for tr in 0..3 {
+            for c in 0..d_out {
+                let expect = want.at2(tr, c) * col_scale[c];
+                assert!((got2.at2(tr, c) - expect).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -28,6 +28,7 @@ pub mod config;
 pub mod data;
 pub mod error;
 pub mod eval;
+pub mod infer;
 pub mod metrics;
 pub mod model;
 pub mod pipeline;

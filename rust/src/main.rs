@@ -11,13 +11,17 @@
 //!
 //! The per-paper-table drivers live in `examples/` (see DESIGN.md §5).
 
+use repro::benchharness::Bench;
 use repro::config::args::Args;
 use repro::data::tasks::{ArithTask, ClassifyTask};
-use repro::data::ZipfMarkovCorpus;
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::{generate_greedy, PackedModel};
 use repro::metrics::{MemoryModel, TableBuilder};
-use repro::model::{checkpoint, ModelConfig};
+use repro::model::{checkpoint, ModelConfig, ParamStore};
 use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
 use repro::quant::QuantSpec;
+use repro::quantizers::{by_name, QuantResult, QuantizeCtx, Quantizer};
+use repro::tensor::Rng;
 use repro::train::{FinetuneData, LoraPosition, Pretrainer};
 
 const USAGE: &str = "\
@@ -30,6 +34,10 @@ COMMANDS
   quantize   --size S --method M --bits B            quantize, save qparams
   eval       --size S --method M --bits B            PTQ perplexity vs fp
   finetune   --size S --method M --bits B --data D   quantize + adapter finetune
+  generate   --size S --method M --bits B            native greedy decoding
+                                                     (no artifacts required)
+  bench-infer --size S --bits B                      native packed-vs-dense
+                                                     inference benchmark
   report     memory|params                           analytic reports
   artifacts                                          list compiled artifacts
 
@@ -39,7 +47,13 @@ COMMON FLAGS
   --rank R          (default: 16)      --group G     (default: 64)
   --pretrain-steps N (default: 300)
 
+GENERATE / BENCH-INFER FLAGS
+  --new-tokens N    (default: 32)      --prompt-len N (default: 16)
+  --gen-batch N     (default: 4)
+
 METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
+(generate also accepts `fp`; calibration-based methods need the artifact
+runtime, so generate supports fp/rtn/qlora/loftq out of the box)
 ";
 
 fn main() {
@@ -79,15 +93,16 @@ fn run(args: Args) -> repro::Result<()> {
             let mut params = cfg.init_params(seed);
             let trainer = Pretrainer::new(&runtime, cfg, steps);
             let report = trainer.train(&mut params, &corpus, steps, seed ^ 0x7EA1)?;
-            let path = format!("checkpoints/pretrained_{}_{}_{}.ckpt", cfg.name, steps, seed);
+            let path = checkpoint::pretrained_path(cfg.name, steps, seed);
             checkpoint::save(&params, &path)?;
             println!(
-                "pretrained {} for {} steps: loss {:.4} -> {:.4} ({:.1}s); saved {path}",
+                "pretrained {} for {} steps: loss {:.4} -> {:.4} ({:.1}s); saved {}",
                 cfg.name,
                 steps,
                 report.losses.first().copied().unwrap_or(f32::NAN),
                 report.tail_mean(10),
-                report.wall_secs
+                report.wall_secs,
+                path.display()
             );
         }
         "quantize" => {
@@ -140,6 +155,87 @@ fn run(args: Args) -> repro::Result<()> {
                 println!("arith accuracy: {:.1}%", acc * 100.0);
             }
         }
+        "generate" => {
+            let cfg = ModelConfig::by_name(&size)?;
+            let new_tokens = args.usize_or("new-tokens", 32)?;
+            let prompt_len = args.usize_or("prompt-len", 16)?.max(1);
+            let gen_batch = args.usize_or("gen-batch", 4)?.max(1);
+            let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+            let model = build_native_model(
+                &artifacts, cfg, &params, &method, bits, group, rank, seed,
+            )?;
+            let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed ^ 0x6E6);
+            let prompt = Batcher::new(gen_batch, prompt_len)
+                .lm_batch(&corpus, &mut Rng::new(seed ^ 0x9E77))
+                .tokens;
+            let report = generate_greedy(&model, &prompt, new_tokens)?;
+            for (i, row) in report.tokens.iter().enumerate().take(2) {
+                let (p, g) = row.split_at(report.prompt_len);
+                println!(
+                    "seq {i}: prompt {:?} -> generated {:?}",
+                    &p[..p.len().min(8)],
+                    g
+                );
+            }
+            println!(
+                "generated {} x {} tokens in {:.3}s — {:.1} tokens/s",
+                gen_batch, new_tokens, report.wall_secs,
+                report.tokens_per_sec()
+            );
+            println!(
+                "resident weights: {:.2} MB measured ({:.3} effective bits/weight); \
+                 analytic model: {:.2} MB",
+                report_resident_mb(&model),
+                model.effective_bits(),
+                analytic_resident_mb(&cfg, &model, rank),
+            );
+        }
+        "bench-infer" => {
+            let cfg = ModelConfig::by_name(&size)?;
+            let new_tokens = args.usize_or("new-tokens", 32)?;
+            let prompt_len = args.usize_or("prompt-len", 16)?.max(1);
+            let gen_batch = args.usize_or("gen-batch", 4)?.max(1);
+            let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+            let packed = build_native_model(
+                &artifacts, cfg, &params, "rtn", bits, group, rank, seed,
+            )?;
+            let dense = PackedModel::build(cfg, &params, None, QuantSpec::new(16, group), 1.0)?;
+            let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed ^ 0x6E6);
+            let prompt = Batcher::new(gen_batch, prompt_len)
+                .lm_batch(&corpus, &mut Rng::new(seed ^ 0x9E77))
+                .tokens;
+            let prefill_toks = (gen_batch * prompt_len) as f64;
+            let mut bench = Bench::new();
+            let packed_mean = bench
+                .run("prefill_packed", 1, 5, || {
+                    std::hint::black_box(packed.logits(&prompt).unwrap());
+                })
+                .mean_s;
+            bench.note(format!("packed prefill: {:.0} tokens/s", prefill_toks / packed_mean));
+            let dense_mean = bench
+                .run("prefill_dense_fp", 1, 5, || {
+                    std::hint::black_box(dense.logits(&prompt).unwrap());
+                })
+                .mean_s;
+            bench.note(format!("dense fp prefill: {:.0} tokens/s", prefill_toks / dense_mean));
+            let rep = generate_greedy(&packed, &prompt, new_tokens)?;
+            bench.note(format!(
+                "packed greedy decode ({gen_batch} x {new_tokens}): {:.1} tokens/s",
+                rep.tokens_per_sec()
+            ));
+            let rep = generate_greedy(&dense, &prompt, new_tokens)?;
+            bench.note(format!(
+                "dense fp greedy decode ({gen_batch} x {new_tokens}): {:.1} tokens/s",
+                rep.tokens_per_sec()
+            ));
+            bench.note(format!(
+                "resident: packed {:.2} MB ({:.3} bits/weight) vs dense {:.2} MB",
+                report_resident_mb(&packed),
+                packed.effective_bits(),
+                report_resident_mb(&dense),
+            ));
+            bench.finish("bench-infer");
+        }
         "report" => match args.positionals.first().map(String::as_str) {
             Some("memory") => print_memory_report(),
             Some("params") => print_param_report(),
@@ -168,6 +264,84 @@ fn run(args: Args) -> repro::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Load the pretrained checkpoint if one exists, else fall back to fresh
+/// random init (so `generate`/`bench-infer` run on a clean checkout with
+/// no artifacts and no pretraining — the output is then structurally
+/// correct but linguistically untrained).
+fn load_or_init_params(
+    cfg: &ModelConfig,
+    pretrain_steps: usize,
+    seed: u64,
+) -> repro::Result<ParamStore> {
+    let ckpt = checkpoint::pretrained_path(cfg.name, pretrain_steps, seed);
+    if ckpt.exists() {
+        eprintln!("[generate] loading checkpoint {}", ckpt.display());
+        checkpoint::load(&ckpt)
+    } else {
+        eprintln!(
+            "[generate] no checkpoint at {} — using random init (run `repro pretrain` \
+             with the xla feature for a trained model)",
+            ckpt.display()
+        );
+        Ok(cfg.init_params(seed))
+    }
+}
+
+/// Quantize host-side and build the native serving model.  Only methods
+/// that need no calibration activations run without the artifact runtime.
+#[allow(clippy::too_many_arguments)]
+fn build_native_model(
+    artifacts: &str,
+    cfg: ModelConfig,
+    params: &ParamStore,
+    method: &str,
+    bits: u32,
+    group: usize,
+    rank: usize,
+    seed: u64,
+) -> repro::Result<PackedModel> {
+    if method == "fp" {
+        return PackedModel::build(cfg, params, None, QuantSpec::new(16, group), 1.0);
+    }
+    if !matches!(method, "rtn" | "qlora" | "loftq") {
+        return Err(repro::Error::config(format!(
+            "method '{method}' needs the artifact runtime for calibration; \
+             use one of fp/rtn/qlora/loftq, or run `repro quantize` with --features xla \
+             and serve the saved qparams"
+        )));
+    }
+    let runtime = repro::runtime::Runtime::new(artifacts)?;
+    let ctx = QuantizeCtx {
+        runtime: &runtime,
+        cfg,
+        params,
+        spec: QuantSpec::new(bits, group),
+        rank,
+        scale: 1.0,
+        calib: &[],
+        seed,
+        verbose: false,
+    };
+    let r: QuantResult = by_name(method)?.run(&ctx)?;
+    PackedModel::from_quant_result(cfg, &r, group, 1.0)
+}
+
+fn report_resident_mb(model: &PackedModel) -> f64 {
+    model.resident_bytes() as f64 / 1e6
+}
+
+/// Analytic serving-memory prediction for the same architecture, keyed
+/// off the model's *actual* serving form (weight-override baselines like
+/// qlora/loftq serve dense f32 even when quantized at low bits, and the
+/// fp reference carries no adapters).
+fn analytic_resident_mb(cfg: &ModelConfig, model: &PackedModel, rank: usize) -> f64 {
+    use repro::metrics::memory::ArchShape;
+    let m = MemoryModel::new(ArchShape::from_config(cfg));
+    let spec = if model.spec.bits <= 8 { Some(model.spec) } else { None };
+    let rank = if model.has_adapters() { rank } else { 0 };
+    m.inference_weights(spec, rank) as f64 / 1e6
 }
 
 /// Fig. 2 regeneration: memory accounting for the Llama-2-7B shape.

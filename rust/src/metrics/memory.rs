@@ -160,6 +160,23 @@ impl MemoryModel {
         }
     }
 
+    /// Weights-resident bytes for *serving* (no optimizer / gradient /
+    /// activation state): packed quantized linears + f32 embed/head/norms
+    /// + f32 LoRA adapters at `rank` (0 = no adapters).  `spec: None`
+    /// prices dense-f32 linears (the fp reference, or weight-override
+    /// baselines that serve dequantized weights).  The measured
+    /// counterpart is `infer::PackedModel::resident_bytes`.
+    pub fn inference_weights(&self, spec: Option<QuantSpec>, rank: usize) -> u64 {
+        let p = self.arch.total_params();
+        let lin = self.arch.linear_params();
+        let other = p - lin;
+        let adapters = 4 * self.arch.lora_params(rank);
+        match spec {
+            None => 4 * p + adapters,
+            Some(spec) => Self::quant_bytes(lin, spec) + 4 * other + adapters,
+        }
+    }
+
     /// Peak memory during *quantization* (Table 4's right column):
     /// ApiQ-lw holds one layer's tensors + calib activations; ApiQ-bw one
     /// block's; LoftQ needs the SVD workspace of the largest linear.
@@ -235,6 +252,17 @@ mod tests {
         let lw = m.quantization_peak("apiq-lw", spec, 64, 128 * 2048);
         let bw = m.quantization_peak("apiq-bw", spec, 64, 128 * 2048);
         assert!(bw > lw);
+    }
+
+    #[test]
+    fn inference_weights_shrink_with_bits() {
+        let m = MemoryModel::new(ArchShape::llama2_7b());
+        let fp = m.inference_weights(None, 0);
+        let w4 = m.inference_weights(Some(QuantSpec::new(4, 64)), 16);
+        let w2 = m.inference_weights(Some(QuantSpec::new(2, 64)), 16);
+        assert!(w2 < w4 && w4 < fp, "{w2} {w4} {fp}");
+        // 2-bit linears should land well under a quarter of fp
+        assert!((w2 as f64) < 0.45 * fp as f64);
     }
 
     #[test]

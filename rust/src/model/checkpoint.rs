@@ -15,7 +15,7 @@
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::model::ParamStore;
@@ -23,6 +23,13 @@ use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"APIQCKPT";
 const VERSION: u32 = 1;
+
+/// Canonical path of a pretrained checkpoint — the single source of truth
+/// for the naming scheme shared by `repro pretrain` (save), `Env::prepare`
+/// (cache), and `repro generate` (load).
+pub fn pretrained_path(size: &str, steps: usize, seed: u64) -> PathBuf {
+    Path::new("checkpoints").join(format!("pretrained_{size}_{steps}_{seed}.ckpt"))
+}
 
 /// Write a store to `path` (creates parent dirs).
 pub fn save(store: &ParamStore, path: impl AsRef<Path>) -> Result<()> {

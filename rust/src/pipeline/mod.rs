@@ -55,10 +55,7 @@ impl Env {
         let runtime = Runtime::new(artifacts_dir)?;
         let cfg = ModelConfig::by_name(size)?;
         let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed);
-        let ckpt = PathBuf::from("checkpoints").join(format!(
-            "pretrained_{}_{pretrain_steps}_{seed}.ckpt",
-            cfg.name
-        ));
+        let ckpt = checkpoint::pretrained_path(cfg.name, pretrain_steps, seed);
         let params = if ckpt.exists() {
             eprintln!("[env] loading cached checkpoint {}", ckpt.display());
             checkpoint::load(&ckpt)?

@@ -56,20 +56,14 @@ fn sigmoid(x: f32) -> f32 {
 }
 
 /// Round-half-to-even, matching XLA/jnp `round` semantics.
+///
+/// Delegates to the IEEE-754 roundTiesToEven primitive.  The previous
+/// hand-rolled version compared `(x - x.trunc()).abs() == 0.5` (an exact
+/// float compare that can misclassify ties produced by FP division) and
+/// cast `x.floor() as i64` to test evenness (saturating for |x| > 2^63).
 #[inline]
-fn round_ties_even(x: f32) -> f32 {
-    let r = x.round(); // half away from zero
-    if (x - x.trunc()).abs() == 0.5 {
-        // tie: pick the even neighbour
-        let f = x.floor();
-        if (f as i64) % 2 == 0 {
-            f
-        } else {
-            f + 1.0
-        }
-    } else {
-        r
-    }
+pub fn round_ties_even(x: f32) -> f32 {
+    x.round_ties_even()
 }
 
 /// Per-group scale/zero-point for `w` (d_in x d_out) under (gamma, beta)
@@ -256,6 +250,26 @@ mod tests {
         let (codes2, _, _) = quantize_ints(&w, &g, &b, spec2()).unwrap();
         // group 0 codes unchanged
         assert_eq!(&codes1[..64 * 4], &codes2[..64 * 4]);
+    }
+
+    #[test]
+    fn round_ties_even_edges() {
+        // ties pick the even neighbour, both signs
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
+        // non-ties round to nearest
+        assert_eq!(round_ties_even(2.4), 2.0);
+        assert_eq!(round_ties_even(-2.6), -3.0);
+        // huge magnitudes (already integral in f32) are fixed points;
+        // the old `floor() as i64` evenness test saturated past 2^63
+        for v in [1e20f32, -1e20, 2f32.powi(63), -(2f32.powi(63)), f32::MAX, f32::MIN] {
+            assert_eq!(round_ties_even(v), v, "{v}");
+        }
+        assert!(round_ties_even(f32::NAN).is_nan());
     }
 
     #[test]

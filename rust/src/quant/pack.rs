@@ -6,10 +6,16 @@
 //! zero-points.  This is what "2-bit model on disk / in GPU memory" means
 //! in the paper's memory accounting (Fig. 2, Table 4) — the memory model
 //! in `metrics::memory` prices exactly this struct.
+//!
+//! `PackedLinear::matmul_fused` is the serving hot path: it unpacks
+//! codes group-by-group into a small scratch block and accumulates
+//! `x · s(q − z)` through the multi-threaded GEMM, never materializing
+//! the dense f32 weight (the dequantize-on-the-fly GEMM of FineQuant-style
+//! weight-only inference).
 
 use crate::error::{Error, Result};
 use crate::quant::affine::{dequantize, QuantSpec};
-use crate::tensor::Tensor;
+use crate::tensor::{gemm_threads, Tensor, GEMM_PARALLEL_MIN_FLOPS};
 
 /// Pack `codes` (each < 2^bits) into a little-endian bit stream.
 pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
@@ -58,11 +64,17 @@ pub struct PackedLinear {
     pub packed: Vec<u8>,
     /// Per-group scales (d_in/group, d_out).
     pub scales: Tensor,
-    /// Per-group zero-points (d_in/group, d_out), stored as f32 levels.
-    pub zeros: Tensor,
+    /// Per-group zero-points, row-major (d_in/group, d_out), stored as
+    /// real u8 levels — exactly the byte the paper's Fig. 2 / Table 4
+    /// accounting prices (they used to sit in an f32 Tensor, making the
+    /// struct 4x heavier than `storage_bytes()` claimed).
+    pub zeros: Vec<u8>,
 }
 
 impl PackedLinear {
+    /// Build from integer codes + per-group metadata.  `zeros` arrives as
+    /// the f32-level tensor `quantize_ints` produces (values are integers
+    /// in [0, 2^bits - 1], bits <= 8) and is narrowed to u8 storage.
     pub fn from_codes(
         codes: &[u32],
         scales: Tensor,
@@ -74,14 +86,48 @@ impl PackedLinear {
         if codes.len() != d_in * d_out {
             return Err(Error::shape("PackedLinear: code count mismatch"));
         }
+        if !(1..=8).contains(&spec.bits) {
+            return Err(Error::shape(format!(
+                "PackedLinear: {} bits not packable (supported: 1..=8); \
+                 serve wider weights densely",
+                spec.bits
+            )));
+        }
+        if spec.group == 0 || d_in % spec.group != 0 {
+            return Err(Error::shape(format!(
+                "PackedLinear: d_in {d_in} not divisible by group {}",
+                spec.group
+            )));
+        }
+        let n_groups = d_in / spec.group;
+        if scales.shape() != [n_groups, d_out] || zeros.shape() != [n_groups, d_out] {
+            return Err(Error::shape(format!(
+                "PackedLinear: scales/zeros shape {:?}/{:?}, want [{n_groups}, {d_out}]",
+                scales.shape(),
+                zeros.shape()
+            )));
+        }
+        let zeros_u8 = zeros
+            .data()
+            .iter()
+            .map(|&z| z.clamp(0.0, 255.0) as u8)
+            .collect();
         Ok(PackedLinear {
             d_in,
             d_out,
             spec,
             packed: pack_codes(codes, spec.bits),
             scales,
-            zeros,
+            zeros: zeros_u8,
         })
+    }
+
+    /// Zero-points widened back to the f32 tensor layout (d_in/group, d_out).
+    pub fn zeros_f32(&self) -> Tensor {
+        let n_groups = self.d_in / self.spec.group;
+        let data = self.zeros.iter().map(|&z| z as f32).collect();
+        Tensor::new(vec![n_groups, self.d_out], data)
+            .expect("zeros length is n_groups * d_out by construction")
     }
 
     /// Dequantize back to a dense f32 weight.
@@ -90,18 +136,110 @@ impl PackedLinear {
         dequantize(
             &codes,
             &self.scales,
-            &self.zeros,
+            &self.zeros_f32(),
             self.d_in,
             self.d_out,
             self.spec.group,
         )
     }
 
+    /// One column panel of the fused matmul: y[:, col0..col0+cols] for
+    /// x (n_tok, d_in), unpacking one quantization group at a time into a
+    /// (group x cols) scratch block.  Serial; the public entry point
+    /// splits the columns over threads.
+    fn fused_panel_cols(&self, x: &Tensor, col0: usize, cols: usize) -> Vec<f32> {
+        let n_tok = x.rows();
+        let group = self.spec.group;
+        let n_groups = self.d_in / group;
+        let bits = self.spec.bits as usize;
+        let mask = (1u32 << bits) - 1;
+        let mut out = vec![0.0f32; n_tok * cols];
+        let mut wblock = vec![0.0f32; group * cols];
+        for gi in 0..n_groups {
+            // dequantize columns [col0, col0+cols) of this group's rows
+            let srow = self.scales.row(gi);
+            let zrow = &self.zeros[gi * self.d_out..(gi + 1) * self.d_out];
+            for r in 0..group {
+                let mut bitpos = ((gi * group + r) * self.d_out + col0) * bits;
+                let brow = &mut wblock[r * cols..(r + 1) * cols];
+                for (j, bj) in brow.iter_mut().enumerate() {
+                    let byte = bitpos / 8;
+                    let off = bitpos % 8;
+                    let mut v = (self.packed[byte] as u32) >> off;
+                    if off + bits > 8 {
+                        v |= (self.packed[byte + 1] as u32) << (8 - off);
+                    }
+                    let q = (v & mask) as f32;
+                    *bj = srow[col0 + j] * (q - zrow[col0 + j] as f32);
+                    bitpos += bits;
+                }
+            }
+            // out += x[:, group rows] @ wblock  (x columns are contiguous)
+            for t in 0..n_tok {
+                let xrow = &x.row(t)[gi * group..(gi + 1) * group];
+                let orow = &mut out[t * cols..(t + 1) * cols];
+                for (r, &xv) in xrow.iter().enumerate() {
+                    let brow = &wblock[r * cols..(r + 1) * cols];
+                    for j in 0..cols {
+                        orow[j] += xv * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Fused dequantize-on-the-fly matmul: y = x @ (s · (q − z)) for
+    /// x (n_tok, d_in) -> (n_tok, d_out), without ever materializing the
+    /// dense weight.  Output columns are split over scoped std::threads
+    /// (one scope per call — this also parallelizes batch-1 decode);
+    /// within a panel, groups are unpacked into a small scratch block and
+    /// accumulated in ascending-k order, so every output element sums in
+    /// exactly the dense-path order and results agree bit-for-bit with
+    /// `x.matmul(&self.dequantize()?)`.
+    pub fn matmul_fused(&self, x: &Tensor) -> Result<Tensor> {
+        if x.rank() != 2 || x.cols() != self.d_in {
+            return Err(Error::shape(format!(
+                "matmul_fused: x {:?} vs packed ({}, {})",
+                x.shape(),
+                self.d_in,
+                self.d_out
+            )));
+        }
+        let n_tok = x.rows();
+        let d_out = self.d_out;
+        let threads = gemm_threads().min(d_out);
+        if threads <= 1 || n_tok * self.d_in * d_out < GEMM_PARALLEL_MIN_FLOPS {
+            return Tensor::new(vec![n_tok, d_out], self.fused_panel_cols(x, 0, d_out));
+        }
+        let panel_cols = d_out.div_ceil(threads);
+        let mut out = vec![0.0f32; n_tok * d_out];
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            let mut col0 = 0usize;
+            while col0 < d_out {
+                let cols = panel_cols.min(d_out - col0);
+                let c0 = col0;
+                handles.push((c0, cols, s.spawn(move || self.fused_panel_cols(x, c0, cols))));
+                col0 += cols;
+            }
+            for (c0, cols, h) in handles {
+                let local = h.join().expect("fused matmul panel thread panicked");
+                for t in 0..n_tok {
+                    out[t * d_out + c0..t * d_out + c0 + cols]
+                        .copy_from_slice(&local[t * cols..(t + 1) * cols]);
+                }
+            }
+        });
+        Tensor::new(vec![n_tok, d_out], out)
+    }
+
     /// Bytes on disk/GPU for the quantized payload (codes + metadata),
-    /// the quantity the paper's Fig. 2 / Table 4 account in GB.
+    /// the quantity the paper's Fig. 2 / Table 4 account in GB.  Now an
+    /// exact description of this struct: packed codes + f32 scales + u8
+    /// zero-points.
     pub fn storage_bytes(&self) -> usize {
-        let meta = self.scales.len() * 4 + self.zeros.len(); // f32 scales, u8 zeros
-        self.packed.len() + meta
+        self.packed.len() + self.scales.len() * 4 + self.zeros.len()
     }
 
     /// Effective bits per weight including group metadata — the paper's
@@ -152,6 +290,55 @@ mod tests {
     }
 
     #[test]
+    fn zeros_stored_as_bytes() {
+        let mut rng = Rng::new(9);
+        let spec = QuantSpec::new(3, 64);
+        let w = Tensor::randn(&[64, 8], 0.2, &mut rng);
+        let (g, b) = open_clip(64, 8, 64);
+        let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
+        let pl = PackedLinear::from_codes(&codes, s, z.clone(), 64, 8, spec).unwrap();
+        assert_eq!(pl.zeros.len(), 8);
+        // the u8 narrowing is lossless for integral zero-points
+        for (zu, zf) in pl.zeros.iter().zip(z.data()) {
+            assert_eq!(*zu as f32, *zf);
+        }
+        // storage prices exactly what the struct holds
+        assert_eq!(
+            pl.storage_bytes(),
+            pl.packed.len() + pl.scales.len() * 4 + pl.zeros.len()
+        );
+    }
+
+    #[test]
+    fn matmul_fused_matches_dequant_dense() {
+        let mut rng = Rng::new(11);
+        for bits in [2u32, 3, 4] {
+            let spec = QuantSpec::new(bits, 64);
+            let (d_in, d_out) = (128, 48);
+            let w = Tensor::randn(&[d_in, d_out], 0.2, &mut rng);
+            let (g, b) = open_clip(d_in, d_out, 64);
+            let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
+            let pl = PackedLinear::from_codes(&codes, s, z, d_in, d_out, spec).unwrap();
+            let x = Tensor::randn(&[5, d_in], 1.0, &mut rng);
+            let fused = pl.matmul_fused(&x).unwrap();
+            let dense = x.matmul(&pl.dequantize().unwrap()).unwrap();
+            let rel = fused.sub(&dense).unwrap().fro_norm() / dense.fro_norm().max(1e-12);
+            assert!(rel <= 1e-5, "bits={bits}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn matmul_fused_rejects_bad_shapes() {
+        let mut rng = Rng::new(12);
+        let spec = QuantSpec::new(2, 64);
+        let w = Tensor::randn(&[64, 8], 0.2, &mut rng);
+        let (g, b) = open_clip(64, 8, 64);
+        let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
+        let pl = PackedLinear::from_codes(&codes, s, z, 64, 8, spec).unwrap();
+        assert!(pl.matmul_fused(&Tensor::zeros(&[3, 32])).is_err());
+    }
+
+    #[test]
     fn effective_bits_close_to_nominal() {
         let mut rng = Rng::new(8);
         let spec = QuantSpec::new(2, 64);
@@ -160,7 +347,7 @@ mod tests {
         let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
         let pl = PackedLinear::from_codes(&codes, s, z, 256, 256, spec).unwrap();
         let eb = pl.effective_bits();
-        // 2-bit + (4+1 bytes per 64 weights) metadata = 2 + 40/64 = 2.625
-        assert!(eb > 2.0 && eb < 2.7, "effective bits {eb}");
+        // 2-bit codes + (4 + 1 bytes per 64 weights) metadata = 2.625 exactly
+        assert!((eb - 2.625).abs() < 1e-9, "effective bits {eb}");
     }
 }

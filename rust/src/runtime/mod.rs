@@ -1,4 +1,4 @@
-//! PJRT runtime: loads HLO-text artifacts produced by `make artifacts`,
+//! Artifact runtime: loads HLO-text artifacts produced by `make artifacts`,
 //! compiles them once, and executes them with name-bound host tensors.
 //!
 //! Interchange contract (see `python/compile/aot.py`):
@@ -9,26 +9,32 @@
 //!
 //! The runtime is the ONLY module that touches PJRT; everything above it
 //! deals in `Tensor`s and `ParamStore`s.
+//!
+//! PJRT support is gated behind the off-by-default `xla` cargo feature
+//! (the crate must build offline with no external dependencies).  Without
+//! the feature, `Runtime` is a stub whose execution methods return a
+//! clear "artifact runtime unavailable" error — the native host engine in
+//! `crate::infer` serves models without any artifacts.
 
 pub mod manifest;
 
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{Artifact, Runtime};
+
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Artifact, Runtime};
+
 pub use manifest::{ArtifactSpec, BufferSpec, DType};
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::PathBuf;
-use std::rc::Rc;
-use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::model::ParamStore;
 use crate::tensor::{IntTensor, Tensor};
-
-/// A loaded, compiled artifact.
-pub struct Artifact {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
 
 /// Values bindable to artifact arguments.
 pub enum Value<'a> {
@@ -76,6 +82,7 @@ impl<'a> Bindings<'a> {
         self
     }
 
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     fn lookup(&self, key: &str) -> Result<Value<'a>> {
         if let Some((group, rest)) = key.split_once('/') {
             let store = self.groups.get(group).ok_or_else(|| {
@@ -143,177 +150,4 @@ pub struct ExecStats {
     pub total_secs: f64,
     pub h2d_secs: f64,
     pub d2h_secs: f64,
-}
-
-/// The PJRT runtime: one CPU client + a compile cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Artifact>>>,
-    stats: RefCell<HashMap<String, ExecStats>>,
-    verbose: bool,
-}
-
-impl Runtime {
-    /// Create against an artifacts directory (default `artifacts/`).
-    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            artifacts_dir: artifacts_dir.into(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
-            verbose: std::env::var("APIQ_VERBOSE").is_ok(),
-        })
-    }
-
-    pub fn artifacts_dir(&self) -> &PathBuf {
-        &self.artifacts_dir
-    }
-
-    /// Does the artifact exist on disk?
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
-        if let Some(a) = self.cache.borrow().get(name) {
-            return Ok(a.clone());
-        }
-        let hlo_path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-        let man_path = self.artifacts_dir.join(format!("{name}.manifest"));
-        let spec = ArtifactSpec::parse_file(name, &man_path)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .map_err(|e| Error::Xla(format!("parse {}: {e}", hlo_path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Xla(format!("compile {name}: {e}")))?;
-        let art = Rc::new(Artifact { spec, exe });
-        if self.verbose {
-            eprintln!(
-                "[runtime] compiled {name} ({} args, {} outs) in {:.2}s",
-                art.spec.args.len(),
-                art.spec.rets.len(),
-                t0.elapsed().as_secs_f64()
-            );
-        }
-        self.cache.borrow_mut().insert(name.to_string(), art.clone());
-        Ok(art)
-    }
-
-    /// Execute an artifact with the given bindings; returns named outputs.
-    ///
-    /// Inputs go host -> device via `buffer_from_host_buffer` + `execute_b`
-    /// rather than `execute::<Literal>`: the xla crate's literal-based
-    /// `execute` *leaks every input device buffer* (its C shim releases
-    /// the buffers and never frees them), which at one training step per
-    /// call exhausts host RAM in minutes.  Owned `PjRtBuffer`s drop
-    /// correctly.  This also skips one host-side copy per argument.
-    pub fn execute(&self, artifact: &Artifact, bindings: &Bindings) -> Result<Outputs> {
-        let t_all = Instant::now();
-        // Build input device buffers in manifest order, validating shapes.
-        let mut buffers = Vec::with_capacity(artifact.spec.args.len());
-        for arg in &artifact.spec.args {
-            let buf = match (bindings.lookup(&arg.key)?, arg.dtype) {
-                (Value::Scalar(v), DType::F32) => {
-                    if !arg.shape.is_empty() {
-                        return Err(Error::manifest(format!(
-                            "{}: scalar bound to non-scalar arg {:?}",
-                            arg.key, arg.shape
-                        )));
-                    }
-                    self.client.buffer_from_host_buffer(&[v], &[], None)?
-                }
-                (Value::F32(t), DType::F32) => {
-                    if t.shape() != arg.shape.as_slice() {
-                        return Err(Error::manifest(format!(
-                            "{}: bound shape {:?}, manifest wants {:?}",
-                            arg.key,
-                            t.shape(),
-                            arg.shape
-                        )));
-                    }
-                    self.client.buffer_from_host_buffer(t.data(), &arg.shape, None)?
-                }
-                (Value::I32(t), DType::I32) => {
-                    if t.shape() != arg.shape.as_slice() {
-                        return Err(Error::manifest(format!(
-                            "{}: bound int shape {:?}, manifest wants {:?}",
-                            arg.key,
-                            t.shape(),
-                            arg.shape
-                        )));
-                    }
-                    self.client.buffer_from_host_buffer(t.data(), &arg.shape, None)?
-                }
-                (_, dt) => {
-                    return Err(Error::manifest(format!(
-                        "{}: binding dtype mismatch (manifest {dt:?})",
-                        arg.key
-                    )))
-                }
-            };
-            buffers.push(buf);
-        }
-        let t_exec = Instant::now();
-        let h2d = t_exec.duration_since(t_all).as_secs_f64();
-        let result = artifact.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
-        let t_d2h = Instant::now();
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        if tuple.len() != artifact.spec.rets.len() {
-            return Err(Error::manifest(format!(
-                "{}: {} outputs, manifest wants {}",
-                artifact.spec.name,
-                tuple.len(),
-                artifact.spec.rets.len()
-            )));
-        }
-        let mut map = HashMap::with_capacity(tuple.len());
-        for (ret, lit) in artifact.spec.rets.iter().zip(tuple) {
-            let data = match ret.dtype {
-                DType::F32 => lit.to_vec::<f32>()?,
-                DType::I32 => lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
-            };
-            map.insert(ret.key.clone(), Tensor::new(ret.shape.clone(), data)?);
-        }
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(artifact.spec.name.clone()).or_default();
-        s.calls += 1;
-        s.total_secs += t_all.elapsed().as_secs_f64();
-        s.h2d_secs += h2d;
-        s.d2h_secs += t_d2h.elapsed().as_secs_f64();
-        Ok(Outputs { map })
-    }
-
-    /// Convenience: load-and-execute by name.
-    pub fn run(&self, name: &str, bindings: &Bindings) -> Result<Outputs> {
-        let art = self.artifact(name)?;
-        self.execute(&art, bindings)
-    }
-
-    /// Execution statistics snapshot (artifact name -> stats).
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
-    }
-
-    /// Human-readable stats report for the perf pass.
-    pub fn stats_report(&self) -> String {
-        let stats = self.stats.borrow();
-        let mut rows: Vec<_> = stats.iter().collect();
-        rows.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
-        let mut out = String::from(
-            "artifact                                     calls   total(s)   h2d(s)   d2h(s)\n",
-        );
-        for (name, s) in rows {
-            out.push_str(&format!(
-                "{name:<44} {:>5} {:>9.3} {:>8.3} {:>8.3}\n",
-                s.calls, s.total_secs, s.h2d_secs, s.d2h_secs
-            ));
-        }
-        out
-    }
 }

@@ -1,0 +1,76 @@
+//! Stub runtime used when the `xla` cargo feature is disabled (the
+//! default).  Construction always succeeds so artifact-free code paths —
+//! host-side quantizers, the native inference engine, unit tests — run
+//! unchanged; anything that actually needs to *execute* an artifact gets
+//! a clear "artifact runtime unavailable" error instead of a link-time
+//! dependency on PJRT.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::{Bindings, ExecStats, Outputs};
+
+/// A loaded artifact (stub: manifest only, never constructed).
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+}
+
+/// Artifact-runtime stand-in: directory bookkeeping works, execution
+/// errors out with a pointer at the `xla` feature and the native engine.
+pub struct Runtime {
+    artifacts_dir: PathBuf,
+}
+
+fn unavailable(what: &str) -> Error {
+    Error::Xla(format!(
+        "artifact runtime unavailable: cannot execute '{what}' — this build has no PJRT \
+         support (compiled without the `xla` cargo feature). To enable it, add the \
+         vendored `xla` crate to [dependencies] in Cargo.toml, build with \
+         `--features xla`, and run `make artifacts`; or use the native host engine \
+         (`repro generate`, `repro bench-infer`, ModelMode::Native*)."
+    ))
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (default `artifacts/`).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Runtime { artifacts_dir: artifacts_dir.into() })
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.artifacts_dir
+    }
+
+    /// Does the artifact exist on disk?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load + compile an artifact — always unavailable in stub builds.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        Err(unavailable(name))
+    }
+
+    /// Execute a loaded artifact — always unavailable in stub builds.
+    pub fn execute(&self, artifact: &Artifact, _bindings: &Bindings) -> Result<Outputs> {
+        Err(unavailable(&artifact.spec.name))
+    }
+
+    /// Load-and-execute by name — always unavailable in stub builds.
+    pub fn run(&self, name: &str, _bindings: &Bindings) -> Result<Outputs> {
+        Err(unavailable(name))
+    }
+
+    /// Execution statistics snapshot (always empty in stub builds).
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        HashMap::new()
+    }
+
+    /// Human-readable stats report.
+    pub fn stats_report(&self) -> String {
+        "artifact runtime unavailable (built without the `xla` feature)\n".to_string()
+    }
+}

@@ -14,7 +14,80 @@ pub mod rng;
 pub use linalg::{cholesky_in_place, svd_topk};
 pub use rng::Rng;
 
+use std::sync::OnceLock;
+
 use crate::error::{Error, Result};
+
+/// Worker-thread count for the blocked GEMM: `REPRO_THREADS` if set,
+/// otherwise the machine's available parallelism.
+pub fn gemm_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("REPRO_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Below this many multiply-accumulates a parallel launch costs more than
+/// it saves; run the panel serially instead.  Shared by the dense GEMM
+/// here and the fused packed matmul in `quant::pack`.
+pub const GEMM_PARALLEL_MIN_FLOPS: usize = 1 << 17;
+
+/// Serial GEMM over one row panel: `out_panel` (rows x n) accumulates
+/// `a_panel` (rows x k) @ `b` (k x n).  The i-k-j loop order keeps the
+/// innermost j-loop contiguous over both `out` and `b` so it
+/// auto-vectorizes.  Never skips zero entries: 0 * NaN must stay NaN
+/// (IEEE-754 propagation), and branch-free inner loops are faster on
+/// dense data anyway.
+fn gemm_panel(a_panel: &[f32], b: &[f32], out_panel: &mut [f32], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows = out_panel.len() / n;
+    for i in 0..rows {
+        let arow = &a_panel[i * k..(i + 1) * k];
+        let orow = &mut out_panel[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Blocked multi-threaded GEMM: accumulates `a` (m x k) @ `b` (k x n)
+/// into `out` (m x n).  `out` is NOT zeroed first — callers chain calls
+/// to accumulate partial products (the fused packed matmul adds one
+/// quantization group at a time).  Row panels of `out` are distributed
+/// over scoped std::threads; small problems run serially.
+pub fn gemm_accum(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = gemm_threads().min(m);
+    if threads <= 1 || m * k * n < GEMM_PARALLEL_MIN_FLOPS {
+        gemm_panel(a, b, out, k, n);
+        return;
+    }
+    let panel_rows = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, out_panel) in out.chunks_mut(panel_rows * n).enumerate() {
+            let row0 = ti * panel_rows;
+            let rows = out_panel.len() / n;
+            let a_panel = &a[row0 * k..(row0 + rows) * k];
+            s.spawn(move || gemm_panel(a_panel, b, out_panel, k, n));
+        }
+    });
+}
 
 /// Row-major dense f32 tensor with dynamic rank.
 #[derive(Clone, Debug, PartialEq)]
@@ -136,10 +209,8 @@ impl Tensor {
         Ok(self)
     }
 
-    /// Matrix product (self: m x k) @ (other: k x n) -> m x n.
-    ///
-    /// Blocked i-k-j loop: the innermost j-loop is auto-vectorizable and
-    /// walks both `out` and `other` contiguously.
+    /// Matrix product (self: m x k) @ (other: k x n) -> m x n, via the
+    /// multi-threaded blocked `gemm_accum`.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.cols() != other.rows() {
             return Err(Error::shape(format!(
@@ -149,19 +220,7 @@ impl Tensor {
         }
         let (m, k, n) = (self.rows(), self.cols(), other.cols());
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for l in 0..k {
-                let a = self.data[i * k + l];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[l * n..(l + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        gemm_accum(&self.data, &other.data, &mut out, m, k, n);
         Tensor::new(vec![m, n], out)
     }
 
@@ -344,5 +403,53 @@ mod tests {
         let t = Tensor::zeros(&[4, 4]);
         assert!(t.clone().reshape(&[2, 8]).is_ok());
         assert!(t.reshape(&[3, 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero() {
+        // Regression: the old kernel skipped a == 0.0 entries, silently
+        // turning 0 * NaN into 0 instead of NaN.
+        let a = Tensor::new(vec![1, 2], vec![0.0, 1.0]).unwrap();
+        let b = Tensor::new(vec![2, 1], vec![f32::NAN, 2.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert!(c.data()[0].is_nan(), "0 * NaN must propagate NaN");
+
+        let binf = Tensor::new(vec![2, 1], vec![f32::INFINITY, 2.0]).unwrap();
+        let cinf = a.matmul(&binf).unwrap();
+        // 0 * inf = NaN per IEEE-754
+        assert!(cinf.data()[0].is_nan(), "0 * inf must produce NaN");
+    }
+
+    #[test]
+    fn parallel_gemm_matches_serial_above_threshold() {
+        // Big enough to take the threaded path regardless of core count.
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (64, 96, 64);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let c = a.matmul(&b).unwrap();
+        let mut serial = vec![0.0f32; m * n];
+        super::gemm_panel(a.data(), b.data(), &mut serial, k, n);
+        assert_eq!(c.data(), &serial[..], "threaded and serial GEMM must agree bit-exactly");
+    }
+
+    #[test]
+    fn gemm_accum_accumulates() {
+        let a = Tensor::new(vec![1, 1], vec![2.0]).unwrap();
+        let b = Tensor::new(vec![1, 1], vec![3.0]).unwrap();
+        let mut out = vec![10.0f32];
+        super::gemm_accum(a.data(), b.data(), &mut out, 1, 1, 1);
+        assert_eq!(out[0], 16.0);
+    }
+
+    #[test]
+    fn gemm_degenerate_dims_are_noops() {
+        let mut out: Vec<f32> = vec![];
+        super::gemm_accum(&[], &[], &mut out, 0, 4, 0);
+        let a = Tensor::zeros(&[2, 0]);
+        let b = Tensor::zeros(&[0, 3]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert!(c.data().iter().all(|&v| v == 0.0));
     }
 }

@@ -1,0 +1,219 @@
+//! Native inference engine tests: bit-packing vs a naive reference, the
+//! fused packed GEMM vs dequantize-then-matmul, and whole-model packed vs
+//! dense forward equivalence.  Everything here runs without artifacts or
+//! PJRT (the stub runtime is enough).
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::eval::{Evaluator, ModelMode};
+use repro::infer::{generate_greedy, PackedModel};
+use repro::model::{ParamStore, LINEAR_NAMES, TINY};
+use repro::quant::affine::{fakequant, open_clip, quantize_ints};
+use repro::quant::{pack_codes, unpack_codes, PackedLinear, QuantSpec};
+use repro::runtime::Runtime;
+use repro::tensor::{Rng, Tensor};
+
+// ---------------------------------------------------------------------------
+// pack_codes / unpack_codes vs a naive bit-by-bit reference
+// ---------------------------------------------------------------------------
+
+/// Naive reference: write every code's bits, LSB-first, into a flat bit
+/// vector, then fold into little-endian bytes.
+fn pack_naive(codes: &[u32], bits: u32) -> Vec<u8> {
+    let mut bitvec: Vec<bool> = Vec::with_capacity(codes.len() * bits as usize);
+    for &c in codes {
+        for j in 0..bits {
+            bitvec.push((c >> j) & 1 == 1);
+        }
+    }
+    let mut out = vec![0u8; bitvec.len().div_ceil(8)];
+    for (i, &bit) in bitvec.iter().enumerate() {
+        if bit {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+#[test]
+fn pack_matches_naive_bit_reference() {
+    let mut rng = Rng::new(0xB17);
+    for bits in 1u32..=8 {
+        let mask = (1u32 << bits) - 1;
+        // deliberately include lengths that are not multiples of 8 (and
+        // don't fill whole bytes) plus degenerate and larger sizes
+        for n in [1usize, 2, 3, 5, 7, 9, 13, 100, 257] {
+            let codes: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32 & mask).collect();
+            let packed = pack_codes(&codes, bits);
+            let naive = pack_naive(&codes, bits);
+            assert_eq!(packed, naive, "bits={bits} n={n}: packed bytes differ from reference");
+            assert_eq!(
+                unpack_codes(&packed, bits, n),
+                codes,
+                "bits={bits} n={n}: roundtrip failed"
+            );
+        }
+    }
+}
+
+#[test]
+fn pack_empty_is_empty() {
+    assert!(pack_codes(&[], 3).is_empty());
+    assert!(unpack_codes(&[], 3, 0).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// fused packed matmul vs dequantize + dense matmul
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_matmul_matches_dense_all_bits() {
+    let mut rng = Rng::new(31);
+    for bits in [2u32, 3, 4] {
+        for group in [32usize, 64] {
+            let spec = QuantSpec::new(bits, group);
+            let (d_in, d_out) = (128usize, 96usize);
+            let w = Tensor::randn(&[d_in, d_out], 0.3, &mut rng);
+            let (g, b) = open_clip(d_in, d_out, group);
+            let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
+            let pl = PackedLinear::from_codes(&codes, s, z, d_in, d_out, spec).unwrap();
+            let dense = pl.dequantize().unwrap();
+            for n_tok in [1usize, 9] {
+                let x = Tensor::randn(&[n_tok, d_in], 1.0, &mut rng);
+                let fused = pl.matmul_fused(&x).unwrap();
+                let want = x.matmul(&dense).unwrap();
+                let rel =
+                    fused.sub(&want).unwrap().fro_norm() / want.fro_norm().max(1e-12);
+                assert!(
+                    rel <= 1e-5,
+                    "bits={bits} group={group} n={n_tok}: rel err {rel}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// whole-model equivalence: packed forward == dense-dequantized forward
+// ---------------------------------------------------------------------------
+
+/// Open-clip qparams with live (random) LoRA B so the adapter path
+/// contributes to the output.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+#[test]
+fn packed_model_matches_dense_dequantized_forward() {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(3);
+    let qp = open_qparams_with_lora(spec, 8, 41);
+
+    let packed = PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap();
+    assert!(packed.effective_bits() < 3.0, "2-bit model should pack tight");
+
+    // dense reference: fake-quantize every linear host-side, serve at
+    // "16-bit" (dense weights) with identical adapters
+    let mut dparams = params.clone();
+    for blk in 0..TINY.n_layers {
+        for lin in LINEAR_NAMES {
+            let key = TINY.weight_key(blk, lin);
+            let prefix = TINY.qparam_prefix(blk, lin);
+            let w = dparams.require(&key).unwrap().clone();
+            let gamma = qp.require(&format!("{prefix}gamma")).unwrap();
+            let beta = qp.require(&format!("{prefix}beta")).unwrap();
+            dparams.insert(key, fakequant(&w, gamma, beta, spec).unwrap());
+        }
+    }
+    let dense = PackedModel::build(TINY, &dparams, Some(&qp), QuantSpec::new(16, 64), 1.0).unwrap();
+    assert!(dense.resident_bytes() > packed.resident_bytes());
+
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 6);
+    let toks = Batcher::new(2, 12).lm_batch(&corpus, &mut Rng::new(8)).tokens;
+    let lp = packed.logits(&toks).unwrap();
+    let ld = dense.logits(&toks).unwrap();
+    assert_eq!(lp.shape(), &[2, 12, TINY.vocab]);
+    assert!(lp.all_finite());
+    let rel = lp.sub(&ld).unwrap().fro_norm() / ld.fro_norm().max(1e-12);
+    assert!(rel <= 1e-5, "packed vs dense forward rel err {rel}");
+}
+
+#[test]
+fn dora_model_runs_and_rescales() {
+    let spec = QuantSpec::new(3, 64);
+    let params = TINY.init_params(9);
+    let mut qp = TINY.init_qparams(spec, 4, true, 10);
+    // double every magnitude: outputs must change vs mag=1
+    let base = PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap();
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".mag") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 2.0;
+            }
+        }
+    }
+    let doubled = PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap();
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 2);
+    let toks = Batcher::new(1, 8).lm_batch(&corpus, &mut Rng::new(3)).tokens;
+    let l1 = base.logits(&toks).unwrap();
+    let l2 = doubled.logits(&toks).unwrap();
+    assert!(l1.all_finite() && l2.all_finite());
+    assert!(l1.sub(&l2).unwrap().fro_norm() > 1e-3, "mag rescale had no effect");
+}
+
+// ---------------------------------------------------------------------------
+// greedy decoding + artifact-free perplexity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn greedy_decode_deterministic_and_in_vocab() {
+    let params = TINY.init_params(13);
+    let qp = open_qparams_with_lora(QuantSpec::new(2, 64), 4, 14);
+    let model = PackedModel::build(TINY, &params, Some(&qp), QuantSpec::new(2, 64), 1.0).unwrap();
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 15);
+    let prompt = Batcher::new(3, 8).lm_batch(&corpus, &mut Rng::new(16)).tokens;
+    let a = generate_greedy(&model, &prompt, 6).unwrap();
+    let b = generate_greedy(&model, &prompt, 6).unwrap();
+    assert_eq!(a.tokens.len(), 3);
+    for row in &a.tokens {
+        assert_eq!(row.len(), 8 + 6);
+        assert!(row.iter().all(|&t| (0..TINY.vocab as i32).contains(&t)));
+    }
+    assert_eq!(a.tokens, b.tokens, "greedy decoding must be deterministic");
+    assert!(a.new_tokens == 6 && a.prompt_len == 8);
+    assert!(a.tokens_per_sec() > 0.0);
+}
+
+#[test]
+fn native_perplexity_runs_without_artifacts() {
+    // The stub runtime cannot execute artifacts, but native modes never
+    // ask it to.
+    let runtime = Runtime::new("definitely_missing_artifacts_dir").unwrap();
+    let ev = Evaluator::new(&runtime, TINY);
+    let params = TINY.init_params(21);
+    let qp = open_qparams_with_lora(QuantSpec::new(2, 64), 4, 22);
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, 23);
+    let batcher = Batcher::new(2, 16);
+    let mut rng = Rng::new(24);
+    let batches: Vec<_> = (0..2).map(|_| batcher.lm_batch(&corpus, &mut rng)).collect();
+
+    let fp = ev
+        .perplexity(&ModelMode::NativeFp, &params, None, &batches)
+        .unwrap();
+    assert!(fp.is_finite() && fp > 1.0, "fp ppl {fp}");
+
+    let mode = ModelMode::NativeQuant { bits: 2, group: 64, scale: 1.0 };
+    let q = ev.perplexity(&mode, &params, Some(&qp), &batches).unwrap();
+    assert!(q.is_finite() && q > 1.0, "2-bit ppl {q}");
+}

@@ -8,7 +8,7 @@
 use repro::data::tasks::{ArithTask, ClassifyTask, McTask, Task};
 use repro::data::{vocab, ZipfMarkovCorpus};
 use repro::quant::{fakequant, nf_fakequant, pack_codes, quantize_ints, unpack_codes, QuantSpec};
-use repro::quant::affine::{open_clip, paper_init_clip, scales_zeros};
+use repro::quant::affine::{open_clip, paper_init_clip, round_ties_even, scales_zeros};
 use repro::tensor::{svd_topk, Rng, Tensor};
 
 /// Run `f` over `n` seeded cases; panic with the seed on failure.
@@ -67,6 +67,63 @@ fn prop_fakequant_error_bounded_by_scale() {
                     s.at2(0, c) * 0.5
                 );
             }
+        }
+    });
+}
+
+/// Slow-but-obvious round-half-to-even reference.  Works at any f32
+/// magnitude: values with |x| >= 2^23 are already integral (fract 0), so
+/// the tie branch is only reached where floor() is exactly representable
+/// and the `(f/2).floor()*2 == f` evenness test is exact.
+fn ref_round_ties_even(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let f = x.floor();
+    let d = x - f;
+    if d < 0.5 {
+        f
+    } else if d > 0.5 {
+        f + 1.0
+    } else if (f / 2.0).floor() * 2.0 == f {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+#[test]
+fn prop_round_ties_even_matches_reference() {
+    for_cases(25, |rng| {
+        // random magnitudes across the whole f32 exponent range
+        for _ in 0..200 {
+            let exp = rng.uniform(-30.0, 30.0);
+            let x = rng.uniform(-1.0, 1.0) * 10f32.powf(exp);
+            let got = round_ties_even(x);
+            let want = ref_round_ties_even(x);
+            // numeric equality (-0.0 == 0.0): the reference does not
+            // model the IEEE sign-of-zero rule
+            assert_eq!(got, want, "x={x}: {got} vs {want}");
+        }
+        // exact ties, both signs (k + 0.5 is exactly representable here)
+        for _ in 0..100 {
+            let k = rng.below(100_000) as f32 - 50_000.0;
+            let x = k + 0.5;
+            let got = round_ties_even(x);
+            assert_eq!(got, ref_round_ties_even(x), "tie at {x}");
+            assert_eq!(got % 2.0, 0.0, "tie at {x} must land on an even integer");
+        }
+        // ties produced by FP division (the case the old exact-compare
+        // implementation was fragile around)
+        for _ in 0..100 {
+            let q = rng.below(2000) as f32 - 1000.0;
+            let s = 2f32.powi(rng.below(8) as i32 - 4); // power of two: q/2s + exact halves
+            let x = (q + 0.5) * s / s;
+            assert_eq!(round_ties_even(x), ref_round_ties_even(x), "x={x}");
+        }
+        // huge magnitudes: fixed points, no i64 overflow hazards
+        for x in [1e12f32, -1e12, 9.2e18, -9.2e18, 1e30, -1e30, f32::MAX, f32::MIN] {
+            assert_eq!(round_ties_even(x), x);
         }
     });
 }
