@@ -17,8 +17,10 @@
 //!   * [`PackedModel::logits`] — batched forward, (B, T) -> (B, T, V)
 //!   * [`generate_greedy`] — batched greedy decoding with a tokens/sec
 //!     and resident-bytes report (`repro generate`, `repro bench-infer`)
-
-use std::time::Instant;
+//!
+//! The KV-cached incremental forward (`PackedModel::forward_chunk` /
+//! `forward_step`), sampling, and the continuous-batching token server
+//! live in `crate::serve`, built on this engine.
 
 use crate::error::{Error, Result};
 use crate::model::{LinearKind, ModelConfig, ParamStore};
@@ -132,7 +134,9 @@ pub struct PackedModel {
 const RMSNORM_EPS: f32 = 1e-5;
 
 /// Row-wise RMSNorm in place: x <- x * rsqrt(mean(x^2) + eps) * w.
-fn rmsnorm_rows(data: &mut [f32], d: usize, w: &[f32]) {
+/// `pub(crate)` so the incremental decode path in `serve` applies the
+/// exact same normalization arithmetic.
+pub(crate) fn rmsnorm_rows(data: &mut [f32], d: usize, w: &[f32]) {
     for row in data.chunks_mut(d) {
         let var = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
         let inv = 1.0 / (var + RMSNORM_EPS).sqrt();
@@ -142,19 +146,30 @@ fn rmsnorm_rows(data: &mut [f32], d: usize, w: &[f32]) {
     }
 }
 
-/// RoPE cos/sin tables for positions [0, t) at `half = head_dim/2` freqs.
-struct RopeTables {
-    cos: Vec<f32>,
-    sin: Vec<f32>,
-    half: usize,
+/// RoPE cos/sin tables for `t` consecutive positions at
+/// `half = head_dim/2` freqs.  Row `ti` holds position `offset + ti`:
+/// each entry is computed from the absolute position with the exact same
+/// arithmetic regardless of `offset`, so the incremental decode path
+/// (one position at a time) reproduces the full-prefix tables bit for
+/// bit.
+pub(crate) struct RopeTables {
+    pub(crate) cos: Vec<f32>,
+    pub(crate) sin: Vec<f32>,
+    pub(crate) half: usize,
 }
 
 impl RopeTables {
     fn new(t: usize, head_dim: usize) -> Self {
+        Self::with_offset(0, t, head_dim)
+    }
+
+    /// Tables for absolute positions [offset, offset + t).
+    pub(crate) fn with_offset(offset: usize, t: usize, head_dim: usize) -> Self {
         let half = head_dim / 2;
         let mut cos = Vec::with_capacity(t * half);
         let mut sin = Vec::with_capacity(t * half);
-        for pos in 0..t {
+        for ti in 0..t {
+            let pos = offset + ti;
             for j in 0..half {
                 let inv = 1.0 / 10000f32.powf(2.0 * j as f32 / head_dim as f32);
                 let ang = pos as f32 * inv;
@@ -168,7 +183,14 @@ impl RopeTables {
 
 /// Rotate interleaved (even, odd) pairs of every head, in place.
 /// `data` is (b*t, d) row-major with d = h * hd.
-fn apply_rope(data: &mut [f32], b: usize, t: usize, h: usize, hd: usize, rope: &RopeTables) {
+pub(crate) fn apply_rope(
+    data: &mut [f32],
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    rope: &RopeTables,
+) {
     let d = h * hd;
     let half = rope.half;
     for bi in 0..b {
@@ -189,16 +211,24 @@ fn apply_rope(data: &mut [f32], b: usize, t: usize, h: usize, hd: usize, rope: &
     }
 }
 
-fn argmax(row: &[f32]) -> usize {
-    let mut best = 0usize;
-    let mut bv = f32::NEG_INFINITY;
+/// Deterministic argmax over logits, total on NaN inputs: NaN entries are
+/// skipped (a NaN anywhere used to poison every `v > bv` comparison and
+/// silently return whatever index preceded it), ties break to the FIRST
+/// maximal index, and an all-NaN/empty row falls back to 0.  The greedy
+/// decode path and the samplers in `serve::sampling` both route through
+/// this.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best: Option<(usize, f32)> = None;
     for (i, &v) in row.iter().enumerate() {
-        if v > bv {
-            bv = v;
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v <= bv => {}
+            _ => best = Some((i, v)),
         }
     }
-    best
+    best.map(|(i, _)| i).unwrap_or(0)
 }
 
 // ---------------------------------------------------------------------------
@@ -510,39 +540,16 @@ impl GenReport {
 }
 
 /// Batched greedy decoding: extend `prompt` (B, T0) by `max_new` argmax
-/// tokens.  Full-prefix recompute per step (KV caching is the next item
-/// on the serving backlog — see ROADMAP).
+/// tokens.  Delegates to the KV-cached incremental decode in
+/// `serve::decode` (O(T) per emitted token); the original full-prefix
+/// recompute survives as `serve::decode::generate_recompute` for the
+/// bit-equivalence tests and the decode benchmark.
 pub fn generate_greedy(
     model: &PackedModel,
     prompt: &IntTensor,
     max_new: usize,
 ) -> Result<GenReport> {
-    if prompt.shape().len() != 2 || prompt.shape()[0] == 0 || prompt.shape()[1] == 0 {
-        return Err(Error::shape("generate_greedy wants non-empty (B, T0) prompt"));
-    }
-    let (b, t0) = (prompt.shape()[0], prompt.shape()[1]);
-    let vocab = model.cfg.vocab;
-    let mut rows: Vec<Vec<i32>> = (0..b)
-        .map(|i| prompt.data()[i * t0..(i + 1) * t0].to_vec())
-        .collect();
-    let start = Instant::now();
-    for _ in 0..max_new {
-        let cur = rows[0].len();
-        let flat: Vec<i32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
-        let toks = IntTensor::new(vec![b, cur], flat)?;
-        let logits = model.logits(&toks)?;
-        let data = logits.data();
-        for (bi, row) in rows.iter_mut().enumerate() {
-            let last = &data[(bi * cur + cur - 1) * vocab..(bi * cur + cur) * vocab];
-            row.push(argmax(last) as i32);
-        }
-    }
-    Ok(GenReport {
-        tokens: rows,
-        prompt_len: t0,
-        new_tokens: max_new,
-        wall_secs: start.elapsed().as_secs_f64(),
-    })
+    crate::serve::decode::generate(model, prompt, max_new, None)
 }
 
 #[cfg(test)]
@@ -578,6 +585,24 @@ mod tests {
         }
         // position 0 is the identity rotation
         assert_eq!(&x.data()[..h * hd], &y.data()[..h * hd]);
+    }
+
+    #[test]
+    fn argmax_first_max_ties_and_nan_total() {
+        // plain max
+        assert_eq!(argmax(&[0.0, 3.0, 1.0]), 1);
+        // ties break to the FIRST maximal index
+        assert_eq!(argmax(&[2.0, 5.0, 5.0, 1.0]), 1);
+        // NaN is skipped wherever it appears, including before/after the max
+        assert_eq!(argmax(&[f32::NAN, 2.0, 7.0]), 2);
+        assert_eq!(argmax(&[2.0, f32::NAN, 1.0]), 0);
+        assert_eq!(argmax(&[1.0, 7.0, f32::NAN]), 1);
+        // -inf is a real (comparable) value
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        // total on degenerate rows
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
     }
 
     #[test]

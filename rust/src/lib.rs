@@ -35,6 +35,7 @@ pub mod pipeline;
 pub mod quant;
 pub mod quantizers;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 

@@ -11,6 +11,8 @@
 //!
 //! The per-paper-table drivers live in `examples/` (see DESIGN.md §5).
 
+use std::sync::Arc;
+
 use repro::benchharness::Bench;
 use repro::config::args::Args;
 use repro::data::tasks::{ArithTask, ClassifyTask};
@@ -21,6 +23,9 @@ use repro::model::{checkpoint, ModelConfig, ParamStore};
 use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
 use repro::quant::QuantSpec;
 use repro::quantizers::{by_name, QuantResult, QuantizeCtx, Quantizer};
+use repro::serve::decode::{generate, generate_recompute};
+use repro::serve::loadgen::{run_load, LoadOptions};
+use repro::serve::{SamplingParams, SchedConfig, ServeOptions};
 use repro::tensor::Rng;
 use repro::train::{FinetuneData, LoraPosition, Pretrainer};
 
@@ -34,10 +39,18 @@ COMMANDS
   quantize   --size S --method M --bits B            quantize, save qparams
   eval       --size S --method M --bits B            PTQ perplexity vs fp
   finetune   --size S --method M --bits B --data D   quantize + adapter finetune
-  generate   --size S --method M --bits B            native greedy decoding
+  generate   --size S --method M --bits B            native KV-cached decoding
                                                      (no artifacts required)
   bench-infer --size S --bits B                      native packed-vs-dense
                                                      inference benchmark
+  pack-ckpt  --size S --method M --bits B [--out P]  save the 2-bit serving
+                                                     payload (packed codes +
+                                                     scales + zeros + adapters)
+  serve      [--packed P | --size S --method M]      long-lived token server
+                                                     (newline-JSON over TCP,
+                                                     continuous batching)
+  bench-serve --addr A --clients N                   concurrent load generator
+                                                     against a running server
   report     memory|params                           analytic reports
   artifacts                                          list compiled artifacts
 
@@ -49,11 +62,22 @@ COMMON FLAGS
 
 GENERATE / BENCH-INFER FLAGS
   --new-tokens N    (default: 32)      --prompt-len N (default: 16)
-  --gen-batch N     (default: 4)
+  --gen-batch N     (default: 4)       --packed P     (generate: load payload)
+  --temperature T   (default: 0 = greedy; generate only)
+  --top-k K / --top-p P                sampling filters (with --temperature)
+
+SERVE FLAGS
+  --addr A          (default: 127.0.0.1:7878; port 0 = ephemeral)
+  --max-batch N     (default: 8)       --max-new-cap N (default: 512)
+  --max-prompt N    (default: 1024)    --no-remote-shutdown
+BENCH-SERVE FLAGS
+  --clients N       (default: 4)      --requests N    (per client, default 2)
+  --shutdown        (send {\"cmd\":\"shutdown\"} when done)
 
 METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
 (generate also accepts `fp`; calibration-based methods need the artifact
-runtime, so generate supports fp/rtn/qlora/loftq out of the box)
+runtime, so generate/serve/pack-ckpt support fp/rtn/qlora/loftq out of
+the box — or serve any method from a saved --packed payload)
 ";
 
 fn main() {
@@ -156,19 +180,31 @@ fn run(args: Args) -> repro::Result<()> {
             }
         }
         "generate" => {
-            let cfg = ModelConfig::by_name(&size)?;
             let new_tokens = args.usize_or("new-tokens", 32)?;
             let prompt_len = args.usize_or("prompt-len", 16)?.max(1);
             let gen_batch = args.usize_or("gen-batch", 4)?.max(1);
-            let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
-            let model = build_native_model(
-                &artifacts, cfg, &params, &method, bits, group, rank, seed,
-            )?;
+            let model = match args.get("packed") {
+                Some(path) => {
+                    eprintln!("[generate] loading packed checkpoint {path}");
+                    checkpoint::load_packed(path)?
+                }
+                None => {
+                    let cfg = ModelConfig::by_name(&size)?;
+                    let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+                    build_native_model(&artifacts, cfg, &params, &method, bits, group, rank, seed)?
+                }
+            };
+            let cfg = model.cfg;
+            let temperature = args.f32_or("temperature", 0.0)?;
+            let top_k = args.usize_or("top-k", 0)?;
+            let top_p = args.f32_or("top-p", 1.0)?;
+            let sampling = (temperature > 0.0)
+                .then_some(SamplingParams { temperature, top_k, top_p, seed });
             let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed ^ 0x6E6);
             let prompt = Batcher::new(gen_batch, prompt_len)
                 .lm_batch(&corpus, &mut Rng::new(seed ^ 0x9E77))
                 .tokens;
-            let report = generate_greedy(&model, &prompt, new_tokens)?;
+            let report = generate(&model, &prompt, new_tokens, sampling.as_ref())?;
             for (i, row) in report.tokens.iter().enumerate().take(2) {
                 let (p, g) = row.split_at(report.prompt_len);
                 println!(
@@ -219,9 +255,16 @@ fn run(args: Args) -> repro::Result<()> {
                 .mean_s;
             bench.note(format!("dense fp prefill: {:.0} tokens/s", prefill_toks / dense_mean));
             let rep = generate_greedy(&packed, &prompt, new_tokens)?;
+            let cached_tps = rep.tokens_per_sec();
             bench.note(format!(
-                "packed greedy decode ({gen_batch} x {new_tokens}): {:.1} tokens/s",
-                rep.tokens_per_sec()
+                "packed KV-cached greedy decode ({gen_batch} x {new_tokens}): {cached_tps:.1} tokens/s"
+            ));
+            let rep = generate_recompute(&packed, &prompt, new_tokens, None)?;
+            bench.note(format!(
+                "packed full-recompute decode ({gen_batch} x {new_tokens}): {:.1} tokens/s \
+                 ({:.2}x speedup from the KV cache)",
+                rep.tokens_per_sec(),
+                cached_tps / rep.tokens_per_sec().max(1e-9)
             ));
             let rep = generate_greedy(&dense, &prompt, new_tokens)?;
             bench.note(format!(
@@ -235,6 +278,90 @@ fn run(args: Args) -> repro::Result<()> {
                 report_resident_mb(&dense),
             ));
             bench.finish("bench-infer");
+        }
+        "pack-ckpt" => {
+            let cfg = ModelConfig::by_name(&size)?;
+            let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+            let model = build_native_model(
+                &artifacts, cfg, &params, &method, bits, group, rank, seed,
+            )?;
+            let out = match args.get("out") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => checkpoint::packed_path(&size, &method, bits, group),
+            };
+            checkpoint::save_packed(&model, &out)?;
+            println!(
+                "packed {size}/{method} {bits}-bit -> {} ({:.2} MB serving payload, \
+                 {:.3} bits/weight)",
+                out.display(),
+                report_resident_mb(&model),
+                model.effective_bits()
+            );
+        }
+        "serve" => {
+            let addr = args.str_or("addr", "127.0.0.1:7878");
+            let sched = SchedConfig {
+                max_batch: args.usize_or("max-batch", 8)?.max(1),
+                max_new_cap: args.usize_or("max-new-cap", 512)?.max(1),
+                max_prompt: args.usize_or("max-prompt", 1024)?.max(1),
+            };
+            let model = match args.get("packed") {
+                Some(path) => {
+                    eprintln!("[serve] loading packed checkpoint {path}");
+                    checkpoint::load_packed(path)?
+                }
+                None => {
+                    let cfg = ModelConfig::by_name(&size)?;
+                    let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+                    build_native_model(&artifacts, cfg, &params, &method, bits, group, rank, seed)?
+                }
+            };
+            println!(
+                "serve: model {} ({:.2} MB resident, {:.3} bits/weight), max batch {}",
+                model.cfg.name,
+                report_resident_mb(&model),
+                model.effective_bits(),
+                sched.max_batch
+            );
+            let opts = ServeOptions {
+                addr,
+                sched,
+                allow_remote_shutdown: !args.flag("no-remote-shutdown"),
+            };
+            repro::serve::server::run(Arc::new(model), opts)?;
+        }
+        "bench-serve" => {
+            let o = LoadOptions {
+                addr: args.str_or("addr", "127.0.0.1:7878"),
+                clients: args.usize_or("clients", 4)?.max(1),
+                requests_per_client: args.usize_or("requests", 2)?.max(1),
+                prompt_len: args.usize_or("prompt-len", 16)?.max(1),
+                max_new: args.usize_or("new-tokens", 32)?.max(1),
+                vocab: ModelConfig::by_name(&size)?.vocab,
+                temperature: args.f32_or("temperature", 0.0)?,
+                seed,
+                shutdown_after: args.flag("shutdown"),
+            };
+            let rep = run_load(&o)?;
+            println!(
+                "bench-serve: {}/{} requests completed, {} tokens in {:.2}s \
+                 ({:.1} tokens/s aggregate)",
+                rep.completed,
+                rep.requests,
+                rep.total_tokens,
+                rep.wall_secs,
+                rep.tokens_per_sec()
+            );
+            println!("  time-to-first-token: {}", rep.ttft.fmt_ms());
+            println!("  request latency:     {}", rep.total.fmt_ms());
+            println!("  peak concurrent streams: {}", rep.peak_concurrent_streams);
+            if rep.completed != rep.requests {
+                return Err(repro::Error::config(format!(
+                    "{} of {} requests did not complete",
+                    rep.requests - rep.completed,
+                    rep.requests
+                )));
+            }
         }
         "report" => match args.positionals.first().map(String::as_str) {
             Some("memory") => print_memory_report(),

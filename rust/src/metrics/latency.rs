@@ -1,0 +1,91 @@
+//! Latency distributions for the serving benchmarks: nearest-rank
+//! percentiles over a batch of observations, with a compact
+//! milliseconds formatter the `bench-serve` report prints.
+
+/// Nearest-rank percentile of an ascending-sorted slice (q in [0, 1]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Summary of one latency distribution (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencySummary {
+    /// Build from unsorted observations in seconds.
+    pub fn from_secs(mut xs: Vec<f64>) -> Self {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let n = xs.len();
+        LatencySummary {
+            n,
+            mean_s: xs.iter().sum::<f64>() / n as f64,
+            p50_s: percentile(&xs, 0.50),
+            p90_s: percentile(&xs, 0.90),
+            p99_s: percentile(&xs, 0.99),
+            max_s: xs[n - 1],
+        }
+    }
+
+    /// `mean 12.3ms p50 11.0ms p90 20.1ms p99 33.0ms max 35.2ms`
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "mean {:.1}ms p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms max {:.1}ms",
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p90_s * 1e3,
+            self.p99_s * 1e3,
+            self.max_s * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.25), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 0.75), 3.0);
+        assert_eq!(percentile(&xs, 0.99), 4.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.5], 0.5), 7.5);
+    }
+
+    #[test]
+    fn summary_orders_unsorted_input() {
+        let s = LatencySummary::from_secs(vec![0.03, 0.01, 0.02]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean_s - 0.02).abs() < 1e-12);
+        assert_eq!(s.p50_s, 0.02);
+        assert_eq!(s.max_s, 0.03);
+        assert!(s.p99_s <= s.max_s && s.p50_s <= s.p90_s);
+        assert!(s.fmt_ms().contains("p90"));
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let s = LatencySummary::from_secs(vec![]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.max_s, 0.0);
+    }
+}

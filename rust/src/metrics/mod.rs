@@ -1,12 +1,15 @@
 //! Metrics: the paper's diagnostic quantities (weight error of Fig. 3 /
 //! A.1, activation error of Fig. 4, the Q/A/B histograms of Fig. 5, and
-//! the GPU-memory accounting of Fig. 2 / Table 4) plus table emitters.
+//! the GPU-memory accounting of Fig. 2 / Table 4), serving latency
+//! percentiles for `repro bench-serve`, plus table emitters.
 
 pub mod histogram;
+pub mod latency;
 pub mod memory;
 pub mod table;
 
 pub use histogram::Histogram;
+pub use latency::LatencySummary;
 pub use memory::MemoryModel;
 pub use table::TableBuilder;
 

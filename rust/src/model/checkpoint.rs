@@ -1,6 +1,6 @@
-//! Versioned binary checkpoints for `ParamStore`s.
+//! Versioned binary checkpoints for `ParamStore`s and packed models.
 //!
-//! Format (little-endian):
+//! `ParamStore` format (little-endian):
 //!   magic  "APIQCKPT"  (8 bytes)
 //!   version u32
 //!   n_entries u32
@@ -9,20 +9,30 @@
 //!     rank u32, dims u64 * rank
 //!     f32 payload
 //!
+//! `PackedModel` format ("APIQPACK", see [`save_packed`]) serializes the
+//! *serving* form — sub-byte packed codes, u8 zero-points, f32 scales,
+//! adapter tensors — so `repro serve` boots from the 2-bit payload
+//! directly instead of re-quantizing an f32 checkpoint at startup.
+//!
 //! Simple, dependency-free, and byte-exact across runs — checkpoints are
-//! part of the experiment pipeline (pretrain -> quantize -> finetune each
-//! run as separate CLI invocations).
+//! part of the experiment pipeline (pretrain -> quantize -> finetune ->
+//! pack-ckpt -> serve each run as separate CLI invocations).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
-use crate::model::ParamStore;
+use crate::infer::{Adapter, LayerWeight, PackedBlock, PackedLayer, PackedModel};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::{PackedLinear, QuantSpec};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"APIQCKPT";
 const VERSION: u32 = 1;
+
+const PACK_MAGIC: &[u8; 8] = b"APIQPACK";
+const PACK_VERSION: u32 = 1;
 
 /// Canonical path of a pretrained checkpoint — the single source of truth
 /// for the naming scheme shared by `repro pretrain` (save), `Env::prepare`
@@ -105,6 +115,328 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+// ---------------------------------------------------------------------------
+// Packed-model checkpoints ("APIQPACK"): the 2-bit serving payload
+// ---------------------------------------------------------------------------
+
+/// Canonical path of a packed serving checkpoint (`repro pack-ckpt` save,
+/// `repro serve --packed` / `repro generate --packed` load).
+pub fn packed_path(size: &str, method: &str, bits: u32, group: usize) -> PathBuf {
+    Path::new("checkpoints").join(format!("packed_{size}_{method}_{bits}b_g{group}.apq"))
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u32v(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_bytes(w: &mut impl Write, bytes: &[u8]) -> Result<()> {
+    write_u64(w, bytes.len() as u64)?;
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    write_u64(w, data.len() as u64)?;
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    write_u32v(w, t.rank() as u32)?;
+    for &d in t.shape() {
+        write_u64(w, d as u64)?;
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Upper bound on any single payload in a packed checkpoint; a corrupt
+/// length field fails fast instead of attempting a giant allocation.
+/// 2^28 f32 elements = 1 GB, ~60x the `base` config's largest tensor.
+const PACK_MAX_ELEMS: u64 = 1 << 28;
+
+fn read_len(r: &mut impl Read, what: &str) -> Result<usize> {
+    let n = read_u64(r)?;
+    if n > PACK_MAX_ELEMS {
+        return Err(Error::io(format!("packed checkpoint: implausible {what} length {n}")));
+    }
+    Ok(n as usize)
+}
+
+fn read_bytes(r: &mut impl Read, what: &str) -> Result<Vec<u8>> {
+    let n = read_len(r, what)?;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_f32s(r: &mut impl Read, what: &str) -> Result<Vec<f32>> {
+    let n = read_len(r, what)?;
+    let mut data = vec![0f32; n];
+    let bytes: &mut [u8] =
+        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4) };
+    r.read_exact(bytes)?;
+    Ok(data)
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
+    let rank = read_u32(r)? as usize;
+    if rank > 8 {
+        return Err(Error::io(format!("packed checkpoint: implausible tensor rank {rank}")));
+    }
+    let mut shape = Vec::with_capacity(rank);
+    let mut count = 1u64;
+    for _ in 0..rank {
+        let d = read_u64(r)?;
+        count = count.saturating_mul(d.max(1));
+        shape.push(d as usize);
+    }
+    if count > PACK_MAX_ELEMS {
+        return Err(Error::io("packed checkpoint: implausible tensor size".to_string()));
+    }
+    let n: usize = shape.iter().product();
+    let mut data = vec![0f32; n];
+    let bytes: &mut [u8] =
+        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4) };
+    r.read_exact(bytes)?;
+    Tensor::new(shape, data)
+}
+
+fn write_layer(w: &mut impl Write, layer: &PackedLayer) -> Result<()> {
+    match &layer.weight {
+        LayerWeight::Dense(t) => {
+            w.write_all(&[0u8])?;
+            write_tensor(w, t)?;
+        }
+        LayerWeight::Packed(pl) => {
+            w.write_all(&[1u8])?;
+            write_u64(w, pl.d_in as u64)?;
+            write_u64(w, pl.d_out as u64)?;
+            write_u32v(w, pl.spec.bits)?;
+            write_u64(w, pl.spec.group as u64)?;
+            write_bytes(w, &pl.packed)?;
+            write_tensor(w, &pl.scales)?;
+            write_bytes(w, &pl.zeros)?;
+        }
+    }
+    match &layer.adapter {
+        None => w.write_all(&[0u8])?,
+        Some(ad) => {
+            w.write_all(&[if ad.col_scale.is_some() { 2u8 } else { 1u8 }])?;
+            write_tensor(w, &ad.a)?;
+            write_tensor(w, &ad.b_t)?;
+            w.write_all(&ad.scale.to_le_bytes())?;
+            if let Some(cs) = &ad.col_scale {
+                write_f32s(w, cs)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_layer(r: &mut impl Read) -> Result<PackedLayer> {
+    let weight = match read_u8(r)? {
+        0 => LayerWeight::Dense(read_tensor(r)?),
+        1 => {
+            let d_in = read_len(r, "d_in")?;
+            let d_out = read_len(r, "d_out")?;
+            let bits = read_u32(r)?;
+            let group = read_len(r, "group")?;
+            let spec = QuantSpec::new(bits, group);
+            let packed = read_bytes(r, "packed codes")?;
+            let scales = read_tensor(r)?;
+            let zeros = read_bytes(r, "zero-points")?;
+            if !(1..=8).contains(&bits) || group == 0 || d_in % group != 0 {
+                return Err(Error::io(format!(
+                    "packed checkpoint: bad layer spec ({bits} bits, group {group}, d_in {d_in})"
+                )));
+            }
+            let n_groups = d_in / group;
+            let want_bytes = (d_in * d_out * bits as usize).div_ceil(8);
+            if packed.len() != want_bytes
+                || scales.shape() != [n_groups, d_out]
+                || zeros.len() != n_groups * d_out
+            {
+                return Err(Error::io(
+                    "packed checkpoint: layer payload shape mismatch".to_string(),
+                ));
+            }
+            LayerWeight::Packed(PackedLinear { d_in, d_out, spec, packed, scales, zeros })
+        }
+        tag => return Err(Error::io(format!("packed checkpoint: unknown weight tag {tag}"))),
+    };
+    let adapter = match read_u8(r)? {
+        0 => None,
+        tag @ (1 | 2) => {
+            let a = read_tensor(r)?;
+            let b_t = read_tensor(r)?;
+            let scale = read_f32(r)?;
+            let col_scale = if tag == 2 { Some(read_f32s(r, "col_scale")?) } else { None };
+            Some(Adapter { a, b_t, scale, col_scale })
+        }
+        tag => return Err(Error::io(format!("packed checkpoint: unknown adapter tag {tag}"))),
+    };
+    Ok(PackedLayer { weight, adapter })
+}
+
+fn block_layers(blk: &PackedBlock) -> [&PackedLayer; 7] {
+    [&blk.wq, &blk.wk, &blk.wv, &blk.wo, &blk.wgate, &blk.wup, &blk.wdown]
+}
+
+/// Serialize a [`PackedModel`] — the exact serving form, packed codes and
+/// all — to `path` (creates parent dirs).
+pub fn save_packed(model: &PackedModel, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(PACK_MAGIC)?;
+    write_u32v(&mut w, PACK_VERSION)?;
+    write_bytes(&mut w, model.cfg.name.as_bytes())?;
+    write_u32v(&mut w, model.spec.bits)?;
+    write_u64(&mut w, model.spec.group as u64)?;
+    write_tensor(&mut w, &model.embed)?;
+    write_tensor(&mut w, &model.final_norm)?;
+    write_tensor(&mut w, &model.lm_head)?;
+    write_u32v(&mut w, model.blocks.len() as u32)?;
+    for blk in &model.blocks {
+        write_tensor(&mut w, &blk.attn_norm)?;
+        write_tensor(&mut w, &blk.ffn_norm)?;
+        for layer in block_layers(blk) {
+            write_layer(&mut w, layer)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a [`PackedModel`] saved by [`save_packed`]: `repro serve` boots
+/// straight from the 2-bit payload, no f32 weights or re-quantization.
+pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).map_err(|e| Error::io(format!("{}: {e}", path.display())))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != PACK_MAGIC {
+        return Err(Error::io(format!("{}: not a packed-model checkpoint", path.display())));
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != PACK_VERSION {
+        return Err(Error::io(format!("unsupported packed checkpoint version {ver}")));
+    }
+    let name_bytes = read_bytes(&mut r, "config name")?;
+    let name = String::from_utf8(name_bytes)
+        .map_err(|e| Error::io(format!("bad config name utf8: {e}")))?;
+    let cfg = ModelConfig::by_name(&name)?;
+    let bits = read_u32(&mut r)?;
+    let group = read_len(&mut r, "group")?;
+    let spec = QuantSpec::new(bits, group);
+    let embed = read_tensor(&mut r)?;
+    let final_norm = read_tensor(&mut r)?;
+    let lm_head = read_tensor(&mut r)?;
+    let n_blocks = read_u32(&mut r)? as usize;
+    if n_blocks != cfg.n_layers {
+        return Err(Error::io(format!(
+            "packed checkpoint: {n_blocks} blocks but config '{name}' has {}",
+            cfg.n_layers
+        )));
+    }
+    if embed.shape() != [cfg.vocab, cfg.d_model]
+        || lm_head.shape() != [cfg.d_model, cfg.vocab]
+        || final_norm.len() != cfg.d_model
+    {
+        return Err(Error::io(
+            "packed checkpoint: embed/lm_head/final_norm shape mismatch".to_string(),
+        ));
+    }
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for b in 0..n_blocks {
+        let attn_norm = read_tensor(&mut r)?;
+        let ffn_norm = read_tensor(&mut r)?;
+        if attn_norm.len() != cfg.d_model || ffn_norm.len() != cfg.d_model {
+            return Err(Error::io(format!(
+                "packed checkpoint: block {b} norm length != d_model {}",
+                cfg.d_model
+            )));
+        }
+        let wq = read_layer(&mut r)?;
+        let wk = read_layer(&mut r)?;
+        let wv = read_layer(&mut r)?;
+        let wo = read_layer(&mut r)?;
+        let wgate = read_layer(&mut r)?;
+        let wup = read_layer(&mut r)?;
+        let wdown = read_layer(&mut r)?;
+        let block = PackedBlock { attn_norm, ffn_norm, wq, wk, wv, wo, wgate, wup, wdown };
+        for (lay, (want_in, want_out)) in [
+            (&block.wq, (cfg.d_model, cfg.d_model)),
+            (&block.wk, (cfg.d_model, cfg.d_model)),
+            (&block.wv, (cfg.d_model, cfg.d_model)),
+            (&block.wo, (cfg.d_model, cfg.d_model)),
+            (&block.wgate, (cfg.d_model, cfg.d_ffn)),
+            (&block.wup, (cfg.d_model, cfg.d_ffn)),
+            (&block.wdown, (cfg.d_ffn, cfg.d_model)),
+        ] {
+            let (d_in, d_out) = match &lay.weight {
+                LayerWeight::Packed(pl) => (pl.d_in, pl.d_out),
+                LayerWeight::Dense(t) if t.rank() == 2 => (t.rows(), t.cols()),
+                LayerWeight::Dense(_) => (0, 0),
+            };
+            if (d_in, d_out) != (want_in, want_out) {
+                return Err(Error::io(format!(
+                    "packed checkpoint: block {b} linear is {d_in}x{d_out}, \
+                     config '{name}' wants {want_in}x{want_out}"
+                )));
+            }
+            if let Some(ad) = &lay.adapter {
+                let rank_ok = ad.a.rank() == 2
+                    && ad.b_t.rank() == 2
+                    && ad.a.rows() == want_in
+                    && ad.b_t.cols() == want_out
+                    && ad.a.cols() == ad.b_t.rows();
+                let cs_ok = ad.col_scale.as_ref().map(|c| c.len() == want_out).unwrap_or(true);
+                if !rank_ok || !cs_ok {
+                    return Err(Error::io(format!(
+                        "packed checkpoint: block {b} adapter shape mismatch"
+                    )));
+                }
+            }
+        }
+        blocks.push(block);
+    }
+    Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +472,26 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(load("/definitely/not/here.ckpt").is_err());
+    }
+
+    #[test]
+    fn packed_loader_rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("apiq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("not_packed.apq");
+        // a valid ParamStore checkpoint is NOT a packed-model checkpoint
+        let mut rng = Rng::new(2);
+        let mut ps = ParamStore::new();
+        ps.insert("x", Tensor::randn(&[2, 2], 1.0, &mut rng));
+        save(&ps, &path).unwrap();
+        assert!(load_packed(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        assert!(load_packed("/definitely/not/here.apq").is_err());
+    }
+
+    #[test]
+    fn packed_path_is_stable() {
+        let p = packed_path("tiny", "rtn", 2, 64);
+        assert_eq!(p, Path::new("checkpoints").join("packed_tiny_rtn_2b_g64.apq"));
     }
 }

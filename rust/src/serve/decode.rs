@@ -1,0 +1,395 @@
+//! KV-cached incremental decoding: O(T) per emitted token.
+//!
+//! Two entry points on [`PackedModel`]:
+//!
+//! * [`PackedModel::forward_chunk`] — run the next `t` positions of ONE
+//!   sequence (prefill, or any later chunk), appending post-RoPE K/V to
+//!   its [`KvCache`] and returning the chunk's logits `(t, vocab)`.
+//! * [`PackedModel::forward_step`] — one decode step for a BATCH of
+//!   independent sequences: the newest token of each sequence goes
+//!   through the linears together (one batched GEMM per projection —
+//!   the continuous-batching win), then attention runs per sequence
+//!   against its own cache.  Returns next-token logits `(b, vocab)`.
+//!
+//! Both reproduce `PackedModel::logits` bit for bit: every per-position
+//! operation (embed, RMSNorm, linears, RoPE, SwiGLU) is row-independent
+//! in the full forward, and attention here accumulates over cache rows in
+//! the same ascending-position order with the same running-max softmax,
+//! so cached logits — and therefore greedy token streams — are identical
+//! to full-prefix recompute.  `tests/serve.rs` pins this down.
+//!
+//! [`generate`] is the batched decode loop built on top (greedy or
+//! seeded sampling); [`generate_recompute`] keeps PR 1's full-prefix
+//! recompute alive as the equivalence reference and benchmark baseline.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::infer::{
+    apply_rope, argmax, rmsnorm_rows, GenReport, PackedBlock, PackedModel, RopeTables,
+};
+use crate::serve::kv::KvCache;
+use crate::serve::sampling::{sample, seq_rng, SamplingParams};
+use crate::tensor::{IntTensor, Rng, Tensor};
+
+impl PackedModel {
+    /// Embed a flat token slice into (n, d), with the same out-of-vocab
+    /// clamp as `PackedModel::logits`.
+    fn embed_rows(&self, tokens: &[i32]) -> Tensor {
+        let d = self.cfg.d_model;
+        let vocab = self.cfg.vocab;
+        let mut x = Tensor::zeros(&[tokens.len(), d]);
+        let xd = x.data_mut();
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = (tok.max(0) as usize).min(vocab - 1);
+            xd[i * d..(i + 1) * d].copy_from_slice(self.embed.row(tok));
+        }
+        x
+    }
+
+    /// Final norm + LM head over hidden states (n, d) -> logits (n, vocab).
+    fn head(&self, mut x: Tensor) -> Result<Tensor> {
+        rmsnorm_rows(x.data_mut(), self.cfg.d_model, self.final_norm.data());
+        x.matmul(&self.lm_head)
+    }
+
+    /// Forward the next `t` positions of ONE sequence, appending K/V for
+    /// every layer to `cache` and committing `t` positions on success.
+    /// With an empty cache this is prefill; with a warm cache it extends
+    /// the sequence.  Returns the chunk logits `(t, vocab)`.
+    pub fn forward_chunk(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Tensor> {
+        let t = tokens.len();
+        if t == 0 {
+            return Err(Error::shape("forward_chunk: empty token chunk"));
+        }
+        cache.check_shape(self.cfg.n_layers, self.cfg.d_model)?;
+        if cache.remaining() < t {
+            return Err(Error::shape(format!(
+                "forward_chunk: {} cached + {t} new > capacity {}",
+                cache.len(),
+                cache.capacity()
+            )));
+        }
+        let hd = self.cfg.d_model / self.cfg.n_heads;
+        let p0 = cache.len();
+        let rope = RopeTables::with_offset(p0, t, hd);
+        let mut x = self.embed_rows(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            x = block_forward_chunk(block, self, &x, t, p0, &rope, cache, li)?;
+        }
+        cache.advance(t);
+        self.head(x)
+    }
+
+    /// One decode step for a batch of independent sequences: `tokens[i]`
+    /// is the newest token of sequence `i`, `caches[i]` its KV cache
+    /// (positions may differ per sequence — that is what lets the
+    /// continuous-batching scheduler mix mid-flight requests).  Appends
+    /// one position to every cache and returns logits `(b, vocab)`.
+    pub fn forward_step(&self, tokens: &[i32], caches: &mut [&mut KvCache]) -> Result<Tensor> {
+        let b = tokens.len();
+        if b == 0 || b != caches.len() {
+            return Err(Error::shape(format!(
+                "forward_step: {b} tokens vs {} caches",
+                caches.len()
+            )));
+        }
+        let d = self.cfg.d_model;
+        let hd = d / self.cfg.n_heads;
+        for c in caches.iter() {
+            c.check_shape(self.cfg.n_layers, d)?;
+            if c.remaining() < 1 {
+                return Err(Error::shape("forward_step: a sequence's KV cache is full"));
+            }
+        }
+        // One single-position RoPE table per sequence (positions differ),
+        // shared across layers.
+        let ropes: Vec<RopeTables> = caches
+            .iter()
+            .map(|c| RopeTables::with_offset(c.len(), 1, hd))
+            .collect();
+        let mut x = self.embed_rows(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            x = block_forward_step(block, self, &x, &ropes, caches, li)?;
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        self.head(x)
+    }
+}
+
+/// Causal attention of `t` chunk queries (one sequence) against cache
+/// rows `[0, p0 + t)` — chunk K/V must already be written to the cache.
+/// Accumulates into `ctx` (t, d) in ascending key-position order with the
+/// same running-max softmax as the full forward.  `probs` is caller-owned
+/// scratch (resized here) so the batched decode hot path does not heap-
+/// allocate per sequence per layer.
+#[allow(clippy::too_many_arguments)]
+fn attend_chunk(
+    qd: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    ctx: &mut [f32],
+    t: usize,
+    p0: usize,
+    h: usize,
+    hd: usize,
+    probs: &mut Vec<f32>,
+) {
+    let d = h * hd;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    probs.resize(p0 + t, 0.0);
+    for head in 0..h {
+        let off = head * hd;
+        for tq in 0..t {
+            let klen = p0 + tq + 1;
+            let qrow = &qd[tq * d + off..tq * d + off + hd];
+            let mut mx = f32::NEG_INFINITY;
+            for (tk, p) in probs.iter_mut().enumerate().take(klen) {
+                let krow = &kc[tk * d + off..tk * d + off + hd];
+                let mut s = 0.0f32;
+                for j in 0..hd {
+                    s += qrow[j] * krow[j];
+                }
+                let s = s * inv_sqrt;
+                *p = s;
+                mx = mx.max(s);
+            }
+            let mut denom = 0.0f32;
+            for p in probs.iter_mut().take(klen) {
+                *p = (*p - mx).exp();
+                denom += *p;
+            }
+            let inv = 1.0 / denom;
+            let c0 = tq * d + off;
+            for (tk, &p) in probs.iter().enumerate().take(klen) {
+                let pw = p * inv;
+                let vrow = &vc[tk * d + off..tk * d + off + hd];
+                let crow = &mut ctx[c0..c0 + hd];
+                for j in 0..hd {
+                    crow[j] += pw * vrow[j];
+                }
+            }
+        }
+    }
+}
+
+/// SwiGLU FFN branch shared by chunk and step paths: x1 + Wdown(silu(Wgate(norm(x1))) * Wup(norm(x1))).
+fn ffn_branch(block: &PackedBlock, d: usize, x1: &Tensor) -> Result<Tensor> {
+    let mut ffn_in = x1.clone();
+    rmsnorm_rows(ffn_in.data_mut(), d, block.ffn_norm.data());
+    let mut hidden = block.wgate.forward(&ffn_in)?;
+    let up = block.wup.forward(&ffn_in)?;
+    for (g, &u) in hidden.data_mut().iter_mut().zip(up.data()) {
+        let gv = *g;
+        *g = gv / (1.0 + (-gv).exp()) * u; // silu(gate) * up
+    }
+    let ffn_out = block.wdown.forward(&hidden)?;
+    x1.add(&ffn_out)
+}
+
+/// One block over a single sequence's chunk x (t, d), reading/writing
+/// layer `li` of `cache` (chunk K/V rows land at positions p0..p0+t).
+#[allow(clippy::too_many_arguments)]
+fn block_forward_chunk(
+    block: &PackedBlock,
+    model: &PackedModel,
+    x: &Tensor,
+    t: usize,
+    p0: usize,
+    rope: &RopeTables,
+    cache: &mut KvCache,
+    li: usize,
+) -> Result<Tensor> {
+    let d = model.cfg.d_model;
+    let h = model.cfg.n_heads;
+    let hd = d / h;
+
+    // -- attention branch --
+    let mut attn_in = x.clone();
+    rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
+    let mut q = block.wq.forward(&attn_in)?;
+    let mut k = block.wk.forward(&attn_in)?;
+    let v = block.wv.forward(&attn_in)?;
+    apply_rope(q.data_mut(), 1, t, h, hd, rope);
+    apply_rope(k.data_mut(), 1, t, h, hd, rope);
+    cache.write_rows(li, k.data(), v.data())?;
+
+    let mut ctx = Tensor::zeros(&[t, d]);
+    let mut probs = Vec::new();
+    attend_chunk(
+        q.data(),
+        cache.keys(li, p0 + t),
+        cache.values(li, p0 + t),
+        ctx.data_mut(),
+        t,
+        p0,
+        h,
+        hd,
+        &mut probs,
+    );
+    let attn_out = block.wo.forward(&ctx)?;
+    let x1 = x.add(&attn_out)?;
+
+    ffn_branch(block, d, &x1)
+}
+
+/// One block over a batch of single newest positions x (b, d): linears
+/// run batched, attention per sequence against its own cache.
+fn block_forward_step(
+    block: &PackedBlock,
+    model: &PackedModel,
+    x: &Tensor,
+    ropes: &[RopeTables],
+    caches: &mut [&mut KvCache],
+    li: usize,
+) -> Result<Tensor> {
+    let d = model.cfg.d_model;
+    let h = model.cfg.n_heads;
+    let hd = d / h;
+    let b = x.rows();
+
+    // -- attention branch (projections batched across sequences) --
+    let mut attn_in = x.clone();
+    rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
+    let mut q = block.wq.forward(&attn_in)?;
+    let mut k = block.wk.forward(&attn_in)?;
+    let v = block.wv.forward(&attn_in)?;
+    for bi in 0..b {
+        apply_rope(&mut q.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
+        apply_rope(&mut k.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
+        let krow = &k.data()[bi * d..(bi + 1) * d];
+        let vrow = &v.data()[bi * d..(bi + 1) * d];
+        caches[bi].write_rows(li, krow, vrow)?;
+    }
+
+    let mut ctx = Tensor::zeros(&[b, d]);
+    {
+        let cd = ctx.data_mut();
+        let qd = q.data();
+        let mut probs = Vec::new();
+        for (bi, cache) in caches.iter().enumerate() {
+            let klen = cache.len() + 1; // cached prefix + the row just written
+            attend_chunk(
+                &qd[bi * d..(bi + 1) * d],
+                cache.keys(li, klen),
+                cache.values(li, klen),
+                &mut cd[bi * d..(bi + 1) * d],
+                1,
+                klen - 1,
+                h,
+                hd,
+                &mut probs,
+            );
+        }
+    }
+    let attn_out = block.wo.forward(&ctx)?;
+    let x1 = x.add(&attn_out)?;
+
+    ffn_branch(block, d, &x1)
+}
+
+/// Pick the next token from a logits row: seeded sampling when params and
+/// an rng stream are present, greedy argmax otherwise.  Shared with the
+/// scheduler so batched serving picks tokens exactly like `generate`.
+pub(crate) fn pick(row: &[f32], sampling: Option<&SamplingParams>, rng: Option<&mut Rng>) -> i32 {
+    match (sampling, rng) {
+        (Some(p), Some(r)) => sample(row, p, r) as i32,
+        _ => argmax(row) as i32,
+    }
+}
+
+fn check_prompt(prompt: &IntTensor) -> Result<(usize, usize)> {
+    if prompt.shape().len() != 2 || prompt.shape()[0] == 0 || prompt.shape()[1] == 0 {
+        return Err(Error::shape("generate wants a non-empty (B, T0) prompt"));
+    }
+    Ok((prompt.shape()[0], prompt.shape()[1]))
+}
+
+/// Batched KV-cached decoding: extend `prompt` (B, T0) by `max_new`
+/// tokens — greedy argmax when `sampling` is `None`, seeded
+/// temperature/top-k/top-p sampling otherwise (sequence `i` draws from
+/// the independent stream `seq_rng(params.seed, i)`, so runs are
+/// reproducible and batch order doesn't leak between sequences).
+pub fn generate(
+    model: &PackedModel,
+    prompt: &IntTensor,
+    max_new: usize,
+    sampling: Option<&SamplingParams>,
+) -> Result<GenReport> {
+    let (b, t0) = check_prompt(prompt)?;
+    let cfg = &model.cfg;
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|i| prompt.data()[i * t0..(i + 1) * t0].to_vec())
+        .collect();
+    let mut rngs: Vec<Option<Rng>> = (0..b)
+        .map(|i| sampling.map(|p| seq_rng(p.seed, i)))
+        .collect();
+    let start = Instant::now();
+    if max_new > 0 {
+        let mut caches: Vec<KvCache> = (0..b)
+            .map(|_| KvCache::new(cfg.n_layers, cfg.d_model, t0 + max_new))
+            .collect();
+        // prefill each sequence and emit its first token
+        for (bi, row) in rows.iter_mut().enumerate() {
+            let logits = model.forward_chunk(&row[..], &mut caches[bi])?;
+            let tok = pick(logits.row(t0 - 1), sampling, rngs[bi].as_mut());
+            row.push(tok);
+        }
+        // incremental steps: only the newest token column is materialized
+        for _ in 1..max_new {
+            let newest: Vec<i32> = rows.iter().map(|r| *r.last().unwrap()).collect();
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let logits = model.forward_step(&newest, &mut refs)?;
+            for (bi, row) in rows.iter_mut().enumerate() {
+                let tok = pick(logits.row(bi), sampling, rngs[bi].as_mut());
+                row.push(tok);
+            }
+        }
+    }
+    Ok(GenReport {
+        tokens: rows,
+        prompt_len: t0,
+        new_tokens: max_new,
+        wall_secs: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// PR 1's full-prefix recompute decode (O(T^2)), kept as the equivalence
+/// reference for the cached path and as the benchmark baseline.  Consumes
+/// the same per-sequence rng streams as [`generate`], so seeded sampling
+/// runs are comparable token for token.
+pub fn generate_recompute(
+    model: &PackedModel,
+    prompt: &IntTensor,
+    max_new: usize,
+    sampling: Option<&SamplingParams>,
+) -> Result<GenReport> {
+    let (b, t0) = check_prompt(prompt)?;
+    let vocab = model.cfg.vocab;
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|i| prompt.data()[i * t0..(i + 1) * t0].to_vec())
+        .collect();
+    let mut rngs: Vec<Option<Rng>> = (0..b)
+        .map(|i| sampling.map(|p| seq_rng(p.seed, i)))
+        .collect();
+    let start = Instant::now();
+    for _ in 0..max_new {
+        let cur = rows[0].len();
+        let flat: Vec<i32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        let toks = IntTensor::new(vec![b, cur], flat)?;
+        let logits = model.logits(&toks)?;
+        let data = logits.data();
+        for (bi, row) in rows.iter_mut().enumerate() {
+            let last = &data[(bi * cur + cur - 1) * vocab..(bi * cur + cur) * vocab];
+            row.push(pick(last, sampling, rngs[bi].as_mut()));
+        }
+    }
+    Ok(GenReport {
+        tokens: rows,
+        prompt_len: t0,
+        new_tokens: max_new,
+        wall_secs: start.elapsed().as_secs_f64(),
+    })
+}

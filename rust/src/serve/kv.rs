@@ -1,0 +1,232 @@
+//! Per-sequence KV caches for incremental decoding.
+//!
+//! A [`KvCache`] holds one sequence's post-RoPE keys and values for every
+//! transformer layer in two pre-allocated flat buffers (layer-major,
+//! position-minor), sized once at admission to `prompt_len + max_new` so
+//! the decode loop never reallocates.  Caches are recycled through a
+//! [`KvPool`] — a ring of retired buffers the continuous-batching
+//! scheduler draws from when it admits a new request, so steady-state
+//! serving does no per-request K/V allocation at all.
+
+use crate::error::{Error, Result};
+
+/// Pre-allocated K/V storage for ONE sequence across ALL layers.
+///
+/// Layout: `k[(layer * cap + pos) * d .. +d]` is the key row of `pos`
+/// within `layer` (same for `v`).  `len` counts *completed* positions and
+/// is shared by all layers: during one forward pass each layer writes its
+/// rows at `len..len + t` via [`KvCache::write_rows`], and the caller
+/// advances `len` once with [`KvCache::advance`] after the last layer.
+pub struct KvCache {
+    n_layers: usize,
+    d: usize,
+    cap: usize,
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, d: usize, cap: usize) -> Self {
+        KvCache {
+            n_layers,
+            d,
+            cap,
+            len: 0,
+            k: vec![0.0; n_layers * cap * d],
+            v: vec![0.0; n_layers * cap * d],
+        }
+    }
+
+    /// Completed positions (the attention span of the next decode step).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache can hold.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Positions still writable.
+    pub fn remaining(&self) -> usize {
+        self.cap - self.len
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rewind to empty (buffers are reused, not zeroed — every readable
+    /// row is always written first).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes resident in this cache's buffers.
+    pub fn resident_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Check this cache was allocated for `model`-shaped K/V rows.
+    pub fn check_shape(&self, n_layers: usize, d: usize) -> Result<()> {
+        if self.n_layers != n_layers || self.d != d {
+            return Err(Error::shape(format!(
+                "KvCache built for {} layers x d {}, model wants {} x {}",
+                self.n_layers, self.d, n_layers, d
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write `t = krows.len() / d` new K/V rows of `layer` at positions
+    /// `len..len + t`.  Does NOT advance `len` (all layers write the same
+    /// positions during one pass).
+    pub fn write_rows(&mut self, layer: usize, krows: &[f32], vrows: &[f32]) -> Result<()> {
+        debug_assert_eq!(krows.len(), vrows.len());
+        debug_assert!(layer < self.n_layers);
+        let t = krows.len() / self.d;
+        if self.len + t > self.cap {
+            return Err(Error::shape(format!(
+                "KvCache overflow: {} + {t} rows > capacity {}",
+                self.len, self.cap
+            )));
+        }
+        let off = (layer * self.cap + self.len) * self.d;
+        self.k[off..off + krows.len()].copy_from_slice(krows);
+        self.v[off..off + vrows.len()].copy_from_slice(vrows);
+        Ok(())
+    }
+
+    /// Key rows `[0, upto)` of `layer`, contiguous row-major (upto, d).
+    pub fn keys(&self, layer: usize, upto: usize) -> &[f32] {
+        let off = layer * self.cap * self.d;
+        &self.k[off..off + upto * self.d]
+    }
+
+    /// Value rows `[0, upto)` of `layer`, contiguous row-major (upto, d).
+    pub fn values(&self, layer: usize, upto: usize) -> &[f32] {
+        let off = layer * self.cap * self.d;
+        &self.v[off..off + upto * self.d]
+    }
+
+    /// Commit `t` freshly written positions.
+    pub fn advance(&mut self, t: usize) {
+        debug_assert!(self.len + t <= self.cap);
+        self.len += t;
+    }
+}
+
+/// Retired caches the pool keeps around (bounds worst-case idle memory).
+const POOL_KEEP: usize = 32;
+
+/// Recycling ring of [`KvCache`]s for one model shape.
+pub struct KvPool {
+    n_layers: usize,
+    d: usize,
+    free: Vec<KvCache>,
+}
+
+impl KvPool {
+    pub fn new(n_layers: usize, d: usize) -> Self {
+        KvPool { n_layers, d, free: Vec::new() }
+    }
+
+    /// Take a cache with capacity >= `cap`, reusing a retired buffer when
+    /// one is big enough, else allocating fresh.
+    pub fn take(&mut self, cap: usize) -> KvCache {
+        if let Some(i) = self.free.iter().position(|c| c.capacity() >= cap) {
+            let mut c = self.free.swap_remove(i);
+            c.reset();
+            return c;
+        }
+        KvCache::new(self.n_layers, self.d, cap)
+    }
+
+    /// Return a cache to the ring.
+    pub fn give(&mut self, cache: KvCache) {
+        if self.free.len() < POOL_KEEP {
+            self.free.push(cache);
+        }
+    }
+
+    /// Retired caches currently held.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_advance() {
+        let (layers, d, cap) = (2usize, 4usize, 3usize);
+        let mut c = KvCache::new(layers, d, cap);
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.remaining(), 3);
+
+        // two positions at once, both layers, then advance
+        let k0: Vec<f32> = (0..2 * d).map(|i| i as f32).collect();
+        let v0: Vec<f32> = (0..2 * d).map(|i| 10.0 + i as f32).collect();
+        c.write_rows(0, &k0, &v0).unwrap();
+        let k1: Vec<f32> = (0..2 * d).map(|i| 100.0 + i as f32).collect();
+        c.write_rows(1, &k1, &v0).unwrap();
+        c.advance(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.keys(0, 2), &k0[..]);
+        assert_eq!(c.values(0, 2), &v0[..]);
+        assert_eq!(c.keys(1, 2), &k1[..]);
+
+        // one more position lands after the first two
+        let k2: Vec<f32> = (0..d).map(|i| 200.0 + i as f32).collect();
+        c.write_rows(0, &k2, &k2).unwrap();
+        c.advance(1);
+        assert_eq!(c.len(), 3);
+        assert_eq!(&c.keys(0, 3)[2 * d..], &k2[..]);
+        assert_eq!(c.remaining(), 0);
+
+        // overflow is an error, not a panic
+        assert!(c.write_rows(0, &k2, &k2).is_err());
+    }
+
+    #[test]
+    fn shape_check() {
+        let c = KvCache::new(2, 4, 3);
+        assert!(c.check_shape(2, 4).is_ok());
+        assert!(c.check_shape(3, 4).is_err());
+        assert!(c.check_shape(2, 8).is_err());
+    }
+
+    #[test]
+    fn pool_recycles_big_enough_buffers() {
+        let mut pool = KvPool::new(2, 4);
+        let mut a = pool.take(8);
+        a.write_rows(0, &[1.0; 4], &[2.0; 4]).unwrap();
+        a.advance(1);
+        pool.give(a);
+        assert_eq!(pool.idle(), 1);
+
+        // smaller request reuses the retired buffer, reset to empty
+        let b = pool.take(4);
+        assert_eq!(b.capacity(), 8);
+        assert!(b.is_empty());
+        assert_eq!(pool.idle(), 0);
+
+        // bigger request allocates fresh
+        pool.give(b);
+        let c = pool.take(16);
+        assert_eq!(c.capacity(), 16);
+        assert_eq!(pool.idle(), 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! `repro bench-serve`: a concurrent load generator for the line
+//! protocol.
+//!
+//! Spawns `clients` threads, each holding one connection and issuing
+//! `requests_per_client` streaming requests back to back; records
+//! time-to-first-token and total latency per request against a shared
+//! epoch, validates the streamed frames (in-order `index`es, `done`
+//! token count matching the stream), and reports throughput plus latency
+//! percentiles and the peak number of concurrently streaming requests —
+//! the observable proof that continuous batching interleaves mid-flight
+//! admissions.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::metrics::latency::LatencySummary;
+use crate::serve::json::Json;
+use crate::tensor::Rng;
+
+/// Load shape for one `bench-serve` run.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    pub addr: String,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// Prompts draw uniform tokens from [0, vocab).
+    pub vocab: usize,
+    /// 0 = greedy; otherwise seeded sampling at this temperature.
+    pub temperature: f32,
+    pub seed: u64,
+    /// Send `{"cmd":"shutdown"}` after the run (CI teardown).
+    pub shutdown_after: bool,
+}
+
+/// Per-request observation (offsets from the run epoch, seconds).
+#[derive(Clone, Copy, Debug)]
+struct ReqRecord {
+    sent_at: f64,
+    first_token_at: f64,
+    done_at: f64,
+    n_tokens: usize,
+}
+
+/// Aggregated results of one load run.
+pub struct LoadReport {
+    pub requests: usize,
+    pub completed: usize,
+    pub total_tokens: usize,
+    pub wall_secs: f64,
+    pub ttft: LatencySummary,
+    pub total: LatencySummary,
+    /// Peak number of requests simultaneously between first token and
+    /// done — >= 2 demonstrates interleaved (continuously batched)
+    /// streams.
+    pub peak_concurrent_streams: usize,
+}
+
+impl LoadReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / self.wall_secs
+    }
+}
+
+fn run_client(
+    addr: &str,
+    client: usize,
+    o: &LoadOptions,
+    epoch: Instant,
+) -> Result<Vec<ReqRecord>> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::io(format!("connect {addr}: {e}")))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| Error::io(format!("clone socket: {e}")))?;
+    let mut reader = BufReader::new(stream);
+    let mut rng = Rng::new(o.seed ^ (client as u64).wrapping_mul(0xA5A5_A5A5_A5A5_A5A5).max(1));
+    let mut records = Vec::with_capacity(o.requests_per_client);
+
+    for ri in 0..o.requests_per_client {
+        let id = format!("c{client}-r{ri}");
+        let prompt: Vec<String> =
+            (0..o.prompt_len).map(|_| rng.below(o.vocab).to_string()).collect();
+        let sampling = if o.temperature > 0.0 {
+            format!(
+                ",\"temperature\":{},\"seed\":{}",
+                o.temperature,
+                o.seed ^ (client * 1000 + ri) as u64
+            )
+        } else {
+            String::new()
+        };
+        let line = format!(
+            "{{\"id\":\"{id}\",\"prompt\":[{}],\"max_new\":{}{sampling}}}\n",
+            prompt.join(","),
+            o.max_new
+        );
+        let sent_at = epoch.elapsed().as_secs_f64();
+        writer
+            .write_all(line.as_bytes())
+            .map_err(|e| Error::io(format!("send request: {e}")))?;
+
+        let mut first_token_at = None;
+        let mut streamed = 0usize;
+        let mut next_index = 0usize;
+        let record = loop {
+            let mut resp = String::new();
+            let n = reader
+                .read_line(&mut resp)
+                .map_err(|e| Error::io(format!("read frame: {e}")))?;
+            if n == 0 {
+                return Err(Error::io("server closed connection mid-stream"));
+            }
+            let j = Json::parse(resp.trim())?;
+            if j.get("id").and_then(Json::as_str) != Some(id.as_str()) {
+                // engine-level failures are broadcast with an empty id;
+                // surface the message instead of a routing error
+                if j.get("event").and_then(Json::as_str) == Some("error") {
+                    let msg = j.get("message").and_then(Json::as_str).unwrap_or("?");
+                    return Err(Error::config(format!("server error: {msg}")));
+                }
+                return Err(Error::config(format!("frame for unexpected id: {resp}")));
+            }
+            match j.get("event").and_then(Json::as_str) {
+                Some("token") => {
+                    let idx = j.get("index").and_then(Json::as_i64).unwrap_or(-1);
+                    if idx != next_index as i64 {
+                        return Err(Error::config(format!(
+                            "{id}: out-of-order token index {idx}, want {next_index}"
+                        )));
+                    }
+                    next_index += 1;
+                    streamed += 1;
+                    if first_token_at.is_none() {
+                        first_token_at = Some(epoch.elapsed().as_secs_f64());
+                    }
+                }
+                Some("done") => {
+                    let toks = j.get("tokens").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+                    if toks != streamed {
+                        return Err(Error::config(format!(
+                            "{id}: done carries {toks} tokens but {streamed} were streamed"
+                        )));
+                    }
+                    break ReqRecord {
+                        sent_at,
+                        first_token_at: first_token_at.unwrap_or(sent_at),
+                        done_at: epoch.elapsed().as_secs_f64(),
+                        n_tokens: streamed,
+                    };
+                }
+                Some("error") => {
+                    let msg = j.get("message").and_then(Json::as_str).unwrap_or("?");
+                    return Err(Error::config(format!("{id}: server error: {msg}")));
+                }
+                _ => return Err(Error::config(format!("unknown frame: {resp}"))),
+            }
+        };
+        records.push(record);
+    }
+
+    Ok(records)
+}
+
+/// Peak number of intervals `[first_token, done)` that overlap.
+fn peak_overlap(records: &[ReqRecord]) -> usize {
+    let mut edges: Vec<(f64, i32)> = Vec::with_capacity(records.len() * 2);
+    for r in records {
+        edges.push((r.first_token_at, 1));
+        edges.push((r.done_at, -1));
+    }
+    // ends sort before starts at the same instant (half-open intervals)
+    edges.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut cur = 0i32;
+    let mut peak = 0i32;
+    for (_, d) in edges {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak.max(0) as usize
+}
+
+/// Fire the load and gather the report.  Fails if any client errors or
+/// any stream is left incomplete.
+pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
+    if o.clients == 0 || o.requests_per_client == 0 {
+        return Err(Error::config("bench-serve wants clients >= 1 and requests >= 1"));
+    }
+    let epoch = Instant::now();
+    let results: Vec<Result<Vec<ReqRecord>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..o.clients)
+            .map(|ci| s.spawn(move || run_client(&o.addr, ci, o, epoch)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(Error::io("load client thread panicked")),
+            })
+            .collect()
+    });
+    let wall_secs = epoch.elapsed().as_secs_f64();
+
+    if o.shutdown_after {
+        // After every client is done: a throwaway connection that only
+        // asks the server to stop.
+        if let Ok(mut s) = TcpStream::connect(&o.addr) {
+            let _ = s.write_all(b"{\"cmd\":\"shutdown\"}\n");
+        }
+    }
+
+    let mut records = Vec::new();
+    for r in results {
+        records.extend(r?);
+    }
+    let requests = o.clients * o.requests_per_client;
+    let total_tokens: usize = records.iter().map(|r| r.n_tokens).sum();
+    let ttft: Vec<f64> = records.iter().map(|r| r.first_token_at - r.sent_at).collect();
+    let total: Vec<f64> = records.iter().map(|r| r.done_at - r.sent_at).collect();
+    Ok(LoadReport {
+        requests,
+        completed: records.len(),
+        total_tokens,
+        wall_secs,
+        ttft: LatencySummary::from_secs(ttft),
+        total: LatencySummary::from_secs(total),
+        peak_concurrent_streams: peak_overlap(&records),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_counts_concurrent_intervals() {
+        let r = |a: f64, b: f64| ReqRecord {
+            sent_at: a,
+            first_token_at: a,
+            done_at: b,
+            n_tokens: 1,
+        };
+        // three overlapping, one disjoint
+        let recs = vec![r(0.0, 1.0), r(0.2, 0.8), r(0.5, 1.5), r(2.0, 3.0)];
+        assert_eq!(peak_overlap(&recs), 3);
+        // back-to-back half-open intervals never overlap
+        let recs = vec![r(0.0, 1.0), r(1.0, 2.0)];
+        assert_eq!(peak_overlap(&recs), 1);
+        assert_eq!(peak_overlap(&[]), 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! The serving subsystem: KV-cached incremental decoding behind a
+//! continuous-batching token server.
+//!
+//! Built on `infer`'s packed-weight engine, this module turns the
+//! O(T^2) per-token decode of PR 1 into a production-shaped loop:
+//!
+//! * [`kv`] — pre-allocated per-sequence K/V buffers ([`KvCache`]) and a
+//!   recycling [`KvPool`].
+//! * [`decode`] — `PackedModel::forward_chunk` (prefill) and
+//!   `PackedModel::forward_step` (one batched decode step), plus
+//!   [`decode::generate`] / [`decode::generate_recompute`] — the cached
+//!   path is bit-identical to full-prefix recompute.
+//! * [`sampling`] — seeded temperature / top-k / top-p next to greedy.
+//! * [`scheduler`] — step-granular continuous batching with per-request
+//!   stats.
+//! * [`json`] / [`protocol`] — the newline-delimited JSON line protocol.
+//! * [`server`] — the long-lived `repro serve` TCP loop (std threads +
+//!   channels).
+//! * [`loadgen`] — the `repro bench-serve` concurrent load generator.
+
+pub mod decode;
+pub mod json;
+pub mod kv;
+pub mod loadgen;
+pub mod protocol;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+
+pub use kv::{KvCache, KvPool};
+pub use sampling::SamplingParams;
+pub use scheduler::{FinishReason, GenRequest, RequestStats, SchedConfig, Scheduler, StepEvent};
+pub use server::{ServeOptions, Server};

@@ -1,0 +1,270 @@
+//! The `repro serve` wire protocol: newline-delimited JSON over TCP.
+//!
+//! ## Requests (client -> server, one JSON object per line)
+//!
+//! ```json
+//! {"id":"r1","prompt":[5,17,3],"max_new":32}
+//! {"id":"r2","prompt":[5],"max_new":16,"temperature":0.8,"top_k":40,"top_p":0.95,"seed":7}
+//! {"id":"r3","prompt":[5],"max_new":16,"stop":0}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! `id` is any client-chosen string echoed in every frame; `prompt` is a
+//! token-id array; `max_new` defaults to 32.  Omitting `temperature` (or
+//! setting it `<= 0`) selects greedy decoding; otherwise temperature /
+//! top-k / top-p / seed configure the seeded sampler.  `stop` ends the
+//! stream early when that token is produced.
+//!
+//! ## Frames (server -> client, one JSON object per line)
+//!
+//! ```json
+//! {"id":"r1","event":"token","index":0,"token":42}
+//! {"id":"r1","event":"done","finish":"length","prompt_len":3,"tokens":[42,7],
+//!  "stats":{"queue_ms":0.1,"prefill_ms":3.2,"total_ms":40.5,"tokens_per_sec":790.1,
+//!           "max_gap_ms":2.0}}
+//! {"id":"r1","event":"error","message":"..."}
+//! ```
+//!
+//! Tokens stream as they are produced (`index` counts generated tokens
+//! from 0); `done.tokens` holds only the generated suffix.  Multiple
+//! requests may be in flight on one connection; frames interleave and are
+//! routed by `id`.
+
+use crate::error::{Error, Result};
+use crate::serve::json::Json;
+use crate::serve::sampling::SamplingParams;
+use crate::serve::scheduler::{RequestStats, StepEvent};
+
+/// Default `max_new` when a request omits it.
+pub const DEFAULT_MAX_NEW: usize = 32;
+
+/// A parsed request line, before engine admission.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub id: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sampling: Option<SamplingParams>,
+    pub stop: Option<i32>,
+}
+
+/// One line of client input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientLine {
+    Request(WireRequest),
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse_line(line: &str) -> Result<ClientLine> {
+    let j = Json::parse(line)?;
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "shutdown" => Ok(ClientLine::Shutdown),
+            other => Err(Error::config(format!("unknown cmd '{other}'"))),
+        };
+    }
+    let id = j
+        .get("id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::config("request needs a string 'id'"))?
+        .to_string();
+    let prompt_json = j
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::config("request needs 'prompt': [token, ...]"))?;
+    let mut prompt = Vec::with_capacity(prompt_json.len());
+    for v in prompt_json {
+        let tok = v
+            .as_i64()
+            .ok_or_else(|| Error::config("prompt tokens must be integers"))?;
+        prompt.push(to_token(tok)?);
+    }
+    let max_new = j
+        .get("max_new")
+        .and_then(Json::as_i64)
+        .map(|v| v.max(1) as usize)
+        .unwrap_or(DEFAULT_MAX_NEW);
+    let temperature = j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let sampling = if temperature > 0.0 {
+        Some(SamplingParams {
+            temperature,
+            top_k: j.get("top_k").and_then(Json::as_i64).map(|v| v.max(0) as usize).unwrap_or(0),
+            top_p: j.get("top_p").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(17).max(0) as u64,
+        })
+    } else {
+        None
+    };
+    let stop = match j.get("stop").and_then(Json::as_i64) {
+        Some(v) => Some(to_token(v)?),
+        None => None,
+    };
+    Ok(ClientLine::Request(WireRequest { id, prompt, max_new, sampling, stop }))
+}
+
+/// Token ids must fit i32; reject instead of silently wrapping.
+fn to_token(v: i64) -> Result<i32> {
+    i32::try_from(v).map_err(|_| Error::config(format!("token id {v} out of i32 range")))
+}
+
+fn ms(secs: f64) -> Json {
+    Json::Num((secs * 1e3 * 1000.0).round() / 1000.0) // ms with us resolution
+}
+
+fn stats_json(s: &RequestStats) -> Json {
+    Json::Obj(vec![
+        ("queue_ms".to_string(), ms(s.queue_secs)),
+        ("prefill_ms".to_string(), ms(s.prefill_secs)),
+        ("total_ms".to_string(), ms(s.total_secs)),
+        ("max_gap_ms".to_string(), ms(s.max_inter_token_secs)),
+        (
+            "tokens_per_sec".to_string(),
+            Json::Num((s.tokens_per_sec() * 10.0).round() / 10.0),
+        ),
+    ])
+}
+
+/// Render an error frame (empty `id` when the failure precedes parsing).
+pub fn error_frame(id: &str, message: &str) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), Json::from(id)),
+        ("event".to_string(), Json::from("error")),
+        ("message".to_string(), Json::from(message)),
+    ])
+    .render()
+}
+
+/// Render one scheduler event as a protocol frame line (no newline).
+pub fn event_frame(ev: &StepEvent) -> String {
+    match ev {
+        StepEvent::Token { id, index, token, .. } => Json::Obj(vec![
+            ("id".to_string(), Json::from(id.as_str())),
+            ("event".to_string(), Json::from("token")),
+            ("index".to_string(), Json::from(*index)),
+            ("token".to_string(), Json::from(*token as i64)),
+        ])
+        .render(),
+        StepEvent::Done { id, tokens, prompt_len, finish, stats, .. } => {
+            let generated: Vec<Json> =
+                tokens[*prompt_len..].iter().map(|&t| Json::from(t as i64)).collect();
+            Json::Obj(vec![
+                ("id".to_string(), Json::from(id.as_str())),
+                ("event".to_string(), Json::from("done")),
+                ("finish".to_string(), Json::from(finish.as_str())),
+                ("prompt_len".to_string(), Json::from(*prompt_len)),
+                ("tokens".to_string(), Json::Arr(generated)),
+                ("stats".to_string(), stats_json(stats)),
+            ])
+            .render()
+        }
+        StepEvent::Rejected { id, reason, .. } => error_frame(id, reason),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_request() {
+        let line = r#"{"id":"a","prompt":[1,2,3]}"#;
+        let ClientLine::Request(r) = parse_line(line).unwrap() else {
+            panic!("expected request");
+        };
+        assert_eq!(r.id, "a");
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, DEFAULT_MAX_NEW);
+        assert!(r.sampling.is_none());
+        assert!(r.stop.is_none());
+    }
+
+    #[test]
+    fn parses_sampling_request() {
+        let line =
+            r#"{"id":"b","prompt":[7],"max_new":4,"temperature":0.8,"top_k":40,"top_p":0.9,"seed":3,"stop":0}"#;
+        let ClientLine::Request(r) = parse_line(line).unwrap() else {
+            panic!("expected request");
+        };
+        assert_eq!(r.max_new, 4);
+        let s = r.sampling.unwrap();
+        assert!((s.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(s.top_k, 40);
+        assert!((s.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(s.seed, 3);
+        assert_eq!(r.stop, Some(0));
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let line = r#"{"id":"c","prompt":[1],"temperature":0}"#;
+        let ClientLine::Request(r) = parse_line(line).unwrap() else {
+            panic!("expected request");
+        };
+        assert!(r.sampling.is_none());
+    }
+
+    #[test]
+    fn parses_shutdown() {
+        assert_eq!(parse_line(r#"{"cmd":"shutdown"}"#).unwrap(), ClientLine::Shutdown);
+        assert!(parse_line(r#"{"cmd":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        for bad in [
+            "not json",
+            r#"{"prompt":[1]}"#,
+            r#"{"id":"x"}"#,
+            r#"{"id":"x","prompt":"nope"}"#,
+            r#"{"id":"x","prompt":[1.5]}"#,
+            r#"{"id":"x","prompt":[4294967296]}"#,
+            r#"{"id":"x","prompt":[1],"stop":4294967296}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn frames_are_parseable_json() {
+        use crate::serve::json::Json;
+        let tok = StepEvent::Token { key: 1, id: "r".into(), index: 2, token: 99 };
+        let f = event_frame(&tok);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("token"));
+        assert_eq!(j.get("index").and_then(Json::as_i64), Some(2));
+        assert_eq!(j.get("token").and_then(Json::as_i64), Some(99));
+
+        let done = StepEvent::Done {
+            key: 1,
+            id: "r".into(),
+            tokens: vec![5, 6, 7, 8],
+            prompt_len: 2,
+            finish: crate::serve::scheduler::FinishReason::Length,
+            stats: RequestStats {
+                queue_secs: 0.001,
+                prefill_secs: 0.002,
+                total_secs: 0.01,
+                max_inter_token_secs: 0.003,
+                n_new_tokens: 2,
+            },
+        };
+        let f = event_frame(&done);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("done"));
+        assert_eq!(j.get("finish").and_then(Json::as_str), Some("length"));
+        let toks: Vec<i64> = j
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(toks, vec![7, 8], "done frame carries only generated tokens");
+        assert!(j.get("stats").and_then(|s| s.get("queue_ms")).is_some());
+
+        let err = error_frame("x", "boom \"quoted\"");
+        let j = Json::parse(&err).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Seeded stochastic decoding: temperature / top-k / top-p next to
+//! greedy argmax.
+//!
+//! Everything flows from the crate's deterministic `tensor::Rng`
+//! (xorshift64*), so a `(params, seed)` pair replays the exact same token
+//! stream — the property the reproducibility tests in `tests/serve.rs`
+//! pin down.  NaN logits are excluded up front (see `infer::argmax` for
+//! the matching greedy behavior), ties sort to the lowest index, and
+//! degenerate rows fall back to token 0 instead of panicking.
+
+use std::cmp::Ordering;
+
+use crate::infer::argmax;
+use crate::tensor::Rng;
+
+/// Decoding controls for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` means greedy argmax.
+    pub temperature: f32,
+    /// Keep only the k highest-probability tokens (0 = disabled).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest prefix of the sorted
+    /// distribution with cumulative probability >= top_p (1.0 = disabled).
+    pub top_p: f32,
+    /// Seed of the per-request rng stream.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 17 }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding expressed as sampling params (temperature 0).
+    pub fn greedy() -> Self {
+        SamplingParams { temperature: 0.0, ..Default::default() }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// Independent per-sequence rng stream for batched sampling: sequence `i`
+/// of a request seeded `s` always draws from the same stream, regardless
+/// of batch composition or decode path (cached vs recompute).
+pub fn seq_rng(seed: u64, i: usize) -> Rng {
+    Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Draw one token from a logits row under `p`.  Deterministic given the
+/// rng state; total on NaN/empty rows (falls back to greedy / token 0).
+pub fn sample(logits: &[f32], p: &SamplingParams, rng: &mut Rng) -> usize {
+    if p.is_greedy() {
+        return argmax(logits);
+    }
+    let mut cand: Vec<(usize, f32)> = logits
+        .iter()
+        .copied()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .collect();
+    if cand.is_empty() {
+        return 0;
+    }
+    // Sort by logit descending, index ascending on ties (stable and
+    // deterministic across runs).
+    cand.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    if p.top_k > 0 && p.top_k < cand.len() {
+        cand.truncate(p.top_k);
+    }
+    // Softmax over temperature-scaled logits, max-subtracted for
+    // stability.  cand[0] holds the max because 1/temperature > 0.
+    let inv_t = 1.0 / p.temperature;
+    let mx = cand[0].1 * inv_t;
+    if !mx.is_finite() {
+        // +inf (or overflowed) top logit: the distribution degenerates to
+        // a point mass on the best candidate.
+        return cand[0].0;
+    }
+    if p.top_p <= 0.0 {
+        // degenerate nucleus: the smallest prefix reaching any mass is
+        // the single best candidate
+        return cand[0].0;
+    }
+    let mut weights: Vec<f32> = cand.iter().map(|(_, v)| (v * inv_t - mx).exp()).collect();
+    let mut total: f32 = weights.iter().sum();
+    if p.top_p < 1.0 {
+        let mut acc = 0.0f32;
+        let mut keep = weights.len();
+        for (i, w) in weights.iter().enumerate() {
+            acc += w / total;
+            if acc >= p.top_p {
+                keep = i + 1;
+                break;
+            }
+        }
+        weights.truncate(keep);
+        cand.truncate(keep);
+        total = weights.iter().sum();
+    }
+    let mut u = rng.next_f32() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return cand[i].0;
+        }
+    }
+    cand[cand.len() - 1].0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_params_match_argmax() {
+        let logits = [0.1f32, 2.5, -1.0, 2.5];
+        let mut rng = Rng::new(1);
+        let p = SamplingParams::greedy();
+        assert!(p.is_greedy());
+        assert_eq!(sample(&logits, &p, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_one_is_argmax_regardless_of_rng() {
+        let logits = [0.3f32, -0.2, 4.0, 1.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 1, ..Default::default() };
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            assert_eq!(sample(&logits, &p, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_degenerates_to_argmax() {
+        let logits = [0.0f32, 3.0, 1.0];
+        for top_p in [1e-6f32, 0.0, -1.0] {
+            let p = SamplingParams { temperature: 0.7, top_p, ..Default::default() };
+            for seed in 0..20u64 {
+                let mut rng = Rng::new(seed);
+                assert_eq!(sample(&logits, &p, &mut rng), 1, "top_p={top_p}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let p = SamplingParams { temperature: 1.0, seed: 42, ..Default::default() };
+        let a: Vec<usize> = {
+            let mut rng = seq_rng(p.seed, 0);
+            (0..50).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut rng = seq_rng(p.seed, 0);
+            (0..50).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<usize> = {
+            let mut rng = seq_rng(p.seed, 1);
+            (0..50).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        assert_ne!(a, c, "distinct sequence streams should differ");
+    }
+
+    #[test]
+    fn covers_support_at_high_temperature() {
+        let logits = [0.0f32, 0.1, 0.2];
+        let p = SamplingParams { temperature: 5.0, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all tokens should be reachable");
+    }
+
+    #[test]
+    fn nan_and_degenerate_rows_are_total() {
+        let p = SamplingParams::default();
+        let mut rng = Rng::new(5);
+        assert_eq!(sample(&[], &p, &mut rng), 0);
+        assert_eq!(sample(&[f32::NAN, f32::NAN], &p, &mut rng), 0);
+        // NaN is never sampled
+        let logits = [f32::NAN, 1.0, f32::NAN];
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+        // +inf degenerates deterministically to the best index
+        assert_eq!(sample(&[0.0, f32::INFINITY, 1.0], &p, &mut rng), 1);
+    }
+}

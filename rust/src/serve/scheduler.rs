@@ -1,0 +1,357 @@
+//! Continuous-batching scheduler: step-granular admission and eviction.
+//!
+//! The scheduler owns the set of in-flight sequences.  Every call to
+//! [`Scheduler::step`] (1) admits pending requests into the running batch
+//! while there is room — each admission prefills the prompt into a pooled
+//! [`KvCache`] and emits the request's first token immediately, so a
+//! request that arrives mid-flight starts decoding before earlier
+//! requests finish; (2) runs ONE incremental decode step for the whole
+//! batch through `PackedModel::forward_step`; (3) evicts finished
+//! sequences, returning their caches to the pool.  Per-request stats
+//! (queue wait, prefill time, decode time, worst inter-token gap) ride on
+//! the final [`StepEvent::Done`].
+//!
+//! All attention state is per-sequence, and every batched operation in
+//! the decode path is row-independent, so batch composition never changes
+//! a request's token stream — the invariance `tests/serve.rs` checks.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::infer::PackedModel;
+use crate::serve::decode::pick;
+use crate::serve::kv::{KvCache, KvPool};
+use crate::serve::sampling::{seq_rng, SamplingParams};
+use crate::tensor::Rng;
+
+/// Scheduler limits.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Maximum sequences decoding concurrently.
+    pub max_batch: usize,
+    /// Hard cap on a request's `max_new` (larger asks are clamped).
+    pub max_new_cap: usize,
+    /// Maximum admissible prompt length (longer requests are rejected).
+    pub max_prompt: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { max_batch: 8, max_new_cap: 512, max_prompt: 1024 }
+    }
+}
+
+/// One generation request as the scheduler sees it.
+pub struct GenRequest {
+    /// Engine-unique key (routing); the client-chosen `id` is echoed in
+    /// every event.
+    pub key: u64,
+    pub id: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// `None` = greedy argmax.
+    pub sampling: Option<SamplingParams>,
+    /// Optional stop token: generation ends when it is emitted.
+    pub stop: Option<i32>,
+    pub queued_at: Instant,
+}
+
+/// Why a sequence left the batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted `max_new` tokens.
+    Length,
+    /// Emitted the request's stop token.
+    Stop,
+    /// KV cache exhausted (belt-and-braces; admission sizes caches so
+    /// this should not trigger).
+    Capacity,
+    /// Dropped by `Scheduler::cancel` (e.g. client went away).
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Capacity => "capacity",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Wall-clock accounting for one completed request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestStats {
+    /// Submission -> admission.
+    pub queue_secs: f64,
+    /// Prompt prefill (includes the first sampled token).
+    pub prefill_secs: f64,
+    /// Admission -> completion.
+    pub total_secs: f64,
+    /// Worst gap between consecutive emitted tokens.
+    pub max_inter_token_secs: f64,
+    /// Generated (non-prompt) tokens.
+    pub n_new_tokens: usize,
+}
+
+impl RequestStats {
+    /// Generated tokens per second of post-admission wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.total_secs <= 0.0 {
+            return 0.0;
+        }
+        self.n_new_tokens as f64 / self.total_secs
+    }
+}
+
+/// What a scheduler step produced, in emission order.
+pub enum StepEvent {
+    /// One streamed token (index counts generated tokens from 0).
+    Token { key: u64, id: String, index: usize, token: i32 },
+    /// Request finished; `tokens` holds prompt + generated.
+    Done {
+        key: u64,
+        id: String,
+        tokens: Vec<i32>,
+        prompt_len: usize,
+        finish: FinishReason,
+        stats: RequestStats,
+    },
+    /// Request failed validation and never entered the batch.
+    Rejected { key: u64, id: String, reason: String },
+}
+
+struct Running {
+    req: GenRequest,
+    cache: KvCache,
+    rng: Option<Rng>,
+    /// prompt + generated tokens.
+    tokens: Vec<i32>,
+    emitted: usize,
+    admitted_at: Instant,
+    prefill_secs: f64,
+    last_token_at: Instant,
+    max_gap: f64,
+    finish: Option<FinishReason>,
+}
+
+impl Running {
+    fn note_token(&mut self, now: Instant) {
+        let gap = now.duration_since(self.last_token_at).as_secs_f64();
+        if self.emitted > 1 && gap > self.max_gap {
+            self.max_gap = gap;
+        }
+        self.last_token_at = now;
+    }
+
+    fn check_finished(&mut self, tok: i32) {
+        if self.req.stop == Some(tok) {
+            self.finish = Some(FinishReason::Stop);
+        } else if self.emitted >= self.req.max_new {
+            self.finish = Some(FinishReason::Length);
+        } else if self.cache.remaining() == 0 {
+            self.finish = Some(FinishReason::Capacity);
+        }
+    }
+}
+
+/// The continuous-batching scheduler.
+pub struct Scheduler<'m> {
+    model: &'m PackedModel,
+    cfg: SchedConfig,
+    pending: VecDeque<GenRequest>,
+    active: Vec<Running>,
+    pool: KvPool,
+    completed: usize,
+}
+
+impl<'m> Scheduler<'m> {
+    pub fn new(model: &'m PackedModel, cfg: SchedConfig) -> Self {
+        let pool = KvPool::new(model.cfg.n_layers, model.cfg.d_model);
+        Scheduler { model, cfg, pending: VecDeque::new(), active: Vec::new(), pool, completed: 0 }
+    }
+
+    /// Queue a request for admission at the next step.
+    pub fn submit(&mut self, req: GenRequest) {
+        self.pending.push_back(req);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn n_completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Drop a request wherever it is (pending or mid-decode).  Active
+    /// sequences are evicted at the next step with `Cancelled`.
+    pub fn cancel(&mut self, key: u64) {
+        self.pending.retain(|r| r.key != key);
+        for r in self.active.iter_mut() {
+            if r.req.key == key && r.finish.is_none() {
+                r.finish = Some(FinishReason::Cancelled);
+            }
+        }
+    }
+
+    /// Drop everything (engine shutdown).
+    pub fn clear(&mut self) {
+        self.pending.clear();
+        self.active.clear();
+    }
+
+    /// Admit pending requests while the batch has room.  Each admission
+    /// prefills and emits the first token.
+    fn admit(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        while self.active.len() < self.cfg.max_batch {
+            let Some(mut req) = self.pending.pop_front() else { break };
+            if req.prompt.is_empty() {
+                events.push(StepEvent::Rejected {
+                    key: req.key,
+                    id: req.id,
+                    reason: "empty prompt".to_string(),
+                });
+                continue;
+            }
+            if req.prompt.len() > self.cfg.max_prompt {
+                events.push(StepEvent::Rejected {
+                    key: req.key,
+                    id: req.id,
+                    reason: format!(
+                        "prompt length {} > max {}",
+                        req.prompt.len(),
+                        self.cfg.max_prompt
+                    ),
+                });
+                continue;
+            }
+            req.max_new = req.max_new.clamp(1, self.cfg.max_new_cap);
+
+            let admitted_at = Instant::now();
+            let mut cache = self.pool.take(req.prompt.len() + req.max_new);
+            let logits = self.model.forward_chunk(&req.prompt, &mut cache)?;
+            let mut rng = req.sampling.map(|p| seq_rng(p.seed, 0));
+            let tok = pick(
+                logits.row(req.prompt.len() - 1),
+                req.sampling.as_ref(),
+                rng.as_mut(),
+            );
+            let now = Instant::now();
+            let mut run = Running {
+                tokens: {
+                    let mut t = req.prompt.clone();
+                    t.push(tok);
+                    t
+                },
+                cache,
+                rng,
+                emitted: 1,
+                admitted_at,
+                prefill_secs: now.duration_since(admitted_at).as_secs_f64(),
+                last_token_at: now,
+                max_gap: 0.0,
+                finish: None,
+                req,
+            };
+            events.push(StepEvent::Token {
+                key: run.req.key,
+                id: run.req.id.clone(),
+                index: 0,
+                token: tok,
+            });
+            run.check_finished(tok);
+            self.active.push(run);
+        }
+        Ok(())
+    }
+
+    /// One scheduler step: admit, decode one token for every live
+    /// sequence, evict finished ones.  Returns events in emission order.
+    pub fn step(&mut self) -> Result<Vec<StepEvent>> {
+        let mut events = Vec::new();
+        self.admit(&mut events)?;
+
+        // -- one batched decode step over sequences still running --
+        let mut idxs: Vec<usize> = Vec::new();
+        let mut toks: Vec<i32> = Vec::new();
+        let mut picked: Vec<(usize, i32)> = Vec::new();
+        {
+            let mut caches: Vec<&mut KvCache> = Vec::new();
+            let mut rngs: Vec<&mut Option<Rng>> = Vec::new();
+            let mut samplings: Vec<Option<SamplingParams>> = Vec::new();
+            for (i, r) in self.active.iter_mut().enumerate() {
+                if r.finish.is_none() {
+                    idxs.push(i);
+                    toks.push(*r.tokens.last().expect("active sequence has tokens"));
+                    samplings.push(r.req.sampling);
+                    let Running { cache, rng, .. } = r;
+                    caches.push(cache);
+                    rngs.push(rng);
+                }
+            }
+            if !idxs.is_empty() {
+                let logits = self.model.forward_step(&toks, &mut caches)?;
+                for (j, &i) in idxs.iter().enumerate() {
+                    let tok = pick(logits.row(j), samplings[j].as_ref(), rngs[j].as_mut());
+                    picked.push((i, tok));
+                }
+            }
+        }
+        let now = Instant::now();
+        for (i, tok) in picked {
+            let r = &mut self.active[i];
+            r.tokens.push(tok);
+            r.emitted += 1;
+            r.note_token(now);
+            events.push(StepEvent::Token {
+                key: r.req.key,
+                id: r.req.id.clone(),
+                index: r.emitted - 1,
+                token: tok,
+            });
+            r.check_finished(tok);
+        }
+
+        // -- evict finished sequences (stable order) --
+        let mut kept = Vec::with_capacity(self.active.len());
+        for r in self.active.drain(..) {
+            match r.finish {
+                None => kept.push(r),
+                Some(finish) => {
+                    let done_at = Instant::now();
+                    let stats = RequestStats {
+                        queue_secs: r.admitted_at.duration_since(r.req.queued_at).as_secs_f64(),
+                        prefill_secs: r.prefill_secs,
+                        total_secs: done_at.duration_since(r.admitted_at).as_secs_f64(),
+                        max_inter_token_secs: r.max_gap,
+                        n_new_tokens: r.emitted,
+                    };
+                    self.completed += 1;
+                    self.pool.give(r.cache);
+                    events.push(StepEvent::Done {
+                        key: r.req.key,
+                        id: r.req.id,
+                        tokens: r.tokens,
+                        prompt_len: r.req.prompt.len(),
+                        finish,
+                        stats,
+                    });
+                }
+            }
+        }
+        self.active = kept;
+        Ok(events)
+    }
+}

@@ -1,0 +1,277 @@
+//! The long-lived `repro serve` loop: std-only TCP + threads + channels.
+//!
+//! Thread layout:
+//!
+//! * **engine** — owns the [`Scheduler`]; drains submissions from an mpsc
+//!   channel (non-blocking while the batch is busy, blocking when idle so
+//!   an idle server burns no CPU), runs one scheduler step per iteration,
+//!   and routes rendered frames to each request's connection writer.
+//!   Requests whose client vanished are cancelled at the next step.
+//! * **accept** — one `TcpListener::accept` loop; spawns a reader +
+//!   writer thread pair per connection.
+//! * **per-connection reader** — parses newline-delimited JSON requests
+//!   and forwards them to the engine with a clone of the connection's
+//!   frame sender.
+//! * **per-connection writer** — serializes frames back to the socket,
+//!   flushing per line so tokens stream as they are produced.
+//!
+//! Binding to port 0 picks an ephemeral port; the bound address is
+//! printed as `serve: listening on <addr>` (the CI smoke test scrapes
+//! this line) and returned from [`spawn`] for in-process tests.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::infer::PackedModel;
+use crate::serve::protocol::{self, ClientLine, WireRequest};
+use crate::serve::scheduler::{GenRequest, SchedConfig, Scheduler, StepEvent};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 selects an ephemeral port.
+    pub addr: String,
+    pub sched: SchedConfig,
+    /// Honor `{"cmd":"shutdown"}` from clients (CI uses this for clean
+    /// teardown; disable for anything internet-facing).
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7878".to_string(),
+            sched: SchedConfig::default(),
+            allow_remote_shutdown: true,
+        }
+    }
+}
+
+enum EngineMsg {
+    Submit { wire: WireRequest, queued_at: Instant, out: Sender<String> },
+    Shutdown,
+}
+
+/// Handle on a running server (in-process tests + clean shutdown).
+pub struct Server {
+    pub addr: SocketAddr,
+    engine: JoinHandle<()>,
+    accept: JoinHandle<()>,
+    tx: Sender<EngineMsg>,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Ask the server to stop and join its threads.
+    pub fn shutdown(self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(EngineMsg::Shutdown);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept.join();
+        let _ = self.engine.join();
+    }
+
+    /// Block until the engine exits (a client sent `{"cmd":"shutdown"}`).
+    pub fn wait(self) {
+        let _ = self.engine.join();
+        self.stopping.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept.join();
+    }
+}
+
+/// Bind, spawn the engine + accept threads, and return immediately.
+pub fn spawn(model: Arc<PackedModel>, opts: ServeOptions) -> Result<Server> {
+    let listener = TcpListener::bind(&opts.addr)
+        .map_err(|e| Error::io(format!("bind {}: {e}", opts.addr)))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| Error::io(format!("local_addr: {e}")))?;
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let stopping = Arc::new(AtomicBool::new(false));
+
+    let sched_cfg = opts.sched;
+    let engine = std::thread::spawn(move || run_engine(model, sched_cfg, rx));
+
+    let accept_tx = tx.clone();
+    let accept_stop = Arc::clone(&stopping);
+    let allow_shutdown = opts.allow_remote_shutdown;
+    let accept = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if accept_stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let tx = accept_tx.clone();
+                    std::thread::spawn(move || handle_conn(stream, tx, allow_shutdown));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    Ok(Server { addr, engine, accept, tx, stopping })
+}
+
+/// Blocking entry point for the `repro serve` CLI.
+pub fn run(model: Arc<PackedModel>, opts: ServeOptions) -> Result<()> {
+    let server = spawn(model, opts)?;
+    println!("serve: listening on {}", server.addr);
+    // Line-buffered stdout under redirection: flush so the CI smoke test
+    // sees the address immediately.
+    let _ = std::io::stdout().flush();
+    server.wait();
+    println!("serve: engine stopped");
+    Ok(())
+}
+
+fn run_engine(model: Arc<PackedModel>, cfg: SchedConfig, rx: Receiver<EngineMsg>) {
+    let mut sched = Scheduler::new(&model, cfg);
+    let mut outs: HashMap<u64, Sender<String>> = HashMap::new();
+    let mut next_key = 1u64;
+    'engine: loop {
+        // Drain submissions: block when idle, poll when the batch is hot.
+        if sched.has_work() {
+            loop {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if !handle_msg(msg, &mut sched, &mut outs, &mut next_key) {
+                            break 'engine;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'engine,
+                }
+            }
+        } else {
+            match rx.recv() {
+                Ok(msg) => {
+                    if !handle_msg(msg, &mut sched, &mut outs, &mut next_key) {
+                        break 'engine;
+                    }
+                }
+                Err(_) => break 'engine,
+            }
+        }
+
+        if !sched.has_work() {
+            continue;
+        }
+        match sched.step() {
+            Ok(events) => {
+                for ev in &events {
+                    let (key, finished) = match ev {
+                        StepEvent::Token { key, .. } => (*key, false),
+                        StepEvent::Done { key, .. } => (*key, true),
+                        StepEvent::Rejected { key, .. } => (*key, true),
+                    };
+                    let line = protocol::event_frame(ev);
+                    let delivered = outs.get(&key).map(|out| out.send(line).is_ok());
+                    if delivered == Some(false) {
+                        // Client is gone: stop decoding for it.
+                        sched.cancel(key);
+                        outs.remove(&key);
+                    } else if finished {
+                        outs.remove(&key);
+                    }
+                }
+            }
+            Err(e) => {
+                // A step failure poisons the whole batch (model-level
+                // error): notify every waiter and reset.
+                let frame = protocol::error_frame("", &format!("engine step failed: {e}"));
+                for (_, out) in outs.drain() {
+                    let _ = out.send(frame.clone());
+                }
+                sched.clear();
+            }
+        }
+    }
+}
+
+/// Returns false when the engine should exit.
+fn handle_msg(
+    msg: EngineMsg,
+    sched: &mut Scheduler<'_>,
+    outs: &mut HashMap<u64, Sender<String>>,
+    next_key: &mut u64,
+) -> bool {
+    match msg {
+        EngineMsg::Submit { wire, queued_at, out } => {
+            let key = *next_key;
+            *next_key += 1;
+            outs.insert(key, out);
+            sched.submit(GenRequest {
+                key,
+                id: wire.id,
+                prompt: wire.prompt,
+                max_new: wire.max_new,
+                sampling: wire.sampling,
+                stop: wire.stop,
+                queued_at,
+            });
+            true
+        }
+        EngineMsg::Shutdown => false,
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<EngineMsg>, allow_shutdown: bool) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (otx, orx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_half);
+        for line in orx {
+            if w.write_all(line.as_bytes()).is_err()
+                || w.write_all(b"\n").is_err()
+                || w.flush().is_err()
+            {
+                break; // client hung up; engine cancels on next send
+            }
+        }
+    });
+
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match protocol::parse_line(line) {
+            Ok(ClientLine::Shutdown) => {
+                if allow_shutdown {
+                    let _ = tx.send(EngineMsg::Shutdown);
+                } else {
+                    let _ = otx.send(protocol::error_frame("", "shutdown disabled"));
+                }
+                break;
+            }
+            Ok(ClientLine::Request(wire)) => {
+                let msg =
+                    EngineMsg::Submit { wire, queued_at: Instant::now(), out: otx.clone() };
+                if tx.send(msg).is_err() {
+                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    break;
+                }
+            }
+            Err(e) => {
+                let _ = otx.send(protocol::error_frame("", &e.to_string()));
+            }
+        }
+    }
+    drop(otx);
+    let _ = writer.join();
+}

@@ -1,0 +1,427 @@
+//! Serving subsystem tests: KV-cached decode vs full-prefix recompute
+//! (bit-identical token streams), seeded sampling reproducibility, the
+//! continuous-batching scheduler under scripted arrivals, packed
+//! checkpoint roundtrips, and the TCP line-protocol server end to end.
+//! Everything runs without artifacts or PJRT.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::{generate_greedy, PackedModel};
+use repro::model::{checkpoint, ParamStore, TINY};
+use repro::quant::QuantSpec;
+use repro::serve::decode::{generate, generate_recompute};
+use repro::serve::json::Json;
+use repro::serve::loadgen::{run_load, LoadOptions};
+use repro::serve::scheduler::{FinishReason, GenRequest, StepEvent};
+use repro::serve::{KvCache, SamplingParams, SchedConfig, Scheduler, ServeOptions};
+use repro::tensor::{IntTensor, Rng, Tensor};
+
+/// Open-clip qparams with live (random) LoRA B so adapters contribute.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+fn packed_tiny(seed: u64) -> PackedModel {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(seed);
+    let qp = open_qparams_with_lora(spec, 4, seed ^ 0xAD);
+    PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap()
+}
+
+fn dense_tiny(seed: u64) -> PackedModel {
+    let params = TINY.init_params(seed);
+    PackedModel::build(TINY, &params, None, QuantSpec::new(16, 64), 1.0).unwrap()
+}
+
+fn tiny_prompt(batch: usize, len: usize, seed: u64) -> IntTensor {
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, seed);
+    Batcher::new(batch, len).lm_batch(&corpus, &mut Rng::new(seed ^ 0x77)).tokens
+}
+
+// ---------------------------------------------------------------------------
+// cached decode == full recompute
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_greedy_matches_recompute_packed() {
+    let model = packed_tiny(3);
+    let prompt = tiny_prompt(3, 8, 15);
+    let cached = generate(&model, &prompt, 12, None).unwrap();
+    let full = generate_recompute(&model, &prompt, 12, None).unwrap();
+    assert_eq!(
+        cached.tokens, full.tokens,
+        "KV-cached greedy decode must be bit-identical to full-prefix recompute"
+    );
+}
+
+#[test]
+fn cached_greedy_matches_recompute_dense() {
+    let model = dense_tiny(9);
+    let prompt = tiny_prompt(2, 6, 21);
+    let cached = generate(&model, &prompt, 10, None).unwrap();
+    let full = generate_recompute(&model, &prompt, 10, None).unwrap();
+    assert_eq!(cached.tokens, full.tokens);
+}
+
+#[test]
+fn cached_logits_match_full_forward_bitwise() {
+    // Stronger than token equality: prefill logits + stepwise logits must
+    // equal the full-forward logits at the matching positions.
+    let model = packed_tiny(5);
+    let prompt = tiny_prompt(1, 10, 31);
+    let toks = prompt.data().to_vec();
+    let full = model.logits(&prompt).unwrap(); // (1, 10, vocab)
+    let vocab = model.cfg.vocab;
+
+    let mut cache = KvCache::new(model.cfg.n_layers, model.cfg.d_model, 16);
+    let chunk = model.forward_chunk(&toks, &mut cache).unwrap(); // (10, vocab)
+    assert_eq!(chunk.data(), &full.data()[..10 * vocab], "prefill logits differ");
+
+    // feeding the next token through forward_step must match a fresh
+    // full forward over the extended sequence's last position
+    let next = [toks[3]];
+    let mut refs: Vec<&mut KvCache> = vec![&mut cache];
+    let step = model.forward_step(&next, &mut refs).unwrap(); // (1, vocab)
+    let mut ext = toks.clone();
+    ext.push(toks[3]);
+    let full2 = model
+        .logits(&IntTensor::new(vec![1, 11], ext).unwrap())
+        .unwrap();
+    assert_eq!(
+        step.data(),
+        &full2.data()[10 * vocab..11 * vocab],
+        "incremental step logits differ from full recompute"
+    );
+}
+
+#[test]
+fn generate_greedy_is_cached_and_deterministic() {
+    // the public entry point now routes through the KV cache; behavior
+    // must stay deterministic and in-vocab (PR 1's contract)
+    let model = packed_tiny(13);
+    let prompt = tiny_prompt(3, 8, 16);
+    let a = generate_greedy(&model, &prompt, 6).unwrap();
+    let b = generate_greedy(&model, &prompt, 6).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    for row in &a.tokens {
+        assert_eq!(row.len(), 8 + 6);
+        assert!(row.iter().all(|&t| (0..TINY.vocab as i32).contains(&t)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// seeded sampling
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_sampling_reproducible_and_matches_recompute() {
+    let model = packed_tiny(7);
+    let prompt = tiny_prompt(2, 6, 19);
+    let p = SamplingParams { temperature: 0.9, top_k: 50, top_p: 0.95, seed: 123 };
+    let a = generate(&model, &prompt, 10, Some(&p)).unwrap();
+    let b = generate(&model, &prompt, 10, Some(&p)).unwrap();
+    assert_eq!(a.tokens, b.tokens, "same seed must replay the same stream");
+
+    let full = generate_recompute(&model, &prompt, 10, Some(&p)).unwrap();
+    assert_eq!(
+        a.tokens, full.tokens,
+        "cached and recompute sampling share rng streams and logits"
+    );
+
+    let p2 = SamplingParams { seed: 124, ..p };
+    let c = generate(&model, &prompt, 10, Some(&p2)).unwrap();
+    assert_ne!(a.tokens, c.tokens, "a different seed should diverge");
+}
+
+#[test]
+fn zero_temperature_sampling_equals_greedy() {
+    let model = packed_tiny(11);
+    let prompt = tiny_prompt(2, 5, 23);
+    let p = SamplingParams { temperature: 0.0, ..Default::default() };
+    let sampled = generate(&model, &prompt, 8, Some(&p)).unwrap();
+    let greedy = generate(&model, &prompt, 8, None).unwrap();
+    assert_eq!(sampled.tokens, greedy.tokens);
+}
+
+// ---------------------------------------------------------------------------
+// continuous-batching scheduler
+// ---------------------------------------------------------------------------
+
+fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+    GenRequest {
+        key,
+        id: format!("r{key}"),
+        prompt,
+        max_new,
+        sampling: None,
+        stop: None,
+        queued_at: std::time::Instant::now(),
+    }
+}
+
+/// Run the scheduler to completion, returning the flat event log.
+fn drain(sched: &mut Scheduler<'_>) -> Vec<StepEvent> {
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to converge");
+    }
+    events
+}
+
+fn tokens_of(events: &[StepEvent], key: u64) -> Vec<i32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Token { key: k, token, .. } if *k == key => Some(*token),
+            _ => None,
+        })
+        .collect()
+}
+
+fn done_of(events: &[StepEvent], key: u64) -> Option<(&Vec<i32>, usize, FinishReason)> {
+    events.iter().find_map(|e| match e {
+        StepEvent::Done { key: k, tokens, prompt_len, finish, .. } if *k == key => {
+            Some((tokens, *prompt_len, *finish))
+        }
+        _ => None,
+    })
+}
+
+#[test]
+fn scheduler_admits_mid_flight_and_matches_standalone() {
+    let model = packed_tiny(17);
+    let cfg = SchedConfig { max_batch: 2, max_new_cap: 64, max_prompt: 64 };
+    let pa = tiny_prompt(1, 6, 40).data().to_vec();
+    let pb = tiny_prompt(1, 5, 41).data().to_vec();
+    let pc = tiny_prompt(1, 4, 42).data().to_vec();
+
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(1, pa.clone(), 4)); // finishes first
+    sched.submit(req(2, pb.clone(), 12)); // still running when C arrives
+    let mut events = sched.step().unwrap();
+    assert_eq!(sched.n_active(), 2, "both requests admitted in step 1");
+
+    // C arrives mid-flight; batch is full so it queues...
+    sched.submit(req(3, pc.clone(), 3));
+    events.extend(sched.step().unwrap());
+    assert_eq!(sched.n_pending(), 1, "batch full: C waits");
+
+    // ...and the rest of the run completes everything
+    events.extend(drain(&mut sched));
+    assert_eq!(sched.n_completed(), 3);
+
+    // C started streaming before B finished (continuous batching)
+    let c_first = events
+        .iter()
+        .position(|e| matches!(e, StepEvent::Token { key: 3, .. }))
+        .expect("C streamed tokens");
+    let b_done = events
+        .iter()
+        .position(|e| matches!(e, StepEvent::Done { key: 2, .. }))
+        .expect("B finished");
+    assert!(
+        c_first < b_done,
+        "request admitted mid-flight must start decoding before earlier requests finish"
+    );
+
+    // every request's stream matches a standalone cached generation,
+    // regardless of batch composition over its lifetime
+    for (key, prompt, max_new) in [(1u64, &pa, 4usize), (2, &pb, 12), (3, &pc, 3)] {
+        let streamed = tokens_of(&events, key);
+        assert_eq!(streamed.len(), max_new);
+        let (tokens, prompt_len, finish) = done_of(&events, key).expect("done event");
+        assert_eq!(prompt_len, prompt.len());
+        assert_eq!(&tokens[..prompt_len], &prompt[..]);
+        assert_eq!(&tokens[prompt_len..], &streamed[..], "done tokens == streamed tokens");
+        assert_eq!(finish, FinishReason::Length);
+
+        let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
+        let want = generate(&model, &solo, max_new, None).unwrap();
+        assert_eq!(
+            &want.tokens[0][..],
+            &tokens[..],
+            "batch composition must not change request {key}'s stream"
+        );
+    }
+}
+
+#[test]
+fn scheduler_rejects_and_cancels() {
+    let model = packed_tiny(19);
+    let cfg = SchedConfig { max_batch: 4, max_new_cap: 8, max_prompt: 6 };
+    let mut sched = Scheduler::new(&model, cfg);
+
+    sched.submit(req(1, vec![], 4)); // empty prompt
+    sched.submit(req(2, vec![1; 10], 4)); // too long
+    sched.submit(req(3, tiny_prompt(1, 4, 50).data().to_vec(), 99)); // max_new clamped
+    let events = drain(&mut sched);
+
+    assert!(events.iter().any(|e| matches!(e, StepEvent::Rejected { key: 1, .. })));
+    assert!(events.iter().any(|e| matches!(e, StepEvent::Rejected { key: 2, .. })));
+    let (_, _, finish) = done_of(&events, 3).expect("request 3 finishes");
+    assert_eq!(finish, FinishReason::Length);
+    assert_eq!(tokens_of(&events, 3).len(), 8, "max_new clamped to cap");
+
+    // cancellation mid-stream
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(7, tiny_prompt(1, 4, 51).data().to_vec(), 8));
+    let mut events = sched.step().unwrap();
+    assert_eq!(sched.n_active(), 1);
+    sched.cancel(7);
+    events.extend(drain(&mut sched));
+    let (_, _, finish) = done_of(&events, 7).expect("cancelled request still reports done");
+    assert_eq!(finish, FinishReason::Cancelled);
+    assert!(tokens_of(&events, 7).len() < 8);
+}
+
+#[test]
+fn scheduler_stop_token_ends_stream_early() {
+    let model = packed_tiny(23);
+    let prompt = tiny_prompt(1, 5, 52).data().to_vec();
+    // learn what the model will emit first, then use it as the stop token
+    let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
+    let first = generate(&model, &solo, 1, None).unwrap().tokens[0][prompt.len()];
+
+    let cfg = SchedConfig { max_batch: 2, max_new_cap: 16, max_prompt: 16 };
+    let mut sched = Scheduler::new(&model, cfg);
+    let mut r = req(1, prompt, 10);
+    r.stop = Some(first);
+    sched.submit(r);
+    let events = drain(&mut sched);
+    let (_, _, finish) = done_of(&events, 1).expect("done");
+    assert_eq!(finish, FinishReason::Stop);
+    assert_eq!(tokens_of(&events, 1), vec![first]);
+}
+
+// ---------------------------------------------------------------------------
+// packed checkpoint roundtrip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_checkpoint_roundtrips_bitwise() {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(29);
+    // DoRA adapters exercise the col_scale record
+    let qp = TINY.init_qparams(spec, 4, true, 30);
+    let model = PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap();
+
+    let dir = std::env::temp_dir().join("apiq_serve_test");
+    let path = dir.join("tiny_packed.apq");
+    checkpoint::save_packed(&model, &path).unwrap();
+    let loaded = checkpoint::load_packed(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.cfg.name, "tiny");
+    assert_eq!(loaded.spec, spec);
+    assert_eq!(loaded.resident_bytes(), model.resident_bytes());
+    assert!((loaded.effective_bits() - model.effective_bits()).abs() < 1e-12);
+    assert!(loaded.has_adapters());
+
+    let prompt = tiny_prompt(2, 7, 60);
+    let l1 = model.logits(&prompt).unwrap();
+    let l2 = loaded.logits(&prompt).unwrap();
+    assert_eq!(l1, l2, "serving from the packed payload must be bit-identical");
+
+    let g1 = generate(&model, &prompt, 5, None).unwrap();
+    let g2 = generate(&loaded, &prompt, 5, None).unwrap();
+    assert_eq!(g1.tokens, g2.tokens);
+}
+
+// ---------------------------------------------------------------------------
+// TCP server end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_streams_concurrent_requests() {
+    let model = Arc::new(packed_tiny(37));
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        sched: SchedConfig { max_batch: 4, max_new_cap: 64, max_prompt: 64 },
+        allow_remote_shutdown: true,
+    };
+    let server = repro::serve::server::spawn(model, opts).unwrap();
+    let addr = server.addr.to_string();
+
+    let report = run_load(&LoadOptions {
+        addr: addr.clone(),
+        clients: 4,
+        requests_per_client: 2,
+        prompt_len: 6,
+        max_new: 12,
+        vocab: TINY.vocab,
+        temperature: 0.0,
+        seed: 77,
+        shutdown_after: false,
+    })
+    .unwrap();
+    assert_eq!(report.completed, 8, "all streams must complete");
+    assert_eq!(report.total_tokens, 8 * 12);
+    assert!(report.ttft.max_s > 0.0 && report.total.p50_s > 0.0);
+    assert!(
+        report.peak_concurrent_streams >= 2,
+        "continuous batching should interleave streams (peak {})",
+        report.peak_concurrent_streams
+    );
+
+    // protocol-level determinism: the same greedy request twice returns
+    // identical token streams
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut read_done_tokens = |id: &str| -> Vec<i64> {
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert_eq!(j.get("id").and_then(Json::as_str), Some(id));
+            if j.get("event").and_then(Json::as_str) == Some("done") {
+                return j
+                    .get("tokens")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_i64().unwrap())
+                    .collect();
+            }
+        }
+    };
+    writer
+        .write_all(b"{\"id\":\"x1\",\"prompt\":[5,9,2,14],\"max_new\":6}\n")
+        .unwrap();
+    let t1 = read_done_tokens("x1");
+    writer
+        .write_all(b"{\"id\":\"x2\",\"prompt\":[5,9,2,14],\"max_new\":6}\n")
+        .unwrap();
+    let t2 = read_done_tokens("x2");
+    assert_eq!(t1, t2, "greedy serving must be deterministic");
+    assert_eq!(t1.len(), 6);
+
+    // malformed input gets an error frame, connection stays usable
+    writer.write_all(b"this is not json\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
+
+    drop(writer);
+    drop(reader);
+    server.shutdown();
+}
