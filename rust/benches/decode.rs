@@ -1,21 +1,73 @@
-//! Bench: KV-cached incremental decode vs full-prefix recompute.
+//! Bench: KV-cached incremental decode vs full-prefix recompute, plus
+//! the kernel-trajectory artifact.
 //!
 //! The acceptance metric for the serving subsystem: decode cost per
 //! emitted token must stop growing linearly with prefix length.  Runs
 //! the tiny config (CI-sized) across increasing new-token budgets and
-//! reports tokens/s for both paths plus the speedup, and a per-step
-//! latency curve for the cached path at growing prefix lengths.
+//! reports tokens/s for both paths plus the speedup, a per-step latency
+//! curve for the cached path at growing prefix lengths, and — since the
+//! SIMD compute core landed — a batch-1 decode measurement written to
+//! `BENCH_kernels.json` (override the path with `REPRO_BENCH_OUT`) so
+//! the tokens/s + GFLOP/s trajectory is machine-readable per kernel
+//! variant and thread count.
 
 use repro::benchharness::Bench;
 use repro::data::{Batcher, ZipfMarkovCorpus};
 use repro::infer::PackedModel;
-use repro::model::TINY;
+use repro::kernels;
+use repro::model::{ModelConfig, TINY};
 use repro::quant::QuantSpec;
 use repro::quantizers::{QuantizeCtx, Quantizer, Rtn};
 use repro::runtime::Runtime;
 use repro::serve::decode::{generate, generate_recompute};
 use repro::serve::KvCache;
 use repro::tensor::Rng;
+
+/// FLOPs the linear layers spend per decoded token (2 per MAC; the
+/// attention dot-products are prefix-dependent and excluded, so this is
+/// the weight-streaming GFLOP/s the fused kernels sustain).
+fn linear_flops_per_token(cfg: &ModelConfig) -> f64 {
+    let d = cfg.d_model as f64;
+    let f = cfg.d_ffn as f64;
+    let v = cfg.vocab as f64;
+    2.0 * (cfg.n_layers as f64 * (4.0 * d * d + 3.0 * d * f) + d * v)
+}
+
+struct JsonEntry {
+    name: String,
+    tokens_per_sec: f64,
+    gflops: f64,
+}
+
+fn write_kernels_json(cfg: &ModelConfig, entries: &[JsonEntry]) {
+    let path =
+        std::env::var("REPRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let mut results = String::new();
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 {
+            results.push_str(",\n");
+        }
+        results.push_str(&format!(
+            "    {{\"name\": \"{}\", \"tokens_per_sec\": {:.2}, \"gflops\": {:.3}}}",
+            e.name, e.tokens_per_sec, e.gflops
+        ));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"bench_kernels_v1\",\n  \"config\": \"{}\",\n  \
+         \"kernel\": \"{}\",\n  \"simd_supported\": {},\n  \"threads\": {},\n  \
+         \"linear_flops_per_token\": {:.0},\n  \"results\": [\n{}\n  ]\n}}\n",
+        cfg.name,
+        kernels::active().name(),
+        kernels::simd_supported(),
+        repro::kernels::pool::pool_threads(),
+        linear_flops_per_token(cfg),
+        results
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("note  wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let mut bench = Bench::new();
@@ -35,10 +87,42 @@ fn main() {
     let r = Rtn.run(&ctx).unwrap();
     let model = PackedModel::from_quant_result(TINY, &r, 64, 1.0).unwrap();
     let corpus = ZipfMarkovCorpus::new(TINY.vocab, 7);
+    let flops_tok = linear_flops_per_token(&TINY);
+    let mut entries: Vec<JsonEntry> = Vec::new();
+
+    println!(
+        "kernel: {} (simd_supported: {}), threads: {}",
+        kernels::active().name(),
+        kernels::simd_supported(),
+        repro::kernels::pool::pool_threads()
+    );
+
+    // --- batch-1 decode: the tentpole hot path ---
+    let prompt_len = 16;
+    let prompt1 = Batcher::new(1, prompt_len)
+        .lm_batch(&corpus, &mut Rng::new(13))
+        .tokens;
+    for new_tokens in [64usize, 128] {
+        let mean = bench
+            .run(&format!("decode_cached_1x{new_tokens}"), 1, 3, || {
+                std::hint::black_box(generate(&model, &prompt1, new_tokens, None).unwrap());
+            })
+            .mean_s;
+        let tps = new_tokens as f64 / mean;
+        bench.note(format!(
+            "batch-1 decode, {new_tokens} new tokens: {tps:.0} tok/s \
+             ({:.2} linear GFLOP/s)",
+            tps * flops_tok / 1e9
+        ));
+        entries.push(JsonEntry {
+            name: format!("decode_cached_1x{new_tokens}"),
+            tokens_per_sec: tps,
+            gflops: tps * flops_tok / 1e9,
+        });
+    }
 
     // --- end-to-end decode: cached vs recompute at growing budgets ---
     let gen_batch = 2;
-    let prompt_len = 16;
     let prompt = Batcher::new(gen_batch, prompt_len)
         .lm_batch(&corpus, &mut Rng::new(9))
         .tokens;
@@ -62,6 +146,11 @@ fn main() {
             toks / recompute,
             recompute / cached
         ));
+        entries.push(JsonEntry {
+            name: format!("decode_cached_{gen_batch}x{new_tokens}"),
+            tokens_per_sec: toks / cached,
+            gflops: toks / cached * flops_tok / 1e9,
+        });
     }
 
     // --- per-step latency at growing prefix: O(T) vs O(T^2) shape ---
@@ -85,5 +174,6 @@ fn main() {
         ));
     }
 
+    write_kernels_json(&TINY, &entries);
     bench.finish("decode");
 }

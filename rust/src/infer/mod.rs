@@ -22,6 +22,8 @@
 //! `forward_step`), sampling, and the continuous-batching token server
 //! live in `crate::serve`, built on this engine.
 
+use std::sync::{RwLock, RwLockReadGuard};
+
 use crate::error::{Error, Result};
 use crate::model::{LinearKind, ModelConfig, ParamStore};
 use crate::quant::affine::quantize_ints;
@@ -58,10 +60,15 @@ pub struct PackedLayer {
 
 impl PackedLayer {
     /// y = x @ W' for x (n, d_in), where W' includes the adapter and, for
-    /// DoRA, the column rescale.
+    /// DoRA, the column rescale.  Packed weights go through
+    /// `matvec_fused`, which runs the GEMV-specialized kernel for
+    /// decode-shaped inputs (`n <= 4`) and falls back to the panel path
+    /// for wider ones — output is bitwise identical either way (see
+    /// `kernels`), so cached decode still reproduces the full forward
+    /// exactly.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
         let mut y = match &self.weight {
-            LayerWeight::Packed(pl) => pl.matmul_fused(x)?,
+            LayerWeight::Packed(pl) => pl.matvec_fused(x)?,
             LayerWeight::Dense(w) => x.matmul(w)?,
         };
         if let Some(ad) = &self.adapter {
@@ -125,6 +132,9 @@ pub struct PackedModel {
     pub final_norm: Tensor,
     pub lm_head: Tensor,
     pub blocks: Vec<PackedBlock>,
+    /// Shared precomputed RoPE sin/cos rows (grown once to the longest
+    /// sequence seen); all forward paths index it by absolute position.
+    pub(crate) rope: RopeCache,
 }
 
 // ---------------------------------------------------------------------------
@@ -159,10 +169,6 @@ pub(crate) struct RopeTables {
 }
 
 impl RopeTables {
-    fn new(t: usize, head_dim: usize) -> Self {
-        Self::with_offset(0, t, head_dim)
-    }
-
     /// Tables for absolute positions [offset, offset + t).
     pub(crate) fn with_offset(offset: usize, t: usize, head_dim: usize) -> Self {
         let half = head_dim / 2;
@@ -179,6 +185,85 @@ impl RopeTables {
         }
         RopeTables { cos, sin, half }
     }
+
+    /// Positions this table covers (tables always start at position 0
+    /// when they come out of [`RopeCache`]).
+    pub(crate) fn positions(&self) -> usize {
+        if self.half == 0 {
+            0
+        } else {
+            self.cos.len() / self.half
+        }
+    }
+
+    fn covers(&self, head_dim: usize, upto: usize) -> bool {
+        if head_dim / 2 == 0 {
+            // no rotation to apply; any table "covers" it
+            return true;
+        }
+        self.half == head_dim / 2 && self.positions() >= upto
+    }
+
+    /// Borrowed window over rows [offset, offset + t).
+    pub(crate) fn view(&self, offset: usize, t: usize) -> RopeView<'_> {
+        let h = self.half;
+        RopeView {
+            cos: &self.cos[offset * h..(offset + t) * h],
+            sin: &self.sin[offset * h..(offset + t) * h],
+            half: h,
+        }
+    }
+}
+
+/// A borrowed window of precomputed RoPE rows, row `ti` = absolute
+/// position `offset + ti` of the table it was cut from.
+pub(crate) struct RopeView<'a> {
+    pub(crate) cos: &'a [f32],
+    pub(crate) sin: &'a [f32],
+    pub(crate) half: usize,
+}
+
+/// Lazily grown, shared RoPE table: sin/cos are computed ONCE per
+/// position (power-of-two growth up to the longest sequence seen, i.e.
+/// the KV-cache capacity in steady state) instead of per sequence per
+/// step — `forward_step` used to rebuild a fresh table for every
+/// sequence on every decode step.  Reads take the uncontended read-lock
+/// path; growth is rare and rebuilds from position 0 with the exact same
+/// arithmetic, so cached rows are bit-identical to freshly built ones.
+pub(crate) struct RopeCache {
+    tables: RwLock<RopeTables>,
+}
+
+impl RopeCache {
+    pub(crate) fn new() -> Self {
+        RopeCache {
+            tables: RwLock::new(RopeTables { cos: Vec::new(), sin: Vec::new(), half: 0 }),
+        }
+    }
+
+    /// Read guard over tables covering positions [0, upto).
+    pub(crate) fn upto(&self, head_dim: usize, upto: usize) -> RwLockReadGuard<'_, RopeTables> {
+        {
+            let g = self.tables.read().expect("rope cache poisoned");
+            if g.covers(head_dim, upto) {
+                return g;
+            }
+        }
+        {
+            let mut w = self.tables.write().expect("rope cache poisoned");
+            if !w.covers(head_dim, upto) {
+                let cap = upto.next_power_of_two().max(128);
+                *w = RopeTables::with_offset(0, cap, head_dim);
+            }
+        }
+        self.tables.read().expect("rope cache poisoned")
+    }
+}
+
+impl Default for RopeCache {
+    fn default() -> Self {
+        RopeCache::new()
+    }
 }
 
 /// Rotate interleaved (even, odd) pairs of every head, in place.
@@ -189,7 +274,7 @@ pub(crate) fn apply_rope(
     t: usize,
     h: usize,
     hd: usize,
-    rope: &RopeTables,
+    rope: &RopeView<'_>,
 ) {
     let d = h * hd;
     let half = rope.half;
@@ -339,7 +424,7 @@ impl PackedModel {
                 wdown: lay(LinearKind::Wdown)?,
             });
         }
-        Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks })
+        Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks, rope: RopeCache::new() })
     }
 
     /// Build from any quantizer's `QuantResult`: in-graph quantizers
@@ -365,7 +450,8 @@ impl PackedModel {
         let vocab = self.cfg.vocab;
         let h = self.cfg.n_heads;
         let hd = d / h;
-        let rope = RopeTables::new(t, hd);
+        let tables = self.rope.upto(hd, t);
+        let rope = tables.view(0, t);
 
         // Embed.
         let mut x = Tensor::zeros(&[b * t, d]);
@@ -444,7 +530,7 @@ impl PackedBlock {
         x: &Tensor,
         b: usize,
         t: usize,
-        rope: &RopeTables,
+        rope: &RopeView<'_>,
     ) -> Result<Tensor> {
         let d = cfg.d_model;
         let h = cfg.n_heads;
@@ -573,8 +659,8 @@ mod tests {
         let (b, t, h, hd) = (1, 4, 2, 8);
         let x = Tensor::randn(&[b * t, h * hd], 1.0, &mut rng);
         let mut y = x.clone();
-        let rope = RopeTables::new(t, hd);
-        apply_rope(y.data_mut(), b, t, h, hd, &rope);
+        let tables = RopeTables::with_offset(0, t, hd);
+        apply_rope(y.data_mut(), b, t, h, hd, &tables.view(0, t));
         // rotations preserve the per-pair norm
         for i in 0..b * t * h * hd / 2 {
             let (a0, a1) = (x.data()[2 * i], x.data()[2 * i + 1]);
@@ -585,6 +671,24 @@ mod tests {
         }
         // position 0 is the identity rotation
         assert_eq!(&x.data()[..h * hd], &y.data()[..h * hd]);
+    }
+
+    #[test]
+    fn rope_cache_rows_match_fresh_offset_tables() {
+        let cache = RopeCache::new();
+        let hd = 8;
+        let guard = cache.upto(hd, 10);
+        let fresh = RopeTables::with_offset(4, 3, hd);
+        let view = guard.view(4, 3);
+        assert_eq!(view.cos, &fresh.cos[..], "cached cos rows must be bit-identical");
+        assert_eq!(view.sin, &fresh.sin[..], "cached sin rows must be bit-identical");
+        drop(guard);
+        // growth rebuilds from position 0 with identical arithmetic
+        let grown = cache.upto(hd, 1000);
+        assert!(grown.positions() >= 1000);
+        let regrown = grown.view(4, 3);
+        assert_eq!(regrown.cos, &fresh.cos[..]);
+        assert_eq!(regrown.sin, &fresh.sin[..]);
     }
 
     #[test]

@@ -1,0 +1,503 @@
+//! Fused dequantize-on-the-fly kernels over the packed sub-byte payload.
+//!
+//! The serving hot path: `y = x @ (s * (q - z))` computed straight from
+//! the bit-packed codes, never materializing the dense f32 weight.  Two
+//! shapes:
+//!
+//! * [`fused_matmul`] — the panel path (prefill, batched steps): per
+//!   column block, each quantization group is unpacked into a
+//!   `group x cols` scratch tile once and swept by all token rows.
+//! * [`fused_gemv`] — the decode path (`n_tok <= MATVEC_MAX_ROWS`):
+//!   column-major tile traversal of the payload, dequantizing each code
+//!   directly into the accumulate with no scratch roundtrip — the batch-1
+//!   `forward_step` stops paying the row-panel layout tax.
+//!
+//! Codes come out of the stream through [`unpack_run`], a u64 bit-buffer
+//! that amortizes the byte arithmetic to one shift+mask per code (8+
+//! codes per refill at serving widths) instead of PR 1's per-element
+//! byte/offset/carry dance.
+//!
+//! Bitwise contract (see `kernels` module docs): scalar and AVX2, panel
+//! and GEMV, serial and pooled all accumulate every output element in
+//! ascending-k order with separate IEEE mul + add — outputs are bitwise
+//! identical across all of them, which is what keeps greedy decode
+//! streams token-identical whatever the dispatcher picks.
+
+use crate::kernels::gemm::GEMM_PARALLEL_MIN_FLOPS;
+use crate::kernels::pool::{ThreadPool, UnsafeSlice};
+use crate::kernels::Kernel;
+
+/// Column-block width of the fused task grid (and the GEMV tile).
+pub const FUSED_COL_BLOCK: usize = 64;
+
+/// Largest `n_tok` the GEMV path specializes for; wider inputs take the
+/// panel path.
+pub const MATVEC_MAX_ROWS: usize = 4;
+
+/// Borrowed view of a packed linear's payload — raw parts, so the
+/// kernels stay decoupled from the storage struct in `quant::pack`.
+#[derive(Clone, Copy)]
+pub struct PackedView<'a> {
+    /// Little-endian bit-packed codes, row-major `(d_in, d_out)`.
+    pub packed: &'a [u8],
+    /// Per-group scales, row-major `(d_in / group, d_out)`.
+    pub scales: &'a [f32],
+    /// Per-group zero-points, row-major `(d_in / group, d_out)`.
+    pub zeros: &'a [u8],
+    pub d_in: usize,
+    pub d_out: usize,
+    pub group: usize,
+    pub bits: usize,
+}
+
+/// Unpack `out.len()` consecutive codes starting at absolute bit
+/// `bitpos` of the little-endian stream.  A u64 bit buffer is refilled a
+/// byte-run at a time, so extraction is one shift+mask per code.
+/// Callers guarantee the stream holds `bitpos + out.len() * bits` bits.
+#[inline]
+pub fn unpack_run(packed: &[u8], bitpos: usize, bits: usize, out: &mut [u32]) {
+    debug_assert!((1..=8).contains(&bits));
+    let mask = (1u32 << bits) - 1;
+    let mut byte = bitpos >> 3;
+    let mut buf: u64 = 0;
+    let mut have: usize = 0;
+    while have <= 56 && byte < packed.len() {
+        buf |= (packed[byte] as u64) << have;
+        have += 8;
+        byte += 1;
+    }
+    let skip = bitpos & 7;
+    buf >>= skip;
+    have = have.saturating_sub(skip);
+    for o in out.iter_mut() {
+        if have < bits {
+            while have <= 56 && byte < packed.len() {
+                buf |= (packed[byte] as u64) << have;
+                have += 8;
+                byte += 1;
+            }
+        }
+        *o = (buf as u32) & mask;
+        buf >>= bits;
+        have = have.saturating_sub(bits);
+    }
+}
+
+/// Scalar fused panel tile over columns `[j0, j0 + cols)`: per group,
+/// dequantize a `group x cols` scratch block (codes -> `s * (q - z)`),
+/// then accumulate all `n_tok` rows through it.  Groups ascend, rows
+/// within a group ascend — global ascending-k order per output element.
+fn tile_scalar(
+    v: &PackedView<'_>,
+    x: &[f32],
+    n_tok: usize,
+    out: &UnsafeSlice<'_, f32>,
+    j0: usize,
+    cols: usize,
+) {
+    let d_out = v.d_out;
+    let group = v.group;
+    let n_groups = v.d_in / group;
+    let mut wblock = vec![0.0f32; group * cols];
+    let mut codes = vec![0u32; cols];
+    for gi in 0..n_groups {
+        let srow = &v.scales[gi * d_out + j0..gi * d_out + j0 + cols];
+        let zrow = &v.zeros[gi * d_out + j0..gi * d_out + j0 + cols];
+        for r in 0..group {
+            let row = gi * group + r;
+            unpack_run(v.packed, (row * d_out + j0) * v.bits, v.bits, &mut codes);
+            let wrow = &mut wblock[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                wrow[j] = srow[j] * (codes[j] as f32 - zrow[j] as f32);
+            }
+        }
+        for t in 0..n_tok {
+            let xrow = &x[t * v.d_in + gi * group..t * v.d_in + (gi + 1) * group];
+            // SAFETY: column blocks are disjoint per task.
+            let orow = unsafe { out.slice_mut(t * d_out + j0, cols) };
+            for (r, &xv) in xrow.iter().enumerate() {
+                let wrow = &wblock[r * cols..(r + 1) * cols];
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar fused GEMV tile: walk the column tile down ALL weight rows in
+/// order, dequantizing each code straight into the accumulate — no
+/// group scratch.  Per-element arithmetic identical to [`tile_scalar`].
+fn gemv_scalar(
+    v: &PackedView<'_>,
+    x: &[f32],
+    n_tok: usize,
+    out: &UnsafeSlice<'_, f32>,
+    j0: usize,
+    cols: usize,
+) {
+    debug_assert!(n_tok <= MATVEC_MAX_ROWS && cols <= FUSED_COL_BLOCK);
+    let d_out = v.d_out;
+    let mut codes = [0u32; FUSED_COL_BLOCK];
+    let codes = &mut codes[..cols];
+    let mut w = [0.0f32; FUSED_COL_BLOCK];
+    let w = &mut w[..cols];
+    for row in 0..v.d_in {
+        let gi = row / v.group;
+        let srow = &v.scales[gi * d_out + j0..gi * d_out + j0 + cols];
+        let zrow = &v.zeros[gi * d_out + j0..gi * d_out + j0 + cols];
+        unpack_run(v.packed, (row * d_out + j0) * v.bits, v.bits, codes);
+        for j in 0..cols {
+            w[j] = srow[j] * (codes[j] as f32 - zrow[j] as f32);
+        }
+        for t in 0..n_tok {
+            let xv = x[t * v.d_in + row];
+            // SAFETY: column blocks are disjoint per task.
+            let orow = unsafe { out.slice_mut(t * d_out + j0, cols) };
+            for (o, &wv) in orow.iter_mut().zip(w.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// Dequantize 8 codes at `codes[j..]` against `srow/zrow[j..]`:
+    /// `s * (cvt(q) - cvt(z))`, all conversions integer-exact.
+    ///
+    /// # Safety
+    ///
+    /// avx2 must be available and `j + 8 <= len` for all three slices.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dequant8(codes: *const u32, srow: *const f32, zrow: *const u8) -> __m256 {
+        let q = _mm256_cvtepi32_ps(_mm256_loadu_si256(codes as *const __m256i));
+        let z = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_loadl_epi64(zrow as *const __m128i)));
+        let s = _mm256_loadu_ps(srow);
+        _mm256_mul_ps(s, _mm256_sub_ps(q, z))
+    }
+
+    /// AVX2 fused panel tile, bitwise-equal to [`tile_scalar`]: the
+    /// dequant into the scratch block and the token-row sweep are both
+    /// vectorized across columns with separate mul + add.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified avx2+fma support; the column block must
+    /// be a disjoint region of `out`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn tile(
+        v: &PackedView<'_>,
+        x: &[f32],
+        n_tok: usize,
+        out: &UnsafeSlice<'_, f32>,
+        j0: usize,
+        cols: usize,
+    ) {
+        let d_out = v.d_out;
+        let group = v.group;
+        let n_groups = v.d_in / group;
+        let mut wblock = vec![0.0f32; group * cols];
+        let mut codes = vec![0u32; cols];
+        for gi in 0..n_groups {
+            let srow = &v.scales[gi * d_out + j0..gi * d_out + j0 + cols];
+            let zrow = &v.zeros[gi * d_out + j0..gi * d_out + j0 + cols];
+            for r in 0..group {
+                let row = gi * group + r;
+                unpack_run(v.packed, (row * d_out + j0) * v.bits, v.bits, &mut codes);
+                let wrow = &mut wblock[r * cols..(r + 1) * cols];
+                let (cp, sp, zp) = (codes.as_ptr(), srow.as_ptr(), zrow.as_ptr());
+                let mut j = 0usize;
+                while j + 8 <= cols {
+                    let w = dequant8(cp.add(j), sp.add(j), zp.add(j));
+                    _mm256_storeu_ps(wrow.as_mut_ptr().add(j), w);
+                    j += 8;
+                }
+                while j < cols {
+                    wrow[j] = srow[j] * (codes[j] as f32 - zrow[j] as f32);
+                    j += 1;
+                }
+            }
+            for t in 0..n_tok {
+                let xrow = &x[t * v.d_in + gi * group..t * v.d_in + (gi + 1) * group];
+                let orow = out.slice_mut(t * d_out + j0, cols);
+                let op = orow.as_mut_ptr();
+                let mut j = 0usize;
+                // 32-column sub-tiles: accumulators stay in registers
+                // across the whole group.
+                while j + 32 <= cols {
+                    let p = op.add(j);
+                    let mut acc0 = _mm256_loadu_ps(p);
+                    let mut acc1 = _mm256_loadu_ps(p.add(8));
+                    let mut acc2 = _mm256_loadu_ps(p.add(16));
+                    let mut acc3 = _mm256_loadu_ps(p.add(24));
+                    for (r, &xv) in xrow.iter().enumerate() {
+                        let av = _mm256_set1_ps(xv);
+                        let wp = wblock.as_ptr().add(r * cols + j);
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(av, _mm256_loadu_ps(wp)));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(av, _mm256_loadu_ps(wp.add(8))));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(av, _mm256_loadu_ps(wp.add(16))));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(av, _mm256_loadu_ps(wp.add(24))));
+                    }
+                    _mm256_storeu_ps(p, acc0);
+                    _mm256_storeu_ps(p.add(8), acc1);
+                    _mm256_storeu_ps(p.add(16), acc2);
+                    _mm256_storeu_ps(p.add(24), acc3);
+                    j += 32;
+                }
+                while j + 8 <= cols {
+                    let p = op.add(j);
+                    let mut acc = _mm256_loadu_ps(p);
+                    for (r, &xv) in xrow.iter().enumerate() {
+                        let av = _mm256_set1_ps(xv);
+                        let wp = wblock.as_ptr().add(r * cols + j);
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, _mm256_loadu_ps(wp)));
+                    }
+                    _mm256_storeu_ps(p, acc);
+                    j += 8;
+                }
+                while j < cols {
+                    let mut acc = *orow.get_unchecked(j);
+                    for (r, &xv) in xrow.iter().enumerate() {
+                        acc += xv * *wblock.get_unchecked(r * cols + j);
+                    }
+                    *orow.get_unchecked_mut(j) = acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// AVX2 fused GEMV tile (`n_tok <= 4`), bitwise-equal to
+    /// [`gemv_scalar`].  The batch-1 full-width case keeps the whole
+    /// 64-column tile in 8 ymm accumulators for the entire k sweep; the
+    /// general case shares each dequantized row across the token rows
+    /// through a stack tile.
+    ///
+    /// # Safety
+    ///
+    /// As for [`tile`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemv_tile(
+        v: &PackedView<'_>,
+        x: &[f32],
+        n_tok: usize,
+        out: &UnsafeSlice<'_, f32>,
+        j0: usize,
+        cols: usize,
+    ) {
+        debug_assert!(n_tok <= MATVEC_MAX_ROWS && cols <= FUSED_COL_BLOCK);
+        if n_tok == 1 && cols == FUSED_COL_BLOCK {
+            gemv1_reg(v, x, out, j0);
+            return;
+        }
+        let d_out = v.d_out;
+        let mut codes = [0u32; FUSED_COL_BLOCK];
+        let mut w = [0.0f32; FUSED_COL_BLOCK];
+        for row in 0..v.d_in {
+            let gi = row / v.group;
+            let sp = v.scales.as_ptr().add(gi * d_out + j0);
+            let zp = v.zeros.as_ptr().add(gi * d_out + j0);
+            unpack_run(v.packed, (row * d_out + j0) * v.bits, v.bits, &mut codes[..cols]);
+            let mut j = 0usize;
+            while j + 8 <= cols {
+                let wv = dequant8(codes.as_ptr().add(j), sp.add(j), zp.add(j));
+                _mm256_storeu_ps(w.as_mut_ptr().add(j), wv);
+                j += 8;
+            }
+            while j < cols {
+                w[j] = *sp.add(j) * (codes[j] as f32 - *zp.add(j) as f32);
+                j += 1;
+            }
+            for t in 0..n_tok {
+                let av = _mm256_set1_ps(*x.get_unchecked(t * v.d_in + row));
+                let orow = out.slice_mut(t * d_out + j0, cols);
+                let op = orow.as_mut_ptr();
+                let mut j = 0usize;
+                while j + 8 <= cols {
+                    let p = op.add(j);
+                    let acc = _mm256_add_ps(
+                        _mm256_loadu_ps(p),
+                        _mm256_mul_ps(av, _mm256_loadu_ps(w.as_ptr().add(j))),
+                    );
+                    _mm256_storeu_ps(p, acc);
+                    j += 8;
+                }
+                while j < cols {
+                    *orow.get_unchecked_mut(j) +=
+                        *x.get_unchecked(t * v.d_in + row) * *w.get_unchecked(j);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Batch-1 register-resident GEMV over one full-width column tile:
+    /// 8 ymm accumulators hold `y[j0..j0+64]` for the entire k sweep,
+    /// dequantizing each weight row straight into the accumulate.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemv1_reg(v: &PackedView<'_>, x: &[f32], out: &UnsafeSlice<'_, f32>, j0: usize) {
+        let d_out = v.d_out;
+        let orow = out.slice_mut(j0, FUSED_COL_BLOCK);
+        let op = orow.as_mut_ptr();
+        let mut acc = [_mm256_setzero_ps(); 8];
+        for (c, a) in acc.iter_mut().enumerate() {
+            *a = _mm256_loadu_ps(op.add(8 * c));
+        }
+        let mut codes = [0u32; FUSED_COL_BLOCK];
+        for row in 0..v.d_in {
+            let gi = row / v.group;
+            let sp = v.scales.as_ptr().add(gi * d_out + j0);
+            let zp = v.zeros.as_ptr().add(gi * d_out + j0);
+            unpack_run(v.packed, (row * d_out + j0) * v.bits, v.bits, &mut codes);
+            let av = _mm256_set1_ps(*x.get_unchecked(row));
+            for (c, a) in acc.iter_mut().enumerate() {
+                let w = dequant8(codes.as_ptr().add(8 * c), sp.add(8 * c), zp.add(8 * c));
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(av, w));
+            }
+        }
+        for (c, a) in acc.iter().enumerate() {
+            _mm256_storeu_ps(op.add(8 * c), *a);
+        }
+    }
+}
+
+/// Run the fused task grid: one task per `FUSED_COL_BLOCK`-wide column
+/// block (pool workers write straight into their disjoint column panels
+/// of `out`), inline when the problem is below the parallel threshold.
+fn run_blocks(
+    pool: &ThreadPool,
+    v: &PackedView<'_>,
+    n_tok: usize,
+    run: &(dyn Fn(usize) + Sync),
+) {
+    let col_blocks = v.d_out.div_ceil(FUSED_COL_BLOCK);
+    if col_blocks == 1
+        || pool.threads() == 1
+        || n_tok * v.d_in * v.d_out < GEMM_PARALLEL_MIN_FLOPS
+    {
+        for cb in 0..col_blocks {
+            run(cb);
+        }
+    } else {
+        pool.parallel_for(col_blocks, run);
+    }
+}
+
+/// Validate the invariants the (unchecked-pointer) tile kernels rely
+/// on.  `PackedView` has public fields, so the safe entry points must
+/// not trust a caller-built view; these are O(1) checks against O(n^3)
+/// work.  Panics on violation.
+fn check_view(v: &PackedView<'_>, x: &[f32], n_tok: usize, out: &[f32]) {
+    assert!((1..=8).contains(&v.bits), "PackedView: bits {} not in 1..=8", v.bits);
+    assert!(
+        v.group > 0 && v.d_in % v.group == 0,
+        "PackedView: group {} must divide d_in {}",
+        v.group,
+        v.d_in
+    );
+    let meta = (v.d_in / v.group) * v.d_out;
+    assert!(v.scales.len() >= meta, "PackedView: scales too short");
+    assert!(v.zeros.len() >= meta, "PackedView: zeros too short");
+    assert!(
+        v.packed.len() * 8 >= v.d_in * v.d_out * v.bits,
+        "PackedView: packed stream too short"
+    );
+    assert_eq!(x.len(), n_tok * v.d_in, "PackedView: x length mismatch");
+    assert_eq!(out.len(), n_tok * v.d_out, "PackedView: out length mismatch");
+}
+
+/// Fused dequant matmul with explicit kernel + pool: `out (n_tok, d_out)
+/// += x (n_tok, d_in) @ dequant(v)`.  `out` is expected zeroed (or to
+/// hold a partial sum to accumulate onto).
+pub fn fused_matmul(
+    kernel: Kernel,
+    pool: &ThreadPool,
+    v: &PackedView<'_>,
+    x: &[f32],
+    n_tok: usize,
+    out: &mut [f32],
+) {
+    check_view(v, x, n_tok, out);
+    let view = UnsafeSlice::new(out);
+    let run = |cb: usize| {
+        let j0 = cb * FUSED_COL_BLOCK;
+        let cols = FUSED_COL_BLOCK.min(v.d_out - j0);
+        match kernel {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 is only selected after feature detection;
+            // column blocks are disjoint per task index.
+            Kernel::Avx2 => unsafe { avx2::tile(v, x, n_tok, &view, j0, cols) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => tile_scalar(v, x, n_tok, &view, j0, cols),
+            Kernel::Scalar => tile_scalar(v, x, n_tok, &view, j0, cols),
+        }
+    };
+    run_blocks(pool, v, n_tok, &run);
+}
+
+/// Decode-specialized fused GEMV (`n_tok <= MATVEC_MAX_ROWS`): same
+/// contract as [`fused_matmul`], bitwise-identical output, but traverses
+/// each column tile straight down the payload with no group scratch.
+/// Falls back to the panel path for wider inputs.
+pub fn fused_gemv(
+    kernel: Kernel,
+    pool: &ThreadPool,
+    v: &PackedView<'_>,
+    x: &[f32],
+    n_tok: usize,
+    out: &mut [f32],
+) {
+    if n_tok > MATVEC_MAX_ROWS {
+        fused_matmul(kernel, pool, v, x, n_tok, out);
+        return;
+    }
+    check_view(v, x, n_tok, out);
+    let view = UnsafeSlice::new(out);
+    let run = |cb: usize| {
+        let j0 = cb * FUSED_COL_BLOCK;
+        let cols = FUSED_COL_BLOCK.min(v.d_out - j0);
+        match kernel {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: as in `fused_matmul`.
+            Kernel::Avx2 => unsafe { avx2::gemv_tile(v, x, n_tok, &view, j0, cols) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => gemv_scalar(v, x, n_tok, &view, j0, cols),
+            Kernel::Scalar => gemv_scalar(v, x, n_tok, &view, j0, cols),
+        }
+    };
+    run_blocks(pool, v, n_tok, &run);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack_codes;
+
+    #[test]
+    fn unpack_run_matches_reference_all_bits_and_offsets() {
+        for bits in [1usize, 2, 3, 4, 5, 8] {
+            let mask = (1u32 << bits) - 1;
+            let n = 200;
+            let codes: Vec<u32> =
+                (0..n as u32).map(|i| i.wrapping_mul(2654435761) & mask).collect();
+            let packed = pack_codes(&codes, bits as u32);
+            for start in [0usize, 1, 7, 63, 100] {
+                let want = &codes[start..];
+                let mut got = vec![0u32; want.len()];
+                unpack_run(&packed, start * bits, bits, &mut got);
+                assert_eq!(&got, want, "bits={bits} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_run_empty_is_noop() {
+        let mut out: [u32; 0] = [];
+        unpack_run(&[], 0, 2, &mut out);
+    }
+}

@@ -1,0 +1,248 @@
+//! Dense f32 GEMM tiles: scalar reference + AVX2, k-blocked, pooled.
+//!
+//! `gemm_accum` accumulates `a (m x k) @ b (k x n)` into `out (m x n)`
+//! WITHOUT zeroing `out` first (callers chain calls to accumulate).  Work
+//! splits into fixed `MR x NC` output tiles — the grid depends on the
+//! problem shape only, never the pool width, so results are bitwise
+//! identical at any thread count.  Within a tile, k is swept in
+//! `KC`-blocks with the accumulator lanes parked in registers per block;
+//! every output element still sums its products in ascending-k order
+//! with separate IEEE mul + add steps, so the AVX2 tile reproduces the
+//! scalar tile bit for bit (see the module docs in `kernels`).
+
+use crate::kernels::pool;
+use crate::kernels::pool::{ThreadPool, UnsafeSlice};
+use crate::kernels::Kernel;
+
+/// Output-tile height (rows of `out` per task).
+pub const MR: usize = 32;
+/// Output-tile width (columns of `out` per task).
+pub const NC: usize = 64;
+/// k-block: `KC x NC` f32 panel of `b` (64 KB) stays cache-resident
+/// while a tile's rows sweep it.
+pub const KC: usize = 256;
+
+/// Below this many multiply-accumulates a parallel dispatch costs more
+/// than it saves; run the tile grid inline on the caller.  Shared with
+/// the fused packed matmul in `kernels::dequant`.
+pub const GEMM_PARALLEL_MIN_FLOPS: usize = 1 << 17;
+
+/// Scalar GEMM tile: `out[i0.., j0..] += a[i0.., :] @ b[:, j0..]` over
+/// `rows x cols` outputs.  i / k / j ascending — the reference order.
+#[allow(clippy::too_many_arguments)]
+fn tile_scalar(
+    a: &[f32],
+    b: &[f32],
+    out: &UnsafeSlice<'_, f32>,
+    k: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    cols: usize,
+) {
+    for i in i0..i0 + rows {
+        let arow = &a[i * k..(i + 1) * k];
+        // SAFETY: tiles of the task grid are disjoint by construction.
+        let orow = unsafe { out.slice_mut(i * n + j0, cols) };
+        for (l, &av) in arow.iter().enumerate() {
+            let brow = &b[l * n + j0..l * n + j0 + cols];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// AVX2 GEMM tile, bitwise-equal to [`tile_scalar`]: per k-block the
+    /// output lanes live in ymm registers, accumulated with separate
+    /// `mul` + `add` (no FMA contraction) in ascending-k order.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified avx2+fma support, and the tile must be
+    /// a disjoint region of `out` (see [`UnsafeSlice::slice_mut`]).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn tile(
+        a: &[f32],
+        b: &[f32],
+        out: &UnsafeSlice<'_, f32>,
+        k: usize,
+        n: usize,
+        i0: usize,
+        rows: usize,
+        j0: usize,
+        cols: usize,
+    ) {
+        for i in i0..i0 + rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = out.slice_mut(i * n + j0, cols);
+            let op = orow.as_mut_ptr();
+            let mut kb = 0usize;
+            while kb < k {
+                let kend = (kb + KC).min(k);
+                let mut j = 0usize;
+                // 32-column sub-tiles: 4 accumulators in registers.
+                while j + 32 <= cols {
+                    let p = op.add(j);
+                    let mut acc0 = _mm256_loadu_ps(p);
+                    let mut acc1 = _mm256_loadu_ps(p.add(8));
+                    let mut acc2 = _mm256_loadu_ps(p.add(16));
+                    let mut acc3 = _mm256_loadu_ps(p.add(24));
+                    for l in kb..kend {
+                        let av = _mm256_set1_ps(*arow.get_unchecked(l));
+                        let bp = b.as_ptr().add(l * n + j0 + j);
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(av, _mm256_loadu_ps(bp)));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(8))));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(16))));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(24))));
+                    }
+                    _mm256_storeu_ps(p, acc0);
+                    _mm256_storeu_ps(p.add(8), acc1);
+                    _mm256_storeu_ps(p.add(16), acc2);
+                    _mm256_storeu_ps(p.add(24), acc3);
+                    j += 32;
+                }
+                // 8-column sub-tiles.
+                while j + 8 <= cols {
+                    let p = op.add(j);
+                    let mut acc = _mm256_loadu_ps(p);
+                    for l in kb..kend {
+                        let av = _mm256_set1_ps(*arow.get_unchecked(l));
+                        let bp = b.as_ptr().add(l * n + j0 + j);
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, _mm256_loadu_ps(bp)));
+                    }
+                    _mm256_storeu_ps(p, acc);
+                    j += 8;
+                }
+                // Scalar tail: identical per-element arithmetic.
+                while j < cols {
+                    let mut acc = *orow.get_unchecked(j);
+                    for l in kb..kend {
+                        acc += *arow.get_unchecked(l) * *b.get_unchecked(l * n + j0 + j);
+                    }
+                    *orow.get_unchecked_mut(j) = acc;
+                    j += 1;
+                }
+                kb = kend;
+            }
+        }
+    }
+}
+
+/// GEMM with explicit kernel + pool — the testable entry point (the
+/// determinism tests drive this at 1/2/N threads and scalar-vs-SIMD).
+pub fn gemm_accum_with(
+    kernel: Kernel,
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let col_blocks = n.div_ceil(NC);
+    let row_panels = m.div_ceil(MR);
+    let n_tasks = row_panels * col_blocks;
+    let view = UnsafeSlice::new(out);
+    let run_tile = |ti: usize| {
+        let i0 = (ti / col_blocks) * MR;
+        let j0 = (ti % col_blocks) * NC;
+        let rows = MR.min(m - i0);
+        let cols = NC.min(n - j0);
+        match kernel {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Kernel::Avx2 is only selected after feature
+            // detection; the tile region is disjoint per task index.
+            Kernel::Avx2 => unsafe { avx2::tile(a, b, &view, k, n, i0, rows, j0, cols) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => tile_scalar(a, b, &view, k, n, i0, rows, j0, cols),
+            Kernel::Scalar => tile_scalar(a, b, &view, k, n, i0, rows, j0, cols),
+        }
+    };
+    if n_tasks == 1 || pool.threads() == 1 || m * k * n < GEMM_PARALLEL_MIN_FLOPS {
+        for ti in 0..n_tasks {
+            run_tile(ti);
+        }
+    } else {
+        pool.parallel_for(n_tasks, &run_tile);
+    }
+}
+
+/// Dispatched GEMM on the global pool — what `Tensor::matmul` and every
+/// dense layer forward route through.
+pub fn gemm_accum(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_accum_with(super::active(), pool::global(), a, b, out, m, k, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let av = a[i * k + l];
+                for j in 0..n {
+                    out[i * n + j] += av * b[l * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn fill(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = crate::tensor::Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn tiles_match_naive_awkward_shapes() {
+        let pool = ThreadPool::with_threads(3);
+        for &(m, k, n) in &[(1, 7, 5), (33, 65, 67), (4, 300, 91), (70, 16, 64)] {
+            let a = fill(m as u64 * 31 + n as u64, m * k);
+            let b = fill(k as u64 * 7 + 1, k * n);
+            let want = naive(&a, &b, m, k, n);
+            for kern in [Kernel::Scalar, kernels::active()] {
+                let mut out = vec![0.0f32; m * n];
+                gemm_accum_with(kern, &pool, &a, &b, &mut out, m, k, n);
+                assert_eq!(out, want, "{m}x{k}x{n} kernel {}", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_existing_output() {
+        let pool = ThreadPool::with_threads(2);
+        let p1 = ThreadPool::with_threads(1);
+        let (m, k, n) = (3, 4, 5);
+        let a = fill(1, m * k);
+        let b = fill(2, k * n);
+        // scalar and dispatched kernels must agree bitwise even when the
+        // output starts non-zero (the accumulate contract)
+        let mut want = vec![1.5f32; m * n];
+        gemm_accum_with(Kernel::Scalar, &p1, &a, &b, &mut want, m, k, n);
+        let mut out = vec![1.5f32; m * n];
+        gemm_accum_with(kernels::active(), &pool, &a, &b, &mut out, m, k, n);
+        assert_eq!(out, want);
+        // and the accumulate really started from 1.5, not from 0
+        for (o, z) in want.iter().zip(naive(&a, &b, m, k, n).iter()) {
+            assert!((o - z - 1.5).abs() < 1e-4, "{o} vs {z} + 1.5");
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! The SIMD compute core: runtime-dispatched GEMM + fused-dequant
+//! kernels and the persistent worker pool they run on.
+//!
+//! Layout:
+//!
+//! * [`pool`] — the channel-fed persistent thread pool ([`pool::global`],
+//!   sized once from `REPRO_THREADS` / available parallelism) that
+//!   replaces the per-call `std::thread::scope` spawns of PR 1.
+//! * [`gemm`] — dense f32 GEMM tiles (scalar reference + AVX2).
+//! * [`dequant`] — fused dequantize-on-the-fly kernels over the packed
+//!   sub-byte payload: the batched bit-stream unpacker, the group-scratch
+//!   panel matmul, and the decode-specialized GEMV for `n_tok <= 4`.
+//!
+//! ## Dispatch
+//!
+//! [`active`] picks the widest kernel the CPU supports at first use
+//! (`is_x86_feature_detected!("avx2")` + `"fma"`), overridable with
+//! `REPRO_KERNEL=scalar|avx2` for benchmarks and CI.  The scalar path is
+//! not a leftover: it is the portable build AND the reference oracle the
+//! property tests compare against.
+//!
+//! ## Determinism
+//!
+//! Every kernel — scalar or SIMD, serial or pooled — produces bitwise
+//! identical output for the same input:
+//!
+//! * each output element accumulates its k-products in ascending-k order
+//!   (fixed reduction order, no horizontal sums);
+//! * SIMD lanes use separate IEEE `mul` + `add` steps, never contracted
+//!   FMA, so each lane reproduces the scalar arithmetic exactly (the
+//!   `fma` feature is still required — the dequant path leans on AVX2
+//!   integer conversions that ship with it on every real core);
+//! * task decomposition is derived from the problem shape only, never
+//!   from the pool width, so thread count cannot reorder anything.
+//!
+//! Greedy decode streams are therefore token-identical across kernel
+//! choices and thread counts; `tests/kernels.rs` pins the bitwise claim.
+
+pub mod dequant;
+pub mod gemm;
+pub mod pool;
+
+use std::sync::OnceLock;
+
+/// A selectable compute kernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable reference path; also the equivalence oracle.
+    Scalar,
+    /// x86_64 AVX2 (+FMA-capable CPU) vectorized path.
+    Avx2,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when this build + CPU can run the AVX2 kernels.
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The kernel the dispatched entry points use: `REPRO_KERNEL` override
+/// when set (`scalar` forces the reference path; `avx2` is ignored with a
+/// warning on CPUs that lack it), else feature detection.  Latched once.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let detected = if simd_supported() { Kernel::Avx2 } else { Kernel::Scalar };
+        match std::env::var("REPRO_KERNEL").ok().as_deref() {
+            Some("scalar") => Kernel::Scalar,
+            Some("avx2") => {
+                if detected != Kernel::Avx2 {
+                    eprintln!("[kernels] REPRO_KERNEL=avx2 but CPU lacks avx2+fma; using scalar");
+                }
+                detected
+            }
+            Some(other) => {
+                eprintln!("[kernels] unknown REPRO_KERNEL '{other}'; using {}", detected.name());
+                detected
+            }
+            None => detected,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_are_stable() {
+        // BENCH_kernels.json and the CI dispatch check grep these.
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn active_is_consistent_with_detection() {
+        // With no env override the dispatcher must pick the widest
+        // supported kernel; with one, it must still be a valid kernel.
+        let k = active();
+        if !simd_supported() {
+            assert_eq!(k, Kernel::Scalar, "cannot dispatch avx2 without CPU support");
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Persistent worker thread pool for the compute kernels.
+//!
+//! PR 1's GEMM spawned a fresh `std::thread::scope` per matmul call —
+//! dozens of thread spawns per decoded token once the serve subsystem
+//! made batch-1 `forward_step` the hot path.  This pool spawns its
+//! workers ONCE (sized from `REPRO_THREADS`, else the machine's available
+//! parallelism) and feeds them batches over channels; a `parallel_for`
+//! call costs a channel send + wake instead of clone/spawn/join.
+//!
+//! Determinism contract: `parallel_for(n_tasks, f)` runs `f(0..n_tasks)`
+//! exactly once each, with task decomposition chosen by the CALLER from
+//! problem shape alone (never from the pool size).  Tasks write disjoint
+//! output regions, so which worker runs which task cannot affect results
+//! — the kernels above this produce bitwise-identical output at 1, 2, or
+//! N threads (`tests/kernels.rs` pins this).
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, OnceLock};
+
+thread_local! {
+    /// True while this thread is executing a pool task.  A nested
+    /// `parallel_for` from inside a task runs its batch inline instead
+    /// of dispatching — two tasks blocking on jobs queued to each
+    /// other's workers would otherwise deadlock.
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Pool width: `REPRO_THREADS` if set (and > 0), otherwise the machine's
+/// available parallelism.  Latched once per process.
+pub fn pool_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("REPRO_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// The process-wide kernel pool, spawned on first use.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::with_threads(pool_threads()))
+}
+
+/// One in-flight `parallel_for` call, shared with workers by pointer.
+/// Lives on the caller's stack; the caller does not return until every
+/// worker it dispatched to has sent its completion message, so the
+/// borrow can never dangle.
+struct Batch<'a> {
+    task: &'a (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    next: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+impl Batch<'_> {
+    /// Claim and run tasks until the batch is drained.  Task panics are
+    /// caught (a dead worker would deadlock every later matmul) and
+    /// re-raised on the calling thread after the join.
+    fn run(&self) {
+        IN_POOL_TASK.with(|flag| {
+            let prev = flag.replace(true);
+            loop {
+                let i = self.next.fetch_add(1, Ordering::Relaxed);
+                if i >= self.n_tasks {
+                    break;
+                }
+                if catch_unwind(AssertUnwindSafe(|| (self.task)(i))).is_err() {
+                    self.panicked.store(true, Ordering::Release);
+                }
+            }
+            flag.set(prev);
+        });
+    }
+}
+
+/// A dispatched batch reference plus the completion channel the worker
+/// signals on when it is finished touching the batch.
+struct Job {
+    batch: *const Batch<'static>,
+    done: Sender<()>,
+}
+
+// SAFETY: the Batch pointer is only dereferenced while the dispatching
+// `parallel_for` call keeps the batch alive (it blocks on `done`), and
+// the closure inside is `Sync`.
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        // SAFETY: the dispatcher holds the batch on its stack until it
+        // has received the `done` message sent below.
+        unsafe { (*job.batch).run() };
+        let _ = job.done.send(());
+    }
+}
+
+/// Channel-fed persistent thread pool.  `with_threads(n)` spawns `n - 1`
+/// workers; the thread calling `parallel_for` always participates as the
+/// n-th lane, so small pools degrade gracefully to inline execution.
+pub struct ThreadPool {
+    workers: Vec<Mutex<Sender<Job>>>,
+}
+
+impl ThreadPool {
+    pub fn with_threads(n: usize) -> Self {
+        let n = n.max(1);
+        let mut workers = Vec::with_capacity(n - 1);
+        for i in 0..n - 1 {
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("repro-kernel-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn kernel pool worker");
+            workers.push(Mutex::new(tx));
+        }
+        ThreadPool { workers }
+    }
+
+    /// Total compute lanes: persistent workers plus the calling thread.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `task(0..n_tasks)`, each index exactly once, across the pool.
+    /// Blocks until every task has finished.  Concurrent calls from
+    /// different threads are safe: each caller always makes progress on
+    /// its own batch, so a busy pool delays but never deadlocks.  A
+    /// nested call from inside a pool task runs its whole batch inline
+    /// on the current thread (dispatching could deadlock two mutually
+    /// waiting tasks).
+    pub fn parallel_for(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let batch = Batch {
+            task,
+            n_tasks,
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        };
+        if n_tasks == 1 || self.workers.is_empty() || IN_POOL_TASK.with(|f| f.get()) {
+            batch.run();
+        } else {
+            let (done_tx, done_rx) = channel::<()>();
+            // At most n_tasks - 1 helpers: the caller claims work too.
+            let helpers = self.workers.len().min(n_tasks - 1);
+            let mut dispatched = 0usize;
+            for w in self.workers.iter().take(helpers) {
+                let job = Job {
+                    // SAFETY (lifetime erasure): we block on `done_rx`
+                    // below until this worker reports in, so the batch
+                    // outlives every dereference of this pointer.
+                    batch: unsafe {
+                        std::mem::transmute::<*const Batch<'_>, *const Batch<'static>>(&batch)
+                    },
+                    done: done_tx.clone(),
+                };
+                if w.lock().expect("kernel pool sender poisoned").send(job).is_ok() {
+                    dispatched += 1;
+                }
+            }
+            batch.run();
+            for _ in 0..dispatched {
+                let _ = done_rx.recv();
+            }
+        }
+        if batch.panicked.load(Ordering::Acquire) {
+            panic!("kernel pool task panicked");
+        }
+    }
+}
+
+/// Shared-mutable view over a caller-owned `&mut [T]` for pool tasks that
+/// write DISJOINT regions (e.g. the column panels of a fused matmul
+/// output, which are strided and therefore cannot be split with
+/// `chunks_mut`).  The unsafety of handing out overlapping regions is
+/// concentrated in [`UnsafeSlice::slice_mut`].
+pub struct UnsafeSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is only through `slice_mut`, whose contract requires
+// callers to hand each region to at most one task.
+unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
+
+impl<'a, T> UnsafeSlice<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        UnsafeSlice { ptr: data.as_mut_ptr(), len: data.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Disjoint mutable window `[start, start + len)`.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds, and no two live slices returned from
+    /// the same `UnsafeSlice` may overlap (each output region must be
+    /// owned by exactly one task at a time).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = ThreadPool::with_threads(4);
+        let n = 257;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        pool.parallel_for(n, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::with_threads(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(10, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn disjoint_writes_through_unsafe_slice() {
+        let pool = ThreadPool::with_threads(3);
+        let mut data = vec![0u32; 100];
+        let view = UnsafeSlice::new(&mut data);
+        pool.parallel_for(10, &|i| {
+            // SAFETY: chunks [10i, 10i+10) are disjoint per task.
+            let chunk = unsafe { view.slice_mut(i * 10, 10) };
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 10 + j) as u32;
+            }
+        });
+        for (j, &v) in data.iter().enumerate() {
+            assert_eq!(v, j as u32);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_without_killing_workers() {
+        let pool = ThreadPool::with_threads(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // the pool must still be usable afterwards
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(8, &|i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 36);
+    }
+
+    #[test]
+    fn nested_parallel_for_runs_inline_without_deadlock() {
+        let pool = std::sync::Arc::new(ThreadPool::with_threads(2));
+        let p = pool.clone();
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(4, &|_| {
+            let inner = AtomicUsize::new(0);
+            p.parallel_for(8, &|i| {
+                inner.fetch_add(i, Ordering::Relaxed);
+            });
+            total.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 28);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let pool = std::sync::Arc::new(ThreadPool::with_threads(2));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let sum = AtomicUsize::new(0);
+                p.parallel_for(64, &|i| {
+                    sum.fetch_add(i + t as usize, Ordering::Relaxed);
+                });
+                sum.load(Ordering::Relaxed)
+            }));
+        }
+        for (t, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), 2016 + 64 * t);
+        }
+    }
+}

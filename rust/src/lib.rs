@@ -29,6 +29,7 @@ pub mod data;
 pub mod error;
 pub mod eval;
 pub mod infer;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod pipeline;

@@ -18,10 +18,12 @@ use repro::config::args::Args;
 use repro::data::tasks::{ArithTask, ClassifyTask};
 use repro::data::{Batcher, ZipfMarkovCorpus};
 use repro::infer::{generate_greedy, PackedModel};
+use repro::kernels;
 use repro::metrics::{MemoryModel, TableBuilder};
 use repro::model::{checkpoint, ModelConfig, ParamStore};
 use repro::pipeline::{Env, DEFAULT_GROUP, DEFAULT_RANK};
-use repro::quant::QuantSpec;
+use repro::quant::{PackedLinear, QuantSpec};
+use repro::tensor::Tensor;
 use repro::quantizers::{by_name, QuantResult, QuantizeCtx, Quantizer};
 use repro::serve::decode::{generate, generate_recompute};
 use repro::serve::loadgen::{run_load, LoadOptions};
@@ -43,6 +45,11 @@ COMMANDS
                                                      (no artifacts required)
   bench-infer --size S --bits B                      native packed-vs-dense
                                                      inference benchmark
+  bench-gemm --size S --bits B [--require-simd]      kernel microbench: dense
+                                                     GEMM + fused dequant
+                                                     GFLOP/s per layer shape;
+                                                     --require-simd fails when
+                                                     the dispatcher runs scalar
   pack-ckpt  --size S --method M --bits B [--out P]  save the 2-bit serving
                                                      payload (packed codes +
                                                      scales + zeros + adapters)
@@ -279,6 +286,68 @@ fn run(args: Args) -> repro::Result<()> {
             ));
             bench.finish("bench-infer");
         }
+        "bench-gemm" => {
+            let cfg = ModelConfig::by_name(&size)?;
+            let prefill_rows = args.usize_or("prefill-rows", 16)?.max(1);
+            println!(
+                "kernel: {} (simd_supported: {}), threads: {}",
+                kernels::active().name(),
+                kernels::simd_supported(),
+                kernels::pool::pool_threads()
+            );
+            if args.flag("require-simd") && kernels::active() != kernels::Kernel::Avx2 {
+                return Err(repro::Error::config(format!(
+                    "--require-simd: dispatcher selected '{}' (simd_supported: {}) — \
+                     refusing to run the scalar kernel on a SIMD-capable runner",
+                    kernels::active().name(),
+                    kernels::simd_supported()
+                )));
+            }
+            let spec = QuantSpec::new(bits.clamp(1, 8), group);
+            let mut bench = Bench::new();
+            let shapes = [
+                ("attn_proj", cfg.d_model, cfg.d_model),
+                ("ffn_up", cfg.d_model, cfg.d_ffn),
+                ("ffn_down", cfg.d_ffn, cfg.d_model),
+                ("lm_head", cfg.d_model, cfg.vocab),
+            ];
+            for (label, d_in, d_out) in shapes {
+                let pl = random_packed(d_in, d_out, spec, seed)?;
+                for rows in [1usize, prefill_rows] {
+                    let x = Tensor::randn(&[rows, d_in], 1.0, &mut Rng::new(seed ^ 0xBE7));
+                    let flops = (2 * rows * d_in * d_out) as f64;
+                    let iters = if rows == 1 { 20 } else { 5 };
+                    let mean = bench
+                        .run(&format!("fused_{label}_{rows}tok"), 2, iters, || {
+                            let y = if rows <= PackedLinear::MATVEC_MAX_ROWS {
+                                pl.matvec_fused(&x).unwrap()
+                            } else {
+                                pl.matmul_fused(&x).unwrap()
+                            };
+                            std::hint::black_box(y);
+                        })
+                        .mean_s;
+                    bench.note(format!(
+                        "fused {label} ({rows} x {d_in} x {d_out}, {}-bit): {:.2} GFLOP/s",
+                        spec.bits,
+                        flops / mean / 1e9
+                    ));
+                }
+                let w = Tensor::randn(&[d_in, d_out], 0.1, &mut Rng::new(seed ^ 0xD3));
+                let x = Tensor::randn(&[prefill_rows, d_in], 1.0, &mut Rng::new(seed ^ 0xE4));
+                let flops = (2 * prefill_rows * d_in * d_out) as f64;
+                let mean = bench
+                    .run(&format!("dense_{label}_{prefill_rows}tok"), 2, 5, || {
+                        std::hint::black_box(x.matmul(&w).unwrap());
+                    })
+                    .mean_s;
+                bench.note(format!(
+                    "dense {label} ({prefill_rows} x {d_in} x {d_out}): {:.2} GFLOP/s",
+                    flops / mean / 1e9
+                ));
+            }
+            bench.finish("bench-gemm");
+        }
         "pack-ckpt" => {
             let cfg = ModelConfig::by_name(&size)?;
             let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
@@ -453,6 +522,29 @@ fn build_native_model(
     };
     let r: QuantResult = by_name(method)?.run(&ctx)?;
     PackedModel::from_quant_result(cfg, &r, group, 1.0)
+}
+
+/// Synthetic packed layer for the kernel microbench: random codes +
+/// small random scales, mid-range zero-points.
+fn random_packed(
+    d_in: usize,
+    d_out: usize,
+    spec: QuantSpec,
+    seed: u64,
+) -> repro::Result<PackedLinear> {
+    if spec.group == 0 || d_in % spec.group != 0 {
+        return Err(repro::Error::config(format!(
+            "bench-gemm: group {} must divide d_in {d_in}",
+            spec.group
+        )));
+    }
+    let mut rng = Rng::new(seed);
+    let mask = (1u32 << spec.bits) - 1;
+    let codes: Vec<u32> = (0..d_in * d_out).map(|_| rng.next_u64() as u32 & mask).collect();
+    let n_groups = d_in / spec.group;
+    let scales = Tensor::randn(&[n_groups, d_out], 0.01, &mut rng);
+    let zeros = Tensor::full(&[n_groups, d_out], (mask / 2) as f32);
+    PackedLinear::from_codes(&codes, scales, zeros, d_in, d_out, spec)
 }
 
 fn report_resident_mb(model: &PackedModel) -> f64 {

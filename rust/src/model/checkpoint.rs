@@ -23,7 +23,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
-use crate::infer::{Adapter, LayerWeight, PackedBlock, PackedLayer, PackedModel};
+use crate::infer::{Adapter, LayerWeight, PackedBlock, PackedLayer, PackedModel, RopeCache};
 use crate::model::{ModelConfig, ParamStore};
 use crate::quant::{PackedLinear, QuantSpec};
 use crate::tensor::Tensor;
@@ -434,7 +434,7 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
         }
         blocks.push(block);
     }
-    Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks })
+    Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks, rope: RopeCache::new() })
 }
 
 #[cfg(test)]

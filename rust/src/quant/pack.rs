@@ -7,15 +7,19 @@
 //! in the paper's memory accounting (Fig. 2, Table 4) — the memory model
 //! in `metrics::memory` prices exactly this struct.
 //!
-//! `PackedLinear::matmul_fused` is the serving hot path: it unpacks
-//! codes group-by-group into a small scratch block and accumulates
-//! `x · s(q − z)` through the multi-threaded GEMM, never materializing
-//! the dense f32 weight (the dequantize-on-the-fly GEMM of FineQuant-style
-//! weight-only inference).
+//! `PackedLinear::matmul_fused` / `matvec_fused` are the serving hot
+//! path: they accumulate `x · s(q − z)` straight from the packed codes
+//! through the runtime-dispatched SIMD kernels in `kernels::dequant`,
+//! never materializing the dense f32 weight (the dequantize-on-the-fly
+//! GEMM of FineQuant-style weight-only inference).  `matvec_fused` is
+//! the decode specialization for `n_tok <= 4`.
 
 use crate::error::{Error, Result};
+use crate::kernels::dequant::{fused_gemv, fused_matmul, PackedView};
+use crate::kernels::pool::{self, ThreadPool};
+use crate::kernels::Kernel;
 use crate::quant::affine::{dequantize, QuantSpec};
-use crate::tensor::{gemm_threads, Tensor, GEMM_PARALLEL_MIN_FLOPS};
+use crate::tensor::Tensor;
 
 /// Pack `codes` (each < 2^bits) into a little-endian bit stream.
 pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
@@ -143,96 +147,85 @@ impl PackedLinear {
         )
     }
 
-    /// One column panel of the fused matmul: y[:, col0..col0+cols] for
-    /// x (n_tok, d_in), unpacking one quantization group at a time into a
-    /// (group x cols) scratch block.  Serial; the public entry point
-    /// splits the columns over threads.
-    fn fused_panel_cols(&self, x: &Tensor, col0: usize, cols: usize) -> Vec<f32> {
-        let n_tok = x.rows();
-        let group = self.spec.group;
-        let n_groups = self.d_in / group;
-        let bits = self.spec.bits as usize;
-        let mask = (1u32 << bits) - 1;
-        let mut out = vec![0.0f32; n_tok * cols];
-        let mut wblock = vec![0.0f32; group * cols];
-        for gi in 0..n_groups {
-            // dequantize columns [col0, col0+cols) of this group's rows
-            let srow = self.scales.row(gi);
-            let zrow = &self.zeros[gi * self.d_out..(gi + 1) * self.d_out];
-            for r in 0..group {
-                let mut bitpos = ((gi * group + r) * self.d_out + col0) * bits;
-                let brow = &mut wblock[r * cols..(r + 1) * cols];
-                for (j, bj) in brow.iter_mut().enumerate() {
-                    let byte = bitpos / 8;
-                    let off = bitpos % 8;
-                    let mut v = (self.packed[byte] as u32) >> off;
-                    if off + bits > 8 {
-                        v |= (self.packed[byte + 1] as u32) << (8 - off);
-                    }
-                    let q = (v & mask) as f32;
-                    *bj = srow[col0 + j] * (q - zrow[col0 + j] as f32);
-                    bitpos += bits;
-                }
-            }
-            // out += x[:, group rows] @ wblock  (x columns are contiguous)
-            for t in 0..n_tok {
-                let xrow = &x.row(t)[gi * group..(gi + 1) * group];
-                let orow = &mut out[t * cols..(t + 1) * cols];
-                for (r, &xv) in xrow.iter().enumerate() {
-                    let brow = &wblock[r * cols..(r + 1) * cols];
-                    for j in 0..cols {
-                        orow[j] += xv * brow[j];
-                    }
-                }
-            }
+    /// Borrowed raw-parts view of the payload for the compute kernels.
+    pub fn view(&self) -> PackedView<'_> {
+        PackedView {
+            packed: &self.packed,
+            scales: self.scales.data(),
+            zeros: &self.zeros,
+            d_in: self.d_in,
+            d_out: self.d_out,
+            group: self.spec.group,
+            bits: self.spec.bits as usize,
         }
-        out
     }
 
-    /// Fused dequantize-on-the-fly matmul: y = x @ (s · (q − z)) for
-    /// x (n_tok, d_in) -> (n_tok, d_out), without ever materializing the
-    /// dense weight.  Output columns are split over scoped std::threads
-    /// (one scope per call — this also parallelizes batch-1 decode);
-    /// within a panel, groups are unpacked into a small scratch block and
-    /// accumulated in ascending-k order, so every output element sums in
-    /// exactly the dense-path order and results agree bit-for-bit with
-    /// `x.matmul(&self.dequantize()?)`.
-    pub fn matmul_fused(&self, x: &Tensor) -> Result<Tensor> {
+    fn check_x(&self, x: &Tensor, what: &str) -> Result<()> {
         if x.rank() != 2 || x.cols() != self.d_in {
             return Err(Error::shape(format!(
-                "matmul_fused: x {:?} vs packed ({}, {})",
+                "{what}: x {:?} vs packed ({}, {})",
                 x.shape(),
                 self.d_in,
                 self.d_out
             )));
         }
-        let n_tok = x.rows();
-        let d_out = self.d_out;
-        let threads = gemm_threads().min(d_out);
-        if threads <= 1 || n_tok * self.d_in * d_out < GEMM_PARALLEL_MIN_FLOPS {
-            return Tensor::new(vec![n_tok, d_out], self.fused_panel_cols(x, 0, d_out));
-        }
-        let panel_cols = d_out.div_ceil(threads);
-        let mut out = vec![0.0f32; n_tok * d_out];
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(threads);
-            let mut col0 = 0usize;
-            while col0 < d_out {
-                let cols = panel_cols.min(d_out - col0);
-                let c0 = col0;
-                handles.push((c0, cols, s.spawn(move || self.fused_panel_cols(x, c0, cols))));
-                col0 += cols;
-            }
-            for (c0, cols, h) in handles {
-                let local = h.join().expect("fused matmul panel thread panicked");
-                for t in 0..n_tok {
-                    out[t * d_out + c0..t * d_out + c0 + cols]
-                        .copy_from_slice(&local[t * cols..(t + 1) * cols]);
-                }
-            }
-        });
-        Tensor::new(vec![n_tok, d_out], out)
+        Ok(())
     }
+
+    /// Fused dequantize-on-the-fly matmul: y = x @ (s · (q − z)) for
+    /// x (n_tok, d_in) -> (n_tok, d_out), without ever materializing the
+    /// dense weight.  Runs the runtime-dispatched kernels in
+    /// `kernels::dequant` on the persistent worker pool — workers write
+    /// straight into disjoint column panels of the output (the per-call
+    /// `thread::scope` spawn and the per-panel `Vec` copy-back of PR 1
+    /// are both gone).  Every output element accumulates in ascending-k
+    /// order, so results agree bit-for-bit with the scalar oracle and
+    /// with `x.matmul(&self.dequantize()?)`'s reduction order.
+    pub fn matmul_fused(&self, x: &Tensor) -> Result<Tensor> {
+        self.matmul_fused_with(crate::kernels::active(), pool::global(), x)
+    }
+
+    /// [`Self::matmul_fused`] with explicit kernel + pool (what the
+    /// determinism tests drive at 1/2/N threads and scalar-vs-SIMD).
+    pub fn matmul_fused_with(
+        &self,
+        kernel: Kernel,
+        pool: &ThreadPool,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        self.check_x(x, "matmul_fused")?;
+        let n_tok = x.rows();
+        let mut out = vec![0.0f32; n_tok * self.d_out];
+        fused_matmul(kernel, pool, &self.view(), x.data(), n_tok, &mut out);
+        Tensor::new(vec![n_tok, self.d_out], out)
+    }
+
+    /// Decode-specialized fused GEMV for `n_tok <= 4` (the batch-1
+    /// `forward_step` hot path): column-major tile traversal of the
+    /// packed payload, dequantizing each code straight into the
+    /// accumulate with no group-scratch roundtrip.  Bitwise-identical
+    /// output to [`Self::matmul_fused`]; wider inputs fall back to the
+    /// panel path.
+    pub fn matvec_fused(&self, x: &Tensor) -> Result<Tensor> {
+        self.matvec_fused_with(crate::kernels::active(), pool::global(), x)
+    }
+
+    /// [`Self::matvec_fused`] with explicit kernel + pool.
+    pub fn matvec_fused_with(
+        &self,
+        kernel: Kernel,
+        pool: &ThreadPool,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        self.check_x(x, "matvec_fused")?;
+        let n_tok = x.rows();
+        let mut out = vec![0.0f32; n_tok * self.d_out];
+        fused_gemv(kernel, pool, &self.view(), x.data(), n_tok, &mut out);
+        Tensor::new(vec![n_tok, self.d_out], out)
+    }
+
+    /// Largest row count [`Self::matvec_fused`] specializes for.
+    pub const MATVEC_MAX_ROWS: usize = crate::kernels::dequant::MATVEC_MAX_ROWS;
 
     /// Bytes on disk/GPU for the quantized payload (codes + metadata),
     /// the quantity the paper's Fig. 2 / Table 4 account in GB.  Now an
@@ -324,6 +317,34 @@ mod tests {
             let dense = x.matmul(&pl.dequantize().unwrap()).unwrap();
             let rel = fused.sub(&dense).unwrap().fro_norm() / dense.fro_norm().max(1e-12);
             assert!(rel <= 1e-5, "bits={bits}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn matvec_fused_bitwise_matches_matmul_fused() {
+        let mut rng = Rng::new(23);
+        for bits in [2u32, 3, 4] {
+            let spec = QuantSpec::new(bits, 32);
+            // d_out deliberately not a multiple of the 64-col tile
+            let (d_in, d_out) = (96, 83);
+            let w = Tensor::randn(&[d_in, d_out], 0.2, &mut rng);
+            let (g, b) = open_clip(d_in, d_out, 32);
+            let (codes, s, z) = quantize_ints(&w, &g, &b, spec).unwrap();
+            let pl = PackedLinear::from_codes(&codes, s, z, d_in, d_out, spec).unwrap();
+            for n_tok in 1..=PackedLinear::MATVEC_MAX_ROWS {
+                let x = Tensor::randn(&[n_tok, d_in], 1.0, &mut rng);
+                let gemv = pl.matvec_fused(&x).unwrap();
+                let panel = pl.matmul_fused(&x).unwrap();
+                assert_eq!(
+                    gemv.data(),
+                    panel.data(),
+                    "bits={bits} n_tok={n_tok}: GEMV and panel paths must agree bitwise"
+                );
+            }
+            // wider inputs fall back to the panel path
+            let x = Tensor::randn(&[PackedLinear::MATVEC_MAX_ROWS + 2, d_in], 1.0, &mut rng);
+            let wide = pl.matvec_fused(&x).unwrap();
+            assert_eq!(wide.data(), pl.matmul_fused(&x).unwrap().data());
         }
     }
 

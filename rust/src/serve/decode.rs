@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::infer::{
-    apply_rope, argmax, rmsnorm_rows, GenReport, PackedBlock, PackedModel, RopeTables,
+    apply_rope, argmax, rmsnorm_rows, GenReport, PackedBlock, PackedModel, RopeView,
 };
 use crate::serve::kv::KvCache;
 use crate::serve::sampling::{sample, seq_rng, SamplingParams};
@@ -72,7 +72,8 @@ impl PackedModel {
         }
         let hd = self.cfg.d_model / self.cfg.n_heads;
         let p0 = cache.len();
-        let rope = RopeTables::with_offset(p0, t, hd);
+        let tables = self.rope.upto(hd, p0 + t);
+        let rope = tables.view(p0, t);
         let mut x = self.embed_rows(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
             x = block_forward_chunk(block, self, &x, t, p0, &rope, cache, li)?;
@@ -102,12 +103,13 @@ impl PackedModel {
                 return Err(Error::shape("forward_step: a sequence's KV cache is full"));
             }
         }
-        // One single-position RoPE table per sequence (positions differ),
-        // shared across layers.
-        let ropes: Vec<RopeTables> = caches
-            .iter()
-            .map(|c| RopeTables::with_offset(c.len(), 1, hd))
-            .collect();
+        // One single-position view per sequence (positions differ) into
+        // the model's precomputed RoPE table — no per-step sin/cos
+        // rebuild (the tables grow once to the KV capacity and are then
+        // pure indexing).
+        let need = caches.iter().map(|c| c.len() + 1).max().unwrap_or(1);
+        let tables = self.rope.upto(hd, need);
+        let ropes: Vec<RopeView<'_>> = caches.iter().map(|c| tables.view(c.len(), 1)).collect();
         let mut x = self.embed_rows(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
             x = block_forward_step(block, self, &x, &ropes, caches, li)?;
@@ -198,7 +200,7 @@ fn block_forward_chunk(
     x: &Tensor,
     t: usize,
     p0: usize,
-    rope: &RopeTables,
+    rope: &RopeView<'_>,
     cache: &mut KvCache,
     li: usize,
 ) -> Result<Tensor> {
@@ -241,7 +243,7 @@ fn block_forward_step(
     block: &PackedBlock,
     model: &PackedModel,
     x: &Tensor,
-    ropes: &[RopeTables],
+    ropes: &[RopeView<'_>],
     caches: &mut [&mut KvCache],
     li: usize,
 ) -> Result<Tensor> {

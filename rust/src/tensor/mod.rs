@@ -14,36 +14,23 @@ pub mod rng;
 pub use linalg::{cholesky_in_place, svd_topk};
 pub use rng::Rng;
 
-use std::sync::OnceLock;
-
 use crate::error::{Error, Result};
 
-/// Worker-thread count for the blocked GEMM: `REPRO_THREADS` if set,
-/// otherwise the machine's available parallelism.
+pub use crate::kernels::gemm::GEMM_PARALLEL_MIN_FLOPS;
+
+/// Compute-lane count of the kernel pool: `REPRO_THREADS` if set,
+/// otherwise the machine's available parallelism.  (Kept as the historic
+/// entry point; the sizing now lives in `kernels::pool`.)
 pub fn gemm_threads() -> usize {
-    static THREADS: OnceLock<usize> = OnceLock::new();
-    *THREADS.get_or_init(|| {
-        std::env::var("REPRO_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-    })
+    crate::kernels::pool::pool_threads()
 }
 
-/// Below this many multiply-accumulates a parallel launch costs more than
-/// it saves; run the panel serially instead.  Shared by the dense GEMM
-/// here and the fused packed matmul in `quant::pack`.
-pub const GEMM_PARALLEL_MIN_FLOPS: usize = 1 << 17;
-
-/// Serial GEMM over one row panel: `out_panel` (rows x n) accumulates
-/// `a_panel` (rows x k) @ `b` (k x n).  The i-k-j loop order keeps the
-/// innermost j-loop contiguous over both `out` and `b` so it
-/// auto-vectorizes.  Never skips zero entries: 0 * NaN must stay NaN
-/// (IEEE-754 propagation), and branch-free inner loops are faster on
-/// dense data anyway.
+/// Serial reference GEMM over one row panel: `out_panel` (rows x n)
+/// accumulates `a_panel` (rows x k) @ `b` (k x n) in i-k-j order.  This
+/// is the bit-exact oracle the dispatched kernels in `kernels::gemm`
+/// must reproduce (their tests compare against it).  Never skips zero
+/// entries: 0 * NaN must stay NaN (IEEE-754 propagation).
+#[cfg_attr(not(test), allow(dead_code))]
 fn gemm_panel(a_panel: &[f32], b: &[f32], out_panel: &mut [f32], k: usize, n: usize) {
     if n == 0 {
         return;
@@ -61,32 +48,14 @@ fn gemm_panel(a_panel: &[f32], b: &[f32], out_panel: &mut [f32], k: usize, n: us
     }
 }
 
-/// Blocked multi-threaded GEMM: accumulates `a` (m x k) @ `b` (k x n)
-/// into `out` (m x n).  `out` is NOT zeroed first — callers chain calls
-/// to accumulate partial products (the fused packed matmul adds one
-/// quantization group at a time).  Row panels of `out` are distributed
-/// over scoped std::threads; small problems run serially.
+/// Blocked GEMM: accumulates `a` (m x k) @ `b` (k x n) into `out`
+/// (m x n).  `out` is NOT zeroed first — callers chain calls to
+/// accumulate partial products.  Routes through the runtime-dispatched
+/// SIMD kernels and the persistent worker pool in `kernels` (PR 1's
+/// per-call `thread::scope` spawns are gone); output is bitwise
+/// identical to [`gemm_panel`] at any thread count.
 pub fn gemm_accum(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    if m == 0 || n == 0 {
-        return;
-    }
-    let threads = gemm_threads().min(m);
-    if threads <= 1 || m * k * n < GEMM_PARALLEL_MIN_FLOPS {
-        gemm_panel(a, b, out, k, n);
-        return;
-    }
-    let panel_rows = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, out_panel) in out.chunks_mut(panel_rows * n).enumerate() {
-            let row0 = ti * panel_rows;
-            let rows = out_panel.len() / n;
-            let a_panel = &a[row0 * k..(row0 + rows) * k];
-            s.spawn(move || gemm_panel(a_panel, b, out_panel, k, n));
-        }
-    });
+    crate::kernels::gemm::gemm_accum(a, b, out, m, k, n);
 }
 
 /// Row-major dense f32 tensor with dynamic rank.
