@@ -19,8 +19,12 @@
 //!     and resident-bytes report (`repro generate`, `repro bench-infer`)
 //!
 //! The KV-cached incremental forward (`PackedModel::forward_chunk` /
-//! `forward_step`), sampling, and the continuous-batching token server
-//! live in `crate::serve`, built on this engine.
+//! `forward_step` over flat slabs, their `_paged` twins plus the
+//! batched `prefill_batch` over paged block tables), sampling, and the
+//! continuous-batching token server live in `crate::serve`, built on
+//! this engine.  The shared `RopeCache` below is sized by the serving
+//! path's KV capacity and indexed by absolute position, so flat, paged,
+//! and full-forward paths all read the same sin/cos bits.
 
 use std::sync::{RwLock, RwLockReadGuard};
 

@@ -77,8 +77,14 @@ SERVE FLAGS
   --addr A          (default: 127.0.0.1:7878; port 0 = ephemeral)
   --max-batch N     (default: 8)       --max-new-cap N (default: 512)
   --max-prompt N    (default: 1024)    --no-remote-shutdown
+  --kv-block N      (default: 32)      KV page size in positions
+  --kv-blocks-total N (default: auto)  KV page budget; admission backs
+                                       off when the pool is exhausted
 BENCH-SERVE FLAGS
   --clients N       (default: 4)      --requests N    (per client, default 2)
+  --common-prefix N (default: 0)      first N prompt tokens identical
+                                      across ALL requests (KV sharing)
+  --bench-out P     (default: BENCH_serve.json)
   --shutdown        (send {\"cmd\":\"shutdown\"} when done)
 
 METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
@@ -373,6 +379,8 @@ fn run(args: Args) -> repro::Result<()> {
                 max_batch: args.usize_or("max-batch", 8)?.max(1),
                 max_new_cap: args.usize_or("max-new-cap", 512)?.max(1),
                 max_prompt: args.usize_or("max-prompt", 1024)?.max(1),
+                kv_block: args.usize_or("kv-block", 32)?.max(1),
+                kv_blocks_total: args.usize_or("kv-blocks-total", 0)?,
             };
             let model = match args.get("packed") {
                 Some(path) => {
@@ -385,12 +393,24 @@ fn run(args: Args) -> repro::Result<()> {
                     build_native_model(&artifacts, cfg, &params, &method, bits, group, rank, seed)?
                 }
             };
+            // Same formula the pool reports in stats frames.
+            let cfg_ref = &model.cfg;
+            let kv_block_bytes =
+                repro::serve::BlockPool::new(cfg_ref.n_layers, cfg_ref.d_model, sched.kv_block, 0)
+                    .block_bytes();
             println!(
                 "serve: model {} ({:.2} MB resident, {:.3} bits/weight), max batch {}",
                 model.cfg.name,
                 report_resident_mb(&model),
                 model.effective_bits(),
                 sched.max_batch
+            );
+            println!(
+                "serve: paged KV: {} blocks x {} positions ({:.2} MB ceiling, prefix \
+                 sharing + on-demand growth)",
+                sched.blocks_total(),
+                sched.kv_block,
+                (sched.blocks_total() * kv_block_bytes) as f64 / 1e6
             );
             let opts = ServeOptions {
                 addr,
@@ -407,6 +427,7 @@ fn run(args: Args) -> repro::Result<()> {
                 prompt_len: args.usize_or("prompt-len", 16)?.max(1),
                 max_new: args.usize_or("new-tokens", 32)?.max(1),
                 vocab: ModelConfig::by_name(&size)?.vocab,
+                common_prefix: args.usize_or("common-prefix", 0)?,
                 temperature: args.f32_or("temperature", 0.0)?,
                 seed,
                 shutdown_after: args.flag("shutdown"),
@@ -424,6 +445,18 @@ fn run(args: Args) -> repro::Result<()> {
             println!("  time-to-first-token: {}", rep.ttft.fmt_ms());
             println!("  request latency:     {}", rep.total.fmt_ms());
             println!("  peak concurrent streams: {}", rep.peak_concurrent_streams);
+            if let Some(kv) = &rep.kv {
+                println!(
+                    "  peak resident KV: {} blocks of {} ({:.2} MB)",
+                    kv.peak_resident_blocks,
+                    kv.block_size,
+                    kv.peak_resident_bytes as f64 / 1e6
+                );
+                println!("  peak shared blocks: {}", kv.peak_shared_blocks);
+            }
+            let out = args.str_or("bench-out", "BENCH_serve.json");
+            write_bench_serve(&out, &o, &rep)?;
+            println!("  wrote {out}");
             if rep.completed != rep.requests {
                 return Err(repro::Error::config(format!(
                     "{} of {} requests did not complete",
@@ -549,6 +582,62 @@ fn random_packed(
 
 fn report_resident_mb(model: &PackedModel) -> f64 {
     model.resident_bytes() as f64 / 1e6
+}
+
+/// Machine-readable serving trajectory artifact: throughput + latency
+/// percentiles + the paged-KV memory peaks scraped from the server.
+/// Sits next to `BENCH_kernels.json` in the perf trajectory.
+fn write_bench_serve(
+    path: &str,
+    o: &LoadOptions,
+    rep: &repro::serve::loadgen::LoadReport,
+) -> repro::Result<()> {
+    use repro::serve::json::Json;
+    let ms = |s: f64| Json::Num((s * 1e6).round() / 1e3);
+    let mut fields = vec![
+        ("bench".to_string(), Json::from("serve")),
+        ("clients".to_string(), Json::from(o.clients)),
+        ("requests".to_string(), Json::from(rep.requests)),
+        ("completed".to_string(), Json::from(rep.completed)),
+        ("prompt_len".to_string(), Json::from(o.prompt_len)),
+        ("new_tokens".to_string(), Json::from(o.max_new)),
+        ("common_prefix".to_string(), Json::from(o.common_prefix)),
+        ("total_tokens".to_string(), Json::from(rep.total_tokens)),
+        ("wall_secs".to_string(), Json::Num((rep.wall_secs * 1e3).round() / 1e3)),
+        (
+            "tokens_per_sec".to_string(),
+            Json::Num((rep.tokens_per_sec() * 10.0).round() / 10.0),
+        ),
+        ("ttft_p50_ms".to_string(), ms(rep.ttft.p50_s)),
+        ("ttft_p99_ms".to_string(), ms(rep.ttft.p99_s)),
+        ("latency_p50_ms".to_string(), ms(rep.total.p50_s)),
+        ("latency_p99_ms".to_string(), ms(rep.total.p99_s)),
+        (
+            "peak_concurrent_streams".to_string(),
+            Json::from(rep.peak_concurrent_streams),
+        ),
+    ];
+    if let Some(kv) = &rep.kv {
+        fields.extend([
+            ("kv_block_size".to_string(), Json::from(kv.block_size)),
+            ("kv_blocks_total".to_string(), Json::from(kv.blocks_total)),
+            (
+                "peak_resident_kv_blocks".to_string(),
+                Json::from(kv.peak_resident_blocks),
+            ),
+            (
+                "peak_resident_kv_bytes".to_string(),
+                Json::from(kv.peak_resident_bytes),
+            ),
+            (
+                "peak_shared_kv_blocks".to_string(),
+                Json::from(kv.peak_shared_blocks),
+            ),
+        ]);
+    }
+    let body = Json::Obj(fields).render();
+    std::fs::write(path, body + "\n")
+        .map_err(|e| repro::Error::io(format!("write {path}: {e}")))
 }
 
 /// Analytic serving-memory prediction for the same architecture, keyed

@@ -1,0 +1,316 @@
+//! The model-wide KV block pool: fixed-size pages + free list + refcounts.
+//!
+//! A [`BlockPool`] owns every physical KV page the serving engine can
+//! use.  One block stores `block_size` consecutive positions of post-RoPE
+//! K and V for **all** layers (layer-major, slot-minor within the block —
+//! the same row layout as the flat [`crate::serve::kv::KvCache`], just
+//! chopped into pages), so a sequence's storage is a *block table* of
+//! page ids instead of one worst-case slab.
+//!
+//! Blocks are refcounted: requests with a common prompt prefix map the
+//! same physical pages (see [`crate::serve::paged::PagedKvCache`]), and a
+//! page returns to the free list only when its last holder releases it.
+//! Because pages are fixed-size, allocation is exact-fit by construction
+//! — the best-fit search the variable-capacity [`crate::serve::kv::KvPool`]
+//! needs does not exist here; `try_alloc` is a free-list pop.
+//!
+//! The pool is budgeted (`max_blocks`): storage grows lazily up to the
+//! budget and never beyond, which is what lets the scheduler admit by
+//! block count instead of worst-case rows.  High-water marks
+//! (`peak_resident`, `peak_shared`) are tracked so a post-run stats query
+//! still reports the memory the run actually touched.
+
+/// Physical storage of one KV page: `block_size` rows of K and V per
+/// layer.  Row `(layer, slot)` of `k` lives at
+/// `(layer * block_size + slot) * d .. + d` (same for `v`).
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Aggregate pool statistics (block counts + bytes), rendered into the
+/// protocol's stats frame.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvStats {
+    /// Positions per block.
+    pub block_size: usize,
+    /// Block budget (allocation ceiling).
+    pub blocks_total: usize,
+    /// Blocks with backing storage allocated (free-listed ones included).
+    pub resident_blocks: usize,
+    /// Allocated blocks currently on the free list.
+    pub free_blocks: usize,
+    /// Allocated blocks currently held by at least one sequence.
+    pub used_blocks: usize,
+    /// Blocks held by two or more sequences right now (prefix sharing).
+    pub shared_blocks: usize,
+    /// High-water mark of `resident_blocks`.
+    pub peak_resident_blocks: usize,
+    /// High-water mark of `shared_blocks`.
+    pub peak_shared_blocks: usize,
+    /// Bytes of one block's K+V storage.
+    pub block_bytes: usize,
+    /// Bytes currently resident (`resident_blocks * block_bytes`).
+    pub resident_bytes: usize,
+    /// High-water mark of resident bytes.
+    pub peak_resident_bytes: usize,
+}
+
+/// Fixed-size KV page allocator for one model shape.
+pub struct BlockPool {
+    n_layers: usize,
+    d: usize,
+    block_size: usize,
+    max_blocks: usize,
+    blocks: Vec<Block>,
+    refs: Vec<u32>,
+    free: Vec<usize>,
+    /// Blocks with refcount >= 2 right now.
+    shared_now: usize,
+    peak_resident: usize,
+    peak_shared: usize,
+}
+
+impl BlockPool {
+    /// A pool of up to `max_blocks` pages of `block_size` positions each,
+    /// for a model with `n_layers` layers and `d`-wide K/V rows.  Storage
+    /// is allocated lazily as blocks are first handed out.
+    pub fn new(n_layers: usize, d: usize, block_size: usize, max_blocks: usize) -> Self {
+        BlockPool {
+            n_layers,
+            d,
+            block_size: block_size.max(1),
+            max_blocks,
+            blocks: Vec::new(),
+            refs: Vec::new(),
+            free: Vec::new(),
+            shared_now: 0,
+            peak_resident: 0,
+            peak_shared: 0,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Positions per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Allocation ceiling (blocks).
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    /// Blocks that `try_alloc` could hand out right now.
+    pub fn available(&self) -> usize {
+        self.free.len() + (self.max_blocks - self.blocks.len())
+    }
+
+    /// f32s in one block's K (or V) plane.
+    fn plane_len(&self) -> usize {
+        self.n_layers * self.block_size * self.d
+    }
+
+    /// Bytes of one block's K+V storage.
+    pub fn block_bytes(&self) -> usize {
+        2 * self.plane_len() * std::mem::size_of::<f32>()
+    }
+
+    /// Take one block with refcount 1, reusing a free-listed page when
+    /// possible, growing storage otherwise.  `None` when the budget is
+    /// exhausted — the caller backs off (admission) or finishes the
+    /// sequence with `capacity` (decode).
+    pub fn try_alloc(&mut self) -> Option<usize> {
+        if let Some(id) = self.free.pop() {
+            debug_assert_eq!(self.refs[id], 0);
+            self.refs[id] = 1;
+            return Some(id);
+        }
+        if self.blocks.len() >= self.max_blocks {
+            return None;
+        }
+        let n = self.plane_len();
+        self.blocks.push(Block { k: vec![0.0; n], v: vec![0.0; n] });
+        self.refs.push(1);
+        let id = self.blocks.len() - 1;
+        if self.blocks.len() > self.peak_resident {
+            self.peak_resident = self.blocks.len();
+        }
+        Some(id)
+    }
+
+    /// Add one holder to `id` (prefix sharing).
+    pub fn retain(&mut self, id: usize) {
+        debug_assert!(self.refs[id] > 0, "retain of a free block");
+        self.refs[id] += 1;
+        if self.refs[id] == 2 {
+            self.shared_now += 1;
+            if self.shared_now > self.peak_shared {
+                self.peak_shared = self.shared_now;
+            }
+        }
+    }
+
+    /// Drop one holder of `id`; the block returns to the free list when
+    /// the last holder lets go.
+    pub fn release(&mut self, id: usize) {
+        debug_assert!(self.refs[id] > 0, "release of a free block");
+        self.refs[id] -= 1;
+        match self.refs[id] {
+            1 => self.shared_now -= 1,
+            0 => self.free.push(id),
+            _ => {}
+        }
+    }
+
+    /// Current holder count of `id` (0 = free-listed).
+    pub fn ref_count(&self, id: usize) -> u32 {
+        self.refs[id]
+    }
+
+    /// Copy `src`'s entire K/V payload into `dst` (copy-on-write: the
+    /// writer keeps `dst`, other holders keep `src`).  Rows beyond the
+    /// copier's committed length are carried along as garbage, which is
+    /// fine — readable rows are always written before they are read.
+    pub fn copy_block(&mut self, src: usize, dst: usize) {
+        debug_assert_ne!(src, dst);
+        let (lo, hi, src_is_lo) = if src < dst { (src, dst, true) } else { (dst, src, false) };
+        let (a, b) = self.blocks.split_at_mut(hi);
+        let (s, t) = if src_is_lo { (&a[lo], &mut b[0]) } else { (&b[0], &mut a[lo]) };
+        t.k.copy_from_slice(&s.k);
+        t.v.copy_from_slice(&s.v);
+    }
+
+    /// Write `t = krows.len() / d` K/V rows of `layer` into `id` starting
+    /// at in-block slot `slot0`.
+    pub fn write_rows(
+        &mut self,
+        id: usize,
+        layer: usize,
+        slot0: usize,
+        krows: &[f32],
+        vrows: &[f32],
+    ) {
+        debug_assert_eq!(krows.len(), vrows.len());
+        debug_assert!(layer < self.n_layers);
+        debug_assert!(slot0 * self.d + krows.len() <= self.block_size * self.d);
+        let off = (layer * self.block_size + slot0) * self.d;
+        let b = &mut self.blocks[id];
+        b.k[off..off + krows.len()].copy_from_slice(krows);
+        b.v[off..off + vrows.len()].copy_from_slice(vrows);
+    }
+
+    /// Contiguous key rows `[slot0, slot0 + t)` of `layer` in `id`.
+    pub fn k_rows(&self, id: usize, layer: usize, slot0: usize, t: usize) -> &[f32] {
+        let off = (layer * self.block_size + slot0) * self.d;
+        &self.blocks[id].k[off..off + t * self.d]
+    }
+
+    /// Contiguous value rows `[slot0, slot0 + t)` of `layer` in `id`.
+    pub fn v_rows(&self, id: usize, layer: usize, slot0: usize, t: usize) -> &[f32] {
+        let off = (layer * self.block_size + slot0) * self.d;
+        &self.blocks[id].v[off..off + t * self.d]
+    }
+
+    /// Snapshot of counts, shares, and high-water marks.
+    pub fn stats(&self) -> KvStats {
+        let resident = self.blocks.len();
+        let free = self.free.len();
+        let bb = self.block_bytes();
+        KvStats {
+            block_size: self.block_size,
+            blocks_total: self.max_blocks,
+            resident_blocks: resident,
+            free_blocks: free,
+            used_blocks: resident - free,
+            shared_blocks: self.shared_now,
+            peak_resident_blocks: self.peak_resident,
+            peak_shared_blocks: self.peak_shared,
+            block_bytes: bb,
+            resident_bytes: resident * bb,
+            peak_resident_bytes: self.peak_resident * bb,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_recycles_within_budget() {
+        let mut pool = BlockPool::new(2, 4, 8, 3);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let c = pool.try_alloc().unwrap();
+        assert!(pool.try_alloc().is_none(), "budget of 3 is exhausted");
+        assert_eq!(pool.stats().resident_blocks, 3);
+        assert_eq!(pool.stats().used_blocks, 3);
+
+        pool.release(b);
+        assert_eq!(pool.available(), 1);
+        let b2 = pool.try_alloc().unwrap();
+        assert_eq!(b2, b, "free-listed page is reused, not grown");
+        assert_eq!(pool.stats().resident_blocks, 3, "no growth past first 3");
+
+        pool.release(a);
+        pool.release(b2);
+        pool.release(c);
+        let s = pool.stats();
+        assert_eq!(s.used_blocks, 0);
+        assert_eq!(s.free_blocks, 3);
+        assert_eq!(s.peak_resident_blocks, 3);
+    }
+
+    #[test]
+    fn refcounts_and_shared_tracking() {
+        let mut pool = BlockPool::new(1, 2, 4, 4);
+        let a = pool.try_alloc().unwrap();
+        assert_eq!(pool.ref_count(a), 1);
+        assert_eq!(pool.stats().shared_blocks, 0);
+
+        pool.retain(a);
+        pool.retain(a);
+        assert_eq!(pool.ref_count(a), 3);
+        assert_eq!(pool.stats().shared_blocks, 1);
+        assert_eq!(pool.stats().peak_shared_blocks, 1);
+
+        pool.release(a);
+        assert_eq!(pool.stats().shared_blocks, 1, "still 2 holders");
+        pool.release(a);
+        assert_eq!(pool.stats().shared_blocks, 0);
+        assert_eq!(pool.stats().used_blocks, 1);
+        pool.release(a);
+        assert_eq!(pool.stats().used_blocks, 0);
+        assert_eq!(pool.stats().peak_shared_blocks, 1, "peak survives release");
+    }
+
+    #[test]
+    fn rows_roundtrip_and_copy_block() {
+        let (layers, d, bs) = (2usize, 3usize, 4usize);
+        let mut pool = BlockPool::new(layers, d, bs, 2);
+        let a = pool.try_alloc().unwrap();
+        let k: Vec<f32> = (0..2 * d).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..2 * d).map(|i| 10.0 + i as f32).collect();
+        pool.write_rows(a, 1, 1, &k, &v);
+        assert_eq!(pool.k_rows(a, 1, 1, 2), &k[..]);
+        assert_eq!(pool.v_rows(a, 1, 1, 2), &v[..]);
+        assert_eq!(pool.k_rows(a, 0, 1, 2), &[0.0; 6][..], "other layer untouched");
+
+        let b = pool.try_alloc().unwrap();
+        pool.copy_block(a, b);
+        assert_eq!(pool.k_rows(b, 1, 1, 2), &k[..]);
+        assert_eq!(pool.v_rows(b, 1, 1, 2), &v[..]);
+        // and the reverse direction exercises the other split arm
+        pool.write_rows(b, 0, 0, &[7.0; 3], &[8.0; 3]);
+        pool.copy_block(b, a);
+        assert_eq!(pool.k_rows(a, 0, 0, 1), &[7.0; 3][..]);
+    }
+}

@@ -1,26 +1,34 @@
 //! KV-cached incremental decoding: O(T) per emitted token.
 //!
-//! Two entry points on [`PackedModel`]:
+//! Two storage layouts share one decode engine:
 //!
-//! * [`PackedModel::forward_chunk`] — run the next `t` positions of ONE
-//!   sequence (prefill, or any later chunk), appending post-RoPE K/V to
-//!   its [`KvCache`] and returning the chunk's logits `(t, vocab)`.
-//! * [`PackedModel::forward_step`] — one decode step for a BATCH of
-//!   independent sequences: the newest token of each sequence goes
-//!   through the linears together (one batched GEMM per projection —
-//!   the continuous-batching win), then attention runs per sequence
-//!   against its own cache.  Returns next-token logits `(b, vocab)`.
+//! * **Flat** — [`KvCache`] slabs, one worst-case buffer per sequence
+//!   ([`PackedModel::forward_chunk`] / [`PackedModel::forward_step`]).
+//!   Kept alive as the reference path: paged decode is asserted bitwise
+//!   identical to it, the same way [`generate_recompute`] anchors the
+//!   cached path against full-prefix recompute.
+//! * **Paged** — [`PagedKvCache`] block tables over a shared
+//!   [`BlockPool`] ([`PackedModel::forward_chunk_paged`] /
+//!   [`PackedModel::forward_step_paged`] /
+//!   [`PackedModel::prefill_batch`]).  Attention walks per-page K/V
+//!   views in ascending-position order through the same
+//!   [`attend_segs`] core the flat path uses (flat = a single segment),
+//!   so the score, softmax, and value-accumulation order — and therefore
+//!   every output bit — match the flat layout exactly.
 //!
-//! Both reproduce `PackedModel::logits` bit for bit: every per-position
-//! operation (embed, RMSNorm, linears, RoPE, SwiGLU) is row-independent
-//! in the full forward, and attention here accumulates over cache rows in
-//! the same ascending-position order with the same running-max softmax,
-//! so cached logits — and therefore greedy token streams — are identical
-//! to full-prefix recompute.  `tests/serve.rs` pins this down.
+//! [`PackedModel::prefill_batch`] folds several sequences' prefill
+//! chunks into ONE pass: the linears run over the ragged row
+//! concatenation (every per-position op is row-independent, so batching
+//! changes no bits), attention runs per sequence against its own block
+//! table.  Within each layer every sequence's K/V rows are written
+//! before any sequence attends, which is what lets same-tick admissions
+//! share prompt-prefix blocks that are materialized in the very same
+//! pass.
 //!
-//! [`generate`] is the batched decode loop built on top (greedy or
-//! seeded sampling); [`generate_recompute`] keeps PR 1's full-prefix
-//! recompute alive as the equivalence reference and benchmark baseline.
+//! [`generate`] (flat) and [`generate_paged`] are the batched decode
+//! loops on top; [`generate_recompute`] keeps PR 1's full-prefix
+//! recompute alive as the outermost equivalence reference and benchmark
+//! baseline.
 
 use std::time::Instant;
 
@@ -28,7 +36,9 @@ use crate::error::{Error, Result};
 use crate::infer::{
     apply_rope, argmax, rmsnorm_rows, GenReport, PackedBlock, PackedModel, RopeView,
 };
+use crate::serve::block::BlockPool;
 use crate::serve::kv::KvCache;
+use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{sample, seq_rng, SamplingParams};
 use crate::tensor::{IntTensor, Rng, Tensor};
 
@@ -119,19 +129,164 @@ impl PackedModel {
         }
         self.head(x)
     }
+
+    /// Paged twin of [`PackedModel::forward_chunk`]: same contract, but
+    /// K/V land in `cache`'s block table (pages drawn from `pool` on
+    /// demand, copy-on-write if a shared tail page is in the write
+    /// range).  Bitwise identical to the flat path.
+    pub fn forward_chunk_paged(
+        &self,
+        tokens: &[i32],
+        cache: &mut PagedKvCache,
+        pool: &mut BlockPool,
+    ) -> Result<Tensor> {
+        let t = tokens.len();
+        if t == 0 {
+            return Err(Error::shape("forward_chunk_paged: empty token chunk"));
+        }
+        cache.check_shape(self.cfg.n_layers, self.cfg.d_model)?;
+        let p0 = cache.len();
+        cache.reserve(p0 + t, pool)?;
+        let hd = self.cfg.d_model / self.cfg.n_heads;
+        let tables = self.rope.upto(hd, p0 + t);
+        let rope = tables.view(p0, t);
+        let mut x = self.embed_rows(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            x = block_forward_chunk_paged(block, self, &x, t, p0, &rope, cache, pool, li)?;
+        }
+        cache.advance(t);
+        self.head(x)
+    }
+
+    /// Paged twin of [`PackedModel::forward_step`]: one decode step for a
+    /// batch of paged sequences, growing each block table by at most one
+    /// page.  Fails with a pool-exhausted error if the block budget
+    /// cannot cover a sequence's next position (the scheduler reserves
+    /// per sequence beforehand so it can finish just that sequence with
+    /// `capacity` instead).
+    pub fn forward_step_paged(
+        &self,
+        tokens: &[i32],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+    ) -> Result<Tensor> {
+        let b = tokens.len();
+        if b == 0 || b != caches.len() {
+            return Err(Error::shape(format!(
+                "forward_step_paged: {b} tokens vs {} caches",
+                caches.len()
+            )));
+        }
+        let d = self.cfg.d_model;
+        let hd = d / self.cfg.n_heads;
+        for c in caches.iter_mut() {
+            c.check_shape(self.cfg.n_layers, d)?;
+            let upto = c.len() + 1;
+            c.reserve(upto, pool)?;
+        }
+        let need = caches.iter().map(|c| c.len() + 1).max().unwrap_or(1);
+        let tables = self.rope.upto(hd, need);
+        let ropes: Vec<RopeView<'_>> = caches.iter().map(|c| tables.view(c.len(), 1)).collect();
+        let mut x = self.embed_rows(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            x = block_forward_step_paged(block, self, &x, &ropes, caches, pool, li)?;
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        self.head(x)
+    }
+
+    /// ONE batched prefill pass over several sequences' pending chunks
+    /// (`suffixes[i]` extends `caches[i]`, whose committed prefix may be
+    /// empty, warm, or prefix-shared).  The linears run over the ragged
+    /// row concatenation — one batched GEMM per projection instead of
+    /// one per sequence — and attention runs per sequence.  Returns the
+    /// **last-position** logits `(b, vocab)`, i.e. each request's
+    /// first-token distribution.
+    ///
+    /// Capacity must already be [`PagedKvCache::reserve`]d; this method
+    /// deliberately does NOT reserve, because re-running copy-on-write
+    /// here would split block mappings that same-tick admissions share
+    /// on purpose (the scheduler reserves each admission before later
+    /// admissions fork from it).
+    pub fn prefill_batch(
+        &self,
+        suffixes: &[&[i32]],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+    ) -> Result<Tensor> {
+        let b = suffixes.len();
+        if b == 0 || b != caches.len() {
+            return Err(Error::shape(format!(
+                "prefill_batch: {b} suffixes vs {} caches",
+                caches.len()
+            )));
+        }
+        let d = self.cfg.d_model;
+        let hd = d / self.cfg.n_heads;
+        let mut p0s = Vec::with_capacity(b);
+        let mut ts = Vec::with_capacity(b);
+        let mut need = 1usize;
+        for (sfx, c) in suffixes.iter().zip(caches.iter()) {
+            if sfx.is_empty() {
+                return Err(Error::shape("prefill_batch: empty suffix chunk"));
+            }
+            c.check_shape(self.cfg.n_layers, d)?;
+            if c.capacity() < c.len() + sfx.len() {
+                return Err(Error::shape(format!(
+                    "prefill_batch: {} cached + {} new > reserved capacity {} (reserve first)",
+                    c.len(),
+                    sfx.len(),
+                    c.capacity()
+                )));
+            }
+            p0s.push(c.len());
+            ts.push(sfx.len());
+            need = need.max(c.len() + sfx.len());
+        }
+        let flat: Vec<i32> = suffixes.iter().flat_map(|s| s.iter().copied()).collect();
+        let tables = self.rope.upto(hd, need);
+        let ropes: Vec<RopeView<'_>> =
+            p0s.iter().zip(&ts).map(|(&p0, &t)| tables.view(p0, t)).collect();
+        let mut x = self.embed_rows(&flat);
+        for (li, block) in self.blocks.iter().enumerate() {
+            x = block_prefill_batch(block, self, &x, &p0s, &ts, &ropes, caches, pool, li)?;
+        }
+        for (c, &t) in caches.iter_mut().zip(&ts) {
+            c.advance(t);
+        }
+        // Gather each sequence's last hidden row; head() is row-wise, so
+        // running it on just these rows matches the full-chunk head bit
+        // for bit at those positions.
+        let mut last = Tensor::zeros(&[b, d]);
+        {
+            let ld = last.data_mut();
+            let xd = x.data();
+            let mut row = 0usize;
+            for (bi, &t) in ts.iter().enumerate() {
+                row += t;
+                ld[bi * d..(bi + 1) * d].copy_from_slice(&xd[(row - 1) * d..row * d]);
+            }
+        }
+        self.head(last)
+    }
 }
 
-/// Causal attention of `t` chunk queries (one sequence) against cache
-/// rows `[0, p0 + t)` — chunk K/V must already be written to the cache.
-/// Accumulates into `ctx` (t, d) in ascending key-position order with the
-/// same running-max softmax as the full forward.  `probs` is caller-owned
-/// scratch (resized here) so the batched decode hot path does not heap-
-/// allocate per sequence per layer.
+/// The attention core shared by every cached path: causal attention of
+/// `t` chunk queries against key/value rows `[0, p0 + t)` presented as a
+/// list of contiguous `(k, v)` segments in ascending position order.
+/// The flat layout passes one segment; the paged layout passes one per
+/// block.  Scores are filled, the running max tracked, the softmax
+/// normalized, and values accumulated position-by-position in the exact
+/// same order either way, so segmentation never changes a bit of the
+/// output.  `probs` is caller-owned scratch (resized here) so the
+/// batched decode hot path does not heap-allocate per sequence per
+/// layer.
 #[allow(clippy::too_many_arguments)]
-fn attend_chunk(
+fn attend_segs(
     qd: &[f32],
-    kc: &[f32],
-    vc: &[f32],
+    segs: &[(&[f32], &[f32])],
     ctx: &mut [f32],
     t: usize,
     p0: usize,
@@ -148,16 +303,24 @@ fn attend_chunk(
             let klen = p0 + tq + 1;
             let qrow = &qd[tq * d + off..tq * d + off + hd];
             let mut mx = f32::NEG_INFINITY;
-            for (tk, p) in probs.iter_mut().enumerate().take(klen) {
-                let krow = &kc[tk * d + off..tk * d + off + hd];
-                let mut s = 0.0f32;
-                for j in 0..hd {
-                    s += qrow[j] * krow[j];
+            let mut pos = 0usize;
+            'score: for (kc, _) in segs {
+                for krow in kc.chunks_exact(d) {
+                    if pos >= klen {
+                        break 'score;
+                    }
+                    let krow = &krow[off..off + hd];
+                    let mut s = 0.0f32;
+                    for j in 0..hd {
+                        s += qrow[j] * krow[j];
+                    }
+                    let s = s * inv_sqrt;
+                    probs[pos] = s;
+                    mx = mx.max(s);
+                    pos += 1;
                 }
-                let s = s * inv_sqrt;
-                *p = s;
-                mx = mx.max(s);
             }
+            debug_assert!(pos >= klen, "segments must cover the attention span");
             let mut denom = 0.0f32;
             for p in probs.iter_mut().take(klen) {
                 *p = (*p - mx).exp();
@@ -165,12 +328,19 @@ fn attend_chunk(
             }
             let inv = 1.0 / denom;
             let c0 = tq * d + off;
-            for (tk, &p) in probs.iter().enumerate().take(klen) {
-                let pw = p * inv;
-                let vrow = &vc[tk * d + off..tk * d + off + hd];
-                let crow = &mut ctx[c0..c0 + hd];
-                for j in 0..hd {
-                    crow[j] += pw * vrow[j];
+            let mut pos = 0usize;
+            'acc: for (_, vc) in segs {
+                for vrow in vc.chunks_exact(d) {
+                    if pos >= klen {
+                        break 'acc;
+                    }
+                    let pw = probs[pos] * inv;
+                    let vrow = &vrow[off..off + hd];
+                    let crow = &mut ctx[c0..c0 + hd];
+                    for j in 0..hd {
+                        crow[j] += pw * vrow[j];
+                    }
+                    pos += 1;
                 }
             }
         }
@@ -220,10 +390,9 @@ fn block_forward_chunk(
 
     let mut ctx = Tensor::zeros(&[t, d]);
     let mut probs = Vec::new();
-    attend_chunk(
+    attend_segs(
         q.data(),
-        cache.keys(li, p0 + t),
-        cache.values(li, p0 + t),
+        &[(cache.keys(li, p0 + t), cache.values(li, p0 + t))],
         ctx.data_mut(),
         t,
         p0,
@@ -231,6 +400,43 @@ fn block_forward_chunk(
         hd,
         &mut probs,
     );
+    let attn_out = block.wo.forward(&ctx)?;
+    let x1 = x.add(&attn_out)?;
+
+    ffn_branch(block, d, &x1)
+}
+
+/// Paged twin of [`block_forward_chunk`]: K/V rows scatter into the
+/// sequence's block table; attention walks the per-page segments.
+#[allow(clippy::too_many_arguments)]
+fn block_forward_chunk_paged(
+    block: &PackedBlock,
+    model: &PackedModel,
+    x: &Tensor,
+    t: usize,
+    p0: usize,
+    rope: &RopeView<'_>,
+    cache: &mut PagedKvCache,
+    pool: &mut BlockPool,
+    li: usize,
+) -> Result<Tensor> {
+    let d = model.cfg.d_model;
+    let h = model.cfg.n_heads;
+    let hd = d / h;
+
+    let mut attn_in = x.clone();
+    rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
+    let mut q = block.wq.forward(&attn_in)?;
+    let mut k = block.wk.forward(&attn_in)?;
+    let v = block.wv.forward(&attn_in)?;
+    apply_rope(q.data_mut(), 1, t, h, hd, rope);
+    apply_rope(k.data_mut(), 1, t, h, hd, rope);
+    cache.write_rows(pool, li, k.data(), v.data())?;
+
+    let mut ctx = Tensor::zeros(&[t, d]);
+    let mut probs = Vec::new();
+    let segs = cache.segments(pool, li, p0 + t);
+    attend_segs(q.data(), &segs, ctx.data_mut(), t, p0, h, hd, &mut probs);
     let attn_out = block.wo.forward(&ctx)?;
     let x1 = x.add(&attn_out)?;
 
@@ -273,10 +479,9 @@ fn block_forward_step(
         let mut probs = Vec::new();
         for (bi, cache) in caches.iter().enumerate() {
             let klen = cache.len() + 1; // cached prefix + the row just written
-            attend_chunk(
+            attend_segs(
                 &qd[bi * d..(bi + 1) * d],
-                cache.keys(li, klen),
-                cache.values(li, klen),
+                &[(cache.keys(li, klen), cache.values(li, klen))],
                 &mut cd[bi * d..(bi + 1) * d],
                 1,
                 klen - 1,
@@ -284,6 +489,128 @@ fn block_forward_step(
                 hd,
                 &mut probs,
             );
+        }
+    }
+    let attn_out = block.wo.forward(&ctx)?;
+    let x1 = x.add(&attn_out)?;
+
+    ffn_branch(block, d, &x1)
+}
+
+/// Paged twin of [`block_forward_step`].
+fn block_forward_step_paged(
+    block: &PackedBlock,
+    model: &PackedModel,
+    x: &Tensor,
+    ropes: &[RopeView<'_>],
+    caches: &mut [&mut PagedKvCache],
+    pool: &mut BlockPool,
+    li: usize,
+) -> Result<Tensor> {
+    let d = model.cfg.d_model;
+    let h = model.cfg.n_heads;
+    let hd = d / h;
+    let b = x.rows();
+
+    let mut attn_in = x.clone();
+    rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
+    let mut q = block.wq.forward(&attn_in)?;
+    let mut k = block.wk.forward(&attn_in)?;
+    let v = block.wv.forward(&attn_in)?;
+    for bi in 0..b {
+        apply_rope(&mut q.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
+        apply_rope(&mut k.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
+        let krow = &k.data()[bi * d..(bi + 1) * d];
+        let vrow = &v.data()[bi * d..(bi + 1) * d];
+        caches[bi].write_rows(&mut *pool, li, krow, vrow)?;
+    }
+
+    let mut ctx = Tensor::zeros(&[b, d]);
+    {
+        let cd = ctx.data_mut();
+        let qd = q.data();
+        let mut probs = Vec::new();
+        let mut segs = Vec::new();
+        let pool_ref: &BlockPool = pool;
+        for (bi, cache) in caches.iter().enumerate() {
+            let klen = cache.len() + 1; // cached prefix + the row just written
+            cache.segments_into(pool_ref, li, klen, &mut segs);
+            attend_segs(
+                &qd[bi * d..(bi + 1) * d],
+                &segs,
+                &mut cd[bi * d..(bi + 1) * d],
+                1,
+                klen - 1,
+                h,
+                hd,
+                &mut probs,
+            );
+        }
+    }
+    let attn_out = block.wo.forward(&ctx)?;
+    let x1 = x.add(&attn_out)?;
+
+    ffn_branch(block, d, &x1)
+}
+
+/// One block of the batched prefill: x is the ragged concatenation of
+/// every sequence's chunk rows (`ts[bi]` rows each, sequence `bi`
+/// extending committed prefix `p0s[bi]`).  Projections run over all
+/// rows at once; every sequence's K/V rows are written before ANY
+/// sequence attends, so same-tick prefix sharing reads rows
+/// materialized earlier in this very pass.
+#[allow(clippy::too_many_arguments)]
+fn block_prefill_batch(
+    block: &PackedBlock,
+    model: &PackedModel,
+    x: &Tensor,
+    p0s: &[usize],
+    ts: &[usize],
+    ropes: &[RopeView<'_>],
+    caches: &mut [&mut PagedKvCache],
+    pool: &mut BlockPool,
+    li: usize,
+) -> Result<Tensor> {
+    let d = model.cfg.d_model;
+    let h = model.cfg.n_heads;
+    let hd = d / h;
+
+    let mut attn_in = x.clone();
+    rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
+    let mut q = block.wq.forward(&attn_in)?;
+    let mut k = block.wk.forward(&attn_in)?;
+    let v = block.wv.forward(&attn_in)?;
+    let mut row = 0usize;
+    for (bi, &t) in ts.iter().enumerate() {
+        let span = row * d..(row + t) * d;
+        apply_rope(&mut q.data_mut()[span.clone()], 1, t, h, hd, &ropes[bi]);
+        apply_rope(&mut k.data_mut()[span.clone()], 1, t, h, hd, &ropes[bi]);
+        caches[bi].write_rows(&mut *pool, li, &k.data()[span.clone()], &v.data()[span])?;
+        row += t;
+    }
+
+    let n = x.rows();
+    let mut ctx = Tensor::zeros(&[n, d]);
+    {
+        let cd = ctx.data_mut();
+        let qd = q.data();
+        let mut probs = Vec::new();
+        let mut segs = Vec::new();
+        let pool_ref: &BlockPool = pool;
+        let mut row = 0usize;
+        for (bi, &t) in ts.iter().enumerate() {
+            caches[bi].segments_into(pool_ref, li, p0s[bi] + t, &mut segs);
+            attend_segs(
+                &qd[row * d..(row + t) * d],
+                &segs,
+                &mut cd[row * d..(row + t) * d],
+                t,
+                p0s[bi],
+                h,
+                hd,
+                &mut probs,
+            );
+            row += t;
         }
     }
     let attn_out = block.wo.forward(&ctx)?;
@@ -344,6 +671,55 @@ pub fn generate(
             let newest: Vec<i32> = rows.iter().map(|r| *r.last().unwrap()).collect();
             let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
             let logits = model.forward_step(&newest, &mut refs)?;
+            for (bi, row) in rows.iter_mut().enumerate() {
+                let tok = pick(logits.row(bi), sampling, rngs[bi].as_mut());
+                row.push(tok);
+            }
+        }
+    }
+    Ok(GenReport {
+        tokens: rows,
+        prompt_len: t0,
+        new_tokens: max_new,
+        wall_secs: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// [`generate`] over paged KV storage: same decode loop, but each
+/// sequence holds a block table over a run-local [`BlockPool`] of
+/// `block_size`-position pages instead of a worst-case flat slab.
+/// Token streams are bitwise identical to [`generate`] at every block
+/// size (`tests/paged.rs` pins sizes 1 / 7 / 64).
+pub fn generate_paged(
+    model: &PackedModel,
+    prompt: &IntTensor,
+    max_new: usize,
+    sampling: Option<&SamplingParams>,
+    block_size: usize,
+) -> Result<GenReport> {
+    let (b, t0) = check_prompt(prompt)?;
+    let cfg = &model.cfg;
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|i| prompt.data()[i * t0..(i + 1) * t0].to_vec())
+        .collect();
+    let mut rngs: Vec<Option<Rng>> = (0..b)
+        .map(|i| sampling.map(|p| seq_rng(p.seed, i)))
+        .collect();
+    let start = Instant::now();
+    if max_new > 0 {
+        let bs = block_size.max(1);
+        let per_seq = (t0 + max_new).div_ceil(bs);
+        let mut pool = BlockPool::new(cfg.n_layers, cfg.d_model, bs, b * per_seq);
+        let mut caches: Vec<PagedKvCache> = (0..b).map(|_| PagedKvCache::new(&pool)).collect();
+        for (bi, row) in rows.iter_mut().enumerate() {
+            let logits = model.forward_chunk_paged(&row[..], &mut caches[bi], &mut pool)?;
+            let tok = pick(logits.row(t0 - 1), sampling, rngs[bi].as_mut());
+            row.push(tok);
+        }
+        for _ in 1..max_new {
+            let newest: Vec<i32> = rows.iter().map(|r| *r.last().unwrap()).collect();
+            let mut refs: Vec<&mut PagedKvCache> = caches.iter_mut().collect();
+            let logits = model.forward_step_paged(&newest, &mut refs, &mut pool)?;
             for (bi, row) in rows.iter_mut().enumerate() {
                 let tok = pick(logits.row(bi), sampling, rngs[bi].as_mut());
                 row.push(tok);

@@ -1,12 +1,16 @@
-//! Per-sequence KV caches for incremental decoding.
+//! Flat per-sequence KV caches: the reference layout for paged decode.
 //!
 //! A [`KvCache`] holds one sequence's post-RoPE keys and values for every
 //! transformer layer in two pre-allocated flat buffers (layer-major,
-//! position-minor), sized once at admission to `prompt_len + max_new` so
-//! the decode loop never reallocates.  Caches are recycled through a
-//! [`KvPool`] — a ring of retired buffers the continuous-batching
-//! scheduler draws from when it admits a new request, so steady-state
-//! serving does no per-request K/V allocation at all.
+//! position-minor), sized once to `prompt_len + max_new` so the decode
+//! loop never reallocates.  Retired buffers recycle through a [`KvPool`].
+//!
+//! Production serving now runs on the paged subsystem
+//! ([`crate::serve::block::BlockPool`] +
+//! [`crate::serve::paged::PagedKvCache`]); the flat slab stays alive as
+//! the bit-exact equivalence oracle for it — the same role
+//! `generate_recompute` plays for cached decode — and as the simple
+//! storage behind `serve::decode::generate`.
 
 use crate::error::{Error, Result};
 
@@ -140,10 +144,22 @@ impl KvPool {
         KvPool { n_layers, d, free: Vec::new() }
     }
 
-    /// Take a cache with capacity >= `cap`, reusing a retired buffer when
-    /// one is big enough, else allocating fresh.
+    /// Take a cache with capacity >= `cap`, reusing the BEST-FITTING
+    /// (smallest sufficient) retired buffer, else allocating fresh.
+    /// First-fit used to burn a 16k-cap slab on a 64-token request,
+    /// forcing the next long request to allocate fresh; best-fit keeps
+    /// big retirees for big asks.  (The paged [`crate::serve::block::BlockPool`]
+    /// sidesteps the problem entirely — fixed-size pages make every fit
+    /// exact.)
     pub fn take(&mut self, cap: usize) -> KvCache {
-        if let Some(i) = self.free.iter().position(|c| c.capacity() >= cap) {
+        let best = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.capacity() >= cap)
+            .min_by_key(|(_, c)| c.capacity())
+            .map(|(i, _)| i);
+        if let Some(i) = best {
             let mut c = self.free.swap_remove(i);
             c.reset();
             return c;
@@ -228,5 +244,24 @@ mod tests {
         let c = pool.take(16);
         assert_eq!(c.capacity(), 16);
         assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn pool_take_is_best_fit() {
+        let mut pool = KvPool::new(1, 2);
+        pool.give(KvCache::new(1, 2, 64));
+        pool.give(KvCache::new(1, 2, 8));
+        pool.give(KvCache::new(1, 2, 16));
+
+        // a tiny ask must NOT burn the 64-cap slab: smallest fit wins
+        let a = pool.take(4);
+        assert_eq!(a.capacity(), 8);
+        // next-smallest sufficient buffer for a mid ask
+        let b = pool.take(10);
+        assert_eq!(b.capacity(), 16);
+        // the big slab is still there for the big ask
+        let c = pool.take(40);
+        assert_eq!(c.capacity(), 64);
+        assert_eq!(pool.idle(), 0);
     }
 }

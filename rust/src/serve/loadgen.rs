@@ -9,6 +9,14 @@
 //! percentiles and the peak number of concurrently streaming requests —
 //! the observable proof that continuous batching interleaves mid-flight
 //! admissions.
+//!
+//! `common_prefix > 0` makes the first N prompt tokens identical across
+//! every request (all clients derive them from the same seed), which
+//! drives the server's prompt-prefix sharing; after the load drains, one
+//! extra connection sends `{"cmd":"stats"}` and the scraped KV block
+//! accounting (peak resident / peak shared pages) rides on the report —
+//! that is where `repro bench-serve`'s `BENCH_serve.json` gets its
+//! serving-memory numbers.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -29,6 +37,10 @@ pub struct LoadOptions {
     pub max_new: usize,
     /// Prompts draw uniform tokens from [0, vocab).
     pub vocab: usize,
+    /// First `common_prefix` tokens of EVERY prompt are identical across
+    /// all clients/requests (capped at `prompt_len`) — exercises the
+    /// server's KV prefix sharing.
+    pub common_prefix: usize,
     /// 0 = greedy; otherwise seeded sampling at this temperature.
     pub temperature: f32,
     pub seed: u64,
@@ -45,6 +57,21 @@ struct ReqRecord {
     n_tokens: usize,
 }
 
+/// KV block accounting scraped from the server's stats frame after the
+/// load drained (current counts are near-idle by then; the peaks carry
+/// the run's memory story).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvSnapshot {
+    pub block_size: usize,
+    pub blocks_total: usize,
+    pub resident_blocks: usize,
+    pub shared_blocks: usize,
+    pub peak_resident_blocks: usize,
+    pub peak_shared_blocks: usize,
+    pub block_bytes: usize,
+    pub peak_resident_bytes: usize,
+}
+
 /// Aggregated results of one load run.
 pub struct LoadReport {
     pub requests: usize,
@@ -57,6 +84,9 @@ pub struct LoadReport {
     /// done — >= 2 demonstrates interleaved (continuously batched)
     /// streams.
     pub peak_concurrent_streams: usize,
+    /// Post-run KV memory scrape (`None` if the server predates the
+    /// stats command or the scrape failed).
+    pub kv: Option<KvSnapshot>,
 }
 
 impl LoadReport {
@@ -83,10 +113,20 @@ fn run_client(
     let mut rng = Rng::new(o.seed ^ (client as u64).wrapping_mul(0xA5A5_A5A5_A5A5_A5A5).max(1));
     let mut records = Vec::with_capacity(o.requests_per_client);
 
+    // Every client derives the SAME shared prefix from the run seed
+    // alone, so all requests agree on it token for token.
+    let n_common = o.common_prefix.min(o.prompt_len);
+    let mut crng = Rng::new(o.seed ^ 0xC0FF_EE00_0000_0001);
+    let common: Vec<usize> = (0..n_common).map(|_| crng.below(o.vocab)).collect();
+
     for ri in 0..o.requests_per_client {
         let id = format!("c{client}-r{ri}");
-        let prompt: Vec<String> =
-            (0..o.prompt_len).map(|_| rng.below(o.vocab).to_string()).collect();
+        let prompt: Vec<String> = common
+            .iter()
+            .copied()
+            .chain((0..o.prompt_len - n_common).map(|_| rng.below(o.vocab)))
+            .map(|t| t.to_string())
+            .collect();
         let sampling = if o.temperature > 0.0 {
             format!(
                 ",\"temperature\":{},\"seed\":{}",
@@ -207,6 +247,10 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     });
     let wall_secs = epoch.elapsed().as_secs_f64();
 
+    // Scrape KV memory stats BEFORE any shutdown: the peaks describe
+    // the load we just generated.
+    let kv = fetch_kv_stats(&o.addr).ok();
+
     if o.shutdown_after {
         // After every client is done: a throwaway connection that only
         // asks the server to stop.
@@ -231,6 +275,42 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         ttft: LatencySummary::from_secs(ttft),
         total: LatencySummary::from_secs(total),
         peak_concurrent_streams: peak_overlap(&records),
+        kv,
+    })
+}
+
+/// One-shot `{"cmd":"stats"}` round trip on a fresh connection.
+pub fn fetch_kv_stats(addr: &str) -> Result<KvSnapshot> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::io(format!("connect {addr}: {e}")))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| Error::io(format!("clone socket: {e}")))?;
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(b"{\"cmd\":\"stats\"}\n")
+        .map_err(|e| Error::io(format!("send stats cmd: {e}")))?;
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .map_err(|e| Error::io(format!("read stats frame: {e}")))?;
+    let j = Json::parse(line.trim())?;
+    if j.get("event").and_then(Json::as_str) != Some("stats") {
+        return Err(Error::config(format!("expected a stats frame, got: {line}")));
+    }
+    let kv = j
+        .get("kv")
+        .ok_or_else(|| Error::config("stats frame lacks a 'kv' object"))?;
+    let field = |name: &str| kv.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+    Ok(KvSnapshot {
+        block_size: field("block_size"),
+        blocks_total: field("blocks_total"),
+        resident_blocks: field("resident_blocks"),
+        shared_blocks: field("shared_blocks"),
+        peak_resident_blocks: field("peak_resident_blocks"),
+        peak_shared_blocks: field("peak_shared_blocks"),
+        block_bytes: field("block_bytes"),
+        peak_resident_bytes: field("peak_resident_bytes"),
     })
 }
 

@@ -1,33 +1,47 @@
-//! The serving subsystem: KV-cached incremental decoding behind a
-//! continuous-batching token server.
+//! The serving subsystem: paged KV memory + KV-cached incremental
+//! decoding behind a continuous-batching token server.
 //!
 //! Built on `infer`'s packed-weight engine, this module turns the
 //! O(T^2) per-token decode of PR 1 into a production-shaped loop:
 //!
-//! * [`kv`] — pre-allocated per-sequence K/V buffers ([`KvCache`]) and a
-//!   recycling [`KvPool`].
-//! * [`decode`] — `PackedModel::forward_chunk` (prefill) and
-//!   `PackedModel::forward_step` (one batched decode step), plus
-//!   [`decode::generate`] / [`decode::generate_recompute`] — the cached
-//!   path is bit-identical to full-prefix recompute.
+//! * [`block`] — the model-wide [`BlockPool`] of fixed-size KV pages
+//!   (free list, refcounts, high-water stats).
+//! * [`paged`] — per-sequence [`PagedKvCache`] block tables with
+//!   copy-on-write prompt-prefix sharing; grows one page at a time.
+//! * [`kv`] — the flat per-sequence slab ([`KvCache`] + recycling
+//!   [`KvPool`]), retained as the bit-exact equivalence oracle for the
+//!   paged layout.
+//! * [`decode`] — chunk prefill / batched decode steps over either
+//!   layout (one shared segment-walking attention core, so paged ==
+//!   flat bit for bit), batched multi-sequence prefill, plus
+//!   [`decode::generate`] / [`decode::generate_paged`] /
+//!   [`decode::generate_recompute`].
 //! * [`sampling`] — seeded temperature / top-k / top-p next to greedy.
-//! * [`scheduler`] — step-granular continuous batching with per-request
-//!   stats.
-//! * [`json`] / [`protocol`] — the newline-delimited JSON line protocol.
+//! * [`scheduler`] — step-granular continuous batching: admission by
+//!   block budget, same-tick admissions prefilled in one batched pass,
+//!   prefix-shared pages across requests, per-request stats.
+//! * [`json`] / [`protocol`] — the newline-delimited JSON line protocol
+//!   (now incl. `{"cmd":"stats"}` -> KV memory stats frames).
 //! * [`server`] — the long-lived `repro serve` TCP loop (std threads +
 //!   channels).
-//! * [`loadgen`] — the `repro bench-serve` concurrent load generator.
+//! * [`loadgen`] — the `repro bench-serve` concurrent load generator
+//!   (common-prefix prompts to exercise sharing, KV stats scrape,
+//!   `BENCH_serve.json`).
 
+pub mod block;
 pub mod decode;
 pub mod json;
 pub mod kv;
 pub mod loadgen;
+pub mod paged;
 pub mod protocol;
 pub mod sampling;
 pub mod scheduler;
 pub mod server;
 
+pub use block::{BlockPool, KvStats};
 pub use kv::{KvCache, KvPool};
+pub use paged::PagedKvCache;
 pub use sampling::SamplingParams;
 pub use scheduler::{FinishReason, GenRequest, RequestStats, SchedConfig, Scheduler, StepEvent};
 pub use server::{ServeOptions, Server};

@@ -1,0 +1,391 @@
+//! Per-sequence paged KV caches: a block table over [`BlockPool`] pages.
+//!
+//! A [`PagedKvCache`] is the paged replacement for the flat
+//! [`crate::serve::kv::KvCache`] slab: instead of one worst-case
+//! `prompt_len + max_new` buffer, the sequence holds an ordered table of
+//! fixed-size block ids and grows **on demand** — one page at a time —
+//! as decode appends positions.  The flat cache stays alive as the
+//! bit-exact equivalence oracle (`tests/paged.rs` pins paged == flat for
+//! block sizes 1/7/64), mirroring how `generate_recompute` anchors the
+//! cached decode path.
+//!
+//! ## Prefix sharing + copy-on-write
+//!
+//! K/V rows depend only on the token prefix up to their position (causal
+//! attention, absolute-position RoPE), so two requests whose prompts
+//! share a prefix compute **bitwise identical** rows there.
+//! [`PagedKvCache::fork_prefix`] exploits that: the child maps the
+//! parent's physical blocks for the shared positions (refcount bump, no
+//! copy).  Committed positions are immutable — rows are written once and
+//! never rewritten — so full shared blocks never need copying.  Only a
+//! *partially filled* shared tail block can see a write, and
+//! [`PagedKvCache::reserve`] copies it to a private page first
+//! (copy-on-write); both the forker and the forkee keep decoding
+//! independently from that point.
+//!
+//! Writers must call `reserve` before `write_rows`: reserve is where the
+//! block budget is enforced (admission backoff / capacity finish) and
+//! where CoW happens, so the write path itself stays a straight scatter.
+
+use crate::error::{Error, Result};
+use crate::serve::block::BlockPool;
+
+/// One sequence's KV state: an ordered block table plus the committed
+/// length.  All layers share the table (a block stores every layer's
+/// rows for its positions) and the same `len`, exactly like the flat
+/// cache: layers write the same positions during one forward pass and
+/// the caller commits once with [`PagedKvCache::advance`].
+pub struct PagedKvCache {
+    n_layers: usize,
+    d: usize,
+    block_size: usize,
+    len: usize,
+    /// Physical block ids, ascending position order: `table[i]` holds
+    /// positions `[i * block_size, (i + 1) * block_size)`.
+    table: Vec<usize>,
+}
+
+impl PagedKvCache {
+    /// An empty cache shaped for `pool`'s model.  The cache must only
+    /// ever be used with the pool that shaped it.
+    pub fn new(pool: &BlockPool) -> Self {
+        PagedKvCache {
+            n_layers: pool.n_layers(),
+            d: pool.d(),
+            block_size: pool.block_size(),
+            len: 0,
+            table: Vec::new(),
+        }
+    }
+
+    /// Committed positions (the attention span of the next decode step).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions writable without another `reserve`.
+    pub fn capacity(&self) -> usize {
+        self.table.len() * self.block_size
+    }
+
+    /// Physical blocks currently mapped by this sequence.
+    pub fn n_blocks(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Block id covering position `pos` (tests / introspection).
+    pub fn block_at(&self, pos: usize) -> usize {
+        self.table[pos / self.block_size]
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Check this cache was shaped for `model`-shaped K/V rows.
+    pub fn check_shape(&self, n_layers: usize, d: usize) -> Result<()> {
+        if self.n_layers != n_layers || self.d != d {
+            return Err(Error::shape(format!(
+                "PagedKvCache shaped for {} layers x d {}, model wants {} x {}",
+                self.n_layers, self.d, n_layers, d
+            )));
+        }
+        Ok(())
+    }
+
+    /// Blocks needed to hold `positions`.
+    fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    /// Fork a child that maps the parent's physical blocks for positions
+    /// `[0, positions)` — refcount bumps only, no data copied.  The
+    /// shared positions must already be committed in the parent (or be
+    /// block-aligned and committed-by-the-same-batched-pass; the
+    /// scheduler guarantees one of the two).  A partially shared tail
+    /// block is copied on the child's (or parent's) next append.
+    pub fn fork_prefix(
+        parent: &PagedKvCache,
+        positions: usize,
+        pool: &mut BlockPool,
+    ) -> Result<PagedKvCache> {
+        let nb = parent.blocks_for(positions);
+        if nb > parent.table.len() {
+            return Err(Error::shape(format!(
+                "fork_prefix: {positions} positions want {nb} blocks, parent maps {}",
+                parent.table.len()
+            )));
+        }
+        let table = parent.table[..nb].to_vec();
+        for &id in &table {
+            pool.retain(id);
+        }
+        Ok(PagedKvCache {
+            n_layers: parent.n_layers,
+            d: parent.d,
+            block_size: parent.block_size,
+            len: positions,
+            table,
+        })
+    }
+
+    /// Make positions `[len, upto)` writable: copy-on-write any shared
+    /// block the write range touches, then allocate missing tail blocks.
+    /// Fails (leaving already-acquired blocks mapped — callers that must
+    /// be atomic roll back with [`PagedKvCache::release_all`]) when the
+    /// pool budget is exhausted.
+    pub fn reserve(&mut self, upto: usize, pool: &mut BlockPool) -> Result<()> {
+        if upto <= self.len {
+            return Ok(());
+        }
+        let first = self.len / self.block_size;
+        let last = (upto - 1) / self.block_size;
+        for bi in first..=last {
+            if bi < self.table.len() {
+                let id = self.table[bi];
+                if pool.ref_count(id) > 1 {
+                    // Shared tail page about to be written: copy it to a
+                    // private page; the other holders keep the original.
+                    let nid = pool.try_alloc().ok_or_else(|| exhausted(pool))?;
+                    pool.copy_block(id, nid);
+                    pool.release(id);
+                    self.table[bi] = nid;
+                }
+            } else {
+                debug_assert_eq!(bi, self.table.len(), "table grows in order");
+                let nid = pool.try_alloc().ok_or_else(|| exhausted(pool))?;
+                self.table.push(nid);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write `t = krows.len() / d` new K/V rows of `layer` at positions
+    /// `len..len + t`, scattering across blocks.  Does NOT advance `len`
+    /// (all layers write the same positions during one pass).  The range
+    /// must have been `reserve`d.
+    pub fn write_rows(
+        &mut self,
+        pool: &mut BlockPool,
+        layer: usize,
+        krows: &[f32],
+        vrows: &[f32],
+    ) -> Result<()> {
+        debug_assert_eq!(krows.len(), vrows.len());
+        let t = krows.len() / self.d;
+        if self.len + t > self.capacity() {
+            return Err(Error::shape(format!(
+                "PagedKvCache overflow: {} + {t} rows > reserved capacity {} (call reserve first)",
+                self.len,
+                self.capacity()
+            )));
+        }
+        let bs = self.block_size;
+        let mut pos = self.len;
+        let mut off = 0usize;
+        while off < krows.len() {
+            let slot = pos % bs;
+            let take = (bs - slot).min(self.len + t - pos);
+            let id = self.table[pos / bs];
+            let n = take * self.d;
+            pool.write_rows(id, layer, slot, &krows[off..off + n], &vrows[off..off + n]);
+            pos += take;
+            off += take * self.d;
+        }
+        Ok(())
+    }
+
+    /// Commit `t` freshly written positions.
+    pub fn advance(&mut self, t: usize) {
+        debug_assert!(self.len + t <= self.capacity());
+        self.len += t;
+    }
+
+    /// Per-block contiguous (K, V) row views of `layer` covering
+    /// positions `[0, upto)`, in ascending position order — the paged
+    /// attention path iterates these so the accumulation order (and
+    /// therefore every bit of the softmax) matches the flat layout.
+    pub fn segments<'p>(
+        &self,
+        pool: &'p BlockPool,
+        layer: usize,
+        upto: usize,
+    ) -> Vec<(&'p [f32], &'p [f32])> {
+        let mut segs = Vec::with_capacity(upto.div_ceil(self.block_size));
+        self.segments_into(pool, layer, upto, &mut segs);
+        segs
+    }
+
+    /// [`PagedKvCache::segments`] into caller-owned scratch (cleared
+    /// here), so the batched decode hot path reuses ONE vector across
+    /// the sequences of a layer instead of allocating per sequence.
+    pub fn segments_into<'p>(
+        &self,
+        pool: &'p BlockPool,
+        layer: usize,
+        upto: usize,
+        out: &mut Vec<(&'p [f32], &'p [f32])>,
+    ) {
+        debug_assert!(upto <= self.capacity());
+        out.clear();
+        let bs = self.block_size;
+        let mut pos = 0usize;
+        while pos < upto {
+            let take = bs.min(upto - pos);
+            let id = self.table[pos / bs];
+            out.push((pool.k_rows(id, layer, 0, take), pool.v_rows(id, layer, 0, take)));
+            pos += take;
+        }
+    }
+
+    /// Release every mapped block back to the pool (eviction / rollback).
+    pub fn release_all(&mut self, pool: &mut BlockPool) {
+        for id in self.table.drain(..) {
+            pool.release(id);
+        }
+        self.len = 0;
+    }
+}
+
+fn exhausted(pool: &BlockPool) -> Error {
+    Error::config(format!(
+        "KV block pool exhausted ({} blocks of {} positions)",
+        pool.max_blocks(),
+        pool.block_size()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(d: usize, t: usize, base: f32) -> Vec<f32> {
+        (0..t * d).map(|i| base + i as f32).collect()
+    }
+
+    #[test]
+    fn write_scatters_across_blocks_and_segments_read_back() {
+        let (layers, d, bs) = (2usize, 3usize, 4usize);
+        let mut pool = BlockPool::new(layers, d, bs, 8);
+        let mut c = PagedKvCache::new(&pool);
+        assert!(c.is_empty());
+
+        // 6 positions straddle two 4-position blocks
+        c.reserve(6, &mut pool).unwrap();
+        assert_eq!(c.n_blocks(), 2);
+        let k = rows(d, 6, 0.0);
+        let v = rows(d, 6, 100.0);
+        c.write_rows(&mut pool, 0, &k, &v).unwrap();
+        c.write_rows(&mut pool, 1, &v, &k).unwrap();
+        c.advance(6);
+        assert_eq!(c.len(), 6);
+
+        let segs = c.segments(&pool, 0, 6);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].0, &k[..4 * d]);
+        assert_eq!(segs[1].0, &k[4 * d..]);
+        assert_eq!(segs[0].1, &v[..4 * d]);
+        let segs = c.segments(&pool, 1, 5);
+        assert_eq!(segs[1].0, &v[4 * d..5 * d], "upto truncates the tail segment");
+
+        // appending one more position lands in block 1 slot 2
+        c.reserve(7, &mut pool).unwrap();
+        let k2 = rows(d, 1, 50.0);
+        c.write_rows(&mut pool, 0, &k2, &k2).unwrap();
+        c.advance(1);
+        let segs = c.segments(&pool, 0, 7);
+        assert_eq!(&segs[1].0[2 * d..], &k2[..]);
+
+        // writing past reserved capacity is an error, not a panic
+        assert!(c.write_rows(&mut pool, 0, &rows(d, 2, 0.0), &rows(d, 2, 0.0)).is_err());
+    }
+
+    #[test]
+    fn fork_shares_blocks_and_cow_splits_the_tail() {
+        let (layers, d, bs) = (1usize, 2usize, 4usize);
+        let mut pool = BlockPool::new(layers, d, bs, 8);
+        let mut a = PagedKvCache::new(&pool);
+        a.reserve(6, &mut pool).unwrap();
+        let k = rows(d, 6, 0.0);
+        a.write_rows(&mut pool, 0, &k, &k).unwrap();
+        a.advance(6);
+        assert_eq!(pool.stats().used_blocks, 2);
+
+        // child shares 5 positions: full block 0 + partial tail block 1
+        let mut b = PagedKvCache::fork_prefix(&a, 5, &mut pool).unwrap();
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.n_blocks(), 2);
+        assert_eq!(b.block_at(0), a.block_at(0));
+        assert_eq!(b.block_at(4), a.block_at(4));
+        assert_eq!(pool.ref_count(a.block_at(0)), 2);
+        assert_eq!(pool.stats().used_blocks, 2, "sharing allocates nothing");
+        assert_eq!(pool.stats().shared_blocks, 2);
+
+        // child's shared view reads the parent's rows
+        let segs = b.segments(&pool, 0, 5);
+        assert_eq!(segs[1].0, &k[4 * d..5 * d]);
+
+        // child appends at position 5 -> shared tail block is copied
+        let shared_tail = a.block_at(4);
+        b.reserve(6, &mut pool).unwrap();
+        assert_ne!(b.block_at(4), shared_tail, "CoW gave the child a private tail");
+        assert_eq!(a.block_at(4), shared_tail, "parent keeps the original");
+        assert_eq!(pool.ref_count(shared_tail), 1);
+        assert_eq!(pool.stats().shared_blocks, 1, "only block 0 still shared");
+        let kb = rows(d, 1, 500.0);
+        b.write_rows(&mut pool, 0, &kb, &kb).unwrap();
+        b.advance(1);
+        // the copied tail still carries the shared prefix row at slot 0
+        let segs = b.segments(&pool, 0, 6);
+        assert_eq!(&segs[1].0[..d], &k[4 * d..5 * d]);
+        assert_eq!(&segs[1].0[d..2 * d], &kb[..]);
+        // and the parent's tail is untouched by the child's write
+        let segs = a.segments(&pool, 0, 6);
+        assert_eq!(segs[1].0, &k[4 * d..]);
+
+        // full release returns every page
+        b.release_all(&mut pool);
+        a.release_all(&mut pool);
+        let s = pool.stats();
+        assert_eq!(s.used_blocks, 0);
+        assert_eq!(s.shared_blocks, 0);
+        assert!(s.peak_shared_blocks >= 2, "peak sharing survives the run");
+    }
+
+    #[test]
+    fn parent_append_into_shared_tail_also_cows() {
+        let (layers, d, bs) = (1usize, 2usize, 4usize);
+        let mut pool = BlockPool::new(layers, d, bs, 8);
+        let mut a = PagedKvCache::new(&pool);
+        a.reserve(5, &mut pool).unwrap();
+        let k = rows(d, 5, 0.0);
+        a.write_rows(&mut pool, 0, &k, &k).unwrap();
+        a.advance(5);
+
+        let b = PagedKvCache::fork_prefix(&a, 5, &mut pool).unwrap();
+        let tail = a.block_at(4);
+        assert_eq!(pool.ref_count(tail), 2);
+
+        // now the PARENT appends: it must CoW, the child keeps `tail`
+        a.reserve(6, &mut pool).unwrap();
+        assert_ne!(a.block_at(4), tail);
+        assert_eq!(b.block_at(4), tail);
+        assert_eq!(pool.ref_count(tail), 1);
+    }
+
+    #[test]
+    fn reserve_fails_when_budget_exhausted() {
+        let mut pool = BlockPool::new(1, 2, 4, 2);
+        let mut a = PagedKvCache::new(&pool);
+        a.reserve(8, &mut pool).unwrap(); // both blocks
+        let mut b = PagedKvCache::new(&pool);
+        assert!(b.reserve(1, &mut pool).is_err(), "no blocks left");
+        a.release_all(&mut pool);
+        assert!(b.reserve(1, &mut pool).is_ok(), "reclaimed after release");
+        b.release_all(&mut pool);
+    }
+}

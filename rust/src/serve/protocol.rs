@@ -6,6 +6,7 @@
 //! {"id":"r1","prompt":[5,17,3],"max_new":32}
 //! {"id":"r2","prompt":[5],"max_new":16,"temperature":0.8,"top_k":40,"top_p":0.95,"seed":7}
 //! {"id":"r3","prompt":[5],"max_new":16,"stop":0}
+//! {"cmd":"stats"}
 //! {"cmd":"shutdown"}
 //! ```
 //!
@@ -13,7 +14,8 @@
 //! token-id array; `max_new` defaults to 32.  Omitting `temperature` (or
 //! setting it `<= 0`) selects greedy decoding; otherwise temperature /
 //! top-k / top-p / seed configure the seeded sampler.  `stop` ends the
-//! stream early when that token is produced.
+//! stream early when that token is produced.  `{"cmd":"stats"}` asks the
+//! engine for a one-off stats frame (KV memory + queue state).
 //!
 //! ## Frames (server -> client, one JSON object per line)
 //!
@@ -21,16 +23,25 @@
 //! {"id":"r1","event":"token","index":0,"token":42}
 //! {"id":"r1","event":"done","finish":"length","prompt_len":3,"tokens":[42,7],
 //!  "stats":{"queue_ms":0.1,"prefill_ms":3.2,"total_ms":40.5,"tokens_per_sec":790.1,
-//!           "max_gap_ms":2.0}}
+//!           "max_gap_ms":2.0,"shared_prefix_tokens":0}}
 //! {"id":"r1","event":"error","message":"..."}
+//! {"id":"","event":"stats","active":1,"pending":0,"completed":7,
+//!  "kv":{"block_size":32,"blocks_total":384,"resident_blocks":12,"free_blocks":4,
+//!        "used_blocks":8,"shared_blocks":2,"peak_resident_blocks":12,
+//!        "peak_shared_blocks":3,"block_bytes":65536,"resident_bytes":786432,
+//!        "peak_resident_bytes":786432}}
 //! ```
 //!
 //! Tokens stream as they are produced (`index` counts generated tokens
 //! from 0); `done.tokens` holds only the generated suffix.  Multiple
 //! requests may be in flight on one connection; frames interleave and are
-//! routed by `id`.
+//! routed by `id`.  Stats frames report the paged KV pool: resident /
+//! free / used / shared block counts plus high-water marks, so a client
+//! can observe prefix sharing and peak KV memory even after its
+//! requests finished.
 
 use crate::error::{Error, Result};
+use crate::serve::block::KvStats;
 use crate::serve::json::Json;
 use crate::serve::sampling::SamplingParams;
 use crate::serve::scheduler::{RequestStats, StepEvent};
@@ -52,6 +63,7 @@ pub struct WireRequest {
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientLine {
     Request(WireRequest),
+    Stats,
     Shutdown,
 }
 
@@ -60,6 +72,7 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
     let j = Json::parse(line)?;
     if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
         return match cmd {
+            "stats" => Ok(ClientLine::Stats),
             "shutdown" => Ok(ClientLine::Shutdown),
             other => Err(Error::config(format!("unknown cmd '{other}'"))),
         };
@@ -122,7 +135,37 @@ fn stats_json(s: &RequestStats) -> Json {
             "tokens_per_sec".to_string(),
             Json::Num((s.tokens_per_sec() * 10.0).round() / 10.0),
         ),
+        ("shared_prefix_tokens".to_string(), Json::from(s.shared_prefix_tokens)),
     ])
+}
+
+/// Render the engine-wide stats frame: queue/batch counters plus the
+/// paged KV pool's block accounting (current and high-water).
+pub fn stats_frame(kv: &KvStats, active: usize, pending: usize, completed: usize) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), Json::from("")),
+        ("event".to_string(), Json::from("stats")),
+        ("active".to_string(), Json::from(active)),
+        ("pending".to_string(), Json::from(pending)),
+        ("completed".to_string(), Json::from(completed)),
+        (
+            "kv".to_string(),
+            Json::Obj(vec![
+                ("block_size".to_string(), Json::from(kv.block_size)),
+                ("blocks_total".to_string(), Json::from(kv.blocks_total)),
+                ("resident_blocks".to_string(), Json::from(kv.resident_blocks)),
+                ("free_blocks".to_string(), Json::from(kv.free_blocks)),
+                ("used_blocks".to_string(), Json::from(kv.used_blocks)),
+                ("shared_blocks".to_string(), Json::from(kv.shared_blocks)),
+                ("peak_resident_blocks".to_string(), Json::from(kv.peak_resident_blocks)),
+                ("peak_shared_blocks".to_string(), Json::from(kv.peak_shared_blocks)),
+                ("block_bytes".to_string(), Json::from(kv.block_bytes)),
+                ("resident_bytes".to_string(), Json::from(kv.resident_bytes)),
+                ("peak_resident_bytes".to_string(), Json::from(kv.peak_resident_bytes)),
+            ]),
+        ),
+    ])
+    .render()
 }
 
 /// Render an error frame (empty `id` when the failure precedes parsing).
@@ -205,9 +248,37 @@ mod tests {
     }
 
     #[test]
-    fn parses_shutdown() {
+    fn parses_shutdown_and_stats() {
         assert_eq!(parse_line(r#"{"cmd":"shutdown"}"#).unwrap(), ClientLine::Shutdown);
+        assert_eq!(parse_line(r#"{"cmd":"stats"}"#).unwrap(), ClientLine::Stats);
         assert!(parse_line(r#"{"cmd":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn stats_frame_carries_kv_accounting() {
+        let kv = crate::serve::block::KvStats {
+            block_size: 4,
+            blocks_total: 16,
+            resident_blocks: 6,
+            free_blocks: 1,
+            used_blocks: 5,
+            shared_blocks: 2,
+            peak_resident_blocks: 6,
+            peak_shared_blocks: 3,
+            block_bytes: 256,
+            resident_bytes: 1536,
+            peak_resident_bytes: 1536,
+        };
+        let f = stats_frame(&kv, 2, 1, 9);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("stats"));
+        assert_eq!(j.get("active").and_then(Json::as_i64), Some(2));
+        assert_eq!(j.get("completed").and_then(Json::as_i64), Some(9));
+        let kvj = j.get("kv").expect("kv object");
+        assert_eq!(kvj.get("block_size").and_then(Json::as_i64), Some(4));
+        assert_eq!(kvj.get("shared_blocks").and_then(Json::as_i64), Some(2));
+        assert_eq!(kvj.get("peak_shared_blocks").and_then(Json::as_i64), Some(3));
+        assert_eq!(kvj.get("peak_resident_bytes").and_then(Json::as_i64), Some(1536));
     }
 
     #[test]
@@ -247,6 +318,7 @@ mod tests {
                 total_secs: 0.01,
                 max_inter_token_secs: 0.003,
                 n_new_tokens: 2,
+                shared_prefix_tokens: 1,
             },
         };
         let f = event_frame(&done);

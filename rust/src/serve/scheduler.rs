@@ -1,27 +1,41 @@
-//! Continuous-batching scheduler: step-granular admission and eviction.
+//! Continuous-batching scheduler over paged KV memory.
 //!
-//! The scheduler owns the set of in-flight sequences.  Every call to
-//! [`Scheduler::step`] (1) admits pending requests into the running batch
-//! while there is room — each admission prefills the prompt into a pooled
-//! [`KvCache`] and emits the request's first token immediately, so a
-//! request that arrives mid-flight starts decoding before earlier
-//! requests finish; (2) runs ONE incremental decode step for the whole
-//! batch through `PackedModel::forward_step`; (3) evicts finished
-//! sequences, returning their caches to the pool.  Per-request stats
-//! (queue wait, prefill time, decode time, worst inter-token gap) ride on
-//! the final [`StepEvent::Done`].
+//! The scheduler owns the set of in-flight sequences AND the model-wide
+//! [`BlockPool`] their K/V pages come from.  Every call to
+//! [`Scheduler::step`]:
 //!
-//! All attention state is per-sequence, and every batched operation in
-//! the decode path is row-independent, so batch composition never changes
-//! a request's token stream — the invariance `tests/serve.rs` checks.
+//! 1. **Admits** pending requests while the batch has room *and the
+//!    block budget covers each prompt* — a request whose prompt cannot
+//!    get its pages backs off at the front of the queue until eviction
+//!    frees blocks (no worst-case `prompt + max_new` reservation; decode
+//!    pages are allocated on demand).  Each admission first maps the
+//!    longest shareable prompt prefix of any live (or same-tick) request
+//!    onto the same physical blocks (refcount bump, no copy, no
+//!    recompute), then ALL admissions of the tick prefill their
+//!    remaining suffixes in ONE batched [`PackedModel::prefill_batch`]
+//!    pass and emit their first tokens.
+//! 2. Runs ONE incremental decode step for the whole batch through
+//!    [`PackedModel::forward_step_paged`], growing block tables by at
+//!    most one page per sequence; a sequence the budget cannot extend
+//!    finishes with `capacity` instead of poisoning the batch.
+//! 3. **Evicts** finished sequences, releasing their refcounted blocks
+//!    back to the pool (shared pages survive until the last holder
+//!    leaves).
+//!
+//! All attention state is per-sequence, every batched operation in the
+//! decode path is row-independent, and shared prefix pages hold rows
+//! that are bitwise what the sharer would have computed itself — so
+//! batch composition, paging, and prefix sharing never change a
+//! request's token stream (`tests/serve.rs` + `tests/paged.rs`).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::error::Result;
 use crate::infer::PackedModel;
+use crate::serve::block::{BlockPool, KvStats};
 use crate::serve::decode::pick;
-use crate::serve::kv::{KvCache, KvPool};
+use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{seq_rng, SamplingParams};
 use crate::tensor::Rng;
 
@@ -34,11 +48,34 @@ pub struct SchedConfig {
     pub max_new_cap: usize,
     /// Maximum admissible prompt length (longer requests are rejected).
     pub max_prompt: usize,
+    /// Positions per KV page (`--kv-block`).
+    pub kv_block: usize,
+    /// KV page budget (`--kv-blocks-total`); 0 = auto-size to
+    /// `max_batch` worst-case sequences (paging then saves memory via
+    /// sharing + on-demand growth rather than by refusing admissions).
+    pub kv_blocks_total: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { max_batch: 8, max_new_cap: 512, max_prompt: 1024 }
+        SchedConfig {
+            max_batch: 8,
+            max_new_cap: 512,
+            max_prompt: 1024,
+            kv_block: 32,
+            kv_blocks_total: 0,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Resolved block budget (auto-sizing applied).
+    pub fn blocks_total(&self) -> usize {
+        if self.kv_blocks_total > 0 {
+            return self.kv_blocks_total;
+        }
+        let bs = self.kv_block.max(1);
+        self.max_batch.max(1) * (self.max_prompt + self.max_new_cap).div_ceil(bs)
     }
 }
 
@@ -64,8 +101,8 @@ pub enum FinishReason {
     Length,
     /// Emitted the request's stop token.
     Stop,
-    /// KV cache exhausted (belt-and-braces; admission sizes caches so
-    /// this should not trigger).
+    /// KV block budget exhausted mid-decode (the sequence keeps what it
+    /// streamed; its pages are reclaimed for waiting requests).
     Capacity,
     /// Dropped by `Scheduler::cancel` (e.g. client went away).
     Cancelled,
@@ -87,7 +124,8 @@ impl FinishReason {
 pub struct RequestStats {
     /// Submission -> admission.
     pub queue_secs: f64,
-    /// Prompt prefill (includes the first sampled token).
+    /// Prompt prefill (the batched pass this request was prefilled in,
+    /// including its first sampled token).
     pub prefill_secs: f64,
     /// Admission -> completion.
     pub total_secs: f64,
@@ -95,6 +133,9 @@ pub struct RequestStats {
     pub max_inter_token_secs: f64,
     /// Generated (non-prompt) tokens.
     pub n_new_tokens: usize,
+    /// Prompt positions mapped from another request's pages instead of
+    /// being recomputed (prefix sharing).
+    pub shared_prefix_tokens: usize,
 }
 
 impl RequestStats {
@@ -126,13 +167,14 @@ pub enum StepEvent {
 
 struct Running {
     req: GenRequest,
-    cache: KvCache,
+    cache: PagedKvCache,
     rng: Option<Rng>,
     /// prompt + generated tokens.
     tokens: Vec<i32>,
     emitted: usize,
     admitted_at: Instant,
     prefill_secs: f64,
+    shared_prefix: usize,
     last_token_at: Instant,
     max_gap: f64,
     finish: Option<FinishReason>,
@@ -152,10 +194,22 @@ impl Running {
             self.finish = Some(FinishReason::Stop);
         } else if self.emitted >= self.req.max_new {
             self.finish = Some(FinishReason::Length);
-        } else if self.cache.remaining() == 0 {
-            self.finish = Some(FinishReason::Capacity);
         }
     }
+}
+
+/// An admission staged for this tick's batched prefill.
+struct Staged {
+    req: GenRequest,
+    cache: PagedKvCache,
+    admitted_at: Instant,
+    /// Prompt positions mapped from a donor's pages.
+    shared: usize,
+}
+
+/// Longest common prefix of two token slices.
+fn common_prefix(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
 }
 
 /// The continuous-batching scheduler.
@@ -164,13 +218,18 @@ pub struct Scheduler<'m> {
     cfg: SchedConfig,
     pending: VecDeque<GenRequest>,
     active: Vec<Running>,
-    pool: KvPool,
+    pool: BlockPool,
     completed: usize,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m PackedModel, cfg: SchedConfig) -> Self {
-        let pool = KvPool::new(model.cfg.n_layers, model.cfg.d_model);
+        let pool = BlockPool::new(
+            model.cfg.n_layers,
+            model.cfg.d_model,
+            cfg.kv_block.max(1),
+            cfg.blocks_total(),
+        );
         Scheduler { model, cfg, pending: VecDeque::new(), active: Vec::new(), pool, completed: 0 }
     }
 
@@ -195,6 +254,11 @@ impl<'m> Scheduler<'m> {
         self.completed
     }
 
+    /// KV memory snapshot (block counts, sharing, high-water marks).
+    pub fn kv_stats(&self) -> KvStats {
+        self.pool.stats()
+    }
+
     /// Drop a request wherever it is (pending or mid-decode).  Active
     /// sequences are evicted at the next step with `Cancelled`.
     pub fn cancel(&mut self, key: u64) {
@@ -206,16 +270,51 @@ impl<'m> Scheduler<'m> {
         }
     }
 
-    /// Drop everything (engine shutdown).
+    /// Drop everything (engine shutdown), returning every block.
     pub fn clear(&mut self) {
         self.pending.clear();
+        for r in self.active.iter_mut() {
+            r.cache.release_all(&mut self.pool);
+        }
         self.active.clear();
     }
 
-    /// Admit pending requests while the batch has room.  Each admission
-    /// prefills and emits the first token.
+    /// Longest shareable prompt prefix for `prompt` among live sequences
+    /// and this tick's earlier admissions.  Returns positions to map.
+    /// Active donors share any length (their rows are committed, so a
+    /// partial tail page just copy-on-writes later); same-tick donors
+    /// share only whole pages, so nobody writes into a page another
+    /// staged sequence still has to fill.  Always leaves >= 1 prompt
+    /// position to prefill — the request needs its own last-position
+    /// logits.
+    fn best_donor(&self, staged: &[Staged], prompt: &[i32]) -> (usize, Option<DonorRef>) {
+        let cap = prompt.len() - 1;
+        let bs = self.pool.block_size();
+        let mut best = 0usize;
+        let mut donor = None;
+        for (i, r) in self.active.iter().enumerate() {
+            let s = common_prefix(prompt, &r.req.prompt).min(cap).min(r.cache.len());
+            if s > best {
+                best = s;
+                donor = Some(DonorRef::Active(i));
+            }
+        }
+        for (i, sgd) in staged.iter().enumerate() {
+            let aligned = (common_prefix(prompt, &sgd.req.prompt).min(cap) / bs) * bs;
+            if aligned > best {
+                best = aligned;
+                donor = Some(DonorRef::Staged(i));
+            }
+        }
+        (best, donor)
+    }
+
+    /// Admit pending requests while the batch has room and the block
+    /// budget covers their prompts, then prefill every admission of the
+    /// tick in one batched pass and emit first tokens.
     fn admit(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
-        while self.active.len() < self.cfg.max_batch {
+        let mut staged: Vec<Staged> = Vec::new();
+        while self.active.len() + staged.len() < self.cfg.max_batch {
             let Some(mut req) = self.pending.pop_front() else { break };
             if req.prompt.is_empty() {
                 events.push(StepEvent::Rejected {
@@ -239,16 +338,73 @@ impl<'m> Scheduler<'m> {
             }
             req.max_new = req.max_new.clamp(1, self.cfg.max_new_cap);
 
-            let admitted_at = Instant::now();
-            let mut cache = self.pool.take(req.prompt.len() + req.max_new);
-            let logits = self.model.forward_chunk(&req.prompt, &mut cache)?;
+            let (shared, donor) = self.best_donor(&staged, &req.prompt);
+            let mut cache = match donor {
+                Some(DonorRef::Active(i)) => {
+                    PagedKvCache::fork_prefix(&self.active[i].cache, shared, &mut self.pool)?
+                }
+                Some(DonorRef::Staged(i)) => {
+                    PagedKvCache::fork_prefix(&staged[i].cache, shared, &mut self.pool)?
+                }
+                None => PagedKvCache::new(&self.pool),
+            };
+            // Admission by block budget: the prompt must get its pages
+            // now (decode pages grow on demand later).  On exhaustion
+            // the request backs off at the FRONT of the queue — arrival
+            // order is preserved and a later eviction lets it in.  If
+            // nothing is running (or staged) the pool will never free
+            // up, so a prompt that doesn't fit an idle pool is rejected
+            // outright instead of livelocking the queue.
+            if cache.reserve(req.prompt.len(), &mut self.pool).is_err() {
+                cache.release_all(&mut self.pool);
+                if self.active.is_empty() && staged.is_empty() {
+                    events.push(StepEvent::Rejected {
+                        key: req.key,
+                        id: req.id,
+                        reason: format!(
+                            "prompt needs {} KV blocks, pool budget is {}",
+                            req.prompt.len().div_ceil(self.pool.block_size()),
+                            self.pool.max_blocks()
+                        ),
+                    });
+                    continue;
+                }
+                self.pending.push_front(req);
+                break;
+            }
+            staged.push(Staged { req, cache, admitted_at: Instant::now(), shared });
+        }
+        if staged.is_empty() {
+            return Ok(());
+        }
+
+        // -- ONE batched prefill over every admission of this tick --
+        let t0 = Instant::now();
+        let suffixes: Vec<Vec<i32>> =
+            staged.iter().map(|s| s.req.prompt[s.cache.len()..].to_vec()).collect();
+        let sfx: Vec<&[i32]> = suffixes.iter().map(|v| &v[..]).collect();
+        let prefilled = {
+            let mut caches: Vec<&mut PagedKvCache> =
+                staged.iter_mut().map(|s| &mut s.cache).collect();
+            self.model.prefill_batch(&sfx, &mut caches, &mut self.pool)
+        };
+        let logits = match prefilled {
+            Ok(l) => l,
+            Err(e) => {
+                // Model-level failure: reclaim the staged pages before
+                // surfacing it (the engine resets the batch).
+                for s in staged.iter_mut() {
+                    s.cache.release_all(&mut self.pool);
+                }
+                return Err(e);
+            }
+        };
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        let now = Instant::now();
+        for (bi, sgd) in staged.into_iter().enumerate() {
+            let Staged { req, cache, admitted_at, shared } = sgd;
             let mut rng = req.sampling.map(|p| seq_rng(p.seed, 0));
-            let tok = pick(
-                logits.row(req.prompt.len() - 1),
-                req.sampling.as_ref(),
-                rng.as_mut(),
-            );
-            let now = Instant::now();
+            let tok = pick(logits.row(bi), req.sampling.as_ref(), rng.as_mut());
             let mut run = Running {
                 tokens: {
                     let mut t = req.prompt.clone();
@@ -259,7 +415,8 @@ impl<'m> Scheduler<'m> {
                 rng,
                 emitted: 1,
                 admitted_at,
-                prefill_secs: now.duration_since(admitted_at).as_secs_f64(),
+                prefill_secs,
+                shared_prefix: shared,
                 last_token_at: now,
                 max_gap: 0.0,
                 finish: None,
@@ -277,8 +434,9 @@ impl<'m> Scheduler<'m> {
         Ok(())
     }
 
-    /// One scheduler step: admit, decode one token for every live
-    /// sequence, evict finished ones.  Returns events in emission order.
+    /// One scheduler step: admit (batched prefill), decode one token for
+    /// every live sequence, evict finished ones.  Returns events in
+    /// emission order.
     pub fn step(&mut self) -> Result<Vec<StepEvent>> {
         let mut events = Vec::new();
         self.admit(&mut events)?;
@@ -288,11 +446,28 @@ impl<'m> Scheduler<'m> {
         let mut toks: Vec<i32> = Vec::new();
         let mut picked: Vec<(usize, i32)> = Vec::new();
         {
-            let mut caches: Vec<&mut KvCache> = Vec::new();
+            let mut caches: Vec<&mut PagedKvCache> = Vec::new();
             let mut rngs: Vec<&mut Option<Rng>> = Vec::new();
             let mut samplings: Vec<Option<SamplingParams>> = Vec::new();
+            let mut capacity_hit = false;
             for (i, r) in self.active.iter_mut().enumerate() {
                 if r.finish.is_none() {
+                    // Grow this sequence's table by (at most) one page
+                    // up front so a budget miss finishes ONE sequence
+                    // with `capacity` instead of failing the batch.
+                    // Only the FIRST miss of a step finishes: its pages
+                    // are released at this step's eviction, so later
+                    // missers just skip this step and usually continue
+                    // on the reclaimed pages (one finish per step also
+                    // guarantees progress).
+                    let upto = r.cache.len() + 1;
+                    if r.cache.reserve(upto, &mut self.pool).is_err() {
+                        if !capacity_hit {
+                            capacity_hit = true;
+                            r.finish = Some(FinishReason::Capacity);
+                        }
+                        continue;
+                    }
                     idxs.push(i);
                     toks.push(*r.tokens.last().expect("active sequence has tokens"));
                     samplings.push(r.req.sampling);
@@ -302,7 +477,7 @@ impl<'m> Scheduler<'m> {
                 }
             }
             if !idxs.is_empty() {
-                let logits = self.model.forward_step(&toks, &mut caches)?;
+                let logits = self.model.forward_step_paged(&toks, &mut caches, &mut self.pool)?;
                 for (j, &i) in idxs.iter().enumerate() {
                     let tok = pick(logits.row(j), samplings[j].as_ref(), rngs[j].as_mut());
                     picked.push((i, tok));
@@ -324,9 +499,9 @@ impl<'m> Scheduler<'m> {
             r.check_finished(tok);
         }
 
-        // -- evict finished sequences (stable order) --
+        // -- evict finished sequences (stable order), reclaim blocks --
         let mut kept = Vec::with_capacity(self.active.len());
-        for r in self.active.drain(..) {
+        for mut r in self.active.drain(..) {
             match r.finish {
                 None => kept.push(r),
                 Some(finish) => {
@@ -337,9 +512,10 @@ impl<'m> Scheduler<'m> {
                         total_secs: done_at.duration_since(r.admitted_at).as_secs_f64(),
                         max_inter_token_secs: r.max_gap,
                         n_new_tokens: r.emitted,
+                        shared_prefix_tokens: r.shared_prefix,
                     };
                     self.completed += 1;
-                    self.pool.give(r.cache);
+                    r.cache.release_all(&mut self.pool);
                     events.push(StepEvent::Done {
                         key: r.req.key,
                         id: r.req.id,
@@ -354,4 +530,10 @@ impl<'m> Scheduler<'m> {
         self.active = kept;
         Ok(events)
     }
+}
+
+/// Where a shareable prefix lives.
+enum DonorRef {
+    Active(usize),
+    Staged(usize),
 }

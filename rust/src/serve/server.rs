@@ -56,6 +56,9 @@ impl Default for ServeOptions {
 
 enum EngineMsg {
     Submit { wire: WireRequest, queued_at: Instant, out: Sender<String> },
+    /// One-off stats query: the engine renders a stats frame (KV block
+    /// accounting + queue state) straight back to this connection.
+    Stats { out: Sender<String> },
     Shutdown,
 }
 
@@ -221,6 +224,16 @@ fn handle_msg(
             });
             true
         }
+        EngineMsg::Stats { out } => {
+            let frame = protocol::stats_frame(
+                &sched.kv_stats(),
+                sched.n_active(),
+                sched.n_pending(),
+                sched.n_completed(),
+            );
+            let _ = out.send(frame);
+            true
+        }
         EngineMsg::Shutdown => false,
     }
 }
@@ -263,6 +276,12 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineMsg>, allow_shutdown: bool) {
                 let msg =
                     EngineMsg::Submit { wire, queued_at: Instant::now(), out: otx.clone() };
                 if tx.send(msg).is_err() {
+                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    break;
+                }
+            }
+            Ok(ClientLine::Stats) => {
+                if tx.send(EngineMsg::Stats { out: otx.clone() }).is_err() {
                     let _ = otx.send(protocol::error_frame("", "engine stopped"));
                     break;
                 }

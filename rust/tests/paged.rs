@@ -1,0 +1,368 @@
+//! Paged KV memory tests: paged decode must be bitwise identical to the
+//! flat-slab oracle at every block size, prefix sharing must be
+//! refcount/copy-on-write correct, the scheduler must admit by block
+//! budget (backoff on exhaustion, reclaim after eviction), and sharing
+//! must show up as fewer resident blocks.  Everything runs without
+//! artifacts or PJRT.
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::PackedModel;
+use repro::model::{ParamStore, TINY};
+use repro::quant::QuantSpec;
+use repro::serve::decode::{generate, generate_paged};
+use repro::serve::scheduler::{FinishReason, GenRequest, StepEvent};
+use repro::serve::{BlockPool, PagedKvCache, SamplingParams, SchedConfig, Scheduler};
+use repro::tensor::{IntTensor, Rng, Tensor};
+
+/// Open-clip qparams with live (random) LoRA B so adapters contribute.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+fn packed_tiny(seed: u64) -> PackedModel {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(seed);
+    let qp = open_qparams_with_lora(spec, 4, seed ^ 0xAD);
+    PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap()
+}
+
+fn tiny_prompt(batch: usize, len: usize, seed: u64) -> IntTensor {
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, seed);
+    Batcher::new(batch, len).lm_batch(&corpus, &mut Rng::new(seed ^ 0x77)).tokens
+}
+
+// ---------------------------------------------------------------------------
+// paged decode == flat decode, bit for bit, at every block size
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paged_greedy_matches_flat_across_block_sizes() {
+    let model = packed_tiny(3);
+    let prompt = tiny_prompt(3, 9, 15);
+    let flat = generate(&model, &prompt, 12, None).unwrap();
+    for bs in [1usize, 7, 64] {
+        let paged = generate_paged(&model, &prompt, 12, None, bs).unwrap();
+        assert_eq!(
+            paged.tokens, flat.tokens,
+            "paged decode (block size {bs}) must be bit-identical to the flat slab"
+        );
+    }
+}
+
+#[test]
+fn paged_sampling_matches_flat_across_block_sizes() {
+    let model = packed_tiny(7);
+    let prompt = tiny_prompt(2, 6, 19);
+    let p = SamplingParams { temperature: 0.9, top_k: 50, top_p: 0.95, seed: 123 };
+    let flat = generate(&model, &prompt, 10, Some(&p)).unwrap();
+    for bs in [1usize, 7, 64] {
+        let paged = generate_paged(&model, &prompt, 10, Some(&p), bs).unwrap();
+        assert_eq!(
+            paged.tokens, flat.tokens,
+            "identical logits + identical rng streams => identical samples (bs {bs})"
+        );
+    }
+}
+
+#[test]
+fn paged_chunk_logits_match_flat_bitwise() {
+    // Stronger than token equality: the paged prefill chunk's logits and
+    // a subsequent paged step must equal the flat-path logits bitwise.
+    let model = packed_tiny(5);
+    let prompt = tiny_prompt(1, 10, 31);
+    let toks = prompt.data().to_vec();
+
+    let mut flat_cache = repro::serve::KvCache::new(TINY.n_layers, TINY.d_model, 16);
+    let flat_chunk = model.forward_chunk(&toks, &mut flat_cache).unwrap();
+
+    let mut pool = BlockPool::new(TINY.n_layers, TINY.d_model, 3, 16);
+    let mut cache = PagedKvCache::new(&pool);
+    let paged_chunk = model.forward_chunk_paged(&toks, &mut cache, &mut pool).unwrap();
+    assert_eq!(paged_chunk.data(), flat_chunk.data(), "prefill logits differ");
+
+    let next = [toks[3]];
+    let mut refs = vec![&mut flat_cache];
+    let flat_step = model.forward_step(&next, &mut refs).unwrap();
+    let mut prefs = vec![&mut cache];
+    let paged_step = model.forward_step_paged(&next, &mut prefs, &mut pool).unwrap();
+    assert_eq!(paged_step.data(), flat_step.data(), "decode step logits differ");
+}
+
+#[test]
+fn batched_prefill_matches_sequential_chunks_bitwise() {
+    // prefill_batch folds ragged sequences into one pass; each row must
+    // come out exactly as a solo forward_chunk_paged would produce it.
+    let model = packed_tiny(11);
+    let pa = tiny_prompt(1, 9, 40).data().to_vec();
+    let pb = tiny_prompt(1, 5, 41).data().to_vec();
+    let vocab = model.cfg.vocab;
+
+    let mut pool = BlockPool::new(TINY.n_layers, TINY.d_model, 4, 32);
+    let mut ca = PagedKvCache::new(&pool);
+    let mut cb = PagedKvCache::new(&pool);
+    ca.reserve(pa.len(), &mut pool).unwrap();
+    cb.reserve(pb.len(), &mut pool).unwrap();
+    let logits = {
+        let mut caches = vec![&mut ca, &mut cb];
+        model
+            .prefill_batch(&[&pa[..], &pb[..]], &mut caches, &mut pool)
+            .unwrap()
+    };
+    assert_eq!(logits.shape(), &[2, vocab]);
+
+    let mut pool2 = BlockPool::new(TINY.n_layers, TINY.d_model, 4, 32);
+    for (bi, p) in [&pa, &pb].iter().enumerate() {
+        let mut c = PagedKvCache::new(&pool2);
+        let solo = model.forward_chunk_paged(p, &mut c, &mut pool2).unwrap();
+        assert_eq!(
+            logits.row(bi),
+            solo.row(p.len() - 1),
+            "batched prefill row {bi} differs from the solo chunk"
+        );
+        c.release_all(&mut pool2);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// prefix sharing: bitwise streams + refcount/copy-on-write correctness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_prefix_decode_is_bitwise_and_uses_fewer_blocks() {
+    // Two sequences with the SAME prompt, decoded through the scheduler:
+    // streams must match solo flat generation exactly, and the pool must
+    // hold fewer pages than two unshared sequences would.
+    let model = packed_tiny(17);
+    let prompt = tiny_prompt(1, 10, 50).data().to_vec();
+    let cfg = SchedConfig {
+        max_batch: 4,
+        max_new_cap: 64,
+        max_prompt: 64,
+        kv_block: 4,
+        kv_blocks_total: 0,
+    };
+
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(1, prompt.clone(), 6));
+    sched.submit(req(2, prompt.clone(), 6));
+    let mut events = sched.step().unwrap();
+    assert_eq!(sched.n_active(), 2, "both admitted in one tick");
+    let shared_peak = sched.kv_stats();
+    assert!(
+        shared_peak.shared_blocks > 0,
+        "identical prompts admitted together must share pages"
+    );
+    // 10-position prompt at block 4 = 3 blocks; sharing maps 2 whole
+    // blocks, so two sequences hold 3 + 2 = 5 instead of 6.
+    assert!(
+        shared_peak.used_blocks < 6,
+        "sharing must use fewer pages than two unshared prompts ({} >= 6)",
+        shared_peak.used_blocks
+    );
+
+    events.extend(drain(&mut sched));
+    let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
+    let want = generate(&model, &solo, 6, None).unwrap();
+    for key in [1u64, 2] {
+        let (tokens, _, finish) = done_of(&events, key).expect("done");
+        assert_eq!(finish, FinishReason::Length);
+        assert_eq!(
+            &want.tokens[0][..],
+            &tokens[..],
+            "prefix sharing must not change request {key}'s stream"
+        );
+    }
+    // reclaim-after-evict: nothing leaked
+    let s = sched.kv_stats();
+    assert_eq!(s.used_blocks, 0, "all pages reclaimed");
+    assert_eq!(s.shared_blocks, 0);
+    assert!(s.peak_shared_blocks > 0);
+
+    // per-request stats record the mapped prefix
+    let shared_toks: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Done { stats, .. } => Some(stats.shared_prefix_tokens),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(shared_toks.iter().filter(|&&s| s > 0).count(), 1, "second request shared");
+}
+
+#[test]
+fn mid_flight_admission_shares_unaligned_prefix_with_cow() {
+    // B arrives while A is decoding; their prompts share 9 tokens (not
+    // block-aligned at kv_block 4), so B maps A's partial tail page and
+    // copy-on-write splits it when B prefills its own suffix.  Streams
+    // must still equal solo generation.
+    let model = packed_tiny(23);
+    let pa = tiny_prompt(1, 12, 60).data().to_vec();
+    let mut pb = pa[..9].to_vec();
+    pb.push((pa[9] + 1).rem_euclid(TINY.vocab as i32)); // diverge at 9
+    pb.extend_from_slice(&pa[..2]);
+    let cfg = SchedConfig {
+        max_batch: 4,
+        max_new_cap: 64,
+        max_prompt: 64,
+        kv_block: 4,
+        kv_blocks_total: 0,
+    };
+
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(1, pa.clone(), 10));
+    let mut events = sched.step().unwrap();
+    // A is mid-decode; B arrives and must share A's committed prefix
+    sched.submit(req(2, pb.clone(), 4));
+    events.extend(sched.step().unwrap());
+    assert!(
+        sched.kv_stats().shared_blocks > 0,
+        "mid-flight admission with a common prefix must share pages"
+    );
+    events.extend(drain(&mut sched));
+
+    for (key, prompt, max_new) in [(1u64, &pa, 10usize), (2, &pb, 4)] {
+        let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
+        let want = generate(&model, &solo, max_new, None).unwrap();
+        let (tokens, _, _) = done_of(&events, key).expect("done");
+        assert_eq!(&want.tokens[0][..], &tokens[..], "request {key} stream changed");
+    }
+    let s = sched.kv_stats();
+    assert_eq!(s.used_blocks, 0, "no leaked pages after CoW + eviction");
+}
+
+// ---------------------------------------------------------------------------
+// block budget: admission backoff + reclaim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_backs_off_when_blocks_exhausted_and_recovers() {
+    let model = packed_tiny(29);
+    // Budget of 4 pages x 4 positions: one 10-token prompt takes 3
+    // pages, so two cannot be admitted together; 10 + (3 - 1) committed
+    // positions keep each sequence inside its 3 pages (Length finish).
+    let cfg = SchedConfig {
+        max_batch: 4,
+        max_new_cap: 8,
+        max_prompt: 16,
+        kv_block: 4,
+        kv_blocks_total: 4,
+    };
+    let pa = tiny_prompt(1, 10, 70).data().to_vec();
+    let mut pb = tiny_prompt(1, 10, 71).data().to_vec();
+    pb[0] = (pa[0] + 1).rem_euclid(TINY.vocab as i32); // no shareable prefix
+
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(1, pa.clone(), 3));
+    sched.submit(req(2, pb.clone(), 3));
+    let mut events = sched.step().unwrap();
+    assert_eq!(sched.n_active(), 1, "budget admits only one sequence");
+    assert_eq!(sched.n_pending(), 1, "the other backs off, not rejected");
+
+    events.extend(drain(&mut sched));
+    assert_eq!(sched.n_completed(), 2, "backed-off request admitted after eviction");
+    for (key, prompt) in [(1u64, &pa), (2, &pb)] {
+        let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
+        let want = generate(&model, &solo, 3, None).unwrap();
+        let (tokens, _, finish) = done_of(&events, key).expect("done");
+        assert_eq!(finish, FinishReason::Length);
+        assert_eq!(&want.tokens[0][..], &tokens[..]);
+    }
+    let s = sched.kv_stats();
+    assert_eq!(s.used_blocks, 0);
+    assert!(s.resident_blocks <= 4, "never allocated past the budget");
+}
+
+#[test]
+fn oversized_prompt_on_idle_pool_is_rejected_not_livelocked() {
+    let model = packed_tiny(37);
+    // 2 pages x 4 positions: a 10-token prompt can NEVER fit, and with
+    // nothing running the pool will never free up — reject, don't spin.
+    let cfg = SchedConfig {
+        max_batch: 2,
+        max_new_cap: 8,
+        max_prompt: 16,
+        kv_block: 4,
+        kv_blocks_total: 2,
+    };
+    let prompt = tiny_prompt(1, 10, 90).data().to_vec();
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(1, prompt, 4));
+    let events = drain(&mut sched);
+    assert!(
+        events.iter().any(|e| matches!(e, StepEvent::Rejected { key: 1, .. })),
+        "an unsatisfiable prompt must be rejected"
+    );
+    assert_eq!(sched.kv_stats().used_blocks, 0);
+}
+
+#[test]
+fn decode_exhaustion_finishes_with_capacity_not_batch_failure() {
+    let model = packed_tiny(31);
+    // 3 pages x 4 positions: a 10-token prompt fits (3 pages), but the
+    // 3rd generated token needs a 4th page that never exists.
+    let cfg = SchedConfig {
+        max_batch: 2,
+        max_new_cap: 32,
+        max_prompt: 12,
+        kv_block: 4,
+        kv_blocks_total: 3,
+    };
+    let prompt = tiny_prompt(1, 10, 80).data().to_vec();
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.submit(req(1, prompt.clone(), 32));
+    let events = drain(&mut sched);
+    let (tokens, prompt_len, finish) = done_of(&events, 1).expect("done");
+    assert_eq!(finish, FinishReason::Capacity);
+    // prompt prefill emits token 1 (position 10 is only WRITTEN at the
+    // next step): 2 positions of page 3 support 2 decode steps
+    assert_eq!(tokens.len() - prompt_len, 3, "streamed until the pages ran out");
+    let s = sched.kv_stats();
+    assert_eq!(s.used_blocks, 0, "capacity-finished sequence released its pages");
+}
+// ---------------------------------------------------------------------------
+// helpers (mirrors tests/serve.rs)
+// ---------------------------------------------------------------------------
+
+fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+    GenRequest {
+        key,
+        id: format!("r{key}"),
+        prompt,
+        max_new,
+        sampling: None,
+        stop: None,
+        queued_at: std::time::Instant::now(),
+    }
+}
+
+fn drain(sched: &mut Scheduler<'_>) -> Vec<StepEvent> {
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to converge");
+    }
+    events
+}
+
+fn done_of(events: &[StepEvent], key: u64) -> Option<(&Vec<i32>, usize, FinishReason)> {
+    events.iter().find_map(|e| match e {
+        StepEvent::Done { key: k, tokens, prompt_len, finish, .. } if *k == key => {
+            Some((tokens, *prompt_len, *finish))
+        }
+        _ => None,
+    })
+}

@@ -208,7 +208,8 @@ fn done_of(events: &[StepEvent], key: u64) -> Option<(&Vec<i32>, usize, FinishRe
 #[test]
 fn scheduler_admits_mid_flight_and_matches_standalone() {
     let model = packed_tiny(17);
-    let cfg = SchedConfig { max_batch: 2, max_new_cap: 64, max_prompt: 64 };
+    let cfg =
+        SchedConfig { max_batch: 2, max_new_cap: 64, max_prompt: 64, ..SchedConfig::default() };
     let pa = tiny_prompt(1, 6, 40).data().to_vec();
     let pb = tiny_prompt(1, 5, 41).data().to_vec();
     let pc = tiny_prompt(1, 4, 42).data().to_vec();
@@ -266,7 +267,7 @@ fn scheduler_admits_mid_flight_and_matches_standalone() {
 #[test]
 fn scheduler_rejects_and_cancels() {
     let model = packed_tiny(19);
-    let cfg = SchedConfig { max_batch: 4, max_new_cap: 8, max_prompt: 6 };
+    let cfg = SchedConfig { max_batch: 4, max_new_cap: 8, max_prompt: 6, ..SchedConfig::default() };
     let mut sched = Scheduler::new(&model, cfg);
 
     sched.submit(req(1, vec![], 4)); // empty prompt
@@ -300,7 +301,8 @@ fn scheduler_stop_token_ends_stream_early() {
     let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
     let first = generate(&model, &solo, 1, None).unwrap().tokens[0][prompt.len()];
 
-    let cfg = SchedConfig { max_batch: 2, max_new_cap: 16, max_prompt: 16 };
+    let cfg =
+        SchedConfig { max_batch: 2, max_new_cap: 16, max_prompt: 16, ..SchedConfig::default() };
     let mut sched = Scheduler::new(&model, cfg);
     let mut r = req(1, prompt, 10);
     r.stop = Some(first);
@@ -354,7 +356,12 @@ fn server_streams_concurrent_requests() {
     let model = Arc::new(packed_tiny(37));
     let opts = ServeOptions {
         addr: "127.0.0.1:0".to_string(),
-        sched: SchedConfig { max_batch: 4, max_new_cap: 64, max_prompt: 64 },
+        sched: SchedConfig {
+            max_batch: 4,
+            max_new_cap: 64,
+            max_prompt: 64,
+            ..SchedConfig::default()
+        },
         allow_remote_shutdown: true,
     };
     let server = repro::serve::server::spawn(model, opts).unwrap();
@@ -367,6 +374,7 @@ fn server_streams_concurrent_requests() {
         prompt_len: 6,
         max_new: 12,
         vocab: TINY.vocab,
+        common_prefix: 0,
         temperature: 0.0,
         seed: 77,
         shutdown_after: false,
@@ -421,7 +429,74 @@ fn server_streams_concurrent_requests() {
     let j = Json::parse(line.trim()).unwrap();
     assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
 
+    // the stats command returns a KV memory frame on the same connection
+    writer.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("stats"));
+    let kv = j.get("kv").expect("stats frame has kv accounting");
+    assert!(kv.get("block_size").and_then(Json::as_i64).unwrap() >= 1);
+    assert!(
+        kv.get("peak_resident_blocks").and_then(Json::as_i64).unwrap() > 0,
+        "the load above must have touched KV pages"
+    );
+    assert_eq!(
+        kv.get("used_blocks").and_then(Json::as_i64),
+        Some(0),
+        "all pages reclaimed after the load drained"
+    );
+
     drop(writer);
     drop(reader);
+    server.shutdown();
+}
+
+#[test]
+fn server_shares_identical_prompt_prefixes() {
+    // A tiny 4-position page forces multi-block tables; identical
+    // prompts across concurrent clients must map shared pages, visible
+    // in the stats frame's peak_shared_blocks.
+    let model = Arc::new(packed_tiny(41));
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        sched: SchedConfig {
+            max_batch: 4,
+            max_new_cap: 64,
+            max_prompt: 64,
+            kv_block: 4,
+            kv_blocks_total: 0,
+        },
+        allow_remote_shutdown: true,
+    };
+    let server = repro::serve::server::spawn(model, opts).unwrap();
+    let addr = server.addr.to_string();
+
+    // 32 generated tokens keep every request alive well past the
+    // client connect/submit skew, so admissions reliably overlap live
+    // donors (same overlap margin the peak_concurrent_streams >= 2
+    // assertion above relies on).
+    let report = run_load(&LoadOptions {
+        addr: addr.clone(),
+        clients: 3,
+        requests_per_client: 2,
+        prompt_len: 10,
+        max_new: 32,
+        vocab: TINY.vocab,
+        common_prefix: 10, // every prompt identical
+        temperature: 0.0,
+        seed: 99,
+        shutdown_after: false,
+    })
+    .unwrap();
+    assert_eq!(report.completed, 6);
+    let kv = report.kv.expect("server speaks the stats command");
+    assert_eq!(kv.block_size, 4);
+    assert!(
+        kv.peak_shared_blocks > 0,
+        "identical prompts must share prompt-prefix pages (peak_shared {})",
+        kv.peak_shared_blocks
+    );
+    assert_eq!(kv.shared_blocks, 0, "sharing ends once requests drain");
     server.shutdown();
 }
