@@ -20,6 +20,7 @@ use repro::quant::QuantSpec;
 use repro::quantizers::{QuantizeCtx, Quantizer, Rtn};
 use repro::runtime::Runtime;
 use repro::serve::decode::{generate, generate_recompute};
+use repro::serve::spec::generate_speculative;
 use repro::serve::KvCache;
 use repro::tensor::Rng;
 
@@ -65,6 +66,60 @@ fn write_kernels_json(cfg: &ModelConfig, entries: &[JsonEntry]) {
     );
     match std::fs::write(&path, json) {
         Ok(()) => println!("note  wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
+
+/// One per-k entry of the speculative-decode sweep.
+struct SpecEntry {
+    k: usize,
+    tokens_per_sec: f64,
+    acceptance: f64,
+    proposed: usize,
+    accepted: usize,
+    draft_overhead: f64,
+}
+
+/// Merge the spec sweep into `BENCH_serve.json` (the serving-trajectory
+/// artifact `repro bench-serve` writes): existing fields are kept, any
+/// previous "spec" array is replaced.  Creates a minimal artifact when
+/// none exists yet (e.g. the kernels CI job runs this bench alone).
+fn merge_spec_into_bench_serve(entries: &[SpecEntry]) {
+    use repro::serve::json::Json;
+    let path = std::env::var("REPRO_BENCH_SERVE_OUT")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let mut fields: Vec<(String, Json)> = match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(s.trim()).ok())
+    {
+        Some(Json::Obj(prev)) => prev.into_iter().filter(|(k, _)| k != "spec").collect(),
+        _ => vec![("bench".to_string(), Json::from("serve"))],
+    };
+    let arr: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            Json::Obj(vec![
+                ("k".to_string(), Json::from(e.k)),
+                (
+                    "tokens_per_sec".to_string(),
+                    Json::Num((e.tokens_per_sec * 10.0).round() / 10.0),
+                ),
+                (
+                    "acceptance".to_string(),
+                    Json::Num((e.acceptance * 1000.0).round() / 1000.0),
+                ),
+                ("proposed".to_string(), Json::from(e.proposed)),
+                ("accepted".to_string(), Json::from(e.accepted)),
+                (
+                    "draft_overhead".to_string(),
+                    Json::Num((e.draft_overhead * 1000.0).round() / 1000.0),
+                ),
+            ])
+        })
+        .collect();
+    fields.push(("spec".to_string(), Json::Arr(arr)));
+    match std::fs::write(&path, Json::Obj(fields).render() + "\n") {
+        Ok(()) => println!("note  merged spec sweep into {path}"),
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
 }
@@ -152,6 +207,44 @@ fn main() {
             gflops: toks / cached * flops_tok / 1e9,
         });
     }
+
+    // --- speculative decode: tokens/sec + acceptance per draft depth k ---
+    // k = 0 is the no-speculation baseline through the same code path;
+    // the draft is the target's own first-half prefix cut, so acceptance
+    // reflects how well shallow layers track the full model.
+    let draft = model.prefix_cut((TINY.n_layers / 2).max(1)).unwrap();
+    let spec_new = 64usize;
+    let mut spec_entries: Vec<SpecEntry> = Vec::new();
+    for kk in [0usize, 2, 4, 8] {
+        let mut last = None;
+        let mean = bench
+            .run(&format!("decode_spec_k{kk}"), 1, 3, || {
+                let r =
+                    generate_speculative(&model, &draft, &prompt1, spec_new, None, 16, kk).unwrap();
+                last = Some(std::hint::black_box(r));
+            })
+            .mean_s;
+        let rep = last.expect("at least one timed iteration");
+        let tps = spec_new as f64 / mean;
+        let acceptance = rep.acceptance();
+        bench.note(format!(
+            "speculative k={kk}: {tps:.0} tok/s, acceptance {:.1}% ({}/{}), \
+             draft overhead {:.1}%",
+            acceptance * 100.0,
+            rep.accepted,
+            rep.proposed,
+            rep.draft_overhead() * 100.0
+        ));
+        spec_entries.push(SpecEntry {
+            k: kk,
+            tokens_per_sec: tps,
+            acceptance,
+            proposed: rep.proposed,
+            accepted: rep.accepted,
+            draft_overhead: rep.draft_overhead(),
+        });
+    }
+    merge_spec_into_bench_serve(&spec_entries);
 
     // --- per-step latency at growing prefix: O(T) vs O(T^2) shape ---
     for prefix in [32usize, 128, 512] {

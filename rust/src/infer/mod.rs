@@ -36,6 +36,7 @@ use crate::quantizers::QuantResult;
 use crate::tensor::{IntTensor, Tensor};
 
 /// LoRA/DoRA adapter state for one linear, serving-form.
+#[derive(Clone)]
 pub struct Adapter {
     /// (d_in, r)
     pub a: Tensor,
@@ -49,6 +50,7 @@ pub struct Adapter {
 }
 
 /// Storage form of one linear's base weight.
+#[derive(Clone)]
 pub enum LayerWeight {
     /// Sub-byte packed codes (the 2/3/4-bit serving path).
     Packed(PackedLinear),
@@ -57,6 +59,7 @@ pub enum LayerWeight {
 }
 
 /// One servable linear: base weight + optional adapter.
+#[derive(Clone)]
 pub struct PackedLayer {
     pub weight: LayerWeight,
     pub adapter: Option<Adapter>,
@@ -116,6 +119,7 @@ impl PackedLayer {
 }
 
 /// One transformer block in serving form.
+#[derive(Clone)]
 pub struct PackedBlock {
     pub attn_norm: Tensor,
     pub ffn_norm: Tensor,
@@ -490,6 +494,33 @@ impl PackedModel {
             }
         }
         total
+    }
+
+    /// Clone a depth-truncated copy of this model: the first `n_layers`
+    /// blocks under the same embedding, final norm, and LM head — the
+    /// self-draft construction for speculative decoding (`--draft-layers`).
+    /// Vocabulary and tokenization agree with the target by construction,
+    /// which is all the draft/verify loop needs; the cut model is a real
+    /// [`PackedModel`], so every decode path (paged caches included) works
+    /// on it unchanged.
+    pub fn prefix_cut(&self, n_layers: usize) -> Result<PackedModel> {
+        if n_layers == 0 || n_layers > self.cfg.n_layers {
+            return Err(Error::config(format!(
+                "prefix_cut: want 1..={} layers, got {n_layers}",
+                self.cfg.n_layers
+            )));
+        }
+        let mut cfg = self.cfg;
+        cfg.n_layers = n_layers;
+        Ok(PackedModel {
+            cfg,
+            spec: self.spec,
+            embed: self.embed.clone(),
+            final_norm: self.final_norm.clone(),
+            lm_head: self.lm_head.clone(),
+            blocks: self.blocks[..n_layers].to_vec(),
+            rope: RopeCache::new(),
+        })
     }
 
     /// Were LoRA/DoRA adapters built into the serving path?

@@ -80,11 +80,21 @@ SERVE FLAGS
   --kv-block N      (default: 32)      KV page size in positions
   --kv-blocks-total N (default: auto)  KV page budget; admission backs
                                        off when the pool is exhausted
+  --speculate K     (default: 0 = off) speculative decoding: draft K
+                                       tokens/cycle, verify in one pass;
+                                       output bits are unchanged
+  --draft-layers N  (default: half)    self-draft = first N layers of
+                                       the serving model
+  --draft-config P                     draft from a packed checkpoint
+                                       (must share the vocab)
+  --draft-kv-blocks-total N (default: auto) draft-side KV page budget
 BENCH-SERVE FLAGS
   --clients N       (default: 4)      --requests N    (per client, default 2)
   --common-prefix N (default: 0)      first N prompt tokens identical
                                       across ALL requests (KV sharing)
   --bench-out P     (default: BENCH_serve.json)
+  --transcript P    (write sorted per-request token transcripts —
+                     byte-comparable across runs/speculation settings)
   --shutdown        (send {\"cmd\":\"shutdown\"} when done)
 
 METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
@@ -381,6 +391,8 @@ fn run(args: Args) -> repro::Result<()> {
                 max_prompt: args.usize_or("max-prompt", 1024)?.max(1),
                 kv_block: args.usize_or("kv-block", 32)?.max(1),
                 kv_blocks_total: args.usize_or("kv-blocks-total", 0)?,
+                speculate: args.usize_or("speculate", 0)?,
+                draft_kv_blocks_total: args.usize_or("draft-kv-blocks-total", 0)?,
             };
             let model = match args.get("packed") {
                 Some(path) => {
@@ -392,6 +404,38 @@ fn run(args: Args) -> repro::Result<()> {
                     let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
                     build_native_model(&artifacts, cfg, &params, &method, bits, group, rank, seed)?
                 }
+            };
+            let draft = if sched.speculate > 0 {
+                let d = match args.get("draft-config") {
+                    Some(path) => {
+                        eprintln!("[serve] loading draft checkpoint {path}");
+                        checkpoint::load_packed(path)?
+                    }
+                    None => {
+                        let n = args
+                            .usize_or("draft-layers", (model.cfg.n_layers / 2).max(1))?
+                            .max(1);
+                        model.prefix_cut(n)?
+                    }
+                };
+                if d.cfg.vocab != model.cfg.vocab {
+                    return Err(repro::Error::config(format!(
+                        "draft vocab {} != target vocab {} — the draft must share the \
+                         tokenizer/vocabulary",
+                        d.cfg.vocab, model.cfg.vocab
+                    )));
+                }
+                println!(
+                    "serve: speculative decoding: k={} per cycle, draft {} ({} layers, \
+                     {:.2} MB resident); emitted streams are bit-identical to --speculate 0",
+                    sched.speculate,
+                    d.cfg.name,
+                    d.cfg.n_layers,
+                    report_resident_mb(&d)
+                );
+                Some(Arc::new(d))
+            } else {
+                None
             };
             // Same formula the pool reports in stats frames.
             let cfg_ref = &model.cfg;
@@ -417,7 +461,7 @@ fn run(args: Args) -> repro::Result<()> {
                 sched,
                 allow_remote_shutdown: !args.flag("no-remote-shutdown"),
             };
-            repro::serve::server::run(Arc::new(model), opts)?;
+            repro::serve::server::run(Arc::new(model), draft, opts)?;
         }
         "bench-serve" => {
             let o = LoadOptions {
@@ -431,6 +475,7 @@ fn run(args: Args) -> repro::Result<()> {
                 temperature: args.f32_or("temperature", 0.0)?,
                 seed,
                 shutdown_after: args.flag("shutdown"),
+                transcript: args.get("transcript").map(String::from),
             };
             let rep = run_load(&o)?;
             println!(
@@ -453,6 +498,22 @@ fn run(args: Args) -> repro::Result<()> {
                     kv.peak_resident_bytes as f64 / 1e6
                 );
                 println!("  peak shared blocks: {}", kv.peak_shared_blocks);
+            }
+            if let Some(s) = &rep.spec {
+                println!(
+                    "  spec: k={} accepted {} of {} proposed ({:.1}% acceptance), \
+                     {} cycles, {} fallbacks, peak draft KV {} blocks",
+                    s.k,
+                    s.accepted,
+                    s.proposed,
+                    s.acceptance() * 100.0,
+                    s.cycles,
+                    s.fallbacks,
+                    s.draft_peak_resident_blocks
+                );
+            }
+            if let Some(path) = &o.transcript {
+                println!("  wrote transcript {path}");
             }
             let out = args.str_or("bench-out", "BENCH_serve.json");
             write_bench_serve(&out, &o, &rep)?;
@@ -634,6 +695,31 @@ fn write_bench_serve(
                 Json::from(kv.peak_shared_blocks),
             ),
         ]);
+    }
+    if let Some(s) = &rep.spec {
+        fields.extend([
+            ("spec_k".to_string(), Json::from(s.k)),
+            ("spec_proposed".to_string(), Json::from(s.proposed)),
+            ("spec_accepted".to_string(), Json::from(s.accepted)),
+            (
+                "spec_acceptance".to_string(),
+                Json::Num((s.acceptance() * 1000.0).round() / 1000.0),
+            ),
+            ("spec_fallbacks".to_string(), Json::from(s.fallbacks)),
+            (
+                "peak_resident_draft_kv_blocks".to_string(),
+                Json::from(s.draft_peak_resident_blocks),
+            ),
+        ]);
+    }
+    // `cargo bench --bench decode` merges a per-k "spec" sweep array
+    // into the same artifact; carry it across a bench-serve rewrite.
+    if let Ok(old) = std::fs::read_to_string(path) {
+        if let Ok(Json::Obj(prev)) = Json::parse(old.trim()) {
+            if let Some(kept) = prev.into_iter().find(|(k, _)| k == "spec") {
+                fields.push(kept);
+            }
+        }
     }
     let body = Json::Obj(fields).render();
     std::fs::write(path, body + "\n")

@@ -25,6 +25,13 @@
 //! share prompt-prefix blocks that are materialized in the very same
 //! pass.
 //!
+//! [`PackedModel::forward_verify_paged`] is the same ragged batched
+//! pass surfacing logits at EVERY position instead of just the last
+//! rows — the speculative-decoding verify primitive
+//! (`crate::serve::spec`): each row is bitwise what the corresponding
+//! sequential decode step would have produced, which is what makes
+//! draft acceptance checks exact.
+//!
 //! [`generate`] (flat) and [`generate_paged`] are the batched decode
 //! loops on top; [`generate_recompute`] keeps PR 1's full-prefix
 //! recompute alive as the outermost equivalence reference and benchmark
@@ -197,29 +204,29 @@ impl PackedModel {
         self.head(x)
     }
 
-    /// ONE batched prefill pass over several sequences' pending chunks
-    /// (`suffixes[i]` extends `caches[i]`, whose committed prefix may be
-    /// empty, warm, or prefix-shared).  The linears run over the ragged
-    /// row concatenation — one batched GEMM per projection instead of
-    /// one per sequence — and attention runs per sequence.  Returns the
-    /// **last-position** logits `(b, vocab)`, i.e. each request's
-    /// first-token distribution.
+    /// Shared core of [`PackedModel::prefill_batch`] and
+    /// [`PackedModel::forward_verify_paged`]: forward the ragged
+    /// concatenation of several sequences' pending chunks (`suffixes[i]`
+    /// extends `caches[i]`) in ONE pass — the linears run over all rows
+    /// at once, attention per sequence — committing every new position.
+    /// Returns the hidden states `(sum t_i, d)` plus the per-sequence
+    /// chunk lengths.
     ///
     /// Capacity must already be [`PagedKvCache::reserve`]d; this method
     /// deliberately does NOT reserve, because re-running copy-on-write
     /// here would split block mappings that same-tick admissions share
     /// on purpose (the scheduler reserves each admission before later
     /// admissions fork from it).
-    pub fn prefill_batch(
+    fn ragged_forward_paged(
         &self,
         suffixes: &[&[i32]],
         caches: &mut [&mut PagedKvCache],
         pool: &mut BlockPool,
-    ) -> Result<Tensor> {
+    ) -> Result<(Tensor, Vec<usize>)> {
         let b = suffixes.len();
         if b == 0 || b != caches.len() {
             return Err(Error::shape(format!(
-                "prefill_batch: {b} suffixes vs {} caches",
+                "ragged paged forward: {b} suffixes vs {} caches",
                 caches.len()
             )));
         }
@@ -230,12 +237,12 @@ impl PackedModel {
         let mut need = 1usize;
         for (sfx, c) in suffixes.iter().zip(caches.iter()) {
             if sfx.is_empty() {
-                return Err(Error::shape("prefill_batch: empty suffix chunk"));
+                return Err(Error::shape("ragged paged forward: empty suffix chunk"));
             }
             c.check_shape(self.cfg.n_layers, d)?;
             if c.capacity() < c.len() + sfx.len() {
                 return Err(Error::shape(format!(
-                    "prefill_batch: {} cached + {} new > reserved capacity {} (reserve first)",
+                    "ragged paged forward: {} cached + {} new > reserved capacity {} (reserve first)",
                     c.len(),
                     sfx.len(),
                     c.capacity()
@@ -256,6 +263,26 @@ impl PackedModel {
         for (c, &t) in caches.iter_mut().zip(&ts) {
             c.advance(t);
         }
+        Ok((x, ts))
+    }
+
+    /// ONE batched prefill pass over several sequences' pending chunks
+    /// (`suffixes[i]` extends `caches[i]`, whose committed prefix may be
+    /// empty, warm, or prefix-shared).  The linears run over the ragged
+    /// row concatenation — one batched GEMM per projection instead of
+    /// one per sequence — and attention runs per sequence.  Returns the
+    /// **last-position** logits `(b, vocab)`, i.e. each request's
+    /// first-token distribution.  Capacity must already be
+    /// [`PagedKvCache::reserve`]d (see the ragged core above).
+    pub fn prefill_batch(
+        &self,
+        suffixes: &[&[i32]],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+    ) -> Result<Tensor> {
+        let (x, ts) = self.ragged_forward_paged(suffixes, caches, pool)?;
+        let b = ts.len();
+        let d = self.cfg.d_model;
         // Gather each sequence's last hidden row; head() is row-wise, so
         // running it on just these rows matches the full-chunk head bit
         // for bit at those positions.
@@ -270,6 +297,27 @@ impl PackedModel {
             }
         }
         self.head(last)
+    }
+
+    /// Speculative-verify forward: the same ragged batched pass as
+    /// [`PackedModel::prefill_batch`], but surfacing logits at **every**
+    /// position — `suffixes[i]` is sequence `i`'s `k_i + 1`-token chunk
+    /// `[newest emitted token, draft_1, ..., draft_k]`, and row `j` of
+    /// its slice is the target's next-token distribution after consuming
+    /// the first `j + 1` chunk tokens, bitwise identical to what `k_i+1`
+    /// sequential [`PackedModel::forward_step_paged`] calls would have
+    /// produced.  Returns `(sum (k_i + 1), vocab)`; row offsets are the
+    /// prefix sums of the chunk lengths.  Rejected positions are popped
+    /// afterwards with [`PagedKvCache::truncate`].  Same reserve
+    /// contract as `prefill_batch`.
+    pub fn forward_verify_paged(
+        &self,
+        suffixes: &[&[i32]],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+    ) -> Result<Tensor> {
+        let (x, _ts) = self.ragged_forward_paged(suffixes, caches, pool)?;
+        self.head(x)
     }
 }
 

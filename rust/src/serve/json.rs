@@ -448,6 +448,75 @@ mod tests {
     }
 
     #[test]
+    fn unicode_escape_property_roundtrip() {
+        // Random scalar values across the whole codepoint space: the
+        // escaped form (\uXXXX for the BMP, a surrogate pair above it)
+        // must parse to exactly that character, and whatever the writer
+        // renders (raw UTF-8, or \u00XX for controls) must reparse to
+        // the same value.  This is the path the stats frame's nested
+        // spec/kv objects lean on hardest.
+        use crate::tensor::Rng;
+        let mut rng = Rng::new(0xE5C);
+        for round in 0..400 {
+            let c = loop {
+                // bias every 4th draw into the control range so the
+                // writer's \u00XX arm is exercised too
+                let raw = if round % 4 == 0 {
+                    rng.next_u64() % 0x20
+                } else {
+                    rng.next_u64() % 0x11_0000
+                };
+                let raw = raw as u32;
+                if (0xD800..0xE000).contains(&raw) {
+                    continue;
+                }
+                if let Some(c) = char::from_u32(raw) {
+                    break c;
+                }
+            };
+            let cp = c as u32;
+            let esc = if cp < 0x10000 {
+                format!("\"\\u{cp:04x}\"")
+            } else {
+                let u = cp - 0x10000;
+                format!("\"\\u{:04x}\\u{:04x}\"", 0xD800 + (u >> 10), 0xDC00 + (u & 0x3FF))
+            };
+            assert_eq!(
+                Json::parse(&esc).unwrap(),
+                Json::Str(c.to_string()),
+                "escaped form of U+{cp:04X} must parse to the character"
+            );
+            let j = Json::Obj(vec![("s".into(), Json::Str(format!("a{c}b")))]);
+            assert_eq!(Json::parse(&j.render()).unwrap(), j, "render/parse of U+{cp:04X}");
+        }
+    }
+
+    #[test]
+    fn truncated_and_malformed_unicode_escapes_error() {
+        for bad in [
+            // truncated \u escapes (the parse_hex4 length guard)
+            "\"\\u",
+            "\"\\u1",
+            "\"\\u12",
+            "\"\\u123",
+            "\"\\ud83d\\u",
+            "\"\\ud83d\\ude0",
+            // enough bytes but not hex
+            r#""\u123g""#,
+            r#""\uzzzz""#,
+            // surrogate pairing violations
+            r#""\ud83d""#,
+            r#""\ud83dx""#,
+            r#""\ud83d\n""#,
+            r#""\ud83d\u0041""#,
+            r#""\udfff\ude00""#,
+            r#""\ude00""#,
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
     fn rejects_malformed() {
         for bad in ["", "{", "[1,", "{\"a\":}", "nul", "\"unterminated", "1 2", "{\"a\" 1}"] {
             assert!(Json::parse(bad).is_err(), "should reject {bad:?}");

@@ -127,6 +127,14 @@ impl KvCache {
         debug_assert!(self.len + t <= self.cap);
         self.len += t;
     }
+
+    /// Roll back to at most `len` committed positions (speculative-decode
+    /// rejection).  Rows beyond `len` become garbage and are rewritten
+    /// before any read — the same invariant `reset` relies on.  A `len`
+    /// at or past the current length is a no-op.
+    pub fn truncate(&mut self, len: usize) {
+        self.len = self.len.min(len);
+    }
 }
 
 /// Retired caches the pool keeps around (bounds worst-case idle memory).
@@ -214,6 +222,35 @@ mod tests {
 
         // overflow is an error, not a panic
         assert!(c.write_rows(0, &k2, &k2).is_err());
+    }
+
+    #[test]
+    fn truncate_rolls_back_and_rewrites() {
+        let (layers, d, cap) = (1usize, 2usize, 6usize);
+        let mut c = KvCache::new(layers, d, cap);
+        let k: Vec<f32> = (0..4 * d).map(|i| i as f32).collect();
+        c.write_rows(0, &k, &k).unwrap();
+        c.advance(4);
+
+        // roll back two positions: the kept prefix is untouched
+        c.truncate(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.remaining(), 4);
+        assert_eq!(c.keys(0, 2), &k[..2 * d]);
+
+        // at-or-past the current length is a no-op
+        c.truncate(2);
+        c.truncate(99);
+        assert_eq!(c.len(), 2);
+
+        // re-growing overwrites the garbage tail before it is read
+        let k2: Vec<f32> = (0..d).map(|i| 100.0 + i as f32).collect();
+        c.write_rows(0, &k2, &k2).unwrap();
+        c.advance(1);
+        assert_eq!(&c.keys(0, 3)[2 * d..], &k2[..]);
+
+        c.truncate(0);
+        assert!(c.is_empty());
     }
 
     #[test]

@@ -46,15 +46,21 @@ pub struct LoadOptions {
     pub seed: u64,
     /// Send `{"cmd":"shutdown"}` after the run (CI teardown).
     pub shutdown_after: bool,
+    /// Write each request's generated tokens (one sorted `id t1 t2 ...`
+    /// line per request) to this path — byte-comparable across runs, the
+    /// CI proof that `--speculate` changes no output bits.
+    pub transcript: Option<String>,
 }
 
 /// Per-request observation (offsets from the run epoch, seconds).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct ReqRecord {
+    id: String,
     sent_at: f64,
     first_token_at: f64,
     done_at: f64,
     n_tokens: usize,
+    tokens: Vec<i64>,
 }
 
 /// KV block accounting scraped from the server's stats frame after the
@@ -72,6 +78,36 @@ pub struct KvSnapshot {
     pub peak_resident_bytes: usize,
 }
 
+/// Speculative-decoding counters scraped from the stats frame's `spec`
+/// object (absent when the server does not speculate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecSnapshot {
+    pub k: usize,
+    pub proposed: usize,
+    pub accepted: usize,
+    pub cycles: usize,
+    pub fallbacks: usize,
+    pub draft_peak_resident_blocks: usize,
+}
+
+impl SpecSnapshot {
+    /// Accepted fraction of proposed draft tokens; 0.0 when nothing was
+    /// proposed (total fallback must not read as perfect speculation).
+    pub fn acceptance(&self) -> f64 {
+        if self.proposed == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.proposed as f64
+    }
+}
+
+/// One `{"cmd":"stats"}` round trip's worth of server accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsSnapshot {
+    pub kv: KvSnapshot,
+    pub spec: Option<SpecSnapshot>,
+}
+
 /// Aggregated results of one load run.
 pub struct LoadReport {
     pub requests: usize,
@@ -87,6 +123,9 @@ pub struct LoadReport {
     /// Post-run KV memory scrape (`None` if the server predates the
     /// stats command or the scrape failed).
     pub kv: Option<KvSnapshot>,
+    /// Post-run speculative-decoding scrape (`None` when the server does
+    /// not speculate or the scrape failed).
+    pub spec: Option<SpecSnapshot>,
 }
 
 impl LoadReport {
@@ -182,17 +221,24 @@ fn run_client(
                     }
                 }
                 Some("done") => {
-                    let toks = j.get("tokens").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
-                    if toks != streamed {
+                    let tokens: Vec<i64> = j
+                        .get("tokens")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_i64).collect())
+                        .unwrap_or_default();
+                    if tokens.len() != streamed {
                         return Err(Error::config(format!(
-                            "{id}: done carries {toks} tokens but {streamed} were streamed"
+                            "{id}: done carries {} tokens but {streamed} were streamed",
+                            tokens.len()
                         )));
                     }
                     break ReqRecord {
+                        id: id.clone(),
                         sent_at,
                         first_token_at: first_token_at.unwrap_or(sent_at),
                         done_at: epoch.elapsed().as_secs_f64(),
                         n_tokens: streamed,
+                        tokens,
                     };
                 }
                 Some("error") => {
@@ -247,9 +293,9 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     });
     let wall_secs = epoch.elapsed().as_secs_f64();
 
-    // Scrape KV memory stats BEFORE any shutdown: the peaks describe
-    // the load we just generated.
-    let kv = fetch_kv_stats(&o.addr).ok();
+    // Scrape KV memory + speculative stats BEFORE any shutdown: the
+    // peaks and counters describe the load we just generated.
+    let stats = fetch_stats(&o.addr).ok();
 
     if o.shutdown_after {
         // After every client is done: a throwaway connection that only
@@ -263,6 +309,9 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     for r in results {
         records.extend(r?);
     }
+    if let Some(path) = &o.transcript {
+        write_transcript(path, &records)?;
+    }
     let requests = o.clients * o.requests_per_client;
     let total_tokens: usize = records.iter().map(|r| r.n_tokens).sum();
     let ttft: Vec<f64> = records.iter().map(|r| r.first_token_at - r.sent_at).collect();
@@ -275,12 +324,29 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         ttft: LatencySummary::from_secs(ttft),
         total: LatencySummary::from_secs(total),
         peak_concurrent_streams: peak_overlap(&records),
-        kv,
+        kv: stats.map(|s| s.kv),
+        spec: stats.and_then(|s| s.spec),
     })
 }
 
+/// One sorted `id t1 t2 ...` line per completed request — identical
+/// load shapes against deterministic servers produce byte-identical
+/// files regardless of scheduling or speculation.
+fn write_transcript(path: &str, records: &[ReqRecord]) -> Result<()> {
+    let mut lines: Vec<String> = records
+        .iter()
+        .map(|r| {
+            let toks: Vec<String> = r.tokens.iter().map(i64::to_string).collect();
+            format!("{} {}", r.id, toks.join(" "))
+        })
+        .collect();
+    lines.sort();
+    std::fs::write(path, lines.join("\n") + "\n")
+        .map_err(|e| Error::io(format!("write transcript {path}: {e}")))
+}
+
 /// One-shot `{"cmd":"stats"}` round trip on a fresh connection.
-pub fn fetch_kv_stats(addr: &str) -> Result<KvSnapshot> {
+pub fn fetch_stats(addr: &str) -> Result<StatsSnapshot> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| Error::io(format!("connect {addr}: {e}")))?;
     let mut writer = stream
@@ -302,7 +368,7 @@ pub fn fetch_kv_stats(addr: &str) -> Result<KvSnapshot> {
         .get("kv")
         .ok_or_else(|| Error::config("stats frame lacks a 'kv' object"))?;
     let field = |name: &str| kv.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
-    Ok(KvSnapshot {
+    let kv = KvSnapshot {
         block_size: field("block_size"),
         blocks_total: field("blocks_total"),
         resident_blocks: field("resident_blocks"),
@@ -311,7 +377,24 @@ pub fn fetch_kv_stats(addr: &str) -> Result<KvSnapshot> {
         peak_shared_blocks: field("peak_shared_blocks"),
         block_bytes: field("block_bytes"),
         peak_resident_bytes: field("peak_resident_bytes"),
-    })
+    };
+    let spec = j.get("spec").map(|sj| {
+        let f = |name: &str| sj.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+        SpecSnapshot {
+            k: f("k"),
+            proposed: f("proposed"),
+            accepted: f("accepted"),
+            cycles: f("cycles"),
+            fallbacks: f("fallbacks"),
+            draft_peak_resident_blocks: sj
+                .get("draft_kv")
+                .and_then(|d| d.get("peak_resident_blocks"))
+                .and_then(Json::as_i64)
+                .unwrap_or(0)
+                .max(0) as usize,
+        }
+    });
+    Ok(StatsSnapshot { kv, spec })
 }
 
 #[cfg(test)]
@@ -321,10 +404,12 @@ mod tests {
     #[test]
     fn overlap_counts_concurrent_intervals() {
         let r = |a: f64, b: f64| ReqRecord {
+            id: String::new(),
             sent_at: a,
             first_token_at: a,
             done_at: b,
             n_tokens: 1,
+            tokens: vec![0],
         };
         // three overlapping, one disjoint
         let recs = vec![r(0.0, 1.0), r(0.2, 0.8), r(0.5, 1.5), r(2.0, 3.0)];

@@ -20,6 +20,13 @@
 //! * [`scheduler`] — step-granular continuous batching: admission by
 //!   block budget, same-tick admissions prefilled in one batched pass,
 //!   prefix-shared pages across requests, per-request stats.
+//! * [`spec`] — speculative decoding: a draft model proposes `k` tokens
+//!   per cycle, the target verifies them in ONE multi-position pass
+//!   (`forward_verify_paged`), rejected positions are popped with the
+//!   refcount-aware `truncate` primitives — emitted streams stay
+//!   **bitwise identical** to plain decode for greedy and seeded
+//!   sampling alike; per-sequence fallback on draft-pool exhaustion or
+//!   acceptance collapse.
 //! * [`json`] / [`protocol`] — the newline-delimited JSON line protocol
 //!   (now incl. `{"cmd":"stats"}` -> KV memory stats frames).
 //! * [`server`] — the long-lived `repro serve` TCP loop (std threads +
@@ -38,6 +45,7 @@ pub mod protocol;
 pub mod sampling;
 pub mod scheduler;
 pub mod server;
+pub mod spec;
 
 pub use block::{BlockPool, KvStats};
 pub use kv::{KvCache, KvPool};
@@ -45,3 +53,4 @@ pub use paged::PagedKvCache;
 pub use sampling::SamplingParams;
 pub use scheduler::{FinishReason, GenRequest, RequestStats, SchedConfig, Scheduler, StepEvent};
 pub use server::{ServeOptions, Server};
+pub use spec::{generate_speculative, SpecGenReport, SpecStats};

@@ -242,6 +242,40 @@ impl PagedKvCache {
         }
     }
 
+    /// Roll back to at most `len` committed positions, releasing tail
+    /// blocks that no longer hold any committed position (speculative
+    /// decode pops rejected drafted tokens this way).  Refcount-aware: a
+    /// dropped block that a forked sequence still holds is NOT scrubbed —
+    /// this sequence only drops its table entry and the other holders
+    /// keep reading their committed (immutable) rows.  Positions beyond
+    /// `len` inside the kept tail block become garbage; the next
+    /// [`PagedKvCache::reserve`] + write pass overwrites them before any
+    /// read, and `reserve` still copy-on-writes the tail if it is shared.
+    /// A `len` at or past the current length is a no-op.
+    pub fn truncate(&mut self, len: usize, pool: &mut BlockPool) {
+        if len >= self.len {
+            return;
+        }
+        let keep = self.blocks_for(len);
+        for id in self.table.drain(keep..) {
+            pool.release(id);
+        }
+        self.len = len;
+    }
+
+    /// Drop reserved-but-uncommitted tail blocks.  A failed multi-block
+    /// [`PagedKvCache::reserve`] leaves the blocks it did acquire mapped
+    /// (so a successful retry is cheap); callers that will NOT retry at
+    /// that size call this so the spare pages go back to the budget
+    /// instead of starving other sequences.  Committed positions are
+    /// untouched.
+    pub fn trim_reserve(&mut self, pool: &mut BlockPool) {
+        let keep = self.blocks_for(self.len);
+        for id in self.table.drain(keep..) {
+            pool.release(id);
+        }
+    }
+
     /// Release every mapped block back to the pool (eviction / rollback).
     pub fn release_all(&mut self, pool: &mut BlockPool) {
         for id in self.table.drain(..) {
@@ -375,6 +409,34 @@ mod tests {
         assert_ne!(a.block_at(4), tail);
         assert_eq!(b.block_at(4), tail);
         assert_eq!(pool.ref_count(tail), 1);
+    }
+
+    #[test]
+    fn trim_reserve_returns_spare_tail_blocks() {
+        // budget 4: a commits 3 positions (1 block), b holds 2 blocks
+        let mut pool = BlockPool::new(1, 2, 4, 4);
+        let mut a = PagedKvCache::new(&pool);
+        a.reserve(3, &mut pool).unwrap();
+        let k = rows(2, 3, 0.0);
+        a.write_rows(&mut pool, 0, &k, &k).unwrap();
+        a.advance(3);
+        let mut b = PagedKvCache::new(&pool);
+        b.reserve(8, &mut pool).unwrap();
+
+        // a's 3-block ask acquires the last free page, then fails — the
+        // spare page stays mapped until trim_reserve hands it back
+        assert!(a.reserve(12, &mut pool).is_err());
+        assert_eq!(a.n_blocks(), 2);
+        assert_eq!(pool.available(), 0);
+        a.trim_reserve(&mut pool);
+        assert_eq!(a.n_blocks(), 1);
+        assert_eq!(a.len(), 3, "committed positions untouched");
+        assert_eq!(pool.available(), 1, "the spare page is reclaimable again");
+        let segs = a.segments(&pool, 0, 3);
+        assert_eq!(segs[0].0, &k[..]);
+
+        a.release_all(&mut pool);
+        b.release_all(&mut pool);
     }
 
     #[test]

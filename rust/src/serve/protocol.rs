@@ -23,28 +23,35 @@
 //! {"id":"r1","event":"token","index":0,"token":42}
 //! {"id":"r1","event":"done","finish":"length","prompt_len":3,"tokens":[42,7],
 //!  "stats":{"queue_ms":0.1,"prefill_ms":3.2,"total_ms":40.5,"tokens_per_sec":790.1,
-//!           "max_gap_ms":2.0,"shared_prefix_tokens":0}}
+//!           "max_gap_ms":2.0,"shared_prefix_tokens":0,
+//!           "spec_proposed":16,"spec_accepted":13}}
 //! {"id":"r1","event":"error","message":"..."}
 //! {"id":"","event":"stats","active":1,"pending":0,"completed":7,
 //!  "kv":{"block_size":32,"blocks_total":384,"resident_blocks":12,"free_blocks":4,
 //!        "used_blocks":8,"shared_blocks":2,"peak_resident_blocks":12,
 //!        "peak_shared_blocks":3,"block_bytes":65536,"resident_bytes":786432,
-//!        "peak_resident_bytes":786432}}
+//!        "peak_resident_bytes":786432},
+//!  "spec":{"k":4,"proposed":480,"accepted":401,"acceptance":0.835,
+//!          "cycles":120,"fallbacks":0,"draft_kv":{...same fields as kv...}}}
 //! ```
 //!
 //! Tokens stream as they are produced (`index` counts generated tokens
-//! from 0); `done.tokens` holds only the generated suffix.  Multiple
-//! requests may be in flight on one connection; frames interleave and are
-//! routed by `id`.  Stats frames report the paged KV pool: resident /
-//! free / used / shared block counts plus high-water marks, so a client
-//! can observe prefix sharing and peak KV memory even after its
-//! requests finished.
+//! from 0; a speculating engine may emit several per scheduler tick);
+//! `done.tokens` holds only the generated suffix.  Multiple requests may
+//! be in flight on one connection; frames interleave and are routed by
+//! `id`.  Stats frames report the paged KV pool — resident / free /
+//! used / shared block counts plus high-water marks — and, when the
+//! server runs with `--speculate`, a `spec` object with pool-wide
+//! proposal/acceptance counters and the draft model's own KV pool, so a
+//! client can observe prefix sharing, peak KV memory, and speculative
+//! acceptance even after its requests finished.
 
 use crate::error::{Error, Result};
 use crate::serve::block::KvStats;
 use crate::serve::json::Json;
 use crate::serve::sampling::SamplingParams;
 use crate::serve::scheduler::{RequestStats, StepEvent};
+use crate::serve::spec::SpecStats;
 
 /// Default `max_new` when a request omits it.
 pub const DEFAULT_MAX_NEW: usize = 32;
@@ -136,36 +143,65 @@ fn stats_json(s: &RequestStats) -> Json {
             Json::Num((s.tokens_per_sec() * 10.0).round() / 10.0),
         ),
         ("shared_prefix_tokens".to_string(), Json::from(s.shared_prefix_tokens)),
+        ("spec_proposed".to_string(), Json::from(s.spec_proposed)),
+        ("spec_accepted".to_string(), Json::from(s.spec_accepted)),
+    ])
+}
+
+/// The KV pool accounting sub-object shared by the target (`"kv"`) and
+/// draft (`"spec.draft_kv"`) pools.
+fn kv_json(kv: &KvStats) -> Json {
+    Json::Obj(vec![
+        ("block_size".to_string(), Json::from(kv.block_size)),
+        ("blocks_total".to_string(), Json::from(kv.blocks_total)),
+        ("resident_blocks".to_string(), Json::from(kv.resident_blocks)),
+        ("free_blocks".to_string(), Json::from(kv.free_blocks)),
+        ("used_blocks".to_string(), Json::from(kv.used_blocks)),
+        ("shared_blocks".to_string(), Json::from(kv.shared_blocks)),
+        ("peak_resident_blocks".to_string(), Json::from(kv.peak_resident_blocks)),
+        ("peak_shared_blocks".to_string(), Json::from(kv.peak_shared_blocks)),
+        ("block_bytes".to_string(), Json::from(kv.block_bytes)),
+        ("resident_bytes".to_string(), Json::from(kv.resident_bytes)),
+        ("peak_resident_bytes".to_string(), Json::from(kv.peak_resident_bytes)),
     ])
 }
 
 /// Render the engine-wide stats frame: queue/batch counters plus the
-/// paged KV pool's block accounting (current and high-water).
-pub fn stats_frame(kv: &KvStats, active: usize, pending: usize, completed: usize) -> String {
-    Json::Obj(vec![
+/// paged KV pool's block accounting (current and high-water) and — when
+/// the engine speculates — the draft/verify counters and draft KV pool.
+pub fn stats_frame(
+    kv: &KvStats,
+    active: usize,
+    pending: usize,
+    completed: usize,
+    spec: Option<&SpecStats>,
+) -> String {
+    let mut fields = vec![
         ("id".to_string(), Json::from("")),
         ("event".to_string(), Json::from("stats")),
         ("active".to_string(), Json::from(active)),
         ("pending".to_string(), Json::from(pending)),
         ("completed".to_string(), Json::from(completed)),
-        (
-            "kv".to_string(),
+        ("kv".to_string(), kv_json(kv)),
+    ];
+    if let Some(s) = spec {
+        fields.push((
+            "spec".to_string(),
             Json::Obj(vec![
-                ("block_size".to_string(), Json::from(kv.block_size)),
-                ("blocks_total".to_string(), Json::from(kv.blocks_total)),
-                ("resident_blocks".to_string(), Json::from(kv.resident_blocks)),
-                ("free_blocks".to_string(), Json::from(kv.free_blocks)),
-                ("used_blocks".to_string(), Json::from(kv.used_blocks)),
-                ("shared_blocks".to_string(), Json::from(kv.shared_blocks)),
-                ("peak_resident_blocks".to_string(), Json::from(kv.peak_resident_blocks)),
-                ("peak_shared_blocks".to_string(), Json::from(kv.peak_shared_blocks)),
-                ("block_bytes".to_string(), Json::from(kv.block_bytes)),
-                ("resident_bytes".to_string(), Json::from(kv.resident_bytes)),
-                ("peak_resident_bytes".to_string(), Json::from(kv.peak_resident_bytes)),
+                ("k".to_string(), Json::from(s.k)),
+                ("proposed".to_string(), Json::from(s.proposed)),
+                ("accepted".to_string(), Json::from(s.accepted)),
+                (
+                    "acceptance".to_string(),
+                    Json::Num((s.acceptance() * 1000.0).round() / 1000.0),
+                ),
+                ("cycles".to_string(), Json::from(s.cycles)),
+                ("fallbacks".to_string(), Json::from(s.fallbacks)),
+                ("draft_kv".to_string(), kv_json(&s.draft_kv)),
             ]),
-        ),
-    ])
-    .render()
+        ));
+    }
+    Json::Obj(fields).render()
 }
 
 /// Render an error frame (empty `id` when the failure precedes parsing).
@@ -269,7 +305,7 @@ mod tests {
             resident_bytes: 1536,
             peak_resident_bytes: 1536,
         };
-        let f = stats_frame(&kv, 2, 1, 9);
+        let f = stats_frame(&kv, 2, 1, 9, None);
         let j = Json::parse(&f).unwrap();
         assert_eq!(j.get("event").and_then(Json::as_str), Some("stats"));
         assert_eq!(j.get("active").and_then(Json::as_i64), Some(2));
@@ -279,6 +315,26 @@ mod tests {
         assert_eq!(kvj.get("shared_blocks").and_then(Json::as_i64), Some(2));
         assert_eq!(kvj.get("peak_shared_blocks").and_then(Json::as_i64), Some(3));
         assert_eq!(kvj.get("peak_resident_bytes").and_then(Json::as_i64), Some(1536));
+        assert!(j.get("spec").is_none(), "no spec object when not speculating");
+
+        let spec = SpecStats {
+            k: 4,
+            proposed: 40,
+            accepted: 30,
+            cycles: 12,
+            fallbacks: 1,
+            draft_kv: kv,
+        };
+        let f = stats_frame(&kv, 2, 1, 9, Some(&spec));
+        let j = Json::parse(&f).unwrap();
+        let sj = j.get("spec").expect("spec object");
+        assert_eq!(sj.get("k").and_then(Json::as_i64), Some(4));
+        assert_eq!(sj.get("proposed").and_then(Json::as_i64), Some(40));
+        assert_eq!(sj.get("accepted").and_then(Json::as_i64), Some(30));
+        assert!((sj.get("acceptance").and_then(Json::as_f64).unwrap() - 0.75).abs() < 1e-9);
+        assert_eq!(sj.get("fallbacks").and_then(Json::as_i64), Some(1));
+        let dkv = sj.get("draft_kv").expect("draft kv accounting");
+        assert_eq!(dkv.get("blocks_total").and_then(Json::as_i64), Some(16));
     }
 
     #[test]
@@ -319,6 +375,8 @@ mod tests {
                 max_inter_token_secs: 0.003,
                 n_new_tokens: 2,
                 shared_prefix_tokens: 1,
+                spec_proposed: 4,
+                spec_accepted: 3,
             },
         };
         let f = event_frame(&done);
@@ -334,6 +392,11 @@ mod tests {
             .collect();
         assert_eq!(toks, vec![7, 8], "done frame carries only generated tokens");
         assert!(j.get("stats").and_then(|s| s.get("queue_ms")).is_some());
+        assert_eq!(
+            j.get("stats").and_then(|s| s.get("spec_proposed")).and_then(Json::as_i64),
+            Some(4),
+            "done stats carry the per-request speculative counters"
+        );
 
         let err = error_frame("x", "boom \"quoted\"");
         let j = Json::parse(&err).unwrap();

@@ -22,21 +22,34 @@
 //!    back to the pool (shared pages survive until the last holder
 //!    leaves).
 //!
+//! With a draft model attached ([`Scheduler::with_draft`] +
+//! `SchedConfig::speculate`), step 2 becomes a speculative draft/verify
+//! cycle for eligible sequences: the draft proposes `k` greedy tokens
+//! (batched catch-up prefill + single-token steps on its own KV pool),
+//! the target verifies every sequence's chunk in ONE
+//! [`PackedModel::forward_verify_paged`] pass, and rejected positions
+//! are popped with [`PagedKvCache::truncate`].  Sequences fall back to
+//! the plain step — per sequence, permanently — when the draft pool is
+//! exhausted or their rolling acceptance collapses.
+//!
 //! All attention state is per-sequence, every batched operation in the
 //! decode path is row-independent, and shared prefix pages hold rows
 //! that are bitwise what the sharer would have computed itself — so
-//! batch composition, paging, and prefix sharing never change a
-//! request's token stream (`tests/serve.rs` + `tests/paged.rs`).
+//! batch composition, paging, prefix sharing, and speculation never
+//! change a request's token stream (`tests/serve.rs` + `tests/paged.rs`
+//! + `tests/spec.rs`).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::Result;
-use crate::infer::PackedModel;
+use crate::infer::{argmax, PackedModel};
 use crate::serve::block::{BlockPool, KvStats};
 use crate::serve::decode::pick;
 use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{seq_rng, SamplingParams};
+use crate::serve::spec::{accept_tokens, DraftState, SpecEngine, SpecStats};
 use crate::tensor::Rng;
 
 /// Scheduler limits.
@@ -54,6 +67,12 @@ pub struct SchedConfig {
     /// `max_batch` worst-case sequences (paging then saves memory via
     /// sharing + on-demand growth rather than by refusing admissions).
     pub kv_blocks_total: usize,
+    /// Draft tokens proposed per speculative cycle (`--speculate`);
+    /// 0 = speculation off (a draft model, if any, is ignored).
+    pub speculate: usize,
+    /// Draft-side KV page budget (`--draft-kv-blocks-total`); 0 =
+    /// auto-size like the target budget, plus the in-flight proposals.
+    pub draft_kv_blocks_total: usize,
 }
 
 impl Default for SchedConfig {
@@ -64,6 +83,8 @@ impl Default for SchedConfig {
             max_prompt: 1024,
             kv_block: 32,
             kv_blocks_total: 0,
+            speculate: 0,
+            draft_kv_blocks_total: 0,
         }
     }
 }
@@ -76,6 +97,15 @@ impl SchedConfig {
         }
         let bs = self.kv_block.max(1);
         self.max_batch.max(1) * (self.max_prompt + self.max_new_cap).div_ceil(bs)
+    }
+
+    /// Resolved draft-side block budget.
+    pub fn draft_blocks_total(&self) -> usize {
+        if self.draft_kv_blocks_total > 0 {
+            return self.draft_kv_blocks_total;
+        }
+        let bs = self.kv_block.max(1);
+        self.max_batch.max(1) * (self.max_prompt + self.max_new_cap + self.speculate).div_ceil(bs)
     }
 }
 
@@ -136,6 +166,10 @@ pub struct RequestStats {
     /// Prompt positions mapped from another request's pages instead of
     /// being recomputed (prefix sharing).
     pub shared_prefix_tokens: usize,
+    /// Draft tokens proposed for this request (speculative decoding).
+    pub spec_proposed: usize,
+    /// Proposals the target accepted for this request.
+    pub spec_accepted: usize,
 }
 
 impl RequestStats {
@@ -178,6 +212,10 @@ struct Running {
     last_token_at: Instant,
     max_gap: f64,
     finish: Option<FinishReason>,
+    /// Draft-side state when the engine speculates; `None` otherwise.
+    draft: Option<DraftState>,
+    spec_proposed: usize,
+    spec_accepted: usize,
 }
 
 impl Running {
@@ -195,6 +233,22 @@ impl Running {
         } else if self.emitted >= self.req.max_new {
             self.finish = Some(FinishReason::Length);
         }
+    }
+
+    /// Emit one generated token: record it, stamp timing, stream the
+    /// event, and update the finish state.  Shared by the plain step
+    /// and the speculative cycle so their bookkeeping cannot diverge.
+    fn emit_token(&mut self, tok: i32, now: Instant, events: &mut Vec<StepEvent>) {
+        self.tokens.push(tok);
+        self.emitted += 1;
+        self.note_token(now);
+        events.push(StepEvent::Token {
+            key: self.req.key,
+            id: self.req.id.clone(),
+            index: self.emitted - 1,
+            token: tok,
+        });
+        self.check_finished(tok);
     }
 }
 
@@ -220,6 +274,8 @@ pub struct Scheduler<'m> {
     active: Vec<Running>,
     pool: BlockPool,
     completed: usize,
+    /// Draft model + draft KV pool + counters when speculating.
+    spec: Option<SpecEngine>,
 }
 
 impl<'m> Scheduler<'m> {
@@ -230,7 +286,40 @@ impl<'m> Scheduler<'m> {
             cfg.kv_block.max(1),
             cfg.blocks_total(),
         );
-        Scheduler { model, cfg, pending: VecDeque::new(), active: Vec::new(), pool, completed: 0 }
+        Scheduler {
+            model,
+            cfg,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            pool,
+            completed: 0,
+            spec: None,
+        }
+    }
+
+    /// A scheduler that speculates: `draft` proposes `cfg.speculate`
+    /// tokens per cycle and the target verifies them in one multi-token
+    /// pass.  With `cfg.speculate == 0` the draft is ignored and this is
+    /// exactly [`Scheduler::new`].  The draft's KV pages live in their
+    /// own pool (budgeted by [`SchedConfig::draft_blocks_total`]) so
+    /// drafting never competes with target KV for the serving budget.
+    pub fn with_draft(model: &'m PackedModel, cfg: SchedConfig, draft: Arc<PackedModel>) -> Self {
+        let mut s = Scheduler::new(model, cfg);
+        if cfg.speculate > 0 {
+            let pool = BlockPool::new(
+                draft.cfg.n_layers,
+                draft.cfg.d_model,
+                cfg.kv_block.max(1),
+                cfg.draft_blocks_total(),
+            );
+            s.spec = Some(SpecEngine {
+                draft,
+                pool,
+                k: cfg.speculate,
+                counters: Default::default(),
+            });
+        }
+        s
     }
 
     /// Queue a request for admission at the next step.
@@ -259,6 +348,20 @@ impl<'m> Scheduler<'m> {
         self.pool.stats()
     }
 
+    /// Speculative-decoding snapshot (`None` when not speculating):
+    /// pool-wide proposal/acceptance counters plus the draft KV pool's
+    /// block accounting.
+    pub fn spec_stats(&self) -> Option<SpecStats> {
+        self.spec.as_ref().map(|se| SpecStats {
+            k: se.k,
+            proposed: se.counters.proposed,
+            accepted: se.counters.accepted,
+            cycles: se.counters.cycles,
+            fallbacks: se.counters.fallbacks,
+            draft_kv: se.pool.stats(),
+        })
+    }
+
     /// Drop a request wherever it is (pending or mid-decode).  Active
     /// sequences are evicted at the next step with `Cancelled`.
     pub fn cancel(&mut self, key: u64) {
@@ -275,6 +378,9 @@ impl<'m> Scheduler<'m> {
         self.pending.clear();
         for r in self.active.iter_mut() {
             r.cache.release_all(&mut self.pool);
+            if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
+                d.cache.release_all(&mut se.pool);
+            }
         }
         self.active.clear();
     }
@@ -420,6 +526,9 @@ impl<'m> Scheduler<'m> {
                 last_token_at: now,
                 max_gap: 0.0,
                 finish: None,
+                draft: self.spec.as_ref().map(|se| DraftState::new(&se.pool)),
+                spec_proposed: 0,
+                spec_accepted: 0,
                 req,
             };
             events.push(StepEvent::Token {
@@ -434,12 +543,22 @@ impl<'m> Scheduler<'m> {
         Ok(())
     }
 
-    /// One scheduler step: admit (batched prefill), decode one token for
-    /// every live sequence, evict finished ones.  Returns events in
-    /// emission order.
+    /// One scheduler step: admit (batched prefill), then decode — a
+    /// draft/verify speculative cycle for sequences that can speculate
+    /// (emitting 1..=k+1 tokens each), one plain batched step for the
+    /// rest — and evict finished sequences.  Returns events in emission
+    /// order.
     pub fn step(&mut self) -> Result<Vec<StepEvent>> {
         let mut events = Vec::new();
         self.admit(&mut events)?;
+
+        // -- speculative draft/verify cycle (marks handled sequences) --
+        let handled = match self.spec.as_mut() {
+            Some(se) => {
+                Self::spec_cycle(self.model, &mut self.active, &mut self.pool, se, &mut events)?
+            }
+            None => vec![false; self.active.len()],
+        };
 
         // -- one batched decode step over sequences still running --
         let mut idxs: Vec<usize> = Vec::new();
@@ -451,7 +570,7 @@ impl<'m> Scheduler<'m> {
             let mut samplings: Vec<Option<SamplingParams>> = Vec::new();
             let mut capacity_hit = false;
             for (i, r) in self.active.iter_mut().enumerate() {
-                if r.finish.is_none() {
+                if r.finish.is_none() && !handled[i] {
                     // Grow this sequence's table by (at most) one page
                     // up front so a budget miss finishes ONE sequence
                     // with `capacity` instead of failing the batch.
@@ -486,17 +605,7 @@ impl<'m> Scheduler<'m> {
         }
         let now = Instant::now();
         for (i, tok) in picked {
-            let r = &mut self.active[i];
-            r.tokens.push(tok);
-            r.emitted += 1;
-            r.note_token(now);
-            events.push(StepEvent::Token {
-                key: r.req.key,
-                id: r.req.id.clone(),
-                index: r.emitted - 1,
-                token: tok,
-            });
-            r.check_finished(tok);
+            self.active[i].emit_token(tok, now, &mut events);
         }
 
         // -- evict finished sequences (stable order), reclaim blocks --
@@ -513,9 +622,14 @@ impl<'m> Scheduler<'m> {
                         max_inter_token_secs: r.max_gap,
                         n_new_tokens: r.emitted,
                         shared_prefix_tokens: r.shared_prefix,
+                        spec_proposed: r.spec_proposed,
+                        spec_accepted: r.spec_accepted,
                     };
                     self.completed += 1;
                     r.cache.release_all(&mut self.pool);
+                    if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
+                        d.cache.release_all(&mut se.pool);
+                    }
                     events.push(StepEvent::Done {
                         key: r.req.key,
                         id: r.req.id,
@@ -529,6 +643,186 @@ impl<'m> Scheduler<'m> {
         }
         self.active = kept;
         Ok(events)
+    }
+
+    /// One speculative draft/verify cycle over every sequence that can
+    /// speculate this tick.  Drafting is batched on the draft model
+    /// (ragged catch-up prefill + shrinking single-token steps), then
+    /// the target verifies ALL sequences' chunks in ONE
+    /// [`PackedModel::forward_verify_paged`] pass; acceptance walks each
+    /// sequence's rows with its own sampler stream, rejected positions
+    /// are popped with [`PagedKvCache::truncate`].  Returns a mask of
+    /// sequences this cycle stepped — the plain decode loop takes the
+    /// rest (no draft state, speculation disabled, last-token requests,
+    /// or a target-pool reserve miss, which the plain path resolves with
+    /// its capacity-finish logic).
+    fn spec_cycle(
+        model: &PackedModel,
+        active: &mut [Running],
+        pool: &mut BlockPool,
+        se: &mut SpecEngine,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<Vec<bool>> {
+        let n = active.len();
+        let mut handled = vec![false; n];
+        // -- pass A: eligibility + capacity reservations --
+        // ks[i] > 0 marks sequence i speculating this tick with that k.
+        let mut ks = vec![0usize; n];
+        for (i, r) in active.iter_mut().enumerate() {
+            if r.finish.is_some() {
+                continue;
+            }
+            let Some(d) = r.draft.as_mut() else { continue };
+            if d.disabled {
+                continue;
+            }
+            let remaining = r.req.max_new.saturating_sub(r.emitted);
+            if remaining < 2 {
+                // A single pending token gains nothing from drafting.
+                continue;
+            }
+            let k_eff = se.k.min(remaining - 1);
+            let t = r.tokens.len();
+            // Draft capacity for catch-up + k-1 proposal steps; a miss
+            // permanently falls this sequence back to plain decode.
+            if d.cache.reserve(t + k_eff - 1, &mut se.pool).is_err() {
+                d.cache.release_all(&mut se.pool);
+                d.disabled = true;
+                se.counters.fallbacks += 1;
+                continue;
+            }
+            // Target capacity for the whole verify chunk (CoW of shared
+            // tails happens here); a miss skips speculation this tick —
+            // the plain loop still tries the single-position step and
+            // owns the capacity-finish policy.  Blocks the failed
+            // multi-page reserve DID acquire are returned immediately so
+            // speculation never deepens pool pressure for other
+            // sequences (a plain single-position reserve can't strand).
+            if r.cache.reserve(r.cache.len() + k_eff + 1, pool).is_err() {
+                r.cache.trim_reserve(pool);
+                continue;
+            }
+            ks[i] = k_eff;
+        }
+        if ks.iter().all(|&k| k == 0) {
+            return Ok(handled);
+        }
+
+        // -- draft catch-up: one ragged prefill over every speculator's
+        //    unseen tokens, whose last rows seed the first proposals --
+        let mut sfx_owned: Vec<Vec<i32>> = Vec::new();
+        let mut order: Vec<usize> = Vec::new();
+        for (i, r) in active.iter().enumerate() {
+            if ks[i] == 0 {
+                continue;
+            }
+            let dlen = r.draft.as_ref().expect("speculator has draft state").cache.len();
+            sfx_owned.push(r.tokens[dlen..].to_vec());
+            order.push(i);
+        }
+        let dlogits = {
+            let sfx: Vec<&[i32]> = sfx_owned.iter().map(|v| &v[..]).collect();
+            let mut dcaches: Vec<&mut PagedKvCache> = Vec::new();
+            for (i, r) in active.iter_mut().enumerate() {
+                if ks[i] > 0 {
+                    dcaches.push(&mut r.draft.as_mut().expect("draft state").cache);
+                }
+            }
+            se.draft.prefill_batch(&sfx, &mut dcaches, &mut se.pool)?
+        };
+        let mut proposals: Vec<Vec<i32>> =
+            (0..order.len()).map(|j| vec![argmax(dlogits.row(j)) as i32]).collect();
+
+        // -- remaining draft steps, batch shrinking as per-sequence k
+        //    budgets run out --
+        let max_k = order.iter().map(|&i| ks[i]).max().unwrap_or(1);
+        for step in 1..max_k {
+            let mut toks: Vec<i32> = Vec::new();
+            let mut live: Vec<usize> = Vec::new();
+            let mut caches: Vec<&mut PagedKvCache> = Vec::new();
+            let mut j = 0usize;
+            for (i, r) in active.iter_mut().enumerate() {
+                if ks[i] == 0 {
+                    continue;
+                }
+                if ks[i] > step {
+                    toks.push(*proposals[j].last().expect("non-empty proposals"));
+                    caches.push(&mut r.draft.as_mut().expect("draft state").cache);
+                    live.push(j);
+                }
+                j += 1;
+            }
+            if toks.is_empty() {
+                break;
+            }
+            let dl = se.draft.forward_step_paged(&toks, &mut caches, &mut se.pool)?;
+            drop(caches);
+            for (row, &j) in live.iter().enumerate() {
+                proposals[j].push(argmax(dl.row(row)) as i32);
+            }
+        }
+
+        // -- ONE multi-sequence multi-position verify pass --
+        let chunks: Vec<Vec<i32>> = order
+            .iter()
+            .zip(&proposals)
+            .map(|(&i, props)| {
+                let mut c = vec![*active[i].tokens.last().expect("active sequence has tokens")];
+                c.extend_from_slice(props);
+                c
+            })
+            .collect();
+        let vlogits = {
+            let refs: Vec<&[i32]> = chunks.iter().map(|v| &v[..]).collect();
+            let mut tcaches: Vec<&mut PagedKvCache> = Vec::new();
+            for (i, r) in active.iter_mut().enumerate() {
+                if ks[i] > 0 {
+                    tcaches.push(&mut r.cache);
+                }
+            }
+            model.forward_verify_paged(&refs, &mut tcaches, pool)?
+        };
+
+        // -- acceptance + KV rollback, sequence by sequence --
+        let now = Instant::now();
+        let mut row0 = 0usize;
+        for (j, &i) in order.iter().enumerate() {
+            let r = &mut active[i];
+            let remaining = r.req.max_new - r.emitted;
+            let (emitted, acc) = accept_tokens(
+                &vlogits,
+                row0,
+                &proposals[j],
+                r.req.sampling.as_ref(),
+                r.rng.as_mut(),
+                remaining,
+                r.req.stop,
+            );
+            row0 += chunks[j].len();
+            se.counters.proposed += proposals[j].len();
+            se.counters.accepted += acc;
+            se.counters.cycles += 1;
+            r.spec_proposed += proposals[j].len();
+            r.spec_accepted += acc;
+            for &tok in &emitted {
+                r.emit_token(tok, now, events);
+            }
+            // Pop the rejected positions; the draft may legitimately sit
+            // one position behind (all-accepted + bonus) — the next
+            // cycle's catch-up chunk absorbs the gap.
+            let keep = r.tokens.len() - 1;
+            r.cache.truncate(keep, pool);
+            let d = r.draft.as_mut().expect("draft state");
+            d.cache.truncate(keep, &mut se.pool);
+            d.note_cycle(proposals[j].len(), acc);
+            if !d.disabled && d.collapsed() {
+                d.disabled = true;
+                d.cache.release_all(&mut se.pool);
+                se.counters.fallbacks += 1;
+            }
+            handled[i] = true;
+        }
+        Ok(handled)
     }
 }
 

@@ -93,6 +93,17 @@ impl Server {
 
 /// Bind, spawn the engine + accept threads, and return immediately.
 pub fn spawn(model: Arc<PackedModel>, opts: ServeOptions) -> Result<Server> {
+    spawn_with_draft(model, None, opts)
+}
+
+/// [`spawn`] with an optional speculative-decoding draft model (used
+/// when `opts.sched.speculate > 0`): the engine's scheduler drafts `k`
+/// tokens per cycle on it and verifies them on the target.
+pub fn spawn_with_draft(
+    model: Arc<PackedModel>,
+    draft: Option<Arc<PackedModel>>,
+    opts: ServeOptions,
+) -> Result<Server> {
     let listener = TcpListener::bind(&opts.addr)
         .map_err(|e| Error::io(format!("bind {}: {e}", opts.addr)))?;
     let addr = listener
@@ -102,7 +113,7 @@ pub fn spawn(model: Arc<PackedModel>, opts: ServeOptions) -> Result<Server> {
     let stopping = Arc::new(AtomicBool::new(false));
 
     let sched_cfg = opts.sched;
-    let engine = std::thread::spawn(move || run_engine(model, sched_cfg, rx));
+    let engine = std::thread::spawn(move || run_engine(model, draft, sched_cfg, rx));
 
     let accept_tx = tx.clone();
     let accept_stop = Arc::clone(&stopping);
@@ -126,8 +137,12 @@ pub fn spawn(model: Arc<PackedModel>, opts: ServeOptions) -> Result<Server> {
 }
 
 /// Blocking entry point for the `repro serve` CLI.
-pub fn run(model: Arc<PackedModel>, opts: ServeOptions) -> Result<()> {
-    let server = spawn(model, opts)?;
+pub fn run(
+    model: Arc<PackedModel>,
+    draft: Option<Arc<PackedModel>>,
+    opts: ServeOptions,
+) -> Result<()> {
+    let server = spawn_with_draft(model, draft, opts)?;
     println!("serve: listening on {}", server.addr);
     // Line-buffered stdout under redirection: flush so the CI smoke test
     // sees the address immediately.
@@ -137,8 +152,16 @@ pub fn run(model: Arc<PackedModel>, opts: ServeOptions) -> Result<()> {
     Ok(())
 }
 
-fn run_engine(model: Arc<PackedModel>, cfg: SchedConfig, rx: Receiver<EngineMsg>) {
-    let mut sched = Scheduler::new(&model, cfg);
+fn run_engine(
+    model: Arc<PackedModel>,
+    draft: Option<Arc<PackedModel>>,
+    cfg: SchedConfig,
+    rx: Receiver<EngineMsg>,
+) {
+    let mut sched = match draft {
+        Some(d) if cfg.speculate > 0 => Scheduler::with_draft(&model, cfg, d),
+        _ => Scheduler::new(&model, cfg),
+    };
     let mut outs: HashMap<u64, Sender<String>> = HashMap::new();
     let mut next_key = 1u64;
     'engine: loop {
@@ -230,6 +253,7 @@ fn handle_msg(
                 sched.n_active(),
                 sched.n_pending(),
                 sched.n_completed(),
+                sched.spec_stats().as_ref(),
             );
             let _ = out.send(frame);
             true

@@ -1,0 +1,393 @@
+//! Speculative decoding: a cheap draft proposes, the target verifies.
+//!
+//! The 2-bit serving regime is exactly where speculation pays off:
+//! decode latency is dominated by one-token-at-a-time GEMVs streaming
+//! the packed weights, while a k+1-token verify chunk streams them ONCE
+//! for k+1 positions.  A small draft model (the same checkpoint cut to
+//! its first N layers via [`crate::infer::PackedModel::prefix_cut`], or
+//! any packed checkpoint sharing the vocabulary) proposes `k` greedy
+//! tokens per cycle; the target verifies them in one multi-position
+//! [`crate::infer::PackedModel::forward_verify_paged`] pass and accepts
+//! the longest prefix it agrees with.
+//!
+//! ## Bit-exact acceptance
+//!
+//! The verify chunk's logits rows are bitwise identical to what
+//! sequential `forward_step_paged` calls would have produced (the
+//! kernels are bitwise row-stable across batch shapes and the paged
+//! attention core walks the same segments in the same order — the
+//! equivalence chain `tests/serve.rs` / `tests/paged.rs` pins).  The
+//! acceptance loop therefore emits, at every position, *the target's own
+//! pick from its own logits*:
+//!
+//! * **greedy** — accept while `draft_token == argmax(target_logits)`;
+//!   on the first mismatch the target's argmax is emitted as the
+//!   correction.
+//! * **seeded sampling** — walk the request's rng stream one draw per
+//!   emitted token (never for positions past a rejection) and accept
+//!   while the draft token equals the target's sampled pick; the
+//!   mismatch draw is itself the emitted correction.
+//!
+//! Either way the emitted stream is **bitwise identical** to
+//! non-speculative decode (`tests/spec.rs`); speculation only changes
+//! how many forward passes it took to produce it.
+//!
+//! ## KV rollback
+//!
+//! Verifying writes k+1 positions into the target's paged cache; the
+//! rejected tail is popped with [`crate::serve::paged::PagedKvCache::truncate`],
+//! which releases emptied tail pages refcount-aware (a page shared with
+//! a forked sequence is dropped from the table, never scrubbed).  The
+//! draft keeps its own [`BlockPool`] — draft KV never competes with
+//! target KV for the serving budget and is reported separately in the
+//! stats frame.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::infer::{argmax, GenReport, PackedModel};
+use crate::serve::block::{BlockPool, KvStats};
+use crate::serve::decode::pick;
+use crate::serve::paged::PagedKvCache;
+use crate::serve::sampling::{seq_rng, SamplingParams};
+use crate::tensor::{IntTensor, Rng, Tensor};
+
+/// Cycles of rolling-acceptance history per sequence.
+pub const ACCEPT_WINDOW: usize = 8;
+
+/// A sequence whose rolling acceptance drops below this over a full
+/// window stops speculating (the draft costs more than it saves).
+pub const MIN_ACCEPT: f64 = 0.125;
+
+/// Pool-wide speculative counters (rendered into the stats frame).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecCounters {
+    /// Draft tokens proposed across all sequences.
+    pub proposed: usize,
+    /// Proposals the target accepted.
+    pub accepted: usize,
+    /// Draft/verify cycles run.
+    pub cycles: usize,
+    /// Sequences that fell back to plain decode (draft pool exhausted or
+    /// acceptance collapsed).
+    pub fallbacks: usize,
+}
+
+/// Snapshot of the speculative subsystem for the `{"cmd":"stats"}` frame.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecStats {
+    /// Draft tokens proposed per cycle (`--speculate`).
+    pub k: usize,
+    pub proposed: usize,
+    pub accepted: usize,
+    pub cycles: usize,
+    pub fallbacks: usize,
+    /// Draft-side KV pool accounting (separate budget from target KV).
+    pub draft_kv: KvStats,
+}
+
+impl SpecStats {
+    /// Accepted fraction of proposed draft tokens; 0.0 before any
+    /// proposal (nothing drafted reads as nothing accepted, never as
+    /// vacuously-perfect speculation — the collapse fallback has its
+    /// own windowed counters and never consults this).
+    pub fn acceptance(&self) -> f64 {
+        if self.proposed == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.proposed as f64
+    }
+}
+
+/// The scheduler-owned draft side of the engine: the draft model plus
+/// the pool its per-sequence KV pages come from.
+pub struct SpecEngine {
+    pub draft: std::sync::Arc<PackedModel>,
+    pub pool: BlockPool,
+    /// Draft tokens per cycle.
+    pub k: usize,
+    pub counters: SpecCounters,
+}
+
+/// One sequence's draft-side state: its own paged KV over the draft
+/// pool plus a rolling acceptance window for the collapse fallback.
+pub struct DraftState {
+    pub cache: PagedKvCache,
+    /// Set when this sequence stopped speculating (draft pool exhausted
+    /// or acceptance collapsed); plain decode takes over for good.
+    pub disabled: bool,
+    /// (proposed, accepted) per recent cycle, capped at [`ACCEPT_WINDOW`].
+    window: VecDeque<(u32, u32)>,
+}
+
+impl DraftState {
+    pub fn new(pool: &BlockPool) -> Self {
+        DraftState { cache: PagedKvCache::new(pool), disabled: false, window: VecDeque::new() }
+    }
+
+    /// Record one draft/verify cycle's outcome.
+    pub fn note_cycle(&mut self, proposed: usize, accepted: usize) {
+        if self.window.len() == ACCEPT_WINDOW {
+            self.window.pop_front();
+        }
+        self.window.push_back((proposed as u32, accepted as u32));
+    }
+
+    /// Rolling acceptance below [`MIN_ACCEPT`] over a FULL window — a
+    /// short history never collapses, so warm-up misses don't disable a
+    /// draft that would have found its footing.
+    pub fn collapsed(&self) -> bool {
+        if self.window.len() < ACCEPT_WINDOW {
+            return false;
+        }
+        let (prop, acc) = self
+            .window
+            .iter()
+            .fold((0u64, 0u64), |(p, a), &(cp, ca)| (p + cp as u64, a + ca as u64));
+        prop > 0 && (acc as f64 / prop as f64) < MIN_ACCEPT
+    }
+}
+
+/// The acceptance walk over one sequence's verify-chunk logits.
+///
+/// `logits` rows `row0 .. row0 + proposals.len() + 1` are the target's
+/// next-token distributions after consuming the chunk prefix of that
+/// length (row `row0 + j` follows `proposals[..j]`).  Emits the target's
+/// own pick at every reached position — accepting while it equals the
+/// draft's proposal, emitting the mismatch draw as the correction, and
+/// emitting the bonus row when every proposal was accepted — so the
+/// returned tokens are exactly the next tokens non-speculative decode
+/// would have produced.  The rng stream advances once per emitted token
+/// and never for positions past a rejection.  Stops early at `stop` or
+/// after `remaining` tokens.  Returns `(emitted tokens, proposals
+/// accepted)`; always emits at least one token when `remaining >= 1`.
+pub fn accept_tokens(
+    logits: &Tensor,
+    row0: usize,
+    proposals: &[i32],
+    sampling: Option<&SamplingParams>,
+    mut rng: Option<&mut Rng>,
+    remaining: usize,
+    stop: Option<i32>,
+) -> (Vec<i32>, usize) {
+    let k = proposals.len();
+    let mut emitted = Vec::with_capacity(k + 1);
+    let mut accepted = 0usize;
+    for (j, &prop) in proposals.iter().chain(std::iter::once(&0)).enumerate() {
+        if emitted.len() >= remaining {
+            break;
+        }
+        let tok = pick(logits.row(row0 + j), sampling, rng.as_deref_mut());
+        emitted.push(tok);
+        if j < k && tok == prop {
+            accepted += 1;
+            if stop == Some(tok) {
+                break;
+            }
+        } else {
+            // Mismatch correction (j < k) or the bonus token (j == k):
+            // either way the cycle ends with this target-picked token.
+            break;
+        }
+    }
+    (emitted, accepted)
+}
+
+/// Outcome of one speculative generation run.
+pub struct SpecGenReport {
+    pub gen: GenReport,
+    /// Draft tokens proposed / accepted across the run.
+    pub proposed: usize,
+    pub accepted: usize,
+    /// Wall seconds spent in draft forwards (the speculation overhead).
+    pub draft_secs: f64,
+}
+
+impl SpecGenReport {
+    /// Accepted fraction of proposed draft tokens; 0.0 when nothing was
+    /// proposed (the `k = 0` baseline).
+    pub fn acceptance(&self) -> f64 {
+        if self.proposed == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.proposed as f64
+    }
+
+    /// Fraction of total wall time spent drafting.
+    pub fn draft_overhead(&self) -> f64 {
+        if self.gen.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.draft_secs / self.gen.wall_secs
+    }
+}
+
+/// Speculative twin of [`crate::serve::decode::generate_paged`]: extend
+/// `prompt` (B, T0) by `max_new` tokens, drafting `k` greedy proposals
+/// per cycle on `draft` and verifying them in one multi-position target
+/// chunk.  Token streams are **bitwise identical** to
+/// `generate`/`generate_paged` at every `k` and block size
+/// (`tests/spec.rs`); `k = 0` degenerates to plain paged decode (the
+/// verify chunk is just the newest token).  Sequence `i` draws from
+/// `seq_rng(params.seed, i)` exactly like the non-speculative paths.
+pub fn generate_speculative(
+    target: &PackedModel,
+    draft: &PackedModel,
+    prompt: &IntTensor,
+    max_new: usize,
+    sampling: Option<&SamplingParams>,
+    block_size: usize,
+    k: usize,
+) -> Result<SpecGenReport> {
+    if prompt.shape().len() != 2 || prompt.shape()[0] == 0 || prompt.shape()[1] == 0 {
+        return Err(Error::shape("generate_speculative wants a non-empty (B, T0) prompt"));
+    }
+    let (b, t0) = (prompt.shape()[0], prompt.shape()[1]);
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|i| prompt.data()[i * t0..(i + 1) * t0].to_vec())
+        .collect();
+    let start = Instant::now();
+    let mut proposed = 0usize;
+    let mut accepted = 0usize;
+    let mut draft_secs = 0.0f64;
+    if max_new > 0 {
+        let bs = block_size.max(1);
+        // Worst-case span per sequence: the committed stream plus one
+        // in-flight verify chunk (k proposals + the bonus position).
+        let per_seq = (t0 + max_new + k + 1).div_ceil(bs) + 1;
+        let tcfg = &target.cfg;
+        let dcfg = &draft.cfg;
+        let mut tpool = BlockPool::new(tcfg.n_layers, tcfg.d_model, bs, b * per_seq);
+        let mut dpool = BlockPool::new(dcfg.n_layers, dcfg.d_model, bs, b * per_seq);
+        for (bi, row) in rows.iter_mut().enumerate() {
+            let mut rng = sampling.map(|p| seq_rng(p.seed, bi));
+            let mut tc = PagedKvCache::new(&tpool);
+            let mut dc = PagedKvCache::new(&dpool);
+            // Prefill + first token, exactly like the plain paths.
+            let logits = target.forward_chunk_paged(&row[..], &mut tc, &mut tpool)?;
+            let tok = pick(logits.row(t0 - 1), sampling, rng.as_mut());
+            row.push(tok);
+            let mut emitted = 1usize;
+            while emitted < max_new {
+                let remaining = max_new - emitted;
+                let k_eff = k.min(remaining - 1);
+                // -- draft: catch up on tokens it hasn't seen, propose --
+                let mut props: Vec<i32> = Vec::with_capacity(k_eff);
+                if k_eff > 0 {
+                    let d0 = Instant::now();
+                    let suffix = &row[dc.len()..];
+                    let dl = draft.forward_chunk_paged(suffix, &mut dc, &mut dpool)?;
+                    props.push(argmax(dl.row(suffix.len() - 1)) as i32);
+                    while props.len() < k_eff {
+                        let last = [*props.last().expect("non-empty proposals")];
+                        let mut refs = vec![&mut dc];
+                        let dl = draft.forward_step_paged(&last, &mut refs, &mut dpool)?;
+                        props.push(argmax(dl.row(0)) as i32);
+                    }
+                    draft_secs += d0.elapsed().as_secs_f64();
+                }
+                // -- target: one multi-position verify chunk --
+                let mut chunk = vec![*row.last().expect("prompt is non-empty")];
+                chunk.extend_from_slice(&props);
+                let vl = target.forward_chunk_paged(&chunk, &mut tc, &mut tpool)?;
+                let (toks, acc) =
+                    accept_tokens(&vl, 0, &props, sampling, rng.as_mut(), remaining, None);
+                proposed += props.len();
+                accepted += acc;
+                emitted += toks.len();
+                row.extend_from_slice(&toks);
+                // -- rollback: pop the rejected positions --
+                tc.truncate(row.len() - 1, &mut tpool);
+                dc.truncate(row.len() - 1, &mut dpool);
+            }
+            tc.release_all(&mut tpool);
+            dc.release_all(&mut dpool);
+        }
+    }
+    Ok(SpecGenReport {
+        gen: GenReport {
+            tokens: rows,
+            prompt_len: t0,
+            new_tokens: max_new,
+            wall_secs: start.elapsed().as_secs_f64(),
+        },
+        proposed,
+        accepted,
+        draft_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logit_rows(rows: &[&[f32]]) -> Tensor {
+        let v = rows[0].len();
+        let mut t = Tensor::zeros(&[rows.len(), v]);
+        for (i, r) in rows.iter().enumerate() {
+            t.data_mut()[i * v..(i + 1) * v].copy_from_slice(r);
+        }
+        t
+    }
+
+    #[test]
+    fn greedy_accept_walk() {
+        // argmax rows: 2, 0, 1 — proposals [2, 0]: both accepted + bonus.
+        let l = logit_rows(&[&[0.0, 1.0, 5.0], &[9.0, 1.0, 2.0], &[0.0, 7.0, 2.0]]);
+        let (toks, acc) = accept_tokens(&l, 0, &[2, 0], None, None, 10, None);
+        assert_eq!(toks, vec![2, 0, 1], "all accepted + bonus token");
+        assert_eq!(acc, 2);
+
+        // first proposal wrong: the target's argmax is the correction.
+        let (toks, acc) = accept_tokens(&l, 0, &[1, 0], None, None, 10, None);
+        assert_eq!(toks, vec![2], "mismatch emits the target pick and stops");
+        assert_eq!(acc, 0);
+
+        // second proposal wrong.
+        let (toks, acc) = accept_tokens(&l, 0, &[2, 1], None, None, 10, None);
+        assert_eq!(toks, vec![2, 0]);
+        assert_eq!(acc, 1);
+    }
+
+    #[test]
+    fn accept_respects_remaining_and_stop() {
+        let l = logit_rows(&[&[0.0, 1.0, 5.0], &[9.0, 1.0, 2.0], &[0.0, 7.0, 2.0]]);
+        let (toks, acc) = accept_tokens(&l, 0, &[2, 0], None, None, 1, None);
+        assert_eq!(toks, vec![2], "remaining caps the cycle");
+        assert_eq!(acc, 1);
+
+        // an accepted token that is the stop token ends the cycle there
+        let (toks, acc) = accept_tokens(&l, 0, &[2, 0], None, None, 10, Some(2));
+        assert_eq!(toks, vec![2]);
+        assert_eq!(acc, 1);
+        // a corrected token that is the stop token also ends it
+        let (toks, _) = accept_tokens(&l, 0, &[1, 0], None, None, 10, Some(2));
+        assert_eq!(toks, vec![2]);
+    }
+
+    #[test]
+    fn empty_proposals_is_a_plain_step() {
+        let l = logit_rows(&[&[0.0, 1.0, 5.0]]);
+        let (toks, acc) = accept_tokens(&l, 0, &[], None, None, 4, None);
+        assert_eq!(toks, vec![2], "k = 0 emits exactly the target pick");
+        assert_eq!(acc, 0);
+    }
+
+    #[test]
+    fn rolling_window_collapse() {
+        let pool = BlockPool::new(1, 2, 4, 4);
+        let mut d = DraftState::new(&pool);
+        for _ in 0..ACCEPT_WINDOW - 1 {
+            d.note_cycle(4, 0);
+            assert!(!d.collapsed(), "short history never collapses");
+        }
+        d.note_cycle(4, 0);
+        assert!(d.collapsed(), "a full window of rejections collapses");
+        // a healthy stretch pushes the bad cycles out of the window
+        for _ in 0..ACCEPT_WINDOW {
+            d.note_cycle(4, 4);
+        }
+        assert!(!d.collapsed());
+    }
+}

@@ -152,6 +152,7 @@ fn shared_prefix_decode_is_bitwise_and_uses_fewer_blocks() {
         max_prompt: 64,
         kv_block: 4,
         kv_blocks_total: 0,
+        ..SchedConfig::default()
     };
 
     let mut sched = Scheduler::new(&model, cfg);
@@ -218,6 +219,7 @@ fn mid_flight_admission_shares_unaligned_prefix_with_cow() {
         max_prompt: 64,
         kv_block: 4,
         kv_blocks_total: 0,
+        ..SchedConfig::default()
     };
 
     let mut sched = Scheduler::new(&model, cfg);
@@ -258,6 +260,7 @@ fn admission_backs_off_when_blocks_exhausted_and_recovers() {
         max_prompt: 16,
         kv_block: 4,
         kv_blocks_total: 4,
+        ..SchedConfig::default()
     };
     let pa = tiny_prompt(1, 10, 70).data().to_vec();
     let mut pb = tiny_prompt(1, 10, 71).data().to_vec();
@@ -295,6 +298,7 @@ fn oversized_prompt_on_idle_pool_is_rejected_not_livelocked() {
         max_prompt: 16,
         kv_block: 4,
         kv_blocks_total: 2,
+        ..SchedConfig::default()
     };
     let prompt = tiny_prompt(1, 10, 90).data().to_vec();
     let mut sched = Scheduler::new(&model, cfg);
@@ -318,6 +322,7 @@ fn decode_exhaustion_finishes_with_capacity_not_batch_failure() {
         max_prompt: 12,
         kv_block: 4,
         kv_blocks_total: 3,
+        ..SchedConfig::default()
     };
     let prompt = tiny_prompt(1, 10, 80).data().to_vec();
     let mut sched = Scheduler::new(&model, cfg);

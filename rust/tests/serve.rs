@@ -378,6 +378,7 @@ fn server_streams_concurrent_requests() {
         temperature: 0.0,
         seed: 77,
         shutdown_after: false,
+        transcript: None,
     })
     .unwrap();
     assert_eq!(report.completed, 8, "all streams must complete");
@@ -466,6 +467,7 @@ fn server_shares_identical_prompt_prefixes() {
             max_prompt: 64,
             kv_block: 4,
             kv_blocks_total: 0,
+            ..SchedConfig::default()
         },
         allow_remote_shutdown: true,
     };
@@ -487,6 +489,7 @@ fn server_shares_identical_prompt_prefixes() {
         temperature: 0.0,
         seed: 99,
         shutdown_after: false,
+        transcript: None,
     })
     .unwrap();
     assert_eq!(report.completed, 6);

@@ -1,0 +1,462 @@
+//! Speculative decoding tests: the draft/verify engine must emit
+//! **bitwise identical** token streams to plain decode (greedy AND
+//! seeded sampling, every block size, every k), the KV rollback
+//! primitives must free emptied tail pages without disturbing CoW
+//! sharers, and the scheduler must fall back per sequence when the
+//! draft pool is exhausted or acceptance collapses.  Everything runs
+//! without artifacts or PJRT.
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::PackedModel;
+use repro::model::{ParamStore, TINY};
+use repro::quant::QuantSpec;
+use repro::serve::decode::{generate, generate_paged};
+use repro::serve::scheduler::{FinishReason, GenRequest, StepEvent};
+use repro::serve::spec::generate_speculative;
+use repro::serve::{BlockPool, PagedKvCache, SamplingParams, SchedConfig, Scheduler};
+use repro::tensor::{IntTensor, Rng, Tensor};
+use std::sync::Arc;
+
+/// Open-clip qparams with live (random) LoRA B so adapters contribute.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+fn packed_tiny(seed: u64) -> PackedModel {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(seed);
+    let qp = open_qparams_with_lora(spec, 4, seed ^ 0xAD);
+    PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap()
+}
+
+fn tiny_prompt(batch: usize, len: usize, seed: u64) -> IntTensor {
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, seed);
+    Batcher::new(batch, len).lm_batch(&corpus, &mut Rng::new(seed ^ 0x77)).tokens
+}
+
+// ---------------------------------------------------------------------------
+// speculative == plain decode, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculative_greedy_matches_plain_across_block_sizes_and_k() {
+    let model = packed_tiny(3);
+    let draft = model.prefix_cut(2).unwrap();
+    let prompt = tiny_prompt(2, 9, 15);
+    let flat = generate(&model, &prompt, 12, None).unwrap();
+    for bs in [1usize, 7, 64] {
+        let paged = generate_paged(&model, &prompt, 12, None, bs).unwrap();
+        assert_eq!(paged.tokens, flat.tokens);
+        for k in [1usize, 4, 8] {
+            let spec = generate_speculative(&model, &draft, &prompt, 12, None, bs, k).unwrap();
+            assert_eq!(
+                spec.gen.tokens, flat.tokens,
+                "speculative greedy (bs {bs}, k {k}) must be bit-identical to plain decode"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_sampling_matches_plain_across_block_sizes_and_k() {
+    let model = packed_tiny(7);
+    let draft = model.prefix_cut(2).unwrap();
+    let prompt = tiny_prompt(2, 6, 19);
+    let p = SamplingParams { temperature: 0.9, top_k: 50, top_p: 0.95, seed: 123 };
+    let flat = generate(&model, &prompt, 10, Some(&p)).unwrap();
+    for bs in [1usize, 7, 64] {
+        for k in [1usize, 4, 8] {
+            let spec =
+                generate_speculative(&model, &draft, &prompt, 10, Some(&p), bs, k).unwrap();
+            assert_eq!(
+                spec.gen.tokens, flat.tokens,
+                "the target's rng stream must advance exactly once per emitted token \
+                 (bs {bs}, k {k})"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_with_disagreeing_draft_is_still_bitwise() {
+    // A draft with completely different weights proposes near-garbage;
+    // the verify loop must reject its way to the exact plain stream.
+    let model = packed_tiny(11);
+    let garbage_draft = packed_tiny(99);
+    let prompt = tiny_prompt(1, 8, 23);
+    let want = generate(&model, &prompt, 16, None).unwrap();
+    let spec = generate_speculative(&model, &garbage_draft, &prompt, 16, None, 4, 4).unwrap();
+    assert_eq!(spec.gen.tokens, want.tokens);
+    assert!(spec.proposed > 0, "the draft did propose");
+    assert!(
+        spec.accepted <= spec.proposed,
+        "sanity: acceptance counts proposals"
+    );
+}
+
+#[test]
+fn full_depth_self_draft_accepts_every_greedy_proposal() {
+    // prefix_cut at full depth IS the target: greedy proposals always
+    // equal the target argmax, so every proposal is accepted and each
+    // cycle emits k+1 tokens.
+    let model = packed_tiny(13);
+    let draft = model.prefix_cut(TINY.n_layers).unwrap();
+    let prompt = tiny_prompt(1, 6, 29);
+    let want = generate(&model, &prompt, 15, None).unwrap();
+    let spec = generate_speculative(&model, &draft, &prompt, 15, None, 8, 4).unwrap();
+    assert_eq!(spec.gen.tokens, want.tokens);
+    assert!(spec.proposed > 0);
+    assert_eq!(
+        spec.accepted, spec.proposed,
+        "an identical draft must never be rejected under greedy decode"
+    );
+}
+
+#[test]
+fn k_zero_degenerates_to_plain_paged_decode() {
+    let model = packed_tiny(17);
+    let draft = model.prefix_cut(1).unwrap();
+    let prompt = tiny_prompt(1, 5, 31);
+    let want = generate(&model, &prompt, 8, None).unwrap();
+    let spec = generate_speculative(&model, &draft, &prompt, 8, None, 4, 0).unwrap();
+    assert_eq!(spec.gen.tokens, want.tokens);
+    assert_eq!(spec.proposed, 0, "k = 0 never consults the draft");
+    assert_eq!(spec.draft_secs, 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// KV rollback primitives
+// ---------------------------------------------------------------------------
+
+fn rows(d: usize, t: usize, base: f32) -> Vec<f32> {
+    (0..t * d).map(|i| base + i as f32).collect()
+}
+
+#[test]
+fn truncate_frees_emptied_tail_pages() {
+    let (layers, d, bs) = (1usize, 2usize, 4usize);
+    let mut pool = BlockPool::new(layers, d, bs, 8);
+    let mut c = PagedKvCache::new(&pool);
+    c.reserve(10, &mut pool).unwrap();
+    let k = rows(d, 10, 0.0);
+    c.write_rows(&mut pool, 0, &k, &k).unwrap();
+    c.advance(10);
+    assert_eq!(c.n_blocks(), 3);
+    assert_eq!(pool.stats().used_blocks, 3);
+
+    // 10 -> 5 positions: page 3 empties and returns to the free list,
+    // page 2 keeps slot 0 committed.
+    c.truncate(5, &mut pool);
+    assert_eq!(c.len(), 5);
+    assert_eq!(c.n_blocks(), 2);
+    assert_eq!(pool.stats().used_blocks, 2);
+    assert_eq!(pool.stats().free_blocks, 1);
+
+    // the surviving rows are untouched
+    let segs = c.segments(&pool, 0, 5);
+    assert_eq!(segs[0].0, &k[..4 * d]);
+    assert_eq!(segs[1].0, &k[4 * d..5 * d]);
+
+    // truncate at or past the current length is a no-op
+    c.truncate(5, &mut pool);
+    c.truncate(99, &mut pool);
+    assert_eq!(c.len(), 5);
+    assert_eq!(c.n_blocks(), 2);
+
+    // a page-boundary truncate keeps exactly the covering pages
+    c.truncate(4, &mut pool);
+    assert_eq!(c.n_blocks(), 1);
+
+    // re-growing after a rollback overwrites the garbage tail slots
+    c.reserve(6, &mut pool).unwrap();
+    let k2 = rows(d, 2, 500.0);
+    c.write_rows(&mut pool, 0, &k2, &k2).unwrap();
+    c.advance(2);
+    let segs = c.segments(&pool, 0, 6);
+    assert_eq!(&segs[1].0[..2 * d], &k2[..]);
+
+    // truncate(0) releases everything
+    c.truncate(0, &mut pool);
+    assert_eq!(c.len(), 0);
+    assert_eq!(c.n_blocks(), 0);
+    assert_eq!(pool.stats().used_blocks, 0);
+}
+
+#[test]
+fn truncate_of_shared_tail_drops_the_entry_without_scrubbing() {
+    let (layers, d, bs) = (1usize, 2usize, 4usize);
+    let mut pool = BlockPool::new(layers, d, bs, 8);
+    let mut a = PagedKvCache::new(&pool);
+    a.reserve(6, &mut pool).unwrap();
+    let k = rows(d, 6, 0.0);
+    a.write_rows(&mut pool, 0, &k, &k).unwrap();
+    a.advance(6);
+
+    // child maps both pages (full block 0 + partial tail block 1)
+    let b = PagedKvCache::fork_prefix(&a, 6, &mut pool).unwrap();
+    let tail = a.block_at(4);
+    assert_eq!(pool.ref_count(tail), 2);
+
+    // the parent rolls back into the shared tail: its entry is dropped,
+    // the refcount falls to 1, and the CHILD's rows are untouched.
+    a.truncate(3, &mut pool);
+    assert_eq!(a.n_blocks(), 1);
+    assert_eq!(pool.ref_count(tail), 1, "release, not scrub");
+    let segs = b.segments(&pool, 0, 6);
+    assert_eq!(segs[1].0, &k[4 * d..], "sharer still reads its committed rows");
+
+    // the parent re-appends: it must get a DIFFERENT page than the
+    // child's still-held tail (refcount 1 != free), and reserve CoWs
+    // the still-shared block 0 before the parent writes position 3.
+    a.reserve(6, &mut pool).unwrap();
+    assert_ne!(a.block_at(4), tail);
+    let k2 = rows(d, 3, 900.0);
+    a.write_rows(&mut pool, 0, &k2, &k2).unwrap();
+    a.advance(3);
+    let segs = b.segments(&pool, 0, 6);
+    assert_eq!(segs[0].0, &k[..4 * d], "parent's regrowth never touches the child");
+    assert_eq!(segs[1].0, &k[4 * d..]);
+
+    // and the reverse direction: a CHILD truncating away still-shared
+    // pages releases its entries while the parent keeps reading.
+    let mut pool = BlockPool::new(layers, d, bs, 8);
+    let mut a = PagedKvCache::new(&pool);
+    a.reserve(6, &mut pool).unwrap();
+    a.write_rows(&mut pool, 0, &k, &k).unwrap();
+    a.advance(6);
+    let mut b = PagedKvCache::fork_prefix(&a, 6, &mut pool).unwrap();
+    let (b0, b1) = (a.block_at(0), a.block_at(4));
+    assert_eq!((pool.ref_count(b0), pool.ref_count(b1)), (2, 2));
+    b.truncate(0, &mut pool);
+    assert_eq!((pool.ref_count(b0), pool.ref_count(b1)), (1, 1));
+    let segs = a.segments(&pool, 0, 6);
+    assert_eq!(segs[0].0, &k[..4 * d]);
+    assert_eq!(segs[1].0, &k[4 * d..]);
+}
+
+// ---------------------------------------------------------------------------
+// scheduler integration: bitwise streams, counters, fallbacks
+// ---------------------------------------------------------------------------
+
+fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+    GenRequest {
+        key,
+        id: format!("r{key}"),
+        prompt,
+        max_new,
+        sampling: None,
+        stop: None,
+        queued_at: std::time::Instant::now(),
+    }
+}
+
+fn drain(sched: &mut Scheduler<'_>) -> Vec<StepEvent> {
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to converge");
+    }
+    events
+}
+
+fn done_of(events: &[StepEvent], key: u64) -> Option<(&Vec<i32>, usize, FinishReason)> {
+    events.iter().find_map(|e| match e {
+        StepEvent::Done { key: k, tokens, prompt_len, finish, .. } if *k == key => {
+            Some((tokens, *prompt_len, *finish))
+        }
+        _ => None,
+    })
+}
+
+fn spec_cfg(speculate: usize) -> SchedConfig {
+    SchedConfig {
+        max_batch: 4,
+        max_new_cap: 64,
+        max_prompt: 64,
+        kv_block: 4,
+        speculate,
+        ..SchedConfig::default()
+    }
+}
+
+#[test]
+fn scheduler_speculation_is_bitwise_and_counts_acceptance() {
+    let model = packed_tiny(37);
+    let draft = Arc::new(model.prefix_cut(2).unwrap());
+    let pa = tiny_prompt(1, 9, 41).data().to_vec();
+    let pb = tiny_prompt(1, 6, 42).data().to_vec();
+
+    let mut sched = Scheduler::with_draft(&model, spec_cfg(4), draft);
+    sched.submit(req(1, pa.clone(), 14));
+    let mut rb = req(2, pb.clone(), 10);
+    rb.sampling = Some(SamplingParams { temperature: 0.8, top_k: 40, top_p: 0.9, seed: 7 });
+    sched.submit(rb);
+    let events = drain(&mut sched);
+
+    // greedy request: equal to solo plain generation
+    let solo = IntTensor::new(vec![1, pa.len()], pa.clone()).unwrap();
+    let want = generate(&model, &solo, 14, None).unwrap();
+    let (tokens, _, finish) = done_of(&events, 1).expect("done");
+    assert_eq!(finish, FinishReason::Length);
+    assert_eq!(&want.tokens[0][..], &tokens[..], "speculation changed a greedy stream");
+
+    // sampled request: equal to solo seeded generation (scheduler seeds
+    // stream 0 for every request)
+    let p = SamplingParams { temperature: 0.8, top_k: 40, top_p: 0.9, seed: 7 };
+    let solo = IntTensor::new(vec![1, pb.len()], pb.clone()).unwrap();
+    let want = generate(&model, &solo, 10, Some(&p)).unwrap();
+    let (tokens, _, _) = done_of(&events, 2).expect("done");
+    assert_eq!(&want.tokens[0][..], &tokens[..], "speculation changed a sampled stream");
+
+    // pool-wide counters moved and the per-request stats carry them
+    let s = sched.spec_stats().expect("speculating scheduler reports spec stats");
+    assert!(s.proposed > 0, "drafting happened");
+    assert!(s.cycles > 0);
+    let per_req: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Done { stats, .. } => Some(stats.spec_proposed),
+            _ => None,
+        })
+        .collect();
+    assert!(per_req.iter().any(|&p| p > 0), "done stats carry spec counters");
+
+    // every page reclaimed on both pools
+    assert_eq!(sched.kv_stats().used_blocks, 0);
+    assert_eq!(s.draft_kv.used_blocks, 0, "draft pages drain with their sequences");
+    assert!(s.draft_kv.peak_resident_blocks > 0, "the draft did hold KV");
+}
+
+#[test]
+fn scheduler_speculation_matches_full_depth_draft_throughput_invariants() {
+    // Full-depth self-draft: greedy acceptance is total, so the stream
+    // arrives in fewer scheduler steps than tokens — the observable
+    // speedup — while staying bitwise identical.
+    let model = packed_tiny(43);
+    let draft = Arc::new(model.prefix_cut(TINY.n_layers).unwrap());
+    let prompt = tiny_prompt(1, 6, 44).data().to_vec();
+
+    let mut sched = Scheduler::with_draft(&model, spec_cfg(4), draft);
+    sched.submit(req(1, prompt.clone(), 13));
+    let mut steps = 0usize;
+    let mut events = Vec::new();
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        steps += 1;
+        assert!(steps < 1000);
+    }
+    let solo = IntTensor::new(vec![1, prompt.len()], prompt).unwrap();
+    let want = generate(&model, &solo, 13, None).unwrap();
+    let (tokens, _, _) = done_of(&events, 1).expect("done");
+    assert_eq!(&want.tokens[0][..], &tokens[..]);
+    let s = sched.spec_stats().unwrap();
+    assert_eq!(s.accepted, s.proposed, "identical draft, greedy: full acceptance");
+    assert!(
+        steps < 13,
+        "k=4 full acceptance must emit 13 tokens in fewer than 13 steps (took {steps})"
+    );
+}
+
+#[test]
+fn acceptance_collapse_falls_back_to_plain_decode() {
+    // A garbage draft (different weights entirely) gets ~chance-level
+    // acceptance; after a full rolling window the sequence must stop
+    // speculating, finish on the plain path, and still be bitwise right.
+    let model = packed_tiny(47);
+    let garbage = Arc::new(packed_tiny(101));
+    let prompt = tiny_prompt(1, 8, 48).data().to_vec();
+
+    let mut sched = Scheduler::with_draft(&model, spec_cfg(4), garbage);
+    sched.submit(req(1, prompt.clone(), 32));
+    let events = drain(&mut sched);
+
+    let solo = IntTensor::new(vec![1, prompt.len()], prompt).unwrap();
+    let want = generate(&model, &solo, 32, None).unwrap();
+    let (tokens, _, finish) = done_of(&events, 1).expect("done");
+    assert_eq!(finish, FinishReason::Length);
+    assert_eq!(&want.tokens[0][..], &tokens[..]);
+
+    let s = sched.spec_stats().unwrap();
+    assert!(
+        s.fallbacks >= 1,
+        "chance-level acceptance must trip the collapse fallback (acceptance {:.3})",
+        s.accepted as f64 / s.proposed.max(1) as f64
+    );
+    assert_eq!(s.draft_kv.used_blocks, 0, "fallback released the draft pages");
+}
+
+#[test]
+fn draft_pool_exhaustion_falls_back_to_plain_decode() {
+    // One 4-position draft page can never hold a 10-token prompt: the
+    // very first cycle falls back, and the request still completes
+    // bitwise identical on the plain path.
+    let model = packed_tiny(53);
+    let draft = Arc::new(model.prefix_cut(2).unwrap());
+    let mut cfg = spec_cfg(4);
+    cfg.draft_kv_blocks_total = 1;
+    let prompt = tiny_prompt(1, 10, 54).data().to_vec();
+
+    let mut sched = Scheduler::with_draft(&model, cfg, draft);
+    sched.submit(req(1, prompt.clone(), 8));
+    let events = drain(&mut sched);
+
+    let solo = IntTensor::new(vec![1, prompt.len()], prompt).unwrap();
+    let want = generate(&model, &solo, 8, None).unwrap();
+    let (tokens, _, _) = done_of(&events, 1).expect("done");
+    assert_eq!(&want.tokens[0][..], &tokens[..]);
+
+    let s = sched.spec_stats().unwrap();
+    assert!(s.fallbacks >= 1, "draft pool exhaustion must fall back");
+    assert_eq!(s.proposed, 0, "nothing was ever drafted");
+    assert_eq!(s.draft_kv.used_blocks, 0);
+}
+
+#[test]
+fn stop_token_mid_speculative_cycle_ends_the_stream_exactly() {
+    // Use the plain 3rd generated token as the stop: wherever that value
+    // first fires, the speculative scheduler must emit exactly the
+    // stream a NON-speculative scheduler emits and stop the same way —
+    // even when its verify chunk ran past the stop position.
+    let model = packed_tiny(59);
+    let draft = Arc::new(model.prefix_cut(TINY.n_layers).unwrap());
+    let prompt = tiny_prompt(1, 5, 60).data().to_vec();
+    let solo = IntTensor::new(vec![1, prompt.len()], prompt.clone()).unwrap();
+    let stop = generate(&model, &solo, 3, None).unwrap().tokens[0][prompt.len() + 2];
+
+    let mut plain = Scheduler::new(&model, spec_cfg(0));
+    let mut r = req(1, prompt.clone(), 16);
+    r.stop = Some(stop);
+    plain.submit(r);
+    let plain_events = drain(&mut plain);
+    let (want_tokens, _, want_finish) = done_of(&plain_events, 1).expect("plain done");
+
+    let mut sched = Scheduler::with_draft(&model, spec_cfg(4), draft);
+    let mut r = req(1, prompt.clone(), 16);
+    r.stop = Some(stop);
+    sched.submit(r);
+    let events = drain(&mut sched);
+    let (tokens, _, finish) = done_of(&events, 1).expect("done");
+    assert_eq!(finish, want_finish);
+    assert_eq!(finish, FinishReason::Stop, "the stop token fires within 16 tokens");
+    assert_eq!(
+        &tokens[..],
+        &want_tokens[..],
+        "stream must end exactly at the stop token even when the verify \
+         chunk ran past it"
+    );
+    assert_eq!(sched.kv_stats().used_blocks, 0);
+}
