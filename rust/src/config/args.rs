@@ -13,6 +13,9 @@ pub struct Args {
     pub command: String,
     pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in order — `flags` keeps only the
+    /// last one per key, this keeps them all for repeatable flags.
+    occurrences: Vec<(String, String)>,
     bools: Vec<String>,
 }
 
@@ -29,9 +32,11 @@ impl Args {
             if let Some(name) = item.strip_prefix("--") {
                 // --key=value or --key value or --bool-flag
                 if let Some((k, v)) = name.split_once('=') {
+                    out.occurrences.push((k.to_string(), v.to_string()));
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let v = it.next().unwrap();
+                    out.occurrences.push((name.to_string(), v.clone()));
                     out.flags.insert(name.to_string(), v);
                 } else {
                     out.bools.push(name.to_string());
@@ -51,6 +56,16 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
+    }
+
+    /// All values of a repeatable flag, in command-line order
+    /// (`--adapter a=1 --adapter b=2` -> `["a=1", "b=2"]`).
+    pub fn all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
@@ -136,6 +151,15 @@ mod tests {
         let a = parse("x --bits 2,3,4 --methods apiq-bw,loftq");
         assert_eq!(a.u32_list_or("bits", &[]).unwrap(), vec![2, 3, 4]);
         assert_eq!(a.list_or("methods", &[]), vec!["apiq-bw", "loftq"]);
+    }
+
+    #[test]
+    fn repeatable_flags_keep_every_occurrence() {
+        let a = parse("serve --adapter a=one.apq --adapter=b=two.apq --addr :0");
+        assert_eq!(a.all("adapter"), vec!["a=one.apq", "b=two.apq"]);
+        // last occurrence wins for the scalar accessors
+        assert_eq!(a.get("adapter"), Some("b=two.apq"));
+        assert!(a.all("missing").is_empty());
     }
 
     #[test]

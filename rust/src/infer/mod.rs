@@ -26,7 +26,7 @@
 //! path's KV capacity and indexed by absolute position, so flat, paged,
 //! and full-forward paths all read the same sin/cos bits.
 
-use std::sync::{RwLock, RwLockReadGuard};
+use std::sync::{Arc, RwLock, RwLockReadGuard};
 
 use crate::error::{Error, Result};
 use crate::model::{LinearKind, ModelConfig, ParamStore};
@@ -49,6 +49,119 @@ pub struct Adapter {
     pub col_scale: Option<Vec<f32>>,
 }
 
+impl Adapter {
+    /// Low-rank rank r (columns of A).
+    pub fn rank(&self) -> usize {
+        if self.a.shape().len() == 2 {
+            self.a.shape()[1]
+        } else {
+            0
+        }
+    }
+
+    /// f32 bytes resident for this adapter's tensors.
+    pub fn resident_bytes(&self) -> usize {
+        (self.a.len() + self.b_t.len()) * 4
+            + self.col_scale.as_ref().map(|c| c.len() * 4).unwrap_or(0)
+    }
+
+    /// Add this adapter's contribution to a projection output `y`
+    /// (n, d_out) computed from input rows `x` (n, d_in):
+    /// `y += scale·(x·A)·Bᵀ`, then DoRA's per-output-column rescale.
+    /// The operation order is load-bearing — base GEMM, elementwise
+    /// low-rank add, column rescale — because the baked-in adapter path
+    /// this refactor replaced computed it exactly this way, and the
+    /// serving tests pin bitwise identity against it.
+    pub fn apply(&self, x: &Tensor, y: &mut Tensor) -> Result<()> {
+        let low = x.matmul(&self.a)?.matmul(&self.b_t)?; // (n, d_out)
+        for (yv, lv) in y.data_mut().iter_mut().zip(low.data()) {
+            *yv += self.scale * lv;
+        }
+        if let Some(cs) = &self.col_scale {
+            for row in y.data_mut().chunks_mut(cs.len()) {
+                for (v, &c) in row.iter_mut().zip(cs.iter()) {
+                    *v *= c;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Number of adapted linears per block; slot order is fixed as
+/// wq, wk, wv, wo, wgate, wup, wdown (shared with `model::checkpoint`).
+pub const ADAPTER_SLOTS: usize = 7;
+pub const SLOT_WQ: usize = 0;
+pub const SLOT_WK: usize = 1;
+pub const SLOT_WV: usize = 2;
+pub const SLOT_WO: usize = 3;
+pub const SLOT_WGATE: usize = 4;
+pub const SLOT_WUP: usize = 5;
+pub const SLOT_WDOWN: usize = 6;
+
+/// A named set of LoRA/DoRA adapters over one frozen base: at most one
+/// [`Adapter`] per (block, linear) pair.  Adapters no longer live inside
+/// [`PackedLayer`] — every forward path resolves a set per call (or per
+/// sequence, in the batched decode paths), so one packed 2-bit base can
+/// serve many adapters at once.
+#[derive(Clone)]
+pub struct AdapterSet {
+    pub name: String,
+    /// `layers[block][slot]`, slot order wq, wk, wv, wo, wgate, wup, wdown.
+    pub layers: Vec<[Option<Adapter>; ADAPTER_SLOTS]>,
+}
+
+impl AdapterSet {
+    /// The adapter for `(block, slot)`, if that linear is adapted.
+    pub fn get(&self, block: usize, slot: usize) -> Option<&Adapter> {
+        self.layers.get(block).and_then(|arr| arr[slot].as_ref())
+    }
+
+    /// True when no linear in any block carries an adapter.
+    pub fn is_empty(&self) -> bool {
+        self.layers
+            .iter()
+            .all(|arr| arr.iter().all(|a| a.is_none()))
+    }
+
+    /// Largest low-rank r across the set (0 when empty).
+    pub fn rank(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|arr| arr.iter().flatten())
+            .map(|a| a.rank())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Number of adapted (block, linear) pairs.
+    pub fn n_adapted(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|arr| arr.iter().filter(|a| a.is_some()).count())
+            .sum()
+    }
+
+    /// f32 bytes resident for every adapter tensor in the set.
+    pub fn resident_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|arr| arr.iter().flatten())
+            .map(|a| a.resident_bytes())
+            .sum()
+    }
+
+    /// The set restricted to the first `n` blocks — pairs with
+    /// [`PackedModel::prefix_cut`] so a self-draft keeps the adapters of
+    /// the layers it retains.
+    pub fn prefix_cut(&self, n: usize) -> AdapterSet {
+        AdapterSet {
+            name: self.name.clone(),
+            layers: self.layers[..n.min(self.layers.len())].to_vec(),
+        }
+    }
+}
+
 /// Storage form of one linear's base weight.
 #[derive(Clone)]
 pub enum LayerWeight {
@@ -58,56 +171,39 @@ pub enum LayerWeight {
     Dense(Tensor),
 }
 
-/// One servable linear: base weight + optional adapter.
+/// One servable linear: the frozen base weight.  Adapters are resolved
+/// per call from an [`AdapterSet`] so the same packed payload serves any
+/// number of `(base, adapter)` pairings.
 #[derive(Clone)]
 pub struct PackedLayer {
     pub weight: LayerWeight,
-    pub adapter: Option<Adapter>,
 }
 
 impl PackedLayer {
-    /// y = x @ W' for x (n, d_in), where W' includes the adapter and, for
-    /// DoRA, the column rescale.  Packed weights go through
+    /// y = x @ W' for x (n, d_in), where W' includes `adapter` (if any)
+    /// and, for DoRA, the column rescale.  Packed weights go through
     /// `matvec_fused`, which runs the GEMV-specialized kernel for
     /// decode-shaped inputs (`n <= 4`) and falls back to the panel path
     /// for wider ones — output is bitwise identical either way (see
     /// `kernels`), so cached decode still reproduces the full forward
     /// exactly.
-    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+    pub fn forward(&self, x: &Tensor, adapter: Option<&Adapter>) -> Result<Tensor> {
         let mut y = match &self.weight {
             LayerWeight::Packed(pl) => pl.matvec_fused(x)?,
             LayerWeight::Dense(w) => x.matmul(w)?,
         };
-        if let Some(ad) = &self.adapter {
-            let low = x.matmul(&ad.a)?.matmul(&ad.b_t)?; // (n, d_out)
-            for (yv, lv) in y.data_mut().iter_mut().zip(low.data()) {
-                *yv += ad.scale * lv;
-            }
-            if let Some(cs) = &ad.col_scale {
-                for row in y.data_mut().chunks_mut(cs.len()) {
-                    for (v, &c) in row.iter_mut().zip(cs.iter()) {
-                        *v *= c;
-                    }
-                }
-            }
+        if let Some(ad) = adapter {
+            ad.apply(x, &mut y)?;
         }
         Ok(y)
     }
 
-    /// Bytes resident for this layer's weights + adapter.
+    /// Bytes resident for this layer's base weights.
     pub fn resident_bytes(&self) -> usize {
-        let w = match &self.weight {
+        match &self.weight {
             LayerWeight::Packed(pl) => pl.storage_bytes(),
             LayerWeight::Dense(t) => t.len() * 4,
-        };
-        let a = match &self.adapter {
-            Some(ad) => {
-                (ad.a.len() + ad.b_t.len()) * 4
-                    + ad.col_scale.as_ref().map(|c| c.len() * 4).unwrap_or(0)
-            }
-            None => 0,
-        };
-        w + a
+        }
     }
 
     fn weight_elems(&self) -> usize {
@@ -140,6 +236,10 @@ pub struct PackedModel {
     pub final_norm: Tensor,
     pub lm_head: Tensor,
     pub blocks: Vec<PackedBlock>,
+    /// The adapter set baked into the checkpoint/build (qparams LoRA/DoRA
+    /// tensors), applied whenever a caller does not route another set —
+    /// the pre-registry single-pairing behaviour, preserved bit for bit.
+    pub default_adapter: Option<Arc<AdapterSet>>,
     /// Shared precomputed RoPE sin/cos rows (grown once to the longest
     /// sequence seen); all forward paths index it by absolute position.
     pub(crate) rope: RopeCache,
@@ -336,7 +436,7 @@ fn build_layer(
     lin: LinearKind,
     spec: QuantSpec,
     scale: f32,
-) -> Result<PackedLayer> {
+) -> Result<(PackedLayer, Option<Adapter>)> {
     let (d_in, d_out) = cfg.linear_shape(lin);
     let w = params.require(&cfg.weight_key(block, lin))?;
     if w.shape() != [d_in, d_out] {
@@ -395,7 +495,7 @@ fn build_layer(
         }
     };
 
-    Ok(PackedLayer { weight, adapter })
+    Ok((PackedLayer { weight }, adapter))
 }
 
 impl PackedModel {
@@ -418,21 +518,45 @@ impl PackedModel {
         let final_norm = params.require("final_norm")?.clone();
         let lm_head = params.require("lm_head")?.clone();
         let mut blocks = Vec::with_capacity(cfg.n_layers);
+        let mut ad_layers: Vec<[Option<Adapter>; ADAPTER_SLOTS]> =
+            Vec::with_capacity(cfg.n_layers);
         for b in 0..cfg.n_layers {
             let lay = |lin: LinearKind| build_layer(&cfg, params, qparams, b, lin, spec, scale);
+            let (wq, aq) = lay(LinearKind::Wq)?;
+            let (wk, ak) = lay(LinearKind::Wk)?;
+            let (wv, av) = lay(LinearKind::Wv)?;
+            let (wo, ao) = lay(LinearKind::Wo)?;
+            let (wgate, agate) = lay(LinearKind::Wgate)?;
+            let (wup, aup) = lay(LinearKind::Wup)?;
+            let (wdown, adown) = lay(LinearKind::Wdown)?;
             blocks.push(PackedBlock {
                 attn_norm: params.require(&format!("blocks.{b}.attn_norm"))?.clone(),
                 ffn_norm: params.require(&format!("blocks.{b}.ffn_norm"))?.clone(),
-                wq: lay(LinearKind::Wq)?,
-                wk: lay(LinearKind::Wk)?,
-                wv: lay(LinearKind::Wv)?,
-                wo: lay(LinearKind::Wo)?,
-                wgate: lay(LinearKind::Wgate)?,
-                wup: lay(LinearKind::Wup)?,
-                wdown: lay(LinearKind::Wdown)?,
+                wq,
+                wk,
+                wv,
+                wo,
+                wgate,
+                wup,
+                wdown,
             });
+            ad_layers.push([aq, ak, av, ao, agate, aup, adown]);
         }
-        Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks, rope: RopeCache::new() })
+        let default_adapter = if ad_layers.iter().any(|arr| arr.iter().any(|a| a.is_some())) {
+            Some(Arc::new(AdapterSet { name: "builtin".to_string(), layers: ad_layers }))
+        } else {
+            None
+        };
+        Ok(PackedModel {
+            cfg,
+            spec,
+            embed,
+            final_norm,
+            lm_head,
+            blocks,
+            default_adapter,
+            rope: RopeCache::new(),
+        })
     }
 
     /// Build from any quantizer's `QuantResult`: in-graph quantizers
@@ -471,8 +595,9 @@ impl PackedModel {
             }
         }
 
-        for block in &self.blocks {
-            x = block.forward(&self.cfg, &x, b, t, &rope)?;
+        let set = self.default_adapter.as_deref();
+        for (li, block) in self.blocks.iter().enumerate() {
+            x = block.forward(&self.cfg, &x, b, t, &rope, li, set)?;
         }
 
         rmsnorm_rows(x.data_mut(), d, self.final_norm.data());
@@ -492,6 +617,9 @@ impl PackedModel {
             ] {
                 total += lay.resident_bytes();
             }
+        }
+        if let Some(set) = &self.default_adapter {
+            total += set.resident_bytes();
         }
         total
     }
@@ -519,15 +647,21 @@ impl PackedModel {
             final_norm: self.final_norm.clone(),
             lm_head: self.lm_head.clone(),
             blocks: self.blocks[..n_layers].to_vec(),
+            default_adapter: self
+                .default_adapter
+                .as_ref()
+                .map(|s| Arc::new(s.prefix_cut(n_layers))),
             rope: RopeCache::new(),
         })
     }
 
-    /// Were LoRA/DoRA adapters built into the serving path?
+    /// Were LoRA/DoRA adapters built into the serving path?  Scans every
+    /// (block, linear) slot of the default set — a set whose adapters sit
+    /// only on later blocks or non-wq projections still counts.
     pub fn has_adapters(&self) -> bool {
-        self.blocks
-            .first()
-            .map(|b| b.wq.adapter.is_some())
+        self.default_adapter
+            .as_ref()
+            .map(|s| !s.is_empty())
             .unwrap_or(false)
     }
 
@@ -559,6 +693,8 @@ impl PackedModel {
 
 impl PackedBlock {
     /// One block over x (b*t, d); returns the block output (b*t, d).
+    /// `li` is this block's index into `set` (the routed adapter set).
+    #[allow(clippy::too_many_arguments)]
     fn forward(
         &self,
         cfg: &ModelConfig,
@@ -566,17 +702,20 @@ impl PackedBlock {
         b: usize,
         t: usize,
         rope: &RopeView<'_>,
+        li: usize,
+        set: Option<&AdapterSet>,
     ) -> Result<Tensor> {
         let d = cfg.d_model;
         let h = cfg.n_heads;
         let hd = d / h;
+        let ad = |slot: usize| set.and_then(|s| s.get(li, slot));
 
         // -- attention branch --
         let mut attn_in = x.clone();
         rmsnorm_rows(attn_in.data_mut(), d, self.attn_norm.data());
-        let mut q = self.wq.forward(&attn_in)?;
-        let mut k = self.wk.forward(&attn_in)?;
-        let v = self.wv.forward(&attn_in)?;
+        let mut q = self.wq.forward(&attn_in, ad(SLOT_WQ))?;
+        let mut k = self.wk.forward(&attn_in, ad(SLOT_WK))?;
+        let v = self.wv.forward(&attn_in, ad(SLOT_WV))?;
         apply_rope(q.data_mut(), b, t, h, hd, rope);
         apply_rope(k.data_mut(), b, t, h, hd, rope);
 
@@ -620,19 +759,19 @@ impl PackedBlock {
                 }
             }
         }
-        let attn_out = self.wo.forward(&ctx)?;
+        let attn_out = self.wo.forward(&ctx, ad(SLOT_WO))?;
         let x1 = x.add(&attn_out)?;
 
         // -- FFN branch (SwiGLU) --
         let mut ffn_in = x1.clone();
         rmsnorm_rows(ffn_in.data_mut(), d, self.ffn_norm.data());
-        let mut hidden = self.wgate.forward(&ffn_in)?;
-        let up = self.wup.forward(&ffn_in)?;
+        let mut hidden = self.wgate.forward(&ffn_in, ad(SLOT_WGATE))?;
+        let up = self.wup.forward(&ffn_in, ad(SLOT_WUP))?;
         for (g, &u) in hidden.data_mut().iter_mut().zip(up.data()) {
             let gv = *g;
             *g = gv / (1.0 + (-gv).exp()) * u; // silu(gate) * up
         }
-        let ffn_out = self.wdown.forward(&hidden)?;
+        let ffn_out = self.wdown.forward(&hidden, ad(SLOT_WDOWN))?;
         x1.add(&ffn_out)
     }
 }
@@ -760,11 +899,9 @@ mod tests {
         let x = Tensor::randn(&[3, d_in], 1.0, &mut rng);
         let want = x.matmul(&merged).unwrap();
 
-        let layer = PackedLayer {
-            weight: LayerWeight::Dense(w.clone()),
-            adapter: Some(Adapter { a: a.clone(), b_t: b_t.clone(), scale, col_scale: None }),
-        };
-        let got = layer.forward(&x).unwrap();
+        let layer = PackedLayer { weight: LayerWeight::Dense(w.clone()) };
+        let lora = Adapter { a: a.clone(), b_t: b_t.clone(), scale, col_scale: None };
+        let got = layer.forward(&x, Some(&lora)).unwrap();
         let rel = got.sub(&want).unwrap().fro_norm() / want.fro_norm();
         assert!(rel < 1e-5, "lora rel {rel}");
 
@@ -778,11 +915,9 @@ mod tests {
             }
             col_scale[c] = mag / (s + 1e-8).sqrt();
         }
-        let dora = PackedLayer {
-            weight: LayerWeight::Dense(w),
-            adapter: Some(Adapter { a, b_t, scale, col_scale: Some(col_scale.clone()) }),
-        };
-        let got2 = dora.forward(&x).unwrap();
+        let dora_layer = PackedLayer { weight: LayerWeight::Dense(w) };
+        let dora = Adapter { a, b_t, scale, col_scale: Some(col_scale.clone()) };
+        let got2 = dora_layer.forward(&x, Some(&dora)).unwrap();
         for tr in 0..3 {
             for c in 0..d_out {
                 let expect = want.at2(tr, c) * col_scale[c];

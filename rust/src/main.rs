@@ -53,6 +53,9 @@ COMMANDS
   pack-ckpt  --size S --method M --bits B [--out P]  save the 2-bit serving
                                                      payload (packed codes +
                                                      scales + zeros + adapters)
+  pack-adapter --size S --method M [--name N]        save the adapter-ONLY
+               [--out P]                             sidecar (APIQADPT) for
+                                                     multi-adapter serving
   serve      [--packed P | --size S --method M]      long-lived token server
                                                      (newline-JSON over TCP,
                                                      continuous batching)
@@ -88,10 +91,17 @@ SERVE FLAGS
   --draft-config P                     draft from a packed checkpoint
                                        (must share the vocab)
   --draft-kv-blocks-total N (default: auto) draft-side KV page budget
+  --adapter NAME=PATH                  register a packed adapter sidecar
+                                       at boot (repeatable); requests
+                                       route with \"adapter\":\"NAME\"
 BENCH-SERVE FLAGS
   --clients N       (default: 4)      --requests N    (per client, default 2)
   --common-prefix N (default: 0)      first N prompt tokens identical
                                       across ALL requests (KV sharing)
+  --adapter-mix A:B:...                round-robin client i -> adapter
+                                       (\"-\" = baseline, no adapter)
+  --churn-adapter NAME=PATH            load/unload NAME mid-run over a
+                                       side connection (registry churn)
   --bench-out P     (default: BENCH_serve.json)
   --transcript P    (write sorted per-request token transcripts —
                      byte-comparable across runs/speculation settings)
@@ -383,6 +393,36 @@ fn run(args: Args) -> repro::Result<()> {
                 model.effective_bits()
             );
         }
+        "pack-adapter" => {
+            let cfg = ModelConfig::by_name(&size)?;
+            let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+            let model = build_native_model(
+                &artifacts, cfg, &params, &method, bits, group, rank, seed,
+            )?;
+            let set = model.default_adapter.as_deref().ok_or_else(|| {
+                repro::Error::config(format!(
+                    "method '{method}' carries no adapters — pack-adapter wants an \
+                     adapter-bearing method (e.g. qlora or loftq)"
+                ))
+            })?;
+            let mut set = set.clone();
+            set.name = args.str_or("name", &format!("{method}-r{rank}"));
+            let out = match args.get("out") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => checkpoint::adapter_path(&size, &method, rank, seed),
+            };
+            checkpoint::save_adapter(&set, model.cfg.name, &out)?;
+            println!(
+                "packed adapter '{}' for base {} (rank {}, {} adapted linears, \
+                 {:.2} MB) -> {}",
+                set.name,
+                model.cfg.name,
+                set.rank(),
+                set.n_adapted(),
+                set.resident_bytes() as f64 / 1e6,
+                out.display()
+            );
+        }
         "serve" => {
             let addr = args.str_or("addr", "127.0.0.1:7878");
             let sched = SchedConfig {
@@ -456,10 +496,24 @@ fn run(args: Args) -> repro::Result<()> {
                 sched.kv_block,
                 (sched.blocks_total() * kv_block_bytes) as f64 / 1e6
             );
+            let adapters = args
+                .all("adapter")
+                .into_iter()
+                .map(|spec| {
+                    spec.split_once('=')
+                        .map(|(n, p)| (n.to_string(), p.to_string()))
+                        .ok_or_else(|| {
+                            repro::Error::config(format!(
+                                "--adapter '{spec}': expected NAME=PATH"
+                            ))
+                        })
+                })
+                .collect::<repro::Result<Vec<_>>>()?;
             let opts = ServeOptions {
                 addr,
                 sched,
                 allow_remote_shutdown: !args.flag("no-remote-shutdown"),
+                adapters,
             };
             repro::serve::server::run(Arc::new(model), draft, opts)?;
         }
@@ -476,6 +530,27 @@ fn run(args: Args) -> repro::Result<()> {
                 seed,
                 shutdown_after: args.flag("shutdown"),
                 transcript: args.get("transcript").map(String::from),
+                adapter_mix: args
+                    .get("adapter-mix")
+                    .map(|m| {
+                        m.split(':')
+                            .filter(|s| !s.is_empty())
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                churn_adapter: match args.get("churn-adapter") {
+                    Some(spec) => Some(
+                        spec.split_once('=')
+                            .map(|(n, p)| (n.to_string(), p.to_string()))
+                            .ok_or_else(|| {
+                                repro::Error::config(format!(
+                                    "--churn-adapter '{spec}': expected NAME=PATH"
+                                ))
+                            })?,
+                    ),
+                    None => None,
+                },
             };
             let rep = run_load(&o)?;
             println!(
@@ -511,6 +586,30 @@ fn run(args: Args) -> repro::Result<()> {
                     s.fallbacks,
                     s.draft_peak_resident_blocks
                 );
+            }
+            if !rep.tokens_by_route.is_empty() && !o.adapter_mix.is_empty() {
+                for (route, toks) in &rep.tokens_by_route {
+                    println!(
+                        "  route {route}: {toks} tokens ({:.1} tokens/s)",
+                        *toks as f64 / rep.wall_secs.max(1e-9)
+                    );
+                }
+            }
+            for a in &rep.adapters {
+                println!(
+                    "  adapter {}: rank {}, {} server-counted tokens, \
+                     delta-GEMM overhead {:.2}% of base FLOPs",
+                    a.name,
+                    a.rank,
+                    a.tokens,
+                    a.delta_overhead * 100.0
+                );
+            }
+            if !rep.adapters.is_empty() || rep.baseline_tokens > 0 {
+                println!("  baseline (no-adapter) tokens: {}", rep.baseline_tokens);
+            }
+            if o.churn_adapter.is_some() {
+                println!("  adapter churn: {} load/unload cycles mid-run", rep.churn_cycles);
             }
             if let Some(path) = &o.transcript {
                 println!("  wrote transcript {path}");
@@ -711,6 +810,35 @@ fn write_bench_serve(
                 Json::from(s.draft_peak_resident_blocks),
             ),
         ]);
+    }
+    // Per-adapter serving accounting: server-side token counts and the
+    // low-rank delta-GEMM FLOP overhead, plus client-observed per-route
+    // throughput.  Always present so consumers can rely on the key.
+    let adapters: Vec<Json> = rep
+        .adapters
+        .iter()
+        .map(|a| {
+            Json::Obj(vec![
+                ("name".to_string(), Json::from(a.name.as_str())),
+                ("rank".to_string(), Json::from(a.rank)),
+                ("tokens".to_string(), Json::from(a.tokens)),
+                (
+                    "tokens_per_sec".to_string(),
+                    Json::Num(
+                        (a.tokens as f64 / rep.wall_secs.max(1e-9) * 10.0).round() / 10.0,
+                    ),
+                ),
+                (
+                    "delta_overhead".to_string(),
+                    Json::Num((a.delta_overhead * 1e6).round() / 1e6),
+                ),
+            ])
+        })
+        .collect();
+    fields.push(("adapters".to_string(), Json::Arr(adapters)));
+    fields.push(("baseline_tokens".to_string(), Json::from(rep.baseline_tokens)));
+    if o.churn_adapter.is_some() {
+        fields.push(("adapter_churn_cycles".to_string(), Json::from(rep.churn_cycles)));
     }
     // `cargo bench --bench decode` merges a per-k "spec" sweep array
     // into the same artifact; carry it across a bench-serve rewrite.

@@ -22,8 +22,13 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
-use crate::infer::{Adapter, LayerWeight, PackedBlock, PackedLayer, PackedModel, RopeCache};
+use crate::infer::{
+    Adapter, AdapterSet, LayerWeight, PackedBlock, PackedLayer, PackedModel, RopeCache,
+    ADAPTER_SLOTS,
+};
 use crate::model::{ModelConfig, ParamStore};
 use crate::quant::{PackedLinear, QuantSpec};
 use crate::tensor::Tensor;
@@ -33,6 +38,9 @@ const VERSION: u32 = 1;
 
 const PACK_MAGIC: &[u8; 8] = b"APIQPACK";
 const PACK_VERSION: u32 = 1;
+
+const ADAPT_MAGIC: &[u8; 8] = b"APIQADPT";
+const ADAPT_VERSION: u32 = 1;
 
 /// Canonical path of a pretrained checkpoint — the single source of truth
 /// for the naming scheme shared by `repro pretrain` (save), `Env::prepare`
@@ -230,7 +238,40 @@ fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
     Tensor::new(shape, data)
 }
 
-fn write_layer(w: &mut impl Write, layer: &PackedLayer) -> Result<()> {
+/// Adapter record: tag 0 = none, 1 = LoRA (a, b_t, scale), 2 = DoRA
+/// (+ col_scale). Shared between the APIQPACK per-layer slot and the
+/// APIQADPT sidecar so the two formats stay byte-compatible per record.
+fn write_adapter_opt(w: &mut impl Write, adapter: Option<&Adapter>) -> Result<()> {
+    match adapter {
+        None => w.write_all(&[0u8])?,
+        Some(ad) => {
+            w.write_all(&[if ad.col_scale.is_some() { 2u8 } else { 1u8 }])?;
+            write_tensor(w, &ad.a)?;
+            write_tensor(w, &ad.b_t)?;
+            w.write_all(&ad.scale.to_le_bytes())?;
+            if let Some(cs) = &ad.col_scale {
+                write_f32s(w, cs)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_adapter_opt(r: &mut impl Read) -> Result<Option<Adapter>> {
+    match read_u8(r)? {
+        0 => Ok(None),
+        tag @ (1 | 2) => {
+            let a = read_tensor(r)?;
+            let b_t = read_tensor(r)?;
+            let scale = read_f32(r)?;
+            let col_scale = if tag == 2 { Some(read_f32s(r, "col_scale")?) } else { None };
+            Ok(Some(Adapter { a, b_t, scale, col_scale }))
+        }
+        tag => Err(Error::io(format!("checkpoint: unknown adapter tag {tag}"))),
+    }
+}
+
+fn write_layer(w: &mut impl Write, layer: &PackedLayer, adapter: Option<&Adapter>) -> Result<()> {
     match &layer.weight {
         LayerWeight::Dense(t) => {
             w.write_all(&[0u8])?;
@@ -247,22 +288,10 @@ fn write_layer(w: &mut impl Write, layer: &PackedLayer) -> Result<()> {
             write_bytes(w, &pl.zeros)?;
         }
     }
-    match &layer.adapter {
-        None => w.write_all(&[0u8])?,
-        Some(ad) => {
-            w.write_all(&[if ad.col_scale.is_some() { 2u8 } else { 1u8 }])?;
-            write_tensor(w, &ad.a)?;
-            write_tensor(w, &ad.b_t)?;
-            w.write_all(&ad.scale.to_le_bytes())?;
-            if let Some(cs) = &ad.col_scale {
-                write_f32s(w, cs)?;
-            }
-        }
-    }
-    Ok(())
+    write_adapter_opt(w, adapter)
 }
 
-fn read_layer(r: &mut impl Read) -> Result<PackedLayer> {
+fn read_layer(r: &mut impl Read) -> Result<(PackedLayer, Option<Adapter>)> {
     let weight = match read_u8(r)? {
         0 => LayerWeight::Dense(read_tensor(r)?),
         1 => {
@@ -293,18 +322,8 @@ fn read_layer(r: &mut impl Read) -> Result<PackedLayer> {
         }
         tag => return Err(Error::io(format!("packed checkpoint: unknown weight tag {tag}"))),
     };
-    let adapter = match read_u8(r)? {
-        0 => None,
-        tag @ (1 | 2) => {
-            let a = read_tensor(r)?;
-            let b_t = read_tensor(r)?;
-            let scale = read_f32(r)?;
-            let col_scale = if tag == 2 { Some(read_f32s(r, "col_scale")?) } else { None };
-            Some(Adapter { a, b_t, scale, col_scale })
-        }
-        tag => return Err(Error::io(format!("packed checkpoint: unknown adapter tag {tag}"))),
-    };
-    Ok(PackedLayer { weight, adapter })
+    let adapter = read_adapter_opt(r)?;
+    Ok((PackedLayer { weight }, adapter))
 }
 
 fn block_layers(blk: &PackedBlock) -> [&PackedLayer; 7] {
@@ -328,11 +347,14 @@ pub fn save_packed(model: &PackedModel, path: impl AsRef<Path>) -> Result<()> {
     write_tensor(&mut w, &model.final_norm)?;
     write_tensor(&mut w, &model.lm_head)?;
     write_u32v(&mut w, model.blocks.len() as u32)?;
-    for blk in &model.blocks {
+    let set = model.default_adapter.as_deref();
+    for (b, blk) in model.blocks.iter().enumerate() {
         write_tensor(&mut w, &blk.attn_norm)?;
         write_tensor(&mut w, &blk.ffn_norm)?;
-        for layer in block_layers(blk) {
-            write_layer(&mut w, layer)?;
+        // block_layers order (wq..wdown) matches the adapter SLOT_* order,
+        // so slot index == position — the v1 byte layout is unchanged.
+        for (slot, layer) in block_layers(blk).into_iter().enumerate() {
+            write_layer(&mut w, layer, set.and_then(|s| s.get(b, slot)))?;
         }
     }
     w.flush()?;
@@ -381,6 +403,8 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
         ));
     }
     let mut blocks = Vec::with_capacity(n_blocks);
+    let mut ad_layers: Vec<[Option<Adapter>; ADAPTER_SLOTS]> = Vec::with_capacity(n_blocks);
+    let mut any_adapter = false;
     for b in 0..n_blocks {
         let attn_norm = read_tensor(&mut r)?;
         let ffn_norm = read_tensor(&mut r)?;
@@ -390,15 +414,16 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
                 cfg.d_model
             )));
         }
-        let wq = read_layer(&mut r)?;
-        let wk = read_layer(&mut r)?;
-        let wv = read_layer(&mut r)?;
-        let wo = read_layer(&mut r)?;
-        let wgate = read_layer(&mut r)?;
-        let wup = read_layer(&mut r)?;
-        let wdown = read_layer(&mut r)?;
+        let (wq, aq) = read_layer(&mut r)?;
+        let (wk, ak) = read_layer(&mut r)?;
+        let (wv, av) = read_layer(&mut r)?;
+        let (wo, ao) = read_layer(&mut r)?;
+        let (wgate, agate) = read_layer(&mut r)?;
+        let (wup, aup) = read_layer(&mut r)?;
+        let (wdown, adown) = read_layer(&mut r)?;
         let block = PackedBlock { attn_norm, ffn_norm, wq, wk, wv, wo, wgate, wup, wdown };
-        for (lay, (want_in, want_out)) in [
+        let adapters = [aq, ak, av, ao, agate, aup, adown];
+        let slots = [
             (&block.wq, (cfg.d_model, cfg.d_model)),
             (&block.wk, (cfg.d_model, cfg.d_model)),
             (&block.wv, (cfg.d_model, cfg.d_model)),
@@ -406,7 +431,9 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
             (&block.wgate, (cfg.d_model, cfg.d_ffn)),
             (&block.wup, (cfg.d_model, cfg.d_ffn)),
             (&block.wdown, (cfg.d_ffn, cfg.d_model)),
-        ] {
+        ];
+        for ((lay, (want_in, want_out)), ad) in slots.into_iter().zip(adapters.iter()) {
+            let ad = ad.as_ref();
             let (d_in, d_out) = match &lay.weight {
                 LayerWeight::Packed(pl) => (pl.d_in, pl.d_out),
                 LayerWeight::Dense(t) if t.rank() == 2 => (t.rows(), t.cols()),
@@ -418,23 +445,145 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
                      config '{name}' wants {want_in}x{want_out}"
                 )));
             }
-            if let Some(ad) = &lay.adapter {
-                let rank_ok = ad.a.rank() == 2
-                    && ad.b_t.rank() == 2
-                    && ad.a.rows() == want_in
-                    && ad.b_t.cols() == want_out
-                    && ad.a.cols() == ad.b_t.rows();
-                let cs_ok = ad.col_scale.as_ref().map(|c| c.len() == want_out).unwrap_or(true);
-                if !rank_ok || !cs_ok {
-                    return Err(Error::io(format!(
+            if let Some(ad) = ad {
+                check_adapter_shape(ad, want_in, want_out)
+                    .map_err(|_| Error::io(format!(
                         "packed checkpoint: block {b} adapter shape mismatch"
-                    )));
-                }
+                    )))?;
             }
         }
+        any_adapter = any_adapter || adapters.iter().any(|a| a.is_some());
+        ad_layers.push(adapters);
         blocks.push(block);
     }
-    Ok(PackedModel { cfg, spec, embed, final_norm, lm_head, blocks, rope: RopeCache::new() })
+    let default_adapter = if any_adapter {
+        Some(Arc::new(AdapterSet { name: "builtin".to_string(), layers: ad_layers }))
+    } else {
+        None
+    };
+    Ok(PackedModel {
+        cfg,
+        spec,
+        embed,
+        final_norm,
+        lm_head,
+        blocks,
+        default_adapter,
+        rope: RopeCache::new(),
+    })
+}
+
+fn check_adapter_shape(ad: &Adapter, want_in: usize, want_out: usize) -> Result<()> {
+    let rank_ok = ad.a.rank() == 2
+        && ad.b_t.rank() == 2
+        && ad.a.rows() == want_in
+        && ad.b_t.cols() == want_out
+        && ad.a.cols() == ad.b_t.rows();
+    let cs_ok = ad.col_scale.as_ref().map(|c| c.len() == want_out).unwrap_or(true);
+    if !rank_ok || !cs_ok {
+        return Err(Error::io("adapter shape mismatch".to_string()));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Adapter-only sidecars ("APIQADPT"): one AdapterSet over a shared base
+// ---------------------------------------------------------------------------
+
+/// Canonical path of an adapter sidecar produced by `repro pack-adapter`.
+pub fn adapter_path(size: &str, method: &str, rank: usize, seed: u64) -> PathBuf {
+    Path::new("checkpoints").join(format!("adapter_{size}_{method}_r{rank}_s{seed}.apq"))
+}
+
+/// Serialize an [`AdapterSet`] alone — no base weights — so N task adapters
+/// can ship as small sidecars over one shared APIQPACK base. Layout:
+/// magic "APIQADPT", version u32, base config name, set name, n_blocks u32,
+/// then [`ADAPTER_SLOTS`] adapter records per block in wq..wdown slot order
+/// (the same record encoding APIQPACK embeds per layer).
+pub fn save_adapter(set: &AdapterSet, cfg_name: &str, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(ADAPT_MAGIC)?;
+    write_u32v(&mut w, ADAPT_VERSION)?;
+    write_bytes(&mut w, cfg_name.as_bytes())?;
+    write_bytes(&mut w, set.name.as_bytes())?;
+    write_u32v(&mut w, set.layers.len() as u32)?;
+    for block in &set.layers {
+        for ad in block {
+            write_adapter_opt(&mut w, ad.as_ref())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an adapter sidecar saved by [`save_adapter`], validating every
+/// record against `cfg` (config-name match, block count, per-linear shapes).
+pub fn load_adapter(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<AdapterSet> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).map_err(|e| Error::io(format!("{}: {e}", path.display())))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != ADAPT_MAGIC {
+        return Err(Error::io(format!("{}: not an adapter sidecar", path.display())));
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != ADAPT_VERSION {
+        return Err(Error::io(format!("unsupported adapter sidecar version {ver}")));
+    }
+    let base_bytes = read_bytes(&mut r, "config name")?;
+    let base = String::from_utf8(base_bytes)
+        .map_err(|e| Error::io(format!("bad config name utf8: {e}")))?;
+    if base != cfg.name {
+        return Err(Error::io(format!(
+            "adapter sidecar targets config '{base}' but model is '{}'",
+            cfg.name
+        )));
+    }
+    let name_bytes = read_bytes(&mut r, "adapter name")?;
+    let name = String::from_utf8(name_bytes)
+        .map_err(|e| Error::io(format!("bad adapter name utf8: {e}")))?;
+    let n_blocks = read_u32(&mut r)? as usize;
+    if n_blocks != cfg.n_layers {
+        return Err(Error::io(format!(
+            "adapter sidecar: {n_blocks} blocks but config '{}' has {}",
+            cfg.name, cfg.n_layers
+        )));
+    }
+    let shapes: [(usize, usize); ADAPTER_SLOTS] = [
+        (cfg.d_model, cfg.d_model),
+        (cfg.d_model, cfg.d_model),
+        (cfg.d_model, cfg.d_model),
+        (cfg.d_model, cfg.d_model),
+        (cfg.d_model, cfg.d_ffn),
+        (cfg.d_model, cfg.d_ffn),
+        (cfg.d_ffn, cfg.d_model),
+    ];
+    let mut layers = Vec::with_capacity(n_blocks);
+    for b in 0..n_blocks {
+        let mut block: [Option<Adapter>; ADAPTER_SLOTS] = Default::default();
+        for (slot, rec) in block.iter_mut().enumerate() {
+            let ad = read_adapter_opt(&mut r)?;
+            if let Some(ad) = &ad {
+                let (want_in, want_out) = shapes[slot];
+                check_adapter_shape(ad, want_in, want_out).map_err(|_| {
+                    Error::io(format!(
+                        "adapter sidecar: block {b} slot {slot} shape mismatch \
+                         (config '{}')",
+                        cfg.name
+                    ))
+                })?;
+            }
+            *rec = ad;
+        }
+        layers.push(block);
+    }
+    Ok(AdapterSet { name, layers })
 }
 
 #[cfg(test)]
@@ -493,5 +642,96 @@ mod tests {
     fn packed_path_is_stable() {
         let p = packed_path("tiny", "rtn", 2, 64);
         assert_eq!(p, Path::new("checkpoints").join("packed_tiny_rtn_2b_g64.apq"));
+    }
+
+    #[test]
+    fn adapter_path_is_stable() {
+        let p = adapter_path("tiny", "qlora", 4, 9);
+        assert_eq!(p, Path::new("checkpoints").join("adapter_tiny_qlora_r4_s9.apq"));
+    }
+
+    fn test_set(cfg: &ModelConfig, rng: &mut Rng) -> AdapterSet {
+        let mut layers: Vec<[Option<Adapter>; ADAPTER_SLOTS]> = Vec::new();
+        for b in 0..cfg.n_layers {
+            let mut block: [Option<Adapter>; ADAPTER_SLOTS] = Default::default();
+            // plain LoRA on wq every block, DoRA on wdown every other block —
+            // exercises both record tags and both linear shapes
+            block[0] = Some(Adapter {
+                a: Tensor::randn(&[cfg.d_model, 4], 0.1, rng),
+                b_t: Tensor::randn(&[4, cfg.d_model], 0.1, rng),
+                scale: 0.5,
+                col_scale: None,
+            });
+            if b % 2 == 0 {
+                block[6] = Some(Adapter {
+                    a: Tensor::randn(&[cfg.d_ffn, 4], 0.1, rng),
+                    b_t: Tensor::randn(&[4, cfg.d_model], 0.1, rng),
+                    scale: 1.25,
+                    col_scale: Some((0..cfg.d_model).map(|i| 1.0 + i as f32 * 1e-3).collect()),
+                });
+            }
+            layers.push(block);
+        }
+        AdapterSet { name: "taskA".to_string(), layers }
+    }
+
+    #[test]
+    fn adapter_sidecar_roundtrips() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(7);
+        let set = test_set(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("apiq_ckpt_test");
+        let path = dir.join("sidecar.apq");
+        save_adapter(&set, cfg.name, &path).unwrap();
+        let back = load_adapter(&path, &cfg).unwrap();
+        assert_eq!(back.name, "taskA");
+        assert_eq!(back.layers.len(), set.layers.len());
+        for (bb, sb) in back.layers.iter().zip(set.layers.iter()) {
+            for (ba, sa) in bb.iter().zip(sb.iter()) {
+                match (ba, sa) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.a, y.a);
+                        assert_eq!(x.b_t, y.b_t);
+                        assert_eq!(x.scale, y.scale);
+                        assert_eq!(x.col_scale, y.col_scale);
+                    }
+                    _ => panic!("slot presence mismatch"),
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn adapter_sidecar_rejects_mismatches() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(8);
+        let set = test_set(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("apiq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // wrong base config name
+        let path = dir.join("sidecar_wrong_base.apq");
+        save_adapter(&set, "base", &path).unwrap();
+        assert!(load_adapter(&path, &cfg).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // wrong magic (a ParamStore checkpoint is not a sidecar)
+        let path = dir.join("sidecar_wrong_magic.apq");
+        let mut ps = ParamStore::new();
+        ps.insert("x", Tensor::randn(&[2, 2], 1.0, &mut rng));
+        save(&ps, &path).unwrap();
+        assert!(load_adapter(&path, &cfg).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // adapter shaped for tiny rejected against small
+        let path = dir.join("sidecar_wrong_shape.apq");
+        let small = ModelConfig::by_name("small").unwrap();
+        save_adapter(&set, small.name, &path).unwrap();
+        assert!(load_adapter(&path, &small).is_err());
+        std::fs::remove_file(&path).ok();
+
+        assert!(load_adapter("/definitely/not/here.apq", &cfg).is_err());
     }
 }

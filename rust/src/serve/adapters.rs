@@ -1,0 +1,309 @@
+//! Runtime adapter registry: named [`AdapterSet`]s served over one shared
+//! packed base.
+//!
+//! The engine owns one registry. Adapters enter it at boot
+//! (`serve --adapter NAME=PATH`) or at runtime via the line protocol's
+//! `{"cmd":"adapter","op":"load",...}`; requests route to one by name.
+//! Entries are refcounted by in-flight sequences: `acquire` at admission,
+//! `release` at finish/evict/cancel. Unloading an adapter with live
+//! sequences marks it draining — no new requests may route to it, and the
+//! entry is dropped when the last sequence releases it.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::infer::{AdapterSet, ADAPTER_SLOTS};
+use crate::model::ModelConfig;
+
+/// One registry entry's public snapshot, as reported in the `stats` frame
+/// and the bench report.
+#[derive(Debug, Clone)]
+pub struct AdapterStat {
+    pub name: String,
+    pub rank: usize,
+    pub n_adapted: usize,
+    pub resident_bytes: usize,
+    /// In-flight sequences currently routed to this adapter.
+    pub refs: usize,
+    /// Total tokens emitted by sequences routed to this adapter.
+    pub tokens: u64,
+    /// Unload requested but deferred until `refs` drains to 0.
+    pub draining: bool,
+    /// Estimated extra FLOPs of the low-rank delta GEMMs relative to the
+    /// shared base GEMMs: sum 2r(d_in+d_out) / sum 2*d_in*d_out.
+    pub delta_overhead: f64,
+}
+
+struct Entry {
+    set: Arc<AdapterSet>,
+    refs: usize,
+    tokens: u64,
+    draining: bool,
+    delta_overhead: f64,
+}
+
+/// Refcounted name -> [`AdapterSet`] map owned by the serve engine.
+pub struct AdapterRegistry {
+    cfg: ModelConfig,
+    entries: HashMap<String, Entry>,
+    /// Insertion order, so stats frames are deterministic.
+    order: Vec<String>,
+    /// Tokens emitted by sequences on the model's default (baseline) path.
+    baseline_tokens: u64,
+}
+
+/// FLOP fraction the per-sequence delta GEMMs add on top of the shared
+/// base GEMMs for one token: sum over adapted linears of 2r(d_in+d_out),
+/// over sum over ALL linears of 2*d_in*d_out.
+pub fn delta_overhead(set: &AdapterSet, cfg: &ModelConfig) -> f64 {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let shapes: [(usize, usize); ADAPTER_SLOTS] =
+        [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)];
+    // base counts every linear whether adapted or not: the shared GEMM runs
+    // regardless, and the fraction answers "how much slower than baseline".
+    let per_block: f64 = shapes.iter().map(|&(i, o)| 2.0 * i as f64 * o as f64).sum();
+    let base = per_block * cfg.n_layers as f64;
+    let mut delta = 0f64;
+    for block in &set.layers {
+        for (slot, ad) in block.iter().enumerate() {
+            if let Some(ad) = ad {
+                let (d_in, d_out) = shapes[slot];
+                delta += 2.0 * ad.a.cols() as f64 * (d_in + d_out) as f64;
+            }
+        }
+    }
+    if base == 0.0 {
+        0.0
+    } else {
+        delta / base
+    }
+}
+
+impl AdapterRegistry {
+    pub fn new(cfg: ModelConfig) -> Self {
+        AdapterRegistry { cfg, entries: HashMap::new(), order: Vec::new(), baseline_tokens: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Register `set` under its own name. Rejects duplicates, including a
+    /// same-named adapter still draining.
+    pub fn load(&mut self, set: AdapterSet) -> Result<()> {
+        let name = set.name.clone();
+        if name.is_empty() {
+            return Err(Error::config("adapter name must be non-empty"));
+        }
+        if let Some(e) = self.entries.get(&name) {
+            return Err(Error::config(if e.draining {
+                format!("adapter '{name}' is draining; retry after unload completes")
+            } else {
+                format!("adapter '{name}' already loaded")
+            }));
+        }
+        let overhead = delta_overhead(&set, &self.cfg);
+        self.entries.insert(
+            name.clone(),
+            Entry {
+                set: Arc::new(set),
+                refs: 0,
+                tokens: 0,
+                draining: false,
+                delta_overhead: overhead,
+            },
+        );
+        self.order.push(name);
+        Ok(())
+    }
+
+    /// Unload by name. Returns `Ok(true)` if removed immediately,
+    /// `Ok(false)` if deferred until in-flight sequences drain.
+    pub fn unload(&mut self, name: &str) -> Result<bool> {
+        let e = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| Error::config(format!("unknown adapter '{name}'")))?;
+        if e.refs == 0 {
+            self.entries.remove(name);
+            self.order.retain(|n| n != name);
+            Ok(true)
+        } else {
+            e.draining = true;
+            Ok(false)
+        }
+    }
+
+    /// Resolve + refcount an adapter for a newly admitted sequence.
+    /// Draining adapters refuse new sequences.
+    pub fn acquire(&mut self, name: &str) -> Result<Arc<AdapterSet>> {
+        let e = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| Error::config(format!("unknown adapter '{name}'")))?;
+        if e.draining {
+            return Err(Error::config(format!("adapter '{name}' is draining")));
+        }
+        e.refs += 1;
+        Ok(Arc::clone(&e.set))
+    }
+
+    /// Drop one sequence's hold. Completes a deferred unload when the last
+    /// reference drains. Unknown names are ignored (the entry may already
+    /// have been force-removed).
+    pub fn release(&mut self, name: &str) {
+        let done = match self.entries.get_mut(name) {
+            Some(e) => {
+                e.refs = e.refs.saturating_sub(1);
+                e.draining && e.refs == 0
+            }
+            None => false,
+        };
+        if done {
+            self.entries.remove(name);
+            self.order.retain(|n| n != name);
+        }
+    }
+
+    /// Attribute `n` emitted tokens to `name` (or the baseline when `None`).
+    pub fn count_tokens(&mut self, name: Option<&str>, n: u64) {
+        match name {
+            Some(name) => {
+                if let Some(e) = self.entries.get_mut(name) {
+                    e.tokens += n;
+                }
+            }
+            None => self.baseline_tokens += n,
+        }
+    }
+
+    pub fn baseline_tokens(&self) -> u64 {
+        self.baseline_tokens
+    }
+
+    /// Snapshot every entry in load order.
+    pub fn stats(&self) -> Vec<AdapterStat> {
+        self.order
+            .iter()
+            .filter_map(|name| {
+                self.entries.get(name).map(|e| AdapterStat {
+                    name: name.clone(),
+                    rank: e.set.rank(),
+                    n_adapted: e.set.n_adapted(),
+                    resident_bytes: e.set.resident_bytes(),
+                    refs: e.refs,
+                    tokens: e.tokens,
+                    draining: e.draining,
+                    delta_overhead: e.delta_overhead,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::Adapter;
+    use crate::tensor::{Rng, Tensor};
+
+    fn tiny_set(name: &str, rng: &mut Rng) -> AdapterSet {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut layers: Vec<[Option<Adapter>; ADAPTER_SLOTS]> = Vec::new();
+        for _ in 0..cfg.n_layers {
+            let mut block: [Option<Adapter>; ADAPTER_SLOTS] = Default::default();
+            block[0] = Some(Adapter {
+                a: Tensor::randn(&[cfg.d_model, 2], 0.1, rng),
+                b_t: Tensor::randn(&[2, cfg.d_model], 0.1, rng),
+                scale: 1.0,
+                col_scale: None,
+            });
+            layers.push(block);
+        }
+        AdapterSet { name: name.to_string(), layers }
+    }
+
+    #[test]
+    fn load_resolve_unload() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(3);
+        let mut reg = AdapterRegistry::new(cfg);
+        assert!(reg.is_empty());
+        reg.load(tiny_set("a", &mut rng)).unwrap();
+        reg.load(tiny_set("b", &mut rng)).unwrap();
+        assert_eq!(reg.len(), 2);
+        // duplicate name rejected
+        assert!(reg.load(tiny_set("a", &mut rng)).is_err());
+        // unknown names error on acquire/unload
+        assert!(reg.acquire("nope").is_err());
+        assert!(reg.unload("nope").is_err());
+        // idle unload removes immediately
+        assert!(reg.unload("b").unwrap());
+        assert_eq!(reg.len(), 1);
+        let got = reg.acquire("a").unwrap();
+        assert_eq!(got.name, "a");
+        reg.release("a");
+        assert!(reg.unload("a").unwrap());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn unload_defers_until_drained() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(4);
+        let mut reg = AdapterRegistry::new(cfg);
+        reg.load(tiny_set("a", &mut rng)).unwrap();
+        let _held = reg.acquire("a").unwrap();
+        let _held2 = reg.acquire("a").unwrap();
+        // two holders -> unload defers
+        assert!(!reg.unload("a").unwrap());
+        assert!(reg.stats()[0].draining);
+        // draining adapters refuse new sequences and reloads
+        assert!(reg.acquire("a").is_err());
+        assert!(reg.load(tiny_set("a", &mut rng)).is_err());
+        reg.release("a");
+        assert_eq!(reg.len(), 1, "still one holder");
+        reg.release("a");
+        assert!(reg.is_empty(), "last release completes the unload");
+        // releasing an already-removed name is a no-op
+        reg.release("a");
+    }
+
+    #[test]
+    fn token_attribution_and_stats() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(5);
+        let mut reg = AdapterRegistry::new(cfg);
+        reg.load(tiny_set("a", &mut rng)).unwrap();
+        reg.count_tokens(Some("a"), 5);
+        reg.count_tokens(Some("a"), 2);
+        reg.count_tokens(None, 3);
+        reg.count_tokens(Some("ghost"), 9); // silently dropped
+        let st = reg.stats();
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].tokens, 7);
+        assert_eq!(st[0].rank, 2);
+        assert_eq!(st[0].n_adapted, 4, "one adapted linear per block");
+        assert!(st[0].resident_bytes > 0);
+        assert!(st[0].delta_overhead > 0.0 && st[0].delta_overhead < 0.1);
+        assert_eq!(reg.baseline_tokens(), 3);
+    }
+
+    #[test]
+    fn overhead_fraction_matches_hand_count() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(6);
+        let set = tiny_set("a", &mut rng);
+        let (d, f) = (cfg.d_model, cfg.d_ffn);
+        let base = cfg.n_layers as f64
+            * (4.0 * 2.0 * (d * d) as f64 + 2.0 * 2.0 * (d * f) as f64 + 2.0 * (f * d) as f64);
+        let delta = cfg.n_layers as f64 * 2.0 * 2.0 * (d + d) as f64;
+        let got = delta_overhead(&set, &cfg);
+        assert!((got - delta / base).abs() < 1e-12, "got {got}, want {}", delta / base);
+    }
+}

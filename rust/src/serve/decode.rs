@@ -41,13 +41,105 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::infer::{
-    apply_rope, argmax, rmsnorm_rows, GenReport, PackedBlock, PackedModel, RopeView,
+    apply_rope, argmax, rmsnorm_rows, AdapterSet, GenReport, PackedBlock, PackedModel, RopeView,
+    SLOT_WDOWN, SLOT_WGATE, SLOT_WK, SLOT_WO, SLOT_WQ, SLOT_WUP, SLOT_WV,
 };
 use crate::serve::block::BlockPool;
 use crate::serve::kv::KvCache;
 use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{sample, seq_rng, SamplingParams};
 use crate::tensor::{IntTensor, Rng, Tensor};
+
+/// One sequence's contiguous row range in a batched projection plus the
+/// adapter set routed for it: `(first row, row count, set)`.
+pub(crate) type AdapterSpan<'a> = (usize, usize, Option<&'a AdapterSet>);
+
+/// Add per-sequence adapter deltas to the output `y` (n, d_out) of a
+/// shared base projection over `x` (n, d_in).  The base GEMV has already
+/// run ONCE over every row; here the rows of sequences that resolve to
+/// the same [`crate::infer::Adapter`] for `(li, slot)` are gathered into
+/// ONE low-rank delta GEMM pair (`scale·(x·A)·Bᵀ` + DoRA column rescale),
+/// then scattered back.  The kernels are bitwise row-stable across batch
+/// shapes, so each row's result is identical to a solo run of its own
+/// adapter — and when every row resolves to one adapter in batch order
+/// (the single-pairing case), `x` is used directly, reproducing the old
+/// baked-in path's single whole-batch GEMM bit for bit.
+fn apply_adapter_deltas(
+    y: &mut Tensor,
+    x: &Tensor,
+    spans: &[AdapterSpan<'_>],
+    li: usize,
+    slot: usize,
+) -> Result<()> {
+    let d_in = x.shape()[1];
+    let d_out = y.shape()[1];
+    let n_rows = x.shape()[0];
+    let mut done = vec![false; spans.len()];
+    for i in 0..spans.len() {
+        if done[i] {
+            continue;
+        }
+        done[i] = true;
+        let ad = match spans[i].2.and_then(|s| s.get(li, slot)) {
+            Some(a) => a,
+            None => continue,
+        };
+        // gather every later span resolving to this same adapter
+        let mut rows: Vec<(usize, usize)> = vec![(spans[i].0, spans[i].1)];
+        let mut total = spans[i].1;
+        for j in (i + 1)..spans.len() {
+            if done[j] {
+                continue;
+            }
+            if let Some(aj) = spans[j].2.and_then(|s| s.get(li, slot)) {
+                if std::ptr::eq(ad, aj) {
+                    done[j] = true;
+                    rows.push((spans[j].0, spans[j].1));
+                    total += spans[j].1;
+                }
+            }
+        }
+        let whole = total == n_rows
+            && rows.first().map(|r| r.0) == Some(0)
+            && rows.windows(2).all(|w| w[0].0 + w[0].1 == w[1].0);
+        let low = if whole {
+            x.matmul(&ad.a)?.matmul(&ad.b_t)?
+        } else {
+            let mut xg = Tensor::zeros(&[total, d_in]);
+            {
+                let xd = x.data();
+                let gd = xg.data_mut();
+                let mut w = 0usize;
+                for &(r0, n) in &rows {
+                    gd[w * d_in..(w + n) * d_in].copy_from_slice(&xd[r0 * d_in..(r0 + n) * d_in]);
+                    w += n;
+                }
+            }
+            xg.matmul(&ad.a)?.matmul(&ad.b_t)?
+        };
+        // scatter `y += scale·low` then DoRA's column rescale, per row in
+        // the exact operation order of the single-adapter path
+        let ld = low.data();
+        let yd = y.data_mut();
+        let mut w = 0usize;
+        for &(r0, n) in &rows {
+            for r in 0..n {
+                let yrow = &mut yd[(r0 + r) * d_out..(r0 + r + 1) * d_out];
+                let lrow = &ld[(w + r) * d_out..(w + r + 1) * d_out];
+                for (v, &lv) in yrow.iter_mut().zip(lrow) {
+                    *v += ad.scale * lv;
+                }
+                if let Some(cs) = &ad.col_scale {
+                    for (v, &c) in yrow.iter_mut().zip(cs.iter()) {
+                        *v *= c;
+                    }
+                }
+            }
+            w += n;
+        }
+    }
+    Ok(())
+}
 
 impl PackedModel {
     /// Embed a flat token slice into (n, d), with the same out-of-vocab
@@ -73,8 +165,21 @@ impl PackedModel {
     /// Forward the next `t` positions of ONE sequence, appending K/V for
     /// every layer to `cache` and committing `t` positions on success.
     /// With an empty cache this is prefill; with a warm cache it extends
-    /// the sequence.  Returns the chunk logits `(t, vocab)`.
+    /// the sequence.  Returns the chunk logits `(t, vocab)`.  Applies the
+    /// model's default adapter set; route another via
+    /// [`PackedModel::forward_chunk_with`].
     pub fn forward_chunk(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Tensor> {
+        self.forward_chunk_with(tokens, cache, self.default_adapter.as_deref())
+    }
+
+    /// [`PackedModel::forward_chunk`] with an explicit adapter set
+    /// (`None` = frozen base only).
+    pub fn forward_chunk_with(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        set: Option<&AdapterSet>,
+    ) -> Result<Tensor> {
         let t = tokens.len();
         if t == 0 {
             return Err(Error::shape("forward_chunk: empty token chunk"));
@@ -91,9 +196,10 @@ impl PackedModel {
         let p0 = cache.len();
         let tables = self.rope.upto(hd, p0 + t);
         let rope = tables.view(p0, t);
+        let spans = [(0usize, t, set)];
         let mut x = self.embed_rows(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
-            x = block_forward_chunk(block, self, &x, t, p0, &rope, cache, li)?;
+            x = block_forward_chunk(block, self, &x, t, p0, &rope, cache, li, &spans)?;
         }
         cache.advance(t);
         self.head(x)
@@ -104,12 +210,29 @@ impl PackedModel {
     /// (positions may differ per sequence — that is what lets the
     /// continuous-batching scheduler mix mid-flight requests).  Appends
     /// one position to every cache and returns logits `(b, vocab)`.
+    /// Applies the model's default adapter set to every sequence; route
+    /// per-sequence sets via [`PackedModel::forward_step_with`].
     pub fn forward_step(&self, tokens: &[i32], caches: &mut [&mut KvCache]) -> Result<Tensor> {
+        let sets = vec![self.default_adapter.as_deref(); tokens.len()];
+        self.forward_step_with(tokens, caches, &sets)
+    }
+
+    /// [`PackedModel::forward_step`] with one adapter set per sequence:
+    /// the shared fused base GEMV runs ONCE across all sequences in the
+    /// step, then each sequence's low-rank delta is applied, grouped by
+    /// adapter identity.
+    pub fn forward_step_with(
+        &self,
+        tokens: &[i32],
+        caches: &mut [&mut KvCache],
+        adapters: &[Option<&AdapterSet>],
+    ) -> Result<Tensor> {
         let b = tokens.len();
-        if b == 0 || b != caches.len() {
+        if b == 0 || b != caches.len() || b != adapters.len() {
             return Err(Error::shape(format!(
-                "forward_step: {b} tokens vs {} caches",
-                caches.len()
+                "forward_step: {b} tokens vs {} caches vs {} adapters",
+                caches.len(),
+                adapters.len()
             )));
         }
         let d = self.cfg.d_model;
@@ -127,9 +250,11 @@ impl PackedModel {
         let need = caches.iter().map(|c| c.len() + 1).max().unwrap_or(1);
         let tables = self.rope.upto(hd, need);
         let ropes: Vec<RopeView<'_>> = caches.iter().map(|c| tables.view(c.len(), 1)).collect();
+        let spans: Vec<AdapterSpan<'_>> =
+            adapters.iter().enumerate().map(|(i, &s)| (i, 1, s)).collect();
         let mut x = self.embed_rows(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
-            x = block_forward_step(block, self, &x, &ropes, caches, li)?;
+            x = block_forward_step(block, self, &x, &ropes, caches, li, &spans)?;
         }
         for c in caches.iter_mut() {
             c.advance(1);
@@ -147,6 +272,18 @@ impl PackedModel {
         cache: &mut PagedKvCache,
         pool: &mut BlockPool,
     ) -> Result<Tensor> {
+        self.forward_chunk_paged_with(tokens, cache, pool, self.default_adapter.as_deref())
+    }
+
+    /// [`PackedModel::forward_chunk_paged`] with an explicit adapter set
+    /// (`None` = frozen base only).
+    pub fn forward_chunk_paged_with(
+        &self,
+        tokens: &[i32],
+        cache: &mut PagedKvCache,
+        pool: &mut BlockPool,
+        set: Option<&AdapterSet>,
+    ) -> Result<Tensor> {
         let t = tokens.len();
         if t == 0 {
             return Err(Error::shape("forward_chunk_paged: empty token chunk"));
@@ -157,9 +294,10 @@ impl PackedModel {
         let hd = self.cfg.d_model / self.cfg.n_heads;
         let tables = self.rope.upto(hd, p0 + t);
         let rope = tables.view(p0, t);
+        let spans = [(0usize, t, set)];
         let mut x = self.embed_rows(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
-            x = block_forward_chunk_paged(block, self, &x, t, p0, &rope, cache, pool, li)?;
+            x = block_forward_chunk_paged(block, self, &x, t, p0, &rope, cache, pool, li, &spans)?;
         }
         cache.advance(t);
         self.head(x)
@@ -177,11 +315,28 @@ impl PackedModel {
         caches: &mut [&mut PagedKvCache],
         pool: &mut BlockPool,
     ) -> Result<Tensor> {
+        let sets = vec![self.default_adapter.as_deref(); tokens.len()];
+        self.forward_step_paged_with(tokens, caches, pool, &sets)
+    }
+
+    /// [`PackedModel::forward_step_paged`] with one adapter set per
+    /// sequence — the batched mixed-adapter decode step: the shared fused
+    /// base GEMV runs ONCE across all sequences in the tick, then each
+    /// sequence's low-rank delta is applied, grouped by adapter identity
+    /// so sequences on the same adapter share one delta GEMM.
+    pub fn forward_step_paged_with(
+        &self,
+        tokens: &[i32],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+        adapters: &[Option<&AdapterSet>],
+    ) -> Result<Tensor> {
         let b = tokens.len();
-        if b == 0 || b != caches.len() {
+        if b == 0 || b != caches.len() || b != adapters.len() {
             return Err(Error::shape(format!(
-                "forward_step_paged: {b} tokens vs {} caches",
-                caches.len()
+                "forward_step_paged: {b} tokens vs {} caches vs {} adapters",
+                caches.len(),
+                adapters.len()
             )));
         }
         let d = self.cfg.d_model;
@@ -194,9 +349,11 @@ impl PackedModel {
         let need = caches.iter().map(|c| c.len() + 1).max().unwrap_or(1);
         let tables = self.rope.upto(hd, need);
         let ropes: Vec<RopeView<'_>> = caches.iter().map(|c| tables.view(c.len(), 1)).collect();
+        let spans: Vec<AdapterSpan<'_>> =
+            adapters.iter().enumerate().map(|(i, &s)| (i, 1, s)).collect();
         let mut x = self.embed_rows(tokens);
         for (li, block) in self.blocks.iter().enumerate() {
-            x = block_forward_step_paged(block, self, &x, &ropes, caches, pool, li)?;
+            x = block_forward_step_paged(block, self, &x, &ropes, caches, pool, li, &spans)?;
         }
         for c in caches.iter_mut() {
             c.advance(1);
@@ -222,12 +379,14 @@ impl PackedModel {
         suffixes: &[&[i32]],
         caches: &mut [&mut PagedKvCache],
         pool: &mut BlockPool,
+        adapters: &[Option<&AdapterSet>],
     ) -> Result<(Tensor, Vec<usize>)> {
         let b = suffixes.len();
-        if b == 0 || b != caches.len() {
+        if b == 0 || b != caches.len() || b != adapters.len() {
             return Err(Error::shape(format!(
-                "ragged paged forward: {b} suffixes vs {} caches",
-                caches.len()
+                "ragged paged forward: {b} suffixes vs {} caches vs {} adapters",
+                caches.len(),
+                adapters.len()
             )));
         }
         let d = self.cfg.d_model;
@@ -256,9 +415,17 @@ impl PackedModel {
         let tables = self.rope.upto(hd, need);
         let ropes: Vec<RopeView<'_>> =
             p0s.iter().zip(&ts).map(|(&p0, &t)| tables.view(p0, t)).collect();
+        let mut spans: Vec<AdapterSpan<'_>> = Vec::with_capacity(b);
+        {
+            let mut row = 0usize;
+            for (&t, &set) in ts.iter().zip(adapters.iter()) {
+                spans.push((row, t, set));
+                row += t;
+            }
+        }
         let mut x = self.embed_rows(&flat);
         for (li, block) in self.blocks.iter().enumerate() {
-            x = block_prefill_batch(block, self, &x, &p0s, &ts, &ropes, caches, pool, li)?;
+            x = block_prefill_batch(block, self, &x, &p0s, &ts, &ropes, caches, pool, li, &spans)?;
         }
         for (c, &t) in caches.iter_mut().zip(&ts) {
             c.advance(t);
@@ -280,7 +447,19 @@ impl PackedModel {
         caches: &mut [&mut PagedKvCache],
         pool: &mut BlockPool,
     ) -> Result<Tensor> {
-        let (x, ts) = self.ragged_forward_paged(suffixes, caches, pool)?;
+        let sets = vec![self.default_adapter.as_deref(); suffixes.len()];
+        self.prefill_batch_with(suffixes, caches, pool, &sets)
+    }
+
+    /// [`PackedModel::prefill_batch`] with one adapter set per sequence.
+    pub fn prefill_batch_with(
+        &self,
+        suffixes: &[&[i32]],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+        adapters: &[Option<&AdapterSet>],
+    ) -> Result<Tensor> {
+        let (x, ts) = self.ragged_forward_paged(suffixes, caches, pool, adapters)?;
         let b = ts.len();
         let d = self.cfg.d_model;
         // Gather each sequence's last hidden row; head() is row-wise, so
@@ -316,7 +495,20 @@ impl PackedModel {
         caches: &mut [&mut PagedKvCache],
         pool: &mut BlockPool,
     ) -> Result<Tensor> {
-        let (x, _ts) = self.ragged_forward_paged(suffixes, caches, pool)?;
+        let sets = vec![self.default_adapter.as_deref(); suffixes.len()];
+        self.forward_verify_paged_with(suffixes, caches, pool, &sets)
+    }
+
+    /// [`PackedModel::forward_verify_paged`] with one adapter set per
+    /// sequence.
+    pub fn forward_verify_paged_with(
+        &self,
+        suffixes: &[&[i32]],
+        caches: &mut [&mut PagedKvCache],
+        pool: &mut BlockPool,
+        adapters: &[Option<&AdapterSet>],
+    ) -> Result<Tensor> {
+        let (x, _ts) = self.ragged_forward_paged(suffixes, caches, pool, adapters)?;
         self.head(x)
     }
 }
@@ -396,17 +588,56 @@ fn attend_segs(
 }
 
 /// SwiGLU FFN branch shared by chunk and step paths: x1 + Wdown(silu(Wgate(norm(x1))) * Wup(norm(x1))).
-fn ffn_branch(block: &PackedBlock, d: usize, x1: &Tensor) -> Result<Tensor> {
+fn ffn_branch(
+    block: &PackedBlock,
+    d: usize,
+    x1: &Tensor,
+    li: usize,
+    spans: &[AdapterSpan<'_>],
+) -> Result<Tensor> {
     let mut ffn_in = x1.clone();
     rmsnorm_rows(ffn_in.data_mut(), d, block.ffn_norm.data());
-    let mut hidden = block.wgate.forward(&ffn_in)?;
-    let up = block.wup.forward(&ffn_in)?;
+    let mut hidden = block.wgate.forward(&ffn_in, None)?;
+    apply_adapter_deltas(&mut hidden, &ffn_in, spans, li, SLOT_WGATE)?;
+    let mut up = block.wup.forward(&ffn_in, None)?;
+    apply_adapter_deltas(&mut up, &ffn_in, spans, li, SLOT_WUP)?;
     for (g, &u) in hidden.data_mut().iter_mut().zip(up.data()) {
         let gv = *g;
         *g = gv / (1.0 + (-gv).exp()) * u; // silu(gate) * up
     }
-    let ffn_out = block.wdown.forward(&hidden)?;
+    let mut ffn_out = block.wdown.forward(&hidden, None)?;
+    apply_adapter_deltas(&mut ffn_out, &hidden, spans, li, SLOT_WDOWN)?;
     x1.add(&ffn_out)
+}
+
+/// Q/K/V projections over the (possibly batched) normalized input: one
+/// shared base GEMM each across every row, then per-sequence adapter
+/// deltas grouped by adapter identity.
+fn qkv_project(
+    block: &PackedBlock,
+    attn_in: &Tensor,
+    li: usize,
+    spans: &[AdapterSpan<'_>],
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let mut q = block.wq.forward(attn_in, None)?;
+    apply_adapter_deltas(&mut q, attn_in, spans, li, SLOT_WQ)?;
+    let mut k = block.wk.forward(attn_in, None)?;
+    apply_adapter_deltas(&mut k, attn_in, spans, li, SLOT_WK)?;
+    let mut v = block.wv.forward(attn_in, None)?;
+    apply_adapter_deltas(&mut v, attn_in, spans, li, SLOT_WV)?;
+    Ok((q, k, v))
+}
+
+/// Output projection over the attention context, base + adapter deltas.
+fn out_project(
+    block: &PackedBlock,
+    ctx: &Tensor,
+    li: usize,
+    spans: &[AdapterSpan<'_>],
+) -> Result<Tensor> {
+    let mut attn_out = block.wo.forward(ctx, None)?;
+    apply_adapter_deltas(&mut attn_out, ctx, spans, li, SLOT_WO)?;
+    Ok(attn_out)
 }
 
 /// One block over a single sequence's chunk x (t, d), reading/writing
@@ -421,6 +652,7 @@ fn block_forward_chunk(
     rope: &RopeView<'_>,
     cache: &mut KvCache,
     li: usize,
+    spans: &[AdapterSpan<'_>],
 ) -> Result<Tensor> {
     let d = model.cfg.d_model;
     let h = model.cfg.n_heads;
@@ -429,9 +661,7 @@ fn block_forward_chunk(
     // -- attention branch --
     let mut attn_in = x.clone();
     rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
-    let mut q = block.wq.forward(&attn_in)?;
-    let mut k = block.wk.forward(&attn_in)?;
-    let v = block.wv.forward(&attn_in)?;
+    let (mut q, mut k, v) = qkv_project(block, &attn_in, li, spans)?;
     apply_rope(q.data_mut(), 1, t, h, hd, rope);
     apply_rope(k.data_mut(), 1, t, h, hd, rope);
     cache.write_rows(li, k.data(), v.data())?;
@@ -448,10 +678,10 @@ fn block_forward_chunk(
         hd,
         &mut probs,
     );
-    let attn_out = block.wo.forward(&ctx)?;
+    let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
 
-    ffn_branch(block, d, &x1)
+    ffn_branch(block, d, &x1, li, spans)
 }
 
 /// Paged twin of [`block_forward_chunk`]: K/V rows scatter into the
@@ -467,6 +697,7 @@ fn block_forward_chunk_paged(
     cache: &mut PagedKvCache,
     pool: &mut BlockPool,
     li: usize,
+    spans: &[AdapterSpan<'_>],
 ) -> Result<Tensor> {
     let d = model.cfg.d_model;
     let h = model.cfg.n_heads;
@@ -474,9 +705,7 @@ fn block_forward_chunk_paged(
 
     let mut attn_in = x.clone();
     rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
-    let mut q = block.wq.forward(&attn_in)?;
-    let mut k = block.wk.forward(&attn_in)?;
-    let v = block.wv.forward(&attn_in)?;
+    let (mut q, mut k, v) = qkv_project(block, &attn_in, li, spans)?;
     apply_rope(q.data_mut(), 1, t, h, hd, rope);
     apply_rope(k.data_mut(), 1, t, h, hd, rope);
     cache.write_rows(pool, li, k.data(), v.data())?;
@@ -485,14 +714,15 @@ fn block_forward_chunk_paged(
     let mut probs = Vec::new();
     let segs = cache.segments(pool, li, p0 + t);
     attend_segs(q.data(), &segs, ctx.data_mut(), t, p0, h, hd, &mut probs);
-    let attn_out = block.wo.forward(&ctx)?;
+    let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
 
-    ffn_branch(block, d, &x1)
+    ffn_branch(block, d, &x1, li, spans)
 }
 
 /// One block over a batch of single newest positions x (b, d): linears
 /// run batched, attention per sequence against its own cache.
+#[allow(clippy::too_many_arguments)]
 fn block_forward_step(
     block: &PackedBlock,
     model: &PackedModel,
@@ -500,6 +730,7 @@ fn block_forward_step(
     ropes: &[RopeView<'_>],
     caches: &mut [&mut KvCache],
     li: usize,
+    spans: &[AdapterSpan<'_>],
 ) -> Result<Tensor> {
     let d = model.cfg.d_model;
     let h = model.cfg.n_heads;
@@ -509,9 +740,7 @@ fn block_forward_step(
     // -- attention branch (projections batched across sequences) --
     let mut attn_in = x.clone();
     rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
-    let mut q = block.wq.forward(&attn_in)?;
-    let mut k = block.wk.forward(&attn_in)?;
-    let v = block.wv.forward(&attn_in)?;
+    let (mut q, mut k, v) = qkv_project(block, &attn_in, li, spans)?;
     for bi in 0..b {
         apply_rope(&mut q.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
         apply_rope(&mut k.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
@@ -539,13 +768,14 @@ fn block_forward_step(
             );
         }
     }
-    let attn_out = block.wo.forward(&ctx)?;
+    let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
 
-    ffn_branch(block, d, &x1)
+    ffn_branch(block, d, &x1, li, spans)
 }
 
 /// Paged twin of [`block_forward_step`].
+#[allow(clippy::too_many_arguments)]
 fn block_forward_step_paged(
     block: &PackedBlock,
     model: &PackedModel,
@@ -554,6 +784,7 @@ fn block_forward_step_paged(
     caches: &mut [&mut PagedKvCache],
     pool: &mut BlockPool,
     li: usize,
+    spans: &[AdapterSpan<'_>],
 ) -> Result<Tensor> {
     let d = model.cfg.d_model;
     let h = model.cfg.n_heads;
@@ -562,9 +793,7 @@ fn block_forward_step_paged(
 
     let mut attn_in = x.clone();
     rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
-    let mut q = block.wq.forward(&attn_in)?;
-    let mut k = block.wk.forward(&attn_in)?;
-    let v = block.wv.forward(&attn_in)?;
+    let (mut q, mut k, v) = qkv_project(block, &attn_in, li, spans)?;
     for bi in 0..b {
         apply_rope(&mut q.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
         apply_rope(&mut k.data_mut()[bi * d..(bi + 1) * d], 1, 1, h, hd, &ropes[bi]);
@@ -595,10 +824,10 @@ fn block_forward_step_paged(
             );
         }
     }
-    let attn_out = block.wo.forward(&ctx)?;
+    let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
 
-    ffn_branch(block, d, &x1)
+    ffn_branch(block, d, &x1, li, spans)
 }
 
 /// One block of the batched prefill: x is the ragged concatenation of
@@ -618,6 +847,7 @@ fn block_prefill_batch(
     caches: &mut [&mut PagedKvCache],
     pool: &mut BlockPool,
     li: usize,
+    spans: &[AdapterSpan<'_>],
 ) -> Result<Tensor> {
     let d = model.cfg.d_model;
     let h = model.cfg.n_heads;
@@ -625,9 +855,7 @@ fn block_prefill_batch(
 
     let mut attn_in = x.clone();
     rmsnorm_rows(attn_in.data_mut(), d, block.attn_norm.data());
-    let mut q = block.wq.forward(&attn_in)?;
-    let mut k = block.wk.forward(&attn_in)?;
-    let v = block.wv.forward(&attn_in)?;
+    let (mut q, mut k, v) = qkv_project(block, &attn_in, li, spans)?;
     let mut row = 0usize;
     for (bi, &t) in ts.iter().enumerate() {
         let span = row * d..(row + t) * d;
@@ -661,10 +889,10 @@ fn block_prefill_batch(
             row += t;
         }
     }
-    let attn_out = block.wo.forward(&ctx)?;
+    let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
 
-    ffn_branch(block, d, &x1)
+    ffn_branch(block, d, &x1, li, spans)
 }
 
 /// Pick the next token from a logits row: seeded sampling when params and

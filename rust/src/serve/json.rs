@@ -240,6 +240,12 @@ fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
             return Err(err_at(*pos, "expected object key"));
         }
         let key = parse_string(b, pos)?;
+        // Reject duplicate keys outright: `get` is first-match, so a
+        // last-wins or first-wins policy would make lines like
+        // {"adapter":"a","adapter":"b"} silently route ambiguously.
+        if fields.iter().any(|(k, _)| *k == key) {
+            return Err(err_at(*pos, &format!("duplicate object key {key:?}")));
+        }
         skip_ws(b, pos);
         if b.get(*pos) != Some(&b':') {
             return Err(err_at(*pos, "expected ':'"));
@@ -529,6 +535,20 @@ mod tests {
         assert_eq!(Json::Num(-2.0).render(), "-2");
         assert_eq!(Json::Num(1.5).render(), "1.5");
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        for bad in [
+            r#"{"a":1,"a":2}"#,
+            r#"{"adapter":"a","adapter":"b"}"#,
+            r#"{"x":{"k":1,"k":2}}"#,
+            r#"{"a":1,"b":{"c":[{"d":0,"d":1}]}}"#,
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject duplicate keys in {bad}");
+        }
+        // distinct keys still fine, incl. repeated keys in SIBLING objects
+        assert!(Json::parse(r#"[{"a":1},{"a":2}]"#).is_ok());
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! accounting (peak resident / peak shared pages) rides on the report —
 //! that is where `repro bench-serve`'s `BENCH_serve.json` gets its
 //! serving-memory numbers.
+//!
+//! `adapter_mix` turns the run into a mixed-adapter scenario: client `i`
+//! routes every request to `adapter_mix[i % len]` (`"-"` = the baseline,
+//! no `"adapter"` field), so one continuous batch carries several LoRA
+//! deltas over the shared 2-bit base.  `churn_adapter` additionally
+//! load/unloads a named adapter over a side connection WHILE the load
+//! runs, exercising the registry's deferred-unload path under traffic.
+//! The post-run stats scrape picks up the server's per-adapter token
+//! counts and delta-GEMM overhead fractions for `BENCH_serve.json`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -50,6 +59,15 @@ pub struct LoadOptions {
     /// line per request) to this path — byte-comparable across runs, the
     /// CI proof that `--speculate` changes no output bits.
     pub transcript: Option<String>,
+    /// Round-robin client->adapter routing: client `i` sends every
+    /// request with `"adapter": adapter_mix[i % len]`; the entry `"-"`
+    /// means the baseline (no adapter field).  Empty = all baseline.
+    pub adapter_mix: Vec<String>,
+    /// `(name, path)`: while the load runs, a side connection repeatedly
+    /// loads then unloads this adapter via `{"cmd":"adapter"}` — the
+    /// churn scenario.  Keep the name OUT of `adapter_mix` unless you
+    /// want routed requests racing the unloads.
+    pub churn_adapter: Option<(String, String)>,
 }
 
 /// Per-request observation (offsets from the run epoch, seconds).
@@ -61,6 +79,8 @@ struct ReqRecord {
     done_at: f64,
     n_tokens: usize,
     tokens: Vec<i64>,
+    /// Adapter this request was routed to (`None` = baseline).
+    adapter: Option<String>,
 }
 
 /// KV block accounting scraped from the server's stats frame after the
@@ -101,11 +121,29 @@ impl SpecSnapshot {
     }
 }
 
+/// One registered adapter's registry accounting scraped from the stats
+/// frame's `adapters` array.
+#[derive(Clone, Debug, Default)]
+pub struct AdapterSnapshot {
+    pub name: String,
+    pub rank: usize,
+    pub n_adapted: usize,
+    pub resident_bytes: usize,
+    pub refs: usize,
+    pub tokens: usize,
+    pub draining: bool,
+    /// Extra low-rank delta FLOPs as a fraction of the base model's
+    /// per-token linear FLOPs.
+    pub delta_overhead: f64,
+}
+
 /// One `{"cmd":"stats"}` round trip's worth of server accounting.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct StatsSnapshot {
     pub kv: KvSnapshot,
     pub spec: Option<SpecSnapshot>,
+    pub adapters: Vec<AdapterSnapshot>,
+    pub baseline_tokens: usize,
 }
 
 /// Aggregated results of one load run.
@@ -126,6 +164,18 @@ pub struct LoadReport {
     /// Post-run speculative-decoding scrape (`None` when the server does
     /// not speculate or the scrape failed).
     pub spec: Option<SpecSnapshot>,
+    /// Post-run registry scrape: one entry per adapter still registered
+    /// (churned-away adapters are gone by then, by design).
+    pub adapters: Vec<AdapterSnapshot>,
+    /// Server-side count of tokens emitted on the baseline (no-adapter)
+    /// path.
+    pub baseline_tokens: usize,
+    /// Client-observed completed tokens per route, sorted by name
+    /// (`"-"` = baseline).  Present whether or not the scrape worked.
+    pub tokens_by_route: Vec<(String, usize)>,
+    /// Completed load->unload cycles the churn thread managed mid-run
+    /// (0 without `churn_adapter`).
+    pub churn_cycles: usize,
 }
 
 impl LoadReport {
@@ -158,6 +208,9 @@ fn run_client(
     let mut crng = Rng::new(o.seed ^ 0xC0FF_EE00_0000_0001);
     let common: Vec<usize> = (0..n_common).map(|_| crng.below(o.vocab)).collect();
 
+    // Round-robin route for THIS client ("-" or empty mix = baseline).
+    let adapter = route_for(o, client);
+
     for ri in 0..o.requests_per_client {
         let id = format!("c{client}-r{ri}");
         let prompt: Vec<String> = common
@@ -175,8 +228,11 @@ fn run_client(
         } else {
             String::new()
         };
+        let route = adapter
+            .map(|a| format!(",\"adapter\":\"{a}\""))
+            .unwrap_or_default();
         let line = format!(
-            "{{\"id\":\"{id}\",\"prompt\":[{}],\"max_new\":{}{sampling}}}\n",
+            "{{\"id\":\"{id}\",\"prompt\":[{}],\"max_new\":{}{sampling}{route}}}\n",
             prompt.join(","),
             o.max_new
         );
@@ -239,6 +295,7 @@ fn run_client(
                         done_at: epoch.elapsed().as_secs_f64(),
                         n_tokens: streamed,
                         tokens,
+                        adapter: adapter.map(String::from),
                     };
                 }
                 Some("error") => {
@@ -252,6 +309,78 @@ fn run_client(
     }
 
     Ok(records)
+}
+
+/// Which adapter this client routes to, if any.
+fn route_for(o: &LoadOptions, client: usize) -> Option<&str> {
+    if o.adapter_mix.is_empty() {
+        return None;
+    }
+    let a = o.adapter_mix[client % o.adapter_mix.len()].as_str();
+    (a != "-").then_some(a)
+}
+
+/// Send one `{"cmd":"adapter"}` line and read the single reply frame.
+/// `Ok(true)` = acked with an adapter event, `Ok(false)` = the server
+/// answered with an error frame (tolerated: e.g. a reload racing a
+/// still-draining unload); `Err` = transport/parse failure.
+fn adapter_cmd(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    body: &str,
+) -> Result<bool> {
+    writer
+        .write_all(body.as_bytes())
+        .map_err(|e| Error::io(format!("send adapter cmd: {e}")))?;
+    let mut line = String::new();
+    let n = reader
+        .read_line(&mut line)
+        .map_err(|e| Error::io(format!("read adapter ack: {e}")))?;
+    if n == 0 {
+        return Err(Error::io("server closed connection on adapter cmd"));
+    }
+    let j = Json::parse(line.trim())?;
+    match j.get("event").and_then(Json::as_str) {
+        Some("adapter") => Ok(true),
+        Some("error") => Ok(false),
+        _ => Err(Error::config(format!("unexpected adapter ack: {line}"))),
+    }
+}
+
+/// The churn loop: load `name` from `path`, dwell briefly, unload, until
+/// `done`.  Returns the number of completed load+unload cycles.
+fn run_churn(
+    addr: &str,
+    name: &str,
+    path: &str,
+    done: &std::sync::atomic::AtomicBool,
+) -> Result<usize> {
+    use std::sync::atomic::Ordering;
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::io(format!("churn connect {addr}: {e}")))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| Error::io(format!("clone socket: {e}")))?;
+    let mut reader = BufReader::new(stream);
+    let load = format!(
+        "{{\"cmd\":\"adapter\",\"op\":\"load\",\"name\":\"{name}\",\"path\":\"{path}\"}}\n"
+    );
+    let unload = format!("{{\"cmd\":\"adapter\",\"op\":\"unload\",\"name\":\"{name}\"}}\n");
+    let mut cycles = 0usize;
+    while !done.load(Ordering::Relaxed) {
+        let loaded = adapter_cmd(&mut writer, &mut reader, &load)?;
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let unloaded = adapter_cmd(&mut writer, &mut reader, &unload)?;
+        if loaded && unloaded {
+            cycles += 1;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(15));
+    }
+    // Leave the registry as we found it — a final best-effort unload in
+    // case the loop exited between a load and its unload (nothing routes
+    // to the churn adapter, so an unload never defers).
+    let _ = adapter_cmd(&mut writer, &mut reader, &unload);
+    Ok(cycles)
 }
 
 /// Peak number of intervals `[first_token, done)` that overlap.
@@ -279,18 +408,40 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         return Err(Error::config("bench-serve wants clients >= 1 and requests >= 1"));
     }
     let epoch = Instant::now();
-    let results: Vec<Result<Vec<ReqRecord>>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..o.clients)
-            .map(|ci| s.spawn(move || run_client(&o.addr, ci, o, epoch)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| match h.join() {
-                Ok(r) => r,
-                Err(_) => Err(Error::io("load client thread panicked")),
-            })
-            .collect()
-    });
+    let churn_done = std::sync::atomic::AtomicBool::new(false);
+    let (results, churn_cycles): (Vec<Result<Vec<ReqRecord>>>, usize) =
+        std::thread::scope(|s| {
+            let churn = o.churn_adapter.as_ref().map(|(name, path)| {
+                let done = &churn_done;
+                s.spawn(move || run_churn(&o.addr, name, path, done))
+            });
+            let handles: Vec<_> = (0..o.clients)
+                .map(|ci| s.spawn(move || run_client(&o.addr, ci, o, epoch)))
+                .collect();
+            let results = handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(Error::io("load client thread panicked")),
+                })
+                .collect();
+            churn_done.store(true, std::sync::atomic::Ordering::Relaxed);
+            let cycles = match churn {
+                Some(h) => match h.join() {
+                    Ok(Ok(n)) => n,
+                    Ok(Err(e)) => {
+                        eprintln!("bench-serve: adapter churn thread failed: {e}");
+                        0
+                    }
+                    Err(_) => {
+                        eprintln!("bench-serve: adapter churn thread panicked");
+                        0
+                    }
+                },
+                None => 0,
+            };
+            (results, cycles)
+        });
     let wall_secs = epoch.elapsed().as_secs_f64();
 
     // Scrape KV memory + speculative stats BEFORE any shutdown: the
@@ -316,6 +467,11 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     let total_tokens: usize = records.iter().map(|r| r.n_tokens).sum();
     let ttft: Vec<f64> = records.iter().map(|r| r.first_token_at - r.sent_at).collect();
     let total: Vec<f64> = records.iter().map(|r| r.done_at - r.sent_at).collect();
+    let mut by_route = std::collections::BTreeMap::<String, usize>::new();
+    for r in &records {
+        let key = r.adapter.clone().unwrap_or_else(|| "-".to_string());
+        *by_route.entry(key).or_insert(0) += r.n_tokens;
+    }
     Ok(LoadReport {
         requests,
         completed: records.len(),
@@ -324,8 +480,12 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         ttft: LatencySummary::from_secs(ttft),
         total: LatencySummary::from_secs(total),
         peak_concurrent_streams: peak_overlap(&records),
-        kv: stats.map(|s| s.kv),
-        spec: stats.and_then(|s| s.spec),
+        kv: stats.as_ref().map(|s| s.kv),
+        spec: stats.as_ref().and_then(|s| s.spec),
+        adapters: stats.as_ref().map(|s| s.adapters.clone()).unwrap_or_default(),
+        baseline_tokens: stats.as_ref().map(|s| s.baseline_tokens).unwrap_or(0),
+        tokens_by_route: by_route.into_iter().collect(),
+        churn_cycles,
     })
 }
 
@@ -394,7 +554,34 @@ pub fn fetch_stats(addr: &str) -> Result<StatsSnapshot> {
                 .max(0) as usize,
         }
     });
-    Ok(StatsSnapshot { kv, spec })
+    let adapters = j
+        .get("adapters")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|a| {
+                    let f =
+                        |n: &str| a.get(n).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+                    AdapterSnapshot {
+                        name: a.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                        rank: f("rank"),
+                        n_adapted: f("n_adapted"),
+                        resident_bytes: f("resident_bytes"),
+                        refs: f("refs"),
+                        tokens: f("tokens"),
+                        draining: a.get("draining").and_then(Json::as_bool).unwrap_or(false),
+                        delta_overhead: a
+                            .get("delta_overhead")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                    }
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let baseline_tokens =
+        j.get("baseline_tokens").and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+    Ok(StatsSnapshot { kv, spec, adapters, baseline_tokens })
 }
 
 #[cfg(test)]
@@ -410,6 +597,7 @@ mod tests {
             done_at: b,
             n_tokens: 1,
             tokens: vec![0],
+            adapter: None,
         };
         // three overlapping, one disjoint
         let recs = vec![r(0.0, 1.0), r(0.2, 0.8), r(0.5, 1.5), r(2.0, 3.0)];
@@ -418,5 +606,30 @@ mod tests {
         let recs = vec![r(0.0, 1.0), r(1.0, 2.0)];
         assert_eq!(peak_overlap(&recs), 1);
         assert_eq!(peak_overlap(&[]), 0);
+    }
+
+    #[test]
+    fn adapter_mix_round_robins_clients() {
+        let mut o = LoadOptions {
+            addr: String::new(),
+            clients: 5,
+            requests_per_client: 1,
+            prompt_len: 4,
+            max_new: 4,
+            vocab: 16,
+            common_prefix: 0,
+            temperature: 0.0,
+            seed: 1,
+            shutdown_after: false,
+            transcript: None,
+            adapter_mix: vec!["a".into(), "-".into(), "b".into()],
+            churn_adapter: None,
+        };
+        assert_eq!(route_for(&o, 0), Some("a"));
+        assert_eq!(route_for(&o, 1), None); // "-" = baseline
+        assert_eq!(route_for(&o, 2), Some("b"));
+        assert_eq!(route_for(&o, 3), Some("a")); // wraps round-robin
+        o.adapter_mix.clear();
+        assert_eq!(route_for(&o, 0), None);
     }
 }

@@ -27,14 +27,21 @@
 //!   **bitwise identical** to plain decode for greedy and seeded
 //!   sampling alike; per-sequence fallback on draft-pool exhaustion or
 //!   acceptance collapse.
+//! * [`adapters`] — the refcounted runtime [`AdapterRegistry`]: named
+//!   LoRA/DoRA [`crate::infer::AdapterSet`]s served over one shared 2-bit
+//!   base, loaded at boot (`--adapter NAME=PATH`) or at runtime
+//!   (`{"cmd":"adapter","op":"load"}`), with deferred unload while
+//!   sequences are in flight and per-adapter token accounting.
 //! * [`json`] / [`protocol`] — the newline-delimited JSON line protocol
-//!   (now incl. `{"cmd":"stats"}` -> KV memory stats frames).
+//!   (now incl. `{"cmd":"stats"}` -> KV memory + adapter stats frames,
+//!   per-request `"adapter"` routing, and the `adapter` command).
 //! * [`server`] — the long-lived `repro serve` TCP loop (std threads +
 //!   channels).
 //! * [`loadgen`] — the `repro bench-serve` concurrent load generator
 //!   (common-prefix prompts to exercise sharing, KV stats scrape,
 //!   `BENCH_serve.json`).
 
+pub mod adapters;
 pub mod block;
 pub mod decode;
 pub mod json;
@@ -47,6 +54,7 @@ pub mod scheduler;
 pub mod server;
 pub mod spec;
 
+pub use adapters::{AdapterRegistry, AdapterStat};
 pub use block::{BlockPool, KvStats};
 pub use kv::{KvCache, KvPool};
 pub use paged::PagedKvCache;

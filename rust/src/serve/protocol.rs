@@ -6,7 +6,10 @@
 //! {"id":"r1","prompt":[5,17,3],"max_new":32}
 //! {"id":"r2","prompt":[5],"max_new":16,"temperature":0.8,"top_k":40,"top_p":0.95,"seed":7}
 //! {"id":"r3","prompt":[5],"max_new":16,"stop":0}
+//! {"id":"r4","prompt":[5],"max_new":16,"adapter":"taskA"}
 //! {"cmd":"stats"}
+//! {"cmd":"adapter","op":"load","name":"taskA","path":"checkpoints/adapter_taskA.apq"}
+//! {"cmd":"adapter","op":"unload","name":"taskA"}
 //! {"cmd":"shutdown"}
 //! ```
 //!
@@ -14,8 +17,13 @@
 //! token-id array; `max_new` defaults to 32.  Omitting `temperature` (or
 //! setting it `<= 0`) selects greedy decoding; otherwise temperature /
 //! top-k / top-p / seed configure the seeded sampler.  `stop` ends the
-//! stream early when that token is produced.  `{"cmd":"stats"}` asks the
-//! engine for a one-off stats frame (KV memory + queue state).
+//! stream early when that token is produced.  `"adapter"` routes the
+//! request through a named registry adapter (unknown names get an error
+//! frame); omitted = the model's default path.  `{"cmd":"stats"}` asks
+//! the engine for a one-off stats frame (KV memory + queue state).
+//! `{"cmd":"adapter",...}` loads an APIQADPT sidecar into (or unloads it
+//! from) the engine's registry at runtime; an unload with sequences in
+//! flight answers `"status":"draining"` and completes when they finish.
 //!
 //! ## Frames (server -> client, one JSON object per line)
 //!
@@ -26,13 +34,17 @@
 //!           "max_gap_ms":2.0,"shared_prefix_tokens":0,
 //!           "spec_proposed":16,"spec_accepted":13}}
 //! {"id":"r1","event":"error","message":"..."}
+//! {"id":"","event":"adapter","op":"load","name":"taskA","status":"loaded"}
 //! {"id":"","event":"stats","active":1,"pending":0,"completed":7,
 //!  "kv":{"block_size":32,"blocks_total":384,"resident_blocks":12,"free_blocks":4,
 //!        "used_blocks":8,"shared_blocks":2,"peak_resident_blocks":12,
 //!        "peak_shared_blocks":3,"block_bytes":65536,"resident_bytes":786432,
 //!        "peak_resident_bytes":786432},
 //!  "spec":{"k":4,"proposed":480,"accepted":401,"acceptance":0.835,
-//!          "cycles":120,"fallbacks":0,"draft_kv":{...same fields as kv...}}}
+//!          "cycles":120,"fallbacks":0,"draft_kv":{...same fields as kv...}},
+//!  "baseline_tokens":120,
+//!  "adapters":[{"name":"taskA","rank":4,"n_adapted":28,"resident_bytes":917504,
+//!               "refs":1,"tokens":64,"draining":false,"delta_overhead":0.021}]}
 //! ```
 //!
 //! Tokens stream as they are produced (`index` counts generated tokens
@@ -47,6 +59,7 @@
 //! acceptance even after its requests finished.
 
 use crate::error::{Error, Result};
+use crate::serve::adapters::AdapterStat;
 use crate::serve::block::KvStats;
 use crate::serve::json::Json;
 use crate::serve::sampling::SamplingParams;
@@ -64,6 +77,24 @@ pub struct WireRequest {
     pub max_new: usize,
     pub sampling: Option<SamplingParams>,
     pub stop: Option<i32>,
+    /// Route through a named registry adapter; `None` = default path.
+    pub adapter: Option<String>,
+}
+
+/// Registry operation requested over the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterOp {
+    Load,
+    Unload,
+}
+
+impl AdapterOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdapterOp::Load => "load",
+            AdapterOp::Unload => "unload",
+        }
+    }
 }
 
 /// One line of client input.
@@ -71,6 +102,8 @@ pub struct WireRequest {
 pub enum ClientLine {
     Request(WireRequest),
     Stats,
+    /// Runtime registry change: `path` is required for `Load`.
+    Adapter { op: AdapterOp, name: String, path: Option<String> },
     Shutdown,
 }
 
@@ -81,6 +114,28 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
         return match cmd {
             "stats" => Ok(ClientLine::Stats),
             "shutdown" => Ok(ClientLine::Shutdown),
+            "adapter" => {
+                let op = match j.get("op").and_then(Json::as_str) {
+                    Some("load") => AdapterOp::Load,
+                    Some("unload") => AdapterOp::Unload,
+                    Some(other) => {
+                        return Err(Error::config(format!("unknown adapter op '{other}'")))
+                    }
+                    None => {
+                        return Err(Error::config("adapter cmd needs 'op':\"load\"|\"unload\""))
+                    }
+                };
+                let name = j
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::config("adapter cmd needs a string 'name'"))?
+                    .to_string();
+                let path = j.get("path").and_then(Json::as_str).map(str::to_string);
+                if op == AdapterOp::Load && path.is_none() {
+                    return Err(Error::config("adapter load needs a string 'path'"));
+                }
+                Ok(ClientLine::Adapter { op, name, path })
+            }
             other => Err(Error::config(format!("unknown cmd '{other}'"))),
         };
     }
@@ -120,7 +175,15 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
         Some(v) => Some(to_token(v)?),
         None => None,
     };
-    Ok(ClientLine::Request(WireRequest { id, prompt, max_new, sampling, stop }))
+    let adapter = match j.get("adapter") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| Error::config("'adapter' must be a string name"))?
+                .to_string(),
+        ),
+    };
+    Ok(ClientLine::Request(WireRequest { id, prompt, max_new, sampling, stop, adapter }))
 }
 
 /// Token ids must fit i32; reject instead of silently wrapping.
@@ -167,14 +230,18 @@ fn kv_json(kv: &KvStats) -> Json {
 }
 
 /// Render the engine-wide stats frame: queue/batch counters plus the
-/// paged KV pool's block accounting (current and high-water) and — when
-/// the engine speculates — the draft/verify counters and draft KV pool.
+/// paged KV pool's block accounting (current and high-water), — when
+/// the engine speculates — the draft/verify counters and draft KV pool,
+/// and the adapter registry (per-adapter refs/tokens/overhead plus the
+/// default path's `baseline_tokens`).
 pub fn stats_frame(
     kv: &KvStats,
     active: usize,
     pending: usize,
     completed: usize,
     spec: Option<&SpecStats>,
+    adapters: &[AdapterStat],
+    baseline_tokens: u64,
 ) -> String {
     let mut fields = vec![
         ("id".to_string(), Json::from("")),
@@ -201,7 +268,41 @@ pub fn stats_frame(
             ]),
         ));
     }
+    fields.push(("baseline_tokens".to_string(), Json::from(baseline_tokens as i64)));
+    fields.push((
+        "adapters".to_string(),
+        Json::Arr(adapters.iter().map(adapter_json).collect()),
+    ));
     Json::Obj(fields).render()
+}
+
+fn adapter_json(a: &AdapterStat) -> Json {
+    Json::Obj(vec![
+        ("name".to_string(), Json::from(a.name.as_str())),
+        ("rank".to_string(), Json::from(a.rank)),
+        ("n_adapted".to_string(), Json::from(a.n_adapted)),
+        ("resident_bytes".to_string(), Json::from(a.resident_bytes)),
+        ("refs".to_string(), Json::from(a.refs)),
+        ("tokens".to_string(), Json::from(a.tokens as i64)),
+        ("draining".to_string(), Json::Bool(a.draining)),
+        (
+            "delta_overhead".to_string(),
+            Json::Num((a.delta_overhead * 1e6).round() / 1e6),
+        ),
+    ])
+}
+
+/// Render the ack frame for an `adapter` command.  `status` is one of
+/// `"loaded"`, `"unloaded"`, or `"draining"` (deferred unload).
+pub fn adapter_frame(op: AdapterOp, name: &str, status: &str) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), Json::from("")),
+        ("event".to_string(), Json::from("adapter")),
+        ("op".to_string(), Json::from(op.as_str())),
+        ("name".to_string(), Json::from(name)),
+        ("status".to_string(), Json::from(status)),
+    ])
+    .render()
 }
 
 /// Render an error frame (empty `id` when the failure precedes parsing).
@@ -256,6 +357,52 @@ mod tests {
         assert_eq!(r.max_new, DEFAULT_MAX_NEW);
         assert!(r.sampling.is_none());
         assert!(r.stop.is_none());
+        assert!(r.adapter.is_none());
+    }
+
+    #[test]
+    fn parses_adapter_routing_and_cmds() {
+        let ClientLine::Request(r) =
+            parse_line(r#"{"id":"a","prompt":[1],"adapter":"taskA"}"#).unwrap()
+        else {
+            panic!("expected request");
+        };
+        assert_eq!(r.adapter.as_deref(), Some("taskA"));
+        assert!(
+            parse_line(r#"{"id":"a","prompt":[1],"adapter":7}"#).is_err(),
+            "non-string adapter rejected"
+        );
+
+        assert_eq!(
+            parse_line(r#"{"cmd":"adapter","op":"load","name":"t","path":"x.apq"}"#).unwrap(),
+            ClientLine::Adapter {
+                op: AdapterOp::Load,
+                name: "t".to_string(),
+                path: Some("x.apq".to_string())
+            }
+        );
+        assert_eq!(
+            parse_line(r#"{"cmd":"adapter","op":"unload","name":"t"}"#).unwrap(),
+            ClientLine::Adapter { op: AdapterOp::Unload, name: "t".to_string(), path: None }
+        );
+        for bad in [
+            r#"{"cmd":"adapter"}"#,
+            r#"{"cmd":"adapter","op":"load","name":"t"}"#,
+            r#"{"cmd":"adapter","op":"evict","name":"t"}"#,
+            r#"{"cmd":"adapter","op":"load","path":"x.apq"}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn adapter_frame_is_parseable() {
+        let f = adapter_frame(AdapterOp::Unload, "taskA", "draining");
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("adapter"));
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("unload"));
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("taskA"));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("draining"));
     }
 
     #[test]
@@ -305,7 +452,7 @@ mod tests {
             resident_bytes: 1536,
             peak_resident_bytes: 1536,
         };
-        let f = stats_frame(&kv, 2, 1, 9, None);
+        let f = stats_frame(&kv, 2, 1, 9, None, &[], 0);
         let j = Json::parse(&f).unwrap();
         assert_eq!(j.get("event").and_then(Json::as_str), Some("stats"));
         assert_eq!(j.get("active").and_then(Json::as_i64), Some(2));
@@ -316,7 +463,22 @@ mod tests {
         assert_eq!(kvj.get("peak_shared_blocks").and_then(Json::as_i64), Some(3));
         assert_eq!(kvj.get("peak_resident_bytes").and_then(Json::as_i64), Some(1536));
         assert!(j.get("spec").is_none(), "no spec object when not speculating");
+        assert_eq!(
+            j.get("adapters").and_then(Json::as_arr).map(|a| a.len()),
+            Some(0),
+            "adapters array present even when the registry is empty"
+        );
 
+        let ad = crate::serve::adapters::AdapterStat {
+            name: "taskA".to_string(),
+            rank: 4,
+            n_adapted: 28,
+            resident_bytes: 1024,
+            refs: 1,
+            tokens: 64,
+            draining: true,
+            delta_overhead: 0.0215,
+        };
         let spec = SpecStats {
             k: 4,
             proposed: 40,
@@ -325,8 +487,16 @@ mod tests {
             fallbacks: 1,
             draft_kv: kv,
         };
-        let f = stats_frame(&kv, 2, 1, 9, Some(&spec));
+        let f = stats_frame(&kv, 2, 1, 9, Some(&spec), std::slice::from_ref(&ad), 120);
         let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("baseline_tokens").and_then(Json::as_i64), Some(120));
+        let adj = &j.get("adapters").and_then(Json::as_arr).expect("adapters array")[0];
+        assert_eq!(adj.get("name").and_then(Json::as_str), Some("taskA"));
+        assert_eq!(adj.get("rank").and_then(Json::as_i64), Some(4));
+        assert_eq!(adj.get("refs").and_then(Json::as_i64), Some(1));
+        assert_eq!(adj.get("tokens").and_then(Json::as_i64), Some(64));
+        assert_eq!(adj.get("draining").and_then(Json::as_bool), Some(true));
+        assert!((adj.get("delta_overhead").and_then(Json::as_f64).unwrap() - 0.0215).abs() < 1e-9);
         let sj = j.get("spec").expect("spec object");
         assert_eq!(sj.get("k").and_then(Json::as_i64), Some(4));
         assert_eq!(sj.get("proposed").and_then(Json::as_i64), Some(40));

@@ -44,7 +44,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::Result;
-use crate::infer::{argmax, PackedModel};
+use crate::infer::{argmax, AdapterSet, PackedModel};
+use crate::serve::adapters::AdapterRegistry;
 use crate::serve::block::{BlockPool, KvStats};
 use crate::serve::decode::pick;
 use crate::serve::paged::PagedKvCache;
@@ -121,6 +122,10 @@ pub struct GenRequest {
     pub sampling: Option<SamplingParams>,
     /// Optional stop token: generation ends when it is emitted.
     pub stop: Option<i32>,
+    /// Route through a registry adapter by name (`None` = the model's
+    /// default path — its baked-in adapters if any, else the frozen
+    /// base).  Unknown names are rejected at admission.
+    pub adapter: Option<String>,
     pub queued_at: Instant,
 }
 
@@ -201,6 +206,11 @@ pub enum StepEvent {
 
 struct Running {
     req: GenRequest,
+    /// Resolved EXPLICIT adapter (`req.adapter` looked up at admission);
+    /// `None` = the model's default path.  The `Arc` identity doubles as
+    /// the grouping key for batched delta GEMMs and the donor-match key
+    /// for prefix sharing.
+    adapter: Option<Arc<AdapterSet>>,
     cache: PagedKvCache,
     rng: Option<Rng>,
     /// prompt + generated tokens.
@@ -255,10 +265,23 @@ impl Running {
 /// An admission staged for this tick's batched prefill.
 struct Staged {
     req: GenRequest,
+    adapter: Option<Arc<AdapterSet>>,
     cache: PagedKvCache,
     admitted_at: Instant,
     /// Prompt positions mapped from a donor's pages.
     shared: usize,
+}
+
+/// Adapter identity match for KV prefix sharing: adapters alter wk/wv,
+/// so cached K/V rows depend on the adapter that wrote them — sharing
+/// across different adapters (or adapter vs default) would splice another
+/// task's K/V into this sequence's attention.
+fn same_adapter(a: Option<&Arc<AdapterSet>>, b: Option<&Arc<AdapterSet>>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    }
 }
 
 /// Longest common prefix of two token slices.
@@ -276,6 +299,8 @@ pub struct Scheduler<'m> {
     completed: usize,
     /// Draft model + draft KV pool + counters when speculating.
     spec: Option<SpecEngine>,
+    /// Named runtime adapters served over the shared base.
+    registry: AdapterRegistry,
 }
 
 impl<'m> Scheduler<'m> {
@@ -294,7 +319,18 @@ impl<'m> Scheduler<'m> {
             pool,
             completed: 0,
             spec: None,
+            registry: AdapterRegistry::new(model.cfg),
         }
+    }
+
+    /// The runtime adapter registry (stats frames, bench reports).
+    pub fn adapters(&self) -> &AdapterRegistry {
+        &self.registry
+    }
+
+    /// Mutable registry access for `adapter` load/unload commands.
+    pub fn adapters_mut(&mut self) -> &mut AdapterRegistry {
+        &mut self.registry
     }
 
     /// A scheduler that speculates: `draft` proposes `cfg.speculate`
@@ -373,13 +409,17 @@ impl<'m> Scheduler<'m> {
         }
     }
 
-    /// Drop everything (engine shutdown), returning every block.
+    /// Drop everything (engine shutdown), returning every block and
+    /// adapter reference.
     pub fn clear(&mut self) {
         self.pending.clear();
         for r in self.active.iter_mut() {
             r.cache.release_all(&mut self.pool);
             if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
                 d.cache.release_all(&mut se.pool);
+            }
+            if let Some(name) = r.req.adapter.as_deref() {
+                self.registry.release(name);
             }
         }
         self.active.clear();
@@ -392,13 +432,22 @@ impl<'m> Scheduler<'m> {
     /// share only whole pages, so nobody writes into a page another
     /// staged sequence still has to fill.  Always leaves >= 1 prompt
     /// position to prefill — the request needs its own last-position
-    /// logits.
-    fn best_donor(&self, staged: &[Staged], prompt: &[i32]) -> (usize, Option<DonorRef>) {
+    /// logits.  Only same-adapter donors qualify (see [`same_adapter`]):
+    /// K/V rows written under another adapter are not this sequence's.
+    fn best_donor(
+        &self,
+        staged: &[Staged],
+        prompt: &[i32],
+        adapter: Option<&Arc<AdapterSet>>,
+    ) -> (usize, Option<DonorRef>) {
         let cap = prompt.len() - 1;
         let bs = self.pool.block_size();
         let mut best = 0usize;
         let mut donor = None;
         for (i, r) in self.active.iter().enumerate() {
+            if !same_adapter(r.adapter.as_ref(), adapter) {
+                continue;
+            }
             let s = common_prefix(prompt, &r.req.prompt).min(cap).min(r.cache.len());
             if s > best {
                 best = s;
@@ -406,6 +455,9 @@ impl<'m> Scheduler<'m> {
             }
         }
         for (i, sgd) in staged.iter().enumerate() {
+            if !same_adapter(sgd.adapter.as_ref(), adapter) {
+                continue;
+            }
             let aligned = (common_prefix(prompt, &sgd.req.prompt).min(cap) / bs) * bs;
             if aligned > best {
                 best = aligned;
@@ -444,7 +496,26 @@ impl<'m> Scheduler<'m> {
             }
             req.max_new = req.max_new.clamp(1, self.cfg.max_new_cap);
 
-            let (shared, donor) = self.best_donor(&staged, &req.prompt);
+            // Resolve + refcount the routed adapter.  Unknown (or
+            // draining) names reject here — the client gets an error
+            // frame instead of silently falling back to another task's
+            // weights.
+            let adapter = match req.adapter.as_deref() {
+                None => None,
+                Some(name) => match self.registry.acquire(name) {
+                    Ok(set) => Some(set),
+                    Err(e) => {
+                        events.push(StepEvent::Rejected {
+                            key: req.key,
+                            id: req.id,
+                            reason: e.to_string(),
+                        });
+                        continue;
+                    }
+                },
+            };
+
+            let (shared, donor) = self.best_donor(&staged, &req.prompt, adapter.as_ref());
             let mut cache = match donor {
                 Some(DonorRef::Active(i)) => {
                     PagedKvCache::fork_prefix(&self.active[i].cache, shared, &mut self.pool)?
@@ -463,6 +534,12 @@ impl<'m> Scheduler<'m> {
             // outright instead of livelocking the queue.
             if cache.reserve(req.prompt.len(), &mut self.pool).is_err() {
                 cache.release_all(&mut self.pool);
+                // Balance the acquire above: a backed-off request
+                // re-acquires when it re-admits; a rejected one never
+                // enters the batch.
+                if let Some(name) = req.adapter.as_deref() {
+                    self.registry.release(name);
+                }
                 if self.active.is_empty() && staged.is_empty() {
                     events.push(StepEvent::Rejected {
                         key: req.key,
@@ -478,7 +555,7 @@ impl<'m> Scheduler<'m> {
                 self.pending.push_front(req);
                 break;
             }
-            staged.push(Staged { req, cache, admitted_at: Instant::now(), shared });
+            staged.push(Staged { req, adapter, cache, admitted_at: Instant::now(), shared });
         }
         if staged.is_empty() {
             return Ok(());
@@ -490,9 +567,20 @@ impl<'m> Scheduler<'m> {
             staged.iter().map(|s| s.req.prompt[s.cache.len()..].to_vec()).collect();
         let sfx: Vec<&[i32]> = suffixes.iter().map(|v| &v[..]).collect();
         let prefilled = {
+            // Effective set per sequence: the routed adapter, else the
+            // model's default path — exactly what the un-suffixed
+            // wrappers would pass, so an unrouted batch is bitwise the
+            // pre-registry code path.  Arcs are cloned out first so the
+            // set refs don't hold `staged` borrowed against the caches.
+            let arcs: Vec<Option<Arc<AdapterSet>>> =
+                staged.iter().map(|s| s.adapter.clone()).collect();
+            let sets: Vec<Option<&AdapterSet>> = arcs
+                .iter()
+                .map(|a| a.as_deref().or(self.model.default_adapter.as_deref()))
+                .collect();
             let mut caches: Vec<&mut PagedKvCache> =
                 staged.iter_mut().map(|s| &mut s.cache).collect();
-            self.model.prefill_batch(&sfx, &mut caches, &mut self.pool)
+            self.model.prefill_batch_with(&sfx, &mut caches, &mut self.pool, &sets)
         };
         let logits = match prefilled {
             Ok(l) => l,
@@ -501,6 +589,9 @@ impl<'m> Scheduler<'m> {
                 // surfacing it (the engine resets the batch).
                 for s in staged.iter_mut() {
                     s.cache.release_all(&mut self.pool);
+                    if let Some(name) = s.req.adapter.as_deref() {
+                        self.registry.release(name);
+                    }
                 }
                 return Err(e);
             }
@@ -508,7 +599,7 @@ impl<'m> Scheduler<'m> {
         let prefill_secs = t0.elapsed().as_secs_f64();
         let now = Instant::now();
         for (bi, sgd) in staged.into_iter().enumerate() {
-            let Staged { req, cache, admitted_at, shared } = sgd;
+            let Staged { req, adapter, cache, admitted_at, shared } = sgd;
             let mut rng = req.sampling.map(|p| seq_rng(p.seed, 0));
             let tok = pick(logits.row(bi), req.sampling.as_ref(), rng.as_mut());
             let mut run = Running {
@@ -526,7 +617,17 @@ impl<'m> Scheduler<'m> {
                 last_token_at: now,
                 max_gap: 0.0,
                 finish: None,
-                draft: self.spec.as_ref().map(|se| DraftState::new(&se.pool)),
+                // Adapter-routed sequences take the plain decode path —
+                // the draft model has no notion of per-request adapters,
+                // so its proposals would come from the wrong
+                // distribution.  Chosen (and pinned by tests) over
+                // threading adapters through the draft.
+                draft: if adapter.is_none() {
+                    self.spec.as_ref().map(|se| DraftState::new(&se.pool))
+                } else {
+                    None
+                },
+                adapter,
                 spec_proposed: 0,
                 spec_accepted: 0,
                 req,
@@ -568,6 +669,7 @@ impl<'m> Scheduler<'m> {
             let mut caches: Vec<&mut PagedKvCache> = Vec::new();
             let mut rngs: Vec<&mut Option<Rng>> = Vec::new();
             let mut samplings: Vec<Option<SamplingParams>> = Vec::new();
+            let mut adps: Vec<Option<Arc<AdapterSet>>> = Vec::new();
             let mut capacity_hit = false;
             for (i, r) in self.active.iter_mut().enumerate() {
                 if r.finish.is_none() && !handled[i] {
@@ -590,13 +692,21 @@ impl<'m> Scheduler<'m> {
                     idxs.push(i);
                     toks.push(*r.tokens.last().expect("active sequence has tokens"));
                     samplings.push(r.req.sampling);
+                    adps.push(r.adapter.clone());
                     let Running { cache, rng, .. } = r;
                     caches.push(cache);
                     rngs.push(rng);
                 }
             }
             if !idxs.is_empty() {
-                let logits = self.model.forward_step_paged(&toks, &mut caches, &mut self.pool)?;
+                // The mixed-adapter batched step: ONE shared base pass,
+                // per-sequence deltas grouped by adapter identity inside.
+                let sets: Vec<Option<&AdapterSet>> = adps
+                    .iter()
+                    .map(|a| a.as_deref().or(self.model.default_adapter.as_deref()))
+                    .collect();
+                let logits =
+                    self.model.forward_step_paged_with(&toks, &mut caches, &mut self.pool, &sets)?;
                 for (j, &i) in idxs.iter().enumerate() {
                     let tok = pick(logits.row(j), samplings[j].as_ref(), rngs[j].as_mut());
                     picked.push((i, tok));
@@ -606,6 +716,20 @@ impl<'m> Scheduler<'m> {
         let now = Instant::now();
         for (i, tok) in picked {
             self.active[i].emit_token(tok, now, &mut events);
+        }
+
+        // -- per-adapter token accounting (every emitter of this step is
+        //    still in `active`; eviction below only re-packages already
+        //    counted tokens) --
+        for ev in &events {
+            if let StepEvent::Token { key, .. } = ev {
+                let name = self
+                    .active
+                    .iter()
+                    .find(|r| r.req.key == *key)
+                    .and_then(|r| r.req.adapter.as_deref());
+                self.registry.count_tokens(name, 1);
+            }
         }
 
         // -- evict finished sequences (stable order), reclaim blocks --
@@ -629,6 +753,9 @@ impl<'m> Scheduler<'m> {
                     r.cache.release_all(&mut self.pool);
                     if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
                         d.cache.release_all(&mut se.pool);
+                    }
+                    if let Some(name) = r.req.adapter.as_deref() {
+                        self.registry.release(name);
                     }
                     events.push(StepEvent::Done {
                         key: r.req.key,
@@ -672,6 +799,9 @@ impl<'m> Scheduler<'m> {
             if r.finish.is_some() {
                 continue;
             }
+            // Adapter-routed sequences never get draft state (admission
+            // leaves it `None`): they fall through to the plain batched
+            // step, which threads their adapter.
             let Some(d) = r.draft.as_mut() else { continue };
             if d.disabled {
                 continue;

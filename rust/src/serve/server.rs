@@ -29,8 +29,9 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::infer::PackedModel;
-use crate::serve::protocol::{self, ClientLine, WireRequest};
+use crate::infer::{AdapterSet, PackedModel};
+use crate::model::checkpoint;
+use crate::serve::protocol::{self, AdapterOp, ClientLine, WireRequest};
 use crate::serve::scheduler::{GenRequest, SchedConfig, Scheduler, StepEvent};
 
 /// Server configuration.
@@ -42,6 +43,10 @@ pub struct ServeOptions {
     /// Honor `{"cmd":"shutdown"}` from clients (CI uses this for clean
     /// teardown; disable for anything internet-facing).
     pub allow_remote_shutdown: bool,
+    /// Adapter sidecars registered at boot: `(name, path)` pairs from
+    /// repeated `--adapter NAME=PATH` flags.  Sidecars are validated
+    /// against the model config before the engine starts.
+    pub adapters: Vec<(String, String)>,
 }
 
 impl Default for ServeOptions {
@@ -50,6 +55,7 @@ impl Default for ServeOptions {
             addr: "127.0.0.1:7878".to_string(),
             sched: SchedConfig::default(),
             allow_remote_shutdown: true,
+            adapters: Vec::new(),
         }
     }
 }
@@ -59,6 +65,9 @@ enum EngineMsg {
     /// One-off stats query: the engine renders a stats frame (KV block
     /// accounting + queue state) straight back to this connection.
     Stats { out: Sender<String> },
+    /// Runtime registry change; the ack (or error) frame goes straight
+    /// back to this connection.
+    Adapter { op: AdapterOp, name: String, path: Option<String>, out: Sender<String> },
     Shutdown,
 }
 
@@ -104,6 +113,21 @@ pub fn spawn_with_draft(
     draft: Option<Arc<PackedModel>>,
     opts: ServeOptions,
 ) -> Result<Server> {
+    // Load + validate boot adapters before binding: a bad sidecar fails
+    // the whole boot instead of silently serving a partial registry.
+    let mut preload: Vec<AdapterSet> = Vec::with_capacity(opts.adapters.len());
+    for (name, path) in &opts.adapters {
+        if name.is_empty() {
+            return Err(Error::config(format!("--adapter needs NAME=PATH, got '={path}'")));
+        }
+        if preload.iter().any(|s| s.name == *name) {
+            return Err(Error::config(format!("duplicate --adapter name '{name}'")));
+        }
+        let mut set = checkpoint::load_adapter(path, &model.cfg)?;
+        set.name = name.clone();
+        preload.push(set);
+    }
+
     let listener = TcpListener::bind(&opts.addr)
         .map_err(|e| Error::io(format!("bind {}: {e}", opts.addr)))?;
     let addr = listener
@@ -113,7 +137,7 @@ pub fn spawn_with_draft(
     let stopping = Arc::new(AtomicBool::new(false));
 
     let sched_cfg = opts.sched;
-    let engine = std::thread::spawn(move || run_engine(model, draft, sched_cfg, rx));
+    let engine = std::thread::spawn(move || run_engine(model, draft, sched_cfg, preload, rx));
 
     let accept_tx = tx.clone();
     let accept_stop = Arc::clone(&stopping);
@@ -142,8 +166,16 @@ pub fn run(
     draft: Option<Arc<PackedModel>>,
     opts: ServeOptions,
 ) -> Result<()> {
+    let adapter_names: Vec<String> = opts.adapters.iter().map(|(n, _)| n.clone()).collect();
     let server = spawn_with_draft(model, draft, opts)?;
     println!("serve: listening on {}", server.addr);
+    if !adapter_names.is_empty() {
+        println!(
+            "serve: {} adapter(s) registered: {}",
+            adapter_names.len(),
+            adapter_names.join(", ")
+        );
+    }
     // Line-buffered stdout under redirection: flush so the CI smoke test
     // sees the address immediately.
     let _ = std::io::stdout().flush();
@@ -156,12 +188,20 @@ fn run_engine(
     model: Arc<PackedModel>,
     draft: Option<Arc<PackedModel>>,
     cfg: SchedConfig,
+    preload: Vec<AdapterSet>,
     rx: Receiver<EngineMsg>,
 ) {
     let mut sched = match draft {
         Some(d) if cfg.speculate > 0 => Scheduler::with_draft(&model, cfg, d),
         _ => Scheduler::new(&model, cfg),
     };
+    // Names were validated in `spawn_with_draft`; a load can only fail on
+    // a duplicate, which the pre-check excluded.
+    for set in preload {
+        if let Err(e) = sched.adapters_mut().load(set) {
+            eprintln!("serve: adapter preload failed: {e}");
+        }
+    }
     let mut outs: HashMap<u64, Sender<String>> = HashMap::new();
     let mut next_key = 1u64;
     'engine: loop {
@@ -170,7 +210,7 @@ fn run_engine(
             loop {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if !handle_msg(msg, &mut sched, &mut outs, &mut next_key) {
+                        if !handle_msg(msg, &model, &mut sched, &mut outs, &mut next_key) {
                             break 'engine;
                         }
                     }
@@ -181,7 +221,7 @@ fn run_engine(
         } else {
             match rx.recv() {
                 Ok(msg) => {
-                    if !handle_msg(msg, &mut sched, &mut outs, &mut next_key) {
+                    if !handle_msg(msg, &model, &mut sched, &mut outs, &mut next_key) {
                         break 'engine;
                     }
                 }
@@ -227,6 +267,7 @@ fn run_engine(
 /// Returns false when the engine should exit.
 fn handle_msg(
     msg: EngineMsg,
+    model: &PackedModel,
     sched: &mut Scheduler<'_>,
     outs: &mut HashMap<u64, Sender<String>>,
     next_key: &mut u64,
@@ -243,6 +284,7 @@ fn handle_msg(
                 max_new: wire.max_new,
                 sampling: wire.sampling,
                 stop: wire.stop,
+                adapter: wire.adapter,
                 queued_at,
             });
             true
@@ -254,7 +296,35 @@ fn handle_msg(
                 sched.n_pending(),
                 sched.n_completed(),
                 sched.spec_stats().as_ref(),
+                &sched.adapters().stats(),
+                sched.adapters().baseline_tokens(),
             );
+            let _ = out.send(frame);
+            true
+        }
+        EngineMsg::Adapter { op, name, path, out } => {
+            let result = match op {
+                AdapterOp::Load => path
+                    .as_deref()
+                    .ok_or_else(|| Error::config("adapter load needs a path"))
+                    .and_then(|p| checkpoint::load_adapter(p, &model.cfg))
+                    .and_then(|mut set| {
+                        set.name = name.clone();
+                        sched.adapters_mut().load(set)
+                    })
+                    .map(|()| "loaded"),
+                AdapterOp::Unload => sched.adapters_mut().unload(&name).map(|now| {
+                    if now {
+                        "unloaded"
+                    } else {
+                        "draining"
+                    }
+                }),
+            };
+            let frame = match result {
+                Ok(status) => protocol::adapter_frame(op, &name, status),
+                Err(e) => protocol::error_frame("", &e.to_string()),
+            };
             let _ = out.send(frame);
             true
         }
@@ -306,6 +376,13 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineMsg>, allow_shutdown: bool) {
             }
             Ok(ClientLine::Stats) => {
                 if tx.send(EngineMsg::Stats { out: otx.clone() }).is_err() {
+                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    break;
+                }
+            }
+            Ok(ClientLine::Adapter { op, name, path }) => {
+                let msg = EngineMsg::Adapter { op, name, path, out: otx.clone() };
+                if tx.send(msg).is_err() {
                     let _ = otx.send(protocol::error_frame("", "engine stopped"));
                     break;
                 }

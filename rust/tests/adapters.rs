@@ -1,0 +1,518 @@
+//! Multi-adapter serving tests: several LoRA/DoRA adapter sets batched
+//! over ONE shared 2-bit base.  Pins the refactor's core contracts:
+//! every sequence in a mixed-adapter batch is bitwise identical to a
+//! solo run of the same request, the registry's load -> route -> unload
+//! lifecycle defers unloads while sequences are in flight, DoRA and
+//! plain LoRA mix in one decode tick, adapter-routed requests fall back
+//! to plain decode under a speculating scheduler, and the server routes
+//! `"adapter"` requests end to end with per-adapter stats.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::{
+    Adapter, AdapterSet, PackedModel, ADAPTER_SLOTS, SLOT_WDOWN, SLOT_WO, SLOT_WQ,
+};
+use repro::model::{checkpoint, ModelConfig, ParamStore, TINY};
+use repro::quant::QuantSpec;
+use repro::serve::json::Json;
+use repro::serve::scheduler::{GenRequest, StepEvent};
+use repro::serve::{KvCache, SamplingParams, SchedConfig, Scheduler, ServeOptions};
+use repro::tensor::{Rng, Tensor};
+
+/// Open-clip qparams with live (random) LoRA B so the BAKED-IN adapters
+/// contribute — the baseline route then exercises the default set while
+/// explicit routes override it.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+fn packed_tiny(seed: u64) -> PackedModel {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(seed);
+    let qp = open_qparams_with_lora(spec, 4, seed ^ 0xAD);
+    PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap()
+}
+
+/// A registry adapter set built directly in serving form: LoRA on wq and
+/// wo of every block; with `dora`, a DoRA adapter (non-trivial
+/// `col_scale`) on wdown of every other block.
+fn test_set(name: &str, cfg: &ModelConfig, seed: u64, dora: bool) -> AdapterSet {
+    let mut rng = Rng::new(seed);
+    let r = 4;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let mut arr: [Option<Adapter>; ADAPTER_SLOTS] = Default::default();
+        for slot in [SLOT_WQ, SLOT_WO] {
+            arr[slot] = Some(Adapter {
+                a: Tensor::randn(&[cfg.d_model, r], 0.05, &mut rng),
+                b_t: Tensor::randn(&[r, cfg.d_model], 0.05, &mut rng),
+                scale: 2.0 / r as f32,
+                col_scale: None,
+            });
+        }
+        if dora && li % 2 == 0 {
+            arr[SLOT_WDOWN] = Some(Adapter {
+                a: Tensor::randn(&[cfg.d_ffn, r], 0.05, &mut rng),
+                b_t: Tensor::randn(&[r, cfg.d_model], 0.05, &mut rng),
+                scale: 2.0 / r as f32,
+                col_scale: Some((0..cfg.d_model).map(|i| 1.0 + i as f32 * 1e-3).collect()),
+            });
+        }
+        layers.push(arr);
+    }
+    AdapterSet { name: name.to_string(), layers }
+}
+
+fn tiny_prompt(len: usize, seed: u64) -> Vec<i32> {
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, seed);
+    Batcher::new(1, len)
+        .lm_batch(&corpus, &mut Rng::new(seed ^ 0x77))
+        .tokens
+        .data()
+        .to_vec()
+}
+
+fn req(key: u64, prompt: Vec<i32>, max_new: usize, adapter: Option<&str>) -> GenRequest {
+    GenRequest {
+        key,
+        id: format!("r{key}"),
+        prompt,
+        max_new,
+        sampling: None,
+        stop: None,
+        adapter: adapter.map(String::from),
+        queued_at: std::time::Instant::now(),
+    }
+}
+
+fn drain(sched: &mut Scheduler<'_>) -> Vec<StepEvent> {
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to converge");
+    }
+    events
+}
+
+fn tokens_of(events: &[StepEvent], key: u64) -> Vec<i32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Token { key: k, token, .. } if *k == key => Some(*token),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Build a scheduler with the three named sets registered, run the given
+/// requests to completion, and return the event log.
+fn run_with_sets(
+    model: &PackedModel,
+    sets: &[AdapterSet],
+    reqs: Vec<GenRequest>,
+    kv_block: usize,
+) -> Vec<StepEvent> {
+    let cfg = SchedConfig {
+        max_batch: 8,
+        max_new_cap: 64,
+        max_prompt: 64,
+        kv_block,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::new(model, cfg);
+    for s in sets {
+        sched.adapters_mut().load(s.clone()).unwrap();
+    }
+    for r in reqs {
+        sched.submit(r);
+    }
+    drain(&mut sched)
+}
+
+// ---------------------------------------------------------------------------
+// mixed-adapter batch == solo runs, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_adapter_batch_matches_solo_runs_bitwise() {
+    let model = packed_tiny(71);
+    let sets = vec![
+        test_set("task_a", &TINY, 101, false),
+        test_set("task_b", &TINY, 102, true), // DoRA in the same batch
+        test_set("task_c", &TINY, 103, false),
+    ];
+    // route -> (key, adapter): three adapters plus the baseline (model
+    // default) path, all admitted in ONE tick.
+    let routes: [(u64, Option<&str>); 4] =
+        [(1, Some("task_a")), (2, Some("task_b")), (3, Some("task_c")), (4, None)];
+
+    for kv_block in [1usize, 7, 64] {
+        for seeded in [false, true] {
+            let sampling = |key: u64| {
+                seeded.then_some(SamplingParams {
+                    temperature: 0.9,
+                    top_k: 40,
+                    top_p: 0.95,
+                    seed: 1000 + key,
+                })
+            };
+            let mixed: Vec<GenRequest> = routes
+                .iter()
+                .map(|&(key, ad)| {
+                    let mut r = req(key, tiny_prompt(6, 200 + key), 10, ad);
+                    r.sampling = sampling(key);
+                    r
+                })
+                .collect();
+            let mixed_events = run_with_sets(&model, &sets, mixed, kv_block);
+
+            for &(key, ad) in &routes {
+                let mut solo = req(key, tiny_prompt(6, 200 + key), 10, ad);
+                solo.sampling = sampling(key);
+                let solo_events = run_with_sets(&model, &sets, vec![solo], kv_block);
+                let got = tokens_of(&mixed_events, key);
+                let want = tokens_of(&solo_events, key);
+                assert_eq!(got.len(), 10, "request {key} must stream to completion");
+                assert_eq!(
+                    got, want,
+                    "kv_block {kv_block}, seeded {seeded}: request {key} (adapter {ad:?}) \
+                     must be bitwise identical between the mixed batch and a solo run"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DoRA + plain LoRA in one decode tick (decode-layer, logits-level)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dora_and_lora_mix_in_one_decode_tick() {
+    let model = packed_tiny(73);
+    let lora = test_set("lora", &TINY, 111, false);
+    let dora = test_set("dora", &TINY, 112, true);
+    let sets: [Option<&AdapterSet>; 3] = [Some(&lora), Some(&dora), None];
+    let prompts: Vec<Vec<i32>> = (0..3).map(|i| tiny_prompt(5, 300 + i)).collect();
+
+    // Prefill each sequence solo (chunk prefill takes one sequence), then
+    // step the three sequences TOGETHER with per-sequence adapters.
+    let mut caches: Vec<KvCache> =
+        (0..3).map(|_| KvCache::new(TINY.n_layers, TINY.d_model, 16)).collect();
+    let mut last: Vec<i32> = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let logits = model.forward_chunk_with(p, &mut caches[i], sets[i]).unwrap();
+        let row = &logits.data()[(p.len() - 1) * TINY.vocab..p.len() * TINY.vocab];
+        last.push(argmax_i32(row));
+    }
+    let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+    let mixed = model.forward_step_with(&last, &mut refs, &sets).unwrap();
+
+    // Reference: the same steps, one sequence at a time.
+    for i in 0..3 {
+        let mut cache = KvCache::new(TINY.n_layers, TINY.d_model, 16);
+        model.forward_chunk_with(&prompts[i], &mut cache, sets[i]).unwrap();
+        let mut refs: Vec<&mut KvCache> = vec![&mut cache];
+        let solo = model.forward_step_with(&last[i..=i], &mut refs, &sets[i..=i]).unwrap();
+        assert_eq!(
+            &mixed.data()[i * TINY.vocab..(i + 1) * TINY.vocab],
+            solo.data(),
+            "sequence {i}: one mixed DoRA/LoRA/baseline tick must match the solo step bitwise"
+        );
+    }
+}
+
+fn argmax_i32(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+// ---------------------------------------------------------------------------
+// registry lifecycle: load -> route -> deferred unload
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_defers_unload_until_in_flight_sequences_drain() {
+    let model = packed_tiny(79);
+    let cfg =
+        SchedConfig { max_batch: 4, max_new_cap: 32, max_prompt: 32, ..SchedConfig::default() };
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.adapters_mut().load(test_set("task", &TINY, 121, false)).unwrap();
+    assert_eq!(sched.adapters().len(), 1);
+
+    // route a request through the adapter and get it in flight
+    sched.submit(req(1, tiny_prompt(5, 400), 8, Some("task")));
+    let mut events = sched.step().unwrap();
+    assert_eq!(sched.n_active(), 1);
+
+    // unknown adapters are rejected at admission
+    sched.submit(req(9, tiny_prompt(5, 401), 4, Some("nope")));
+    events.extend(sched.step().unwrap());
+    let rej = events
+        .iter()
+        .find_map(|e| match e {
+            StepEvent::Rejected { key: 9, reason, .. } => Some(reason.clone()),
+            _ => None,
+        })
+        .expect("unknown adapter must reject");
+    assert!(rej.contains("unknown adapter"), "reason: {rej}");
+
+    // unload with a sequence in flight -> deferred, entry drains
+    assert!(!sched.adapters_mut().unload("task").unwrap(), "unload must defer");
+    let stats = sched.adapters().stats();
+    assert!(stats[0].draining && stats[0].refs == 1, "entry drains with 1 ref");
+
+    // a draining adapter refuses new routes...
+    sched.submit(req(2, tiny_prompt(5, 402), 4, Some("task")));
+    events.extend(sched.step().unwrap());
+    let rej = events
+        .iter()
+        .find_map(|e| match e {
+            StepEvent::Rejected { key: 2, reason, .. } => Some(reason.clone()),
+            _ => None,
+        })
+        .expect("draining adapter must reject new routes");
+    assert!(rej.contains("draining"), "reason: {rej}");
+    // ...and refuses a reload under the same name
+    assert!(sched.adapters_mut().load(test_set("task", &TINY, 122, false)).is_err());
+
+    // the in-flight sequence still streams to completion on the adapter
+    events.extend(drain(&mut sched));
+    assert_eq!(tokens_of(&events, 1).len(), 8);
+    assert!(
+        matches!(
+            events.iter().find(|e| matches!(e, StepEvent::Done { key: 1, .. })),
+            Some(StepEvent::Done { .. })
+        ),
+        "routed request must finish normally"
+    );
+    // last release completes the deferred unload
+    assert_eq!(sched.adapters().len(), 0, "deferred unload completes at drain");
+    // the name is free again
+    sched.adapters_mut().load(test_set("task", &TINY, 123, false)).unwrap();
+}
+
+#[test]
+fn registry_attributes_tokens_per_adapter() {
+    let model = packed_tiny(83);
+    let cfg =
+        SchedConfig { max_batch: 4, max_new_cap: 32, max_prompt: 32, ..SchedConfig::default() };
+    let mut sched = Scheduler::new(&model, cfg);
+    sched.adapters_mut().load(test_set("a", &TINY, 131, false)).unwrap();
+    sched.submit(req(1, tiny_prompt(5, 500), 6, Some("a")));
+    sched.submit(req(2, tiny_prompt(5, 501), 4, None)); // baseline
+    drain(&mut sched);
+    let stats = sched.adapters().stats();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].tokens, 6, "adapter-routed tokens counted on the adapter");
+    assert_eq!(stats[0].refs, 0, "refs released at completion");
+    assert!(stats[0].delta_overhead > 0.0 && stats[0].delta_overhead < 0.5);
+    assert_eq!(sched.adapters().baseline_tokens(), 4, "baseline tokens counted separately");
+}
+
+// ---------------------------------------------------------------------------
+// speculative scheduler: adapter routes fall back to plain decode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculating_scheduler_plain_decodes_adapter_routes() {
+    let model = packed_tiny(89);
+    let set = test_set("task", &TINY, 141, false);
+
+    // Reference: non-speculating scheduler, routed request solo.
+    let plain = run_with_sets(
+        &model,
+        std::slice::from_ref(&set),
+        vec![req(1, tiny_prompt(6, 600), 10, Some("task"))],
+        32,
+    );
+    let want = tokens_of(&plain, 1);
+    assert_eq!(want.len(), 10);
+
+    // Speculating scheduler: routed + baseline requests in one batch.
+    let draft = Arc::new(model.prefix_cut(2).unwrap());
+    let cfg = SchedConfig {
+        max_batch: 4,
+        max_new_cap: 64,
+        max_prompt: 64,
+        speculate: 3,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::with_draft(&model, cfg, draft);
+    sched.adapters_mut().load(set.clone()).unwrap();
+    sched.submit(req(1, tiny_prompt(6, 600), 10, Some("task")));
+    sched.submit(req(2, tiny_prompt(6, 601), 10, None));
+    let events = drain(&mut sched);
+
+    // The adapter route took the plain path (no draft state -> zero
+    // proposals for it) and its stream is unchanged bit for bit.
+    assert_eq!(tokens_of(&events, 1), want, "spec fallback must not change routed bits");
+    assert_eq!(tokens_of(&events, 2).len(), 10);
+    let routed_stats = events
+        .iter()
+        .find_map(|e| match e {
+            StepEvent::Done { key: 1, stats, .. } => Some(*stats),
+            _ => None,
+        })
+        .expect("routed request done");
+    assert_eq!(
+        routed_stats.spec_proposed, 0,
+        "adapter-routed sequences must not enter the draft/verify cycle"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// server end to end: boot preload, runtime load/unload, routing, stats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_routes_adapters_end_to_end() {
+    let model = packed_tiny(97);
+    let dir = std::env::temp_dir().join("apiq_adapters_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let boot_path = dir.join("boot.apq");
+    let rt_path = dir.join("runtime.apq");
+    checkpoint::save_adapter(&test_set("ignored", &TINY, 151, false), "tiny", &boot_path)
+        .unwrap();
+    checkpoint::save_adapter(&test_set("ignored", &TINY, 152, true), "tiny", &rt_path).unwrap();
+
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        sched: SchedConfig {
+            max_batch: 4,
+            max_new_cap: 64,
+            max_prompt: 64,
+            ..SchedConfig::default()
+        },
+        allow_remote_shutdown: true,
+        // boot preload: the CLI's repeatable `--adapter NAME=PATH`
+        adapters: vec![("boot".to_string(), boot_path.to_string_lossy().into_owned())],
+    };
+    let server = repro::serve::server::spawn(Arc::new(model), opts).unwrap();
+    let addr = server.addr.to_string();
+
+    fn read_frame(reader: &mut BufReader<TcpStream>) -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    }
+    fn read_done_tokens(reader: &mut BufReader<TcpStream>, id: &str) -> Vec<i64> {
+        loop {
+            let j = read_frame(reader);
+            assert_eq!(j.get("id").and_then(Json::as_str), Some(id));
+            if j.get("event").and_then(Json::as_str) == Some("done") {
+                return j
+                    .get("tokens")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .filter_map(Json::as_i64)
+                    .collect();
+            }
+        }
+    }
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // route through the boot-preloaded adapter
+    writer
+        .write_all(b"{\"id\":\"a1\",\"prompt\":[5,9,2,14],\"max_new\":6,\"adapter\":\"boot\"}\n")
+        .unwrap();
+    let routed = read_done_tokens(&mut reader, "a1");
+    assert_eq!(routed.len(), 4 + 6);
+
+    // the same prompt unrouted takes the baked-in default path — with
+    // live adapters in the registry set, the two streams may differ, but
+    // both must be deterministic
+    writer
+        .write_all(b"{\"id\":\"b1\",\"prompt\":[5,9,2,14],\"max_new\":6}\n")
+        .unwrap();
+    let base1 = read_done_tokens(&mut reader, "b1");
+    writer
+        .write_all(b"{\"id\":\"b2\",\"prompt\":[5,9,2,14],\"max_new\":6}\n")
+        .unwrap();
+    let base2 = read_done_tokens(&mut reader, "b2");
+    assert_eq!(base1, base2, "baseline route must stay deterministic");
+
+    // unknown adapter -> error frame, connection stays usable
+    writer
+        .write_all(b"{\"id\":\"u1\",\"prompt\":[1,2,3],\"max_new\":2,\"adapter\":\"nope\"}\n")
+        .unwrap();
+    let j = read_frame(&mut reader);
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
+    assert!(
+        j.get("message").and_then(Json::as_str).unwrap().contains("unknown adapter"),
+        "error frame must name the unknown adapter"
+    );
+
+    // runtime load (DoRA sidecar), route, then unload
+    let load_cmd = format!(
+        "{{\"cmd\":\"adapter\",\"op\":\"load\",\"name\":\"rt\",\"path\":{}}}\n",
+        Json::from(rt_path.to_string_lossy().as_ref()).render()
+    );
+    writer.write_all(load_cmd.as_bytes()).unwrap();
+    let j = read_frame(&mut reader);
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("adapter"));
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("loaded"));
+
+    writer
+        .write_all(b"{\"id\":\"a2\",\"prompt\":[3,1,4],\"max_new\":5,\"adapter\":\"rt\"}\n")
+        .unwrap();
+    assert_eq!(read_done_tokens(&mut reader, "a2").len(), 3 + 5);
+
+    writer
+        .write_all(b"{\"cmd\":\"adapter\",\"op\":\"unload\",\"name\":\"rt\"}\n")
+        .unwrap();
+    let j = read_frame(&mut reader);
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("adapter"));
+    assert_eq!(
+        j.get("status").and_then(Json::as_str),
+        Some("unloaded"),
+        "no in-flight refs: unload completes immediately"
+    );
+
+    // stats frame carries the registry + per-adapter token counts
+    writer.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let j = read_frame(&mut reader);
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("stats"));
+    let adapters = j.get("adapters").and_then(Json::as_arr).expect("adapters array");
+    assert_eq!(adapters.len(), 1, "only the boot adapter remains registered");
+    let boot = &adapters[0];
+    assert_eq!(boot.get("name").and_then(Json::as_str), Some("boot"));
+    assert_eq!(boot.get("tokens").and_then(Json::as_i64), Some(6));
+    assert!(boot.get("delta_overhead").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(
+        j.get("baseline_tokens").and_then(Json::as_i64).unwrap() >= 12,
+        "both baseline requests counted"
+    );
+
+    drop(writer);
+    drop(reader);
+    server.shutdown();
+    std::fs::remove_file(&boot_path).ok();
+    std::fs::remove_file(&rt_path).ok();
+}

@@ -348,6 +348,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         max_new,
         sampling: None,
         stop: None,
+        adapter: None,
         queued_at: std::time::Instant::now(),
     }
 }

@@ -170,6 +170,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         max_new,
         sampling: None,
         stop: None,
+        adapter: None,
         queued_at: std::time::Instant::now(),
     }
 }
@@ -363,6 +364,7 @@ fn server_streams_concurrent_requests() {
             ..SchedConfig::default()
         },
         allow_remote_shutdown: true,
+        adapters: Vec::new(),
     };
     let server = repro::serve::server::spawn(model, opts).unwrap();
     let addr = server.addr.to_string();
@@ -379,6 +381,8 @@ fn server_streams_concurrent_requests() {
         seed: 77,
         shutdown_after: false,
         transcript: None,
+        adapter_mix: Vec::new(),
+        churn_adapter: None,
     })
     .unwrap();
     assert_eq!(report.completed, 8, "all streams must complete");
@@ -470,6 +474,7 @@ fn server_shares_identical_prompt_prefixes() {
             ..SchedConfig::default()
         },
         allow_remote_shutdown: true,
+        adapters: Vec::new(),
     };
     let server = repro::serve::server::spawn(model, opts).unwrap();
     let addr = server.addr.to_string();
@@ -490,6 +495,8 @@ fn server_shares_identical_prompt_prefixes() {
         seed: 99,
         shutdown_after: false,
         transcript: None,
+        adapter_mix: Vec::new(),
+        churn_adapter: None,
     })
     .unwrap();
     assert_eq!(report.completed, 6);
