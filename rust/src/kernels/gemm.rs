@@ -185,7 +185,15 @@ pub fn gemm_accum_with(
 /// Dispatched GEMM on the global pool — what `Tensor::matmul` and every
 /// dense layer forward route through.
 pub fn gemm_accum(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let prof = crate::obs::profile::timer();
     gemm_accum_with(super::active(), pool::global(), a, b, out, m, k, n);
+    if let Some(t0) = prof {
+        crate::obs::profile::record(
+            crate::obs::profile::KernelKind::DenseGemm,
+            t0.elapsed().as_nanos() as u64,
+            2 * (m * k * n) as u64,
+        );
+    }
 }
 
 #[cfg(test)]

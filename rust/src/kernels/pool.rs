@@ -66,6 +66,7 @@ impl Batch<'_> {
     /// caught (a dead worker would deadlock every later matmul) and
     /// re-raised on the calling thread after the join.
     fn run(&self) {
+        let prof = crate::obs::profile::timer();
         IN_POOL_TASK.with(|flag| {
             let prev = flag.replace(true);
             loop {
@@ -79,6 +80,9 @@ impl Batch<'_> {
             }
             flag.set(prev);
         });
+        if let Some(t0) = prof {
+            crate::obs::profile::record_lane(t0.elapsed().as_nanos() as u64);
+        }
     }
 }
 
@@ -94,7 +98,8 @@ struct Job {
 // the closure inside is `Sync`.
 unsafe impl Send for Job {}
 
-fn worker_loop(rx: Receiver<Job>) {
+fn worker_loop(lane: usize, rx: Receiver<Job>) {
+    crate::obs::profile::set_lane(lane);
     while let Ok(job) = rx.recv() {
         // SAFETY: the dispatcher holds the batch on its stack until it
         // has received the `done` message sent below.
@@ -118,7 +123,9 @@ impl ThreadPool {
             let (tx, rx) = channel::<Job>();
             std::thread::Builder::new()
                 .name(format!("repro-kernel-{i}"))
-                .spawn(move || worker_loop(rx))
+                // worker i owns profiling lane i + 1; lane 0 belongs to
+                // whichever thread dispatches the batch
+                .spawn(move || worker_loop(i + 1, rx))
                 .expect("spawn kernel pool worker");
             workers.push(Mutex::new(tx));
         }

@@ -32,6 +32,7 @@ pub mod infer;
 pub mod kernels;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod quant;
 pub mod quantizers;

@@ -61,6 +61,8 @@ COMMANDS
                                                      continuous batching)
   bench-serve --addr A --clients N                   concurrent load generator
                                                      against a running server
+  trace-report --trace P                             summarize a serve
+                                                     --trace-log tick journal
   report     memory|params                           analytic reports
   artifacts                                          list compiled artifacts
 
@@ -94,6 +96,18 @@ SERVE FLAGS
   --adapter NAME=PATH                  register a packed adapter sidecar
                                        at boot (repeatable); requests
                                        route with \"adapter\":\"NAME\"
+  --metrics-addr A                     serve Prometheus text exposition
+                                       at GET /metrics on this address
+                                       (port 0 = ephemeral; bound addr
+                                       is printed as `serve: metrics on`)
+  --trace-log P                        append one JSON line per
+                                       scheduler tick (trace-report
+                                       summarizes it)
+  --trace-cap N     (default: 1024)    in-memory tick-trace ring size
+                                       (the {\"cmd\":\"trace\"} window)
+  --profile                            per-kernel time/GFLOP/s + pool
+                                       lane accounting (also REPRO_PROF=1);
+                                       output bits are unchanged
 BENCH-SERVE FLAGS
   --clients N       (default: 4)      --requests N    (per client, default 2)
   --common-prefix N (default: 0)      first N prompt tokens identical
@@ -102,6 +116,8 @@ BENCH-SERVE FLAGS
                                        (\"-\" = baseline, no adapter)
   --churn-adapter NAME=PATH            load/unload NAME mid-run over a
                                        side connection (registry churn)
+  --sample-ms N     (default: 50; 0 = off) poll {\"cmd\":\"stats\"} mid-run
+                    every N ms: batch-size / queue / KV-occupancy series
   --bench-out P     (default: BENCH_serve.json)
   --transcript P    (write sorted per-request token transcripts —
                      byte-comparable across runs/speculation settings)
@@ -514,6 +530,10 @@ fn run(args: Args) -> repro::Result<()> {
                 sched,
                 allow_remote_shutdown: !args.flag("no-remote-shutdown"),
                 adapters,
+                metrics_addr: args.get("metrics-addr").map(String::from),
+                trace_log: args.get("trace-log").map(String::from),
+                profile: args.flag("profile"),
+                trace_cap: args.usize_or("trace-cap", repro::obs::DEFAULT_TRACE_CAP)?.max(1),
             };
             repro::serve::server::run(Arc::new(model), draft, opts)?;
         }
@@ -551,6 +571,7 @@ fn run(args: Args) -> repro::Result<()> {
                     ),
                     None => None,
                 },
+                sample_ms: args.u64_or("sample-ms", 50)?,
             };
             let rep = run_load(&o)?;
             println!(
@@ -611,6 +632,17 @@ fn run(args: Args) -> repro::Result<()> {
             if o.churn_adapter.is_some() {
                 println!("  adapter churn: {} load/unload cycles mid-run", rep.churn_cycles);
             }
+            if !rep.samples.is_empty() {
+                println!(
+                    "  sampled every {}ms ({} polls): batch peak {} / p50 {}, \
+                     peak KV occupancy {:.1}%",
+                    o.sample_ms,
+                    rep.samples.len(),
+                    rep.batch_peak(),
+                    rep.batch_p50(),
+                    rep.kv_occupancy_peak() * 100.0
+                );
+            }
             if let Some(path) = &o.transcript {
                 println!("  wrote transcript {path}");
             }
@@ -624,6 +656,16 @@ fn run(args: Args) -> repro::Result<()> {
                     rep.requests
                 )));
             }
+        }
+        "trace-report" => {
+            let path = args
+                .get("trace")
+                .map(String::from)
+                .or_else(|| args.positionals.first().map(String::from))
+                .ok_or_else(|| {
+                    repro::Error::config("trace-report wants --trace PATH (a serve --trace-log file)")
+                })?;
+            run_trace_report(&path)?;
         }
         "report" => match args.positionals.first().map(String::as_str) {
             Some("memory") => print_memory_report(),
@@ -840,6 +882,29 @@ fn write_bench_serve(
     if o.churn_adapter.is_some() {
         fields.push(("adapter_churn_cycles".to_string(), Json::from(rep.churn_cycles)));
     }
+    // Mid-run stats sampling: summaries + the raw series.  Keys are
+    // always present (empty/zero when --sample-ms 0) so consumers can
+    // rely on them.
+    fields.push(("sample_ms".to_string(), Json::from(o.sample_ms as usize)));
+    fields.push(("batch_size_peak".to_string(), Json::from(rep.batch_peak())));
+    fields.push(("batch_size_p50".to_string(), Json::from(rep.batch_p50())));
+    fields.push((
+        "kv_occupancy_peak".to_string(),
+        Json::Num((rep.kv_occupancy_peak() * 1000.0).round() / 1000.0),
+    ));
+    let samples: Vec<Json> = rep
+        .samples
+        .iter()
+        .map(|s| {
+            Json::Obj(vec![
+                ("t_secs".to_string(), Json::Num((s.t_secs * 1e3).round() / 1e3)),
+                ("active".to_string(), Json::from(s.active)),
+                ("pending".to_string(), Json::from(s.pending)),
+                ("kv_resident_blocks".to_string(), Json::from(s.kv_resident_blocks)),
+            ])
+        })
+        .collect();
+    fields.push(("samples".to_string(), Json::Arr(samples)));
     // `cargo bench --bench decode` merges a per-k "spec" sweep array
     // into the same artifact; carry it across a bench-serve rewrite.
     if let Ok(old) = std::fs::read_to_string(path) {
@@ -852,6 +917,99 @@ fn write_bench_serve(
     let body = Json::Obj(fields).render();
     std::fs::write(path, body + "\n")
         .map_err(|e| repro::Error::io(format!("write {path}: {e}")))
+}
+
+/// `repro trace-report`: aggregate a `serve --trace-log` newline-JSON
+/// tick journal into per-phase and per-kernel tables plus a batch-size
+/// sketch — the offline view of the same records `{"cmd":"trace"}`
+/// serves live.
+fn run_trace_report(path: &str) -> repro::Result<()> {
+    use repro::metrics::Histogram;
+    use repro::obs::{TickRecord, PHASE_NAMES};
+    use repro::serve::json::Json;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| repro::Error::io(format!("read {path}: {e}")))?;
+    let mut ticks: Vec<TickRecord> = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line).and_then(|j| TickRecord::from_json(&j));
+        ticks.push(parsed.map_err(|e| repro::Error::config(format!("{path}:{}: {e}", ln + 1)))?);
+    }
+    if ticks.is_empty() {
+        return Err(repro::Error::config(format!("{path}: no tick records")));
+    }
+    let n = ticks.len();
+    let tokens: usize = ticks.iter().map(|t| t.tokens).sum();
+    let finished: usize = ticks.iter().map(|t| t.finished).sum();
+    let admitted: usize = ticks.iter().map(|t| t.admitted).sum();
+    let span = (ticks.last().unwrap().at_secs - ticks.first().unwrap().at_secs).max(0.0);
+    println!(
+        "trace-report: {n} ticks over {span:.2}s — {admitted} admitted, {finished} finished, \
+         {tokens} tokens ({:.1} tokens/s)",
+        if span > 0.0 { tokens as f64 / span } else { 0.0 }
+    );
+
+    let mut phase_tot = [0u64; PHASE_NAMES.len()];
+    for t in &ticks {
+        for (acc, &ns) in phase_tot.iter_mut().zip(t.phase_ns.iter()) {
+            *acc += ns;
+        }
+    }
+    let all_ns: u64 = phase_tot.iter().sum();
+    let mut tb = TableBuilder::new(format!("Tick phases ({n} ticks)"))
+        .header(&["phase", "total ms", "share", "mean us/tick"]);
+    for (name, &ns) in PHASE_NAMES.iter().zip(phase_tot.iter()) {
+        tb.row(vec![
+            name.to_string(),
+            format!("{:.2}", ns as f64 / 1e6),
+            TableBuilder::pct(ns as f64 / all_ns.max(1) as f64),
+            format!("{:.1}", ns as f64 / 1e3 / n as f64),
+        ]);
+    }
+    println!("{}", tb.markdown());
+
+    let mut kernels: std::collections::BTreeMap<String, (u64, u64, u64)> = Default::default();
+    for t in &ticks {
+        for k in &t.kernels {
+            let e = kernels.entry(k.kind.clone()).or_insert((0, 0, 0));
+            e.0 += k.calls;
+            e.1 += k.ns;
+            e.2 += k.flops;
+        }
+    }
+    if kernels.is_empty() {
+        println!("(no kernel samples — run serve with --profile or REPRO_PROF=1)\n");
+    } else {
+        let mut tb = TableBuilder::new("Profiled kernels")
+            .header(&["kind", "calls", "total ms", "GFLOP/s"]);
+        for (kind, (calls, ns, flops)) in &kernels {
+            let gflops = if *ns == 0 { 0.0 } else { *flops as f64 / *ns as f64 };
+            tb.row(vec![
+                kind.clone(),
+                calls.to_string(),
+                format!("{:.2}", *ns as f64 / 1e6),
+                format!("{gflops:.2}"),
+            ]);
+        }
+        println!("{}", tb.markdown());
+    }
+
+    let batches: Vec<f32> = ticks.iter().map(|t| t.batch as f32).collect();
+    println!("batch size per tick:\n{}", Histogram::auto(&batches, 16).render(40));
+    let proposed: usize = ticks.iter().map(|t| t.spec_proposed).sum();
+    let accepted: usize = ticks.iter().map(|t| t.spec_accepted).sum();
+    if proposed > 0 {
+        println!(
+            "speculation: {accepted}/{proposed} draft tokens accepted ({:.1}%)",
+            accepted as f64 / proposed as f64 * 100.0
+        );
+    }
+    let kv_peak = ticks.iter().map(|t| t.kv_resident).max().unwrap_or(0);
+    println!("peak KV resident blocks: {kv_peak}");
+    Ok(())
 }
 
 /// Analytic serving-memory prediction for the same architecture, keyed

@@ -1,0 +1,295 @@
+//! Engine telemetry: a lock-light metrics registry, per-tick phase
+//! tracing, per-request lifecycle spans, and kernel profiling hooks —
+//! the observability layer under `repro serve`.
+//!
+//! Design constraints (pinned by `tests/obs.rs`):
+//!
+//! * **Near-zero when idle.** Counters and gauges are single atomic
+//!   RMWs; histograms are one atomic add into a fixed bucket.  The
+//!   registry's `Mutex` is touched only at registration and exposition
+//!   time, never on the hot path.  Kernel hooks cost ONE relaxed atomic
+//!   load when profiling is off.
+//! * **Bitwise-invisible.** Telemetry only times and counts around the
+//!   compute; it never touches inputs, outputs, or RNG state, so token
+//!   streams with `--metrics-addr --trace-log --profile` all enabled are
+//!   byte-identical to a telemetry-off run (CI `cmp`s the transcripts).
+//! * **Derived views, not hand-kept fields.** The scheduler's
+//!   per-request wall-clock accounting lives in one [`RequestSpan`]
+//!   per sequence; `RequestStats` is rendered from the span at eviction.
+//!
+//! Layout:
+//!
+//! * [`registry`] — atomic [`Counter`]/[`Gauge`]/[`Histo`] handles behind
+//!   an `Arc`-shared [`Registry`]; snapshot-based exposition.
+//! * [`trace`] — the fixed-capacity [`TraceRing`] of per-tick
+//!   [`TickRecord`]s (phase nanos, batch size, KV page delta, spec
+//!   acceptance) plus the per-request [`RequestSpan`].
+//! * [`prom`] — Prometheus text exposition for the `/metrics` listener.
+//! * [`profile`] — process-wide kernel profiling accumulators (per-kind
+//!   time + FLOPs, per-pool-lane busy nanos), gated behind
+//!   `--profile` / `REPRO_PROF`.
+
+pub mod profile;
+pub mod prom;
+pub mod registry;
+pub mod trace;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub use registry::{Counter, Gauge, Histo, MetricValue, Registry};
+pub use trace::{KernelTickDelta, RequestSpan, TickRecord, TraceRing, N_PHASES, PHASE_NAMES};
+
+/// Default tick-trace ring capacity (`serve --trace-cap` overrides).
+pub const DEFAULT_TRACE_CAP: usize = 1024;
+
+/// Latency-shaped histogram bounds (seconds): 10us .. 2.5s.
+pub const SECONDS_BOUNDS: &[f64] = &[
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25,
+    0.5, 1.0, 2.5,
+];
+
+/// Batch-size histogram bounds (sequences per tick).
+pub const BATCH_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Build/runtime identity for the `stats` frame and `/metrics`:
+/// crate version, selected kernel dispatch, pool width, cargo features.
+#[derive(Clone, Debug)]
+pub struct BuildInfo {
+    pub version: &'static str,
+    pub kernel: &'static str,
+    pub threads: usize,
+    pub features: Vec<&'static str>,
+}
+
+/// Snapshot the process build identity (kernel dispatch latches on first
+/// use, same as the compute path).
+pub fn build_info() -> BuildInfo {
+    let mut features = Vec::new();
+    if cfg!(feature = "xla") {
+        features.push("xla");
+    }
+    BuildInfo {
+        version: env!("CARGO_PKG_VERSION"),
+        kernel: crate::kernels::active().name(),
+        threads: crate::kernels::pool::pool_threads(),
+        features,
+    }
+}
+
+/// Pre-registered handles for every engine metric family.  One instance
+/// per [`Telemetry`]; the scheduler/server update these directly so the
+/// hot path never hashes a metric name.
+pub struct EngineMetrics {
+    pub ticks_total: Arc<Counter>,
+    pub tick_seconds: Arc<Histo>,
+    /// One histogram per phase, indexed like [`PHASE_NAMES`].
+    pub tick_phase_seconds: Vec<Arc<Histo>>,
+    pub batch_size: Arc<Histo>,
+    pub requests_admitted_total: Arc<Counter>,
+    pub requests_rejected_total: Arc<Counter>,
+    /// `(reason, counter)` per [`FinishReason`] string.
+    pub requests_finished: Vec<(&'static str, Arc<Counter>)>,
+    pub tokens_emitted_total: Arc<Counter>,
+    pub adapter_tokens_total: Arc<Counter>,
+    pub baseline_tokens_total: Arc<Counter>,
+    pub adapters_registered: Arc<Gauge>,
+    pub queue_seconds: Arc<Histo>,
+    pub request_seconds: Arc<Histo>,
+    pub prefill_seconds: Arc<Histo>,
+    pub kv_blocks_resident: Arc<Gauge>,
+    pub kv_blocks_free: Arc<Gauge>,
+    pub kv_blocks_shared: Arc<Gauge>,
+    pub kv_blocks_limit: Arc<Gauge>,
+    pub active_sequences: Arc<Gauge>,
+    pub pending_requests: Arc<Gauge>,
+    pub spec_proposed_total: Arc<Counter>,
+    pub spec_accepted_total: Arc<Counter>,
+    pub spec_cycles_total: Arc<Counter>,
+    pub spec_fallbacks_total: Arc<Counter>,
+}
+
+impl EngineMetrics {
+    fn new(reg: &Registry) -> Self {
+        let phase_histos = PHASE_NAMES
+            .iter()
+            .map(|p| {
+                reg.histogram(
+                    "tick_phase_seconds",
+                    &[("phase", p)],
+                    "Time per scheduler-tick phase",
+                    SECONDS_BOUNDS,
+                )
+            })
+            .collect();
+        let finished = ["length", "stop", "capacity", "cancelled"]
+            .into_iter()
+            .map(|r| {
+                (
+                    r,
+                    reg.counter(
+                        "requests_finished_total",
+                        &[("reason", r)],
+                        "Requests finished, by finish reason",
+                    ),
+                )
+            })
+            .collect();
+        EngineMetrics {
+            ticks_total: reg.counter("ticks_total", &[], "Scheduler steps executed"),
+            tick_seconds: reg.histogram(
+                "tick_seconds",
+                &[],
+                "Wall time per scheduler step",
+                SECONDS_BOUNDS,
+            ),
+            tick_phase_seconds: phase_histos,
+            batch_size: reg.histogram(
+                "batch_size",
+                &[],
+                "Active sequences per tick (post-admission)",
+                BATCH_BOUNDS,
+            ),
+            requests_admitted_total: reg.counter(
+                "requests_admitted_total",
+                &[],
+                "Requests admitted into the batch",
+            ),
+            requests_rejected_total: reg.counter(
+                "requests_rejected_total",
+                &[],
+                "Requests rejected before admission",
+            ),
+            requests_finished: finished,
+            tokens_emitted_total: reg.counter(
+                "tokens_emitted_total",
+                &[],
+                "Generated tokens streamed to clients",
+            ),
+            adapter_tokens_total: reg.counter(
+                "adapter_tokens_total",
+                &[],
+                "Tokens emitted on adapter-routed sequences",
+            ),
+            baseline_tokens_total: reg.counter(
+                "baseline_tokens_total",
+                &[],
+                "Tokens emitted on the default (no-adapter) path",
+            ),
+            adapters_registered: reg.gauge(
+                "adapters_registered",
+                &[],
+                "Adapters currently in the runtime registry",
+            ),
+            queue_seconds: reg.histogram(
+                "request_queue_seconds",
+                &[],
+                "Submission -> admission wait per request",
+                SECONDS_BOUNDS,
+            ),
+            request_seconds: reg.histogram(
+                "request_seconds",
+                &[],
+                "Admission -> completion wall time per request",
+                SECONDS_BOUNDS,
+            ),
+            prefill_seconds: reg.histogram(
+                "request_prefill_seconds",
+                &[],
+                "Batched prompt prefill time per request",
+                SECONDS_BOUNDS,
+            ),
+            kv_blocks_resident: reg.gauge(
+                "kv_blocks_resident",
+                &[],
+                "KV pages currently resident in the target pool",
+            ),
+            kv_blocks_free: reg.gauge("kv_blocks_free", &[], "KV pages free in the target pool"),
+            kv_blocks_shared: reg.gauge(
+                "kv_blocks_shared",
+                &[],
+                "KV pages shared by >1 sequence (prefix sharing)",
+            ),
+            kv_blocks_limit: reg.gauge("kv_blocks_limit", &[], "KV page budget of the target pool"),
+            active_sequences: reg.gauge("active_sequences", &[], "Sequences decoding this tick"),
+            pending_requests: reg.gauge("pending_requests", &[], "Requests queued for admission"),
+            spec_proposed_total: reg.counter(
+                "spec_proposed_total",
+                &[],
+                "Draft tokens proposed (speculative decoding)",
+            ),
+            spec_accepted_total: reg.counter(
+                "spec_accepted_total",
+                &[],
+                "Draft tokens the target accepted",
+            ),
+            spec_cycles_total: reg.counter(
+                "spec_cycles_total",
+                &[],
+                "Per-sequence draft/verify cycles run",
+            ),
+            spec_fallbacks_total: reg.counter(
+                "spec_fallbacks_total",
+                &[],
+                "Sequences permanently fallen back to plain decode",
+            ),
+        }
+    }
+
+    /// The finished-requests counter for a finish-reason string.
+    pub fn finished(&self, reason: &str) -> Option<&Counter> {
+        self.requests_finished
+            .iter()
+            .find(|(r, _)| *r == reason)
+            .map(|(_, c)| c.as_ref())
+    }
+}
+
+/// One engine's telemetry: the metrics registry + typed handles, the
+/// tick-trace ring, and the start-of-life instant (uptime).  Shared via
+/// `Arc` by the scheduler (writes), the server threads (exposition), and
+/// the trace-log writer.
+pub struct Telemetry {
+    pub registry: Registry,
+    pub metrics: EngineMetrics,
+    ring: Mutex<TraceRing>,
+    started: Instant,
+}
+
+impl Telemetry {
+    pub fn new(trace_cap: usize) -> Arc<Self> {
+        let registry = Registry::default();
+        let metrics = EngineMetrics::new(&registry);
+        Arc::new(Telemetry {
+            registry,
+            metrics,
+            ring: Mutex::new(TraceRing::new(trace_cap)),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Stamp `rec` with its sequence number and engine-relative time and
+    /// append it to the ring (oldest record drops at capacity).
+    pub fn record_tick(&self, mut rec: TickRecord) {
+        let mut ring = self.ring.lock().expect("trace ring poisoned");
+        rec.seq = ring.total();
+        rec.at_secs = self.started.elapsed().as_secs_f64();
+        ring.push(rec);
+    }
+
+    /// `(total ticks ever, last n records oldest-first)`.
+    pub fn last_ticks(&self, n: usize) -> (u64, Vec<TickRecord>) {
+        let ring = self.ring.lock().expect("trace ring poisoned");
+        (ring.total(), ring.last(n))
+    }
+
+    /// The most recent tick record, if any (trace-log appending).
+    pub fn last_tick(&self) -> Option<TickRecord> {
+        let ring = self.ring.lock().expect("trace ring poisoned");
+        ring.last(1).pop()
+    }
+}

@@ -1,0 +1,203 @@
+//! Process-wide kernel profiling accumulators, gated behind
+//! `serve --profile` / `REPRO_PROF=1`.
+//!
+//! The hooks live inside the hottest code in the crate (`gemm_accum`,
+//! the fused 2-bit panel matmul, the fused gemv, and the pool's task
+//! claim loop), so the OFF path must cost exactly one relaxed atomic
+//! load and nothing else — no `Instant::now`, no branch on env vars.
+//! Once enabled the switch is sticky for the life of the process:
+//! profiling only ever times and counts around compute, so enabling it
+//! cannot change any numeric result (the bitwise A/B test in
+//! `tests/obs.rs` pins this).
+//!
+//! Two views accumulate:
+//!
+//! * per-kernel-kind `{calls, busy ns, flops}` — enough to derive
+//!   achieved GFLOP/s per kind for `/metrics` and `repro trace-report`;
+//! * per-pool-lane busy nanoseconds (lane 0 is the caller thread, lanes
+//!   `1..n` the `repro-kernel-*` workers) — the lane-utilization data
+//!   the ROADMAP sharding work needs before it can split layers.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Kernel kinds with dedicated accumulators, in [`KIND_NAMES`] order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Dense f32 GEMM (`kernels::gemm_accum` — LoRA paths, dense ref).
+    DenseGemm = 0,
+    /// Fused dequant+matmul over packed 2-bit panels (prefill/batched).
+    FusedPanel = 1,
+    /// Fused dequant+gemv for skinny decode batches.
+    MatvecFused = 2,
+}
+
+pub const N_KINDS: usize = 3;
+pub const KIND_NAMES: [&str; N_KINDS] = ["dense_gemm", "fused_panel", "matvec_fused"];
+
+/// Highest pool lane with a dedicated busy-ns cell (lane 0 = caller).
+pub const MAX_LANES: usize = 64;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_CHECKED: AtomicBool = AtomicBool::new(false);
+
+struct KindCells {
+    calls: AtomicU64,
+    ns: AtomicU64,
+    flops: AtomicU64,
+}
+
+fn kind_cells() -> &'static [KindCells; N_KINDS] {
+    static CELLS: OnceLock<[KindCells; N_KINDS]> = OnceLock::new();
+    CELLS.get_or_init(|| {
+        std::array::from_fn(|_| KindCells {
+            calls: AtomicU64::new(0),
+            ns: AtomicU64::new(0),
+            flops: AtomicU64::new(0),
+        })
+    })
+}
+
+fn lane_cells() -> &'static Vec<AtomicU64> {
+    static LANES: OnceLock<Vec<AtomicU64>> = OnceLock::new();
+    LANES.get_or_init(|| (0..MAX_LANES).map(|_| AtomicU64::new(0)).collect())
+}
+
+thread_local! {
+    /// This thread's pool lane (0 = a caller thread participating in a
+    /// pool batch; workers set `1..n` once at spawn).
+    static LANE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Is profiling on?  One relaxed load — this is the whole cost of every
+/// kernel hook when profiling is disabled.  The first call folds in the
+/// `REPRO_PROF` environment variable.
+#[inline]
+pub fn enabled() -> bool {
+    if !ENV_CHECKED.load(Ordering::Relaxed) {
+        let on = std::env::var("REPRO_PROF").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+        if on {
+            ENABLED.store(true, Ordering::Relaxed);
+        }
+        ENV_CHECKED.store(true, Ordering::Relaxed);
+    }
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn profiling on for the rest of the process (`serve --profile`).
+/// Sticky by design: accumulators are process-global, and a half-profiled
+/// window is worse than a longer one.
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+    ENV_CHECKED.store(true, Ordering::Relaxed);
+}
+
+/// Start a kernel timer — `Some` only when profiling is on, so the off
+/// path never reads the clock.
+#[inline]
+pub fn timer() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Credit one kernel invocation to its kind.
+#[inline]
+pub fn record(kind: KernelKind, ns: u64, flops: u64) {
+    let c = &kind_cells()[kind as usize];
+    c.calls.fetch_add(1, Ordering::Relaxed);
+    c.ns.fetch_add(ns, Ordering::Relaxed);
+    c.flops.fetch_add(flops, Ordering::Relaxed);
+}
+
+/// Bind the calling thread to a pool lane (workers call this once at
+/// spawn; caller threads keep the default lane 0).
+pub fn set_lane(lane: usize) {
+    LANE.with(|l| l.set(lane.min(MAX_LANES - 1)));
+}
+
+/// Credit busy nanoseconds to the calling thread's lane.
+#[inline]
+pub fn record_lane(ns: u64) {
+    let lane = LANE.with(Cell::get);
+    lane_cells()[lane].fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Accumulated totals for one kernel kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelCounts {
+    pub calls: u64,
+    pub ns: u64,
+    pub flops: u64,
+}
+
+impl KernelCounts {
+    /// Achieved throughput over the busy window (0 when nothing ran).
+    pub fn gflops(&self) -> f64 {
+        if self.ns == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.ns as f64
+        }
+    }
+}
+
+/// Read all per-kind accumulators, indexed like [`KIND_NAMES`].
+pub fn snapshot() -> [KernelCounts; N_KINDS] {
+    let cells = kind_cells();
+    std::array::from_fn(|i| KernelCounts {
+        calls: cells[i].calls.load(Ordering::Relaxed),
+        ns: cells[i].ns.load(Ordering::Relaxed),
+        flops: cells[i].flops.load(Ordering::Relaxed),
+    })
+}
+
+/// Busy nanoseconds per pool lane, truncated to the first `n` lanes.
+pub fn lane_snapshot(n: usize) -> Vec<u64> {
+    lane_cells()
+        .iter()
+        .take(n.min(MAX_LANES))
+        .map(|c| c.load(Ordering::Relaxed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_per_kind() {
+        let before = snapshot();
+        record(KernelKind::FusedPanel, 1_000, 2_048);
+        record(KernelKind::FusedPanel, 500, 1_024);
+        record(KernelKind::MatvecFused, 10, 64);
+        let after = snapshot();
+        let fp = KernelKind::FusedPanel as usize;
+        let mv = KernelKind::MatvecFused as usize;
+        assert_eq!(after[fp].calls - before[fp].calls, 2);
+        assert_eq!(after[fp].ns - before[fp].ns, 1_500);
+        assert_eq!(after[fp].flops - before[fp].flops, 3_072);
+        assert_eq!(after[mv].calls - before[mv].calls, 1);
+        let g = KernelCounts { calls: 1, ns: 1_000, flops: 2_000 };
+        assert!((g.gflops() - 2.0).abs() < 1e-12, "flops/ns == GFLOP/s");
+    }
+
+    #[test]
+    fn lanes_accumulate_per_thread() {
+        let before = lane_snapshot(MAX_LANES);
+        record_lane(100); // this thread: lane 0 by default
+        let t = std::thread::spawn(|| {
+            set_lane(3);
+            record_lane(250);
+            record_lane(250);
+        });
+        t.join().unwrap();
+        let after = lane_snapshot(MAX_LANES);
+        assert!(after[0] - before[0] >= 100);
+        assert_eq!(after[3] - before[3], 500);
+    }
+}

@@ -1,0 +1,203 @@
+//! Prometheus text exposition (format 0.0.4) for `serve --metrics-addr`.
+//!
+//! Renders one [`crate::obs::Telemetry`] snapshot: every registered
+//! metric family (`# HELP` / `# TYPE` once per family, one sample line
+//! per labeled child), histograms as cumulative `_bucket{le=...}` series
+//! ending in `le="+Inf"` plus `_sum`/`_count`, and the always-present
+//! process families — kernel profiling accumulators, pool-lane busy
+//! seconds, uptime, and a `build_info` pseudo-gauge.
+
+use std::fmt::Write as _;
+
+use super::profile;
+use super::registry::{MetricSnapshot, MetricValue};
+use super::Telemetry;
+
+fn escape_label(v: &str, out: &mut String) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+/// `{k1="v1",k2="v2"}`, or nothing for an unlabeled sample.
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<(&str, &str)> =
+        labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    if let Some(kv) = extra {
+        parts.push(kv);
+    }
+    if parts.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in parts.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label(v, &mut out);
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_snapshot(s: &MetricSnapshot, out: &mut String) {
+    match &s.value {
+        MetricValue::Counter(v) => {
+            let _ = writeln!(out, "{}{} {v}", s.name, label_block(&s.labels, None));
+        }
+        MetricValue::Gauge(v) => {
+            let _ = writeln!(out, "{}{} {v}", s.name, label_block(&s.labels, None));
+        }
+        MetricValue::Histo { bounds, buckets, count, sum } => {
+            // exposition buckets are CUMULATIVE; the registry stores
+            // per-bucket counts, so running-sum here
+            let mut cum = 0u64;
+            for (i, n) in buckets.iter().enumerate() {
+                cum += n;
+                let le = if i < bounds.len() { fmt_f64(bounds[i]) } else { "+Inf".to_string() };
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {cum}",
+                    s.name,
+                    label_block(&s.labels, Some(("le", &le)))
+                );
+            }
+            let _ =
+                writeln!(out, "{}_sum{} {}", s.name, label_block(&s.labels, None), fmt_f64(*sum));
+            let _ = writeln!(out, "{}_count{} {count}", s.name, label_block(&s.labels, None));
+        }
+    }
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render the full exposition document.
+pub fn render(obs: &Telemetry) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    let snaps = obs.registry.snapshot();
+    let mut i = 0;
+    // families stay contiguous in registration order; emit HELP/TYPE once
+    // per name run, then every labeled child
+    while i < snaps.len() {
+        let name = &snaps[i].name;
+        let kind = match snaps[i].value {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histo { .. } => "histogram",
+        };
+        header(&mut out, name, kind, &snaps[i].help);
+        while i < snaps.len() && snaps[i].name == *name {
+            render_snapshot(&snaps[i], &mut out);
+            i += 1;
+        }
+    }
+
+    // kernel profiling accumulators (all zero unless --profile/REPRO_PROF)
+    let kernels = profile::snapshot();
+    header(&mut out, "kernel_calls_total", "counter", "Kernel invocations by kind");
+    for (name, k) in profile::KIND_NAMES.iter().zip(kernels.iter()) {
+        let _ = writeln!(out, "kernel_calls_total{{kind=\"{name}\"}} {}", k.calls);
+    }
+    header(&mut out, "kernel_time_seconds_total", "counter", "Busy time in kernels by kind");
+    for (name, k) in profile::KIND_NAMES.iter().zip(kernels.iter()) {
+        let _ = writeln!(
+            out,
+            "kernel_time_seconds_total{{kind=\"{name}\"}} {}",
+            fmt_f64(k.ns as f64 / 1e9)
+        );
+    }
+    header(&mut out, "kernel_flops_total", "counter", "Floating-point operations by kernel kind");
+    for (name, k) in profile::KIND_NAMES.iter().zip(kernels.iter()) {
+        let _ = writeln!(out, "kernel_flops_total{{kind=\"{name}\"}} {}", k.flops);
+    }
+
+    let build = super::build_info();
+    header(
+        &mut out,
+        "pool_lane_busy_seconds_total",
+        "counter",
+        "Busy time per kernel-pool lane (lane 0 = caller thread)",
+    );
+    for (lane, ns) in profile::lane_snapshot(build.threads).iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "pool_lane_busy_seconds_total{{lane=\"{lane}\"}} {}",
+            fmt_f64(*ns as f64 / 1e9)
+        );
+    }
+
+    header(&mut out, "uptime_seconds", "gauge", "Seconds since engine start");
+    let _ = writeln!(out, "uptime_seconds {}", fmt_f64(obs.uptime_secs()));
+
+    header(&mut out, "build_info", "gauge", "Build identity (value is always 1)");
+    let labels = vec![
+        ("version".to_string(), build.version.to_string()),
+        ("kernel".to_string(), build.kernel.to_string()),
+        ("threads".to_string(), build.threads.to_string()),
+        ("features".to_string(), build.features.join(",")),
+    ];
+    let _ = writeln!(out, "build_info{} 1", label_block(&labels, None));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Telemetry;
+
+    #[test]
+    fn exposition_has_families_and_cumulative_buckets() {
+        let obs = Telemetry::new(16);
+        obs.metrics.ticks_total.add(3);
+        obs.metrics.kv_blocks_resident.set(12);
+        obs.metrics.tick_seconds.observe(0.002);
+        obs.metrics.tick_seconds.observe(0.2);
+        let text = render(&obs);
+        assert!(text.contains("# TYPE ticks_total counter"));
+        assert!(text.contains("\nticks_total 3\n"));
+        assert!(text.contains("\nkv_blocks_resident 12\n"));
+        assert!(text.contains("# TYPE tick_seconds histogram"));
+        assert!(text.contains("tick_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("\ntick_seconds_count 2\n"));
+        assert!(text.contains("tick_phase_seconds_bucket{phase=\"prefill\",le=\"+Inf\"} 0"));
+        assert!(text.contains("requests_finished_total{reason=\"length\"} 0"));
+        assert!(text.contains("kernel_time_seconds_total{kind=\"fused_panel\"}"));
+        assert!(text.contains("pool_lane_busy_seconds_total{lane=\"0\"}"));
+        assert!(text.contains("# TYPE build_info gauge"));
+
+        // cumulative le series: counts must never decrease along a family
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("tick_seconds_bucket{")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= prev, "bucket series must be cumulative: {line}");
+            prev = n;
+        }
+        assert_eq!(prev, 2, "+Inf bucket equals count");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut s = String::new();
+        escape_label("a\"b\\c\nd", &mut s);
+        assert_eq!(s, "a\\\"b\\\\c\\nd");
+    }
+}

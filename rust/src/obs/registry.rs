@@ -1,0 +1,281 @@
+//! Lock-light metrics registry: atomic counters/gauges + fixed-bucket
+//! histograms.
+//!
+//! Handles are `Arc`s to plain atomic cells — updating one is a single
+//! relaxed RMW, safe from any thread (scheduler, connection handlers,
+//! kernel-pool lanes) with no lock.  The registry's `Mutex` guards only
+//! the entry LIST, taken at registration and snapshot time; the serve
+//! hot path registers everything up front and never touches it again.
+//!
+//! Histogram sums are accumulated in fixed-point nanounits (1e-9) so a
+//! concurrent `observe` is one bucket RMW plus one sum RMW with no
+//! compare-and-swap loop; `f64` values round to the nearest nanounit,
+//! which is far below the resolution of anything we time.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram with explicit upper bounds (Prometheus `le`
+/// semantics: a value lands in the first bucket whose bound is >= it;
+/// one implicit overflow bucket catches the rest).
+pub struct Histo {
+    bounds: Vec<f64>,
+    /// Per-bucket (NON-cumulative) counts; `len == bounds.len() + 1`.
+    buckets: Vec<AtomicU64>,
+    sum_nanos: AtomicU64,
+}
+
+impl Histo {
+    pub fn new(bounds: &[f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histo {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        let nanos = if v.is_finite() && v > 0.0 { (v * 1e9).round() as u64 } else { 0 };
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// One consistent read of the per-bucket counts (oldest-to-overflow).
+    fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histo(Arc<Histo>),
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: String,
+    metric: Metric,
+}
+
+/// A point-in-time reading of one registered metric.
+#[derive(Clone, Debug)]
+pub struct MetricSnapshot {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub help: String,
+    pub value: MetricValue,
+}
+
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    /// Non-cumulative bucket counts aligned with `bounds` plus one
+    /// trailing overflow (+Inf) bucket; `count` is their sum at snapshot
+    /// time, `sum` the accumulated observed total.
+    Histo { bounds: Vec<f64>, buckets: Vec<u64>, count: u64, sum: f64 },
+}
+
+/// The metric registry.  Registration is idempotent per
+/// `(name, labels)`: re-registering returns the existing handle (kinds
+/// must match — a kind clash is a programming error and panics).
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+fn own_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Counter> {
+        let labels = own_labels(labels);
+        let mut entries = self.entries.lock().expect("registry poisoned");
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            match &e.metric {
+                Metric::Counter(c) => return Arc::clone(c),
+                _ => panic!("metric '{name}' re-registered with a different kind"),
+            }
+        }
+        let c = Arc::new(Counter::default());
+        entries.push(Entry {
+            name: name.to_string(),
+            labels,
+            help: help.to_string(),
+            metric: Metric::Counter(Arc::clone(&c)),
+        });
+        c
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Gauge> {
+        let labels = own_labels(labels);
+        let mut entries = self.entries.lock().expect("registry poisoned");
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            match &e.metric {
+                Metric::Gauge(g) => return Arc::clone(g),
+                _ => panic!("metric '{name}' re-registered with a different kind"),
+            }
+        }
+        let g = Arc::new(Gauge::default());
+        entries.push(Entry {
+            name: name.to_string(),
+            labels,
+            help: help.to_string(),
+            metric: Metric::Gauge(Arc::clone(&g)),
+        });
+        g
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        bounds: &[f64],
+    ) -> Arc<Histo> {
+        let labels = own_labels(labels);
+        let mut entries = self.entries.lock().expect("registry poisoned");
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            match &e.metric {
+                Metric::Histo(h) => return Arc::clone(h),
+                _ => panic!("metric '{name}' re-registered with a different kind"),
+            }
+        }
+        let h = Arc::new(Histo::new(bounds));
+        entries.push(Entry {
+            name: name.to_string(),
+            labels,
+            help: help.to_string(),
+            metric: Metric::Histo(Arc::clone(&h)),
+        });
+        h
+    }
+
+    /// Read every metric, in registration order (families stay
+    /// contiguous because each family's labeled children register
+    /// back-to-back).
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        let entries = self.entries.lock().expect("registry poisoned");
+        entries
+            .iter()
+            .map(|e| MetricSnapshot {
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                help: e.help.clone(),
+                value: match &e.metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histo(h) => {
+                        let buckets = h.bucket_counts();
+                        let count = buckets.iter().sum();
+                        MetricValue::Histo {
+                            bounds: h.bounds.clone(),
+                            buckets,
+                            count,
+                            sum: h.sum(),
+                        }
+                    }
+                },
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_basics() {
+        let reg = Registry::default();
+        let c = reg.counter("hits_total", &[], "hits");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = reg.gauge("depth", &[], "queue depth");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+        // re-registration returns the SAME cell
+        let c2 = reg.counter("hits_total", &[], "hits");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histo::new(&[0.1, 1.0, 10.0]);
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.bucket_counts(), vec![1, 2, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 56.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn label_sets_are_distinct_children() {
+        let reg = Registry::default();
+        let a = reg.counter("done_total", &[("reason", "length")], "done");
+        let b = reg.counter("done_total", &[("reason", "stop")], "done");
+        a.add(2);
+        b.add(3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(matches!(snap[0].value, MetricValue::Counter(2)));
+        assert!(matches!(snap[1].value, MetricValue::Counter(3)));
+    }
+}

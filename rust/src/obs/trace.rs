@@ -1,0 +1,353 @@
+//! Per-tick phase tracing and per-request lifecycle spans.
+//!
+//! Every scheduler step produces one [`TickRecord`]: where the tick's
+//! wall time went (phase nanos), how big the batch was, how the KV pool
+//! moved, and what speculation achieved.  Records live in a
+//! fixed-capacity [`TraceRing`] (oldest drops, the monotonic total keeps
+//! counting) served over `{"cmd":"trace"}` and appended as newline-JSON
+//! by `serve --trace-log` for `repro trace-report`.
+//!
+//! [`RequestSpan`] is the single home for one sequence's wall-clock
+//! lifecycle (queued -> admitted/prefilled -> decoding -> finished); the
+//! scheduler's `RequestStats` is rendered FROM the span at eviction
+//! instead of being hand-kept field by field.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::serve::json::Json;
+
+/// Tick phases, in pipeline order.  `admit` is queue triage (validation,
+/// adapter resolution, block-budget reservation); `prefill` is the
+/// batched prompt pass including first-token sampling; `draft`/`verify`
+/// are the speculative cycle's two model passes; `decode` is the plain
+/// batched step (per-sequence page growth + forward); `sample` covers
+/// next-token picks and speculative acceptance walks; `emit` is event
+/// packaging, per-adapter accounting, and eviction.
+pub const PHASE_NAMES: [&str; 7] =
+    ["admit", "prefill", "draft", "verify", "decode", "sample", "emit"];
+
+/// Number of tick phases (`phase_ns` length).
+pub const N_PHASES: usize = PHASE_NAMES.len();
+
+pub const PH_ADMIT: usize = 0;
+pub const PH_PREFILL: usize = 1;
+pub const PH_DRAFT: usize = 2;
+pub const PH_VERIFY: usize = 3;
+pub const PH_DECODE: usize = 4;
+pub const PH_SAMPLE: usize = 5;
+pub const PH_EMIT: usize = 6;
+
+/// Per-kernel-kind accumulation attributed to one tick (present only
+/// when profiling is enabled; see [`crate::obs::profile`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KernelTickDelta {
+    pub kind: String,
+    pub calls: u64,
+    pub ns: u64,
+    pub flops: u64,
+}
+
+/// One scheduler tick's trace record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TickRecord {
+    /// Monotonic tick number (assigned by [`crate::obs::Telemetry`]).
+    pub seq: u64,
+    /// Seconds since the engine's telemetry started.
+    pub at_secs: f64,
+    /// Nanoseconds per phase, indexed like [`PHASE_NAMES`].
+    pub phase_ns: [u64; N_PHASES],
+    /// Active sequences after this tick's admissions.
+    pub batch: usize,
+    /// Requests still queued after admission.
+    pub pending: usize,
+    /// Requests admitted this tick.
+    pub admitted: usize,
+    /// Requests finished (evicted) this tick.
+    pub finished: usize,
+    /// Tokens emitted this tick.
+    pub tokens: usize,
+    /// Target-pool resident KV pages at end of tick.
+    pub kv_resident: usize,
+    /// Resident-page delta across the tick (admissions grow it,
+    /// evictions shrink it).
+    pub kv_delta: i64,
+    /// Draft tokens proposed this tick (0 when not speculating).
+    pub spec_proposed: usize,
+    /// Proposals accepted this tick.
+    pub spec_accepted: usize,
+    /// Per-kernel-kind deltas for this tick; empty unless profiling.
+    pub kernels: Vec<KernelTickDelta>,
+}
+
+impl TickRecord {
+    pub fn total_ns(&self) -> u64 {
+        self.phase_ns.iter().sum()
+    }
+
+    /// One newline-JSON trace-log record (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        let phases = Json::Obj(
+            PHASE_NAMES
+                .iter()
+                .zip(self.phase_ns.iter())
+                .map(|(name, &ns)| (name.to_string(), Json::Num(ns as f64)))
+                .collect(),
+        );
+        let mut fields = vec![
+            ("seq".to_string(), Json::Num(self.seq as f64)),
+            ("t".to_string(), Json::Num((self.at_secs * 1e6).round() / 1e6)),
+            ("batch".to_string(), Json::from(self.batch)),
+            ("pending".to_string(), Json::from(self.pending)),
+            ("admitted".to_string(), Json::from(self.admitted)),
+            ("finished".to_string(), Json::from(self.finished)),
+            ("tokens".to_string(), Json::from(self.tokens)),
+            ("kv_resident".to_string(), Json::from(self.kv_resident)),
+            ("kv_delta".to_string(), Json::Num(self.kv_delta as f64)),
+            ("spec_proposed".to_string(), Json::from(self.spec_proposed)),
+            ("spec_accepted".to_string(), Json::from(self.spec_accepted)),
+            ("phase_ns".to_string(), phases),
+        ];
+        if !self.kernels.is_empty() {
+            fields.push((
+                "kernels".to_string(),
+                Json::Arr(
+                    self.kernels
+                        .iter()
+                        .map(|k| {
+                            Json::Obj(vec![
+                                ("kind".to_string(), Json::from(k.kind.as_str())),
+                                ("calls".to_string(), Json::Num(k.calls as f64)),
+                                ("ns".to_string(), Json::Num(k.ns as f64)),
+                                ("flops".to_string(), Json::Num(k.flops as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::Obj(fields)
+    }
+
+    /// Parse one trace-log record (`repro trace-report`).
+    pub fn from_json(j: &Json) -> Result<TickRecord> {
+        let u = |name: &str| {
+            j.get(name)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| Error::config(format!("trace record lacks '{name}'")))
+        };
+        let mut phase_ns = [0u64; N_PHASES];
+        let phases = j
+            .get("phase_ns")
+            .ok_or_else(|| Error::config("trace record lacks 'phase_ns'"))?;
+        for (i, name) in PHASE_NAMES.iter().enumerate() {
+            phase_ns[i] = phases.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+        }
+        let kernels = match j.get("kernels").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(arr) => arr
+                .iter()
+                .map(|k| {
+                    let n = |name: &str| k.get(name).and_then(Json::as_i64).unwrap_or(0).max(0);
+                    KernelTickDelta {
+                        kind: k.get("kind").and_then(Json::as_str).unwrap_or("?").to_string(),
+                        calls: n("calls") as u64,
+                        ns: n("ns") as u64,
+                        flops: n("flops") as u64,
+                    }
+                })
+                .collect(),
+        };
+        Ok(TickRecord {
+            seq: u("seq")?.max(0) as u64,
+            at_secs: j.get("t").and_then(Json::as_f64).unwrap_or(0.0),
+            phase_ns,
+            batch: u("batch")?.max(0) as usize,
+            pending: u("pending")?.max(0) as usize,
+            admitted: u("admitted")?.max(0) as usize,
+            finished: u("finished")?.max(0) as usize,
+            tokens: u("tokens")?.max(0) as usize,
+            kv_resident: u("kv_resident")?.max(0) as usize,
+            kv_delta: u("kv_delta")?,
+            spec_proposed: u("spec_proposed")?.max(0) as usize,
+            spec_accepted: u("spec_accepted")?.max(0) as usize,
+            kernels,
+        })
+    }
+}
+
+/// Fixed-capacity ring of the most recent tick records.  `total` keeps
+/// counting monotonically after old records drop.
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<TickRecord>,
+    total: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TraceRing { cap, buf: VecDeque::with_capacity(cap), total: 0 }
+    }
+
+    pub fn push(&mut self, rec: TickRecord) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(rec);
+        self.total += 1;
+    }
+
+    /// Ticks ever recorded (not just retained).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The last `n` records, oldest-first.
+    pub fn last(&self, n: usize) -> Vec<TickRecord> {
+        let skip = self.buf.len().saturating_sub(n);
+        self.buf.iter().skip(skip).cloned().collect()
+    }
+}
+
+/// One request's wall-clock lifecycle, from submission to completion.
+/// The scheduler keeps exactly one per active sequence; everything the
+/// protocol's `done.stats` object reports is derived from here.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSpan {
+    pub queued_at: Instant,
+    pub admitted_at: Instant,
+    /// The batched prefill pass this request rode in (model time only).
+    pub prefill_secs: f64,
+    /// Prompt positions mapped from a donor's pages instead of computed.
+    pub shared_prefix_tokens: usize,
+    /// Generated tokens so far (the prefill's first token counts).
+    pub emitted: usize,
+    pub last_token_at: Instant,
+    /// Worst gap between consecutive emitted tokens.
+    pub max_gap_secs: f64,
+    pub spec_proposed: usize,
+    pub spec_accepted: usize,
+}
+
+impl RequestSpan {
+    /// Open the span at admission: the prefill emitted the first token
+    /// at `now`.
+    pub fn admitted(
+        queued_at: Instant,
+        admitted_at: Instant,
+        prefill_secs: f64,
+        shared_prefix_tokens: usize,
+        now: Instant,
+    ) -> Self {
+        RequestSpan {
+            queued_at,
+            admitted_at,
+            prefill_secs,
+            shared_prefix_tokens,
+            emitted: 1,
+            last_token_at: now,
+            max_gap_secs: 0.0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+        }
+    }
+
+    /// Record one emitted token.  The gap to the previous token feeds
+    /// the inter-token high-water mark; the first generated token after
+    /// prefill starts the clock without contributing a gap.
+    pub fn note_token(&mut self, now: Instant) {
+        self.emitted += 1;
+        let gap = now.duration_since(self.last_token_at).as_secs_f64();
+        if self.emitted > 1 && gap > self.max_gap_secs {
+            self.max_gap_secs = gap;
+        }
+        self.last_token_at = now;
+    }
+
+    pub fn queue_secs(&self) -> f64 {
+        self.admitted_at.duration_since(self.queued_at).as_secs_f64()
+    }
+
+    pub fn total_secs(&self, done_at: Instant) -> f64 {
+        done_at.duration_since(self.admitted_at).as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64) -> TickRecord {
+        TickRecord { seq, batch: seq as usize % 5, tokens: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_monotonically() {
+        let mut ring = TraceRing::new(4);
+        for i in 0..10 {
+            ring.push(rec(i));
+        }
+        assert_eq!(ring.total(), 10);
+        assert_eq!(ring.len(), 4);
+        let last = ring.last(100);
+        assert_eq!(last.len(), 4);
+        assert_eq!(last[0].seq, 6, "oldest retained record");
+        assert_eq!(last[3].seq, 9);
+        assert_eq!(ring.last(2).iter().map(|r| r.seq).collect::<Vec<_>>(), vec![8, 9]);
+    }
+
+    #[test]
+    fn tick_record_json_roundtrip() {
+        let mut r = TickRecord {
+            seq: 42,
+            at_secs: 1.5,
+            batch: 3,
+            pending: 1,
+            admitted: 2,
+            finished: 1,
+            tokens: 7,
+            kv_resident: 12,
+            kv_delta: -3,
+            spec_proposed: 8,
+            spec_accepted: 6,
+            kernels: vec![KernelTickDelta {
+                kind: "fused_panel".to_string(),
+                calls: 96,
+                ns: 123456,
+                flops: 1 << 30,
+            }],
+            ..Default::default()
+        };
+        r.phase_ns[PH_PREFILL] = 1_000_000;
+        r.phase_ns[PH_EMIT] = 500;
+        let line = r.to_json().render();
+        let back = TickRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn span_tracks_gaps_and_counts() {
+        let t0 = Instant::now();
+        let mut span = RequestSpan::admitted(t0, t0, 0.01, 4, t0);
+        assert_eq!(span.emitted, 1);
+        span.note_token(t0 + std::time::Duration::from_millis(5));
+        span.note_token(t0 + std::time::Duration::from_millis(30));
+        assert_eq!(span.emitted, 3);
+        assert!(span.max_gap_secs >= 0.024, "worst inter-token gap recorded");
+        assert!(span.total_secs(t0 + std::time::Duration::from_millis(30)) >= 0.029);
+    }
+}

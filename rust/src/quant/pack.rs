@@ -196,7 +196,15 @@ impl PackedLinear {
         self.check_x(x, "matmul_fused")?;
         let n_tok = x.rows();
         let mut out = vec![0.0f32; n_tok * self.d_out];
+        let prof = crate::obs::profile::timer();
         fused_matmul(kernel, pool, &self.view(), x.data(), n_tok, &mut out);
+        if let Some(t0) = prof {
+            crate::obs::profile::record(
+                crate::obs::profile::KernelKind::FusedPanel,
+                t0.elapsed().as_nanos() as u64,
+                2 * (n_tok * self.d_in * self.d_out) as u64,
+            );
+        }
         Tensor::new(vec![n_tok, self.d_out], out)
     }
 
@@ -220,7 +228,15 @@ impl PackedLinear {
         self.check_x(x, "matvec_fused")?;
         let n_tok = x.rows();
         let mut out = vec![0.0f32; n_tok * self.d_out];
+        let prof = crate::obs::profile::timer();
         fused_gemv(kernel, pool, &self.view(), x.data(), n_tok, &mut out);
+        if let Some(t0) = prof {
+            crate::obs::profile::record(
+                crate::obs::profile::KernelKind::MatvecFused,
+                t0.elapsed().as_nanos() as u64,
+                2 * (n_tok * self.d_in * self.d_out) as u64,
+            );
+        }
         Tensor::new(vec![n_tok, self.d_out], out)
     }
 

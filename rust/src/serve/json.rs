@@ -538,6 +538,22 @@ mod tests {
     }
 
     #[test]
+    fn renders_non_finite_as_null_everywhere() {
+        // bare infinities (a +Inf histogram bound takes this path)
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).render(), "null");
+        // nested inside containers the output must stay parseable JSON
+        let j = Json::Obj(vec![
+            ("le".to_string(), Json::Num(f64::INFINITY)),
+            ("xs".to_string(), Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)])),
+        ]);
+        let rendered = j.render();
+        assert_eq!(rendered, r#"{"le":null,"xs":[1,null]}"#);
+        let back = Json::parse(&rendered).unwrap();
+        assert_eq!(back.get("le"), Some(&Json::Null));
+    }
+
+    #[test]
     fn rejects_duplicate_keys() {
         for bad in [
             r#"{"a":1,"a":2}"#,

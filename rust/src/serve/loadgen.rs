@@ -26,6 +26,13 @@
 //! runs, exercising the registry's deferred-unload path under traffic.
 //! The post-run stats scrape picks up the server's per-adapter token
 //! counts and delta-GEMM overhead fractions for `BENCH_serve.json`.
+//!
+//! `sample_ms > 0` additionally polls `{"cmd":"stats"}` on a side
+//! connection every `sample_ms` milliseconds WHILE the load runs,
+//! recording a time series of batch size (active sequences), queue depth
+//! and KV block occupancy — the mid-run view a single post-run scrape
+//! cannot give (peak/median batch size, occupancy ramp).  The series and
+//! its summaries ride on `BENCH_serve.json`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -68,6 +75,9 @@ pub struct LoadOptions {
     /// churn scenario.  Keep the name OUT of `adapter_mix` unless you
     /// want routed requests racing the unloads.
     pub churn_adapter: Option<(String, String)>,
+    /// Poll `{"cmd":"stats"}` every this-many milliseconds during the
+    /// run and record a batch-size / KV-occupancy time series.  0 = off.
+    pub sample_ms: u64,
 }
 
 /// Per-request observation (offsets from the run epoch, seconds).
@@ -144,6 +154,22 @@ pub struct StatsSnapshot {
     pub spec: Option<SpecSnapshot>,
     pub adapters: Vec<AdapterSnapshot>,
     pub baseline_tokens: usize,
+    /// Sequences decoding in the batch at scrape time.
+    pub active: usize,
+    /// Requests queued behind the batch at scrape time.
+    pub pending: usize,
+}
+
+/// One mid-run stats poll (offsets from the run epoch, seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSample {
+    pub t_secs: f64,
+    /// Active sequences — the instantaneous batch size.
+    pub active: usize,
+    /// Queued requests not yet admitted.
+    pub pending: usize,
+    pub kv_resident_blocks: usize,
+    pub kv_blocks_total: usize,
 }
 
 /// Aggregated results of one load run.
@@ -176,6 +202,9 @@ pub struct LoadReport {
     /// Completed load->unload cycles the churn thread managed mid-run
     /// (0 without `churn_adapter`).
     pub churn_cycles: usize,
+    /// Mid-run stats polls in epoch order (empty when `sample_ms` = 0 or
+    /// every poll failed).
+    pub samples: Vec<LoadSample>,
 }
 
 impl LoadReport {
@@ -184,6 +213,30 @@ impl LoadReport {
             return 0.0;
         }
         self.total_tokens as f64 / self.wall_secs
+    }
+
+    /// Peak sampled batch size (active sequences); 0 without sampling.
+    pub fn batch_peak(&self) -> usize {
+        self.samples.iter().map(|s| s.active).max().unwrap_or(0)
+    }
+
+    /// Median sampled batch size; 0 without sampling.
+    pub fn batch_p50(&self) -> usize {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut v: Vec<usize> = self.samples.iter().map(|s| s.active).collect();
+        v.sort_unstable();
+        v[v.len() / 2]
+    }
+
+    /// Peak sampled KV occupancy (resident / total blocks), in [0, 1].
+    pub fn kv_occupancy_peak(&self) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.kv_blocks_total > 0)
+            .map(|s| s.kv_resident_blocks as f64 / s.kv_blocks_total as f64)
+            .fold(0.0, f64::max)
     }
 }
 
@@ -383,6 +436,36 @@ fn run_churn(
     Ok(cycles)
 }
 
+/// The sampler loop: poll the stats endpoint on its own connection every
+/// `interval_ms` until `done`.  Failed polls are skipped (e.g. the first
+/// poll racing the server boot) — the series just has a gap.
+fn run_sampler(
+    addr: &str,
+    interval_ms: u64,
+    epoch: Instant,
+    done: &std::sync::atomic::AtomicBool,
+) -> Vec<LoadSample> {
+    use std::sync::atomic::Ordering;
+    let mut samples = Vec::new();
+    let interval = std::time::Duration::from_millis(interval_ms.max(1));
+    while !done.load(Ordering::Relaxed) {
+        std::thread::sleep(interval);
+        if done.load(Ordering::Relaxed) {
+            break;
+        }
+        if let Ok(s) = fetch_stats(addr) {
+            samples.push(LoadSample {
+                t_secs: epoch.elapsed().as_secs_f64(),
+                active: s.active,
+                pending: s.pending,
+                kv_resident_blocks: s.kv.resident_blocks,
+                kv_blocks_total: s.kv.blocks_total,
+            });
+        }
+    }
+    samples
+}
+
 /// Peak number of intervals `[first_token, done)` that overlap.
 fn peak_overlap(records: &[ReqRecord]) -> usize {
     let mut edges: Vec<(f64, i32)> = Vec::with_capacity(records.len() * 2);
@@ -409,11 +492,16 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     }
     let epoch = Instant::now();
     let churn_done = std::sync::atomic::AtomicBool::new(false);
-    let (results, churn_cycles): (Vec<Result<Vec<ReqRecord>>>, usize) =
+    let sampler_done = std::sync::atomic::AtomicBool::new(false);
+    let (results, churn_cycles, samples): (Vec<Result<Vec<ReqRecord>>>, usize, Vec<LoadSample>) =
         std::thread::scope(|s| {
             let churn = o.churn_adapter.as_ref().map(|(name, path)| {
                 let done = &churn_done;
                 s.spawn(move || run_churn(&o.addr, name, path, done))
+            });
+            let sampler = (o.sample_ms > 0).then(|| {
+                let done = &sampler_done;
+                s.spawn(move || run_sampler(&o.addr, o.sample_ms, epoch, done))
             });
             let handles: Vec<_> = (0..o.clients)
                 .map(|ci| s.spawn(move || run_client(&o.addr, ci, o, epoch)))
@@ -426,6 +514,7 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
                 })
                 .collect();
             churn_done.store(true, std::sync::atomic::Ordering::Relaxed);
+            sampler_done.store(true, std::sync::atomic::Ordering::Relaxed);
             let cycles = match churn {
                 Some(h) => match h.join() {
                     Ok(Ok(n)) => n,
@@ -440,7 +529,11 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
                 },
                 None => 0,
             };
-            (results, cycles)
+            let samples = match sampler {
+                Some(h) => h.join().unwrap_or_default(),
+                None => Vec::new(),
+            };
+            (results, cycles, samples)
         });
     let wall_secs = epoch.elapsed().as_secs_f64();
 
@@ -486,6 +579,7 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         baseline_tokens: stats.as_ref().map(|s| s.baseline_tokens).unwrap_or(0),
         tokens_by_route: by_route.into_iter().collect(),
         churn_cycles,
+        samples,
     })
 }
 
@@ -581,7 +675,15 @@ pub fn fetch_stats(addr: &str) -> Result<StatsSnapshot> {
         .unwrap_or_default();
     let baseline_tokens =
         j.get("baseline_tokens").and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
-    Ok(StatsSnapshot { kv, spec, adapters, baseline_tokens })
+    let top = |name: &str| j.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+    Ok(StatsSnapshot {
+        kv,
+        spec,
+        adapters,
+        baseline_tokens,
+        active: top("active"),
+        pending: top("pending"),
+    })
 }
 
 #[cfg(test)]
@@ -624,6 +726,7 @@ mod tests {
             transcript: None,
             adapter_mix: vec!["a".into(), "-".into(), "b".into()],
             churn_adapter: None,
+            sample_ms: 0,
         };
         assert_eq!(route_for(&o, 0), Some("a"));
         assert_eq!(route_for(&o, 1), None); // "-" = baseline
@@ -631,5 +734,39 @@ mod tests {
         assert_eq!(route_for(&o, 3), Some("a")); // wraps round-robin
         o.adapter_mix.clear();
         assert_eq!(route_for(&o, 0), None);
+    }
+
+    #[test]
+    fn sample_summaries_cover_peak_median_occupancy() {
+        let sample = |active: usize, resident: usize| LoadSample {
+            t_secs: 0.0,
+            active,
+            pending: 0,
+            kv_resident_blocks: resident,
+            kv_blocks_total: 100,
+        };
+        let mut r = LoadReport {
+            requests: 0,
+            completed: 0,
+            total_tokens: 0,
+            wall_secs: 1.0,
+            ttft: LatencySummary::from_secs(vec![]),
+            total: LatencySummary::from_secs(vec![]),
+            peak_concurrent_streams: 0,
+            kv: None,
+            spec: None,
+            adapters: Vec::new(),
+            baseline_tokens: 0,
+            tokens_by_route: Vec::new(),
+            churn_cycles: 0,
+            samples: vec![sample(2, 10), sample(7, 80), sample(4, 40)],
+        };
+        assert_eq!(r.batch_peak(), 7);
+        assert_eq!(r.batch_p50(), 4);
+        assert!((r.kv_occupancy_peak() - 0.8).abs() < 1e-12);
+        r.samples.clear();
+        assert_eq!(r.batch_peak(), 0);
+        assert_eq!(r.batch_p50(), 0);
+        assert_eq!(r.kv_occupancy_peak(), 0.0);
     }
 }

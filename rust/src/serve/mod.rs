@@ -34,12 +34,20 @@
 //!   sequences are in flight and per-adapter token accounting.
 //! * [`json`] / [`protocol`] — the newline-delimited JSON line protocol
 //!   (now incl. `{"cmd":"stats"}` -> KV memory + adapter stats frames,
-//!   per-request `"adapter"` routing, and the `adapter` command).
+//!   per-request `"adapter"` routing, the `adapter` command, and the
+//!   `{"cmd":"metrics"}` / `{"cmd":"trace"}` telemetry queries).
 //! * [`server`] — the long-lived `repro serve` TCP loop (std threads +
-//!   channels).
+//!   channels), plus the optional Prometheus `/metrics` listener and the
+//!   `--trace-log` tick journal.
 //! * [`loadgen`] — the `repro bench-serve` concurrent load generator
 //!   (common-prefix prompts to exercise sharing, KV stats scrape,
-//!   `BENCH_serve.json`).
+//!   mid-run `--sample-ms` batch/occupancy series, `BENCH_serve.json`).
+//!
+//! Telemetry itself (metric registry, tick/request tracing, kernel
+//! profiling, Prometheus rendering) lives in [`crate::obs`]; the
+//! scheduler writes into one shared [`crate::obs::Telemetry`] and every
+//! exposition path reads from it.  Nothing in `obs` touches compute or
+//! RNG state, so token streams are byte-identical with telemetry on.
 
 pub mod adapters;
 pub mod block;

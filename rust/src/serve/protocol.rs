@@ -8,6 +8,8 @@
 //! {"id":"r3","prompt":[5],"max_new":16,"stop":0}
 //! {"id":"r4","prompt":[5],"max_new":16,"adapter":"taskA"}
 //! {"cmd":"stats"}
+//! {"cmd":"metrics"}
+//! {"cmd":"trace","n":32}
 //! {"cmd":"adapter","op":"load","name":"taskA","path":"checkpoints/adapter_taskA.apq"}
 //! {"cmd":"adapter","op":"unload","name":"taskA"}
 //! {"cmd":"shutdown"}
@@ -24,6 +26,10 @@
 //! `{"cmd":"adapter",...}` loads an APIQADPT sidecar into (or unloads it
 //! from) the engine's registry at runtime; an unload with sequences in
 //! flight answers `"status":"draining"` and completes when they finish.
+//! `{"cmd":"metrics"}` returns the full telemetry registry as one JSON
+//! frame (the same data `--metrics-addr` exposes as Prometheus text);
+//! `{"cmd":"trace","n":K}` returns the last `K` scheduler-tick trace
+//! records from the in-memory ring (`n` defaults to 16, capped at 4096).
 //!
 //! ## Frames (server -> client, one JSON object per line)
 //!
@@ -36,6 +42,8 @@
 //! {"id":"r1","event":"error","message":"..."}
 //! {"id":"","event":"adapter","op":"load","name":"taskA","status":"loaded"}
 //! {"id":"","event":"stats","active":1,"pending":0,"completed":7,
+//!  "uptime_secs":12.5,
+//!  "build":{"version":"0.1.0","kernel":"avx2","threads":8,"features":[]},
 //!  "kv":{"block_size":32,"blocks_total":384,"resident_blocks":12,"free_blocks":4,
 //!        "used_blocks":8,"shared_blocks":2,"peak_resident_blocks":12,
 //!        "peak_shared_blocks":3,"block_bytes":65536,"resident_bytes":786432,
@@ -59,6 +67,8 @@
 //! acceptance even after its requests finished.
 
 use crate::error::{Error, Result};
+use crate::obs::registry::MetricValue;
+use crate::obs::{BuildInfo, Telemetry, TickRecord};
 use crate::serve::adapters::AdapterStat;
 use crate::serve::block::KvStats;
 use crate::serve::json::Json;
@@ -97,11 +107,19 @@ impl AdapterOp {
     }
 }
 
+/// Default / maximum `n` for `{"cmd":"trace"}`.
+pub const DEFAULT_TRACE_N: usize = 16;
+pub const MAX_TRACE_N: usize = 4096;
+
 /// One line of client input.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientLine {
     Request(WireRequest),
     Stats,
+    /// Full telemetry-registry snapshot as one JSON frame.
+    Metrics,
+    /// Last `n` scheduler-tick trace records.
+    Trace { n: usize },
     /// Runtime registry change: `path` is required for `Load`.
     Adapter { op: AdapterOp, name: String, path: Option<String> },
     Shutdown,
@@ -113,6 +131,15 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
     if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => Ok(ClientLine::Stats),
+            "metrics" => Ok(ClientLine::Metrics),
+            "trace" => {
+                let n = j
+                    .get("n")
+                    .and_then(Json::as_i64)
+                    .map(|v| v.clamp(1, MAX_TRACE_N as i64) as usize)
+                    .unwrap_or(DEFAULT_TRACE_N);
+                Ok(ClientLine::Trace { n })
+            }
             "shutdown" => Ok(ClientLine::Shutdown),
             "adapter" => {
                 let op = match j.get("op").and_then(Json::as_str) {
@@ -229,29 +256,39 @@ fn kv_json(kv: &KvStats) -> Json {
     ])
 }
 
+/// Everything the `stats` frame renders, gathered by the engine thread.
+/// One struct instead of a parade of arguments so exposition sites can't
+/// transpose queue counters.
+pub struct EngineSnapshot<'a> {
+    pub kv: &'a KvStats,
+    pub active: usize,
+    pub pending: usize,
+    pub completed: usize,
+    pub spec: Option<&'a SpecStats>,
+    pub adapters: &'a [AdapterStat],
+    pub baseline_tokens: u64,
+    pub build: &'a BuildInfo,
+    pub uptime_secs: f64,
+}
+
 /// Render the engine-wide stats frame: queue/batch counters plus the
 /// paged KV pool's block accounting (current and high-water), — when
 /// the engine speculates — the draft/verify counters and draft KV pool,
-/// and the adapter registry (per-adapter refs/tokens/overhead plus the
-/// default path's `baseline_tokens`).
-pub fn stats_frame(
-    kv: &KvStats,
-    active: usize,
-    pending: usize,
-    completed: usize,
-    spec: Option<&SpecStats>,
-    adapters: &[AdapterStat],
-    baseline_tokens: u64,
-) -> String {
+/// the adapter registry (per-adapter refs/tokens/overhead plus the
+/// default path's `baseline_tokens`), and the process build identity +
+/// uptime.
+pub fn stats_frame(snap: &EngineSnapshot<'_>) -> String {
     let mut fields = vec![
         ("id".to_string(), Json::from("")),
         ("event".to_string(), Json::from("stats")),
-        ("active".to_string(), Json::from(active)),
-        ("pending".to_string(), Json::from(pending)),
-        ("completed".to_string(), Json::from(completed)),
-        ("kv".to_string(), kv_json(kv)),
+        ("active".to_string(), Json::from(snap.active)),
+        ("pending".to_string(), Json::from(snap.pending)),
+        ("completed".to_string(), Json::from(snap.completed)),
+        ("uptime_secs".to_string(), Json::Num((snap.uptime_secs * 1e3).round() / 1e3)),
+        ("build".to_string(), build_json(snap.build)),
+        ("kv".to_string(), kv_json(snap.kv)),
     ];
-    if let Some(s) = spec {
+    if let Some(s) = snap.spec {
         fields.push((
             "spec".to_string(),
             Json::Obj(vec![
@@ -268,12 +305,116 @@ pub fn stats_frame(
             ]),
         ));
     }
-    fields.push(("baseline_tokens".to_string(), Json::from(baseline_tokens as i64)));
+    fields.push(("baseline_tokens".to_string(), Json::from(snap.baseline_tokens as i64)));
     fields.push((
         "adapters".to_string(),
-        Json::Arr(adapters.iter().map(adapter_json).collect()),
+        Json::Arr(snap.adapters.iter().map(adapter_json).collect()),
     ));
     Json::Obj(fields).render()
+}
+
+fn build_json(b: &BuildInfo) -> Json {
+    Json::Obj(vec![
+        ("version".to_string(), Json::from(b.version)),
+        ("kernel".to_string(), Json::from(b.kernel)),
+        ("threads".to_string(), Json::from(b.threads)),
+        (
+            "features".to_string(),
+            Json::Arr(b.features.iter().map(|f| Json::from(*f)).collect()),
+        ),
+    ])
+}
+
+/// Render the `{"cmd":"metrics"}` response: every registered metric (in
+/// registration order, histograms with per-`le` bucket counts — the
+/// overflow bucket's bound renders as `null` via the non-finite rule),
+/// plus the kernel profiling accumulators and pool-lane busy nanos.
+pub fn metrics_frame(obs: &Telemetry) -> String {
+    let metrics: Vec<Json> = obs
+        .registry
+        .snapshot()
+        .into_iter()
+        .map(|s| {
+            let mut fields = vec![("name".to_string(), Json::from(s.name.as_str()))];
+            if !s.labels.is_empty() {
+                fields.push((
+                    "labels".to_string(),
+                    Json::Obj(
+                        s.labels
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
+                            .collect(),
+                    ),
+                ));
+            }
+            match s.value {
+                MetricValue::Counter(v) => {
+                    fields.push(("type".to_string(), Json::from("counter")));
+                    fields.push(("value".to_string(), Json::Num(v as f64)));
+                }
+                MetricValue::Gauge(v) => {
+                    fields.push(("type".to_string(), Json::from("gauge")));
+                    fields.push(("value".to_string(), Json::Num(v as f64)));
+                }
+                MetricValue::Histo { bounds, buckets, count, sum } => {
+                    fields.push(("type".to_string(), Json::from("histogram")));
+                    fields.push(("count".to_string(), Json::Num(count as f64)));
+                    fields.push(("sum".to_string(), Json::Num((sum * 1e6).round() / 1e6)));
+                    let bs: Vec<Json> = buckets
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &n)| {
+                            let le = bounds.get(i).copied().unwrap_or(f64::INFINITY);
+                            Json::Obj(vec![
+                                ("le".to_string(), Json::Num(le)),
+                                ("n".to_string(), Json::Num(n as f64)),
+                            ])
+                        })
+                        .collect();
+                    fields.push(("buckets".to_string(), Json::Arr(bs)));
+                }
+            }
+            Json::Obj(fields)
+        })
+        .collect();
+    let kernels: Vec<Json> = crate::obs::profile::KIND_NAMES
+        .iter()
+        .zip(crate::obs::profile::snapshot().iter())
+        .map(|(name, k)| {
+            Json::Obj(vec![
+                ("kind".to_string(), Json::from(*name)),
+                ("calls".to_string(), Json::Num(k.calls as f64)),
+                ("ns".to_string(), Json::Num(k.ns as f64)),
+                ("flops".to_string(), Json::Num(k.flops as f64)),
+                ("gflops".to_string(), Json::Num((k.gflops() * 1e3).round() / 1e3)),
+            ])
+        })
+        .collect();
+    let lanes: Vec<Json> = crate::obs::profile::lane_snapshot(crate::kernels::pool::pool_threads())
+        .iter()
+        .map(|&ns| Json::Num(ns as f64))
+        .collect();
+    Json::Obj(vec![
+        ("id".to_string(), Json::from("")),
+        ("event".to_string(), Json::from("metrics")),
+        ("uptime_secs".to_string(), Json::Num((obs.uptime_secs() * 1e3).round() / 1e3)),
+        ("metrics".to_string(), Json::Arr(metrics)),
+        ("kernels".to_string(), Json::Arr(kernels)),
+        ("lanes_busy_ns".to_string(), Json::Arr(lanes)),
+    ])
+    .render()
+}
+
+/// Render the `{"cmd":"trace"}` response: `total` ticks ever recorded
+/// plus the retained tail of the ring, oldest-first.
+pub fn trace_frame(total: u64, ticks: &[TickRecord]) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), Json::from("")),
+        ("event".to_string(), Json::from("trace")),
+        ("total".to_string(), Json::Num(total as f64)),
+        ("ticks".to_string(), Json::Arr(ticks.iter().map(TickRecord::to_json).collect())),
+    ])
+    .render()
 }
 
 fn adapter_json(a: &AdapterStat) -> Json {
@@ -438,6 +579,56 @@ mod tests {
     }
 
     #[test]
+    fn parses_metrics_and_trace() {
+        assert_eq!(parse_line(r#"{"cmd":"metrics"}"#).unwrap(), ClientLine::Metrics);
+        assert_eq!(
+            parse_line(r#"{"cmd":"trace"}"#).unwrap(),
+            ClientLine::Trace { n: DEFAULT_TRACE_N }
+        );
+        assert_eq!(parse_line(r#"{"cmd":"trace","n":3}"#).unwrap(), ClientLine::Trace { n: 3 });
+        // out-of-range asks clamp instead of erroring
+        assert_eq!(parse_line(r#"{"cmd":"trace","n":0}"#).unwrap(), ClientLine::Trace { n: 1 });
+        assert_eq!(
+            parse_line(r#"{"cmd":"trace","n":999999}"#).unwrap(),
+            ClientLine::Trace { n: MAX_TRACE_N }
+        );
+    }
+
+    #[test]
+    fn metrics_and_trace_frames_are_parseable() {
+        let obs = Telemetry::new(8);
+        obs.metrics.ticks_total.add(2);
+        obs.metrics.tick_seconds.observe(0.01);
+        obs.record_tick(TickRecord { batch: 3, tokens: 5, ..Default::default() });
+        let f = metrics_frame(&obs);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("metrics"));
+        let ms = j.get("metrics").and_then(Json::as_arr).expect("metrics array");
+        let ticks = ms
+            .iter()
+            .find(|m| m.get("name").and_then(Json::as_str) == Some("ticks_total"))
+            .expect("ticks_total present");
+        assert_eq!(ticks.get("value").and_then(Json::as_i64), Some(2));
+        let hist = ms
+            .iter()
+            .find(|m| m.get("name").and_then(Json::as_str) == Some("tick_seconds"))
+            .expect("tick_seconds present");
+        let buckets = hist.get("buckets").and_then(Json::as_arr).expect("buckets");
+        // overflow bucket's +Inf bound must render as null, not break JSON
+        assert!(matches!(buckets.last().unwrap().get("le"), Some(Json::Null) | None));
+        assert!(j.get("kernels").and_then(Json::as_arr).is_some());
+
+        let (total, ticks) = obs.last_ticks(8);
+        let f = trace_frame(total, &ticks);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("trace"));
+        assert_eq!(j.get("total").and_then(Json::as_i64), Some(1));
+        let t0 = &j.get("ticks").and_then(Json::as_arr).expect("ticks array")[0];
+        assert_eq!(t0.get("batch").and_then(Json::as_i64), Some(3));
+        assert_eq!(t0.get("tokens").and_then(Json::as_i64), Some(5));
+    }
+
+    #[test]
     fn stats_frame_carries_kv_accounting() {
         let kv = crate::serve::block::KvStats {
             block_size: 4,
@@ -452,11 +643,28 @@ mod tests {
             resident_bytes: 1536,
             peak_resident_bytes: 1536,
         };
-        let f = stats_frame(&kv, 2, 1, 9, None, &[], 0);
+        let build = crate::obs::build_info();
+        let f = stats_frame(&EngineSnapshot {
+            kv: &kv,
+            active: 2,
+            pending: 1,
+            completed: 9,
+            spec: None,
+            adapters: &[],
+            baseline_tokens: 0,
+            build: &build,
+            uptime_secs: 1.25,
+        });
         let j = Json::parse(&f).unwrap();
         assert_eq!(j.get("event").and_then(Json::as_str), Some("stats"));
         assert_eq!(j.get("active").and_then(Json::as_i64), Some(2));
         assert_eq!(j.get("completed").and_then(Json::as_i64), Some(9));
+        assert!((j.get("uptime_secs").and_then(Json::as_f64).unwrap() - 1.25).abs() < 1e-9);
+        let bj = j.get("build").expect("build object");
+        assert_eq!(bj.get("version").and_then(Json::as_str), Some(env!("CARGO_PKG_VERSION")));
+        assert!(bj.get("kernel").and_then(Json::as_str).is_some());
+        assert!(bj.get("threads").and_then(Json::as_i64).unwrap() >= 1);
+        assert!(bj.get("features").and_then(Json::as_arr).is_some());
         let kvj = j.get("kv").expect("kv object");
         assert_eq!(kvj.get("block_size").and_then(Json::as_i64), Some(4));
         assert_eq!(kvj.get("shared_blocks").and_then(Json::as_i64), Some(2));
@@ -487,7 +695,17 @@ mod tests {
             fallbacks: 1,
             draft_kv: kv,
         };
-        let f = stats_frame(&kv, 2, 1, 9, Some(&spec), std::slice::from_ref(&ad), 120);
+        let f = stats_frame(&EngineSnapshot {
+            kv: &kv,
+            active: 2,
+            pending: 1,
+            completed: 9,
+            spec: Some(&spec),
+            adapters: std::slice::from_ref(&ad),
+            baseline_tokens: 120,
+            build: &build,
+            uptime_secs: 2.0,
+        });
         let j = Json::parse(&f).unwrap();
         assert_eq!(j.get("baseline_tokens").and_then(Json::as_i64), Some(120));
         let adj = &j.get("adapters").and_then(Json::as_arr).expect("adapters array")[0];

@@ -45,6 +45,10 @@ use std::time::Instant;
 
 use crate::error::Result;
 use crate::infer::{argmax, AdapterSet, PackedModel};
+use crate::obs::trace::{
+    KernelTickDelta, PH_ADMIT, PH_DECODE, PH_DRAFT, PH_EMIT, PH_PREFILL, PH_SAMPLE, PH_VERIFY,
+};
+use crate::obs::{profile, RequestSpan, Telemetry, TickRecord};
 use crate::serve::adapters::AdapterRegistry;
 use crate::serve::block::{BlockPool, KvStats};
 use crate::serve::decode::pick;
@@ -215,32 +219,19 @@ struct Running {
     rng: Option<Rng>,
     /// prompt + generated tokens.
     tokens: Vec<i32>,
-    emitted: usize,
-    admitted_at: Instant,
-    prefill_secs: f64,
-    shared_prefix: usize,
-    last_token_at: Instant,
-    max_gap: f64,
+    /// Wall-clock lifecycle (queue wait, prefill, inter-token gaps, spec
+    /// tallies) — the single source [`RequestStats`] is derived from.
+    span: RequestSpan,
     finish: Option<FinishReason>,
     /// Draft-side state when the engine speculates; `None` otherwise.
     draft: Option<DraftState>,
-    spec_proposed: usize,
-    spec_accepted: usize,
 }
 
 impl Running {
-    fn note_token(&mut self, now: Instant) {
-        let gap = now.duration_since(self.last_token_at).as_secs_f64();
-        if self.emitted > 1 && gap > self.max_gap {
-            self.max_gap = gap;
-        }
-        self.last_token_at = now;
-    }
-
     fn check_finished(&mut self, tok: i32) {
         if self.req.stop == Some(tok) {
             self.finish = Some(FinishReason::Stop);
-        } else if self.emitted >= self.req.max_new {
+        } else if self.span.emitted >= self.req.max_new {
             self.finish = Some(FinishReason::Length);
         }
     }
@@ -250,12 +241,11 @@ impl Running {
     /// and the speculative cycle so their bookkeeping cannot diverge.
     fn emit_token(&mut self, tok: i32, now: Instant, events: &mut Vec<StepEvent>) {
         self.tokens.push(tok);
-        self.emitted += 1;
-        self.note_token(now);
+        self.span.note_token(now);
         events.push(StepEvent::Token {
             key: self.req.key,
             id: self.req.id.clone(),
-            index: self.emitted - 1,
+            index: self.span.emitted - 1,
             token: tok,
         });
         self.check_finished(tok);
@@ -301,6 +291,11 @@ pub struct Scheduler<'m> {
     spec: Option<SpecEngine>,
     /// Named runtime adapters served over the shared base.
     registry: AdapterRegistry,
+    /// Engine telemetry sink — every step ends by recording a
+    /// [`TickRecord`] and refreshing the gauges.  Always present (a
+    /// standalone scheduler gets its own), shared with the server's
+    /// exposition threads via [`Scheduler::attach_obs`].
+    obs: Arc<Telemetry>,
 }
 
 impl<'m> Scheduler<'m> {
@@ -320,7 +315,19 @@ impl<'m> Scheduler<'m> {
             completed: 0,
             spec: None,
             registry: AdapterRegistry::new(model.cfg),
+            obs: Telemetry::new(crate::obs::DEFAULT_TRACE_CAP),
         }
+    }
+
+    /// Share telemetry with the serving layer (must be called before the
+    /// first step — swapping mid-flight would reset every counter).
+    pub fn attach_obs(&mut self, obs: Arc<Telemetry>) {
+        self.obs = obs;
+    }
+
+    /// This scheduler's telemetry (metrics registry + tick-trace ring).
+    pub fn obs(&self) -> &Arc<Telemetry> {
+        &self.obs
     }
 
     /// The runtime adapter registry (stats frames, bench reports).
@@ -469,8 +476,12 @@ impl<'m> Scheduler<'m> {
 
     /// Admit pending requests while the batch has room and the block
     /// budget covers their prompts, then prefill every admission of the
-    /// tick in one batched pass and emit first tokens.
-    fn admit(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+    /// tick in one batched pass and emit first tokens.  Queue triage is
+    /// charged to the tick's `admit` phase, the batched prompt pass plus
+    /// first-token sampling to `prefill`.
+    fn admit(&mut self, events: &mut Vec<StepEvent>, rec: &mut TickRecord) -> Result<()> {
+        let t_admit = Instant::now();
+        let n_rejected_before = events.len();
         let mut staged: Vec<Staged> = Vec::new();
         while self.active.len() + staged.len() < self.cfg.max_batch {
             let Some(mut req) = self.pending.pop_front() else { break };
@@ -557,9 +568,16 @@ impl<'m> Scheduler<'m> {
             }
             staged.push(Staged { req, adapter, cache, admitted_at: Instant::now(), shared });
         }
+        rec.phase_ns[PH_ADMIT] += t_admit.elapsed().as_nanos() as u64;
+        let rejected = (events.len() - n_rejected_before) as u64;
+        if rejected > 0 {
+            self.obs.metrics.requests_rejected_total.add(rejected);
+        }
         if staged.is_empty() {
             return Ok(());
         }
+        rec.admitted += staged.len();
+        self.obs.metrics.requests_admitted_total.add(staged.len() as u64);
 
         // -- ONE batched prefill over every admission of this tick --
         let t0 = Instant::now();
@@ -610,12 +628,7 @@ impl<'m> Scheduler<'m> {
                 },
                 cache,
                 rng,
-                emitted: 1,
-                admitted_at,
-                prefill_secs,
-                shared_prefix: shared,
-                last_token_at: now,
-                max_gap: 0.0,
+                span: RequestSpan::admitted(req.queued_at, admitted_at, prefill_secs, shared, now),
                 finish: None,
                 // Adapter-routed sequences take the plain decode path —
                 // the draft model has no notion of per-request adapters,
@@ -628,8 +641,6 @@ impl<'m> Scheduler<'m> {
                     None
                 },
                 adapter,
-                spec_proposed: 0,
-                spec_accepted: 0,
                 req,
             };
             events.push(StepEvent::Token {
@@ -641,6 +652,7 @@ impl<'m> Scheduler<'m> {
             run.check_finished(tok);
             self.active.push(run);
         }
+        rec.phase_ns[PH_PREFILL] += t0.elapsed().as_nanos() as u64;
         Ok(())
     }
 
@@ -650,14 +662,27 @@ impl<'m> Scheduler<'m> {
     /// rest — and evict finished sequences.  Returns events in emission
     /// order.
     pub fn step(&mut self) -> Result<Vec<StepEvent>> {
+        let tick0 = Instant::now();
+        let mut rec = TickRecord::default();
+        let kv_before = self.pool.stats().resident_blocks as i64;
+        let prof_before = if profile::enabled() { Some(profile::snapshot()) } else { None };
+        let spec_before = self.spec.as_ref().map(|se| se.counters);
+
         let mut events = Vec::new();
-        self.admit(&mut events)?;
+        self.admit(&mut events, &mut rec)?;
+        rec.batch = self.active.len();
+        rec.pending = self.pending.len();
 
         // -- speculative draft/verify cycle (marks handled sequences) --
         let handled = match self.spec.as_mut() {
-            Some(se) => {
-                Self::spec_cycle(self.model, &mut self.active, &mut self.pool, se, &mut events)?
-            }
+            Some(se) => Self::spec_cycle(
+                self.model,
+                &mut self.active,
+                &mut self.pool,
+                se,
+                &mut events,
+                &mut rec,
+            )?,
             None => vec![false; self.active.len()],
         };
 
@@ -666,6 +691,7 @@ impl<'m> Scheduler<'m> {
         let mut toks: Vec<i32> = Vec::new();
         let mut picked: Vec<(usize, i32)> = Vec::new();
         {
+            let t_dec = Instant::now();
             let mut caches: Vec<&mut PagedKvCache> = Vec::new();
             let mut rngs: Vec<&mut Option<Rng>> = Vec::new();
             let mut samplings: Vec<Option<SamplingParams>> = Vec::new();
@@ -707,12 +733,18 @@ impl<'m> Scheduler<'m> {
                     .collect();
                 let logits =
                     self.model.forward_step_paged_with(&toks, &mut caches, &mut self.pool, &sets)?;
+                rec.phase_ns[PH_DECODE] += t_dec.elapsed().as_nanos() as u64;
+                let t_smp = Instant::now();
                 for (j, &i) in idxs.iter().enumerate() {
                     let tok = pick(logits.row(j), samplings[j].as_ref(), rngs[j].as_mut());
                     picked.push((i, tok));
                 }
+                rec.phase_ns[PH_SAMPLE] += t_smp.elapsed().as_nanos() as u64;
+            } else {
+                rec.phase_ns[PH_DECODE] += t_dec.elapsed().as_nanos() as u64;
             }
         }
+        let t_emit = Instant::now();
         let now = Instant::now();
         for (i, tok) in picked {
             self.active[i].emit_token(tok, now, &mut events);
@@ -728,7 +760,13 @@ impl<'m> Scheduler<'m> {
                     .iter()
                     .find(|r| r.req.key == *key)
                     .and_then(|r| r.req.adapter.as_deref());
+                if name.is_some() {
+                    self.obs.metrics.adapter_tokens_total.inc();
+                } else {
+                    self.obs.metrics.baseline_tokens_total.inc();
+                }
                 self.registry.count_tokens(name, 1);
+                rec.tokens += 1;
             }
         }
 
@@ -740,16 +778,24 @@ impl<'m> Scheduler<'m> {
                 Some(finish) => {
                     let done_at = Instant::now();
                     let stats = RequestStats {
-                        queue_secs: r.admitted_at.duration_since(r.req.queued_at).as_secs_f64(),
-                        prefill_secs: r.prefill_secs,
-                        total_secs: done_at.duration_since(r.admitted_at).as_secs_f64(),
-                        max_inter_token_secs: r.max_gap,
-                        n_new_tokens: r.emitted,
-                        shared_prefix_tokens: r.shared_prefix,
-                        spec_proposed: r.spec_proposed,
-                        spec_accepted: r.spec_accepted,
+                        queue_secs: r.span.queue_secs(),
+                        prefill_secs: r.span.prefill_secs,
+                        total_secs: r.span.total_secs(done_at),
+                        max_inter_token_secs: r.span.max_gap_secs,
+                        n_new_tokens: r.span.emitted,
+                        shared_prefix_tokens: r.span.shared_prefix_tokens,
+                        spec_proposed: r.span.spec_proposed,
+                        spec_accepted: r.span.spec_accepted,
                     };
                     self.completed += 1;
+                    rec.finished += 1;
+                    let m = &self.obs.metrics;
+                    if let Some(c) = m.finished(finish.as_str()) {
+                        c.inc();
+                    }
+                    m.queue_seconds.observe(stats.queue_secs);
+                    m.request_seconds.observe(stats.total_secs);
+                    m.prefill_seconds.observe(stats.prefill_secs);
                     r.cache.release_all(&mut self.pool);
                     if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
                         d.cache.release_all(&mut se.pool);
@@ -769,7 +815,66 @@ impl<'m> Scheduler<'m> {
             }
         }
         self.active = kept;
+        rec.phase_ns[PH_EMIT] += t_emit.elapsed().as_nanos() as u64;
+
+        self.finish_tick(&mut rec, kv_before, spec_before, prof_before, tick0);
         Ok(events)
+    }
+
+    /// Close out one tick's telemetry: KV/queue gauges, spec and kernel
+    /// deltas, tick histograms, and the trace-ring append.
+    fn finish_tick(
+        &self,
+        rec: &mut TickRecord,
+        kv_before: i64,
+        spec_before: Option<crate::serve::spec::SpecCounters>,
+        prof_before: Option<[profile::KernelCounts; profile::N_KINDS]>,
+        tick0: Instant,
+    ) {
+        let kv = self.pool.stats();
+        rec.kv_resident = kv.resident_blocks;
+        rec.kv_delta = kv.resident_blocks as i64 - kv_before;
+        if let (Some(se), Some(before)) = (self.spec.as_ref(), spec_before) {
+            rec.spec_proposed = se.counters.proposed - before.proposed;
+            rec.spec_accepted = se.counters.accepted - before.accepted;
+            let m = &self.obs.metrics;
+            m.spec_proposed_total.add(rec.spec_proposed as u64);
+            m.spec_accepted_total.add(rec.spec_accepted as u64);
+            m.spec_cycles_total.add((se.counters.cycles - before.cycles) as u64);
+            m.spec_fallbacks_total.add((se.counters.fallbacks - before.fallbacks) as u64);
+        }
+        if let Some(before) = prof_before {
+            let after = profile::snapshot();
+            for (i, kind) in profile::KIND_NAMES.iter().enumerate() {
+                let calls = after[i].calls - before[i].calls;
+                if calls > 0 {
+                    rec.kernels.push(KernelTickDelta {
+                        kind: kind.to_string(),
+                        calls,
+                        ns: after[i].ns - before[i].ns,
+                        flops: after[i].flops - before[i].flops,
+                    });
+                }
+            }
+        }
+        let m = &self.obs.metrics;
+        m.kv_blocks_resident.set(kv.resident_blocks as i64);
+        m.kv_blocks_free.set(kv.free_blocks as i64);
+        m.kv_blocks_shared.set(kv.shared_blocks as i64);
+        m.kv_blocks_limit.set(kv.blocks_total as i64);
+        m.active_sequences.set(self.active.len() as i64);
+        m.pending_requests.set(self.pending.len() as i64);
+        m.adapters_registered.set(self.registry.len() as i64);
+        m.ticks_total.inc();
+        m.tokens_emitted_total.add(rec.tokens as u64);
+        m.batch_size.observe(rec.batch as f64);
+        m.tick_seconds.observe(tick0.elapsed().as_secs_f64());
+        for (h, &ns) in m.tick_phase_seconds.iter().zip(rec.phase_ns.iter()) {
+            if ns > 0 {
+                h.observe(ns as f64 / 1e9);
+            }
+        }
+        self.obs.record_tick(std::mem::take(rec));
     }
 
     /// One speculative draft/verify cycle over every sequence that can
@@ -789,7 +894,9 @@ impl<'m> Scheduler<'m> {
         pool: &mut BlockPool,
         se: &mut SpecEngine,
         events: &mut Vec<StepEvent>,
+        rec: &mut TickRecord,
     ) -> Result<Vec<bool>> {
+        let t_draft = Instant::now();
         let n = active.len();
         let mut handled = vec![false; n];
         // -- pass A: eligibility + capacity reservations --
@@ -806,7 +913,7 @@ impl<'m> Scheduler<'m> {
             if d.disabled {
                 continue;
             }
-            let remaining = r.req.max_new.saturating_sub(r.emitted);
+            let remaining = r.req.max_new.saturating_sub(r.span.emitted);
             if remaining < 2 {
                 // A single pending token gains nothing from drafting.
                 continue;
@@ -835,6 +942,7 @@ impl<'m> Scheduler<'m> {
             ks[i] = k_eff;
         }
         if ks.iter().all(|&k| k == 0) {
+            rec.phase_ns[PH_DRAFT] += t_draft.elapsed().as_nanos() as u64;
             return Ok(handled);
         }
 
@@ -892,7 +1000,10 @@ impl<'m> Scheduler<'m> {
             }
         }
 
+        rec.phase_ns[PH_DRAFT] += t_draft.elapsed().as_nanos() as u64;
+
         // -- ONE multi-sequence multi-position verify pass --
+        let t_verify = Instant::now();
         let chunks: Vec<Vec<i32>> = order
             .iter()
             .zip(&proposals)
@@ -912,13 +1023,15 @@ impl<'m> Scheduler<'m> {
             }
             model.forward_verify_paged(&refs, &mut tcaches, pool)?
         };
+        rec.phase_ns[PH_VERIFY] += t_verify.elapsed().as_nanos() as u64;
 
         // -- acceptance + KV rollback, sequence by sequence --
+        let t_accept = Instant::now();
         let now = Instant::now();
         let mut row0 = 0usize;
         for (j, &i) in order.iter().enumerate() {
             let r = &mut active[i];
-            let remaining = r.req.max_new - r.emitted;
+            let remaining = r.req.max_new - r.span.emitted;
             let (emitted, acc) = accept_tokens(
                 &vlogits,
                 row0,
@@ -932,8 +1045,8 @@ impl<'m> Scheduler<'m> {
             se.counters.proposed += proposals[j].len();
             se.counters.accepted += acc;
             se.counters.cycles += 1;
-            r.spec_proposed += proposals[j].len();
-            r.spec_accepted += acc;
+            r.span.spec_proposed += proposals[j].len();
+            r.span.spec_accepted += acc;
             for &tok in &emitted {
                 r.emit_token(tok, now, events);
             }
@@ -952,6 +1065,7 @@ impl<'m> Scheduler<'m> {
             }
             handled[i] = true;
         }
+        rec.phase_ns[PH_SAMPLE] += t_accept.elapsed().as_nanos() as u64;
         Ok(handled)
     }
 }

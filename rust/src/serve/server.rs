@@ -18,8 +18,17 @@
 //! Binding to port 0 picks an ephemeral port; the bound address is
 //! printed as `serve: listening on <addr>` (the CI smoke test scrapes
 //! this line) and returned from [`spawn`] for in-process tests.
+//!
+//! Telemetry rides alongside: one [`Telemetry`] is shared between the
+//! scheduler (writes) and the exposition paths — the `metrics`/`trace`
+//! protocol commands on the engine thread, an optional Prometheus-text
+//! HTTP listener (`--metrics-addr`, printed as `serve: metrics on
+//! <addr>`), and an optional newline-JSON tick journal (`--trace-log`).
+//! None of it touches compute or RNG state, so token streams are byte
+//! identical with everything enabled (CI `cmp`s the transcripts).
 
 use std::collections::HashMap;
+use std::fs::OpenOptions;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -31,7 +40,8 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::infer::{AdapterSet, PackedModel};
 use crate::model::checkpoint;
-use crate::serve::protocol::{self, AdapterOp, ClientLine, WireRequest};
+use crate::obs::{profile, prom, Telemetry, DEFAULT_TRACE_CAP};
+use crate::serve::protocol::{self, AdapterOp, ClientLine, EngineSnapshot, WireRequest};
 use crate::serve::scheduler::{GenRequest, SchedConfig, Scheduler, StepEvent};
 
 /// Server configuration.
@@ -47,6 +57,18 @@ pub struct ServeOptions {
     /// repeated `--adapter NAME=PATH` flags.  Sidecars are validated
     /// against the model config before the engine starts.
     pub adapters: Vec<(String, String)>,
+    /// Bind a second listener serving Prometheus text at `/metrics`
+    /// (`--metrics-addr`); `None` = no HTTP exposition.
+    pub metrics_addr: Option<String>,
+    /// Append every scheduler tick's trace record as one JSON line
+    /// (`--trace-log PATH`); the file is created/appended at boot and a
+    /// write error disables the journal rather than killing the engine.
+    pub trace_log: Option<String>,
+    /// Turn on kernel profiling accumulators (`--profile`; sticky for
+    /// the process, same switch as `REPRO_PROF=1`).
+    pub profile: bool,
+    /// Tick-trace ring capacity (`--trace-cap`).
+    pub trace_cap: usize,
 }
 
 impl Default for ServeOptions {
@@ -56,6 +78,10 @@ impl Default for ServeOptions {
             sched: SchedConfig::default(),
             allow_remote_shutdown: true,
             adapters: Vec::new(),
+            metrics_addr: None,
+            trace_log: None,
+            profile: false,
+            trace_cap: DEFAULT_TRACE_CAP,
         }
     }
 }
@@ -68,14 +94,21 @@ enum EngineMsg {
     /// Runtime registry change; the ack (or error) frame goes straight
     /// back to this connection.
     Adapter { op: AdapterOp, name: String, path: Option<String>, out: Sender<String> },
+    /// Full telemetry registry snapshot rendered as one JSON frame.
+    Metrics { out: Sender<String> },
+    /// Last `n` scheduler tick records from the trace ring.
+    Trace { n: usize, out: Sender<String> },
     Shutdown,
 }
 
 /// Handle on a running server (in-process tests + clean shutdown).
 pub struct Server {
     pub addr: SocketAddr,
+    /// Bound address of the Prometheus listener when one was requested.
+    pub metrics_addr: Option<SocketAddr>,
     engine: JoinHandle<()>,
     accept: JoinHandle<()>,
+    metrics: Option<JoinHandle<()>>,
     tx: Sender<EngineMsg>,
     stopping: Arc<AtomicBool>,
 }
@@ -85,9 +118,15 @@ impl Server {
     pub fn shutdown(self) {
         self.stopping.store(true, Ordering::SeqCst);
         let _ = self.tx.send(EngineMsg::Shutdown);
-        // Unblock the accept loop with a throwaway connection.
+        // Unblock the accept loops with throwaway connections.
         let _ = TcpStream::connect(self.addr);
+        if let Some(maddr) = self.metrics_addr {
+            let _ = TcpStream::connect(maddr);
+        }
         let _ = self.accept.join();
+        if let Some(h) = self.metrics {
+            let _ = h.join();
+        }
         let _ = self.engine.join();
     }
 
@@ -96,7 +135,13 @@ impl Server {
         let _ = self.engine.join();
         self.stopping.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr);
+        if let Some(maddr) = self.metrics_addr {
+            let _ = TcpStream::connect(maddr);
+        }
         let _ = self.accept.join();
+        if let Some(h) = self.metrics {
+            let _ = h.join();
+        }
     }
 }
 
@@ -136,8 +181,54 @@ pub fn spawn_with_draft(
     let (tx, rx) = mpsc::channel::<EngineMsg>();
     let stopping = Arc::new(AtomicBool::new(false));
 
+    let obs = Telemetry::new(opts.trace_cap);
+    if opts.profile {
+        profile::enable();
+    }
+    let trace = match &opts.trace_log {
+        Some(path) => {
+            let f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .map_err(|e| Error::io(format!("open trace log {path}: {e}")))?;
+            Some(BufWriter::new(f))
+        }
+        None => None,
+    };
+    let (metrics_addr, metrics) = match &opts.metrics_addr {
+        Some(maddr) => {
+            let mlistener = TcpListener::bind(maddr)
+                .map_err(|e| Error::io(format!("bind metrics {maddr}: {e}")))?;
+            let bound = mlistener
+                .local_addr()
+                .map_err(|e| Error::io(format!("metrics local_addr: {e}")))?;
+            let mobs = Arc::clone(&obs);
+            let mstop = Arc::clone(&stopping);
+            let handle = std::thread::spawn(move || {
+                for conn in mlistener.incoming() {
+                    if mstop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let obs = Arc::clone(&mobs);
+                            std::thread::spawn(move || serve_metrics_conn(stream, &obs));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+            (Some(bound), Some(handle))
+        }
+        None => (None, None),
+    };
+
     let sched_cfg = opts.sched;
-    let engine = std::thread::spawn(move || run_engine(model, draft, sched_cfg, preload, rx));
+    let engine_obs = Arc::clone(&obs);
+    let engine = std::thread::spawn(move || {
+        run_engine(model, draft, sched_cfg, preload, rx, engine_obs, trace)
+    });
 
     let accept_tx = tx.clone();
     let accept_stop = Arc::clone(&stopping);
@@ -157,7 +248,55 @@ pub fn spawn_with_draft(
         }
     });
 
-    Ok(Server { addr, engine, accept, tx, stopping })
+    Ok(Server { addr, metrics_addr, engine, accept, metrics, tx, stopping })
+}
+
+/// One short-lived HTTP exchange on the metrics listener: answer
+/// `GET /metrics` (or `/`) with Prometheus text exposition 0.0.4 and
+/// close.  Anything else gets a 404; malformed requests are dropped.
+fn serve_metrics_conn(stream: TcpStream, obs: &Telemetry) {
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut request = String::new();
+    if reader.read_line(&mut request).is_err() {
+        return;
+    }
+    // Drain the header block; the response does not depend on it.
+    loop {
+        let mut header = String::new();
+        match reader.read_line(&mut header) {
+            Ok(0) => break,
+            Ok(_) if header == "\r\n" || header == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+    let mut parts = request.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let mut w = BufWriter::new(stream);
+    if method == "GET" && (path == "/metrics" || path == "/") {
+        let body = prom::render(obs);
+        let _ = write!(
+            w,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        let _ = w.write_all(body.as_bytes());
+    } else {
+        let body = "not found\n";
+        let _ = write!(
+            w,
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+    }
+    let _ = w.flush();
 }
 
 /// Blocking entry point for the `repro serve` CLI.
@@ -169,6 +308,10 @@ pub fn run(
     let adapter_names: Vec<String> = opts.adapters.iter().map(|(n, _)| n.clone()).collect();
     let server = spawn_with_draft(model, draft, opts)?;
     println!("serve: listening on {}", server.addr);
+    if let Some(maddr) = server.metrics_addr {
+        // The CI observability smoke scrapes this line for the port.
+        println!("serve: metrics on {maddr}");
+    }
     if !adapter_names.is_empty() {
         println!(
             "serve: {} adapter(s) registered: {}",
@@ -190,11 +333,14 @@ fn run_engine(
     cfg: SchedConfig,
     preload: Vec<AdapterSet>,
     rx: Receiver<EngineMsg>,
+    obs: Arc<Telemetry>,
+    mut trace: Option<BufWriter<std::fs::File>>,
 ) {
     let mut sched = match draft {
         Some(d) if cfg.speculate > 0 => Scheduler::with_draft(&model, cfg, d),
         _ => Scheduler::new(&model, cfg),
     };
+    sched.attach_obs(obs);
     // Names were validated in `spawn_with_draft`; a load can only fail on
     // a duplicate, which the pre-check excluded.
     for set in preload {
@@ -234,6 +380,19 @@ fn run_engine(
         }
         match sched.step() {
             Ok(events) => {
+                // Journal the tick before routing frames; a failed write
+                // disables the journal, never the engine.
+                if let Some(mut w) = trace.take() {
+                    match sched.obs().last_tick() {
+                        Some(rec)
+                            if writeln!(w, "{}", rec.to_json().render()).is_err()
+                                || w.flush().is_err() =>
+                        {
+                            eprintln!("serve: trace-log write failed; journal disabled");
+                        }
+                        _ => trace = Some(w),
+                    }
+                }
                 for ev in &events {
                     let (key, finished) = match ev {
                         StepEvent::Token { key, .. } => (*key, false),
@@ -290,16 +449,31 @@ fn handle_msg(
             true
         }
         EngineMsg::Stats { out } => {
-            let frame = protocol::stats_frame(
-                &sched.kv_stats(),
-                sched.n_active(),
-                sched.n_pending(),
-                sched.n_completed(),
-                sched.spec_stats().as_ref(),
-                &sched.adapters().stats(),
-                sched.adapters().baseline_tokens(),
-            );
+            let kv = sched.kv_stats();
+            let spec = sched.spec_stats();
+            let adapters = sched.adapters().stats();
+            let build = crate::obs::build_info();
+            let frame = protocol::stats_frame(&EngineSnapshot {
+                kv: &kv,
+                active: sched.n_active(),
+                pending: sched.n_pending(),
+                completed: sched.n_completed(),
+                spec: spec.as_ref(),
+                adapters: &adapters,
+                baseline_tokens: sched.adapters().baseline_tokens(),
+                build: &build,
+                uptime_secs: sched.obs().uptime_secs(),
+            });
             let _ = out.send(frame);
+            true
+        }
+        EngineMsg::Metrics { out } => {
+            let _ = out.send(protocol::metrics_frame(sched.obs()));
+            true
+        }
+        EngineMsg::Trace { n, out } => {
+            let (total, ticks) = sched.obs().last_ticks(n);
+            let _ = out.send(protocol::trace_frame(total, &ticks));
             true
         }
         EngineMsg::Adapter { op, name, path, out } => {
@@ -376,6 +550,18 @@ fn handle_conn(stream: TcpStream, tx: Sender<EngineMsg>, allow_shutdown: bool) {
             }
             Ok(ClientLine::Stats) => {
                 if tx.send(EngineMsg::Stats { out: otx.clone() }).is_err() {
+                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    break;
+                }
+            }
+            Ok(ClientLine::Metrics) => {
+                if tx.send(EngineMsg::Metrics { out: otx.clone() }).is_err() {
+                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    break;
+                }
+            }
+            Ok(ClientLine::Trace { n }) => {
+                if tx.send(EngineMsg::Trace { n, out: otx.clone() }).is_err() {
                     let _ = otx.send(protocol::error_frame("", "engine stopped"));
                     break;
                 }

@@ -1,0 +1,271 @@
+//! Observability tests: trace-ring overflow, the metrics registry under
+//! concurrent increments from pool lanes, Prometheus exposition validity
+//! (no duplicate families or series), trace-journal JSON roundtrips, and
+//! the bitwise A/B invariant — token streams are identical with full
+//! telemetry (tracing + kernel profiling) attached.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::PackedModel;
+use repro::kernels::pool::ThreadPool;
+use repro::model::{ParamStore, TINY};
+use repro::obs::{profile, prom, KernelTickDelta, Registry, Telemetry, TickRecord};
+use repro::quant::QuantSpec;
+use repro::serve::json::Json;
+use repro::serve::scheduler::{GenRequest, StepEvent};
+use repro::serve::{SchedConfig, Scheduler};
+use repro::tensor::{IntTensor, Rng, Tensor};
+
+/// Open-clip qparams with live (random) LoRA B so adapters contribute.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+fn packed_tiny(seed: u64) -> PackedModel {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(seed);
+    let qp = open_qparams_with_lora(spec, 4, seed ^ 0xAD);
+    PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap()
+}
+
+fn tiny_prompt(batch: usize, len: usize, seed: u64) -> IntTensor {
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, seed);
+    Batcher::new(batch, len).lm_batch(&corpus, &mut Rng::new(seed ^ 0x77)).tokens
+}
+
+fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+    GenRequest {
+        key,
+        id: format!("r{key}"),
+        prompt,
+        max_new,
+        sampling: None,
+        stop: None,
+        adapter: None,
+        queued_at: std::time::Instant::now(),
+    }
+}
+
+fn drain(sched: &mut Scheduler<'_>) -> Vec<StepEvent> {
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to converge");
+    }
+    events
+}
+
+fn gen_tokens(events: &[StepEvent], key: u64) -> Vec<i32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Token { key: k, token, .. } if *k == key => Some(*token),
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// trace ring
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_ring_overflow_keeps_newest_and_counts_total() {
+    let tele = Telemetry::new(8);
+    for i in 0..20usize {
+        tele.record_tick(TickRecord { batch: i, ..TickRecord::default() });
+    }
+    let (total, ticks) = tele.last_ticks(100);
+    assert_eq!(total, 20, "total keeps counting past capacity");
+    assert_eq!(ticks.len(), 8, "ring holds only the newest `cap` records");
+    assert_eq!(ticks.first().unwrap().seq, 12, "oldest surviving record");
+    assert_eq!(ticks.last().unwrap().seq, 19);
+    assert_eq!(ticks.last().unwrap().batch, 19, "payload rides with its seq");
+    // a smaller window still comes back oldest-first
+    let (_, tail) = tele.last_ticks(2);
+    assert_eq!(tail.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![18, 19]);
+    // records are stamped with monotone non-decreasing engine time
+    for w in ticks.windows(2) {
+        assert!(w[1].at_secs >= w[0].at_secs);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry under concurrent increments
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_counts_survive_concurrent_pool_increments() {
+    let reg = Registry::default();
+    let c = reg.counter("test_ops_total", &[], "ops");
+    let h = reg.histogram("test_op_seconds", &[], "latency", &[0.5]);
+    let pool = ThreadPool::with_threads(4);
+    pool.parallel_for(1000, &|i| {
+        c.inc();
+        h.observe(if i % 2 == 0 { 0.25 } else { 1.0 });
+    });
+    assert_eq!(c.get(), 1000, "no lost counter increments under the pool");
+    assert_eq!(h.count(), 1000, "no lost histogram observations");
+    // 500 * 0.25 + 500 * 1.0, recovered from the nano-unit accumulator
+    assert!((h.sum() - 625.0).abs() < 1e-6, "sum drifted: {}", h.sum());
+    // re-registering the same (name, labels) hands back the same handle
+    let c2 = reg.counter("test_ops_total", &[], "ops");
+    c2.inc();
+    assert_eq!(c.get(), 1001);
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus exposition
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prometheus_render_is_valid_and_duplicate_free() {
+    let tele = Telemetry::new(16);
+    tele.metrics.ticks_total.inc();
+    tele.metrics.tokens_emitted_total.add(7);
+    tele.metrics.kv_blocks_resident.set(5);
+    tele.metrics.tick_seconds.observe(0.002);
+    for h in &tele.metrics.tick_phase_seconds {
+        h.observe(1e-4);
+    }
+    let text = prom::render(&tele);
+    for family in [
+        "tick_phase_seconds",
+        "kv_blocks_resident",
+        "requests_finished_total",
+        "spec_accepted_total",
+        "kernel_time_seconds_total",
+        "build_info",
+    ] {
+        assert!(text.contains(family), "missing family '{family}' in:\n{text}");
+    }
+    let mut meta = HashSet::new();
+    let mut series = HashSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            // "# HELP name text" / "# TYPE name kind" — unique per (kw, name)
+            let mut parts = rest.splitn(3, ' ');
+            let kw = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            assert!(["HELP", "TYPE"].contains(&kw), "bad comment line: {line}");
+            assert!(!name.is_empty(), "comment without a metric name: {line}");
+            assert!(meta.insert((kw.to_string(), name.to_string())), "duplicate {kw} for {name}");
+        } else {
+            let (key, val) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample: {line}"));
+            assert!(val.parse::<f64>().is_ok(), "non-numeric sample value: {line}");
+            assert!(series.insert(key.to_string()), "duplicate series: {key}");
+        }
+    }
+    assert!(meta.len() >= 10, "suspiciously few families: {}", meta.len());
+}
+
+// ---------------------------------------------------------------------------
+// trace journal roundtrip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tick_record_roundtrips_through_journal_json() {
+    let rec = TickRecord {
+        seq: 42,
+        at_secs: 1.25, // exact in the journal's µs rounding
+        phase_ns: [100, 2000, 0, 30_000, 400_000, 5_000_000, 60],
+        batch: 3,
+        pending: 2,
+        admitted: 1,
+        finished: 1,
+        tokens: 9,
+        kv_resident: 17,
+        kv_delta: -4,
+        spec_proposed: 8,
+        spec_accepted: 6,
+        kernels: vec![
+            KernelTickDelta { kind: "dense_gemm".into(), calls: 12, ns: 34_567, flops: 1 << 20 },
+            KernelTickDelta { kind: "matvec_fused".into(), calls: 3, ns: 890, flops: 4096 },
+        ],
+    };
+    let line = rec.to_json().render();
+    let parsed = Json::parse(&line).expect("journal line is valid JSON");
+    let back = TickRecord::from_json(&parsed).expect("journal line parses as a tick");
+    assert_eq!(back, rec, "journal roundtrip must be lossless");
+
+    // kernels key is omitted entirely when the tick recorded none
+    let quiet = TickRecord { seq: 1, ..TickRecord::default() };
+    let qline = quiet.to_json().render();
+    assert!(!qline.contains("kernels"), "empty kernel delta must be omitted: {qline}");
+    let qback = TickRecord::from_json(&Json::parse(&qline).unwrap()).unwrap();
+    assert_eq!(qback, quiet);
+}
+
+// ---------------------------------------------------------------------------
+// bitwise A/B: telemetry on vs off
+// ---------------------------------------------------------------------------
+
+#[test]
+fn token_streams_bitwise_identical_with_telemetry_attached() {
+    let model = packed_tiny(61);
+    let cfg = SchedConfig { max_batch: 3, max_new_cap: 32, max_prompt: 32, ..Default::default() };
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|i| tiny_prompt(1, 5 + i, 91 + i as u64).data().to_vec())
+        .collect();
+
+    // A: default scheduler, nothing attached, profiling not forced on.
+    let mut plain = Scheduler::new(&model, cfg);
+    for (i, p) in prompts.iter().enumerate() {
+        plain.submit(req(i as u64, p.clone(), 8 + i));
+    }
+    let ev_a = drain(&mut plain);
+
+    // B: shared telemetry + kernel profiling enabled.
+    profile::enable();
+    let tele = Telemetry::new(64);
+    let mut traced = Scheduler::new(&model, cfg);
+    traced.attach_obs(Arc::clone(&tele));
+    for (i, p) in prompts.iter().enumerate() {
+        traced.submit(req(i as u64, p.clone(), 8 + i));
+    }
+    let ev_b = drain(&mut traced);
+
+    let mut emitted = 0u64;
+    for key in 0..3u64 {
+        let a = gen_tokens(&ev_a, key);
+        let b = gen_tokens(&ev_b, key);
+        assert!(!a.is_empty(), "request {key} produced no tokens");
+        assert_eq!(a, b, "telemetry changed the token stream for request {key}");
+        emitted += b.len() as u64;
+    }
+
+    // and the telemetry actually observed the run
+    let (total, ticks) = tele.last_ticks(64);
+    assert!(total > 0, "no ticks recorded");
+    assert_eq!(tele.metrics.ticks_total.get(), total, "counter and ring disagree");
+    let tick_tokens: u64 = ticks.iter().map(|r| r.tokens as u64).sum();
+    assert_eq!(tick_tokens, emitted, "per-tick token deltas must sum to the stream length");
+    assert_eq!(tele.metrics.tokens_emitted_total.get(), emitted);
+    assert_eq!(tele.metrics.requests_admitted_total.get(), 3);
+    let finished: u64 = tele.metrics.requests_finished.iter().map(|(_, c)| c.get()).sum();
+    assert_eq!(finished, 3, "every request must land in exactly one finish-reason counter");
+    assert!(
+        profile::snapshot().iter().any(|k| k.calls > 0),
+        "profiling enabled but no kernel calls recorded"
+    );
+    assert!(ticks.iter().all(|r| r.batch <= 3), "batch never exceeds max_batch");
+}

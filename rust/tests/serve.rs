@@ -365,6 +365,7 @@ fn server_streams_concurrent_requests() {
         },
         allow_remote_shutdown: true,
         adapters: Vec::new(),
+        ..ServeOptions::default()
     };
     let server = repro::serve::server::spawn(model, opts).unwrap();
     let addr = server.addr.to_string();
@@ -383,10 +384,18 @@ fn server_streams_concurrent_requests() {
         transcript: None,
         adapter_mix: Vec::new(),
         churn_adapter: None,
+        sample_ms: 2, // exercise the mid-run stats sampler
     })
     .unwrap();
     assert_eq!(report.completed, 8, "all streams must complete");
     assert_eq!(report.total_tokens, 8 * 12);
+    // The sampler races a short run, so the series may be empty, but
+    // whatever it caught must be internally consistent.
+    for s in &report.samples {
+        assert!(s.active <= 4, "sampled batch {} exceeds max_batch", s.active);
+        assert!(s.kv_resident_blocks <= s.kv_blocks_total);
+    }
+    assert!(report.batch_peak() <= 4);
     assert!(report.ttft.max_s > 0.0 && report.total.p50_s > 0.0);
     assert!(
         report.peak_concurrent_streams >= 2,
@@ -475,6 +484,7 @@ fn server_shares_identical_prompt_prefixes() {
         },
         allow_remote_shutdown: true,
         adapters: Vec::new(),
+        ..ServeOptions::default()
     };
     let server = repro::serve::server::spawn(model, opts).unwrap();
     let addr = server.addr.to_string();
@@ -497,6 +507,7 @@ fn server_shares_identical_prompt_prefixes() {
         transcript: None,
         adapter_mix: Vec::new(),
         churn_adapter: None,
+        sample_ms: 0,
     })
     .unwrap();
     assert_eq!(report.completed, 6);
