@@ -108,6 +108,28 @@ SERVE FLAGS
   --profile                            per-kernel time/GFLOP/s + pool
                                        lane accounting (also REPRO_PROF=1);
                                        output bits are unchanged
+  --max-pending N   (default: 1024; 0 = unbounded)  admission-queue
+                                       bound; submissions past it are
+                                       refused with an `overloaded`
+                                       error frame + retry_after_ms
+  --deadline-ms N   (default: 0 = off)  default per-request deadline;
+                                       requests that outlive it finish
+                                       with \"finish\":\"deadline\"
+                                       (a request's own deadline_ms
+                                       field overrides the default)
+  --out-queue N     (default: 1024)    per-connection output queue in
+                                       frames; overflow spills to an
+                                       engine-side backlog
+  --slow-reader-ms N (default: 2000)   evict a connection whose output
+                                       has stalled this long; its
+                                       sequences are cancelled and
+                                       their KV pages reclaimed
+  --max-line N      (default: 1048576) request-line byte cap; longer
+                                       lines get a bad_request frame
+  --fault SPEC                         deterministic fault injection:
+                                       point:rate:seed clauses (also
+                                       REPRO_FAULT; see README
+                                       \"Fault tolerance\")
 BENCH-SERVE FLAGS
   --clients N       (default: 4)      --requests N    (per client, default 2)
   --common-prefix N (default: 0)      first N prompt tokens identical
@@ -122,6 +144,14 @@ BENCH-SERVE FLAGS
   --transcript P    (write sorted per-request token transcripts —
                      byte-comparable across runs/speculation settings)
   --shutdown        (send {\"cmd\":\"shutdown\"} when done)
+  --deadline-ms N   (default: 0 = none) attach deadline_ms to every
+                                       request
+  --request-timeout-ms N (default: 0)  client-side socket read timeout
+  --retries N       (default: 4)       per-request retry budget for
+                                       overloaded / transport errors
+  --allow-failures  exit 0 even when some requests end rejected or
+                    failed (every request must still reach a terminal
+                    outcome — used by the CI chaos job)
 
 METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
 (generate also accepts `fp`; calibration-based methods need the artifact
@@ -449,6 +479,8 @@ fn run(args: Args) -> repro::Result<()> {
                 kv_blocks_total: args.usize_or("kv-blocks-total", 0)?,
                 speculate: args.usize_or("speculate", 0)?,
                 draft_kv_blocks_total: args.usize_or("draft-kv-blocks-total", 0)?,
+                max_pending: args.usize_or("max-pending", 1024)?,
+                deadline_ms: args.u64_or("deadline-ms", 0)?,
             };
             let model = match args.get("packed") {
                 Some(path) => {
@@ -534,6 +566,15 @@ fn run(args: Args) -> repro::Result<()> {
                 trace_log: args.get("trace-log").map(String::from),
                 profile: args.flag("profile"),
                 trace_cap: args.usize_or("trace-cap", repro::obs::DEFAULT_TRACE_CAP)?.max(1),
+                fault: args.get("fault").map(String::from),
+                max_line: args
+                    .usize_or("max-line", repro::serve::server::DEFAULT_MAX_LINE)?
+                    .max(1),
+                out_queue: args
+                    .usize_or("out-queue", repro::serve::server::DEFAULT_OUT_QUEUE)?
+                    .max(1),
+                slow_reader_ms: args
+                    .u64_or("slow-reader-ms", repro::serve::server::DEFAULT_SLOW_READER_MS)?,
             };
             repro::serve::server::run(Arc::new(model), draft, opts)?;
         }
@@ -572,6 +613,9 @@ fn run(args: Args) -> repro::Result<()> {
                     None => None,
                 },
                 sample_ms: args.u64_or("sample-ms", 50)?,
+                deadline_ms: args.u64_or("deadline-ms", 0)?,
+                request_timeout_ms: args.u64_or("request-timeout-ms", 0)?,
+                max_retries: args.usize_or("retries", 4)?,
             };
             let rep = run_load(&o)?;
             println!(
@@ -583,6 +627,12 @@ fn run(args: Args) -> repro::Result<()> {
                 rep.wall_secs,
                 rep.tokens_per_sec()
             );
+            if rep.rejected + rep.deadline + rep.retried + rep.failed > 0 {
+                println!(
+                    "  robustness: {} rejected (overloaded), {} deadline, {} retried, {} failed",
+                    rep.rejected, rep.deadline, rep.retried, rep.failed
+                );
+            }
             println!("  time-to-first-token: {}", rep.ttft.fmt_ms());
             println!("  request latency:     {}", rep.total.fmt_ms());
             println!("  peak concurrent streams: {}", rep.peak_concurrent_streams);
@@ -649,11 +699,27 @@ fn run(args: Args) -> repro::Result<()> {
             let out = args.str_or("bench-out", "BENCH_serve.json");
             write_bench_serve(&out, &o, &rep)?;
             println!("  wrote {out}");
-            if rep.completed != rep.requests {
+            // `deadline` double-counts streams that finished with
+            // "finish":"deadline" (they are also `completed`), so this is
+            // a >=-style terminality check, not an exact partition.
+            let terminal = rep.completed + rep.rejected + rep.failed + rep.deadline;
+            if terminal < rep.requests {
                 return Err(repro::Error::config(format!(
-                    "{} of {} requests did not complete",
-                    rep.requests - rep.completed,
+                    "{} of {} requests never reached a terminal outcome",
+                    rep.requests - terminal,
                     rep.requests
+                )));
+            }
+            if rep.completed != rep.requests && !args.flag("allow-failures") {
+                return Err(repro::Error::config(format!(
+                    "{} of {} requests did not complete (rejected {}, deadline {}, \
+                     failed {}) — pass --allow-failures to accept terminal \
+                     non-completion",
+                    rep.requests - rep.completed,
+                    rep.requests,
+                    rep.rejected,
+                    rep.deadline,
+                    rep.failed
                 )));
             }
         }
@@ -801,6 +867,10 @@ fn write_bench_serve(
         ("clients".to_string(), Json::from(o.clients)),
         ("requests".to_string(), Json::from(rep.requests)),
         ("completed".to_string(), Json::from(rep.completed)),
+        ("rejected".to_string(), Json::from(rep.rejected)),
+        ("deadline".to_string(), Json::from(rep.deadline)),
+        ("retried".to_string(), Json::from(rep.retried)),
+        ("failed".to_string(), Json::from(rep.failed)),
         ("prompt_len".to_string(), Json::from(o.prompt_len)),
         ("new_tokens".to_string(), Json::from(o.max_new)),
         ("common_prefix".to_string(), Json::from(o.common_prefix)),

@@ -17,6 +17,14 @@
 //! Simple, dependency-free, and byte-exact across runs — checkpoints are
 //! part of the experiment pipeline (pretrain -> quantize -> finetune ->
 //! pack-ckpt -> serve each run as separate CLI invocations).
+//!
+//! APIQPACK and APIQADPT (v2) carry an integrity trailer: a CRC32
+//! (IEEE, std-only table implementation below) over every byte after the
+//! 8-byte magic, appended as 4 LE bytes.  Loaders verify it after
+//! parsing, so a flipped bit or a truncated copy fails with a clear
+//! config error instead of booting the server on silently corrupt
+//! weights.  The f32 ParamStore format ("APIQCKPT") is unchanged — it
+//! feeds the training pipeline, not the serving boot path.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -37,10 +45,12 @@ const MAGIC: &[u8; 8] = b"APIQCKPT";
 const VERSION: u32 = 1;
 
 const PACK_MAGIC: &[u8; 8] = b"APIQPACK";
-const PACK_VERSION: u32 = 1;
+/// v2 = v1 layout + CRC32 trailer.
+const PACK_VERSION: u32 = 2;
 
 const ADAPT_MAGIC: &[u8; 8] = b"APIQADPT";
-const ADAPT_VERSION: u32 = 1;
+/// v2 = v1 layout + CRC32 trailer.
+const ADAPT_VERSION: u32 = 2;
 
 /// Canonical path of a pretrained checkpoint — the single source of truth
 /// for the naming scheme shared by `repro pretrain` (save), `Env::prepare`
@@ -121,6 +131,123 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — std-only
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// Incremental CRC32 state.
+#[derive(Clone, Copy)]
+struct Crc32(u32);
+
+impl Crc32 {
+    fn new() -> Self {
+        Crc32(!0)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    fn finish(self) -> u32 {
+        !self.0
+    }
+}
+
+/// `Write` adapter that checksums everything written through it.  The
+/// trailer itself is written to the inner writer by [`finish`], so it is
+/// not part of the checksummed stream.
+struct Crc32Writer<W: Write> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: Write> Crc32Writer<W> {
+    fn new(inner: W) -> Self {
+        Crc32Writer { inner, crc: Crc32::new() }
+    }
+
+    /// Append the 4-byte LE CRC trailer and flush the inner writer.
+    fn finish(mut self) -> Result<()> {
+        let sum = self.crc.finish();
+        self.inner.write_all(&sum.to_le_bytes())?;
+        self.inner.flush()?;
+        Ok(())
+    }
+}
+
+impl<W: Write> Write for Crc32Writer<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// `Read` adapter that checksums everything read through it; call
+/// [`verify_trailer`] after the payload to check the stored CRC.
+struct Crc32Reader<R: Read> {
+    inner: R,
+    crc: Crc32,
+}
+
+impl<R: Read> Crc32Reader<R> {
+    fn new(inner: R) -> Self {
+        Crc32Reader { inner, crc: Crc32::new() }
+    }
+
+    /// Read the 4-byte trailer from the raw stream (not checksummed) and
+    /// compare it against the running CRC of everything read so far.
+    fn verify_trailer(mut self, what: &str) -> Result<()> {
+        let want = self.crc.finish();
+        let mut b = [0u8; 4];
+        self.inner
+            .read_exact(&mut b)
+            .map_err(|_| Error::config(format!("{what}: truncated (missing CRC32 trailer)")))?;
+        let got = u32::from_le_bytes(b);
+        if got != want {
+            return Err(Error::config(format!(
+                "{what}: CRC32 mismatch (stored {got:#010x}, computed {want:#010x}) — \
+                 file is corrupt or truncated"
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read> Read for Crc32Reader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -339,6 +466,8 @@ pub fn save_packed(model: &PackedModel, path: impl AsRef<Path>) -> Result<()> {
     }
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(PACK_MAGIC)?;
+    // Everything after the magic is checksummed; finish() appends the CRC.
+    let mut w = Crc32Writer::new(w);
     write_u32v(&mut w, PACK_VERSION)?;
     write_bytes(&mut w, model.cfg.name.as_bytes())?;
     write_u32v(&mut w, model.spec.bits)?;
@@ -357,8 +486,7 @@ pub fn save_packed(model: &PackedModel, path: impl AsRef<Path>) -> Result<()> {
             write_layer(&mut w, layer, set.and_then(|s| s.get(b, slot)))?;
         }
     }
-    w.flush()?;
-    Ok(())
+    w.finish()
 }
 
 /// Load a [`PackedModel`] saved by [`save_packed`]: `repro serve` boots
@@ -373,9 +501,13 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
     if &magic != PACK_MAGIC {
         return Err(Error::io(format!("{}: not a packed-model checkpoint", path.display())));
     }
+    let mut r = Crc32Reader::new(r);
     let ver = read_u32(&mut r)?;
     if ver != PACK_VERSION {
-        return Err(Error::io(format!("unsupported packed checkpoint version {ver}")));
+        return Err(Error::io(format!(
+            "unsupported packed checkpoint version {ver} (v{PACK_VERSION} adds a CRC32 \
+             trailer; re-run pack-ckpt)"
+        )));
     }
     let name_bytes = read_bytes(&mut r, "config name")?;
     let name = String::from_utf8(name_bytes)
@@ -456,6 +588,7 @@ pub fn load_packed(path: impl AsRef<Path>) -> Result<PackedModel> {
         ad_layers.push(adapters);
         blocks.push(block);
     }
+    r.verify_trailer("packed checkpoint")?;
     let default_adapter = if any_adapter {
         Some(Arc::new(AdapterSet { name: "builtin".to_string(), layers: ad_layers }))
     } else {
@@ -507,6 +640,8 @@ pub fn save_adapter(set: &AdapterSet, cfg_name: &str, path: impl AsRef<Path>) ->
     }
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(ADAPT_MAGIC)?;
+    // Everything after the magic is checksummed; finish() appends the CRC.
+    let mut w = Crc32Writer::new(w);
     write_u32v(&mut w, ADAPT_VERSION)?;
     write_bytes(&mut w, cfg_name.as_bytes())?;
     write_bytes(&mut w, set.name.as_bytes())?;
@@ -516,8 +651,7 @@ pub fn save_adapter(set: &AdapterSet, cfg_name: &str, path: impl AsRef<Path>) ->
             write_adapter_opt(&mut w, ad.as_ref())?;
         }
     }
-    w.flush()?;
-    Ok(())
+    w.finish()
 }
 
 /// Load an adapter sidecar saved by [`save_adapter`], validating every
@@ -532,9 +666,13 @@ pub fn load_adapter(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Adapter
     if &magic != ADAPT_MAGIC {
         return Err(Error::io(format!("{}: not an adapter sidecar", path.display())));
     }
+    let mut r = Crc32Reader::new(r);
     let ver = read_u32(&mut r)?;
     if ver != ADAPT_VERSION {
-        return Err(Error::io(format!("unsupported adapter sidecar version {ver}")));
+        return Err(Error::io(format!(
+            "unsupported adapter sidecar version {ver} (v{ADAPT_VERSION} adds a CRC32 \
+             trailer; re-run pack-adapter)"
+        )));
     }
     let base_bytes = read_bytes(&mut r, "config name")?;
     let base = String::from_utf8(base_bytes)
@@ -583,6 +721,7 @@ pub fn load_adapter(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Adapter
         }
         layers.push(block);
     }
+    r.verify_trailer("adapter sidecar")?;
     Ok(AdapterSet { name, layers })
 }
 
@@ -733,5 +872,46 @@ mod tests {
         std::fs::remove_file(&path).ok();
 
         assert!(load_adapter("/definitely/not/here.apq", &cfg).is_err());
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // IEEE CRC32 check value: crc32("123456789") = 0xCBF43926.
+        let mut c = Crc32::new();
+        c.update(b"123456789");
+        assert_eq!(c.finish(), 0xcbf4_3926);
+        // Split updates match a single pass.
+        let mut s = Crc32::new();
+        s.update(b"1234");
+        s.update(b"56789");
+        assert_eq!(s.finish(), 0xcbf4_3926);
+    }
+
+    #[test]
+    fn adapter_sidecar_rejects_corruption_and_truncation() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut rng = Rng::new(9);
+        let set = test_set(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("apiq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sidecar_crc.apq");
+        save_adapter(&set, cfg.name, &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        assert!(load_adapter(&path, &cfg).is_ok(), "clean file loads");
+
+        // Flip one payload byte mid-file: parse may still succeed but the
+        // CRC must not.
+        let mut corrupt = clean.clone();
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0x01;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(load_adapter(&path, &cfg).is_err(), "bit flip rejected");
+
+        // Drop the trailer: truncation is rejected too.
+        std::fs::write(&path, &clean[..clean.len() - 4]).unwrap();
+        let err = load_adapter(&path, &cfg).unwrap_err().to_string();
+        assert!(err.contains("truncated") || err.contains("CRC32"), "got: {err}");
+
+        std::fs::remove_file(&path).ok();
     }
 }

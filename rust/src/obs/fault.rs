@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the serve path.
+//!
+//! A [`FaultPlan`] is parsed from a spec string (`REPRO_FAULT` env var or
+//! `serve --fault`) and threaded as an `Arc` through the engine: the
+//! block pool, the scheduler tick, the adapter loader, and the
+//! per-connection writer threads each consult one injection point.  The
+//! decision at every point is a pure function of `(seed, evaluation
+//! counter)` — re-running the same workload with the same spec fires the
+//! same faults in the same places, which is what lets `tests/robustness.rs`
+//! and the CI chaos job assert exact recovery behaviour instead of
+//! sampling it.
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! ```text
+//! spec      := clause ("," clause)*
+//! clause    := point ":" rate ":" seed
+//! point     := "alloc" | "adapter_io" | "tick_panic" | "conn_write"
+//! rate      := FLOAT          -- independent probability per evaluation
+//!            | "1/" N         -- every Nth evaluation fires
+//!            | "@" N          -- exactly the Nth evaluation fires (one-shot)
+//! ```
+//!
+//! Examples: `alloc:0.05:7` (5% of pool allocations fail),
+//! `tick_panic:@4:1` (the 4th per-sequence tick checkpoint panics, once),
+//! `conn_write:1/50:9` (every 50th connection write breaks the socket).
+//!
+//! Injection points:
+//!
+//! * `alloc` — [`BlockPool::try_alloc`](crate::serve::BlockPool) returns
+//!   `None` as if the pool were exhausted (exercises admission backoff
+//!   and mid-decode capacity finishes).
+//! * `adapter_io` — runtime `{"cmd":"adapter","op":"load"}` fails with an
+//!   I/O error before touching the sidecar file.
+//! * `tick_panic` — a per-sequence checkpoint inside `Scheduler::step`
+//!   panics with a [`SeqPanic`] payload naming the sequence, exercising
+//!   the engine's `catch_unwind` + quarantine path.
+//! * `conn_write` — a connection writer thread drops its socket,
+//!   exercising dead-connection cancellation and page reclamation.
+//!
+//! A plan with a clause for one point leaves all other points off; the
+//! off path is a single branch on a plain enum (no atomics touched), so
+//! running with a partial plan does not perturb untouched subsystems.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Injection points, indexable into [`FaultPlan::points`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// KV block-pool allocation.
+    Alloc = 0,
+    /// Runtime adapter-load I/O.
+    AdapterIo = 1,
+    /// Per-sequence scheduler tick checkpoint (panics).
+    TickPanic = 2,
+    /// Per-connection output write.
+    ConnWrite = 3,
+}
+
+const N_POINTS: usize = 4;
+const POINT_NAMES: [&str; N_POINTS] = ["alloc", "adapter_io", "tick_panic", "conn_write"];
+
+/// How often one injection point fires.
+#[derive(Clone, Copy, Debug)]
+enum Rate {
+    /// Never (point absent from the spec).
+    Off,
+    /// Independent probability per evaluation, as a threshold over the
+    /// full `u64` range of the per-evaluation hash.
+    Prob(u64),
+    /// Every `n`th evaluation (1-indexed: `1/3` fires on 3, 6, 9, ...).
+    Every(u64),
+    /// Exactly the `n`th evaluation (1-indexed), once.
+    Once(u64),
+}
+
+struct PointState {
+    rate: Rate,
+    seed: u64,
+    /// Evaluations so far (monotonic, shared across threads).
+    n: AtomicU64,
+}
+
+/// A parsed fault-injection plan.  Cheap to consult: points not present
+/// in the spec cost one enum branch.
+pub struct FaultPlan {
+    points: [PointState; N_POINTS],
+    /// Faults fired so far, across all points (`faults_injected_total`).
+    fired: AtomicU64,
+}
+
+/// Panic payload raised by the `tick_panic` point: names the sequence
+/// being processed so the engine can quarantine exactly that sequence.
+pub struct SeqPanic {
+    pub key: u64,
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+fn parse_rate(s: &str) -> Result<Rate> {
+    if let Some(n) = s.strip_prefix('@') {
+        let n: u64 = n
+            .parse()
+            .map_err(|_| Error::config(format!("fault spec: bad one-shot rate '@{n}'")))?;
+        if n == 0 {
+            return Err(Error::config("fault spec: '@N' is 1-indexed, N must be >= 1"));
+        }
+        return Ok(Rate::Once(n));
+    }
+    if let Some(n) = s.strip_prefix("1/") {
+        let n: u64 = n
+            .parse()
+            .map_err(|_| Error::config(format!("fault spec: bad period rate '1/{n}'")))?;
+        if n == 0 {
+            return Err(Error::config("fault spec: '1/N' requires N >= 1"));
+        }
+        return Ok(Rate::Every(n));
+    }
+    let p: f64 = s
+        .parse()
+        .map_err(|_| Error::config(format!("fault spec: bad probability '{s}'")))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(Error::config(format!(
+            "fault spec: probability {p} outside [0, 1]"
+        )));
+    }
+    if p == 0.0 {
+        return Ok(Rate::Off);
+    }
+    if p >= 1.0 {
+        return Ok(Rate::Every(1));
+    }
+    Ok(Rate::Prob((p * u64::MAX as f64) as u64))
+}
+
+impl FaultPlan {
+    /// An empty plan: every point off.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            points: std::array::from_fn(|_| PointState {
+                rate: Rate::Off,
+                seed: 0,
+                n: AtomicU64::new(0),
+            }),
+            fired: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse a spec string (grammar in the module docs).  A point named
+    /// twice keeps the last clause.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let mut parts = clause.splitn(3, ':');
+            let (name, rate, seed) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(a), Some(b), Some(c)) => (a, b, c),
+                _ => {
+                    return Err(Error::config(format!(
+                        "fault spec: clause '{clause}' is not point:rate:seed"
+                    )))
+                }
+            };
+            let idx = POINT_NAMES
+                .iter()
+                .position(|p| *p == name)
+                .ok_or_else(|| {
+                    Error::config(format!(
+                        "fault spec: unknown point '{name}' (expected one of {})",
+                        POINT_NAMES.join(", ")
+                    ))
+                })?;
+            let seed: u64 = seed
+                .parse()
+                .map_err(|_| Error::config(format!("fault spec: bad seed '{seed}'")))?;
+            plan.points[idx] = PointState {
+                rate: parse_rate(rate)?,
+                seed,
+                n: AtomicU64::new(0),
+            };
+        }
+        Ok(plan)
+    }
+
+    /// Evaluate one injection point: advances the point's counter and
+    /// returns whether the fault fires on this evaluation.
+    pub fn fires(&self, point: FaultPoint) -> bool {
+        let st = &self.points[point as usize];
+        let hit = match st.rate {
+            Rate::Off => return false,
+            Rate::Prob(threshold) => {
+                let n = st.n.fetch_add(1, Ordering::Relaxed);
+                splitmix64(st.seed ^ splitmix64(n)) < threshold
+            }
+            Rate::Every(k) => {
+                let n = st.n.fetch_add(1, Ordering::Relaxed);
+                (n + 1) % k == 0
+            }
+            Rate::Once(k) => {
+                let n = st.n.fetch_add(1, Ordering::Relaxed);
+                n + 1 == k
+            }
+        };
+        if hit {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Total faults fired so far across all points (feeds the
+    /// `repro_serve_faults_injected_total` metric).
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// True if any point can ever fire (used to skip arming entirely).
+    pub fn is_armed(&self) -> bool {
+        self.points.iter().any(|p| !matches!(p.rate, Rate::Off))
+    }
+}
+
+/// Evaluate the `tick_panic` point for sequence `key`; panics with a
+/// [`SeqPanic`] payload if it fires.  The payload (not a string) lets
+/// the engine's `catch_unwind` attribute the panic to one sequence.
+pub fn maybe_tick_panic(plan: &FaultPlan, key: u64) {
+    if plan.fires(FaultPoint::TickPanic) {
+        std::panic::panic_any(SeqPanic { key });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_rate_forms() {
+        let p = FaultPlan::parse("alloc:0.5:7,adapter_io:1/3:1,tick_panic:@2:9").unwrap();
+        assert!(p.is_armed());
+        // 1/3 fires on evaluations 3, 6, ...
+        assert!(!p.fires(FaultPoint::AdapterIo));
+        assert!(!p.fires(FaultPoint::AdapterIo));
+        assert!(p.fires(FaultPoint::AdapterIo));
+        assert!(!p.fires(FaultPoint::AdapterIo));
+        // @2 fires exactly on the second evaluation.
+        assert!(!p.fires(FaultPoint::TickPanic));
+        assert!(p.fires(FaultPoint::TickPanic));
+        assert!(!p.fires(FaultPoint::TickPanic));
+        // conn_write absent -> off.
+        assert!(!p.fires(FaultPoint::ConnWrite));
+        assert_eq!(p.fired(), 2, "one adapter_io hit + one tick_panic hit");
+    }
+
+    #[test]
+    fn probability_is_deterministic_and_plausible() {
+        let a = FaultPlan::parse("alloc:0.25:42").unwrap();
+        let b = FaultPlan::parse("alloc:0.25:42").unwrap();
+        let fires_a: Vec<bool> = (0..1000).map(|_| a.fires(FaultPoint::Alloc)).collect();
+        let fires_b: Vec<bool> = (0..1000).map(|_| b.fires(FaultPoint::Alloc)).collect();
+        assert_eq!(fires_a, fires_b, "same seed must fire identically");
+        let hits = fires_a.iter().filter(|f| **f).count();
+        assert!((150..350).contains(&hits), "0.25 rate fired {hits}/1000");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("alloc:0.5").is_err());
+        assert!(FaultPlan::parse("bogus:0.5:1").is_err());
+        assert!(FaultPlan::parse("alloc:2.0:1").is_err());
+        assert!(FaultPlan::parse("alloc:@0:1").is_err());
+        assert!(FaultPlan::parse("alloc:1/0:1").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_armed() == false);
+    }
+
+    #[test]
+    fn zero_probability_is_off() {
+        let p = FaultPlan::parse("alloc:0:1").unwrap();
+        assert!(!p.is_armed());
+        assert!((0..100).all(|_| !p.fires(FaultPoint::Alloc)));
+    }
+}

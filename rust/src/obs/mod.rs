@@ -28,7 +28,12 @@
 //! * [`profile`] — process-wide kernel profiling accumulators (per-kind
 //!   time + FLOPs, per-pool-lane busy nanos), gated behind
 //!   `--profile` / `REPRO_PROF`.
+//! * [`fault`] — the deterministic fault-injection harness
+//!   (`--fault` / `REPRO_FAULT`) that exercises the engine's recovery
+//!   paths: pool-allocation failures, adapter-load I/O errors, injected
+//!   tick panics, and broken connection writes.
 
+pub mod fault;
 pub mod profile;
 pub mod prom;
 pub mod registry;
@@ -37,6 +42,7 @@ pub mod trace;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+pub use fault::{FaultPlan, FaultPoint, SeqPanic};
 pub use registry::{Counter, Gauge, Histo, MetricValue, Registry};
 pub use trace::{KernelTickDelta, RequestSpan, TickRecord, TraceRing, N_PHASES, PHASE_NAMES};
 
@@ -107,6 +113,11 @@ pub struct EngineMetrics {
     pub spec_accepted_total: Arc<Counter>,
     pub spec_cycles_total: Arc<Counter>,
     pub spec_fallbacks_total: Arc<Counter>,
+    pub overload_rejections_total: Arc<Counter>,
+    pub deadline_expirations_total: Arc<Counter>,
+    pub quarantines_total: Arc<Counter>,
+    pub slow_reader_evictions_total: Arc<Counter>,
+    pub faults_injected_total: Arc<Counter>,
 }
 
 impl EngineMetrics {
@@ -122,7 +133,7 @@ impl EngineMetrics {
                 )
             })
             .collect();
-        let finished = ["length", "stop", "capacity", "cancelled"]
+        let finished = ["length", "stop", "capacity", "cancelled", "deadline", "internal"]
             .into_iter()
             .map(|r| {
                 (
@@ -232,6 +243,31 @@ impl EngineMetrics {
                 "spec_fallbacks_total",
                 &[],
                 "Sequences permanently fallen back to plain decode",
+            ),
+            overload_rejections_total: reg.counter(
+                "overload_rejections_total",
+                &[],
+                "Submissions refused with an overloaded error frame",
+            ),
+            deadline_expirations_total: reg.counter(
+                "deadline_expirations_total",
+                &[],
+                "Requests rejected or finished because their deadline passed",
+            ),
+            quarantines_total: reg.counter(
+                "quarantines_total",
+                &[],
+                "Sequences quarantined after a scheduler-tick panic",
+            ),
+            slow_reader_evictions_total: reg.counter(
+                "slow_reader_evictions_total",
+                &[],
+                "Connections evicted for staying backlogged past the budget",
+            ),
+            faults_injected_total: reg.counter(
+                "faults_injected_total",
+                &[],
+                "Faults fired by the injection harness (--fault / REPRO_FAULT)",
             ),
         }
     }

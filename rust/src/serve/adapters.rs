@@ -170,6 +170,31 @@ impl AdapterRegistry {
         }
     }
 
+    /// Rebuild per-entry refcounts from the surviving sequences' routes
+    /// (panic recovery — the incremental acquire/release bookkeeping
+    /// cannot be trusted after an unwind mid-step).  Draining entries
+    /// whose last holder vanished complete their deferred unload.
+    pub fn rebuild_refs<'a>(&mut self, routes: impl Iterator<Item = &'a str>) {
+        for e in self.entries.values_mut() {
+            e.refs = 0;
+        }
+        for name in routes {
+            if let Some(e) = self.entries.get_mut(name) {
+                e.refs += 1;
+            }
+        }
+        let done: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.draining && e.refs == 0)
+            .map(|(n, _)| n.clone())
+            .collect();
+        for name in done {
+            self.entries.remove(&name);
+            self.order.retain(|n| *n != name);
+        }
+    }
+
     /// Attribute `n` emitted tokens to `name` (or the baseline when `None`).
     pub fn count_tokens(&mut self, name: Option<&str>, n: u64) {
         match name {

@@ -69,6 +69,9 @@ pub struct BlockPool {
     shared_now: usize,
     peak_resident: usize,
     peak_shared: usize,
+    /// Fault-injection plan: when armed, the `alloc` point can make
+    /// `try_alloc` fail as if the budget were exhausted.
+    fault: Option<std::sync::Arc<crate::obs::FaultPlan>>,
 }
 
 impl BlockPool {
@@ -87,7 +90,13 @@ impl BlockPool {
             shared_now: 0,
             peak_resident: 0,
             peak_shared: 0,
+            fault: None,
         }
+    }
+
+    /// Arm the `alloc` fault-injection point (`--fault alloc:...`).
+    pub fn set_fault(&mut self, plan: std::sync::Arc<crate::obs::FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     pub fn n_layers(&self) -> usize {
@@ -128,6 +137,11 @@ impl BlockPool {
     /// exhausted — the caller backs off (admission) or finishes the
     /// sequence with `capacity` (decode).
     pub fn try_alloc(&mut self) -> Option<usize> {
+        if let Some(f) = &self.fault {
+            if f.fires(crate::obs::FaultPoint::Alloc) {
+                return None;
+            }
+        }
         if let Some(id) = self.free.pop() {
             debug_assert_eq!(self.refs[id], 0);
             self.refs[id] = 1;
@@ -219,6 +233,37 @@ impl BlockPool {
         &self.blocks[id].v[off..off + t * self.d]
     }
 
+    /// Rebuild refcounts, free list, and sharing counts from scratch out
+    /// of the surviving sequences' block tables (panic recovery: after an
+    /// unwind mid-step the incremental bookkeeping cannot be trusted).
+    /// Resident storage is kept — pages referenced by no survivor are
+    /// free-listed, not deallocated — and high-water marks survive.
+    pub fn rebuild<'a>(&mut self, tables: impl Iterator<Item = &'a [usize]>) {
+        for r in self.refs.iter_mut() {
+            *r = 0;
+        }
+        for table in tables {
+            for &id in table {
+                debug_assert!(id < self.refs.len(), "survivor references unknown block");
+                if id < self.refs.len() {
+                    self.refs[id] += 1;
+                }
+            }
+        }
+        self.free.clear();
+        self.shared_now = 0;
+        for (id, &r) in self.refs.iter().enumerate() {
+            if r == 0 {
+                self.free.push(id);
+            } else if r >= 2 {
+                self.shared_now += 1;
+            }
+        }
+        if self.shared_now > self.peak_shared {
+            self.peak_shared = self.shared_now;
+        }
+    }
+
     /// Snapshot of counts, shares, and high-water marks.
     pub fn stats(&self) -> KvStats {
         let resident = self.blocks.len();
@@ -290,6 +335,40 @@ mod tests {
         pool.release(a);
         assert_eq!(pool.stats().used_blocks, 0);
         assert_eq!(pool.stats().peak_shared_blocks, 1, "peak survives release");
+    }
+
+    #[test]
+    fn rebuild_recounts_from_tables() {
+        let mut pool = BlockPool::new(1, 2, 4, 4);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let c = pool.try_alloc().unwrap();
+        pool.retain(a); // simulate sharing
+        assert_eq!(pool.stats().used_blocks, 3);
+
+        // Survivors hold [a, b] and [a]; c's holder vanished mid-panic.
+        let t1 = vec![a, b];
+        let t2 = vec![a];
+        pool.rebuild([&t1[..], &t2[..]].into_iter());
+        assert_eq!(pool.ref_count(a), 2);
+        assert_eq!(pool.ref_count(b), 1);
+        assert_eq!(pool.ref_count(c), 0, "orphaned page reclaimed");
+        let s = pool.stats();
+        assert_eq!(s.used_blocks, 2);
+        assert_eq!(s.free_blocks, 1);
+        assert_eq!(s.shared_blocks, 1);
+        let c2 = pool.try_alloc().unwrap();
+        assert_eq!(c2, c, "reclaimed page is allocatable again");
+    }
+
+    #[test]
+    fn fault_plan_fails_alloc() {
+        let plan = std::sync::Arc::new(crate::obs::FaultPlan::parse("alloc:@2:1").unwrap());
+        let mut pool = BlockPool::new(1, 2, 4, 4);
+        pool.set_fault(plan);
+        assert!(pool.try_alloc().is_some());
+        assert!(pool.try_alloc().is_none(), "2nd allocation injected to fail");
+        assert!(pool.try_alloc().is_some(), "one-shot fault clears");
     }
 
     #[test]

@@ -33,6 +33,14 @@
 //! and KV block occupancy — the mid-run view a single post-run scrape
 //! cannot give (peak/median batch size, occupancy ramp).  The series and
 //! its summaries ride on `BENCH_serve.json`.
+//!
+//! The generator is resilient by design (it doubles as the chaos-test
+//! driver): connect and transport failures reconnect with jittered
+//! exponential backoff, `overloaded` rejections honor the server's
+//! `retry_after_ms` up to `max_retries` attempts, each request has an
+//! optional client-side `request_timeout_ms`, and every request ends in
+//! exactly one terminal bucket — `completed`, `rejected`, `deadline`, or
+//! `failed` — instead of the first error killing the whole run.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -78,6 +86,15 @@ pub struct LoadOptions {
     /// Poll `{"cmd":"stats"}` every this-many milliseconds during the
     /// run and record a batch-size / KV-occupancy time series.  0 = off.
     pub sample_ms: u64,
+    /// Attach `"deadline_ms": N` to every request (0 = no deadline).
+    pub deadline_ms: u64,
+    /// Client-side socket read timeout per frame, ms (0 = block forever).
+    /// A timed-out request reconnects and retries like any transport
+    /// failure.
+    pub request_timeout_ms: u64,
+    /// Max re-attempts per request after `overloaded` rejections or
+    /// transport failures before the request is counted terminal.
+    pub max_retries: usize,
 }
 
 /// Per-request observation (offsets from the run epoch, seconds).
@@ -205,6 +222,19 @@ pub struct LoadReport {
     /// Mid-run stats polls in epoch order (empty when `sample_ms` = 0 or
     /// every poll failed).
     pub samples: Vec<LoadSample>,
+    /// Requests that ended in an `overloaded` rejection after retries
+    /// were exhausted.
+    pub rejected: usize,
+    /// Requests that hit a deadline: admission-time `deadline` error
+    /// frames plus streams finished with `"finish":"deadline"` (the
+    /// latter also count as completed — they carry tokens).
+    pub deadline: usize,
+    /// Total re-attempts across all requests (overload backoff +
+    /// transport reconnects).
+    pub retried: usize,
+    /// Requests that ended in a non-retryable error or exhausted
+    /// transport retries.
+    pub failed: usize,
 }
 
 impl LoadReport {
@@ -240,20 +270,159 @@ impl LoadReport {
     }
 }
 
-fn run_client(
-    addr: &str,
-    client: usize,
-    o: &LoadOptions,
+/// One client thread's terminal accounting: every request it owned
+/// landed in exactly one of completed/rejected/deadline/failed (streams
+/// finished with `"finish":"deadline"` count in both `records` and
+/// `deadline`).
+#[derive(Default)]
+struct ClientStats {
+    records: Vec<ReqRecord>,
+    rejected: usize,
+    deadline: usize,
+    retried: usize,
+    failed: usize,
+}
+
+/// Outcome of one attempt at one request.
+enum Attempt {
+    /// Stream completed; bool = it finished with `"finish":"deadline"`.
+    Done(ReqRecord, bool),
+    /// Admission-time `deadline` rejection (terminal, no retry).
+    Deadline,
+    /// `overloaded` rejection; carries the server's `retry_after_ms`.
+    Overloaded(u64),
+    /// Transport failure (send/read error, timeout, connection closed):
+    /// reconnect and retry.
+    Transport,
+    /// Non-retryable failure (protocol violation, `bad_request`, ...).
+    Fatal(String),
+}
+
+fn connect(addr: &str, timeout_ms: u64) -> Option<(TcpStream, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr).ok()?;
+    if timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(timeout_ms)));
+    }
+    let writer = stream.try_clone().ok()?;
+    Some((writer, BufReader::new(stream)))
+}
+
+/// Jittered exponential backoff before attempt `attempt` (1-based).
+fn backoff(attempt: usize, extra_ms: u64, rng: &mut Rng) {
+    let base = 10u64.saturating_mul(1 << attempt.min(6)).min(500);
+    let jitter = rng.below(16) as u64;
+    std::thread::sleep(std::time::Duration::from_millis(base + jitter + extra_ms));
+}
+
+/// Send one request line and consume its stream to a terminal frame.
+fn stream_one(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+    id: &str,
+    adapter: Option<&str>,
     epoch: Instant,
-) -> Result<Vec<ReqRecord>> {
-    let stream = TcpStream::connect(addr)
-        .map_err(|e| Error::io(format!("connect {addr}: {e}")))?;
-    let mut writer = stream
-        .try_clone()
-        .map_err(|e| Error::io(format!("clone socket: {e}")))?;
-    let mut reader = BufReader::new(stream);
+) -> Attempt {
+    let sent_at = epoch.elapsed().as_secs_f64();
+    if writer.write_all(line.as_bytes()).is_err() {
+        return Attempt::Transport;
+    }
+    let mut first_token_at = None;
+    let mut streamed = 0usize;
+    let mut next_index = 0usize;
+    loop {
+        let mut resp = String::new();
+        match reader.read_line(&mut resp) {
+            Ok(0) | Err(_) => return Attempt::Transport,
+            Ok(_) => {}
+        }
+        let Ok(j) = Json::parse(resp.trim()) else {
+            return Attempt::Fatal(format!("{id}: unparseable frame: {resp}"));
+        };
+        let frame_id = j.get("id").and_then(Json::as_str);
+        let event = j.get("event").and_then(Json::as_str);
+        if frame_id != Some(id) {
+            // Connection-scoped error frames arrive with an empty id
+            // (engine failure, line-too-long, ...); anything else for a
+            // foreign id is a routing bug.
+            if event == Some("error") {
+                let msg = j.get("message").and_then(Json::as_str).unwrap_or("?");
+                return Attempt::Fatal(format!("server error: {msg}"));
+            }
+            if event == Some("drain") {
+                continue; // drain ack from a shared connection; not ours
+            }
+            return Attempt::Fatal(format!("frame for unexpected id: {resp}"));
+        }
+        match event {
+            Some("token") => {
+                let idx = j.get("index").and_then(Json::as_i64).unwrap_or(-1);
+                if idx != next_index as i64 {
+                    return Attempt::Fatal(format!(
+                        "{id}: out-of-order token index {idx}, want {next_index}"
+                    ));
+                }
+                next_index += 1;
+                streamed += 1;
+                if first_token_at.is_none() {
+                    first_token_at = Some(epoch.elapsed().as_secs_f64());
+                }
+            }
+            Some("done") => {
+                let tokens: Vec<i64> = j
+                    .get("tokens")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_i64).collect())
+                    .unwrap_or_default();
+                if tokens.len() != streamed {
+                    return Attempt::Fatal(format!(
+                        "{id}: done carries {} tokens but {streamed} were streamed",
+                        tokens.len()
+                    ));
+                }
+                let deadline_finish =
+                    j.get("finish").and_then(Json::as_str) == Some("deadline");
+                return Attempt::Done(
+                    ReqRecord {
+                        id: id.to_string(),
+                        sent_at,
+                        first_token_at: first_token_at.unwrap_or(sent_at),
+                        done_at: epoch.elapsed().as_secs_f64(),
+                        n_tokens: streamed,
+                        tokens,
+                        adapter: adapter.map(String::from),
+                    },
+                    deadline_finish,
+                );
+            }
+            Some("error") => {
+                let code = j.get("code").and_then(Json::as_str).unwrap_or("");
+                match code {
+                    "overloaded" => {
+                        let after = j
+                            .get("retry_after_ms")
+                            .and_then(Json::as_i64)
+                            .unwrap_or(0)
+                            .max(0) as u64;
+                        return Attempt::Overloaded(after);
+                    }
+                    "deadline" => return Attempt::Deadline,
+                    "unavailable" => return Attempt::Transport,
+                    _ => {
+                        let msg = j.get("message").and_then(Json::as_str).unwrap_or("?");
+                        return Attempt::Fatal(format!("{id}: server error: {msg}"));
+                    }
+                }
+            }
+            _ => return Attempt::Fatal(format!("unknown frame: {resp}")),
+        }
+    }
+}
+
+fn run_client(addr: &str, client: usize, o: &LoadOptions, epoch: Instant) -> ClientStats {
     let mut rng = Rng::new(o.seed ^ (client as u64).wrapping_mul(0xA5A5_A5A5_A5A5_A5A5).max(1));
-    let mut records = Vec::with_capacity(o.requests_per_client);
+    let mut st = ClientStats::default();
+    let mut conn = connect(addr, o.request_timeout_ms);
 
     // Every client derives the SAME shared prefix from the run seed
     // alone, so all requests agree on it token for token.
@@ -284,84 +453,71 @@ fn run_client(
         let route = adapter
             .map(|a| format!(",\"adapter\":\"{a}\""))
             .unwrap_or_default();
+        let deadline = if o.deadline_ms > 0 {
+            format!(",\"deadline_ms\":{}", o.deadline_ms)
+        } else {
+            String::new()
+        };
         let line = format!(
-            "{{\"id\":\"{id}\",\"prompt\":[{}],\"max_new\":{}{sampling}{route}}}\n",
+            "{{\"id\":\"{id}\",\"prompt\":[{}],\"max_new\":{}{sampling}{route}{deadline}}}\n",
             prompt.join(","),
             o.max_new
         );
-        let sent_at = epoch.elapsed().as_secs_f64();
-        writer
-            .write_all(line.as_bytes())
-            .map_err(|e| Error::io(format!("send request: {e}")))?;
 
-        let mut first_token_at = None;
-        let mut streamed = 0usize;
-        let mut next_index = 0usize;
-        let record = loop {
-            let mut resp = String::new();
-            let n = reader
-                .read_line(&mut resp)
-                .map_err(|e| Error::io(format!("read frame: {e}")))?;
-            if n == 0 {
-                return Err(Error::io("server closed connection mid-stream"));
-            }
-            let j = Json::parse(resp.trim())?;
-            if j.get("id").and_then(Json::as_str) != Some(id.as_str()) {
-                // engine-level failures are broadcast with an empty id;
-                // surface the message instead of a routing error
-                if j.get("event").and_then(Json::as_str) == Some("error") {
-                    let msg = j.get("message").and_then(Json::as_str).unwrap_or("?");
-                    return Err(Error::config(format!("server error: {msg}")));
+        let mut attempts = 0usize;
+        loop {
+            let Some((writer, reader)) = conn.as_mut() else {
+                // (Re)connect with backoff; the request rides the retry
+                // budget with the transport.
+                if attempts >= o.max_retries {
+                    st.failed += 1;
+                    break;
                 }
-                return Err(Error::config(format!("frame for unexpected id: {resp}")));
-            }
-            match j.get("event").and_then(Json::as_str) {
-                Some("token") => {
-                    let idx = j.get("index").and_then(Json::as_i64).unwrap_or(-1);
-                    if idx != next_index as i64 {
-                        return Err(Error::config(format!(
-                            "{id}: out-of-order token index {idx}, want {next_index}"
-                        )));
+                attempts += 1;
+                st.retried += 1;
+                backoff(attempts, 0, &mut rng);
+                conn = connect(addr, o.request_timeout_ms);
+                continue;
+            };
+            match stream_one(writer, reader, &line, &id, adapter, epoch) {
+                Attempt::Done(rec, deadline_finish) => {
+                    if deadline_finish {
+                        st.deadline += 1;
                     }
-                    next_index += 1;
-                    streamed += 1;
-                    if first_token_at.is_none() {
-                        first_token_at = Some(epoch.elapsed().as_secs_f64());
+                    st.records.push(rec);
+                    break;
+                }
+                Attempt::Deadline => {
+                    st.deadline += 1;
+                    break;
+                }
+                Attempt::Overloaded(after_ms) => {
+                    if attempts >= o.max_retries {
+                        st.rejected += 1;
+                        break;
                     }
+                    attempts += 1;
+                    st.retried += 1;
+                    backoff(attempts, after_ms, &mut rng);
                 }
-                Some("done") => {
-                    let tokens: Vec<i64> = j
-                        .get("tokens")
-                        .and_then(Json::as_arr)
-                        .map(|a| a.iter().filter_map(Json::as_i64).collect())
-                        .unwrap_or_default();
-                    if tokens.len() != streamed {
-                        return Err(Error::config(format!(
-                            "{id}: done carries {} tokens but {streamed} were streamed",
-                            tokens.len()
-                        )));
+                Attempt::Transport => {
+                    conn = None; // rebuild on the next spin
+                    if attempts >= o.max_retries {
+                        st.failed += 1;
+                        break;
                     }
-                    break ReqRecord {
-                        id: id.clone(),
-                        sent_at,
-                        first_token_at: first_token_at.unwrap_or(sent_at),
-                        done_at: epoch.elapsed().as_secs_f64(),
-                        n_tokens: streamed,
-                        tokens,
-                        adapter: adapter.map(String::from),
-                    };
+                    // the reconnect arm above charges the retry
                 }
-                Some("error") => {
-                    let msg = j.get("message").and_then(Json::as_str).unwrap_or("?");
-                    return Err(Error::config(format!("{id}: server error: {msg}")));
+                Attempt::Fatal(msg) => {
+                    eprintln!("bench-serve: {msg}");
+                    st.failed += 1;
+                    break;
                 }
-                _ => return Err(Error::config(format!("unknown frame: {resp}"))),
             }
-        };
-        records.push(record);
+        }
     }
 
-    Ok(records)
+    st
 }
 
 /// Which adapter this client routes to, if any.
@@ -484,8 +640,9 @@ fn peak_overlap(records: &[ReqRecord]) -> usize {
     peak.max(0) as usize
 }
 
-/// Fire the load and gather the report.  Fails if any client errors or
-/// any stream is left incomplete.
+/// Fire the load and gather the report.  Request-level failures land in
+/// the report's terminal buckets (`rejected`/`deadline`/`failed`)
+/// instead of aborting the run; only a malformed load shape errors.
 pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     if o.clients == 0 || o.requests_per_client == 0 {
         return Err(Error::config("bench-serve wants clients >= 1 and requests >= 1"));
@@ -493,7 +650,7 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     let epoch = Instant::now();
     let churn_done = std::sync::atomic::AtomicBool::new(false);
     let sampler_done = std::sync::atomic::AtomicBool::new(false);
-    let (results, churn_cycles, samples): (Vec<Result<Vec<ReqRecord>>>, usize, Vec<LoadSample>) =
+    let (results, churn_cycles, samples): (Vec<ClientStats>, usize, Vec<LoadSample>) =
         std::thread::scope(|s| {
             let churn = o.churn_adapter.as_ref().map(|(name, path)| {
                 let done = &churn_done;
@@ -509,8 +666,14 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
             let results = handles
                 .into_iter()
                 .map(|h| match h.join() {
-                    Ok(r) => r,
-                    Err(_) => Err(Error::io("load client thread panicked")),
+                    Ok(st) => st,
+                    Err(_) => {
+                        eprintln!("bench-serve: load client thread panicked");
+                        ClientStats {
+                            failed: o.requests_per_client,
+                            ..ClientStats::default()
+                        }
+                    }
                 })
                 .collect();
             churn_done.store(true, std::sync::atomic::Ordering::Relaxed);
@@ -550,8 +713,13 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     }
 
     let mut records = Vec::new();
-    for r in results {
-        records.extend(r?);
+    let (mut rejected, mut deadline, mut retried, mut failed) = (0usize, 0usize, 0usize, 0usize);
+    for st in results {
+        records.extend(st.records);
+        rejected += st.rejected;
+        deadline += st.deadline;
+        retried += st.retried;
+        failed += st.failed;
     }
     if let Some(path) = &o.transcript {
         write_transcript(path, &records)?;
@@ -580,6 +748,10 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         tokens_by_route: by_route.into_iter().collect(),
         churn_cycles,
         samples,
+        rejected,
+        deadline,
+        retried,
+        failed,
     })
 }
 
@@ -727,6 +899,9 @@ mod tests {
             adapter_mix: vec!["a".into(), "-".into(), "b".into()],
             churn_adapter: None,
             sample_ms: 0,
+            deadline_ms: 0,
+            request_timeout_ms: 0,
+            max_retries: 0,
         };
         assert_eq!(route_for(&o, 0), Some("a"));
         assert_eq!(route_for(&o, 1), None); // "-" = baseline
@@ -760,6 +935,10 @@ mod tests {
             tokens_by_route: Vec::new(),
             churn_cycles: 0,
             samples: vec![sample(2, 10), sample(7, 80), sample(4, 40)],
+            rejected: 0,
+            deadline: 0,
+            retried: 0,
+            failed: 0,
         };
         assert_eq!(r.batch_peak(), 7);
         assert_eq!(r.batch_p50(), 4);

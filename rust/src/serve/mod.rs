@@ -38,10 +38,19 @@
 //!   `{"cmd":"metrics"}` / `{"cmd":"trace"}` telemetry queries).
 //! * [`server`] — the long-lived `repro serve` TCP loop (std threads +
 //!   channels), plus the optional Prometheus `/metrics` listener and the
-//!   `--trace-log` tick journal.
+//!   `--trace-log` tick journal.  Fault-tolerant: bounded submission +
+//!   per-connection output queues with `overloaded` rejections and
+//!   slow-reader eviction, per-request deadlines, `catch_unwind` panic
+//!   quarantine with pool/registry rebuild, and graceful drain on
+//!   SIGINT/SIGTERM or `{"cmd":"drain"}`.  A deterministic
+//!   fault-injection harness ([`crate::obs::fault`], `--fault` /
+//!   `REPRO_FAULT`) exercises all of it; unarmed, every path is
+//!   byte-identical to the fault-free build.
 //! * [`loadgen`] — the `repro bench-serve` concurrent load generator
 //!   (common-prefix prompts to exercise sharing, KV stats scrape,
-//!   mid-run `--sample-ms` batch/occupancy series, `BENCH_serve.json`).
+//!   mid-run `--sample-ms` batch/occupancy series, `BENCH_serve.json`);
+//!   retries `overloaded` rejections with jittered backoff and survives
+//!   connection loss instead of dying on the first error.
 //!
 //! Telemetry itself (metric registry, tick/request tracing, kernel
 //! profiling, Prometheus rendering) lives in [`crate::obs`]; the

@@ -82,6 +82,12 @@ impl PagedKvCache {
         self.table[pos / self.block_size]
     }
 
+    /// This sequence's block table (panic recovery: [`BlockPool::rebuild`]
+    /// recounts pool refs from the survivors' tables).
+    pub fn table(&self) -> &[usize] {
+        &self.table
+    }
+
     pub fn block_size(&self) -> usize {
         self.block_size
     }

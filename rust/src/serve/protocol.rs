@@ -12,24 +12,38 @@
 //! {"cmd":"trace","n":32}
 //! {"cmd":"adapter","op":"load","name":"taskA","path":"checkpoints/adapter_taskA.apq"}
 //! {"cmd":"adapter","op":"unload","name":"taskA"}
+//! {"cmd":"drain"}
 //! {"cmd":"shutdown"}
 //! ```
 //!
 //! `id` is any client-chosen string echoed in every frame; `prompt` is a
-//! token-id array; `max_new` defaults to 32.  Omitting `temperature` (or
+//! token-id array; `max_new` defaults to 32 and must not exceed the
+//! server's `--max-new-cap` (over-cap requests get a `bad_request` error
+//! frame instead of a silent clamp).  Omitting `temperature` (or
 //! setting it `<= 0`) selects greedy decoding; otherwise temperature /
 //! top-k / top-p / seed configure the seeded sampler.  `stop` ends the
 //! stream early when that token is produced.  `"adapter"` routes the
 //! request through a named registry adapter (unknown names get an error
-//! frame); omitted = the model's default path.  `{"cmd":"stats"}` asks
-//! the engine for a one-off stats frame (KV memory + queue state).
-//! `{"cmd":"adapter",...}` loads an APIQADPT sidecar into (or unloads it
-//! from) the engine's registry at runtime; an unload with sequences in
-//! flight answers `"status":"draining"` and completes when they finish.
+//! frame); omitted = the model's default path.  `"deadline_ms"` gives
+//! the request a wall-clock budget measured from submission: a request
+//! that cannot be admitted before the budget expires is rejected with a
+//! `deadline` error frame, and a running request that outlives it
+//! finishes early with `"finish":"deadline"` (its KV pages are released
+//! like any other finish).  The server's `--deadline-ms` supplies a
+//! default for requests that omit the field; `0` (the default) means no
+//! deadline.  `{"cmd":"stats"}` asks the engine for a one-off stats
+//! frame (KV memory + queue state).  `{"cmd":"adapter",...}` loads an
+//! APIQADPT sidecar into (or unloads it from) the engine's registry at
+//! runtime; an unload with sequences in flight answers
+//! `"status":"draining"` and completes when they finish.
 //! `{"cmd":"metrics"}` returns the full telemetry registry as one JSON
 //! frame (the same data `--metrics-addr` exposes as Prometheus text);
 //! `{"cmd":"trace","n":K}` returns the last `K` scheduler-tick trace
 //! records from the in-memory ring (`n` defaults to 16, capped at 4096).
+//! `{"cmd":"drain"}` puts the engine into drain mode: new requests are
+//! refused with an `unavailable` error frame, in-flight sequences run to
+//! completion, the trace journal and final stats flush, and the process
+//! exits 0.  SIGINT/SIGTERM trigger the same drain sequence.
 //!
 //! ## Frames (server -> client, one JSON object per line)
 //!
@@ -39,7 +53,9 @@
 //!  "stats":{"queue_ms":0.1,"prefill_ms":3.2,"total_ms":40.5,"tokens_per_sec":790.1,
 //!           "max_gap_ms":2.0,"shared_prefix_tokens":0,
 //!           "spec_proposed":16,"spec_accepted":13}}
-//! {"id":"r1","event":"error","message":"..."}
+//! {"id":"r1","event":"error","code":"bad_request","message":"..."}
+//! {"id":"r9","event":"error","code":"overloaded","retry_after_ms":50,"message":"..."}
+//! {"id":"","event":"drain","status":"draining","in_flight":3}
 //! {"id":"","event":"adapter","op":"load","name":"taskA","status":"loaded"}
 //! {"id":"","event":"stats","active":1,"pending":0,"completed":7,
 //!  "uptime_secs":12.5,
@@ -65,6 +81,26 @@
 //! proposal/acceptance counters and the draft model's own KV pool, so a
 //! client can observe prefix sharing, peak KV memory, and speculative
 //! acceptance even after its requests finished.
+//!
+//! ## Error codes
+//!
+//! Every error frame carries a machine-readable `code` next to the
+//! human-readable `message`:
+//!
+//! * `bad_request` — the line failed to parse or validate (bad JSON,
+//!   over-long line, missing fields, `max_new` over the server cap,
+//!   prompt too long or empty, token id out of range).
+//! * `overloaded` — the submission queue is full; the frame carries a
+//!   `retry_after_ms` hint and the request was NOT enqueued.  Clients
+//!   should back off and resubmit.
+//! * `deadline` — the request's `deadline_ms` budget expired before the
+//!   request could be admitted (running requests that hit their deadline
+//!   get a normal `done` frame with `"finish":"deadline"` instead).
+//! * `unavailable` — the engine is draining or has stopped; the request
+//!   was not accepted and will not be.
+//! * `internal` — the engine hit an unexpected failure (e.g. a panic
+//!   quarantined this sequence); the sequence is terminated and its
+//!   pages reclaimed, but the server keeps serving other traffic.
 
 use crate::error::{Error, Result};
 use crate::obs::registry::MetricValue;
@@ -79,6 +115,16 @@ use crate::serve::spec::SpecStats;
 /// Default `max_new` when a request omits it.
 pub const DEFAULT_MAX_NEW: usize = 32;
 
+/// Machine-readable `code` values for error frames (taxonomy in the
+/// module docs).
+pub mod code {
+    pub const BAD_REQUEST: &str = "bad_request";
+    pub const OVERLOADED: &str = "overloaded";
+    pub const DEADLINE: &str = "deadline";
+    pub const UNAVAILABLE: &str = "unavailable";
+    pub const INTERNAL: &str = "internal";
+}
+
 /// A parsed request line, before engine admission.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireRequest {
@@ -89,6 +135,8 @@ pub struct WireRequest {
     pub stop: Option<i32>,
     /// Route through a named registry adapter; `None` = default path.
     pub adapter: Option<String>,
+    /// Wall-clock budget from submission, in ms; `None` = server default.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Registry operation requested over the wire.
@@ -122,6 +170,8 @@ pub enum ClientLine {
     Trace { n: usize },
     /// Runtime registry change: `path` is required for `Load`.
     Adapter { op: AdapterOp, name: String, path: Option<String> },
+    /// Stop admitting, finish in-flight work, flush telemetry, exit 0.
+    Drain,
     Shutdown,
 }
 
@@ -140,6 +190,7 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
                     .unwrap_or(DEFAULT_TRACE_N);
                 Ok(ClientLine::Trace { n })
             }
+            "drain" => Ok(ClientLine::Drain),
             "shutdown" => Ok(ClientLine::Shutdown),
             "adapter" => {
                 let op = match j.get("op").and_then(Json::as_str) {
@@ -210,7 +261,25 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
                 .to_string(),
         ),
     };
-    Ok(ClientLine::Request(WireRequest { id, prompt, max_new, sampling, stop, adapter }))
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v
+                .as_i64()
+                .filter(|v| *v > 0)
+                .ok_or_else(|| Error::config("'deadline_ms' must be a positive integer"))?;
+            Some(ms as u64)
+        }
+    };
+    Ok(ClientLine::Request(WireRequest {
+        id,
+        prompt,
+        max_new,
+        sampling,
+        stop,
+        adapter,
+        deadline_ms,
+    }))
 }
 
 /// Token ids must fit i32; reject instead of silently wrapping.
@@ -447,11 +516,41 @@ pub fn adapter_frame(op: AdapterOp, name: &str, status: &str) -> String {
 }
 
 /// Render an error frame (empty `id` when the failure precedes parsing).
-pub fn error_frame(id: &str, message: &str) -> String {
+/// `code` is one of the [`code`] constants.
+pub fn error_frame(id: &str, code: &str, message: &str) -> String {
     Json::Obj(vec![
         ("id".to_string(), Json::from(id)),
         ("event".to_string(), Json::from("error")),
+        ("code".to_string(), Json::from(code)),
         ("message".to_string(), Json::from(message)),
+    ])
+    .render()
+}
+
+/// Render the overload-rejection frame: the request was NOT enqueued;
+/// `retry_after_ms` hints when resubmission is likely to succeed.
+pub fn overloaded_frame(id: &str, retry_after_ms: u64) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), Json::from(id)),
+        ("event".to_string(), Json::from("error")),
+        ("code".to_string(), Json::from(code::OVERLOADED)),
+        ("retry_after_ms".to_string(), Json::from(retry_after_ms as i64)),
+        (
+            "message".to_string(),
+            Json::from("submission queue full; back off and resubmit"),
+        ),
+    ])
+    .render()
+}
+
+/// Render the ack frame for `{"cmd":"drain"}` (and the SIGTERM path):
+/// `in_flight` counts sequences still pending or decoding.
+pub fn drain_frame(status: &str, in_flight: usize) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), Json::from("")),
+        ("event".to_string(), Json::from("drain")),
+        ("status".to_string(), Json::from(status)),
+        ("in_flight".to_string(), Json::from(in_flight)),
     ])
     .render()
 }
@@ -479,7 +578,7 @@ pub fn event_frame(ev: &StepEvent) -> String {
             ])
             .render()
         }
-        StepEvent::Rejected { id, reason, .. } => error_frame(id, reason),
+        StepEvent::Rejected { id, code, reason, .. } => error_frame(id, code, reason),
     }
 }
 
@@ -786,8 +885,46 @@ mod tests {
             "done stats carry the per-request speculative counters"
         );
 
-        let err = error_frame("x", "boom \"quoted\"");
+        let err = error_frame("x", code::BAD_REQUEST, "boom \"quoted\"");
         let j = Json::parse(&err).unwrap();
         assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("bad_request"));
+    }
+
+    #[test]
+    fn parses_deadline_and_drain() {
+        let ClientLine::Request(r) =
+            parse_line(r#"{"id":"a","prompt":[1],"deadline_ms":250}"#).unwrap()
+        else {
+            panic!("expected request");
+        };
+        assert_eq!(r.deadline_ms, Some(250));
+        let ClientLine::Request(r) = parse_line(r#"{"id":"a","prompt":[1]}"#).unwrap() else {
+            panic!("expected request");
+        };
+        assert_eq!(r.deadline_ms, None, "omitted deadline defers to the server default");
+        for bad in [
+            r#"{"id":"a","prompt":[1],"deadline_ms":0}"#,
+            r#"{"id":"a","prompt":[1],"deadline_ms":-5}"#,
+            r#"{"id":"a","prompt":[1],"deadline_ms":"soon"}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "should reject {bad}");
+        }
+        assert_eq!(parse_line(r#"{"cmd":"drain"}"#).unwrap(), ClientLine::Drain);
+    }
+
+    #[test]
+    fn overload_and_drain_frames_are_parseable() {
+        let f = overloaded_frame("r9", 75);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_i64), Some(75));
+
+        let f = drain_frame("draining", 3);
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("drain"));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("draining"));
+        assert_eq!(j.get("in_flight").and_then(Json::as_i64), Some(3));
     }
 }

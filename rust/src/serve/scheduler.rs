@@ -62,7 +62,9 @@ use crate::tensor::Rng;
 pub struct SchedConfig {
     /// Maximum sequences decoding concurrently.
     pub max_batch: usize,
-    /// Hard cap on a request's `max_new` (larger asks are clamped).
+    /// Hard cap on a request's `max_new` (larger asks are rejected with
+    /// a `bad_request` error frame — an explicit contract instead of a
+    /// silent clamp).
     pub max_new_cap: usize,
     /// Maximum admissible prompt length (longer requests are rejected).
     pub max_prompt: usize,
@@ -78,6 +80,12 @@ pub struct SchedConfig {
     /// Draft-side KV page budget (`--draft-kv-blocks-total`); 0 =
     /// auto-size like the target budget, plus the in-flight proposals.
     pub draft_kv_blocks_total: usize,
+    /// Admission-queue bound (`--max-pending`); submissions past it are
+    /// refused with an `overloaded` error frame.  0 = unbounded.
+    pub max_pending: usize,
+    /// Default per-request deadline in ms (`--deadline-ms`), applied to
+    /// requests that omit `deadline_ms`.  0 = no default deadline.
+    pub deadline_ms: u64,
 }
 
 impl Default for SchedConfig {
@@ -90,6 +98,8 @@ impl Default for SchedConfig {
             kv_blocks_total: 0,
             speculate: 0,
             draft_kv_blocks_total: 0,
+            max_pending: 1024,
+            deadline_ms: 0,
         }
     }
 }
@@ -131,6 +141,10 @@ pub struct GenRequest {
     /// base).  Unknown names are rejected at admission.
     pub adapter: Option<String>,
     pub queued_at: Instant,
+    /// Absolute wall-clock budget: a request not admitted by then is
+    /// rejected; a running sequence past it finishes with `deadline`.
+    /// `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 /// Why a sequence left the batch.
@@ -145,6 +159,9 @@ pub enum FinishReason {
     Capacity,
     /// Dropped by `Scheduler::cancel` (e.g. client went away).
     Cancelled,
+    /// The request's `deadline_ms` budget expired mid-decode (the
+    /// sequence keeps what it streamed; its pages are reclaimed).
+    Deadline,
 }
 
 impl FinishReason {
@@ -154,6 +171,7 @@ impl FinishReason {
             FinishReason::Stop => "stop",
             FinishReason::Capacity => "capacity",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
         }
     }
 }
@@ -204,8 +222,10 @@ pub enum StepEvent {
         finish: FinishReason,
         stats: RequestStats,
     },
-    /// Request failed validation and never entered the batch.
-    Rejected { key: u64, id: String, reason: String },
+    /// Request failed validation and never entered the batch (or was
+    /// quarantined after an engine panic).  `code` is the error-frame
+    /// taxonomy value (`bad_request`, `deadline`, `internal`, ...).
+    Rejected { key: u64, id: String, code: &'static str, reason: String },
 }
 
 struct Running {
@@ -296,6 +316,9 @@ pub struct Scheduler<'m> {
     /// standalone scheduler gets its own), shared with the server's
     /// exposition threads via [`Scheduler::attach_obs`].
     obs: Arc<Telemetry>,
+    /// Fault-injection plan (`--fault` / `REPRO_FAULT`); `None` when the
+    /// harness is disarmed — the hot path then never consults it.
+    fault: Option<Arc<crate::obs::FaultPlan>>,
 }
 
 impl<'m> Scheduler<'m> {
@@ -316,7 +339,21 @@ impl<'m> Scheduler<'m> {
             spec: None,
             registry: AdapterRegistry::new(model.cfg),
             obs: Telemetry::new(crate::obs::DEFAULT_TRACE_CAP),
+            fault: None,
         }
+    }
+
+    /// Arm the fault-injection harness: the scheduler evaluates the
+    /// `tick_panic` point per active sequence per tick, and the target
+    /// block pool evaluates `alloc` on every page allocation.
+    pub fn set_fault(&mut self, plan: Arc<crate::obs::FaultPlan>) {
+        self.pool.set_fault(plan.clone());
+        self.fault = Some(plan);
+    }
+
+    /// The limits this scheduler admits against.
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
     }
 
     /// Share telemetry with the serving layer (must be called before the
@@ -368,6 +405,19 @@ impl<'m> Scheduler<'m> {
     /// Queue a request for admission at the next step.
     pub fn submit(&mut self, req: GenRequest) {
         self.pending.push_back(req);
+    }
+
+    /// Queue a request unless the admission queue is at its
+    /// `max_pending` bound; an over-bound submission is handed back so
+    /// the caller can answer an `overloaded` error frame instead of
+    /// growing the queue without limit.
+    pub fn try_submit(&mut self, req: GenRequest) -> std::result::Result<(), GenRequest> {
+        if self.cfg.max_pending > 0 && self.pending.len() >= self.cfg.max_pending {
+            self.obs.metrics.overload_rejections_total.inc();
+            return Err(req);
+        }
+        self.pending.push_back(req);
+        Ok(())
     }
 
     pub fn has_work(&self) -> bool {
@@ -432,6 +482,94 @@ impl<'m> Scheduler<'m> {
         self.active.clear();
     }
 
+    /// Enforce deadlines at tick granularity: expired pending requests
+    /// are rejected (they can no longer start in time), expired active
+    /// sequences are marked to finish with `deadline` so this tick's
+    /// eviction releases their pages.  A request without a deadline is
+    /// never touched — the sweep is bitwise-invisible to deadline-free
+    /// traffic.
+    fn sweep_deadlines(&mut self, now: Instant, events: &mut Vec<StepEvent>) {
+        let mut expired = 0u64;
+        let mut rejected = 0u64;
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].deadline.is_some_and(|d| now >= d) {
+                let req = self.pending.remove(i).expect("index in bounds");
+                events.push(StepEvent::Rejected {
+                    key: req.key,
+                    id: req.id,
+                    code: "deadline",
+                    reason: "deadline expired before admission".to_string(),
+                });
+                expired += 1;
+                rejected += 1;
+            } else {
+                i += 1;
+            }
+        }
+        for r in self.active.iter_mut() {
+            if r.finish.is_none() && r.req.deadline.is_some_and(|d| now >= d) {
+                r.finish = Some(FinishReason::Deadline);
+                expired += 1;
+            }
+        }
+        if expired > 0 {
+            self.obs.metrics.deadline_expirations_total.add(expired);
+        }
+        if rejected > 0 {
+            self.obs.metrics.requests_rejected_total.add(rejected);
+        }
+    }
+
+    /// Recover from a panic inside [`Scheduler::step`]: drop the
+    /// offending sequence (`Some(key)`, attributed via
+    /// [`crate::obs::SeqPanic`]) or — when the panic cannot be
+    /// attributed — the whole batch, answer each victim an `internal`
+    /// error frame, and rebuild a consistent view of the block pools and
+    /// adapter registry from the surviving sequences' own block tables
+    /// and routes.  Mid-step refcounts cannot be trusted after an
+    /// unwind, so nothing is "released": the pools are recounted from
+    /// scratch, which both reclaims the victims' pages and repairs any
+    /// half-applied bookkeeping of the interrupted tick.  Healthy
+    /// sequences keep their caches, sampler state, and token history
+    /// untouched, so their streams continue bitwise unchanged.
+    pub fn quarantine(&mut self, key: Option<u64>) -> Vec<StepEvent> {
+        let mut events = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let victim = match key {
+                Some(k) => self.active[i].req.key == k,
+                None => true,
+            };
+            if !victim {
+                i += 1;
+                continue;
+            }
+            let r = self.active.remove(i);
+            self.obs.metrics.quarantines_total.inc();
+            if let Some(c) = self.obs.metrics.finished("internal") {
+                c.inc();
+            }
+            events.push(StepEvent::Rejected {
+                key: r.req.key,
+                id: r.req.id,
+                code: "internal",
+                reason: "sequence quarantined after engine panic".to_string(),
+            });
+            // The cache is dropped, not released: the rebuild below
+            // recounts every page from the survivors.
+        }
+        self.pool.rebuild(self.active.iter().map(|r| r.cache.table()));
+        if let Some(se) = self.spec.as_mut() {
+            se.pool.rebuild(
+                self.active.iter().filter_map(|r| r.draft.as_ref().map(|d| d.cache.table())),
+            );
+        }
+        self.registry
+            .rebuild_refs(self.active.iter().filter_map(|r| r.req.adapter.as_deref()));
+        events
+    }
+
     /// Longest shareable prompt prefix for `prompt` among live sequences
     /// and this tick's earlier admissions.  Returns positions to map.
     /// Active donors share any length (their rows are committed, so a
@@ -485,10 +623,21 @@ impl<'m> Scheduler<'m> {
         let mut staged: Vec<Staged> = Vec::new();
         while self.active.len() + staged.len() < self.cfg.max_batch {
             let Some(mut req) = self.pending.pop_front() else { break };
+            if req.deadline.is_some_and(|d| t_admit >= d) {
+                self.obs.metrics.deadline_expirations_total.inc();
+                events.push(StepEvent::Rejected {
+                    key: req.key,
+                    id: req.id,
+                    code: "deadline",
+                    reason: "deadline expired before admission".to_string(),
+                });
+                continue;
+            }
             if req.prompt.is_empty() {
                 events.push(StepEvent::Rejected {
                     key: req.key,
                     id: req.id,
+                    code: "bad_request",
                     reason: "empty prompt".to_string(),
                 });
                 continue;
@@ -497,6 +646,7 @@ impl<'m> Scheduler<'m> {
                 events.push(StepEvent::Rejected {
                     key: req.key,
                     id: req.id,
+                    code: "bad_request",
                     reason: format!(
                         "prompt length {} > max {}",
                         req.prompt.len(),
@@ -505,7 +655,19 @@ impl<'m> Scheduler<'m> {
                 });
                 continue;
             }
-            req.max_new = req.max_new.clamp(1, self.cfg.max_new_cap);
+            if req.max_new > self.cfg.max_new_cap {
+                events.push(StepEvent::Rejected {
+                    key: req.key,
+                    id: req.id,
+                    code: "bad_request",
+                    reason: format!(
+                        "max_new {} > server cap {} (--max-new-cap)",
+                        req.max_new, self.cfg.max_new_cap
+                    ),
+                });
+                continue;
+            }
+            req.max_new = req.max_new.max(1);
 
             // Resolve + refcount the routed adapter.  Unknown (or
             // draining) names reject here — the client gets an error
@@ -519,6 +681,7 @@ impl<'m> Scheduler<'m> {
                         events.push(StepEvent::Rejected {
                             key: req.key,
                             id: req.id,
+                            code: "bad_request",
                             reason: e.to_string(),
                         });
                         continue;
@@ -555,6 +718,7 @@ impl<'m> Scheduler<'m> {
                     events.push(StepEvent::Rejected {
                         key: req.key,
                         id: req.id,
+                        code: "bad_request",
                         reason: format!(
                             "prompt needs {} KV blocks, pool budget is {}",
                             req.prompt.len().div_ceil(self.pool.block_size()),
@@ -669,6 +833,7 @@ impl<'m> Scheduler<'m> {
         let spec_before = self.spec.as_ref().map(|se| se.counters);
 
         let mut events = Vec::new();
+        self.sweep_deadlines(tick0, &mut events);
         self.admit(&mut events, &mut rec)?;
         rec.batch = self.active.len();
         rec.pending = self.pending.len();
@@ -699,6 +864,13 @@ impl<'m> Scheduler<'m> {
             let mut capacity_hit = false;
             for (i, r) in self.active.iter_mut().enumerate() {
                 if r.finish.is_none() && !handled[i] {
+                    // Fault harness: the per-sequence tick checkpoint.
+                    // Panics with a SeqPanic payload naming this
+                    // sequence; the engine catches it and quarantines
+                    // exactly this sequence.
+                    if let Some(f) = &self.fault {
+                        crate::obs::fault::maybe_tick_panic(f, r.req.key);
+                    }
                     // Grow this sequence's table by (at most) one page
                     // up front so a budget miss finishes ONE sequence
                     // with `capacity` instead of failing the batch.

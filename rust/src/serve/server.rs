@@ -3,17 +3,44 @@
 //! Thread layout:
 //!
 //! * **engine** — owns the [`Scheduler`]; drains submissions from an mpsc
-//!   channel (non-blocking while the batch is busy, blocking when idle so
-//!   an idle server burns no CPU), runs one scheduler step per iteration,
-//!   and routes rendered frames to each request's connection writer.
-//!   Requests whose client vanished are cancelled at the next step.
+//!   channel (non-blocking while the batch is busy, short-timeout blocking
+//!   when idle so an idle server burns almost no CPU yet still notices
+//!   drain signals), runs one scheduler step per iteration inside
+//!   `catch_unwind`, and routes rendered frames to each request's
+//!   connection writer.  Requests whose client vanished are cancelled at
+//!   the next step.
 //! * **accept** — one `TcpListener::accept` loop; spawns a reader +
 //!   writer thread pair per connection.
 //! * **per-connection reader** — parses newline-delimited JSON requests
-//!   and forwards them to the engine with a clone of the connection's
-//!   frame sender.
+//!   (bounded by `--max-line`) and forwards them to the engine with a
+//!   clone of the connection's frame sender.
 //! * **per-connection writer** — serializes frames back to the socket,
 //!   flushing per line so tokens stream as they are produced.
+//!
+//! Fault tolerance (see the README "Fault tolerance" section):
+//!
+//! * **Overload control** — the scheduler's submission queue is bounded
+//!   (`--max-pending`); a full queue answers with an `overloaded` error
+//!   frame carrying `retry_after_ms` instead of queueing unboundedly.
+//!   Each connection's output queue is bounded too (`--out-queue`); a
+//!   client that stops reading accumulates an engine-side backlog and is
+//!   evicted after `--slow-reader-ms`, releasing its KV pages.
+//! * **Deadlines** — requests carry `deadline_ms` (default
+//!   `--deadline-ms`); expired requests are rejected at admission or
+//!   finished with `"finish":"deadline"` mid-decode.
+//! * **Panic isolation** — a panic inside `Scheduler::step` is caught,
+//!   the offending sequence is quarantined with an `internal` error
+//!   frame, and the block pool / adapter refcounts are rebuilt from the
+//!   survivors.  Only if the quarantine itself panics does the engine
+//!   poison: it refuses new work with `unavailable` and keeps answering
+//!   stats/metrics.
+//! * **Graceful drain** — SIGINT/SIGTERM or `{"cmd":"drain"}` stops
+//!   admissions, finishes in-flight sequences, flushes the trace
+//!   journal, and exits 0.
+//! * **Fault injection** — `--fault SPEC` / `REPRO_FAULT` arms the
+//!   deterministic harness in [`crate::obs::fault`]; with no spec (or a
+//!   zero-rate spec) every code path below is byte-identical to a
+//!   fault-free build.
 //!
 //! Binding to port 0 picks an ephemeral port; the bound address is
 //! printed as `serve: listening on <addr>` (the CI smoke test scrapes
@@ -27,22 +54,30 @@
 //! None of it touches compute or RNG state, so token streams are byte
 //! identical with everything enabled (CI `cmp`s the transcripts).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::fs::OpenOptions;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::infer::{AdapterSet, PackedModel};
 use crate::model::checkpoint;
-use crate::obs::{profile, prom, Telemetry, DEFAULT_TRACE_CAP};
-use crate::serve::protocol::{self, AdapterOp, ClientLine, EngineSnapshot, WireRequest};
+use crate::obs::{profile, prom, FaultPlan, FaultPoint, SeqPanic, Telemetry, DEFAULT_TRACE_CAP};
+use crate::serve::protocol::{self, code, AdapterOp, ClientLine, EngineSnapshot, WireRequest};
 use crate::serve::scheduler::{GenRequest, SchedConfig, Scheduler, StepEvent};
+
+/// Default cap on one request line, bytes (`--max-line`).
+pub const DEFAULT_MAX_LINE: usize = 1 << 20;
+/// Default per-connection output queue depth, frames (`--out-queue`).
+pub const DEFAULT_OUT_QUEUE: usize = 1024;
+/// Default grace before a backlogged connection is evicted, ms
+/// (`--slow-reader-ms`).
+pub const DEFAULT_SLOW_READER_MS: u64 = 2000;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -69,6 +104,19 @@ pub struct ServeOptions {
     pub profile: bool,
     /// Tick-trace ring capacity (`--trace-cap`).
     pub trace_cap: usize,
+    /// Fault-injection spec (`--fault`, grammar in [`crate::obs::fault`]);
+    /// `None` falls back to the `REPRO_FAULT` env var, and an unarmed
+    /// spec leaves every injection point off.
+    pub fault: Option<String>,
+    /// Reject request lines longer than this many bytes (`--max-line`).
+    pub max_line: usize,
+    /// Bounded per-connection output queue depth (`--out-queue`).  When
+    /// the queue is full the engine keeps a backlog and starts the
+    /// slow-reader clock instead of blocking the batch.
+    pub out_queue: usize,
+    /// How long a connection may stay backlogged before it is evicted
+    /// and its sequences cancelled (`--slow-reader-ms`; 0 = immediate).
+    pub slow_reader_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -82,23 +130,67 @@ impl Default for ServeOptions {
             trace_log: None,
             profile: false,
             trace_cap: DEFAULT_TRACE_CAP,
+            fault: None,
+            max_line: DEFAULT_MAX_LINE,
+            out_queue: DEFAULT_OUT_QUEUE,
+            slow_reader_ms: DEFAULT_SLOW_READER_MS,
         }
     }
 }
 
 enum EngineMsg {
-    Submit { wire: WireRequest, queued_at: Instant, out: Sender<String> },
+    Submit { wire: WireRequest, queued_at: Instant, conn: u64, out: SyncSender<String> },
     /// One-off stats query: the engine renders a stats frame (KV block
     /// accounting + queue state) straight back to this connection.
-    Stats { out: Sender<String> },
+    Stats { out: SyncSender<String> },
     /// Runtime registry change; the ack (or error) frame goes straight
     /// back to this connection.
-    Adapter { op: AdapterOp, name: String, path: Option<String>, out: Sender<String> },
+    Adapter { op: AdapterOp, name: String, path: Option<String>, out: SyncSender<String> },
     /// Full telemetry registry snapshot rendered as one JSON frame.
-    Metrics { out: Sender<String> },
+    Metrics { out: SyncSender<String> },
     /// Last `n` scheduler tick records from the trace ring.
-    Trace { n: usize, out: Sender<String> },
+    Trace { n: usize, out: SyncSender<String> },
+    /// Begin a graceful drain: stop admitting, finish in-flight work,
+    /// then exit the engine loop.
+    Drain { out: SyncSender<String> },
     Shutdown,
+}
+
+/// Monotonic connection ids, assigned by the reader threads.
+static NEXT_CONN: AtomicU64 = AtomicU64::new(1);
+
+/// Process-wide drain signal (SIGINT/SIGTERM).  Installed only by
+/// [`run`] — in-process test servers never touch signal disposition.
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static DRAIN: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn on_signal(_sig: i32) {
+        // Async-signal-safe: one atomic store, nothing else.
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+
+    pub fn drain_requested() -> bool {
+        DRAIN.load(Ordering::SeqCst)
+    }
 }
 
 /// Handle on a running server (in-process tests + clean shutdown).
@@ -130,7 +222,8 @@ impl Server {
         let _ = self.engine.join();
     }
 
-    /// Block until the engine exits (a client sent `{"cmd":"shutdown"}`).
+    /// Block until the engine exits (a client sent `{"cmd":"shutdown"}`
+    /// or a drain completed).
     pub fn wait(self) {
         let _ = self.engine.join();
         self.stopping.store(true, Ordering::SeqCst);
@@ -172,6 +265,22 @@ pub fn spawn_with_draft(
         set.name = name.clone();
         preload.push(set);
     }
+
+    // Parse the fault spec up front so a typo fails the boot, not the
+    // first injection.  An unarmed plan (all rates zero) is dropped so
+    // the hot paths keep their no-fault branch.
+    let fault_spec = opts.fault.clone().or_else(|| std::env::var("REPRO_FAULT").ok());
+    let fault: Option<Arc<FaultPlan>> = match fault_spec.as_deref().map(str::trim) {
+        Some(spec) if !spec.is_empty() => {
+            let plan = FaultPlan::parse(spec)?;
+            if plan.is_armed() {
+                Some(Arc::new(plan))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    };
 
     let listener = TcpListener::bind(&opts.addr)
         .map_err(|e| Error::io(format!("bind {}: {e}", opts.addr)))?;
@@ -226,13 +335,20 @@ pub fn spawn_with_draft(
 
     let sched_cfg = opts.sched;
     let engine_obs = Arc::clone(&obs);
+    let engine_fault = fault.clone();
+    let slow_reader = Duration::from_millis(opts.slow_reader_ms);
     let engine = std::thread::spawn(move || {
-        run_engine(model, draft, sched_cfg, preload, rx, engine_obs, trace)
+        run_engine(model, draft, sched_cfg, preload, rx, engine_obs, trace, engine_fault, slow_reader)
     });
 
     let accept_tx = tx.clone();
     let accept_stop = Arc::clone(&stopping);
-    let allow_shutdown = opts.allow_remote_shutdown;
+    let conn_opts = ConnOpts {
+        allow_shutdown: opts.allow_remote_shutdown,
+        max_line: opts.max_line.max(1),
+        out_queue: opts.out_queue.max(1),
+        fault,
+    };
     let accept = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if accept_stop.load(Ordering::SeqCst) {
@@ -241,7 +357,8 @@ pub fn spawn_with_draft(
             match conn {
                 Ok(stream) => {
                     let tx = accept_tx.clone();
-                    std::thread::spawn(move || handle_conn(stream, tx, allow_shutdown));
+                    let o = conn_opts.clone();
+                    std::thread::spawn(move || handle_conn(stream, tx, o));
                 }
                 Err(_) => break,
             }
@@ -299,13 +416,16 @@ fn serve_metrics_conn(stream: TcpStream, obs: &Telemetry) {
     let _ = w.flush();
 }
 
-/// Blocking entry point for the `repro serve` CLI.
+/// Blocking entry point for the `repro serve` CLI.  Installs the
+/// SIGINT/SIGTERM drain handler (in-process test servers do not).
 pub fn run(
     model: Arc<PackedModel>,
     draft: Option<Arc<PackedModel>>,
     opts: ServeOptions,
 ) -> Result<()> {
+    sig::install();
     let adapter_names: Vec<String> = opts.adapters.iter().map(|(n, _)| n.clone()).collect();
+    let fault_spec = opts.fault.clone().or_else(|| std::env::var("REPRO_FAULT").ok());
     let server = spawn_with_draft(model, draft, opts)?;
     println!("serve: listening on {}", server.addr);
     if let Some(maddr) = server.metrics_addr {
@@ -319,6 +439,9 @@ pub fn run(
             adapter_names.join(", ")
         );
     }
+    if let Some(spec) = fault_spec.as_deref().map(str::trim).filter(|s| !s.is_empty()) {
+        println!("serve: fault injection armed: {spec}");
+    }
     // Line-buffered stdout under redirection: flush so the CI smoke test
     // sees the address immediately.
     let _ = std::io::stdout().flush();
@@ -327,6 +450,180 @@ pub fn run(
     Ok(())
 }
 
+/// Engine-side view of one client connection.  Frames are pushed with
+/// `try_send` so a slow reader can never block the batch; overflow goes
+/// to `backlog` and starts the eviction clock.
+struct ConnState {
+    tx: SyncSender<String>,
+    backlog: VecDeque<String>,
+    /// When the connection first became backlogged; cleared once the
+    /// backlog fully drains.
+    stalled_since: Option<Instant>,
+}
+
+enum Push {
+    /// Frame delivered (or backlogged after a still-draining backlog).
+    Ok,
+    /// Queue full: frame backlogged, eviction clock running.
+    Full,
+    /// Writer gone: connection must be dropped.
+    Dead,
+}
+
+/// Try to drain `conn.backlog` into its bounded channel.  Returns false
+/// if the writer disconnected.
+fn flush_backlog(conn: &mut ConnState) -> bool {
+    while let Some(front) = conn.backlog.pop_front() {
+        match conn.tx.try_send(front) {
+            Ok(()) => continue,
+            Err(TrySendError::Full(front)) => {
+                conn.backlog.push_front(front);
+                break;
+            }
+            Err(TrySendError::Disconnected(_)) => return false,
+        }
+    }
+    true
+}
+
+/// Push one frame to a connection without ever blocking the engine.
+fn conn_push(conn: &mut ConnState, line: String, now: Instant) -> Push {
+    if !flush_backlog(conn) {
+        return Push::Dead;
+    }
+    if conn.backlog.is_empty() {
+        match conn.tx.try_send(line) {
+            Ok(()) => {
+                conn.stalled_since = None;
+                return Push::Ok;
+            }
+            Err(TrySendError::Full(line)) => conn.backlog.push_back(line),
+            Err(TrySendError::Disconnected(_)) => return Push::Dead,
+        }
+    } else {
+        conn.backlog.push_back(line);
+    }
+    if conn.stalled_since.is_none() {
+        conn.stalled_since = Some(now);
+    }
+    Push::Full
+}
+
+/// Mutable engine state outside the scheduler: connection routing,
+/// drain/poison flags, and the armed fault plan.
+struct EngineState {
+    /// request key -> connection id.
+    outs: HashMap<u64, u64>,
+    /// connection id -> output queue + backlog.
+    conns: HashMap<u64, ConnState>,
+    next_key: u64,
+    draining: bool,
+    /// Quarantine itself failed: scheduler state is untrusted.  Refuse
+    /// generation work with `unavailable`, keep answering queries.
+    poisoned: bool,
+    fault: Option<Arc<FaultPlan>>,
+    /// Fault-plan fire count already mirrored into the metric.
+    fired_seen: u64,
+    slow_reader: Duration,
+}
+
+/// Cancel every sequence routed to `cid` and forget the connection.
+fn drop_conn(cid: u64, sched: &mut Scheduler<'_>, st: &mut EngineState) {
+    st.conns.remove(&cid);
+    let keys: Vec<u64> =
+        st.outs.iter().filter(|(_, c)| **c == cid).map(|(k, _)| *k).collect();
+    for k in keys {
+        sched.cancel(k);
+        st.outs.remove(&k);
+    }
+}
+
+/// Per-iteration connection upkeep: retry backlogs, evict readers that
+/// have been stalled past the budget, and garbage-collect connections
+/// with no live requests and nothing left to deliver (dropping the
+/// engine's sender lets the writer thread exit).
+fn maintain_conns(sched: &mut Scheduler<'_>, st: &mut EngineState) {
+    let now = Instant::now();
+    let mut dead: Vec<u64> = Vec::new();
+    let mut slow: Vec<u64> = Vec::new();
+    for (&cid, conn) in st.conns.iter_mut() {
+        if !flush_backlog(conn) {
+            dead.push(cid);
+            continue;
+        }
+        if conn.backlog.is_empty() {
+            conn.stalled_since = None;
+        } else if conn
+            .stalled_since
+            .is_some_and(|t| now.duration_since(t) >= st.slow_reader)
+        {
+            slow.push(cid);
+        }
+    }
+    for cid in dead {
+        drop_conn(cid, sched, st);
+    }
+    for cid in slow {
+        sched.obs().metrics.slow_reader_evictions_total.inc();
+        drop_conn(cid, sched, st);
+    }
+    let live: HashSet<u64> = st.outs.values().copied().collect();
+    st.conns.retain(|cid, c| live.contains(cid) || !c.backlog.is_empty());
+}
+
+/// Route one step's events to their connections.
+fn route_events(events: &[StepEvent], sched: &mut Scheduler<'_>, st: &mut EngineState) {
+    let now = Instant::now();
+    for ev in events {
+        let (key, finished) = match ev {
+            StepEvent::Token { key, .. } => (*key, false),
+            StepEvent::Done { key, .. } => (*key, true),
+            StepEvent::Rejected { key, .. } => (*key, true),
+        };
+        let Some(&cid) = st.outs.get(&key) else { continue };
+        let line = protocol::event_frame(ev);
+        let outcome = match st.conns.get_mut(&cid) {
+            Some(conn) => conn_push(conn, line, now),
+            None => {
+                st.outs.remove(&key);
+                continue;
+            }
+        };
+        match outcome {
+            Push::Dead => drop_conn(cid, sched, st),
+            Push::Ok | Push::Full => {
+                if finished {
+                    st.outs.remove(&key);
+                }
+            }
+        }
+    }
+}
+
+/// Best-effort broadcast of one frame to every connection with in-flight
+/// work, then forget all request routing.
+fn broadcast_and_clear(frame: &str, st: &mut EngineState) {
+    let cids: HashSet<u64> = st.outs.values().copied().collect();
+    for cid in cids {
+        if let Some(conn) = st.conns.get_mut(&cid) {
+            let _ = conn.tx.try_send(frame.to_string());
+        }
+    }
+    st.outs.clear();
+}
+
+/// Mirror the fault plan's fire count into `faults_injected_total`.
+fn sync_fault_metric(sched: &Scheduler<'_>, st: &mut EngineState) {
+    if let Some(f) = &st.fault {
+        let total = f.fired();
+        if total > st.fired_seen {
+            sched.obs().metrics.faults_injected_total.add(total - st.fired_seen);
+            st.fired_seen = total;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_engine(
     model: Arc<PackedModel>,
     draft: Option<Arc<PackedModel>>,
@@ -335,12 +632,17 @@ fn run_engine(
     rx: Receiver<EngineMsg>,
     obs: Arc<Telemetry>,
     mut trace: Option<BufWriter<std::fs::File>>,
+    fault: Option<Arc<FaultPlan>>,
+    slow_reader: Duration,
 ) {
     let mut sched = match draft {
         Some(d) if cfg.speculate > 0 => Scheduler::with_draft(&model, cfg, d),
         _ => Scheduler::new(&model, cfg),
     };
     sched.attach_obs(obs);
+    if let Some(plan) = &fault {
+        sched.set_fault(Arc::clone(plan));
+    }
     // Names were validated in `spawn_with_draft`; a load can only fail on
     // a duplicate, which the pre-check excluded.
     for set in preload {
@@ -348,15 +650,33 @@ fn run_engine(
             eprintln!("serve: adapter preload failed: {e}");
         }
     }
-    let mut outs: HashMap<u64, Sender<String>> = HashMap::new();
-    let mut next_key = 1u64;
+    let mut st = EngineState {
+        outs: HashMap::new(),
+        conns: HashMap::new(),
+        next_key: 1,
+        draining: false,
+        poisoned: false,
+        fault,
+        fired_seen: 0,
+        slow_reader,
+    };
     'engine: loop {
-        // Drain submissions: block when idle, poll when the batch is hot.
+        if sig::drain_requested() && !st.draining {
+            st.draining = true;
+            println!(
+                "serve: draining ({} in flight; signal)",
+                sched.n_pending() + sched.n_active()
+            );
+            let _ = std::io::stdout().flush();
+        }
+
+        // Drain submissions: short-timeout block when idle (so signals
+        // and backlogs are still noticed), poll when the batch is hot.
         if sched.has_work() {
             loop {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if !handle_msg(msg, &model, &mut sched, &mut outs, &mut next_key) {
+                        if !handle_msg(msg, &model, &mut sched, &mut st) {
                             break 'engine;
                         }
                     }
@@ -365,62 +685,103 @@ fn run_engine(
                 }
             }
         } else {
-            match rx.recv() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(msg) => {
-                    if !handle_msg(msg, &model, &mut sched, &mut outs, &mut next_key) {
+                    if !handle_msg(msg, &model, &mut sched, &mut st) {
                         break 'engine;
                     }
                 }
-                Err(_) => break 'engine,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break 'engine,
             }
         }
 
-        if !sched.has_work() {
-            continue;
-        }
-        match sched.step() {
-            Ok(events) => {
-                // Journal the tick before routing frames; a failed write
-                // disables the journal, never the engine.
-                if let Some(mut w) = trace.take() {
-                    match sched.obs().last_tick() {
-                        Some(rec)
-                            if writeln!(w, "{}", rec.to_json().render()).is_err()
-                                || w.flush().is_err() =>
-                        {
-                            eprintln!("serve: trace-log write failed; journal disabled");
+        if sched.has_work() && !st.poisoned {
+            let stepped =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sched.step()));
+            match stepped {
+                Ok(Ok(events)) => {
+                    // Journal the tick before routing frames; a failed
+                    // write disables the journal, never the engine.
+                    if let Some(mut w) = trace.take() {
+                        match sched.obs().last_tick() {
+                            Some(rec)
+                                if writeln!(w, "{}", rec.to_json().render()).is_err()
+                                    || w.flush().is_err() =>
+                            {
+                                eprintln!("serve: trace-log write failed; journal disabled");
+                            }
+                            _ => trace = Some(w),
                         }
-                        _ => trace = Some(w),
                     }
+                    route_events(&events, &mut sched, &mut st);
                 }
-                for ev in &events {
-                    let (key, finished) = match ev {
-                        StepEvent::Token { key, .. } => (*key, false),
-                        StepEvent::Done { key, .. } => (*key, true),
-                        StepEvent::Rejected { key, .. } => (*key, true),
-                    };
-                    let line = protocol::event_frame(ev);
-                    let delivered = outs.get(&key).map(|out| out.send(line).is_ok());
-                    if delivered == Some(false) {
-                        // Client is gone: stop decoding for it.
-                        sched.cancel(key);
-                        outs.remove(&key);
-                    } else if finished {
-                        outs.remove(&key);
+                Ok(Err(e)) => {
+                    // A step failure poisons the whole batch (model-level
+                    // error): notify every waiter and reset.
+                    let frame = protocol::error_frame(
+                        "",
+                        code::INTERNAL,
+                        &format!("engine step failed: {e}"),
+                    );
+                    broadcast_and_clear(&frame, &mut st);
+                    sched.clear();
+                }
+                Err(payload) => {
+                    // A panic mid-step: quarantine the offending sequence
+                    // (all sequences if the panic carries no attribution)
+                    // and rebuild pool/registry bookkeeping from the
+                    // survivors.  The engine keeps serving.
+                    let key = payload.downcast_ref::<SeqPanic>().map(|p| p.key);
+                    match key {
+                        Some(k) => eprintln!("serve: tick panicked (seq {k}); quarantining"),
+                        None => eprintln!("serve: tick panicked; quarantining batch"),
+                    }
+                    let recovered = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || sched.quarantine(key),
+                    ));
+                    match recovered {
+                        Ok(events) => route_events(&events, &mut sched, &mut st),
+                        Err(_) => {
+                            // Quarantine itself panicked: scheduler state
+                            // is untrusted.  Poison — refuse generation
+                            // work but keep answering queries.
+                            eprintln!("serve: quarantine failed; engine poisoned");
+                            st.poisoned = true;
+                            let frame = protocol::error_frame(
+                                "",
+                                code::INTERNAL,
+                                "engine poisoned after failed quarantine",
+                            );
+                            broadcast_and_clear(&frame, &mut st);
+                        }
                     }
                 }
             }
-            Err(e) => {
-                // A step failure poisons the whole batch (model-level
-                // error): notify every waiter and reset.
-                let frame = protocol::error_frame("", &format!("engine step failed: {e}"));
-                for (_, out) in outs.drain() {
-                    let _ = out.send(frame.clone());
-                }
-                sched.clear();
+        }
+
+        maintain_conns(&mut sched, &mut st);
+        sync_fault_metric(&sched, &mut st);
+
+        if st.draining
+            && (st.poisoned || !sched.has_work())
+            && st.conns.values().all(|c| c.backlog.is_empty())
+        {
+            if let Some(mut w) = trace.take() {
+                let _ = w.flush();
             }
+            println!("serve: drained; {} request(s) completed", sched.n_completed());
+            let _ = std::io::stdout().flush();
+            break 'engine;
         }
     }
+}
+
+/// Suggested client backoff when the submission queue is full: scales
+/// with queue depth so a deeper queue pushes retries further out.
+fn retry_after_ms(sched: &Scheduler<'_>) -> u64 {
+    let batch = sched.config().max_batch.max(1) as u64;
+    (10 + (sched.n_pending() as u64 * 5) / batch).min(1000)
 }
 
 /// Returns false when the engine should exit.
@@ -428,15 +789,28 @@ fn handle_msg(
     msg: EngineMsg,
     model: &PackedModel,
     sched: &mut Scheduler<'_>,
-    outs: &mut HashMap<u64, Sender<String>>,
-    next_key: &mut u64,
+    st: &mut EngineState,
 ) -> bool {
     match msg {
-        EngineMsg::Submit { wire, queued_at, out } => {
-            let key = *next_key;
-            *next_key += 1;
-            outs.insert(key, out);
-            sched.submit(GenRequest {
+        EngineMsg::Submit { wire, queued_at, conn, out } => {
+            if st.poisoned || st.draining {
+                let reason = if st.poisoned {
+                    "engine poisoned; refusing new work"
+                } else {
+                    "server draining"
+                };
+                let _ =
+                    out.try_send(protocol::error_frame(&wire.id, code::UNAVAILABLE, reason));
+                return true;
+            }
+            let default_ms = sched.config().deadline_ms;
+            let deadline = wire
+                .deadline_ms
+                .or(if default_ms > 0 { Some(default_ms) } else { None })
+                .map(|ms| queued_at + Duration::from_millis(ms));
+            let key = st.next_key;
+            st.next_key += 1;
+            let req = GenRequest {
                 key,
                 id: wire.id,
                 prompt: wire.prompt,
@@ -445,7 +819,24 @@ fn handle_msg(
                 stop: wire.stop,
                 adapter: wire.adapter,
                 queued_at,
-            });
+                deadline,
+            };
+            match sched.try_submit(req) {
+                Ok(()) => {
+                    st.conns.entry(conn).or_insert_with(|| ConnState {
+                        tx: out,
+                        backlog: VecDeque::new(),
+                        stalled_since: None,
+                    });
+                    st.outs.insert(key, conn);
+                }
+                Err(req) => {
+                    let _ = out.try_send(protocol::overloaded_frame(
+                        &req.id,
+                        retry_after_ms(sched),
+                    ));
+                }
+            }
             true
         }
         EngineMsg::Stats { out } => {
@@ -464,29 +855,34 @@ fn handle_msg(
                 build: &build,
                 uptime_secs: sched.obs().uptime_secs(),
             });
-            let _ = out.send(frame);
+            let _ = out.try_send(frame);
             true
         }
         EngineMsg::Metrics { out } => {
-            let _ = out.send(protocol::metrics_frame(sched.obs()));
+            let _ = out.try_send(protocol::metrics_frame(sched.obs()));
             true
         }
         EngineMsg::Trace { n, out } => {
             let (total, ticks) = sched.obs().last_ticks(n);
-            let _ = out.send(protocol::trace_frame(total, &ticks));
+            let _ = out.try_send(protocol::trace_frame(total, &ticks));
             true
         }
         EngineMsg::Adapter { op, name, path, out } => {
             let result = match op {
-                AdapterOp::Load => path
-                    .as_deref()
-                    .ok_or_else(|| Error::config("adapter load needs a path"))
-                    .and_then(|p| checkpoint::load_adapter(p, &model.cfg))
-                    .and_then(|mut set| {
-                        set.name = name.clone();
-                        sched.adapters_mut().load(set)
-                    })
-                    .map(|()| "loaded"),
+                AdapterOp::Load => {
+                    if st.fault.as_ref().is_some_and(|f| f.fires(FaultPoint::AdapterIo)) {
+                        Err(Error::io("injected fault: adapter load I/O failure"))
+                    } else {
+                        path.as_deref()
+                            .ok_or_else(|| Error::config("adapter load needs a path"))
+                            .and_then(|p| checkpoint::load_adapter(p, &model.cfg))
+                            .and_then(|mut set| {
+                                set.name = name.clone();
+                                sched.adapters_mut().load(set)
+                            })
+                            .map(|()| "loaded")
+                    }
+                }
                 AdapterOp::Unload => sched.adapters_mut().unload(&name).map(|now| {
                     if now {
                         "unloaded"
@@ -497,87 +893,207 @@ fn handle_msg(
             };
             let frame = match result {
                 Ok(status) => protocol::adapter_frame(op, &name, status),
-                Err(e) => protocol::error_frame("", &e.to_string()),
+                Err(e) => protocol::error_frame("", code::BAD_REQUEST, &e.to_string()),
             };
-            let _ = out.send(frame);
+            let _ = out.try_send(frame);
+            true
+        }
+        EngineMsg::Drain { out } => {
+            if !st.draining {
+                st.draining = true;
+                println!(
+                    "serve: draining ({} in flight)",
+                    sched.n_pending() + sched.n_active()
+                );
+                let _ = std::io::stdout().flush();
+            }
+            let _ = out.try_send(protocol::drain_frame(
+                "draining",
+                sched.n_pending() + sched.n_active(),
+            ));
             true
         }
         EngineMsg::Shutdown => false,
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<EngineMsg>, allow_shutdown: bool) {
+/// Per-connection settings snapshot handed to each reader thread.
+#[derive(Clone)]
+struct ConnOpts {
+    allow_shutdown: bool,
+    max_line: usize,
+    out_queue: usize,
+    fault: Option<Arc<FaultPlan>>,
+}
+
+enum LineRead {
+    /// One complete line is in the buffer (trailing `\n` stripped).
+    Line,
+    /// Clean end of stream.
+    Eof,
+    /// The line exceeded `max_line`; the remainder was discarded up to
+    /// the next newline.
+    TooLong,
+    /// Transport error; the connection is unusable.
+    IoErr,
+}
+
+/// Read one newline-terminated line of at most `max` bytes.  Oversized
+/// lines are discarded to the next newline so one hostile line cannot
+/// buffer unboundedly or desync the stream.
+fn read_client_line(r: &mut impl BufRead, buf: &mut Vec<u8>, max: usize) -> LineRead {
+    match r.by_ref().take(max as u64 + 1).read_until(b'\n', buf) {
+        Ok(0) => LineRead::Eof,
+        Ok(_) => {
+            if buf.last() == Some(&b'\n') {
+                buf.pop();
+                if buf.len() > max {
+                    return LineRead::TooLong;
+                }
+                return LineRead::Line;
+            }
+            if buf.len() > max {
+                // Skip the rest of the oversized line.
+                loop {
+                    let (done, used) = match r.fill_buf() {
+                        Ok(chunk) if chunk.is_empty() => (true, 0),
+                        Ok(chunk) => match chunk.iter().position(|&b| b == b'\n') {
+                            Some(pos) => (true, pos + 1),
+                            None => (false, chunk.len()),
+                        },
+                        Err(_) => (true, 0),
+                    };
+                    r.consume(used);
+                    if done {
+                        break;
+                    }
+                }
+                LineRead::TooLong
+            } else {
+                // Final line without a trailing newline (EOF).
+                LineRead::Line
+            }
+        }
+        Err(_) => LineRead::IoErr,
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<EngineMsg>, o: ConnOpts) {
+    let conn_id = NEXT_CONN.fetch_add(1, Ordering::Relaxed);
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
-    let (otx, orx) = mpsc::channel::<String>();
+    let (otx, orx) = mpsc::sync_channel::<String>(o.out_queue);
+    let wfault = o.fault.clone();
     let writer = std::thread::spawn(move || {
         let mut w = BufWriter::new(write_half);
         for line in orx {
+            if wfault.as_ref().is_some_and(|f| f.fires(FaultPoint::ConnWrite)) {
+                break; // injected write failure: drop the connection
+            }
             if w.write_all(line.as_bytes()).is_err()
                 || w.write_all(b"\n").is_err()
                 || w.flush().is_err()
             {
-                break; // client hung up; engine cancels on next send
+                break; // client hung up; engine cancels on next push
             }
         }
     });
 
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        let line = line.trim();
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        match read_client_line(&mut reader, &mut buf, o.max_line) {
+            LineRead::Eof | LineRead::IoErr => break,
+            LineRead::TooLong => {
+                let _ = otx.send(protocol::error_frame(
+                    "",
+                    code::BAD_REQUEST,
+                    &format!("request line exceeds --max-line ({} bytes)", o.max_line),
+                ));
+                continue;
+            }
+            LineRead::Line => {}
+        }
+        let Ok(text) = std::str::from_utf8(&buf) else {
+            let _ = otx.send(protocol::error_frame(
+                "",
+                code::BAD_REQUEST,
+                "request line is not valid UTF-8",
+            ));
+            continue;
+        };
+        let line = text.trim();
         if line.is_empty() {
             continue;
         }
         match protocol::parse_line(line) {
             Ok(ClientLine::Shutdown) => {
-                if allow_shutdown {
+                if o.allow_shutdown {
                     let _ = tx.send(EngineMsg::Shutdown);
                 } else {
-                    let _ = otx.send(protocol::error_frame("", "shutdown disabled"));
+                    let _ = otx.send(protocol::error_frame(
+                        "",
+                        code::UNAVAILABLE,
+                        "shutdown disabled",
+                    ));
                 }
                 break;
             }
+            Ok(ClientLine::Drain) => {
+                if tx.send(EngineMsg::Drain { out: otx.clone() }).is_err() {
+                    let _ = otx.send(engine_stopped_frame());
+                    break;
+                }
+            }
             Ok(ClientLine::Request(wire)) => {
-                let msg =
-                    EngineMsg::Submit { wire, queued_at: Instant::now(), out: otx.clone() };
+                let msg = EngineMsg::Submit {
+                    wire,
+                    queued_at: Instant::now(),
+                    conn: conn_id,
+                    out: otx.clone(),
+                };
                 if tx.send(msg).is_err() {
-                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    let _ = otx.send(engine_stopped_frame());
                     break;
                 }
             }
             Ok(ClientLine::Stats) => {
                 if tx.send(EngineMsg::Stats { out: otx.clone() }).is_err() {
-                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    let _ = otx.send(engine_stopped_frame());
                     break;
                 }
             }
             Ok(ClientLine::Metrics) => {
                 if tx.send(EngineMsg::Metrics { out: otx.clone() }).is_err() {
-                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    let _ = otx.send(engine_stopped_frame());
                     break;
                 }
             }
             Ok(ClientLine::Trace { n }) => {
                 if tx.send(EngineMsg::Trace { n, out: otx.clone() }).is_err() {
-                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    let _ = otx.send(engine_stopped_frame());
                     break;
                 }
             }
             Ok(ClientLine::Adapter { op, name, path }) => {
                 let msg = EngineMsg::Adapter { op, name, path, out: otx.clone() };
                 if tx.send(msg).is_err() {
-                    let _ = otx.send(protocol::error_frame("", "engine stopped"));
+                    let _ = otx.send(engine_stopped_frame());
                     break;
                 }
             }
             Err(e) => {
-                let _ = otx.send(protocol::error_frame("", &e.to_string()));
+                let _ = otx.send(protocol::error_frame("", code::BAD_REQUEST, &e.to_string()));
             }
         }
     }
     drop(otx);
     let _ = writer.join();
+}
+
+fn engine_stopped_frame() -> String {
+    protocol::error_frame("", code::UNAVAILABLE, "engine stopped")
 }

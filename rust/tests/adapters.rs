@@ -97,6 +97,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize, adapter: Option<&str>) -> Gen
         stop: None,
         adapter: adapter.map(String::from),
         queued_at: std::time::Instant::now(),
+        deadline: None,
     }
 }
 
@@ -409,6 +410,7 @@ fn server_routes_adapters_end_to_end() {
         allow_remote_shutdown: true,
         // boot preload: the CLI's repeatable `--adapter NAME=PATH`
         adapters: vec![("boot".to_string(), boot_path.to_string_lossy().into_owned())],
+        ..ServeOptions::default()
     };
     let server = repro::serve::server::spawn(Arc::new(model), opts).unwrap();
     let addr = server.addr.to_string();

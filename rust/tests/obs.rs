@@ -57,6 +57,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         stop: None,
         adapter: None,
         queued_at: std::time::Instant::now(),
+        deadline: None,
     }
 }
 

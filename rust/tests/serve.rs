@@ -172,6 +172,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         stop: None,
         adapter: None,
         queued_at: std::time::Instant::now(),
+        deadline: None,
     }
 }
 
@@ -273,14 +274,18 @@ fn scheduler_rejects_and_cancels() {
 
     sched.submit(req(1, vec![], 4)); // empty prompt
     sched.submit(req(2, vec![1; 10], 4)); // too long
-    sched.submit(req(3, tiny_prompt(1, 4, 50).data().to_vec(), 99)); // max_new clamped
+    sched.submit(req(3, tiny_prompt(1, 4, 50).data().to_vec(), 99)); // max_new over cap
+    sched.submit(req(4, tiny_prompt(1, 4, 50).data().to_vec(), 8)); // exactly at cap
     let events = drain(&mut sched);
 
     assert!(events.iter().any(|e| matches!(e, StepEvent::Rejected { key: 1, .. })));
     assert!(events.iter().any(|e| matches!(e, StepEvent::Rejected { key: 2, .. })));
-    let (_, _, finish) = done_of(&events, 3).expect("request 3 finishes");
+    // Over-cap max_new is an explicit rejection (documented contract),
+    // not a silent clamp.
+    assert!(events.iter().any(|e| matches!(e, StepEvent::Rejected { key: 3, .. })));
+    let (_, _, finish) = done_of(&events, 4).expect("request 4 finishes");
     assert_eq!(finish, FinishReason::Length);
-    assert_eq!(tokens_of(&events, 3).len(), 8, "max_new clamped to cap");
+    assert_eq!(tokens_of(&events, 4).len(), 8, "max_new == cap is admitted");
 
     // cancellation mid-stream
     let mut sched = Scheduler::new(&model, cfg);
@@ -385,6 +390,9 @@ fn server_streams_concurrent_requests() {
         adapter_mix: Vec::new(),
         churn_adapter: None,
         sample_ms: 2, // exercise the mid-run stats sampler
+        deadline_ms: 0,
+        request_timeout_ms: 0,
+        max_retries: 0,
     })
     .unwrap();
     assert_eq!(report.completed, 8, "all streams must complete");
@@ -508,6 +516,9 @@ fn server_shares_identical_prompt_prefixes() {
         adapter_mix: Vec::new(),
         churn_adapter: None,
         sample_ms: 0,
+        deadline_ms: 0,
+        request_timeout_ms: 0,
+        max_retries: 0,
     })
     .unwrap();
     assert_eq!(report.completed, 6);
