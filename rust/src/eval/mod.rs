@@ -4,5 +4,5 @@
 pub mod ppl;
 pub mod scoring;
 
-pub use ppl::{nll_from_logits, Evaluator, ModelMode};
+pub use ppl::{nll_from_logits, paged_stream_nll, perplexity_paged, Evaluator, ModelMode};
 pub use scoring::{accuracy_from_logits, mc_accuracy_from_logits};

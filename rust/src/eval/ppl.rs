@@ -10,6 +10,7 @@ use crate::infer::PackedModel;
 use crate::model::{ModelConfig, ParamStore};
 use crate::quant::QuantSpec;
 use crate::runtime::{Bindings, Runtime};
+use crate::serve::{BlockPool, KvLayout, KvStats, PagedKvCache};
 use crate::tensor::Tensor;
 
 /// Which model path evaluates the batch.
@@ -173,6 +174,81 @@ impl<'r> Evaluator<'r> {
         }
         Ok((nll / cnt).exp())
     }
+}
+
+/// Teacher-forced NLL of one token stream through the PAGED decode path
+/// under the pool's storage layout, chunk by chunk.  Fully-committed
+/// pages are sealed at every chunk boundary — the scheduler's
+/// end-of-tick policy — so under a quantized layout each chunk attends
+/// over dequantized sealed history exactly like the server would.
+/// Returns `(sum_nll, predictions)` so callers can aggregate
+/// `exp(nll / n)` across streams.
+pub fn paged_stream_nll(
+    model: &PackedModel,
+    tokens: &[i32],
+    chunk: usize,
+    pool: &mut BlockPool,
+) -> Result<(f64, f64)> {
+    let chunk = chunk.max(1);
+    let vocab = model.cfg.vocab;
+    let mut cache = PagedKvCache::new(pool);
+    let mut nll = 0.0f64;
+    let mut cnt = 0.0f64;
+    let mut pos = 0usize;
+    while pos < tokens.len() {
+        let take = chunk.min(tokens.len() - pos);
+        let logits = model.forward_chunk_paged(&tokens[pos..pos + take], &mut cache, pool)?;
+        let data = logits.data();
+        for i in 0..take {
+            // logits row i sits at absolute position pos+i and predicts
+            // the NEXT token; the final position has no target.
+            let Some(&next) = tokens.get(pos + i + 1) else { break };
+            let row = &data[i * vocab..(i + 1) * vocab];
+            let tgt = (next.max(0) as usize).min(vocab - 1);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let lse: f32 = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            nll += (lse - row[tgt]) as f64;
+            cnt += 1.0;
+        }
+        cache.seal_committed(pool);
+        pos += take;
+    }
+    cache.release_all(pool);
+    Ok((nll, cnt))
+}
+
+/// Perplexity across token streams via [`paged_stream_nll`] — the
+/// `kv_quant` harness entry.  Builds one pool with `layout`, feeds every
+/// stream through it (streams evaluated sequentially; the pool's peaks
+/// accumulate), and returns `exp(mean nll)` plus the final [`KvStats`]
+/// so callers can report peak resident KV bytes per layout.
+pub fn perplexity_paged(
+    model: &PackedModel,
+    streams: &[Vec<i32>],
+    chunk: usize,
+    block_size: usize,
+    blocks_total: usize,
+    layout: KvLayout,
+) -> Result<(f64, KvStats)> {
+    let mut pool = BlockPool::with_layout(
+        model.cfg.n_layers,
+        model.cfg.d_model,
+        block_size.max(1),
+        blocks_total,
+        layout,
+    );
+    let mut nll = 0.0f64;
+    let mut cnt = 0.0f64;
+    for toks in streams {
+        let (n, c) = paged_stream_nll(model, toks, chunk, &mut pool)?;
+        nll += n;
+        cnt += c;
+    }
+    let stats = pool.stats();
+    if cnt == 0.0 {
+        return Ok((f64::NAN, stats));
+    }
+    Ok(((nll / cnt).exp(), stats))
 }
 
 #[cfg(test)]

@@ -161,6 +161,127 @@ fn gemv_scalar(
     }
 }
 
+/// Borrowed view of a quantized KV page plane (or a contiguous row range
+/// of one): little-endian packed codes plus per-group scale / zero-point
+/// metadata, laid out row-major with `d` values per KV row and one
+/// `(scale, zero)` pair per `group` consecutive values.  The paged KV
+/// store hands these to the attention core so dequantization fuses into
+/// the segment walk; the kernels stay decoupled from `serve::block`'s
+/// storage struct the same way [`PackedView`] decouples them from
+/// `quant::pack`.
+#[derive(Clone, Copy)]
+pub struct KvQuantView<'a> {
+    /// Little-endian bit-packed codes for `rows * d` values.
+    pub codes: &'a [u8],
+    /// One scale per `group` consecutive values.
+    pub scales: &'a [f32],
+    /// One zero-point level per `group` consecutive values.
+    pub zeros: &'a [u8],
+    /// Values per KV row.
+    pub d: usize,
+    /// Values per scale/zero group (a head slice in the KV layout).
+    pub group: usize,
+    /// Code width.  The KV layouts pack 4 or 8, so a group never
+    /// straddles a byte; other widths fall back to [`unpack_run`].
+    pub bits: u32,
+}
+
+impl KvQuantView<'_> {
+    /// Code at value index `idx` (4-bit: low nibble first, matching
+    /// `quant::pack::pack_codes`).
+    #[inline]
+    pub fn code_at(&self, idx: usize) -> u32 {
+        match self.bits {
+            8 => self.codes[idx] as u32,
+            4 => ((self.codes[idx / 2] >> ((idx & 1) * 4)) & 0xF) as u32,
+            _ => {
+                let mut one = [0u32; 1];
+                unpack_run(self.codes, idx * self.bits as usize, self.bits as usize, &mut one);
+                one[0]
+            }
+        }
+    }
+
+    /// Dequantized value at index `idx`: `s * (q - z)`.
+    #[inline]
+    pub fn dq_at(&self, idx: usize) -> f32 {
+        let g = idx / self.group;
+        self.scales[g] * (self.code_at(idx) as f32 - self.zeros[g] as f32)
+    }
+}
+
+/// Validate the bounds the KV kernels rely on (the AVX2 path reads raw
+/// pointers).  O(1) integer compares; panics on violation.
+#[inline]
+fn check_kv_view(v: &KvQuantView<'_>, start: usize, n: usize) {
+    let end = start + n;
+    assert!(v.bits >= 1 && v.bits <= 8, "KvQuantView: bits {} not in 1..=8", v.bits);
+    assert!(v.group > 0, "KvQuantView: zero group");
+    assert!(
+        v.codes.len() * 8 >= end * v.bits as usize,
+        "KvQuantView: codes too short for value range {start}..{end}"
+    );
+    let groups = end.div_ceil(v.group);
+    assert!(v.scales.len() >= groups, "KvQuantView: scales too short");
+    assert!(v.zeros.len() >= groups, "KvQuantView: zeros too short");
+}
+
+/// Scalar KV dequant: values `[start, start + out.len())` of the view
+/// into `out`.  This is the oracle the AVX2 path must match bitwise.
+pub fn kv_dequant_scalar(v: &KvQuantView<'_>, start: usize, out: &mut [f32]) {
+    check_kv_view(v, start, out.len());
+    for (j, o) in out.iter_mut().enumerate() {
+        let idx = start + j;
+        let g = idx / v.group;
+        *o = v.scales[g] * (v.code_at(idx) as f32 - v.zeros[g] as f32);
+    }
+}
+
+/// Scalar fused KV value-accumulate: `ctx[j] += pw * (s * (q - z))` over
+/// values `[start, start + ctx.len())`, ascending `j` — the attention
+/// core's value accumulation with dequant fused in.  Oracle for the AVX2
+/// path.
+pub fn kv_accum_scalar(v: &KvQuantView<'_>, start: usize, pw: f32, ctx: &mut [f32]) {
+    check_kv_view(v, start, ctx.len());
+    for (j, c) in ctx.iter_mut().enumerate() {
+        let idx = start + j;
+        let g = idx / v.group;
+        let dq = v.scales[g] * (v.code_at(idx) as f32 - v.zeros[g] as f32);
+        *c += pw * dq;
+    }
+}
+
+/// Dequantize a KV value run with the selected kernel.  Scalar and AVX2
+/// produce bitwise-identical output (separate IEEE mul + sub per lane,
+/// integer-exact conversions), so the attention score path can dequantize
+/// K head-slices through either and keep the bitwise determinism
+/// contract.
+pub fn kv_row_dequant(kernel: Kernel, v: &KvQuantView<'_>, start: usize, out: &mut [f32]) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected after feature detection; bounds
+        // validated by check_kv_view inside both paths.
+        Kernel::Avx2 => unsafe { avx2::kv_dequant(v, start, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Kernel::Avx2 => kv_dequant_scalar(v, start, out),
+        Kernel::Scalar => kv_dequant_scalar(v, start, out),
+    }
+}
+
+/// Fused dequant value-accumulate with the selected kernel, bitwise
+/// identical across kernels (`ctx[j] += pw * (s * (q - z))` per lane in
+/// the scalar operation order).
+pub fn kv_row_accum(kernel: Kernel, v: &KvQuantView<'_>, start: usize, pw: f32, ctx: &mut [f32]) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `kv_row_dequant`.
+        Kernel::Avx2 => unsafe { avx2::kv_accum(v, start, pw, ctx) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Kernel::Avx2 => kv_accum_scalar(v, start, pw, ctx),
+        Kernel::Scalar => kv_accum_scalar(v, start, pw, ctx),
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use super::*;
@@ -179,6 +300,102 @@ mod avx2 {
         let z = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_loadl_epi64(zrow as *const __m128i)));
         let s = _mm256_loadu_ps(srow);
         _mm256_mul_ps(s, _mm256_sub_ps(q, z))
+    }
+
+    /// Load 8 consecutive KV codes starting at value index `idx` as f32
+    /// lanes (integer-exact conversion).
+    ///
+    /// # Safety
+    ///
+    /// avx2 must be available and `idx + 8` must be within the view's
+    /// packed code range (checked by `check_kv_view` in the dispatchers).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn kv_load8(v: &KvQuantView<'_>, idx: usize) -> __m256 {
+        if v.bits == 8 {
+            _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_loadl_epi64(
+                v.codes.as_ptr().add(idx) as *const __m128i,
+            )))
+        } else {
+            // 4-bit (or narrower) codes: decode lanes through the same
+            // `code_at` the scalar path uses, then convert — lane values
+            // are identical by construction.
+            let mut buf = [0i32; 8];
+            for (k, b) in buf.iter_mut().enumerate() {
+                *b = v.code_at(idx + k) as i32;
+            }
+            _mm256_cvtepi32_ps(_mm256_loadu_si256(buf.as_ptr() as *const __m256i))
+        }
+    }
+
+    /// AVX2 KV dequant, bitwise-equal to [`kv_dequant_scalar`]: within
+    /// each scale group the scale/zero are splatted and 8 lanes run the
+    /// scalar's exact `s * (q - z)` per lane; group edges and tails fall
+    /// back to the scalar expression.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn kv_dequant(v: &KvQuantView<'_>, start: usize, out: &mut [f32]) {
+        check_kv_view(v, start, out.len());
+        let n = out.len();
+        let mut j = 0usize;
+        while j < n {
+            let g = (start + j) / v.group;
+            let gend = ((g + 1) * v.group - start).min(n);
+            let s = v.scales[g];
+            let z = v.zeros[g] as f32;
+            let sv = _mm256_set1_ps(s);
+            let zv = _mm256_set1_ps(z);
+            while j + 8 <= gend {
+                let q = kv_load8(v, start + j);
+                let w = _mm256_mul_ps(sv, _mm256_sub_ps(q, zv));
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), w);
+                j += 8;
+            }
+            while j < gend {
+                out[j] = s * (v.code_at(start + j) as f32 - z);
+                j += 1;
+            }
+        }
+    }
+
+    /// AVX2 fused KV value-accumulate, bitwise-equal to
+    /// [`kv_accum_scalar`]: per lane `ctx[j] + pw * (s * (q - z))` with
+    /// separate mul/add (no FMA contraction), so vector lanes match the
+    /// scalar operation order exactly.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn kv_accum(v: &KvQuantView<'_>, start: usize, pw: f32, ctx: &mut [f32]) {
+        check_kv_view(v, start, ctx.len());
+        let n = ctx.len();
+        let pv = _mm256_set1_ps(pw);
+        let mut j = 0usize;
+        while j < n {
+            let g = (start + j) / v.group;
+            let gend = ((g + 1) * v.group - start).min(n);
+            let s = v.scales[g];
+            let z = v.zeros[g] as f32;
+            let sv = _mm256_set1_ps(s);
+            let zv = _mm256_set1_ps(z);
+            while j + 8 <= gend {
+                let q = kv_load8(v, start + j);
+                let dq = _mm256_mul_ps(sv, _mm256_sub_ps(q, zv));
+                let acc = _mm256_loadu_ps(ctx.as_ptr().add(j));
+                let w = _mm256_add_ps(acc, _mm256_mul_ps(pv, dq));
+                _mm256_storeu_ps(ctx.as_mut_ptr().add(j), w);
+                j += 8;
+            }
+            while j < gend {
+                let dq = s * (v.code_at(start + j) as f32 - z);
+                ctx[j] += pw * dq;
+                j += 1;
+            }
+        }
     }
 
     /// AVX2 fused panel tile, bitwise-equal to [`tile_scalar`]: the
@@ -499,5 +716,74 @@ mod tests {
     fn unpack_run_empty_is_noop() {
         let mut out: [u32; 0] = [];
         unpack_run(&[], 0, 2, &mut out);
+    }
+
+    /// Deterministic pseudo-random KV view over `rows * d` values.
+    fn kv_view_fixture(
+        rows: usize,
+        d: usize,
+        group: usize,
+        bits: u32,
+        seed: u32,
+    ) -> (Vec<u8>, Vec<f32>, Vec<u8>) {
+        let n = rows * d;
+        let mask = (1u32 << bits) - 1;
+        let codes: Vec<u32> =
+            (0..n as u32).map(|i| (i ^ seed).wrapping_mul(2654435761) & mask).collect();
+        let packed = pack_codes(&codes, bits);
+        let groups = n / group;
+        let scales: Vec<f32> =
+            (0..groups).map(|g| 0.01 + 0.003 * ((g as u32 ^ seed) % 17) as f32).collect();
+        let zeros: Vec<u8> = (0..groups).map(|g| ((g as u32 * 7 + seed) & mask) as u8).collect();
+        (packed, scales, zeros)
+    }
+
+    #[test]
+    fn kv_dequant_matches_dq_at_both_widths() {
+        for bits in [4u32, 8] {
+            let (rows, d, group) = (5usize, 24usize, 12usize);
+            let (packed, scales, zeros) = kv_view_fixture(rows, d, group, bits, 3);
+            let v = KvQuantView { codes: &packed, scales: &scales, zeros: &zeros, d, group, bits };
+            for start in [0usize, d, 2 * d + 7] {
+                let n = rows * d - start;
+                let mut out = vec![0.0f32; n];
+                kv_dequant_scalar(&v, start, &mut out);
+                for (j, &o) in out.iter().enumerate() {
+                    assert_eq!(o.to_bits(), v.dq_at(start + j).to_bits(), "bits={bits} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_kernels_bitwise_match_scalar_oracle() {
+        if !crate::kernels::simd_supported() {
+            return;
+        }
+        for bits in [4u32, 8] {
+            for (rows, d, group) in [(7usize, 64usize, 64usize), (3, 40, 8), (4, 24, 12)] {
+                let (packed, scales, zeros) = kv_view_fixture(rows, d, group, bits, 11);
+                let v =
+                    KvQuantView { codes: &packed, scales: &scales, zeros: &zeros, d, group, bits };
+                for start in [0usize, d, d + group] {
+                    let n = rows * d - start;
+                    let mut want = vec![0.0f32; n];
+                    let mut got = vec![0.0f32; n];
+                    kv_row_dequant(Kernel::Scalar, &v, start, &mut want);
+                    kv_row_dequant(Kernel::Avx2, &v, start, &mut got);
+                    let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                    let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(wb, gb, "dequant bits={bits} d={d} start={start}");
+
+                    let mut ctx_s: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+                    let mut ctx_v = ctx_s.clone();
+                    kv_row_accum(Kernel::Scalar, &v, start, 0.37, &mut ctx_s);
+                    kv_row_accum(Kernel::Avx2, &v, start, 0.37, &mut ctx_v);
+                    let sb: Vec<u32> = ctx_s.iter().map(|x| x.to_bits()).collect();
+                    let vb: Vec<u32> = ctx_v.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(sb, vb, "accum bits={bits} d={d} start={start}");
+                }
+            }
+        }
     }
 }

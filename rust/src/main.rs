@@ -61,6 +61,12 @@ COMMANDS
                                                      continuous batching)
   bench-serve --addr A --clients N                   concurrent load generator
                                                      against a running server
+  bench-kv   --size S --method M                     paged-KV perplexity +
+                                                     throughput + memory sweep
+                                                     across kv-bits {16,8,4};
+                                                     merges a `kv_quant`
+                                                     section into
+                                                     BENCH_serve.json
   trace-report --trace P                             summarize a serve
                                                      --trace-log tick journal
   report     memory|params                           analytic reports
@@ -85,6 +91,12 @@ SERVE FLAGS
   --kv-block N      (default: 32)      KV page size in positions
   --kv-blocks-total N (default: auto)  KV page budget; admission backs
                                        off when the pool is exhausted
+  --kv-bits B       (default: 16)      KV page storage width: 16 = f32
+                                       (the bitwise oracle), 8 or 4 =
+                                       group-wise affine-quantized
+                                       sealed pages (~4x/8x more
+                                       sequences per block budget; see
+                                       README \"KV memory\")
   --speculate K     (default: 0 = off) speculative decoding: draft K
                                        tokens/cycle, verify in one pass;
                                        output bits are unchanged
@@ -152,6 +164,14 @@ BENCH-SERVE FLAGS
   --allow-failures  exit 0 even when some requests end rejected or
                     failed (every request must still reach a terminal
                     outcome — used by the CI chaos job)
+BENCH-KV FLAGS
+  --streams N       (default: 4)       independent token streams
+  --stream-len N    (default: 256)     tokens per stream
+  --chunk N         (default: 32)      teacher-forcing chunk; committed
+                                       pages seal at chunk boundaries
+  --kv-block N      (default: 16)      KV page size in positions
+  --kv-bits B       (only B instead of the full {16,8,4} sweep)
+  --bench-out P     (default: BENCH_serve.json)
 
 METHODS: rtn qlora gptq awq loftq omniquant apiq-lw apiq-bw apiq-bw-dora
 (generate also accepts `fp`; calibration-based methods need the artifact
@@ -481,6 +501,7 @@ fn run(args: Args) -> repro::Result<()> {
                 draft_kv_blocks_total: args.usize_or("draft-kv-blocks-total", 0)?,
                 max_pending: args.usize_or("max-pending", 1024)?,
                 deadline_ms: args.u64_or("deadline-ms", 0)?,
+                kv_bits: parse_kv_bits(&args)?,
             };
             let model = match args.get("packed") {
                 Some(path) => {
@@ -525,11 +546,17 @@ fn run(args: Args) -> repro::Result<()> {
             } else {
                 None
             };
-            // Same formula the pool reports in stats frames.
+            // Same formula the pool reports in stats frames (sealed size
+            // under a quantized layout).
             let cfg_ref = &model.cfg;
-            let kv_block_bytes =
-                repro::serve::BlockPool::new(cfg_ref.n_layers, cfg_ref.d_model, sched.kv_block, 0)
-                    .block_bytes();
+            let probe = repro::serve::BlockPool::with_layout(
+                cfg_ref.n_layers,
+                cfg_ref.d_model,
+                sched.kv_block,
+                0,
+                sched.kv_layout(cfg_ref.d_model / cfg_ref.n_heads),
+            );
+            let kv_block_bytes = probe.block_bytes();
             println!(
                 "serve: model {} ({:.2} MB resident, {:.3} bits/weight), max batch {}",
                 model.cfg.name,
@@ -544,6 +571,14 @@ fn run(args: Args) -> repro::Result<()> {
                 sched.kv_block,
                 (sched.blocks_total() * kv_block_bytes) as f64 / 1e6
             );
+            if sched.kv_bits != 16 {
+                println!(
+                    "serve: quantized KV pages: {}-bit group-wise affine (sealed pages \
+                     {:.2}x f32; 16-bit stays the bitwise oracle)",
+                    sched.kv_bits,
+                    kv_block_bytes as f64 / probe.f32_block_bytes() as f64
+                );
+            }
             let adapters = args
                 .all("adapter")
                 .into_iter()
@@ -644,6 +679,13 @@ fn run(args: Args) -> repro::Result<()> {
                     kv.peak_resident_bytes as f64 / 1e6
                 );
                 println!("  peak shared blocks: {}", kv.peak_shared_blocks);
+                if kv.kv_bits != 0 && kv.kv_bits != 16 {
+                    println!(
+                        "  quantized KV: {}-bit pages, peak resident {:.3}x the f32 cost",
+                        kv.kv_bits,
+                        kv.peak_resident_ratio()
+                    );
+                }
             }
             if let Some(s) = &rep.spec {
                 println!(
@@ -722,6 +764,91 @@ fn run(args: Args) -> repro::Result<()> {
                     rep.failed
                 )));
             }
+        }
+        "bench-kv" => {
+            use repro::eval::ppl::perplexity_paged;
+            use repro::serve::json::Json;
+            use repro::serve::KvLayout;
+            let cfg = ModelConfig::by_name(&size)?;
+            let params = load_or_init_params(&cfg, pretrain_steps, seed)?;
+            let model =
+                build_native_model(&artifacts, cfg, &params, &method, bits, group, rank, seed)?;
+            let n_streams = args.usize_or("streams", 4)?.max(1);
+            let stream_len = args.usize_or("stream-len", 256)?.max(2);
+            let chunk = args.usize_or("chunk", 32)?.max(1);
+            let kv_block = args.usize_or("kv-block", 16)?.max(1);
+            let corpus = ZipfMarkovCorpus::new(cfg.vocab, seed ^ 0x5EED);
+            let mut rng = Rng::new(seed ^ 0xBE9C);
+            let streams: Vec<Vec<i32>> = (0..n_streams)
+                .map(|_| {
+                    Batcher::new(1, stream_len)
+                        .lm_batch(&corpus, &mut rng)
+                        .tokens
+                        .data()
+                        .to_vec()
+                })
+                .collect();
+            // Streams run sequentially through one pool, so the budget
+            // only has to cover a single stream (+1 for rounding).
+            let blocks_total = stream_len.div_ceil(kv_block) + 1;
+            let hd = cfg.d_model / cfg.n_heads;
+            let sweep: Vec<u32> = match args.get("kv-bits") {
+                Some(_) => vec![parse_kv_bits(&args)?],
+                None => vec![16, 8, 4],
+            };
+            let total_preds: usize = streams.iter().map(|s| s.len() - 1).sum();
+            let mut f32_ppl = f64::NAN;
+            let mut f32_peak = 0usize;
+            let mut entries: Vec<Json> = Vec::new();
+            println!(
+                "bench-kv: {} ({}), {} streams x {} tokens, chunk {}, page {}",
+                cfg.name, method, n_streams, stream_len, chunk, kv_block
+            );
+            for kv_bits in sweep {
+                let layout = match kv_bits {
+                    16 => KvLayout::F32,
+                    b => KvLayout::Quant { bits: b, group: hd },
+                };
+                let t0 = std::time::Instant::now();
+                let (ppl, kv) =
+                    perplexity_paged(&model, &streams, chunk, kv_block, blocks_total, layout)?;
+                let secs = t0.elapsed().as_secs_f64().max(1e-9);
+                let tps = total_preds as f64 / secs;
+                if kv_bits == 16 {
+                    f32_ppl = ppl;
+                    f32_peak = kv.peak_resident_bytes;
+                }
+                // Single-bits runs have no in-run f32 baseline; report a
+                // zero delta / unit ratio rather than NaN in the JSON.
+                let delta = if f32_ppl.is_finite() { ppl - f32_ppl } else { 0.0 };
+                let ratio = if f32_peak > 0 {
+                    kv.peak_resident_bytes as f64 / f32_peak as f64
+                } else {
+                    1.0
+                };
+                println!(
+                    "  kv-bits {kv_bits:>2}: ppl {ppl:.4} (delta {delta:+.4}), \
+                     {tps:.0} tok/s, peak resident KV {} bytes ({ratio:.3}x f32)",
+                    kv.peak_resident_bytes
+                );
+                entries.push(Json::Obj(vec![
+                    ("kv_bits".to_string(), Json::from(kv_bits as usize)),
+                    ("ppl".to_string(), Json::Num((ppl * 1e6).round() / 1e6)),
+                    ("ppl_delta_vs_f32".to_string(), Json::Num((delta * 1e6).round() / 1e6)),
+                    ("tokens_per_sec".to_string(), Json::Num((tps * 10.0).round() / 10.0)),
+                    (
+                        "peak_resident_kv_bytes".to_string(),
+                        Json::from(kv.peak_resident_bytes),
+                    ),
+                    (
+                        "resident_ratio_vs_f32".to_string(),
+                        Json::Num((ratio * 1e4).round() / 1e4),
+                    ),
+                ]));
+            }
+            let out = args.str_or("bench-out", "BENCH_serve.json");
+            merge_kv_quant_into_bench_serve(&out, entries)?;
+            println!("  merged kv_quant section into {out}");
         }
         "trace-report" => {
             let path = args
@@ -905,6 +1032,12 @@ fn write_bench_serve(
                 "peak_shared_kv_blocks".to_string(),
                 Json::from(kv.peak_shared_blocks),
             ),
+            ("kv_bits".to_string(), Json::from(kv.kv_bits)),
+            ("f32_block_bytes".to_string(), Json::from(kv.f32_block_bytes)),
+            (
+                "peak_resident_kv_ratio".to_string(),
+                Json::Num((kv.peak_resident_ratio() * 1e4).round() / 1e4),
+            ),
         ]);
     }
     if let Some(s) = &rep.spec {
@@ -975,17 +1108,49 @@ fn write_bench_serve(
         })
         .collect();
     fields.push(("samples".to_string(), Json::Arr(samples)));
-    // `cargo bench --bench decode` merges a per-k "spec" sweep array
-    // into the same artifact; carry it across a bench-serve rewrite.
+    // `cargo bench --bench decode` merges a per-k "spec" sweep array and
+    // `repro bench-kv` a "kv_quant" array into the same artifact; carry
+    // both across a bench-serve rewrite.
     if let Ok(old) = std::fs::read_to_string(path) {
         if let Ok(Json::Obj(prev)) = Json::parse(old.trim()) {
-            if let Some(kept) = prev.into_iter().find(|(k, _)| k == "spec") {
+            for kept in prev.into_iter().filter(|(k, _)| k == "spec" || k == "kv_quant") {
                 fields.push(kept);
             }
         }
     }
     let body = Json::Obj(fields).render();
     std::fs::write(path, body + "\n")
+        .map_err(|e| repro::Error::io(format!("write {path}: {e}")))
+}
+
+/// `--kv-bits` with the {16,8,4} width check shared by serve / bench-kv.
+fn parse_kv_bits(args: &Args) -> repro::Result<u32> {
+    let kv_bits = args.u32_or("kv-bits", 16)?;
+    if !matches!(kv_bits, 16 | 8 | 4) {
+        return Err(repro::Error::config(format!(
+            "--kv-bits {kv_bits}: supported widths are 16 (f32 oracle), 8, 4"
+        )));
+    }
+    Ok(kv_bits)
+}
+
+/// Merge the `repro bench-kv` sweep into `BENCH_serve.json`: existing
+/// fields are kept, any previous "kv_quant" array is replaced.  Creates
+/// a minimal artifact when none exists yet.
+fn merge_kv_quant_into_bench_serve(
+    path: &str,
+    entries: Vec<repro::serve::json::Json>,
+) -> repro::Result<()> {
+    use repro::serve::json::Json;
+    let mut fields: Vec<(String, Json)> = match std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(s.trim()).ok())
+    {
+        Some(Json::Obj(prev)) => prev.into_iter().filter(|(k, _)| k != "kv_quant").collect(),
+        _ => vec![("bench".to_string(), Json::from("serve"))],
+    };
+    fields.push(("kv_quant".to_string(), Json::Arr(entries)));
+    std::fs::write(path, Json::Obj(fields).render() + "\n")
         .map_err(|e| repro::Error::io(format!("write {path}: {e}")))
 }
 

@@ -107,6 +107,8 @@ pub struct EngineMetrics {
     pub kv_blocks_free: Arc<Gauge>,
     pub kv_blocks_shared: Arc<Gauge>,
     pub kv_blocks_limit: Arc<Gauge>,
+    pub kv_bytes_resident: Arc<Gauge>,
+    pub kv_bytes_peak: Arc<Gauge>,
     pub active_sequences: Arc<Gauge>,
     pub pending_requests: Arc<Gauge>,
     pub spec_proposed_total: Arc<Counter>,
@@ -222,6 +224,16 @@ impl EngineMetrics {
                 "KV pages shared by >1 sequence (prefix sharing)",
             ),
             kv_blocks_limit: reg.gauge("kv_blocks_limit", &[], "KV page budget of the target pool"),
+            kv_bytes_resident: reg.gauge(
+                "kv_bytes_resident",
+                &[],
+                "Bytes resident in the target KV pool (layout-aware: sealed quantized pages count packed size)",
+            ),
+            kv_bytes_peak: reg.gauge(
+                "kv_bytes_peak",
+                &[],
+                "High-water resident bytes of the target KV pool",
+            ),
             active_sequences: reg.gauge("active_sequences", &[], "Sequences decoding this tick"),
             pending_requests: reg.gauge("pending_requests", &[], "Requests queued for admission"),
             spec_proposed_total: reg.counter(

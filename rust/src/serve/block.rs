@@ -19,13 +19,106 @@
 //! block count instead of worst-case rows.  High-water marks
 //! (`peak_resident`, `peak_shared`) are tracked so a post-run stats query
 //! still reports the memory the run actually touched.
+//!
+//! ## Quantized layouts
+//!
+//! A pool built with [`BlockPool::with_layout`] and
+//! [`KvLayout::Quant`] stores *sealed* pages as group-wise
+//! affine-quantized codes (a zero-included asymmetric grid — see
+//! `quantize_plane` — packed by `quant/pack.rs`) instead of raw f32
+//! planes: one `(scale, zero)` pair per `group` consecutive values of a
+//! row — a head slice when `group == head_dim` — so each page carries
+//! its own quantization grid.  Pages start *staged* (plain f32, the write
+//! buffer); [`BlockPool::seal_block`] quantizes a fully-committed page
+//! and drops the staging planes, shrinking it to roughly
+//! `bits/32 + 5/group` of its f32 footprint.  Reads go through
+//! [`BlockPool::segment`], which hands the attention core either the f32
+//! slices or a [`KvQuantView`] to dequantize on the fly; a write into a
+//! sealed page transparently reopens it (dequantize back to staging —
+//! bitwise the same values sealed reads returned — then overwrite).
+//! `KvLayout::F32` keeps the exact pre-quantization behavior and remains
+//! the bitwise oracle.
+
+use crate::kernels::dequant::{kv_dequant_scalar, KvQuantView};
+use crate::quant::{affine, pack_codes};
+
+/// Storage layout of KV pages in a pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Raw f32 planes — the default and the bitwise oracle.
+    F32,
+    /// Group-wise affine-quantized sealed pages: `bits`-wide codes with
+    /// one scale/zero per `group` consecutive values.
+    Quant { bits: u32, group: usize },
+}
+
+impl KvLayout {
+    /// Effective storage width in bits (16 = f32 path; the flag speaks
+    /// `--kv-bits 16` for "no KV quantization").
+    pub fn bits(self) -> u32 {
+        match self {
+            KvLayout::F32 => 16,
+            KvLayout::Quant { bits, .. } => bits,
+        }
+    }
+}
+
+/// One quantized plane (all layers' K, or all layers' V, of one page):
+/// packed codes plus the per-group affine grid.
+#[derive(Clone)]
+struct QuantPlane {
+    codes: Vec<u8>,
+    scales: Vec<f32>,
+    zeros: Vec<u8>,
+}
+
+/// Sealed-page payload: quantized K and V planes.
+#[derive(Clone)]
+struct QuantBlock {
+    k: QuantPlane,
+    v: QuantPlane,
+}
 
 /// Physical storage of one KV page: `block_size` rows of K and V per
 /// layer.  Row `(layer, slot)` of `k` lives at
 /// `(layer * block_size + slot) * d .. + d` (same for `v`).
+///
+/// Under a quantized layout a page is either *staged* (`q` is `None`,
+/// `k`/`v` hold f32 rows) or *sealed* (`q` holds the packed codes and
+/// `k`/`v` are empty).  Under `KvLayout::F32`, `q` is always `None`.
 struct Block {
     k: Vec<f32>,
     v: Vec<f32>,
+    q: Option<QuantBlock>,
+}
+
+/// One readable run of KV rows handed to the attention core: either raw
+/// f32 row slices or quantized views to dequantize during the walk.
+pub enum KvSegment<'a> {
+    /// `(k_rows, v_rows)` — `rows * d` f32s each.
+    F32(&'a [f32], &'a [f32]),
+    /// Quantized K/V views over the first `rows` rows of a sealed page's
+    /// layer run (view value index `r * d + j` = row `r`, component `j`).
+    Quant { k: KvQuantView<'a>, v: KvQuantView<'a>, rows: usize },
+}
+
+impl<'a> KvSegment<'a> {
+    /// Row count of the segment given the KV row width.
+    pub fn rows(&self, d: usize) -> usize {
+        match self {
+            KvSegment::F32(k, _) => k.len() / d,
+            KvSegment::Quant { rows, .. } => *rows,
+        }
+    }
+
+    /// The raw f32 slices; panics on a quantized segment (tests and flat
+    /// call sites only — the attention core matches on the enum).
+    pub fn as_f32(&self) -> (&'a [f32], &'a [f32]) {
+        match self {
+            KvSegment::F32(k, v) => (k, v),
+            KvSegment::Quant { .. } => panic!("as_f32 on a quantized KV segment"),
+        }
+    }
 }
 
 /// Aggregate pool statistics (block counts + bytes), rendered into the
@@ -48,12 +141,19 @@ pub struct KvStats {
     pub peak_resident_blocks: usize,
     /// High-water mark of `shared_blocks`.
     pub peak_shared_blocks: usize,
-    /// Bytes of one block's K+V storage.
+    /// Bytes of one block's K+V storage at rest (sealed size under a
+    /// quantized layout; the f32 size otherwise).
     pub block_bytes: usize,
-    /// Bytes currently resident (`resident_blocks * block_bytes`).
+    /// True bytes currently resident: staged pages cost the f32 size,
+    /// sealed pages the quantized size.
     pub resident_bytes: usize,
-    /// High-water mark of resident bytes.
+    /// High-water mark of true resident bytes.
     pub peak_resident_bytes: usize,
+    /// Storage width: 16 = f32 pages, 8/4 = quantized sealed pages.
+    pub kv_bits: u32,
+    /// Bytes one block would occupy under the f32 layout — the
+    /// denominator of the compression ratio.
+    pub f32_block_bytes: usize,
 }
 
 /// Fixed-size KV page allocator for one model shape.
@@ -62,6 +162,7 @@ pub struct BlockPool {
     d: usize,
     block_size: usize,
     max_blocks: usize,
+    layout: KvLayout,
     blocks: Vec<Block>,
     refs: Vec<u32>,
     free: Vec<usize>,
@@ -69,6 +170,11 @@ pub struct BlockPool {
     shared_now: usize,
     peak_resident: usize,
     peak_shared: usize,
+    /// True resident bytes right now (staged pages at f32 size, sealed
+    /// pages at quantized size), maintained incrementally at every
+    /// grow / seal / reopen / recycle transition.
+    bytes_now: usize,
+    peak_bytes: usize,
     /// Fault-injection plan: when armed, the `alloc` point can make
     /// `try_alloc` fail as if the budget were exhausted.
     fault: Option<std::sync::Arc<crate::obs::FaultPlan>>,
@@ -77,19 +183,45 @@ pub struct BlockPool {
 impl BlockPool {
     /// A pool of up to `max_blocks` pages of `block_size` positions each,
     /// for a model with `n_layers` layers and `d`-wide K/V rows.  Storage
-    /// is allocated lazily as blocks are first handed out.
+    /// is allocated lazily as blocks are first handed out.  f32 layout —
+    /// the bitwise oracle.
     pub fn new(n_layers: usize, d: usize, block_size: usize, max_blocks: usize) -> Self {
+        Self::with_layout(n_layers, d, block_size, max_blocks, KvLayout::F32)
+    }
+
+    /// A pool with an explicit page layout.  Quantized layouts require
+    /// `bits` in {4, 8}, `group` dividing `d`, and byte-aligned groups
+    /// (`group * bits % 8 == 0`) so every row and layer run of the packed
+    /// plane starts on a byte boundary.
+    pub fn with_layout(
+        n_layers: usize,
+        d: usize,
+        block_size: usize,
+        max_blocks: usize,
+        layout: KvLayout,
+    ) -> Self {
+        if let KvLayout::Quant { bits, group } = layout {
+            assert!(bits == 4 || bits == 8, "kv quant bits must be 4 or 8, got {bits}");
+            assert!(group > 0 && d % group == 0, "kv group {group} must divide row width {d}");
+            assert!(
+                (group * bits as usize) % 8 == 0,
+                "kv group {group} x {bits} bits must be byte-aligned"
+            );
+        }
         BlockPool {
             n_layers,
             d,
             block_size: block_size.max(1),
             max_blocks,
+            layout,
             blocks: Vec::new(),
             refs: Vec::new(),
             free: Vec::new(),
             shared_now: 0,
             peak_resident: 0,
             peak_shared: 0,
+            bytes_now: 0,
+            peak_bytes: 0,
             fault: None,
         }
     }
@@ -122,14 +254,65 @@ impl BlockPool {
         self.free.len() + (self.max_blocks - self.blocks.len())
     }
 
+    /// The page storage layout.
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    /// Storage width in bits (16 = f32).
+    pub fn kv_bits(&self) -> u32 {
+        self.layout.bits()
+    }
+
     /// f32s in one block's K (or V) plane.
     fn plane_len(&self) -> usize {
         self.n_layers * self.block_size * self.d
     }
 
-    /// Bytes of one block's K+V storage.
-    pub fn block_bytes(&self) -> usize {
+    /// Bytes of one block's K+V storage under the f32 layout (also the
+    /// cost of a *staged* page under a quantized layout).
+    pub fn f32_block_bytes(&self) -> usize {
         2 * self.plane_len() * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes of one block's K+V storage at rest: the sealed (quantized)
+    /// size under a quantized layout, the f32 size otherwise.
+    pub fn block_bytes(&self) -> usize {
+        match self.layout {
+            KvLayout::F32 => self.f32_block_bytes(),
+            KvLayout::Quant { .. } => self.quant_block_bytes(),
+        }
+    }
+
+    /// Bytes of one sealed page: packed codes + per-group scale (f32) and
+    /// zero (u8), K and V planes.
+    fn quant_block_bytes(&self) -> usize {
+        match self.layout {
+            KvLayout::F32 => self.f32_block_bytes(),
+            KvLayout::Quant { bits, group } => {
+                let n = self.plane_len();
+                let groups = n / group;
+                2 * (n * bits as usize / 8 + groups * (std::mem::size_of::<f32>() + 1))
+            }
+        }
+    }
+
+    /// Bytes block `id` occupies right now.
+    fn resident_bytes_of(&self, id: usize) -> usize {
+        if self.blocks[id].q.is_some() {
+            self.quant_block_bytes()
+        } else {
+            self.f32_block_bytes()
+        }
+    }
+
+    /// Apply a resident-byte transition (`old` -> `new` bytes for one
+    /// block) and roll the high-water mark.
+    fn note_bytes(&mut self, old: usize, new: usize) {
+        self.bytes_now = self.bytes_now + new - old;
+        if self.bytes_now > self.peak_bytes {
+            self.peak_bytes = self.bytes_now;
+        }
     }
 
     /// Take one block with refcount 1, reusing a free-listed page when
@@ -145,18 +328,30 @@ impl BlockPool {
         if let Some(id) = self.free.pop() {
             debug_assert_eq!(self.refs[id], 0);
             self.refs[id] = 1;
+            // A recycled page may still be sealed from its previous
+            // life; reset it to staged eagerly (its contents are garbage
+            // — new rows are always written before they are read), so
+            // the write path never pays a pointless dequantize.
+            if self.blocks[id].q.take().is_some() {
+                let n = self.plane_len();
+                self.blocks[id].k = vec![0.0; n];
+                self.blocks[id].v = vec![0.0; n];
+                let (qb, fb) = (self.quant_block_bytes(), self.f32_block_bytes());
+                self.note_bytes(qb, fb);
+            }
             return Some(id);
         }
         if self.blocks.len() >= self.max_blocks {
             return None;
         }
         let n = self.plane_len();
-        self.blocks.push(Block { k: vec![0.0; n], v: vec![0.0; n] });
+        self.blocks.push(Block { k: vec![0.0; n], v: vec![0.0; n], q: None });
         self.refs.push(1);
         let id = self.blocks.len() - 1;
         if self.blocks.len() > self.peak_resident {
             self.peak_resident = self.blocks.len();
         }
+        self.note_bytes(0, self.f32_block_bytes());
         Some(id)
     }
 
@@ -195,11 +390,23 @@ impl BlockPool {
     /// fine — readable rows are always written before they are read.
     pub fn copy_block(&mut self, src: usize, dst: usize) {
         debug_assert_ne!(src, dst);
+        let before = self.resident_bytes_of(dst);
         let (lo, hi, src_is_lo) = if src < dst { (src, dst, true) } else { (dst, src, false) };
         let (a, b) = self.blocks.split_at_mut(hi);
         let (s, t) = if src_is_lo { (&a[lo], &mut b[0]) } else { (&b[0], &mut a[lo]) };
-        t.k.copy_from_slice(&s.k);
-        t.v.copy_from_slice(&s.v);
+        if s.q.is_none() && t.q.is_none() {
+            t.k.copy_from_slice(&s.k);
+            t.v.copy_from_slice(&s.v);
+        } else {
+            // Sealed pages replicate whole (codes + grid), staged pages
+            // replicate their staging planes — `dst` becomes an exact
+            // state clone either way.
+            t.k = s.k.clone();
+            t.v = s.v.clone();
+            t.q = s.q.clone();
+        }
+        let after = self.resident_bytes_of(dst);
+        self.note_bytes(before, after);
     }
 
     /// Write `t = krows.len() / d` K/V rows of `layer` into `id` starting
@@ -215,10 +422,102 @@ impl BlockPool {
         debug_assert_eq!(krows.len(), vrows.len());
         debug_assert!(layer < self.n_layers);
         debug_assert!(slot0 * self.d + krows.len() <= self.block_size * self.d);
+        self.reopen_block(id);
         let off = (layer * self.block_size + slot0) * self.d;
         let b = &mut self.blocks[id];
         b.k[off..off + krows.len()].copy_from_slice(krows);
         b.v[off..off + vrows.len()].copy_from_slice(vrows);
+    }
+
+    /// Quantize block `id`'s staging planes into packed codes and drop
+    /// the f32 storage.  No-op under `KvLayout::F32` or when already
+    /// sealed.  Callers seal only fully-committed pages (the paged cache
+    /// enforces this); a later write reopens transparently.
+    ///
+    /// Each plane is quantized in one pass over `group`-sized runs —
+    /// since `group` divides `d`, groups land exactly on per-(layer,
+    /// slot, head-slice) runs of the plane.
+    pub fn seal_block(&mut self, id: usize) {
+        let (bits, group) = match self.layout {
+            KvLayout::F32 => return,
+            KvLayout::Quant { bits, group } => (bits, group),
+        };
+        if self.blocks[id].q.is_some() {
+            return;
+        }
+        let (fb, qb) = (self.f32_block_bytes(), self.quant_block_bytes());
+        let b = &mut self.blocks[id];
+        let k = quantize_plane(std::mem::take(&mut b.k), group, bits);
+        let v = quantize_plane(std::mem::take(&mut b.v), group, bits);
+        b.q = Some(QuantBlock { k, v });
+        self.note_bytes(fb, qb);
+    }
+
+    /// Whether block `id` is currently sealed (quantized storage).
+    pub fn is_sealed(&self, id: usize) -> bool {
+        self.blocks[id].q.is_some()
+    }
+
+    /// Dequantize a sealed block back to staging so it can be written.
+    /// The staging values are bitwise identical to what sealed reads
+    /// returned (`s * (q - z)` per value), so reopening cannot drift the
+    /// committed rows; only a subsequent reseal re-quantizes.
+    fn reopen_block(&mut self, id: usize) {
+        let Some(q) = self.blocks[id].q.take() else { return };
+        let (bits, group) = match self.layout {
+            KvLayout::F32 => unreachable!("sealed block in an f32 pool"),
+            KvLayout::Quant { bits, group } => (bits, group),
+        };
+        let n = self.plane_len();
+        let d = self.d;
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        dequantize_plane(&q.k, d, group, bits, &mut k);
+        dequantize_plane(&q.v, d, group, bits, &mut v);
+        let b = &mut self.blocks[id];
+        b.k = k;
+        b.v = v;
+        let (qb, fb) = (self.quant_block_bytes(), self.f32_block_bytes());
+        self.note_bytes(qb, fb);
+    }
+
+    /// The readable run `[0, take)` rows of `layer` in block `id`, in
+    /// whatever representation the block currently has.  This is the
+    /// accessor the paged segment walk uses; `k_rows`/`v_rows` remain for
+    /// staged (and all-f32) pages.
+    pub fn segment(&self, id: usize, layer: usize, take: usize) -> KvSegment<'_> {
+        debug_assert!(layer < self.n_layers && take <= self.block_size);
+        let b = &self.blocks[id];
+        match (&b.q, self.layout) {
+            (Some(q), KvLayout::Quant { bits, group }) => {
+                let lvals = self.block_size * self.d;
+                let byte0 = layer * lvals * bits as usize / 8;
+                let nbytes = take * self.d * bits as usize / 8;
+                let g0 = layer * lvals / group;
+                let ng = take * self.d / group;
+                let k = KvQuantView {
+                    codes: &q.k.codes[byte0..byte0 + nbytes],
+                    scales: &q.k.scales[g0..g0 + ng],
+                    zeros: &q.k.zeros[g0..g0 + ng],
+                    d: self.d,
+                    group,
+                    bits,
+                };
+                let v = KvQuantView {
+                    codes: &q.v.codes[byte0..byte0 + nbytes],
+                    scales: &q.v.scales[g0..g0 + ng],
+                    zeros: &q.v.zeros[g0..g0 + ng],
+                    d: self.d,
+                    group,
+                    bits,
+                };
+                KvSegment::Quant { k, v, rows: take }
+            }
+            _ => KvSegment::F32(
+                self.k_rows(id, layer, 0, take),
+                self.v_rows(id, layer, 0, take),
+            ),
+        }
     }
 
     /// Contiguous key rows `[slot0, slot0 + t)` of `layer` in `id`.
@@ -268,7 +567,6 @@ impl BlockPool {
     pub fn stats(&self) -> KvStats {
         let resident = self.blocks.len();
         let free = self.free.len();
-        let bb = self.block_bytes();
         KvStats {
             block_size: self.block_size,
             blocks_total: self.max_blocks,
@@ -278,11 +576,61 @@ impl BlockPool {
             shared_blocks: self.shared_now,
             peak_resident_blocks: self.peak_resident,
             peak_shared_blocks: self.peak_shared,
-            block_bytes: bb,
-            resident_bytes: resident * bb,
-            peak_resident_bytes: self.peak_resident * bb,
+            block_bytes: self.block_bytes(),
+            resident_bytes: self.bytes_now,
+            peak_resident_bytes: self.peak_bytes,
+            kv_bits: self.kv_bits(),
+            f32_block_bytes: self.f32_block_bytes(),
         }
     }
+}
+
+/// Quantize one `(n, 1)`-shaped plane group-wise with a **zero-included**
+/// asymmetric affine grid: per `group` consecutive values,
+/// `lo = min(min, 0)`, `hi = max(max, 0)`, `s = (hi - lo) / (2^bits - 1)`,
+/// `z = round(-lo / s)`.
+///
+/// This deliberately differs from the weight grid (`affine::scales_zeros`)
+/// in one way: the weight grid clamps the zero-point into `[0, m]`, which
+/// silently shifts the representable range on groups that don't straddle
+/// zero — harmless for near-zero-mean weight groups, but a KV group is one
+/// head's slice of one (layer, position) row and is routinely one-sided,
+/// where the clamp cuts off up to the group's full distance-to-zero
+/// *independent of bit width*.  Including zero in the range instead keeps
+/// `z` in `[0, m]` by construction (so it narrows to u8 exactly) and
+/// restores the one-step error bound `|v - dq| <= s` everywhere, at the
+/// cost of a slightly coarser step on one-sided groups.  Codes are packed
+/// little-endian via the weight packer.
+fn quantize_plane(plane: Vec<f32>, group: usize, bits: u32) -> QuantPlane {
+    let m = ((1u32 << bits) - 1) as f32;
+    let n = plane.len();
+    let groups = n / group;
+    let mut codes = vec![0u32; n];
+    let mut scales = vec![0.0f32; groups];
+    let mut zeros = vec![0u8; groups];
+    for g in 0..groups {
+        let blk = &plane[g * group..(g + 1) * group];
+        let hi = blk.iter().fold(0.0f32, |a, &x| a.max(x));
+        let lo = blk.iter().fold(0.0f32, |a, &x| a.min(x));
+        let s = ((hi - lo) / m).max(1e-8);
+        let z = affine::round_ties_even(-lo / s).clamp(0.0, m);
+        scales[g] = s;
+        zeros[g] = z as u8;
+        for (i, &v) in blk.iter().enumerate() {
+            let q = (affine::round_ties_even(v / s) + z).clamp(0.0, m);
+            codes[g * group + i] = q as u32;
+        }
+    }
+    QuantPlane { codes: pack_codes(&codes, bits), scales, zeros }
+}
+
+/// Dequantize a sealed plane back into `out` through the same scalar
+/// kernel the fused attention walk uses, so the reopened staging values
+/// are bitwise identical to what sealed reads produced.
+fn dequantize_plane(p: &QuantPlane, d: usize, group: usize, bits: u32, out: &mut [f32]) {
+    let view =
+        KvQuantView { codes: &p.codes, scales: &p.scales, zeros: &p.zeros, d, group, bits };
+    kv_dequant_scalar(&view, 0, out);
 }
 
 #[cfg(test)]
@@ -391,5 +739,75 @@ mod tests {
         pool.write_rows(b, 0, 0, &[7.0; 3], &[8.0; 3]);
         pool.copy_block(b, a);
         assert_eq!(pool.k_rows(a, 0, 0, 1), &[7.0; 3][..]);
+    }
+
+    #[test]
+    fn f32_pool_stats_report_full_width() {
+        let mut pool = BlockPool::new(1, 2, 4, 2);
+        let _ = pool.try_alloc().unwrap();
+        let s = pool.stats();
+        assert_eq!(s.kv_bits, 16);
+        assert_eq!(s.block_bytes, s.f32_block_bytes);
+        assert_eq!(s.resident_bytes, s.block_bytes, "one resident staged page");
+        assert_eq!(s.peak_resident_bytes, s.block_bytes);
+    }
+
+    #[test]
+    fn quant_pool_seals_reads_and_reopens_consistently() {
+        let (layers, d, bs, group) = (2usize, 64usize, 4usize, 64usize);
+        let mut pool =
+            BlockPool::with_layout(layers, d, bs, 4, KvLayout::Quant { bits: 8, group });
+        let a = pool.try_alloc().unwrap();
+        for layer in 0..layers {
+            let k: Vec<f32> =
+                (0..bs * d).map(|i| (i as f32 * 0.37 + layer as f32).sin()).collect();
+            let v: Vec<f32> =
+                (0..bs * d).map(|i| (i as f32 * 0.11 - layer as f32).cos()).collect();
+            pool.write_rows(a, layer, 0, &k, &v);
+        }
+        let fb = pool.f32_block_bytes();
+        assert_eq!(pool.stats().resident_bytes, fb, "staged page costs f32 bytes");
+
+        pool.seal_block(a);
+        assert!(pool.is_sealed(a));
+        let s = pool.stats();
+        assert_eq!(s.kv_bits, 8);
+        assert!(
+            s.resident_bytes * 10 < fb * 3,
+            "sealed 8-bit page must shrink below 0.3x: {} vs {}",
+            s.resident_bytes,
+            fb
+        );
+        assert_eq!(s.block_bytes, s.resident_bytes, "one sealed page resident");
+
+        // What sealed reads return for layer 1 ...
+        let mut sealed_k = vec![0.0f32; bs * d];
+        match pool.segment(a, 1, bs) {
+            KvSegment::Quant { k, rows, .. } => {
+                assert_eq!(rows, bs);
+                kv_dequant_scalar(&k, 0, &mut sealed_k);
+            }
+            KvSegment::F32(..) => panic!("expected a quantized segment"),
+        }
+        // ... must be bitwise what staging holds after a reopening write
+        // to a *different* layer.
+        let one_row: Vec<f32> = (0..d).map(|i| 0.5 - i as f32 * 0.01).collect();
+        pool.write_rows(a, 0, 0, &one_row, &one_row);
+        assert!(!pool.is_sealed(a));
+        assert_eq!(pool.k_rows(a, 1, 0, bs), &sealed_k[..]);
+        assert_eq!(pool.stats().resident_bytes, fb, "reopened page costs f32 bytes");
+    }
+
+    #[test]
+    fn recycled_sealed_page_resets_to_staging() {
+        let mut pool = BlockPool::with_layout(1, 8, 2, 2, KvLayout::Quant { bits: 4, group: 8 });
+        let a = pool.try_alloc().unwrap();
+        pool.write_rows(a, 0, 0, &[1.0; 16], &[2.0; 16]);
+        pool.seal_block(a);
+        pool.release(a);
+        let b = pool.try_alloc().unwrap();
+        assert_eq!(b, a, "free-listed page is reused");
+        assert!(!pool.is_sealed(b), "recycled page is reset to staging");
+        assert_eq!(pool.stats().resident_bytes, pool.f32_block_bytes());
     }
 }

@@ -44,7 +44,9 @@ use crate::infer::{
     apply_rope, argmax, rmsnorm_rows, AdapterSet, GenReport, PackedBlock, PackedModel, RopeView,
     SLOT_WDOWN, SLOT_WGATE, SLOT_WK, SLOT_WO, SLOT_WQ, SLOT_WUP, SLOT_WV,
 };
-use crate::serve::block::BlockPool;
+use crate::kernels;
+use crate::kernels::dequant::{kv_row_accum, kv_row_dequant};
+use crate::serve::block::{BlockPool, KvSegment};
 use crate::serve::kv::KvCache;
 use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{sample, seq_rng, SamplingParams};
@@ -513,30 +515,48 @@ impl PackedModel {
     }
 }
 
+/// Caller-owned scratch for [`attend_segs`]: the score/prob buffer plus
+/// a head-slice dequant buffer for quantized segments.  Hoisted by the
+/// batched paths so the hot loop never heap-allocates per sequence per
+/// layer.
+#[derive(Default)]
+struct AttendScratch {
+    probs: Vec<f32>,
+    row: Vec<f32>,
+}
+
 /// The attention core shared by every cached path: causal attention of
 /// `t` chunk queries against key/value rows `[0, p0 + t)` presented as a
-/// list of contiguous `(k, v)` segments in ascending position order.
-/// The flat layout passes one segment; the paged layout passes one per
-/// block.  Scores are filled, the running max tracked, the softmax
-/// normalized, and values accumulated position-by-position in the exact
-/// same order either way, so segmentation never changes a bit of the
-/// output.  `probs` is caller-owned scratch (resized here) so the
-/// batched decode hot path does not heap-allocate per sequence per
-/// layer.
+/// list of contiguous [`KvSegment`]s in ascending position order.  The
+/// flat layout passes one f32 segment; the paged layout passes one per
+/// block — staged pages as f32 rows, sealed pages as quantized views
+/// dequantized on the fly (fused dequant attention).  Scores are filled,
+/// the running max tracked, the softmax normalized, and values
+/// accumulated position-by-position in the exact same order either way,
+/// so segmentation never changes a bit of the output.
+///
+/// Quantized segments keep the determinism contract: the K head slice is
+/// dequantized into scratch through [`kv_row_dequant`] (scalar and AVX2
+/// bitwise identical) and dotted in the same ascending-`j` scalar loop
+/// the f32 path uses; value rows accumulate through [`kv_row_accum`]
+/// with the f32 path's exact per-lane `ctx[j] + pw * v` order.
 #[allow(clippy::too_many_arguments)]
 fn attend_segs(
     qd: &[f32],
-    segs: &[(&[f32], &[f32])],
+    segs: &[KvSegment<'_>],
     ctx: &mut [f32],
     t: usize,
     p0: usize,
     h: usize,
     hd: usize,
-    probs: &mut Vec<f32>,
+    scratch: &mut AttendScratch,
 ) {
     let d = h * hd;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let kernel = kernels::active();
+    let AttendScratch { probs, row } = scratch;
     probs.resize(p0 + t, 0.0);
+    row.resize(hd, 0.0);
     for head in 0..h {
         let off = head * hd;
         for tq in 0..t {
@@ -544,20 +564,40 @@ fn attend_segs(
             let qrow = &qd[tq * d + off..tq * d + off + hd];
             let mut mx = f32::NEG_INFINITY;
             let mut pos = 0usize;
-            'score: for (kc, _) in segs {
-                for krow in kc.chunks_exact(d) {
-                    if pos >= klen {
-                        break 'score;
+            'score: for seg in segs {
+                match seg {
+                    KvSegment::F32(kc, _) => {
+                        for krow in kc.chunks_exact(d) {
+                            if pos >= klen {
+                                break 'score;
+                            }
+                            let krow = &krow[off..off + hd];
+                            let mut s = 0.0f32;
+                            for j in 0..hd {
+                                s += qrow[j] * krow[j];
+                            }
+                            let s = s * inv_sqrt;
+                            probs[pos] = s;
+                            mx = mx.max(s);
+                            pos += 1;
+                        }
                     }
-                    let krow = &krow[off..off + hd];
-                    let mut s = 0.0f32;
-                    for j in 0..hd {
-                        s += qrow[j] * krow[j];
+                    KvSegment::Quant { k, rows, .. } => {
+                        for r in 0..*rows {
+                            if pos >= klen {
+                                break 'score;
+                            }
+                            kv_row_dequant(kernel, k, r * d + off, &mut row[..hd]);
+                            let mut s = 0.0f32;
+                            for j in 0..hd {
+                                s += qrow[j] * row[j];
+                            }
+                            let s = s * inv_sqrt;
+                            probs[pos] = s;
+                            mx = mx.max(s);
+                            pos += 1;
+                        }
                     }
-                    let s = s * inv_sqrt;
-                    probs[pos] = s;
-                    mx = mx.max(s);
-                    pos += 1;
                 }
             }
             debug_assert!(pos >= klen, "segments must cover the attention span");
@@ -569,18 +609,32 @@ fn attend_segs(
             let inv = 1.0 / denom;
             let c0 = tq * d + off;
             let mut pos = 0usize;
-            'acc: for (_, vc) in segs {
-                for vrow in vc.chunks_exact(d) {
-                    if pos >= klen {
-                        break 'acc;
+            'acc: for seg in segs {
+                match seg {
+                    KvSegment::F32(_, vc) => {
+                        for vrow in vc.chunks_exact(d) {
+                            if pos >= klen {
+                                break 'acc;
+                            }
+                            let pw = probs[pos] * inv;
+                            let vrow = &vrow[off..off + hd];
+                            let crow = &mut ctx[c0..c0 + hd];
+                            for j in 0..hd {
+                                crow[j] += pw * vrow[j];
+                            }
+                            pos += 1;
+                        }
                     }
-                    let pw = probs[pos] * inv;
-                    let vrow = &vrow[off..off + hd];
-                    let crow = &mut ctx[c0..c0 + hd];
-                    for j in 0..hd {
-                        crow[j] += pw * vrow[j];
+                    KvSegment::Quant { v, rows, .. } => {
+                        for r in 0..*rows {
+                            if pos >= klen {
+                                break 'acc;
+                            }
+                            let pw = probs[pos] * inv;
+                            kv_row_accum(kernel, v, r * d + off, pw, &mut ctx[c0..c0 + hd]);
+                            pos += 1;
+                        }
                     }
-                    pos += 1;
                 }
             }
         }
@@ -667,16 +721,16 @@ fn block_forward_chunk(
     cache.write_rows(li, k.data(), v.data())?;
 
     let mut ctx = Tensor::zeros(&[t, d]);
-    let mut probs = Vec::new();
+    let mut scratch = AttendScratch::default();
     attend_segs(
         q.data(),
-        &[(cache.keys(li, p0 + t), cache.values(li, p0 + t))],
+        &[KvSegment::F32(cache.keys(li, p0 + t), cache.values(li, p0 + t))],
         ctx.data_mut(),
         t,
         p0,
         h,
         hd,
-        &mut probs,
+        &mut scratch,
     );
     let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
@@ -711,9 +765,11 @@ fn block_forward_chunk_paged(
     cache.write_rows(pool, li, k.data(), v.data())?;
 
     let mut ctx = Tensor::zeros(&[t, d]);
-    let mut probs = Vec::new();
-    let segs = cache.segments(pool, li, p0 + t);
-    attend_segs(q.data(), &segs, ctx.data_mut(), t, p0, h, hd, &mut probs);
+    let mut scratch = AttendScratch::default();
+    let mut segs = Vec::new();
+    let pool_ref: &BlockPool = pool;
+    cache.segments_into(pool_ref, li, p0 + t, &mut segs);
+    attend_segs(q.data(), &segs, ctx.data_mut(), t, p0, h, hd, &mut scratch);
     let attn_out = out_project(block, &ctx, li, spans)?;
     let x1 = x.add(&attn_out)?;
 
@@ -753,18 +809,18 @@ fn block_forward_step(
     {
         let cd = ctx.data_mut();
         let qd = q.data();
-        let mut probs = Vec::new();
+        let mut scratch = AttendScratch::default();
         for (bi, cache) in caches.iter().enumerate() {
             let klen = cache.len() + 1; // cached prefix + the row just written
             attend_segs(
                 &qd[bi * d..(bi + 1) * d],
-                &[(cache.keys(li, klen), cache.values(li, klen))],
+                &[KvSegment::F32(cache.keys(li, klen), cache.values(li, klen))],
                 &mut cd[bi * d..(bi + 1) * d],
                 1,
                 klen - 1,
                 h,
                 hd,
-                &mut probs,
+                &mut scratch,
             );
         }
     }
@@ -806,7 +862,7 @@ fn block_forward_step_paged(
     {
         let cd = ctx.data_mut();
         let qd = q.data();
-        let mut probs = Vec::new();
+        let mut scratch = AttendScratch::default();
         let mut segs = Vec::new();
         let pool_ref: &BlockPool = pool;
         for (bi, cache) in caches.iter().enumerate() {
@@ -820,7 +876,7 @@ fn block_forward_step_paged(
                 klen - 1,
                 h,
                 hd,
-                &mut probs,
+                &mut scratch,
             );
         }
     }
@@ -870,7 +926,7 @@ fn block_prefill_batch(
     {
         let cd = ctx.data_mut();
         let qd = q.data();
-        let mut probs = Vec::new();
+        let mut scratch = AttendScratch::default();
         let mut segs = Vec::new();
         let pool_ref: &BlockPool = pool;
         let mut row = 0usize;
@@ -884,7 +940,7 @@ fn block_prefill_batch(
                 p0s[bi],
                 h,
                 hd,
-                &mut probs,
+                &mut scratch,
             );
             row += t;
         }

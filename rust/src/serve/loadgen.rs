@@ -123,6 +123,22 @@ pub struct KvSnapshot {
     pub peak_shared_blocks: usize,
     pub block_bytes: usize,
     pub peak_resident_bytes: usize,
+    /// Storage width of the pool layout (16 = f32, 8/4 = quantized).
+    pub kv_bits: usize,
+    /// What one page costs at f32 — the denominator for the ratio story.
+    pub f32_block_bytes: usize,
+}
+
+impl KvSnapshot {
+    /// Peak resident bytes as a fraction of the same peak page count at
+    /// f32; 1.0 under the f32 layout, ~0.27 for sealed 8-bit pages.
+    pub fn peak_resident_ratio(&self) -> f64 {
+        let f32_cost = self.peak_resident_blocks * self.f32_block_bytes;
+        if f32_cost == 0 {
+            return 1.0;
+        }
+        self.peak_resident_bytes as f64 / f32_cost as f64
+    }
 }
 
 /// Speculative-decoding counters scraped from the stats frame's `spec`
@@ -803,6 +819,8 @@ pub fn fetch_stats(addr: &str) -> Result<StatsSnapshot> {
         peak_shared_blocks: field("peak_shared_blocks"),
         block_bytes: field("block_bytes"),
         peak_resident_bytes: field("peak_resident_bytes"),
+        kv_bits: field("kv_bits"),
+        f32_block_bytes: field("f32_block_bytes"),
     };
     let spec = j.get("spec").map(|sj| {
         let f = |name: &str| sj.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;

@@ -5,7 +5,10 @@
 //! O(T^2) per-token decode of PR 1 into a production-shaped loop:
 //!
 //! * [`block`] — the model-wide [`BlockPool`] of fixed-size KV pages
-//!   (free list, refcounts, high-water stats).
+//!   (free list, refcounts, high-water stats), with an optional
+//!   group-wise affine-quantized page layout (`--kv-bits 8|4`): full
+//!   pages are sealed into packed codes and dequantized inside the
+//!   attention walk, ~4x/8x more sequences per block budget.
 //! * [`paged`] — per-sequence [`PagedKvCache`] block tables with
 //!   copy-on-write prompt-prefix sharing; grows one page at a time.
 //! * [`kv`] — the flat per-sequence slab ([`KvCache`] + recycling
@@ -72,7 +75,7 @@ pub mod server;
 pub mod spec;
 
 pub use adapters::{AdapterRegistry, AdapterStat};
-pub use block::{BlockPool, KvStats};
+pub use block::{BlockPool, KvLayout, KvSegment, KvStats};
 pub use kv::{KvCache, KvPool};
 pub use paged::PagedKvCache;
 pub use sampling::SamplingParams;

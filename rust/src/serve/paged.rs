@@ -28,7 +28,7 @@
 //! where CoW happens, so the write path itself stays a straight scatter.
 
 use crate::error::{Error, Result};
-use crate::serve::block::BlockPool;
+use crate::serve::block::{BlockPool, KvSegment};
 
 /// One sequence's KV state: an ordered block table plus the committed
 /// length.  All layers share the table (a block stores every layer's
@@ -211,16 +211,35 @@ impl PagedKvCache {
         self.len += t;
     }
 
-    /// Per-block contiguous (K, V) row views of `layer` covering
-    /// positions `[0, upto)`, in ascending position order — the paged
-    /// attention path iterates these so the accumulation order (and
-    /// therefore every bit of the softmax) matches the flat layout.
+    /// Seal every *fully committed* block of this sequence: quantize its
+    /// planes and drop the f32 staging (no-op under the f32 layout and on
+    /// already-sealed pages, so calling this every tick only pays for
+    /// newly filled blocks).  Callers invoke it at quiescent points — the
+    /// scheduler at end of tick (after speculative rollback), the ppl
+    /// harness between chunks — so sealed rows are always accepted-final.
+    /// The partially filled tail block stays staged (its f32 rows are the
+    /// write buffer); a sealed page that later takes a write — a CoW fork
+    /// extending an unaligned prefix, or a rollback below a block
+    /// boundary — is reopened transparently by the pool.
+    pub fn seal_committed(&self, pool: &mut BlockPool) {
+        let full = (self.len / self.block_size).min(self.table.len());
+        for &id in &self.table[..full] {
+            pool.seal_block(id);
+        }
+    }
+
+    /// Per-block segment views of `layer` covering positions `[0, upto)`,
+    /// in ascending position order — the paged attention path iterates
+    /// these so the accumulation order (and therefore every bit of the
+    /// softmax) matches the flat layout.  Staged pages yield raw f32 row
+    /// slices; sealed pages yield quantized views the attention core
+    /// dequantizes during the walk.
     pub fn segments<'p>(
         &self,
         pool: &'p BlockPool,
         layer: usize,
         upto: usize,
-    ) -> Vec<(&'p [f32], &'p [f32])> {
+    ) -> Vec<KvSegment<'p>> {
         let mut segs = Vec::with_capacity(upto.div_ceil(self.block_size));
         self.segments_into(pool, layer, upto, &mut segs);
         segs
@@ -234,7 +253,7 @@ impl PagedKvCache {
         pool: &'p BlockPool,
         layer: usize,
         upto: usize,
-        out: &mut Vec<(&'p [f32], &'p [f32])>,
+        out: &mut Vec<KvSegment<'p>>,
     ) {
         debug_assert!(upto <= self.capacity());
         out.clear();
@@ -243,7 +262,7 @@ impl PagedKvCache {
         while pos < upto {
             let take = bs.min(upto - pos);
             let id = self.table[pos / bs];
-            out.push((pool.k_rows(id, layer, 0, take), pool.v_rows(id, layer, 0, take)));
+            out.push(pool.segment(id, layer, take));
             pos += take;
         }
     }
@@ -326,11 +345,11 @@ mod tests {
 
         let segs = c.segments(&pool, 0, 6);
         assert_eq!(segs.len(), 2);
-        assert_eq!(segs[0].0, &k[..4 * d]);
-        assert_eq!(segs[1].0, &k[4 * d..]);
-        assert_eq!(segs[0].1, &v[..4 * d]);
+        assert_eq!(segs[0].as_f32().0, &k[..4 * d]);
+        assert_eq!(segs[1].as_f32().0, &k[4 * d..]);
+        assert_eq!(segs[0].as_f32().1, &v[..4 * d]);
         let segs = c.segments(&pool, 1, 5);
-        assert_eq!(segs[1].0, &v[4 * d..5 * d], "upto truncates the tail segment");
+        assert_eq!(segs[1].as_f32().0, &v[4 * d..5 * d], "upto truncates the tail segment");
 
         // appending one more position lands in block 1 slot 2
         c.reserve(7, &mut pool).unwrap();
@@ -338,7 +357,7 @@ mod tests {
         c.write_rows(&mut pool, 0, &k2, &k2).unwrap();
         c.advance(1);
         let segs = c.segments(&pool, 0, 7);
-        assert_eq!(&segs[1].0[2 * d..], &k2[..]);
+        assert_eq!(&segs[1].as_f32().0[2 * d..], &k2[..]);
 
         // writing past reserved capacity is an error, not a panic
         assert!(c.write_rows(&mut pool, 0, &rows(d, 2, 0.0), &rows(d, 2, 0.0)).is_err());
@@ -367,7 +386,7 @@ mod tests {
 
         // child's shared view reads the parent's rows
         let segs = b.segments(&pool, 0, 5);
-        assert_eq!(segs[1].0, &k[4 * d..5 * d]);
+        assert_eq!(segs[1].as_f32().0, &k[4 * d..5 * d]);
 
         // child appends at position 5 -> shared tail block is copied
         let shared_tail = a.block_at(4);
@@ -381,11 +400,11 @@ mod tests {
         b.advance(1);
         // the copied tail still carries the shared prefix row at slot 0
         let segs = b.segments(&pool, 0, 6);
-        assert_eq!(&segs[1].0[..d], &k[4 * d..5 * d]);
-        assert_eq!(&segs[1].0[d..2 * d], &kb[..]);
+        assert_eq!(&segs[1].as_f32().0[..d], &k[4 * d..5 * d]);
+        assert_eq!(&segs[1].as_f32().0[d..2 * d], &kb[..]);
         // and the parent's tail is untouched by the child's write
         let segs = a.segments(&pool, 0, 6);
-        assert_eq!(segs[1].0, &k[4 * d..]);
+        assert_eq!(segs[1].as_f32().0, &k[4 * d..]);
 
         // full release returns every page
         b.release_all(&mut pool);
@@ -439,7 +458,7 @@ mod tests {
         assert_eq!(a.len(), 3, "committed positions untouched");
         assert_eq!(pool.available(), 1, "the spare page is reclaimable again");
         let segs = a.segments(&pool, 0, 3);
-        assert_eq!(segs[0].0, &k[..]);
+        assert_eq!(segs[0].as_f32().0, &k[..]);
 
         a.release_all(&mut pool);
         b.release_all(&mut pool);
@@ -455,5 +474,65 @@ mod tests {
         a.release_all(&mut pool);
         assert!(b.reserve(1, &mut pool).is_ok(), "reclaimed after release");
         b.release_all(&mut pool);
+    }
+
+    #[test]
+    fn seal_committed_quantizes_full_blocks_cow_and_truncate_survive() {
+        use crate::kernels::dequant::kv_dequant_scalar;
+        use crate::serve::block::KvLayout;
+        let (layers, d, bs) = (1usize, 8usize, 4usize);
+        let mut pool =
+            BlockPool::with_layout(layers, d, bs, 8, KvLayout::Quant { bits: 8, group: 8 });
+        let mut a = PagedKvCache::new(&pool);
+        a.reserve(6, &mut pool).unwrap();
+        let k = rows(d, 6, 0.0);
+        a.write_rows(&mut pool, 0, &k, &k).unwrap();
+        a.advance(6);
+        a.seal_committed(&mut pool);
+        assert!(pool.is_sealed(a.block_at(0)), "full block sealed");
+        assert!(!pool.is_sealed(a.block_at(4)), "partial tail stays staged");
+
+        let segs = a.segments(&pool, 0, 6);
+        match &segs[0] {
+            KvSegment::Quant { rows, .. } => assert_eq!(*rows, 4),
+            KvSegment::F32(..) => panic!("sealed block must read quantized"),
+        }
+        assert_eq!(segs[1].as_f32().0, &k[4 * d..6 * d], "tail still reads f32");
+
+        // Unaligned fork into the sealed page: the child's append CoWs
+        // the page, and the child's write reopens only the private copy.
+        let mut b = PagedKvCache::fork_prefix(&a, 2, &mut pool).unwrap();
+        b.reserve(3, &mut pool).unwrap();
+        let kb = rows(d, 1, 500.0);
+        b.write_rows(&mut pool, 0, &kb, &kb).unwrap();
+        b.advance(1);
+        assert_ne!(b.block_at(0), a.block_at(0), "CoW split the sealed page");
+        assert!(pool.is_sealed(a.block_at(0)), "parent's page stays sealed");
+        assert!(!pool.is_sealed(b.block_at(0)), "child's copy reopened for the write");
+
+        // The child's inherited rows are bitwise what the parent's sealed
+        // reads return for those positions.
+        let mut parent_rows = vec![0.0f32; 2 * d];
+        match pool.segment(a.block_at(0), 0, 2) {
+            KvSegment::Quant { k, .. } => kv_dequant_scalar(&k, 0, &mut parent_rows),
+            KvSegment::F32(..) => panic!("parent page should be sealed"),
+        }
+        let cb = b.segments(&pool, 0, 3);
+        assert_eq!(&cb[0].as_f32().0[..2 * d], &parent_rows[..]);
+
+        // Rollback below a sealed block boundary: the next reserve+write
+        // reopens the page and overwrites the popped slots.
+        a.truncate(3, &mut pool);
+        assert_eq!(a.n_blocks(), 1);
+        a.reserve(4, &mut pool).unwrap();
+        let k3 = rows(d, 1, 900.0);
+        a.write_rows(&mut pool, 0, &k3, &k3).unwrap();
+        a.advance(1);
+        assert!(!pool.is_sealed(a.block_at(0)), "write into sealed page reopened it");
+        let segs = a.segments(&pool, 0, 4);
+        assert_eq!(&segs[0].as_f32().0[3 * d..], &k3[..]);
+
+        b.release_all(&mut pool);
+        a.release_all(&mut pool);
     }
 }

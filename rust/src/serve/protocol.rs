@@ -322,6 +322,19 @@ fn kv_json(kv: &KvStats) -> Json {
         ("block_bytes".to_string(), Json::from(kv.block_bytes)),
         ("resident_bytes".to_string(), Json::from(kv.resident_bytes)),
         ("peak_resident_bytes".to_string(), Json::from(kv.peak_resident_bytes)),
+        ("kv_bits".to_string(), Json::from(kv.kv_bits as usize)),
+        ("f32_block_bytes".to_string(), Json::from(kv.f32_block_bytes)),
+        // Resident bytes as a fraction of what the same resident pages
+        // would cost at f32; 1.0 under the f32 layout, ~0.27 sealed 8-bit.
+        ("resident_ratio".to_string(), {
+            let f32_cost = kv.resident_blocks * kv.f32_block_bytes;
+            let r = if f32_cost == 0 {
+                1.0
+            } else {
+                kv.resident_bytes as f64 / f32_cost as f64
+            };
+            Json::Num((r * 1e4).round() / 1e4)
+        }),
     ])
 }
 
@@ -741,6 +754,8 @@ mod tests {
             block_bytes: 256,
             resident_bytes: 1536,
             peak_resident_bytes: 1536,
+            kv_bits: 16,
+            f32_block_bytes: 256,
         };
         let build = crate::obs::build_info();
         let f = stats_frame(&EngineSnapshot {
@@ -769,6 +784,10 @@ mod tests {
         assert_eq!(kvj.get("shared_blocks").and_then(Json::as_i64), Some(2));
         assert_eq!(kvj.get("peak_shared_blocks").and_then(Json::as_i64), Some(3));
         assert_eq!(kvj.get("peak_resident_bytes").and_then(Json::as_i64), Some(1536));
+        assert_eq!(kvj.get("kv_bits").and_then(Json::as_i64), Some(16));
+        assert_eq!(kvj.get("f32_block_bytes").and_then(Json::as_i64), Some(256));
+        // 1536 / (6 * 256) == 1.0 — f32 layout reports unit ratio.
+        assert_eq!(kvj.get("resident_ratio").and_then(Json::as_f64), Some(1.0));
         assert!(j.get("spec").is_none(), "no spec object when not speculating");
         assert_eq!(
             j.get("adapters").and_then(Json::as_arr).map(|a| a.len()),

@@ -50,7 +50,7 @@ use crate::obs::trace::{
 };
 use crate::obs::{profile, RequestSpan, Telemetry, TickRecord};
 use crate::serve::adapters::AdapterRegistry;
-use crate::serve::block::{BlockPool, KvStats};
+use crate::serve::block::{BlockPool, KvLayout, KvStats};
 use crate::serve::decode::pick;
 use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{seq_rng, SamplingParams};
@@ -86,6 +86,12 @@ pub struct SchedConfig {
     /// Default per-request deadline in ms (`--deadline-ms`), applied to
     /// requests that omit `deadline_ms`.  0 = no default deadline.
     pub deadline_ms: u64,
+    /// KV page storage width (`--kv-bits`): 16 = f32 pages (the bitwise
+    /// oracle), 8/4 = group-wise affine-quantized sealed pages with one
+    /// scale/zero per head slice.  Only the target pool quantizes; the
+    /// speculative draft pool always stays f32 (it is tiny and its rows
+    /// are popped every cycle, so sealing would never pay off).
+    pub kv_bits: u32,
 }
 
 impl Default for SchedConfig {
@@ -100,6 +106,7 @@ impl Default for SchedConfig {
             draft_kv_blocks_total: 0,
             max_pending: 1024,
             deadline_ms: 0,
+            kv_bits: 16,
         }
     }
 }
@@ -112,6 +119,16 @@ impl SchedConfig {
         }
         let bs = self.kv_block.max(1);
         self.max_batch.max(1) * (self.max_prompt + self.max_new_cap).div_ceil(bs)
+    }
+
+    /// Resolved target-pool page layout: `kv_bits` 16 (or 0) keeps the
+    /// f32 oracle; 8/4 quantize sealed pages per head slice (`group =
+    /// head_dim`, so each head's K/V run carries its own affine grid).
+    pub fn kv_layout(&self, head_dim: usize) -> KvLayout {
+        match self.kv_bits {
+            0 | 16 => KvLayout::F32,
+            bits => KvLayout::Quant { bits, group: head_dim },
+        }
     }
 
     /// Resolved draft-side block budget.
@@ -323,11 +340,12 @@ pub struct Scheduler<'m> {
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m PackedModel, cfg: SchedConfig) -> Self {
-        let pool = BlockPool::new(
+        let pool = BlockPool::with_layout(
             model.cfg.n_layers,
             model.cfg.d_model,
             cfg.kv_block.max(1),
             cfg.blocks_total(),
+            cfg.kv_layout(model.cfg.d_model / model.cfg.n_heads),
         );
         Scheduler {
             model,
@@ -989,6 +1007,14 @@ impl<'m> Scheduler<'m> {
         self.active = kept;
         rec.phase_ns[PH_EMIT] += t_emit.elapsed().as_nanos() as u64;
 
+        // Quantized layouts: seal fully-committed pages at end of tick.
+        // This runs AFTER spec rollback and eviction, so every row inside
+        // a sealed page is accepted-final — speculative truncation never
+        // has to reopen a page mid-cycle.  No-op under the f32 layout.
+        for r in &self.active {
+            r.cache.seal_committed(&mut self.pool);
+        }
+
         self.finish_tick(&mut rec, kv_before, spec_before, prof_before, tick0);
         Ok(events)
     }
@@ -1034,6 +1060,8 @@ impl<'m> Scheduler<'m> {
         m.kv_blocks_free.set(kv.free_blocks as i64);
         m.kv_blocks_shared.set(kv.shared_blocks as i64);
         m.kv_blocks_limit.set(kv.blocks_total as i64);
+        m.kv_bytes_resident.set(kv.resident_bytes as i64);
+        m.kv_bytes_peak.set(kv.peak_resident_bytes as i64);
         m.active_sequences.set(self.active.len() as i64);
         m.pending_requests.set(self.pending.len() as i64);
         m.adapters_registered.set(self.registry.len() as i64);

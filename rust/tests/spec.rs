@@ -166,8 +166,8 @@ fn truncate_frees_emptied_tail_pages() {
 
     // the surviving rows are untouched
     let segs = c.segments(&pool, 0, 5);
-    assert_eq!(segs[0].0, &k[..4 * d]);
-    assert_eq!(segs[1].0, &k[4 * d..5 * d]);
+    assert_eq!(segs[0].as_f32().0, &k[..4 * d]);
+    assert_eq!(segs[1].as_f32().0, &k[4 * d..5 * d]);
 
     // truncate at or past the current length is a no-op
     c.truncate(5, &mut pool);
@@ -185,7 +185,7 @@ fn truncate_frees_emptied_tail_pages() {
     c.write_rows(&mut pool, 0, &k2, &k2).unwrap();
     c.advance(2);
     let segs = c.segments(&pool, 0, 6);
-    assert_eq!(&segs[1].0[..2 * d], &k2[..]);
+    assert_eq!(&segs[1].as_f32().0[..2 * d], &k2[..]);
 
     // truncate(0) releases everything
     c.truncate(0, &mut pool);
@@ -215,7 +215,7 @@ fn truncate_of_shared_tail_drops_the_entry_without_scrubbing() {
     assert_eq!(a.n_blocks(), 1);
     assert_eq!(pool.ref_count(tail), 1, "release, not scrub");
     let segs = b.segments(&pool, 0, 6);
-    assert_eq!(segs[1].0, &k[4 * d..], "sharer still reads its committed rows");
+    assert_eq!(segs[1].as_f32().0, &k[4 * d..], "sharer still reads its committed rows");
 
     // the parent re-appends: it must get a DIFFERENT page than the
     // child's still-held tail (refcount 1 != free), and reserve CoWs
@@ -226,8 +226,8 @@ fn truncate_of_shared_tail_drops_the_entry_without_scrubbing() {
     a.write_rows(&mut pool, 0, &k2, &k2).unwrap();
     a.advance(3);
     let segs = b.segments(&pool, 0, 6);
-    assert_eq!(segs[0].0, &k[..4 * d], "parent's regrowth never touches the child");
-    assert_eq!(segs[1].0, &k[4 * d..]);
+    assert_eq!(segs[0].as_f32().0, &k[..4 * d], "parent's regrowth never touches the child");
+    assert_eq!(segs[1].as_f32().0, &k[4 * d..]);
 
     // and the reverse direction: a CHILD truncating away still-shared
     // pages releases its entries while the parent keeps reading.
@@ -242,8 +242,8 @@ fn truncate_of_shared_tail_drops_the_entry_without_scrubbing() {
     b.truncate(0, &mut pool);
     assert_eq!((pool.ref_count(b0), pool.ref_count(b1)), (1, 1));
     let segs = a.segments(&pool, 0, 6);
-    assert_eq!(segs[0].0, &k[..4 * d]);
-    assert_eq!(segs[1].0, &k[4 * d..]);
+    assert_eq!(segs[0].as_f32().0, &k[..4 * d]);
+    assert_eq!(segs[1].as_f32().0, &k[4 * d..]);
 }
 
 // ---------------------------------------------------------------------------
