@@ -97,6 +97,22 @@ SERVE FLAGS
                                        sealed pages (~4x/8x more
                                        sequences per block budget; see
                                        README \"KV memory\")
+  --kv-mem-mb MB                       derive --kv-blocks-total from a
+                                       memory budget in MB at the active
+                                       layout's block size (rejects an
+                                       explicit --kv-blocks-total)
+  --kv-spill PATH                      second KV tier: spill pages to an
+                                       append/recycle file instead of
+                                       rejecting under block exhaustion;
+                                       also enables session
+                                       suspend/resume over the wire
+                                       (README \"Tiered KV\")
+  --kv-spill-blocks N (default: 0 = unbounded)  spill-slot budget
+  --prefix-store                       content-keyed persistent prefix
+                                       pages: admissions whose prompt
+                                       matches a stored prefix fork from
+                                       disk instead of re-prefilling
+                                       (needs --kv-spill)
   --speculate K     (default: 0 = off) speculative decoding: draft K
                                        tokens/cycle, verify in one pass;
                                        output bits are unchanged
@@ -161,6 +177,15 @@ BENCH-SERVE FLAGS
   --request-timeout-ms N (default: 0)  client-side socket read timeout
   --retries N       (default: 4)       per-request retry budget for
                                        overloaded / transport errors
+  --sessions N      (default: 0)       session clients: stream half the
+                                       token budget under a \"session\"
+                                       id, hang up, rejoin after
+                                       --rejoin-ms and continue from the
+                                       server's parked KV; resume
+                                       latency + zero-re-prefill counts
+                                       land in the JSON
+  --rejoin-ms N     (default: 100)     session disconnect gap before the
+                                       rejoin
   --allow-failures  exit 0 even when some requests end rejected or
                     failed (every request must still reach a terminal
                     outcome — used by the CI chaos job)
@@ -491,7 +516,7 @@ fn run(args: Args) -> repro::Result<()> {
         }
         "serve" => {
             let addr = args.str_or("addr", "127.0.0.1:7878");
-            let sched = SchedConfig {
+            let mut sched = SchedConfig {
                 max_batch: args.usize_or("max-batch", 8)?.max(1),
                 max_new_cap: args.usize_or("max-new-cap", 512)?.max(1),
                 max_prompt: args.usize_or("max-prompt", 1024)?.max(1),
@@ -557,6 +582,26 @@ fn run(args: Args) -> repro::Result<()> {
                 sched.kv_layout(cfg_ref.d_model / cfg_ref.n_heads),
             );
             let kv_block_bytes = probe.block_bytes();
+            if args.get("kv-mem-mb").is_some() {
+                if args.get("kv-blocks-total").is_some() {
+                    return Err(repro::Error::config(
+                        "--kv-mem-mb and --kv-blocks-total both set the KV budget; \
+                         pass only one",
+                    ));
+                }
+                let mb = args.f32_or("kv-mem-mb", 0.0)?;
+                if mb <= 0.0 {
+                    return Err(repro::Error::config(format!(
+                        "--kv-mem-mb {mb}: wants a positive megabyte budget"
+                    )));
+                }
+                sched.kv_blocks_total =
+                    (((mb as f64) * 1e6 / kv_block_bytes as f64).floor() as usize).max(1);
+                println!(
+                    "serve: --kv-mem-mb {mb}: {} blocks of {} bytes at the active KV layout",
+                    sched.kv_blocks_total, kv_block_bytes
+                );
+            }
             println!(
                 "serve: model {} ({:.2} MB resident, {:.3} bits/weight), max batch {}",
                 model.cfg.name,
@@ -610,6 +655,9 @@ fn run(args: Args) -> repro::Result<()> {
                     .max(1),
                 slow_reader_ms: args
                     .u64_or("slow-reader-ms", repro::serve::server::DEFAULT_SLOW_READER_MS)?,
+                kv_spill: args.get("kv-spill").map(String::from),
+                kv_spill_blocks: args.usize_or("kv-spill-blocks", 0)?,
+                prefix_store: args.flag("prefix-store"),
             };
             repro::serve::server::run(Arc::new(model), draft, opts)?;
         }
@@ -651,6 +699,8 @@ fn run(args: Args) -> repro::Result<()> {
                 deadline_ms: args.u64_or("deadline-ms", 0)?,
                 request_timeout_ms: args.u64_or("request-timeout-ms", 0)?,
                 max_retries: args.usize_or("retries", 4)?,
+                sessions: args.usize_or("sessions", 0)?,
+                rejoin_ms: args.u64_or("rejoin-ms", 100)?,
             };
             let rep = run_load(&o)?;
             println!(
@@ -699,6 +749,39 @@ fn run(args: Args) -> repro::Result<()> {
                     s.fallbacks,
                     s.draft_peak_resident_blocks
                 );
+            }
+            if o.sessions > 0 {
+                println!(
+                    "  sessions: {}/{} resumed ({} with zero re-prefill), \
+                     resume time-to-first-token: {}",
+                    rep.sessions_resumed,
+                    o.sessions,
+                    rep.resume_zero_prefill,
+                    rep.resume_latency.fmt_ms()
+                );
+            }
+            if let Some(t) = &rep.tier {
+                println!(
+                    "  tier: {} blocks on disk ({:.2} MB), {} preemptions / {} resumes, \
+                     {} session resumes, {} restore failures",
+                    t.spilled_blocks,
+                    t.spilled_bytes as f64 / 1e6,
+                    t.preemptions,
+                    t.resumes,
+                    t.session_resumes,
+                    t.restore_failures
+                );
+                if t.prefix_hits + t.prefix_misses > 0 {
+                    println!(
+                        "  prefix store: {} pages, {} hits / {} misses ({:.1}% hit rate), \
+                         {} promotes",
+                        t.prefix_pages,
+                        t.prefix_hits,
+                        t.prefix_misses,
+                        t.prefix_hit_rate() * 100.0,
+                        t.promotes
+                    );
+                }
             }
             if !rep.tokens_by_route.is_empty() && !o.adapter_mix.is_empty() {
                 for (route, toks) in &rep.tokens_by_route {
@@ -1108,6 +1191,47 @@ fn write_bench_serve(
         })
         .collect();
     fields.push(("samples".to_string(), Json::Arr(samples)));
+    // Session suspend/resume scenario: present whenever session clients
+    // ran, whether or not the server could actually park them.
+    if o.sessions > 0 {
+        fields.push((
+            "sessions".to_string(),
+            Json::Obj(vec![
+                ("clients".to_string(), Json::from(o.sessions)),
+                ("rejoin_ms".to_string(), Json::from(o.rejoin_ms as usize)),
+                ("resumed".to_string(), Json::from(rep.sessions_resumed)),
+                ("zero_prefill".to_string(), Json::from(rep.resume_zero_prefill)),
+                ("resume_ttft_p50_ms".to_string(), ms(rep.resume_latency.p50_s)),
+                ("resume_ttft_p99_ms".to_string(), ms(rep.resume_latency.p99_s)),
+            ]),
+        ));
+    }
+    // Tiered-KV scrape: present only when the server ran with --kv-spill.
+    if let Some(t) = &rep.tier {
+        fields.push((
+            "tier".to_string(),
+            Json::Obj(vec![
+                ("spilled_blocks".to_string(), Json::from(t.spilled_blocks)),
+                ("spilled_bytes".to_string(), Json::from(t.spilled_bytes)),
+                ("slots_resident".to_string(), Json::from(t.slots_resident)),
+                ("slots_total".to_string(), Json::from(t.slots_total)),
+                ("preemptions".to_string(), Json::from(t.preemptions)),
+                ("resumes".to_string(), Json::from(t.resumes)),
+                ("block_restores".to_string(), Json::from(t.block_restores)),
+                ("restore_failures".to_string(), Json::from(t.restore_failures)),
+                ("sessions_stored".to_string(), Json::from(t.sessions_stored)),
+                ("session_resumes".to_string(), Json::from(t.session_resumes)),
+                ("prefix_pages".to_string(), Json::from(t.prefix_pages)),
+                ("prefix_hits".to_string(), Json::from(t.prefix_hits)),
+                ("prefix_misses".to_string(), Json::from(t.prefix_misses)),
+                ("promotes".to_string(), Json::from(t.promotes)),
+                (
+                    "prefix_hit_rate".to_string(),
+                    Json::Num((t.prefix_hit_rate() * 1000.0).round() / 1000.0),
+                ),
+            ]),
+        ));
+    }
     // `cargo bench --bench decode` merges a per-k "spec" sweep array and
     // `repro bench-kv` a "kv_quant" array into the same artifact; carry
     // both across a bench-serve rewrite.

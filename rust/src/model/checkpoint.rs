@@ -155,6 +155,15 @@ const fn crc32_table() -> [u32; 256] {
 
 static CRC_TABLE: [u32; 256] = crc32_table();
 
+/// One-shot CRC32 over a byte slice (same table and init/finish as the
+/// checkpoint trailers).  Shared with the KV spill file so both on-disk
+/// formats agree on what "corrupt" means.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
 /// Incremental CRC32 state.
 #[derive(Clone, Copy)]
 struct Crc32(u32);

@@ -15,7 +15,7 @@
 //! ```text
 //! spec      := clause ("," clause)*
 //! clause    := point ":" rate ":" seed
-//! point     := "alloc" | "adapter_io" | "tick_panic" | "conn_write"
+//! point     := "alloc" | "adapter_io" | "tick_panic" | "conn_write" | "spill_io"
 //! rate      := FLOAT          -- independent probability per evaluation
 //!            | "1/" N         -- every Nth evaluation fires
 //!            | "@" N          -- exactly the Nth evaluation fires (one-shot)
@@ -37,6 +37,9 @@
 //!   the engine's `catch_unwind` + quarantine path.
 //! * `conn_write` — a connection writer thread drops its socket,
 //!   exercising dead-connection cancellation and page reclamation.
+//! * `spill_io` — a tiered-KV spill-file slot read fails as if the
+//!   stored CRC did not match, exercising the restore-failure path
+//!   (`internal` finish for that sequence only, never engine poison).
 //!
 //! A plan with a clause for one point leaves all other points off; the
 //! off path is a single branch on a plain enum (no atomics touched), so
@@ -56,10 +59,13 @@ pub enum FaultPoint {
     TickPanic = 2,
     /// Per-connection output write.
     ConnWrite = 3,
+    /// Tiered-KV spill-file slot read (restore path).
+    SpillIo = 4,
 }
 
-const N_POINTS: usize = 4;
-const POINT_NAMES: [&str; N_POINTS] = ["alloc", "adapter_io", "tick_panic", "conn_write"];
+const N_POINTS: usize = 5;
+const POINT_NAMES: [&str; N_POINTS] =
+    ["alloc", "adapter_io", "tick_panic", "conn_write", "spill_io"];
 
 /// How often one injection point fires.
 #[derive(Clone, Copy, Debug)]

@@ -31,7 +31,7 @@
 //! * [`fault`] — the deterministic fault-injection harness
 //!   (`--fault` / `REPRO_FAULT`) that exercises the engine's recovery
 //!   paths: pool-allocation failures, adapter-load I/O errors, injected
-//!   tick panics, and broken connection writes.
+//!   tick panics, broken connection writes, and spill-file read errors.
 
 pub mod fault;
 pub mod profile;
@@ -120,6 +120,25 @@ pub struct EngineMetrics {
     pub quarantines_total: Arc<Counter>,
     pub slow_reader_evictions_total: Arc<Counter>,
     pub faults_injected_total: Arc<Counter>,
+    /// Tiered-KV series (`--kv-spill`); all zero when no tier is
+    /// attached.  Monotonic tallies are exposed as gauges set from the
+    /// tier's own counters each tick, so the hot path stays a snapshot
+    /// copy instead of per-event atomics.
+    pub tier_blocks_spilled: Arc<Gauge>,
+    pub tier_bytes_spilled: Arc<Gauge>,
+    pub tier_spill_writes: Arc<Gauge>,
+    pub tier_spill_reads: Arc<Gauge>,
+    pub tier_preemptions: Arc<Gauge>,
+    pub tier_resumes: Arc<Gauge>,
+    pub tier_suspended: Arc<Gauge>,
+    pub tier_restores: Arc<Gauge>,
+    pub tier_restore_failures: Arc<Gauge>,
+    pub tier_sessions_stored: Arc<Gauge>,
+    pub tier_session_resumes: Arc<Gauge>,
+    pub tier_prefix_pages: Arc<Gauge>,
+    pub tier_prefix_hits: Arc<Gauge>,
+    pub tier_prefix_misses: Arc<Gauge>,
+    pub tier_promote_seconds: Arc<Histo>,
 }
 
 impl EngineMetrics {
@@ -280,6 +299,70 @@ impl EngineMetrics {
                 "faults_injected_total",
                 &[],
                 "Faults fired by the injection harness (--fault / REPRO_FAULT)",
+            ),
+            tier_blocks_spilled: reg.gauge(
+                "tier_blocks_spilled",
+                &[],
+                "KV pages currently spilled to the disk tier",
+            ),
+            tier_bytes_spilled: reg.gauge(
+                "tier_bytes_spilled",
+                &[],
+                "Live payload bytes in the spill file",
+            ),
+            tier_spill_writes: reg.gauge("tier_spill_writes", &[], "Spill-slot writes so far"),
+            tier_spill_reads: reg.gauge("tier_spill_reads", &[], "Spill-slot reads so far"),
+            tier_preemptions: reg.gauge(
+                "tier_preemptions",
+                &[],
+                "Sequences preempted to the disk tier so far",
+            ),
+            tier_resumes: reg.gauge(
+                "tier_resumes",
+                &[],
+                "Suspended sequences resumed from the disk tier so far",
+            ),
+            tier_suspended: reg.gauge(
+                "tier_suspended",
+                &[],
+                "Sequences suspended on the disk tier right now",
+            ),
+            tier_restores: reg.gauge("tier_restores", &[], "KV pages restored from disk so far"),
+            tier_restore_failures: reg.gauge(
+                "tier_restore_failures",
+                &[],
+                "Failed page restores (CRC / I/O / injected faults)",
+            ),
+            tier_sessions_stored: reg.gauge(
+                "tier_sessions_stored",
+                &[],
+                "Sessions parked on the disk tier right now",
+            ),
+            tier_session_resumes: reg.gauge(
+                "tier_session_resumes",
+                &[],
+                "Session continuations served from spilled state",
+            ),
+            tier_prefix_pages: reg.gauge(
+                "tier_prefix_pages",
+                &[],
+                "Pages published in the persistent prefix store",
+            ),
+            tier_prefix_hits: reg.gauge(
+                "tier_prefix_hits",
+                &[],
+                "Admissions that matched at least one stored prefix page",
+            ),
+            tier_prefix_misses: reg.gauge(
+                "tier_prefix_misses",
+                &[],
+                "Admissions that consulted the prefix store and found nothing",
+            ),
+            tier_promote_seconds: reg.histogram(
+                "tier_promote_seconds",
+                &[],
+                "Prefix promotion latency (disk -> pool page run)",
+                SECONDS_BOUNDS,
             ),
         }
     }

@@ -24,9 +24,12 @@ use crate::serve::json::Json;
 /// are the speculative cycle's two model passes; `decode` is the plain
 /// batched step (per-sequence page growth + forward); `sample` covers
 /// next-token picks and speculative acceptance walks; `emit` is event
-/// packaging, per-adapter accounting, and eviction.
-pub const PHASE_NAMES: [&str; 7] =
-    ["admit", "prefill", "draft", "verify", "decode", "sample", "emit"];
+/// packaging, per-adapter accounting, and eviction; `tier` is the disk
+/// tier's tick work — resuming suspended sequences from the spill file
+/// and publishing sealed prefix pages (preempt spills, session restores,
+/// and prefix promotions happen inside admission and land in `admit`).
+pub const PHASE_NAMES: [&str; 8] =
+    ["admit", "prefill", "draft", "verify", "decode", "sample", "emit", "tier"];
 
 /// Number of tick phases (`phase_ns` length).
 pub const N_PHASES: usize = PHASE_NAMES.len();
@@ -38,6 +41,7 @@ pub const PH_VERIFY: usize = 3;
 pub const PH_DECODE: usize = 4;
 pub const PH_SAMPLE: usize = 5;
 pub const PH_EMIT: usize = 6;
+pub const PH_TIER: usize = 7;
 
 /// Per-kernel-kind accumulation attributed to one tick (present only
 /// when profiling is enabled; see [`crate::obs::profile`]).

@@ -39,6 +39,7 @@
 //! `KvLayout::F32` keeps the exact pre-quantization behavior and remains
 //! the bitwise oracle.
 
+use crate::error::{Error, Result};
 use crate::kernels::dequant::{kv_dequant_scalar, KvQuantView};
 use crate::quant::{affine, pack_codes};
 
@@ -532,6 +533,119 @@ impl BlockPool {
         &self.blocks[id].v[off..off + t * self.d]
     }
 
+    /// Largest byte payload [`export_block`](Self::export_block) can
+    /// produce: one tag byte plus both f32 staging planes.  The spill
+    /// file sizes its slots to this so staged and sealed pages share one
+    /// slot geometry.
+    pub fn max_export_bytes(&self) -> usize {
+        1 + self.f32_block_bytes()
+    }
+
+    /// Serialize block `id`'s exact storage state: a tag byte (0 =
+    /// staged, 1 = sealed) followed by the verbatim plane bytes (f32
+    /// little-endian for staged pages; packed codes + LE scales + zeros
+    /// per plane for sealed ones).  `import_block` of these bytes
+    /// reconstructs a bit-identical page — the tier's whole correctness
+    /// story rests on this being a byte copy, not a re-encode.
+    pub fn export_block(&self, id: usize) -> Vec<u8> {
+        let b = &self.blocks[id];
+        match &b.q {
+            None => {
+                let mut out = Vec::with_capacity(1 + self.f32_block_bytes());
+                out.push(0u8);
+                for plane in [&b.k, &b.v] {
+                    for &x in plane.iter() {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                out
+            }
+            Some(q) => {
+                let mut out = Vec::with_capacity(1 + self.quant_block_bytes());
+                out.push(1u8);
+                for p in [&q.k, &q.v] {
+                    out.extend_from_slice(&p.codes);
+                    for &s in &p.scales {
+                        out.extend_from_slice(&s.to_le_bytes());
+                    }
+                    out.extend_from_slice(&p.zeros);
+                }
+                out
+            }
+        }
+    }
+
+    /// Restore an [`export_block`](Self::export_block) record into block
+    /// `id` (a freshly `try_alloc`'d page, so currently staged),
+    /// recreating the exact staged-or-sealed state the bytes were
+    /// exported from.  Errors on a record whose tag or length does not
+    /// match this pool's shape/layout — the caller treats that like a
+    /// failed disk read.
+    pub fn import_block(&mut self, id: usize, bytes: &[u8]) -> Result<()> {
+        let n = self.plane_len();
+        let Some((tag, payload)) = bytes.split_first() else {
+            return Err(Error::config("kv spill: empty page record"));
+        };
+        match *tag {
+            0 => {
+                if payload.len() != 2 * n * 4 {
+                    return Err(Error::config(format!(
+                        "kv spill: staged page record is {} bytes, pool shape needs {}",
+                        payload.len(),
+                        2 * n * 4
+                    )));
+                }
+                debug_assert!(self.blocks[id].q.is_none(), "import into a sealed page");
+                let b = &mut self.blocks[id];
+                for (dst, src) in b.k.iter_mut().zip(payload[..4 * n].chunks_exact(4)) {
+                    *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+                }
+                for (dst, src) in b.v.iter_mut().zip(payload[4 * n..].chunks_exact(4)) {
+                    *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+                }
+                Ok(())
+            }
+            1 => {
+                let (bits, group) = match self.layout {
+                    KvLayout::F32 => {
+                        return Err(Error::config(
+                            "kv spill: sealed page record in an f32 pool",
+                        ))
+                    }
+                    KvLayout::Quant { bits, group } => (bits, group),
+                };
+                let codes_len = n * bits as usize / 8;
+                let groups = n / group;
+                let plane_bytes = codes_len + groups * 4 + groups;
+                if payload.len() != 2 * plane_bytes {
+                    return Err(Error::config(format!(
+                        "kv spill: sealed page record is {} bytes, pool layout needs {}",
+                        payload.len(),
+                        2 * plane_bytes
+                    )));
+                }
+                let parse_plane = |p: &[u8]| QuantPlane {
+                    codes: p[..codes_len].to_vec(),
+                    scales: p[codes_len..codes_len + 4 * groups]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                    zeros: p[codes_len + 4 * groups..].to_vec(),
+                };
+                let k = parse_plane(&payload[..plane_bytes]);
+                let v = parse_plane(&payload[plane_bytes..]);
+                let (fb, qb) = (self.f32_block_bytes(), self.quant_block_bytes());
+                let b = &mut self.blocks[id];
+                b.k = Vec::new();
+                b.v = Vec::new();
+                b.q = Some(QuantBlock { k, v });
+                self.note_bytes(fb, qb);
+                Ok(())
+            }
+            t => Err(Error::config(format!("kv spill: unknown page tag {t}"))),
+        }
+    }
+
     /// Rebuild refcounts, free list, and sharing counts from scratch out
     /// of the surviving sequences' block tables (panic recovery: after an
     /// unwind mid-step the incremental bookkeeping cannot be trusted).
@@ -796,6 +910,45 @@ mod tests {
         assert!(!pool.is_sealed(a));
         assert_eq!(pool.k_rows(a, 1, 0, bs), &sealed_k[..]);
         assert_eq!(pool.stats().resident_bytes, fb, "reopened page costs f32 bytes");
+    }
+
+    #[test]
+    fn export_import_roundtrips_staged_and_sealed() {
+        let (layers, d, bs, group) = (2usize, 8usize, 4usize, 8usize);
+        let mut pool =
+            BlockPool::with_layout(layers, d, bs, 4, KvLayout::Quant { bits: 4, group });
+        let a = pool.try_alloc().unwrap();
+        for layer in 0..layers {
+            let k: Vec<f32> = (0..bs * d).map(|i| (i as f32 * 0.7 + layer as f32).sin()).collect();
+            let v: Vec<f32> = (0..bs * d).map(|i| (i as f32 * 0.3 - layer as f32).cos()).collect();
+            pool.write_rows(a, layer, 0, &k, &v);
+        }
+
+        // staged roundtrip: restored planes are bit-identical
+        let staged = pool.export_block(a);
+        assert_eq!(staged[0], 0);
+        assert_eq!(staged.len(), pool.max_export_bytes());
+        let b = pool.try_alloc().unwrap();
+        pool.import_block(b, &staged).unwrap();
+        assert_eq!(pool.k_rows(b, 1, 0, bs), pool.k_rows(a, 1, 0, bs));
+        assert_eq!(pool.v_rows(b, 0, 0, bs), pool.v_rows(a, 0, 0, bs));
+        assert_eq!(pool.export_block(b), staged, "re-export is byte-identical");
+
+        // sealed roundtrip: codes + grid survive verbatim
+        pool.seal_block(a);
+        let sealed = pool.export_block(a);
+        assert_eq!(sealed[0], 1);
+        assert!(sealed.len() < staged.len(), "sealed record is compressed");
+        let c = pool.try_alloc().unwrap();
+        pool.import_block(c, &sealed).unwrap();
+        assert!(pool.is_sealed(c));
+        assert_eq!(pool.export_block(c), sealed, "re-export is byte-identical");
+
+        // malformed records are rejected, not panicked on
+        let d2 = pool.try_alloc().unwrap();
+        assert!(pool.import_block(d2, &[]).is_err());
+        assert!(pool.import_block(d2, &sealed[..sealed.len() - 1]).is_err());
+        assert!(pool.import_block(d2, &[9, 1, 2]).is_err());
     }
 
     #[test]

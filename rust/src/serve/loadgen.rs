@@ -34,6 +34,18 @@
 //! cannot give (peak/median batch size, occupancy ramp).  The series and
 //! its summaries ride on `BENCH_serve.json`.
 //!
+//! `sessions > 0` adds that many session clients to the mix (against a
+//! `--kv-spill` server): each opens a `"session"`-tagged request, streams
+//! half its token budget to completion, hangs up the connection, sleeps
+//! `rejoin_ms`, then reconnects and continues the same session with
+//! `prompt = original prompt + every received token`.  The continuation
+//! resumes from the server's parked KV pages — the `done` frame's
+//! `shared_prefix_tokens` equals `len(prompt) - 1` when not a single
+//! position was re-prefilled — and its time-to-first-token is the resume
+//! latency the report summarizes.  The post-run scrape also picks up the
+//! stats frame's `tier` object (spill occupancy, preemptions, prefix
+//! hit rate) when the server is tiered.
+//!
 //! The generator is resilient by design (it doubles as the chaos-test
 //! driver): connect and transport failures reconnect with jittered
 //! exponential backoff, `overloaded` rejections honor the server's
@@ -95,6 +107,14 @@ pub struct LoadOptions {
     /// Max re-attempts per request after `overloaded` rejections or
     /// transport failures before the request is counted terminal.
     pub max_retries: usize,
+    /// Session clients run alongside the normal load: each streams half
+    /// its `max_new` budget under a `"session"` id, drops the connection,
+    /// waits `rejoin_ms`, reconnects and continues the session (prompt =
+    /// original + every received token).  Wants a `--kv-spill` server;
+    /// without one the continuation simply re-prefills.  0 = off.
+    pub sessions: usize,
+    /// How long a session client stays disconnected before rejoining.
+    pub rejoin_ms: u64,
 }
 
 /// Per-request observation (offsets from the run epoch, seconds).
@@ -108,6 +128,10 @@ struct ReqRecord {
     tokens: Vec<i64>,
     /// Adapter this request was routed to (`None` = baseline).
     adapter: Option<String>,
+    /// KV positions this request reused instead of prefilling (donor
+    /// fork, session resume, or prefix-store promotion), from the done
+    /// frame's `stats.shared_prefix_tokens`.
+    shared_prefix_tokens: usize,
 }
 
 /// KV block accounting scraped from the server's stats frame after the
@@ -164,6 +188,39 @@ impl SpecSnapshot {
     }
 }
 
+/// Tiered-KV counters scraped from the stats frame's `tier` object
+/// (absent when the server runs without `--kv-spill`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierSnapshot {
+    pub spilled_blocks: usize,
+    pub spilled_bytes: usize,
+    pub slots_resident: usize,
+    pub slots_total: usize,
+    pub preemptions: usize,
+    pub resumes: usize,
+    pub suspended: usize,
+    pub block_restores: usize,
+    pub restore_failures: usize,
+    pub sessions_stored: usize,
+    pub session_resumes: usize,
+    pub prefix_pages: usize,
+    pub prefix_hits: usize,
+    pub prefix_misses: usize,
+    pub promotes: usize,
+}
+
+impl TierSnapshot {
+    /// Fraction of prefix-store lookups that found reusable pages; 0.0
+    /// when the store was never consulted.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_hits + self.prefix_misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / lookups as f64
+    }
+}
+
 /// One registered adapter's registry accounting scraped from the stats
 /// frame's `adapters` array.
 #[derive(Clone, Debug, Default)]
@@ -185,6 +242,7 @@ pub struct AdapterSnapshot {
 pub struct StatsSnapshot {
     pub kv: KvSnapshot,
     pub spec: Option<SpecSnapshot>,
+    pub tier: Option<TierSnapshot>,
     pub adapters: Vec<AdapterSnapshot>,
     pub baseline_tokens: usize,
     /// Sequences decoding in the batch at scrape time.
@@ -223,6 +281,9 @@ pub struct LoadReport {
     /// Post-run speculative-decoding scrape (`None` when the server does
     /// not speculate or the scrape failed).
     pub spec: Option<SpecSnapshot>,
+    /// Post-run tiered-KV scrape (`None` when the server runs without
+    /// `--kv-spill` or the scrape failed).
+    pub tier: Option<TierSnapshot>,
     /// Post-run registry scrape: one entry per adapter still registered
     /// (churned-away adapters are gone by then, by design).
     pub adapters: Vec<AdapterSnapshot>,
@@ -251,6 +312,15 @@ pub struct LoadReport {
     /// Requests that ended in a non-retryable error or exhausted
     /// transport retries.
     pub failed: usize,
+    /// Session continuations that completed (out of `sessions` started).
+    pub sessions_resumed: usize,
+    /// Time-to-first-token of the session continuations — how long a
+    /// rejoining client waits for its first new token.
+    pub resume_latency: LatencySummary,
+    /// Continuations that re-prefilled NOTHING: the done frame's
+    /// `shared_prefix_tokens` covered every prompt position but the one
+    /// the first decode step consumes.
+    pub resume_zero_prefill: usize,
 }
 
 impl LoadReport {
@@ -398,6 +468,12 @@ fn stream_one(
                 }
                 let deadline_finish =
                     j.get("finish").and_then(Json::as_str) == Some("deadline");
+                let shared = j
+                    .get("stats")
+                    .and_then(|s| s.get("shared_prefix_tokens"))
+                    .and_then(Json::as_i64)
+                    .unwrap_or(0)
+                    .max(0) as usize;
                 return Attempt::Done(
                     ReqRecord {
                         id: id.to_string(),
@@ -407,6 +483,7 @@ fn stream_one(
                         n_tokens: streamed,
                         tokens,
                         adapter: adapter.map(String::from),
+                        shared_prefix_tokens: shared,
                     },
                     deadline_finish,
                 );
@@ -480,60 +557,147 @@ fn run_client(addr: &str, client: usize, o: &LoadOptions, epoch: Instant) -> Cli
             o.max_new
         );
 
-        let mut attempts = 0usize;
-        loop {
-            let Some((writer, reader)) = conn.as_mut() else {
-                // (Re)connect with backoff; the request rides the retry
-                // budget with the transport.
-                if attempts >= o.max_retries {
-                    st.failed += 1;
-                    break;
-                }
-                attempts += 1;
-                st.retried += 1;
-                backoff(attempts, 0, &mut rng);
-                conn = connect(addr, o.request_timeout_ms);
-                continue;
-            };
-            match stream_one(writer, reader, &line, &id, adapter, epoch) {
-                Attempt::Done(rec, deadline_finish) => {
-                    if deadline_finish {
-                        st.deadline += 1;
-                    }
-                    st.records.push(rec);
-                    break;
-                }
-                Attempt::Deadline => {
-                    st.deadline += 1;
-                    break;
-                }
-                Attempt::Overloaded(after_ms) => {
-                    if attempts >= o.max_retries {
-                        st.rejected += 1;
-                        break;
-                    }
-                    attempts += 1;
-                    st.retried += 1;
-                    backoff(attempts, after_ms, &mut rng);
-                }
-                Attempt::Transport => {
-                    conn = None; // rebuild on the next spin
-                    if attempts >= o.max_retries {
-                        st.failed += 1;
-                        break;
-                    }
-                    // the reconnect arm above charges the retry
-                }
-                Attempt::Fatal(msg) => {
-                    eprintln!("bench-serve: {msg}");
-                    st.failed += 1;
-                    break;
-                }
-            }
+        if let Some(rec) = drive_request(addr, &mut conn, &line, &id, adapter, o, epoch, &mut rng, &mut st) {
+            st.records.push(rec);
         }
     }
 
     st
+}
+
+/// Drive one request line to a terminal outcome under the shared
+/// retry/backoff policy.  Non-completion terminals are charged to `st`'s
+/// buckets; a completed stream is returned for the caller to record.
+#[allow(clippy::too_many_arguments)]
+fn drive_request(
+    addr: &str,
+    conn: &mut Option<(TcpStream, BufReader<TcpStream>)>,
+    line: &str,
+    id: &str,
+    adapter: Option<&str>,
+    o: &LoadOptions,
+    epoch: Instant,
+    rng: &mut Rng,
+    st: &mut ClientStats,
+) -> Option<ReqRecord> {
+    let mut attempts = 0usize;
+    loop {
+        let Some((writer, reader)) = conn.as_mut() else {
+            // (Re)connect with backoff; the request rides the retry
+            // budget with the transport.
+            if attempts >= o.max_retries {
+                st.failed += 1;
+                return None;
+            }
+            attempts += 1;
+            st.retried += 1;
+            backoff(attempts, 0, rng);
+            *conn = connect(addr, o.request_timeout_ms);
+            continue;
+        };
+        match stream_one(writer, reader, line, id, adapter, epoch) {
+            Attempt::Done(rec, deadline_finish) => {
+                if deadline_finish {
+                    st.deadline += 1;
+                }
+                return Some(rec);
+            }
+            Attempt::Deadline => {
+                st.deadline += 1;
+                return None;
+            }
+            Attempt::Overloaded(after_ms) => {
+                if attempts >= o.max_retries {
+                    st.rejected += 1;
+                    return None;
+                }
+                attempts += 1;
+                st.retried += 1;
+                backoff(attempts, after_ms, rng);
+            }
+            Attempt::Transport => {
+                *conn = None; // rebuild on the next spin
+                if attempts >= o.max_retries {
+                    st.failed += 1;
+                    return None;
+                }
+                // the reconnect arm above charges the retry
+            }
+            Attempt::Fatal(msg) => {
+                eprintln!("bench-serve: {msg}");
+                st.failed += 1;
+                return None;
+            }
+        }
+    }
+}
+
+/// One session client's outcome: its two requests' terminal accounting
+/// plus the continuation's resume observations.
+#[derive(Default)]
+struct SessionStats {
+    st: ClientStats,
+    /// TTFT of the continuation request (None if it never completed).
+    resume_ttft: Option<f64>,
+    /// The continuation reused every reusable position (zero re-prefill).
+    zero_prefill: bool,
+}
+
+/// One session client: open a `"session"`-tagged stream, consume half
+/// the token budget to completion, hang up, wait `rejoin_ms`, reconnect
+/// and continue the session with the prompt extended by every received
+/// token.  Against a `--kv-spill` server the continuation resumes from
+/// the parked pages instead of re-prefilling.
+fn run_session_client(addr: &str, idx: usize, o: &LoadOptions, epoch: Instant) -> SessionStats {
+    let mut rng = Rng::new(o.seed ^ (idx as u64 ^ 0x5E55).wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1));
+    let mut out = SessionStats::default();
+    let session = format!("sess-{idx}");
+    let first_new = (o.max_new / 2).max(1);
+    let second_new = o.max_new.saturating_sub(first_new).max(1);
+    let prompt: Vec<i64> = (0..o.prompt_len.max(2)).map(|_| rng.below(o.vocab) as i64).collect();
+    let join = |toks: &[i64]| toks.iter().map(i64::to_string).collect::<Vec<_>>().join(",");
+
+    // Leg A: open the session and stream its first half to completion.
+    let id_a = format!("s{idx}-a");
+    let line_a = format!(
+        "{{\"id\":\"{id_a}\",\"prompt\":[{}],\"max_new\":{first_new},\"session\":\"{session}\"}}\n",
+        join(&prompt)
+    );
+    let mut conn = connect(addr, o.request_timeout_ms);
+    let Some(rec_a) =
+        drive_request(addr, &mut conn, &line_a, &id_a, None, o, epoch, &mut rng, &mut out.st)
+    else {
+        // The continuation can never run; charge it so every request
+        // stays terminally accounted.
+        out.st.failed += 1;
+        return out;
+    };
+
+    // Hang up: dropping both socket halves closes the connection, which
+    // parks the (already finished) session server-side.
+    conn = None;
+    std::thread::sleep(std::time::Duration::from_millis(o.rejoin_ms));
+
+    // Leg B: rejoin and continue from the full token history.
+    let mut prompt2 = prompt;
+    prompt2.extend(rec_a.tokens.iter().copied());
+    out.st.records.push(rec_a);
+    let id_b = format!("s{idx}-b");
+    let line_b = format!(
+        "{{\"id\":\"{id_b}\",\"prompt\":[{}],\"max_new\":{second_new},\"session\":\"{session}\"}}\n",
+        join(&prompt2)
+    );
+    conn = connect(addr, o.request_timeout_ms);
+    if let Some(rec) =
+        drive_request(addr, &mut conn, &line_b, &id_b, None, o, epoch, &mut rng, &mut out.st)
+    {
+        out.resume_ttft = Some(rec.first_token_at - rec.sent_at);
+        // The first decode step consumes the final prompt position, so
+        // prompt2.len() - 1 reused positions means nothing re-prefilled.
+        out.zero_prefill = rec.shared_prefix_tokens + 1 >= prompt2.len();
+        out.st.records.push(rec);
+    }
+    out
 }
 
 /// Which adapter this client routes to, if any.
@@ -666,7 +830,8 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     let epoch = Instant::now();
     let churn_done = std::sync::atomic::AtomicBool::new(false);
     let sampler_done = std::sync::atomic::AtomicBool::new(false);
-    let (results, churn_cycles, samples): (Vec<ClientStats>, usize, Vec<LoadSample>) =
+    type ScopeOut = (Vec<ClientStats>, Vec<SessionStats>, usize, Vec<LoadSample>);
+    let (results, session_results, churn_cycles, samples): ScopeOut =
         std::thread::scope(|s| {
             let churn = o.churn_adapter.as_ref().map(|(name, path)| {
                 let done = &churn_done;
@@ -679,6 +844,9 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
             let handles: Vec<_> = (0..o.clients)
                 .map(|ci| s.spawn(move || run_client(&o.addr, ci, o, epoch)))
                 .collect();
+            let session_handles: Vec<_> = (0..o.sessions)
+                .map(|si| s.spawn(move || run_session_client(&o.addr, si, o, epoch)))
+                .collect();
             let results = handles
                 .into_iter()
                 .map(|h| match h.join() {
@@ -688,6 +856,19 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
                         ClientStats {
                             failed: o.requests_per_client,
                             ..ClientStats::default()
+                        }
+                    }
+                })
+                .collect();
+            let session_results = session_handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(ss) => ss,
+                    Err(_) => {
+                        eprintln!("bench-serve: session client thread panicked");
+                        SessionStats {
+                            st: ClientStats { failed: 2, ..ClientStats::default() },
+                            ..SessionStats::default()
                         }
                     }
                 })
@@ -712,7 +893,7 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
                 Some(h) => h.join().unwrap_or_default(),
                 None => Vec::new(),
             };
-            (results, cycles, samples)
+            (results, session_results, cycles, samples)
         });
     let wall_secs = epoch.elapsed().as_secs_f64();
 
@@ -730,7 +911,16 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
 
     let mut records = Vec::new();
     let (mut rejected, mut deadline, mut retried, mut failed) = (0usize, 0usize, 0usize, 0usize);
-    for st in results {
+    let mut resume_ttfts = Vec::new();
+    let mut resume_zero_prefill = 0usize;
+    let session_stats = session_results.into_iter().map(|ss| {
+        if ss.resume_ttft.is_some() {
+            resume_ttfts.push(ss.resume_ttft.unwrap());
+            resume_zero_prefill += ss.zero_prefill as usize;
+        }
+        ss.st
+    });
+    for st in results.into_iter().chain(session_stats) {
         records.extend(st.records);
         rejected += st.rejected;
         deadline += st.deadline;
@@ -740,7 +930,9 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
     if let Some(path) = &o.transcript {
         write_transcript(path, &records)?;
     }
-    let requests = o.clients * o.requests_per_client;
+    // Every session client owns exactly two requests (a leg that never
+    // ran because its predecessor failed is charged as failed).
+    let requests = o.clients * o.requests_per_client + o.sessions * 2;
     let total_tokens: usize = records.iter().map(|r| r.n_tokens).sum();
     let ttft: Vec<f64> = records.iter().map(|r| r.first_token_at - r.sent_at).collect();
     let total: Vec<f64> = records.iter().map(|r| r.done_at - r.sent_at).collect();
@@ -759,6 +951,7 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         peak_concurrent_streams: peak_overlap(&records),
         kv: stats.as_ref().map(|s| s.kv),
         spec: stats.as_ref().and_then(|s| s.spec),
+        tier: stats.as_ref().and_then(|s| s.tier),
         adapters: stats.as_ref().map(|s| s.adapters.clone()).unwrap_or_default(),
         baseline_tokens: stats.as_ref().map(|s| s.baseline_tokens).unwrap_or(0),
         tokens_by_route: by_route.into_iter().collect(),
@@ -768,6 +961,9 @@ pub fn run_load(o: &LoadOptions) -> Result<LoadReport> {
         deadline,
         retried,
         failed,
+        sessions_resumed: resume_ttfts.len(),
+        resume_latency: LatencySummary::from_secs(resume_ttfts),
+        resume_zero_prefill,
     })
 }
 
@@ -838,6 +1034,26 @@ pub fn fetch_stats(addr: &str) -> Result<StatsSnapshot> {
                 .max(0) as usize,
         }
     });
+    let tier = j.get("tier").map(|tj| {
+        let f = |name: &str| tj.get(name).and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+        TierSnapshot {
+            spilled_blocks: f("spilled_blocks"),
+            spilled_bytes: f("spilled_bytes"),
+            slots_resident: f("slots_resident"),
+            slots_total: f("slots_total"),
+            preemptions: f("preemptions"),
+            resumes: f("resumes"),
+            suspended: f("suspended"),
+            block_restores: f("block_restores"),
+            restore_failures: f("restore_failures"),
+            sessions_stored: f("sessions_stored"),
+            session_resumes: f("session_resumes"),
+            prefix_pages: f("prefix_pages"),
+            prefix_hits: f("prefix_hits"),
+            prefix_misses: f("prefix_misses"),
+            promotes: f("promotes"),
+        }
+    });
     let adapters = j
         .get("adapters")
         .and_then(Json::as_arr)
@@ -869,6 +1085,7 @@ pub fn fetch_stats(addr: &str) -> Result<StatsSnapshot> {
     Ok(StatsSnapshot {
         kv,
         spec,
+        tier,
         adapters,
         baseline_tokens,
         active: top("active"),
@@ -890,6 +1107,7 @@ mod tests {
             n_tokens: 1,
             tokens: vec![0],
             adapter: None,
+            shared_prefix_tokens: 0,
         };
         // three overlapping, one disjoint
         let recs = vec![r(0.0, 1.0), r(0.2, 0.8), r(0.5, 1.5), r(2.0, 3.0)];
@@ -920,6 +1138,8 @@ mod tests {
             deadline_ms: 0,
             request_timeout_ms: 0,
             max_retries: 0,
+            sessions: 0,
+            rejoin_ms: 0,
         };
         assert_eq!(route_for(&o, 0), Some("a"));
         assert_eq!(route_for(&o, 1), None); // "-" = baseline
@@ -927,6 +1147,15 @@ mod tests {
         assert_eq!(route_for(&o, 3), Some("a")); // wraps round-robin
         o.adapter_mix.clear();
         assert_eq!(route_for(&o, 0), None);
+    }
+
+    #[test]
+    fn tier_prefix_hit_rate_handles_zero_lookups() {
+        let mut t = TierSnapshot::default();
+        assert_eq!(t.prefix_hit_rate(), 0.0, "no lookups must not read as a perfect rate");
+        t.prefix_hits = 3;
+        t.prefix_misses = 1;
+        assert!((t.prefix_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]
@@ -948,6 +1177,7 @@ mod tests {
             peak_concurrent_streams: 0,
             kv: None,
             spec: None,
+            tier: None,
             adapters: Vec::new(),
             baseline_tokens: 0,
             tokens_by_route: Vec::new(),
@@ -957,6 +1187,9 @@ mod tests {
             deadline: 0,
             retried: 0,
             failed: 0,
+            sessions_resumed: 0,
+            resume_latency: LatencySummary::from_secs(vec![]),
+            resume_zero_prefill: 0,
         };
         assert_eq!(r.batch_peak(), 7);
         assert_eq!(r.batch_p50(), 4);

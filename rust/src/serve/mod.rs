@@ -49,6 +49,14 @@
 //!   fault-injection harness ([`crate::obs::fault`], `--fault` /
 //!   `REPRO_FAULT`) exercises all of it; unarmed, every path is
 //!   byte-identical to the fault-free build.
+//! * [`tier`] — tiered KV: a CRC-checked spill file behind the block
+//!   pool (`--kv-spill PATH`), where pages move **verbatim** so restored
+//!   state is bit-identical.  Feeds three schedulers' worth of headroom:
+//!   preempt-to-spill instead of capacity finishes under block
+//!   exhaustion, `"session"`-tagged suspend/resume without re-prefill
+//!   across connections, and a content-keyed persistent prefix store
+//!   (`--prefix-store`) that extends CoW prefix sharing across
+//!   connections and time with promote-on-read from disk.
 //! * [`loadgen`] — the `repro bench-serve` concurrent load generator
 //!   (common-prefix prompts to exercise sharing, KV stats scrape,
 //!   mid-run `--sample-ms` batch/occupancy series, `BENCH_serve.json`);
@@ -73,6 +81,7 @@ pub mod sampling;
 pub mod scheduler;
 pub mod server;
 pub mod spec;
+pub mod tier;
 
 pub use adapters::{AdapterRegistry, AdapterStat};
 pub use block::{BlockPool, KvLayout, KvSegment, KvStats};
@@ -82,3 +91,4 @@ pub use sampling::SamplingParams;
 pub use scheduler::{FinishReason, GenRequest, RequestStats, SchedConfig, Scheduler, StepEvent};
 pub use server::{ServeOptions, Server};
 pub use spec::{generate_speculative, SpecGenReport, SpecStats};
+pub use tier::{SessionEntry, SpillFile, TierStats, TieredKv};

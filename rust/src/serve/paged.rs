@@ -58,6 +58,22 @@ impl PagedKvCache {
         }
     }
 
+    /// Rebuild a cache from a restored block table (tier restore): the
+    /// caller has already `try_alloc`'d every id in `table` and imported
+    /// the spilled bytes into them, so this just reattaches the mapping
+    /// and the committed length.  Shape comes from `pool` exactly like
+    /// [`PagedKvCache::new`].
+    pub fn from_parts(pool: &BlockPool, table: Vec<usize>, len: usize) -> Self {
+        debug_assert!(len <= table.len() * pool.block_size());
+        PagedKvCache {
+            n_layers: pool.n_layers(),
+            d: pool.d(),
+            block_size: pool.block_size(),
+            len,
+            table,
+        }
+    }
+
     /// Committed positions (the attention span of the next decode step).
     pub fn len(&self) -> usize {
         self.len

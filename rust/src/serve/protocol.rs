@@ -7,6 +7,7 @@
 //! {"id":"r2","prompt":[5],"max_new":16,"temperature":0.8,"top_k":40,"top_p":0.95,"seed":7}
 //! {"id":"r3","prompt":[5],"max_new":16,"stop":0}
 //! {"id":"r4","prompt":[5],"max_new":16,"adapter":"taskA"}
+//! {"id":"r5","prompt":[5,9],"max_new":16,"session":"alice"}
 //! {"cmd":"stats"}
 //! {"cmd":"metrics"}
 //! {"cmd":"trace","n":32}
@@ -31,8 +32,17 @@
 //! finishes early with `"finish":"deadline"` (its KV pages are released
 //! like any other finish).  The server's `--deadline-ms` supplies a
 //! default for requests that omit the field; `0` (the default) means no
-//! deadline.  `{"cmd":"stats"}` asks the engine for a one-off stats
-//! frame (KV memory + queue state).  `{"cmd":"adapter",...}` loads an
+//! deadline.  `"session"` names a resumable session on a tiered server
+//! (`--kv-spill`): when the connection drops mid-stream, the sequence's
+//! KV pages are parked verbatim on the spill file under that name
+//! instead of being recycled, and a later request carrying the same
+//! `session` whose prompt extends the parked token history resumes
+//! decoding from the stored pages with no re-prefill (the `done` frame's
+//! `shared_prefix_tokens` counts the restored positions).  Session names
+//! are client-chosen and trusted (no auth); without `--kv-spill` the
+//! field is accepted and ignored.  `{"cmd":"stats"}` asks the engine
+//! for a one-off stats frame (KV memory + queue state).
+//! `{"cmd":"adapter",...}` loads an
 //! APIQADPT sidecar into (or unloads it from) the engine's registry at
 //! runtime; an unload with sequences in flight answers
 //! `"status":"draining"` and completes when they finish.
@@ -66,6 +76,13 @@
 //!        "peak_resident_bytes":786432},
 //!  "spec":{"k":4,"proposed":480,"accepted":401,"acceptance":0.835,
 //!          "cycles":120,"fallbacks":0,"draft_kv":{...same fields as kv...}},
+//!  "tier":{"spilled_blocks":12,"spilled_bytes":786432,"slots_resident":16,
+//!          "slots_total":0,"spill_writes":40,"spill_reads":28,
+//!          "preemptions":3,"resumes":3,"suspended":0,
+//!          "block_restores":28,"restore_failures":0,
+//!          "sessions_stored":1,"session_resumes":2,
+//!          "prefix_pages":4,"prefix_hits":5,"prefix_misses":2,
+//!          "promotes":5,"promote_ms_total":1.8},
 //!  "baseline_tokens":120,
 //!  "adapters":[{"name":"taskA","rank":4,"n_adapted":28,"resident_bytes":917504,
 //!               "refs":1,"tokens":64,"draining":false,"delta_overhead":0.021}]}
@@ -80,7 +97,17 @@
 //! server runs with `--speculate`, a `spec` object with pool-wide
 //! proposal/acceptance counters and the draft model's own KV pool, so a
 //! client can observe prefix sharing, peak KV memory, and speculative
-//! acceptance even after its requests finished.
+//! acceptance even after its requests finished.  A server started with
+//! `--kv-spill` adds a `tier` object: spill-file occupancy
+//! (`spilled_blocks` / `spilled_bytes` live now, `slots_resident` slots
+//! ever created against a `slots_total` budget, 0 = unbounded) and raw
+//! slot I/O counters, the preempt-to-spill loop (`preemptions`,
+//! `resumes`, `suspended` right now), page restores and CRC/I/O
+//! `restore_failures`, parked sessions (`sessions_stored` now,
+//! `session_resumes` served), and the persistent prefix store
+//! (`prefix_pages` published, `prefix_hits` / `prefix_misses` per
+//! admission, `promotes` disk->pool page-run promotions with their
+//! cumulative `promote_ms_total` wall-clock).
 //!
 //! ## Error codes
 //!
@@ -111,6 +138,7 @@ use crate::serve::json::Json;
 use crate::serve::sampling::SamplingParams;
 use crate::serve::scheduler::{RequestStats, StepEvent};
 use crate::serve::spec::SpecStats;
+use crate::serve::tier::TierStats;
 
 /// Default `max_new` when a request omits it.
 pub const DEFAULT_MAX_NEW: usize = 32;
@@ -137,6 +165,8 @@ pub struct WireRequest {
     pub adapter: Option<String>,
     /// Wall-clock budget from submission, in ms; `None` = server default.
     pub deadline_ms: Option<u64>,
+    /// Resumable-session name for tiered servers; `None` = anonymous.
+    pub session: Option<String>,
 }
 
 /// Registry operation requested over the wire.
@@ -261,6 +291,16 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
                 .to_string(),
         ),
     };
+    let session = match j.get("session") {
+        None => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| Error::config("'session' must be a non-empty string"))?;
+            Some(s.to_string())
+        }
+    };
     let deadline_ms = match j.get("deadline_ms") {
         None => None,
         Some(v) => {
@@ -279,6 +319,7 @@ pub fn parse_line(line: &str) -> Result<ClientLine> {
         stop,
         adapter,
         deadline_ms,
+        session,
     }))
 }
 
@@ -347,6 +388,7 @@ pub struct EngineSnapshot<'a> {
     pub pending: usize,
     pub completed: usize,
     pub spec: Option<&'a SpecStats>,
+    pub tier: Option<&'a TierStats>,
     pub adapters: &'a [AdapterStat],
     pub baseline_tokens: u64,
     pub build: &'a BuildInfo,
@@ -387,12 +429,40 @@ pub fn stats_frame(snap: &EngineSnapshot<'_>) -> String {
             ]),
         ));
     }
+    if let Some(t) = snap.tier {
+        fields.push(("tier".to_string(), tier_json(t)));
+    }
     fields.push(("baseline_tokens".to_string(), Json::from(snap.baseline_tokens as i64)));
     fields.push((
         "adapters".to_string(),
         Json::Arr(snap.adapters.iter().map(adapter_json).collect()),
     ));
     Json::Obj(fields).render()
+}
+
+/// The `"tier"` stats sub-object: spill-file occupancy, preempt /
+/// resume / restore counters, parked sessions, and the prefix store.
+fn tier_json(t: &TierStats) -> Json {
+    Json::Obj(vec![
+        ("spilled_blocks".to_string(), Json::from(t.spilled_blocks)),
+        ("spilled_bytes".to_string(), Json::from(t.spilled_bytes as i64)),
+        ("slots_resident".to_string(), Json::from(t.slots_resident)),
+        ("slots_total".to_string(), Json::from(t.slots_total)),
+        ("spill_writes".to_string(), Json::from(t.spill_writes as i64)),
+        ("spill_reads".to_string(), Json::from(t.spill_reads as i64)),
+        ("preemptions".to_string(), Json::from(t.preemptions as i64)),
+        ("resumes".to_string(), Json::from(t.resumes as i64)),
+        ("suspended".to_string(), Json::from(t.suspended)),
+        ("block_restores".to_string(), Json::from(t.block_restores as i64)),
+        ("restore_failures".to_string(), Json::from(t.restore_failures as i64)),
+        ("sessions_stored".to_string(), Json::from(t.sessions_stored)),
+        ("session_resumes".to_string(), Json::from(t.session_resumes as i64)),
+        ("prefix_pages".to_string(), Json::from(t.prefix_pages)),
+        ("prefix_hits".to_string(), Json::from(t.prefix_hits as i64)),
+        ("prefix_misses".to_string(), Json::from(t.prefix_misses as i64)),
+        ("promotes".to_string(), Json::from(t.promotes as i64)),
+        ("promote_ms_total".to_string(), ms(t.promote_secs_total)),
+    ])
 }
 
 fn build_json(b: &BuildInfo) -> Json {
@@ -764,6 +834,7 @@ mod tests {
             pending: 1,
             completed: 9,
             spec: None,
+            tier: None,
             adapters: &[],
             baseline_tokens: 0,
             build: &build,
@@ -789,6 +860,7 @@ mod tests {
         // 1536 / (6 * 256) == 1.0 — f32 layout reports unit ratio.
         assert_eq!(kvj.get("resident_ratio").and_then(Json::as_f64), Some(1.0));
         assert!(j.get("spec").is_none(), "no spec object when not speculating");
+        assert!(j.get("tier").is_none(), "no tier object without --kv-spill");
         assert_eq!(
             j.get("adapters").and_then(Json::as_arr).map(|a| a.len()),
             Some(0),
@@ -813,12 +885,33 @@ mod tests {
             fallbacks: 1,
             draft_kv: kv,
         };
+        let tier = TierStats {
+            spilled_blocks: 12,
+            spilled_bytes: 786_432,
+            slots_resident: 16,
+            slots_total: 0,
+            spill_writes: 40,
+            spill_reads: 28,
+            preemptions: 3,
+            resumes: 3,
+            suspended: 1,
+            block_restores: 28,
+            restore_failures: 0,
+            sessions_stored: 1,
+            session_resumes: 2,
+            prefix_pages: 4,
+            prefix_hits: 5,
+            prefix_misses: 2,
+            promotes: 5,
+            promote_secs_total: 0.0018,
+        };
         let f = stats_frame(&EngineSnapshot {
             kv: &kv,
             active: 2,
             pending: 1,
             completed: 9,
             spec: Some(&spec),
+            tier: Some(&tier),
             adapters: std::slice::from_ref(&ad),
             baseline_tokens: 120,
             build: &build,
@@ -841,6 +934,18 @@ mod tests {
         assert_eq!(sj.get("fallbacks").and_then(Json::as_i64), Some(1));
         let dkv = sj.get("draft_kv").expect("draft kv accounting");
         assert_eq!(dkv.get("blocks_total").and_then(Json::as_i64), Some(16));
+        let tj = j.get("tier").expect("tier object");
+        assert_eq!(tj.get("spilled_blocks").and_then(Json::as_i64), Some(12));
+        assert_eq!(tj.get("spilled_bytes").and_then(Json::as_i64), Some(786_432));
+        assert_eq!(tj.get("slots_total").and_then(Json::as_i64), Some(0));
+        assert_eq!(tj.get("preemptions").and_then(Json::as_i64), Some(3));
+        assert_eq!(tj.get("suspended").and_then(Json::as_i64), Some(1));
+        assert_eq!(tj.get("restore_failures").and_then(Json::as_i64), Some(0));
+        assert_eq!(tj.get("sessions_stored").and_then(Json::as_i64), Some(1));
+        assert_eq!(tj.get("session_resumes").and_then(Json::as_i64), Some(2));
+        assert_eq!(tj.get("prefix_hits").and_then(Json::as_i64), Some(5));
+        assert_eq!(tj.get("promotes").and_then(Json::as_i64), Some(5));
+        assert!((tj.get("promote_ms_total").and_then(Json::as_f64).unwrap() - 1.8).abs() < 1e-9);
     }
 
     #[test]
@@ -908,6 +1013,26 @@ mod tests {
         let j = Json::parse(&err).unwrap();
         assert_eq!(j.get("event").and_then(Json::as_str), Some("error"));
         assert_eq!(j.get("code").and_then(Json::as_str), Some("bad_request"));
+    }
+
+    #[test]
+    fn parses_session_field() {
+        let ClientLine::Request(r) =
+            parse_line(r#"{"id":"a","prompt":[1],"session":"alice"}"#).unwrap()
+        else {
+            panic!("expected request");
+        };
+        assert_eq!(r.session.as_deref(), Some("alice"));
+        let ClientLine::Request(r) = parse_line(r#"{"id":"a","prompt":[1]}"#).unwrap() else {
+            panic!("expected request");
+        };
+        assert!(r.session.is_none(), "omitted session stays anonymous");
+        for bad in [
+            r#"{"id":"a","prompt":[1],"session":7}"#,
+            r#"{"id":"a","prompt":[1],"session":""}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

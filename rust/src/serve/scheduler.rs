@@ -32,6 +32,18 @@
 //! the plain step — per sequence, permanently — when the draft pool is
 //! exhausted or their rolling acceptance collapses.
 //!
+//! With a disk tier attached ([`Scheduler::attach_tier`], `--kv-spill`),
+//! block exhaustion stops being terminal: admission preempts the
+//! coldest active sequence to the spill file instead of backing off,
+//! a decode reserve miss suspends the missing sequence instead of
+//! finishing it with `capacity`, suspended sequences resume FIFO as
+//! pages free up, `session`-tagged requests park their final KV at
+//! finish (or disconnect) and continue later without re-prefilling the
+//! stored history, and fully committed prompt pages are published to a
+//! content-keyed persistent prefix store any later request can fork
+//! from disk.  Pages move verbatim (CRC-checked), so a suspended or
+//! session-resumed stream is bitwise what a memory-only run emits.
+//!
 //! All attention state is per-sequence, every batched operation in the
 //! decode path is row-independent, and shared prefix pages hold rows
 //! that are bitwise what the sharer would have computed itself — so
@@ -46,7 +58,8 @@ use std::time::Instant;
 use crate::error::Result;
 use crate::infer::{argmax, AdapterSet, PackedModel};
 use crate::obs::trace::{
-    KernelTickDelta, PH_ADMIT, PH_DECODE, PH_DRAFT, PH_EMIT, PH_PREFILL, PH_SAMPLE, PH_VERIFY,
+    KernelTickDelta, PH_ADMIT, PH_DECODE, PH_DRAFT, PH_EMIT, PH_PREFILL, PH_SAMPLE, PH_TIER,
+    PH_VERIFY,
 };
 use crate::obs::{profile, RequestSpan, Telemetry, TickRecord};
 use crate::serve::adapters::AdapterRegistry;
@@ -55,6 +68,7 @@ use crate::serve::decode::pick;
 use crate::serve::paged::PagedKvCache;
 use crate::serve::sampling::{seq_rng, SamplingParams};
 use crate::serve::spec::{accept_tokens, DraftState, SpecEngine, SpecStats};
+use crate::serve::tier::{SessionEntry, TierStats, TieredKv};
 use crate::tensor::Rng;
 
 /// Scheduler limits.
@@ -162,6 +176,12 @@ pub struct GenRequest {
     /// rejected; a running sequence past it finishes with `deadline`.
     /// `None` = no deadline.
     pub deadline: Option<Instant>,
+    /// Session id: when a disk tier is attached, this sequence's final
+    /// KV parks in the spill file at finish (or disconnect), and a later
+    /// request with the same id whose prompt extends the stored history
+    /// resumes decoding without re-prefilling the shared positions.
+    /// Ignored without a tier.
+    pub session: Option<String>,
 }
 
 /// Why a sequence left the batch.
@@ -262,6 +282,12 @@ struct Running {
     finish: Option<FinishReason>,
     /// Draft-side state when the engine speculates; `None` otherwise.
     draft: Option<DraftState>,
+    /// Marked by a decode reserve miss when a tier is attached: the
+    /// post-eviction sweep spills this sequence instead of finishing it.
+    suspend: bool,
+    /// Leading prompt pages already published to the prefix store (the
+    /// publish walk skips sequences with nothing new to offer).
+    prefix_published: usize,
 }
 
 impl Running {
@@ -297,6 +323,26 @@ struct Staged {
     admitted_at: Instant,
     /// Prompt positions mapped from a donor's pages.
     shared: usize,
+}
+
+/// A sequence parked on the disk tier: everything [`Running`] owns
+/// except the KV cache, whose pages live in spill slots instead of the
+/// pool.  The adapter `Arc` (and its registry refcount) ride along so
+/// the route cannot unload out from under a parked sequence; the
+/// sampler stream resumes exactly where it stopped.
+struct Suspended {
+    req: GenRequest,
+    adapter: Option<Arc<AdapterSet>>,
+    rng: Option<Rng>,
+    /// prompt + generated tokens so far.
+    tokens: Vec<i32>,
+    span: RequestSpan,
+    /// Spill slots holding the block table, ascending page order.
+    slots: Vec<u64>,
+    /// Committed KV positions the slots hold.
+    kv_len: usize,
+    /// Whether speculation had permanently fallen back pre-suspend.
+    draft_disabled: bool,
 }
 
 /// Adapter identity match for KV prefix sharing: adapters alter wk/wv,
@@ -336,6 +382,12 @@ pub struct Scheduler<'m> {
     /// Fault-injection plan (`--fault` / `REPRO_FAULT`); `None` when the
     /// harness is disarmed — the hot path then never consults it.
     fault: Option<Arc<crate::obs::FaultPlan>>,
+    /// Disk tier (`--kv-spill`): spill file + parked sessions + the
+    /// persistent prefix store.  `None` = memory-only (every tier hook
+    /// below is a no-op and the scheduler is bitwise the pre-tier code).
+    tier: Option<TieredKv>,
+    /// Sequences preempted to the tier, in FIFO resume order.
+    suspended: VecDeque<Suspended>,
 }
 
 impl<'m> Scheduler<'m> {
@@ -358,15 +410,45 @@ impl<'m> Scheduler<'m> {
             registry: AdapterRegistry::new(model.cfg),
             obs: Telemetry::new(crate::obs::DEFAULT_TRACE_CAP),
             fault: None,
+            tier: None,
+            suspended: VecDeque::new(),
         }
     }
 
     /// Arm the fault-injection harness: the scheduler evaluates the
-    /// `tick_panic` point per active sequence per tick, and the target
-    /// block pool evaluates `alloc` on every page allocation.
+    /// `tick_panic` point per active sequence per tick, the target
+    /// block pool evaluates `alloc` on every page allocation, and an
+    /// attached tier evaluates `spill_io` on every slot read.
     pub fn set_fault(&mut self, plan: Arc<crate::obs::FaultPlan>) {
         self.pool.set_fault(plan.clone());
+        if let Some(t) = self.tier.as_mut() {
+            t.set_fault(plan.clone());
+        }
         self.fault = Some(plan);
+    }
+
+    /// Attach the disk tier (`--kv-spill`).  Call before the first step;
+    /// the tier inherits a previously armed fault plan.
+    pub fn attach_tier(&mut self, mut tier: TieredKv) {
+        if let Some(plan) = &self.fault {
+            tier.set_fault(plan.clone());
+        }
+        self.tier = Some(tier);
+    }
+
+    /// Tier snapshot with the live suspended count filled in (`None`
+    /// when no tier is attached).
+    pub fn tier_stats(&self) -> Option<TierStats> {
+        self.tier.as_ref().map(|t| {
+            let mut s = t.stats();
+            s.suspended = self.suspended.len();
+            s
+        })
+    }
+
+    /// Sequences currently parked on the disk tier.
+    pub fn n_suspended(&self) -> usize {
+        self.suspended.len()
     }
 
     /// The limits this scheduler admits against.
@@ -439,7 +521,7 @@ impl<'m> Scheduler<'m> {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty() || !self.active.is_empty()
+        !self.pending.is_empty() || !self.active.is_empty() || !self.suspended.is_empty()
     }
 
     pub fn n_active(&self) -> usize {
@@ -459,6 +541,12 @@ impl<'m> Scheduler<'m> {
         self.pool.stats()
     }
 
+    /// The target block pool (read-only; the tier sizes its spill slots
+    /// from the pool's page geometry).
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
     /// Speculative-decoding snapshot (`None` when not speculating):
     /// pool-wide proposal/acceptance counters plus the draft KV pool's
     /// block accounting.
@@ -473,8 +561,12 @@ impl<'m> Scheduler<'m> {
         })
     }
 
-    /// Drop a request wherever it is (pending or mid-decode).  Active
-    /// sequences are evicted at the next step with `Cancelled`.
+    /// Drop a request wherever it is (pending, mid-decode, or parked on
+    /// the disk tier).  Active sequences are evicted at the next step
+    /// with `Cancelled`.  A suspended sequence is settled here: it holds
+    /// no pool pages, so a session-tagged one parks on the tier as-is
+    /// (its slots are exactly the state a resume needs) and anything
+    /// else frees its slots now.
     pub fn cancel(&mut self, key: u64) {
         self.pending.retain(|r| r.key != key);
         for r in self.active.iter_mut() {
@@ -482,10 +574,39 @@ impl<'m> Scheduler<'m> {
                 r.finish = Some(FinishReason::Cancelled);
             }
         }
+        let mut i = 0;
+        while i < self.suspended.len() {
+            if self.suspended[i].req.key != key {
+                i += 1;
+                continue;
+            }
+            let s = self.suspended.remove(i).expect("index in bounds");
+            let tier = self.tier.as_mut().expect("suspended implies a tier");
+            if let Some(sid) = s.req.session.clone() {
+                tier.store_session(
+                    sid,
+                    SessionEntry {
+                        tokens: s.tokens,
+                        kv_len: s.kv_len,
+                        slots: s.slots,
+                        adapter: s.req.adapter.clone(),
+                    },
+                );
+            } else {
+                tier.free_slots(&s.slots);
+            }
+            if let Some(name) = s.req.adapter.as_deref() {
+                self.registry.release(name);
+            }
+            self.completed += 1;
+            if let Some(c) = self.obs.metrics.finished("cancelled") {
+                c.inc();
+            }
+        }
     }
 
-    /// Drop everything (engine shutdown), returning every block and
-    /// adapter reference.
+    /// Drop everything (engine shutdown), returning every block, spill
+    /// slot, and adapter reference.
     pub fn clear(&mut self) {
         self.pending.clear();
         for r in self.active.iter_mut() {
@@ -498,6 +619,14 @@ impl<'m> Scheduler<'m> {
             }
         }
         self.active.clear();
+        while let Some(s) = self.suspended.pop_front() {
+            if let Some(tier) = self.tier.as_mut() {
+                tier.free_slots(&s.slots);
+            }
+            if let Some(name) = s.req.adapter.as_deref() {
+                self.registry.release(name);
+            }
+        }
     }
 
     /// Enforce deadlines at tick granularity: expired pending requests
@@ -583,8 +712,16 @@ impl<'m> Scheduler<'m> {
                 self.active.iter().filter_map(|r| r.draft.as_ref().map(|d| d.cache.table())),
             );
         }
-        self.registry
-            .rebuild_refs(self.active.iter().filter_map(|r| r.req.adapter.as_deref()));
+        // Suspended sequences hold no pool pages (their state is spill
+        // slots), so the pool rebuilds from active tables alone — but
+        // they DO hold adapter references, which must survive the
+        // registry recount or a parked route could unload mid-park.
+        self.registry.rebuild_refs(
+            self.active
+                .iter()
+                .filter_map(|r| r.req.adapter.as_deref())
+                .chain(self.suspended.iter().filter_map(|s| s.req.adapter.as_deref())),
+        );
         events
     }
 
@@ -628,6 +765,308 @@ impl<'m> Scheduler<'m> {
             }
         }
         (best, donor)
+    }
+
+    /// Move `active[i]` to the disk tier: export its block table to
+    /// spill slots (pages sealed by the end-of-tick seal loop export
+    /// compact), release its pool and draft pages, and park the rest.
+    /// Returns `false` — leaving the sequence untouched — when the spill
+    /// budget cannot cover its pages.
+    fn suspend_active(&mut self, i: usize) -> bool {
+        let tier = self.tier.as_mut().expect("suspend requires a tier");
+        let n = self.active[i].cache.n_blocks();
+        if n == 0 || !tier.can_spill(n) {
+            return false;
+        }
+        let Ok(slots) = tier.spill_table(&self.pool, self.active[i].cache.table()) else {
+            return false;
+        };
+        let mut r = self.active.remove(i);
+        let kv_len = r.cache.len();
+        r.cache.release_all(&mut self.pool);
+        let draft_disabled = r.draft.as_ref().is_some_and(|d| d.disabled);
+        if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
+            d.cache.release_all(&mut se.pool);
+        }
+        tier.note_preemption();
+        self.suspended.push_back(Suspended {
+            req: r.req,
+            adapter: r.adapter,
+            rng: r.rng,
+            tokens: r.tokens,
+            span: r.span,
+            slots,
+            kv_len,
+            draft_disabled,
+        });
+        true
+    }
+
+    /// Preempt-to-spill: suspend the victim holding the most resident
+    /// pages (ties: lowest key), freeing the largest chunk of budget per
+    /// spill.  Returns `false` when no active sequence can be spilled.
+    fn preempt_one(&mut self) -> bool {
+        if self.tier.is_none() {
+            return false;
+        }
+        let mut victim: Option<usize> = None;
+        for (i, r) in self.active.iter().enumerate() {
+            if r.finish.is_some() || r.cache.n_blocks() == 0 {
+                continue;
+            }
+            let better = match victim {
+                None => true,
+                Some(v) => {
+                    let (vb, vk) = (self.active[v].cache.n_blocks(), self.active[v].req.key);
+                    r.cache.n_blocks() > vb || (r.cache.n_blocks() == vb && r.req.key < vk)
+                }
+            };
+            if better {
+                victim = Some(i);
+            }
+        }
+        victim.is_some_and(|i| self.suspend_active(i))
+    }
+
+    /// Post-eviction sweep over decode-blocked sequences marked by the
+    /// step loop: spill each to the tier, falling back to the classic
+    /// `capacity` finish (drained at the NEXT step's eviction) when the
+    /// spill budget is exhausted — so progress is guaranteed either way.
+    fn suspend_marked(&mut self) {
+        if self.tier.is_none() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if !self.active[i].suspend {
+                i += 1;
+                continue;
+            }
+            self.active[i].suspend = false;
+            if self.active[i].finish.is_some() {
+                i += 1;
+                continue;
+            }
+            if !self.suspend_active(i) {
+                self.active[i].finish = Some(FinishReason::Capacity);
+                i += 1;
+            }
+        }
+    }
+
+    /// Resume suspended sequences (FIFO) while the batch and pool have
+    /// room.  A sequence that can never fit the pool again finishes
+    /// `capacity`, an expired one finishes `deadline`, and a failed
+    /// restore (bad CRC, I/O error, injected `spill_io` fault) answers
+    /// an `internal` error frame — each contained to the one sequence.
+    fn resume_suspended(&mut self, events: &mut Vec<StepEvent>) {
+        if self.tier.is_none() {
+            return;
+        }
+        let now = Instant::now();
+        while !self.suspended.is_empty() && self.active.len() < self.cfg.max_batch {
+            let bs = self.pool.block_size();
+            let front = self.suspended.front().expect("checked non-empty");
+            if (front.kv_len + 1).div_ceil(bs) > self.pool.max_blocks() {
+                let s = self.suspended.pop_front().expect("non-empty");
+                self.finish_suspended(s, FinishReason::Capacity, events);
+                continue;
+            }
+            if front.req.deadline.is_some_and(|d| now >= d) {
+                self.obs.metrics.deadline_expirations_total.inc();
+                let s = self.suspended.pop_front().expect("non-empty");
+                self.finish_suspended(s, FinishReason::Deadline, events);
+                continue;
+            }
+            // Room for the restored table plus the next decode page —
+            // resuming into an instant reserve miss would just thrash
+            // the file.  Strict FIFO: if the front doesn't fit, nobody
+            // behind it jumps the line (no starvation).
+            let need = front.slots.len().max((front.kv_len + 1).div_ceil(bs));
+            if self.pool.available() < need {
+                break;
+            }
+            let s = self.suspended.pop_front().expect("non-empty");
+            let tier = self.tier.as_mut().expect("resume requires a tier");
+            match tier.restore_table(&mut self.pool, &s.slots, true) {
+                Ok(table) => {
+                    tier.note_resume();
+                    let cache = PagedKvCache::from_parts(&self.pool, table, s.kv_len);
+                    let draft = if s.adapter.is_none() {
+                        self.spec.as_ref().map(|se| {
+                            let mut d = DraftState::new(&se.pool);
+                            d.disabled = s.draft_disabled;
+                            d
+                        })
+                    } else {
+                        None
+                    };
+                    self.active.push(Running {
+                        req: s.req,
+                        adapter: s.adapter,
+                        cache,
+                        rng: s.rng,
+                        tokens: s.tokens,
+                        span: s.span,
+                        finish: None,
+                        draft,
+                        suspend: false,
+                        prefix_published: 0,
+                    });
+                }
+                Err(e) => {
+                    tier.free_slots(&s.slots);
+                    if let Some(name) = s.req.adapter.as_deref() {
+                        self.registry.release(name);
+                    }
+                    if let Some(c) = self.obs.metrics.finished("internal") {
+                        c.inc();
+                    }
+                    events.push(StepEvent::Rejected {
+                        key: s.req.key,
+                        id: s.req.id,
+                        code: "internal",
+                        reason: format!("suspended sequence failed to restore: {e}"),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Terminally finish a sequence straight from the suspended set:
+    /// free its slots, release its adapter reference, and emit `Done`
+    /// (the stream keeps every token already emitted).
+    fn finish_suspended(
+        &mut self,
+        s: Suspended,
+        finish: FinishReason,
+        events: &mut Vec<StepEvent>,
+    ) {
+        if let Some(tier) = self.tier.as_mut() {
+            tier.free_slots(&s.slots);
+        }
+        if let Some(name) = s.req.adapter.as_deref() {
+            self.registry.release(name);
+        }
+        let done_at = Instant::now();
+        let stats = RequestStats {
+            queue_secs: s.span.queue_secs(),
+            prefill_secs: s.span.prefill_secs,
+            total_secs: s.span.total_secs(done_at),
+            max_inter_token_secs: s.span.max_gap_secs,
+            n_new_tokens: s.span.emitted,
+            shared_prefix_tokens: s.span.shared_prefix_tokens,
+            spec_proposed: s.span.spec_proposed,
+            spec_accepted: s.span.spec_accepted,
+        };
+        self.completed += 1;
+        let m = &self.obs.metrics;
+        if let Some(c) = m.finished(finish.as_str()) {
+            c.inc();
+        }
+        m.queue_seconds.observe(stats.queue_secs);
+        m.request_seconds.observe(stats.total_secs);
+        m.prefill_seconds.observe(stats.prefill_secs);
+        events.push(StepEvent::Done {
+            key: s.req.key,
+            id: s.req.id,
+            tokens: s.tokens,
+            prompt_len: s.req.prompt.len(),
+            finish,
+            stats,
+        });
+    }
+
+    /// Session resume at admission: when the request names a parked
+    /// session whose stored history is a strict prefix of the new prompt
+    /// (same adapter route), restore its pages and share `kv_len`
+    /// positions — the prefill below touches only the new suffix.  Any
+    /// mismatch — different route, prompt not extending the history, no
+    /// pool room right now, or a failed restore — falls back to a fresh
+    /// prefill (the parked entry survives except on restore failure,
+    /// where its slots are freed).
+    fn try_resume_session(&mut self, req: &GenRequest) -> Option<(PagedKvCache, usize)> {
+        let tier = self.tier.as_mut()?;
+        let sid = req.session.as_deref()?;
+        {
+            let e = tier.session(sid)?;
+            if e.adapter != req.adapter
+                || e.kv_len == 0
+                || e.kv_len >= req.prompt.len()
+                || req.prompt[..e.kv_len] != e.tokens[..e.kv_len]
+                || self.pool.available() < e.slots.len()
+            {
+                return None;
+            }
+        }
+        let e = tier.take_session(sid).expect("session peeked above");
+        match tier.restore_table(&mut self.pool, &e.slots, true) {
+            Ok(table) => Some((PagedKvCache::from_parts(&self.pool, table, e.kv_len), e.kv_len)),
+            Err(_) => {
+                tier.free_slots(&e.slots);
+                None
+            }
+        }
+    }
+
+    /// Prefix-store promotion at admission: match the prompt's leading
+    /// pages against the persistent store and, when the stored run beats
+    /// every live donor (`beat` positions), restore it into fresh pool
+    /// pages.  Whole pages only (the promoted tail page may be sealed —
+    /// writes always land in a fresh page past it), and the slots stay
+    /// live: prefix records are read-shared forever.  Adapter-routed
+    /// requests never consult the store — its pages were written under
+    /// the default route.
+    fn try_promote_prefix(
+        &mut self,
+        req: &GenRequest,
+        beat: usize,
+    ) -> Option<(PagedKvCache, usize)> {
+        if req.adapter.is_some() {
+            return None;
+        }
+        let bs = self.pool.block_size();
+        let tier = self.tier.as_mut()?;
+        if !tier.prefix_enabled() {
+            return None;
+        }
+        let slots = tier.prefix_match(&req.prompt, bs);
+        let pages = slots.len().min((req.prompt.len() - 1) / bs);
+        if pages == 0 {
+            return None;
+        }
+        let positions = pages * bs;
+        if positions <= beat || self.pool.available() < pages {
+            return None;
+        }
+        let t0 = Instant::now();
+        let table = tier.restore_table(&mut self.pool, &slots[..pages], false).ok()?;
+        let secs = t0.elapsed().as_secs_f64();
+        tier.note_promote(secs);
+        self.obs.metrics.tier_promote_seconds.observe(secs);
+        Some((PagedKvCache::from_parts(&self.pool, table, positions), positions))
+    }
+
+    /// Publish each running sequence's newly committed whole prompt
+    /// pages into the persistent prefix store (runs after the seal loop,
+    /// so quantized layouts publish sealed pages).  The per-sequence
+    /// high-water mark keeps the walk a no-op once a prompt is covered.
+    fn publish_prefixes(&mut self) {
+        let Some(tier) = self.tier.as_mut() else { return };
+        if !tier.prefix_enabled() {
+            return;
+        }
+        let bs = self.pool.block_size();
+        for r in self.active.iter_mut() {
+            if r.req.adapter.is_some() {
+                continue;
+            }
+            let pages = (r.req.prompt.len() / bs).min(r.cache.len() / bs);
+            if pages > r.prefix_published {
+                r.prefix_published =
+                    tier.publish_prefix(&self.pool, &r.req.prompt, r.cache.table(), pages);
+            }
+        }
     }
 
     /// Admit pending requests while the batch has room and the block
@@ -707,24 +1146,57 @@ impl<'m> Scheduler<'m> {
                 },
             };
 
-            let (shared, donor) = self.best_donor(&staged, &req.prompt, adapter.as_ref());
-            let mut cache = match donor {
-                Some(DonorRef::Active(i)) => {
-                    PagedKvCache::fork_prefix(&self.active[i].cache, shared, &mut self.pool)?
+            // Tier first: a session-tagged request whose prompt extends
+            // its parked history resumes from spilled pages (zero
+            // re-prefill of the shared positions); otherwise a
+            // prefix-store match promotes published pages from disk when
+            // it beats every live donor.  No tier (or no hit): the
+            // classic live-donor fork.
+            let (mut cache, shared) = match self.try_resume_session(&req) {
+                Some(hit) => hit,
+                None => {
+                    let (shared, donor) = self.best_donor(&staged, &req.prompt, adapter.as_ref());
+                    match self.try_promote_prefix(&req, shared) {
+                        Some(hit) => hit,
+                        None => {
+                            let cache = match donor {
+                                Some(DonorRef::Active(i)) => PagedKvCache::fork_prefix(
+                                    &self.active[i].cache,
+                                    shared,
+                                    &mut self.pool,
+                                )?,
+                                Some(DonorRef::Staged(i)) => PagedKvCache::fork_prefix(
+                                    &staged[i].cache,
+                                    shared,
+                                    &mut self.pool,
+                                )?,
+                                None => PagedKvCache::new(&self.pool),
+                            };
+                            (cache, shared)
+                        }
+                    }
                 }
-                Some(DonorRef::Staged(i)) => {
-                    PagedKvCache::fork_prefix(&staged[i].cache, shared, &mut self.pool)?
-                }
-                None => PagedKvCache::new(&self.pool),
             };
             // Admission by block budget: the prompt must get its pages
-            // now (decode pages grow on demand later).  On exhaustion
-            // the request backs off at the FRONT of the queue — arrival
-            // order is preserved and a later eviction lets it in.  If
-            // nothing is running (or staged) the pool will never free
-            // up, so a prompt that doesn't fit an idle pool is rejected
-            // outright instead of livelocking the queue.
-            if cache.reserve(req.prompt.len(), &mut self.pool).is_err() {
+            // now (decode pages grow on demand later).  With a tier
+            // attached, exhaustion preempts the coldest active sequence
+            // to disk and retries (as long as the prompt can fit the
+            // pool at all).  Otherwise — or when nothing is left to
+            // spill — the request backs off at the FRONT of the queue;
+            // arrival order is preserved and a later eviction lets it
+            // in.  If nothing is running (or staged) the pool will never
+            // free up, so a prompt that doesn't fit an idle pool is
+            // rejected outright instead of livelocking the queue.
+            let mut reserved = cache.reserve(req.prompt.len(), &mut self.pool).is_ok();
+            if !reserved
+                && self.tier.is_some()
+                && req.prompt.len().div_ceil(self.pool.block_size()) <= self.pool.max_blocks()
+            {
+                while !reserved && self.preempt_one() {
+                    reserved = cache.reserve(req.prompt.len(), &mut self.pool).is_ok();
+                }
+            }
+            if !reserved {
                 cache.release_all(&mut self.pool);
                 // Balance the acquire above: a backed-off request
                 // re-acquires when it re-admits; a rejected one never
@@ -822,6 +1294,8 @@ impl<'m> Scheduler<'m> {
                 } else {
                     None
                 },
+                suspend: false,
+                prefix_published: 0,
                 adapter,
                 req,
             };
@@ -852,6 +1326,12 @@ impl<'m> Scheduler<'m> {
 
         let mut events = Vec::new();
         self.sweep_deadlines(tick0, &mut events);
+        // Suspended sequences resume BEFORE new admissions — they are
+        // older, and their restored pages must not be raced away by
+        // this tick's prompts.
+        let t_tier = Instant::now();
+        self.resume_suspended(&mut events);
+        rec.phase_ns[PH_TIER] += t_tier.elapsed().as_nanos() as u64;
         self.admit(&mut events, &mut rec)?;
         rec.batch = self.active.len();
         rec.pending = self.pending.len();
@@ -899,7 +1379,13 @@ impl<'m> Scheduler<'m> {
                     // guarantees progress).
                     let upto = r.cache.len() + 1;
                     if r.cache.reserve(upto, &mut self.pool).is_err() {
-                        if !capacity_hit {
+                        if self.tier.is_some() {
+                            // Tier: suspend instead of finishing — the
+                            // post-eviction sweep spills this sequence's
+                            // pages (falling back to the capacity finish
+                            // only if the spill budget is exhausted).
+                            r.suspend = true;
+                        } else if !capacity_hit {
                             capacity_hit = true;
                             r.finish = Some(FinishReason::Capacity);
                         }
@@ -986,6 +1472,30 @@ impl<'m> Scheduler<'m> {
                     m.queue_seconds.observe(stats.queue_secs);
                     m.request_seconds.observe(stats.total_secs);
                     m.prefill_seconds.observe(stats.prefill_secs);
+                    // Tier: park a finished session's KV verbatim so a
+                    // later request with the same id continues without
+                    // re-prefilling.  Capacity/deadline exits don't park
+                    // — those budgets are genuinely spent.
+                    if let (Some(tier), Some(sid)) = (self.tier.as_mut(), r.req.session.clone()) {
+                        if matches!(
+                            finish,
+                            FinishReason::Length | FinishReason::Stop | FinishReason::Cancelled
+                        ) && r.cache.n_blocks() > 0
+                            && tier.can_spill(r.cache.n_blocks())
+                        {
+                            if let Ok(slots) = tier.spill_table(&self.pool, r.cache.table()) {
+                                tier.store_session(
+                                    sid,
+                                    SessionEntry {
+                                        tokens: r.tokens.clone(),
+                                        kv_len: r.cache.len(),
+                                        slots,
+                                        adapter: r.req.adapter.clone(),
+                                    },
+                                );
+                            }
+                        }
+                    }
                     r.cache.release_all(&mut self.pool);
                     if let (Some(d), Some(se)) = (r.draft.as_mut(), self.spec.as_mut()) {
                         d.cache.release_all(&mut se.pool);
@@ -1013,6 +1523,16 @@ impl<'m> Scheduler<'m> {
         // has to reopen a page mid-cycle.  No-op under the f32 layout.
         for r in &self.active {
             r.cache.seal_committed(&mut self.pool);
+        }
+
+        // -- disk tier: spill decode-blocked sequences (after the seal
+        //    loop, so quantized pages export compact) and publish newly
+        //    sealed prompt pages to the prefix store --
+        if self.tier.is_some() {
+            let t_tier = Instant::now();
+            self.suspend_marked();
+            self.publish_prefixes();
+            rec.phase_ns[PH_TIER] += t_tier.elapsed().as_nanos() as u64;
         }
 
         self.finish_tick(&mut rec, kv_before, spec_before, prof_before, tick0);
@@ -1065,6 +1585,23 @@ impl<'m> Scheduler<'m> {
         m.active_sequences.set(self.active.len() as i64);
         m.pending_requests.set(self.pending.len() as i64);
         m.adapters_registered.set(self.registry.len() as i64);
+        if let Some(t) = self.tier.as_ref() {
+            let ts = t.stats();
+            m.tier_blocks_spilled.set(ts.spilled_blocks as i64);
+            m.tier_bytes_spilled.set(ts.spilled_bytes as i64);
+            m.tier_spill_writes.set(ts.spill_writes as i64);
+            m.tier_spill_reads.set(ts.spill_reads as i64);
+            m.tier_preemptions.set(ts.preemptions as i64);
+            m.tier_resumes.set(ts.resumes as i64);
+            m.tier_suspended.set(self.suspended.len() as i64);
+            m.tier_restores.set(ts.block_restores as i64);
+            m.tier_restore_failures.set(ts.restore_failures as i64);
+            m.tier_sessions_stored.set(ts.sessions_stored as i64);
+            m.tier_session_resumes.set(ts.session_resumes as i64);
+            m.tier_prefix_pages.set(ts.prefix_pages as i64);
+            m.tier_prefix_hits.set(ts.prefix_hits as i64);
+            m.tier_prefix_misses.set(ts.prefix_misses as i64);
+        }
         m.ticks_total.inc();
         m.tokens_emitted_total.add(rec.tokens as u64);
         m.batch_size.observe(rec.batch as f64);

@@ -34,6 +34,13 @@
 //!   survivors.  Only if the quarantine itself panics does the engine
 //!   poison: it refuses new work with `unavailable` and keeps answering
 //!   stats/metrics.
+//! * **Tiered KV** — with `--kv-spill PATH` the engine attaches a
+//!   [`crate::serve::tier::TieredKv`] disk tier at boot: block
+//!   exhaustion preempts sequences to the spill file instead of
+//!   finishing them with `capacity`, `"session"`-tagged requests can
+//!   suspend and resume across connections, and `--prefix-store` keeps
+//!   finished prompt KV pages for cross-request reuse.  An unwritable
+//!   spill path fails the boot.
 //! * **Graceful drain** — SIGINT/SIGTERM or `{"cmd":"drain"}` stops
 //!   admissions, finishes in-flight sequences, flushes the trace
 //!   journal, and exits 0.
@@ -70,6 +77,7 @@ use crate::model::checkpoint;
 use crate::obs::{profile, prom, FaultPlan, FaultPoint, SeqPanic, Telemetry, DEFAULT_TRACE_CAP};
 use crate::serve::protocol::{self, code, AdapterOp, ClientLine, EngineSnapshot, WireRequest};
 use crate::serve::scheduler::{GenRequest, SchedConfig, Scheduler, StepEvent};
+use crate::serve::tier::TieredKv;
 
 /// Default cap on one request line, bytes (`--max-line`).
 pub const DEFAULT_MAX_LINE: usize = 1 << 20;
@@ -117,6 +125,19 @@ pub struct ServeOptions {
     /// How long a connection may stay backlogged before it is evicted
     /// and its sequences cancelled (`--slow-reader-ms`; 0 = immediate).
     pub slow_reader_ms: u64,
+    /// Spill-file path for the disk KV tier (`--kv-spill PATH`); `None`
+    /// disables tiering (preemption, sessions, and the prefix store).
+    /// The file is created/truncated at boot; an unwritable path fails
+    /// the boot.
+    pub kv_spill: Option<String>,
+    /// Spill-slot budget (`--kv-spill-blocks N`); 0 = unbounded, the
+    /// file grows as pages spill.
+    pub kv_spill_blocks: usize,
+    /// Keep a content-keyed prefix store on the spill file
+    /// (`--prefix-store`; requires `--kv-spill`): finished adapter-less
+    /// prompts publish their full KV pages, and later admissions with a
+    /// matching token prefix promote them back instead of re-prefilling.
+    pub prefix_store: bool,
 }
 
 impl Default for ServeOptions {
@@ -134,6 +155,9 @@ impl Default for ServeOptions {
             max_line: DEFAULT_MAX_LINE,
             out_queue: DEFAULT_OUT_QUEUE,
             slow_reader_ms: DEFAULT_SLOW_READER_MS,
+            kv_spill: None,
+            kv_spill_blocks: 0,
+            prefix_store: false,
         }
     }
 }
@@ -282,6 +306,25 @@ pub fn spawn_with_draft(
         _ => None,
     };
 
+    // Probe the spill path before binding so an unwritable disk fails
+    // the boot, not the engine thread.  The real SpillFile (sized from
+    // the scheduler's pool geometry) truncates it again moments later.
+    if opts.prefix_store && opts.kv_spill.is_none() {
+        return Err(Error::config("--prefix-store requires --kv-spill PATH"));
+    }
+    if let Some(path) = &opts.kv_spill {
+        OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| Error::io(format!("open kv-spill {path}: {e}")))?;
+    }
+    let tier_boot = TierBoot {
+        path: opts.kv_spill.clone(),
+        max_slots: opts.kv_spill_blocks,
+        prefix_store: opts.prefix_store,
+    };
+
     let listener = TcpListener::bind(&opts.addr)
         .map_err(|e| Error::io(format!("bind {}: {e}", opts.addr)))?;
     let addr = listener
@@ -338,7 +381,18 @@ pub fn spawn_with_draft(
     let engine_fault = fault.clone();
     let slow_reader = Duration::from_millis(opts.slow_reader_ms);
     let engine = std::thread::spawn(move || {
-        run_engine(model, draft, sched_cfg, preload, rx, engine_obs, trace, engine_fault, slow_reader)
+        run_engine(
+            model,
+            draft,
+            sched_cfg,
+            preload,
+            rx,
+            engine_obs,
+            trace,
+            engine_fault,
+            slow_reader,
+            tier_boot,
+        )
     });
 
     let accept_tx = tx.clone();
@@ -426,8 +480,16 @@ pub fn run(
     sig::install();
     let adapter_names: Vec<String> = opts.adapters.iter().map(|(n, _)| n.clone()).collect();
     let fault_spec = opts.fault.clone().or_else(|| std::env::var("REPRO_FAULT").ok());
+    let kv_spill = opts.kv_spill.clone();
+    let prefix_store = opts.prefix_store;
     let server = spawn_with_draft(model, draft, opts)?;
     println!("serve: listening on {}", server.addr);
+    if let Some(path) = &kv_spill {
+        println!(
+            "serve: kv spill on {path} (prefix store {})",
+            if prefix_store { "on" } else { "off" }
+        );
+    }
     if let Some(maddr) = server.metrics_addr {
         // The CI observability smoke scrapes this line for the port.
         println!("serve: metrics on {maddr}");
@@ -623,6 +685,15 @@ fn sync_fault_metric(sched: &Scheduler<'_>, st: &mut EngineState) {
     }
 }
 
+/// Tier boot parameters forwarded to the engine thread (the spill file
+/// is sized from the scheduler's pool geometry, which only exists
+/// there).
+struct TierBoot {
+    path: Option<String>,
+    max_slots: usize,
+    prefix_store: bool,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_engine(
     model: Arc<PackedModel>,
@@ -634,6 +705,7 @@ fn run_engine(
     mut trace: Option<BufWriter<std::fs::File>>,
     fault: Option<Arc<FaultPlan>>,
     slow_reader: Duration,
+    tier: TierBoot,
 ) {
     let mut sched = match draft {
         Some(d) if cfg.speculate > 0 => Scheduler::with_draft(&model, cfg, d),
@@ -642,6 +714,17 @@ fn run_engine(
     sched.attach_obs(obs);
     if let Some(plan) = &fault {
         sched.set_fault(Arc::clone(plan));
+    }
+    if let Some(path) = &tier.path {
+        // The path was probed writable at spawn; a failure here (disk
+        // pulled in the meantime) stops the engine before any work.
+        match TieredKv::new(path, sched.pool(), tier.max_slots, tier.prefix_store) {
+            Ok(t) => sched.attach_tier(t),
+            Err(e) => {
+                eprintln!("serve: kv-spill init failed: {e}");
+                return;
+            }
+        }
     }
     // Names were validated in `spawn_with_draft`; a load can only fail on
     // a duplicate, which the pre-check excluded.
@@ -820,6 +903,7 @@ fn handle_msg(
                 adapter: wire.adapter,
                 queued_at,
                 deadline,
+                session: wire.session,
             };
             match sched.try_submit(req) {
                 Ok(()) => {
@@ -842,6 +926,7 @@ fn handle_msg(
         EngineMsg::Stats { out } => {
             let kv = sched.kv_stats();
             let spec = sched.spec_stats();
+            let tier = sched.tier_stats();
             let adapters = sched.adapters().stats();
             let build = crate::obs::build_info();
             let frame = protocol::stats_frame(&EngineSnapshot {
@@ -850,6 +935,7 @@ fn handle_msg(
                 pending: sched.n_pending(),
                 completed: sched.n_completed(),
                 spec: spec.as_ref(),
+                tier: tier.as_ref(),
                 adapters: &adapters,
                 baseline_tokens: sched.adapters().baseline_tokens(),
                 build: &build,

@@ -1,0 +1,510 @@
+//! Tiered KV: a disk-backed second tier behind the [`BlockPool`].
+//!
+//! The pool is RAM-budgeted; before this module, hitting the budget
+//! meant admission backoff, `capacity` finishes, or outright rejection —
+//! concurrency hard-capped by memory even though most resident pages at
+//! any instant belong to sequences that are not decoding *right now*.
+//! [`TieredKv`] adds the missing level of the hierarchy: cold pages move
+//! to a slot-granular [`SpillFile`] **verbatim** (the pool's
+//! `export_block` bytes, staged or sealed, CRC-checked on the way back),
+//! so a restored page is bit-identical to the one that left and token
+//! streams with spill enabled are bitwise what a memory-only run emits.
+//!
+//! Three consumers share the file:
+//!
+//! * **Preempt-to-spill** (scheduler): under block exhaustion the
+//!   scheduler suspends a victim sequence — its block table is exported
+//!   to slots and its pool pages freed — instead of refusing admission;
+//!   the suspended sequence resumes when pages free up.
+//! * **Sessions**: a request tagged `"session":"id"` leaves its final KV
+//!   state spilled when it finishes (or its connection dies); a later
+//!   request with the same session id and a prompt extending the stored
+//!   history restores the pages and continues decoding without
+//!   re-prefilling the shared positions.
+//! * **Prefix store**: fully committed prompt-prefix pages are published
+//!   under a rolling content key (chained over page token ids, with the
+//!   full token prefix stored alongside for exact verification — a hash
+//!   collision can never substitute wrong KV).  New requests from any
+//!   connection, any time, fork popular prefixes with promote-on-read
+//!   from disk, extending same-tick CoW sharing across connections and
+//!   across time.  Prefix slots are read-shared and never freed (no
+//!   eviction policy; insertion is budget-gated instead).
+//!
+//! Restore failures (bad CRC, I/O error, fired `spill_io` fault) are
+//! contained: the affected sequence finishes `internal`, the engine and
+//! every other sequence keep going.
+
+pub mod spill;
+
+pub use spill::{SpillFile, SpillStats};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::obs::FaultPlan;
+use crate::serve::block::BlockPool;
+
+/// One suspended session: everything needed to continue decoding later.
+pub struct SessionEntry {
+    /// Full token history (prompt + emitted tokens).
+    pub tokens: Vec<i32>,
+    /// Committed KV positions the spilled pages hold (always
+    /// `tokens.len() - 1`: the final emitted token was never fed back).
+    pub kv_len: usize,
+    /// Spill slots, ascending page order.
+    pub slots: Vec<u64>,
+    /// Adapter the session was running (resume must match).
+    pub adapter: Option<String>,
+}
+
+/// One published prefix page.
+struct PrefixNode {
+    slot: u64,
+    /// The full token prefix through this page — exact verification, so
+    /// a chain-hash collision cannot alias two different prefixes.
+    prefix: Vec<i32>,
+}
+
+/// Aggregate tier statistics (stats frame + Prometheus).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierStats {
+    /// Spill slots currently holding a live page.
+    pub spilled_blocks: usize,
+    /// Live payload bytes on disk.
+    pub spilled_bytes: u64,
+    /// Slots ever created (file extent).
+    pub slots_resident: usize,
+    /// Slot budget (0 = unbounded).
+    pub slots_total: usize,
+    pub spill_writes: u64,
+    pub spill_reads: u64,
+    /// Sequences preempted to disk so far.
+    pub preemptions: u64,
+    /// Suspended sequences resumed so far.
+    pub resumes: u64,
+    /// Sequences suspended right now (scheduler fills this in).
+    pub suspended: usize,
+    /// Pages restored from disk so far.
+    pub block_restores: u64,
+    /// Failed restores (CRC / I/O / injected faults).
+    pub restore_failures: u64,
+    /// Sessions parked on disk right now.
+    pub sessions_stored: usize,
+    /// Session continuations served from spilled state.
+    pub session_resumes: u64,
+    /// Prefix pages published right now.
+    pub prefix_pages: usize,
+    /// Admissions that reused at least one stored prefix page.
+    pub prefix_hits: u64,
+    /// Admissions that consulted the store and found nothing.
+    pub prefix_misses: u64,
+    /// Prefix promotions (disk -> pool page runs) so far.
+    pub promotes: u64,
+    /// Wall-clock spent promoting, for the latency histogram.
+    pub promote_secs_total: f64,
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Rolling content key of one page given its predecessor's key: mixing
+/// the previous key into every token hash chains the whole prefix, so
+/// page `k`'s key commits to tokens `[0, (k+1) * block_size)`.
+fn chain_key(prev: u64, page: &[i32]) -> u64 {
+    let mut h = splitmix64(prev ^ 0xA1B2_C3D4_E5F6_0718);
+    for &t in page {
+        h = splitmix64(h ^ (t as u64));
+    }
+    h
+}
+
+/// The disk tier: spill file + suspended sessions + prefix store.
+pub struct TieredKv {
+    spill: SpillFile,
+    sessions: HashMap<String, SessionEntry>,
+    /// Chain key -> published page; `None` when `--prefix-store` is off.
+    prefix: Option<HashMap<u64, PrefixNode>>,
+    preemptions: u64,
+    resumes: u64,
+    block_restores: u64,
+    restore_failures: u64,
+    session_resumes: u64,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    promotes: u64,
+    promote_secs_total: f64,
+}
+
+impl TieredKv {
+    /// Open the tier: create (truncate) the spill file at `path` with
+    /// slots sized for `pool`'s largest page record, budgeted to
+    /// `max_slots` slots (0 = unbounded), with the prefix store on or
+    /// off.
+    pub fn new(
+        path: &str,
+        pool: &BlockPool,
+        max_slots: usize,
+        prefix_store: bool,
+    ) -> Result<TieredKv> {
+        let spill = SpillFile::create(path, pool.max_export_bytes(), max_slots)?;
+        Ok(TieredKv {
+            spill,
+            sessions: HashMap::new(),
+            prefix: prefix_store.then(HashMap::new),
+            preemptions: 0,
+            resumes: 0,
+            block_restores: 0,
+            restore_failures: 0,
+            session_resumes: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            promotes: 0,
+            promote_secs_total: 0.0,
+        })
+    }
+
+    /// Arm the `spill_io` fault point on the underlying file.
+    pub fn set_fault(&mut self, plan: Arc<FaultPlan>) {
+        self.spill.set_fault(plan);
+    }
+
+    /// Whether `n` more pages fit in the slot budget right now.
+    pub fn can_spill(&self, n: usize) -> bool {
+        self.spill.available() >= n
+    }
+
+    /// Export every block of `table` to spill slots (ascending page
+    /// order).  All-or-nothing: a mid-way failure frees the slots already
+    /// written and returns the error, leaving the pool pages untouched.
+    pub fn spill_table(&mut self, pool: &BlockPool, table: &[usize]) -> Result<Vec<u64>> {
+        let mut slots = Vec::with_capacity(table.len());
+        for &id in table {
+            match self.spill.write_slot(&pool.export_block(id)) {
+                Ok(s) => slots.push(s),
+                Err(e) => {
+                    self.free_slots(&slots);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(slots)
+    }
+
+    /// Restore a spilled page run into freshly allocated pool blocks,
+    /// returning the new block table (ascending page order).  The caller
+    /// must have checked `pool.available() >= slots.len()`.
+    /// All-or-nothing: any failure releases the blocks acquired so far
+    /// and returns the error (slots are left live either way — the
+    /// caller decides their fate).  When `free_slots` is set, a
+    /// successful restore returns the slots to the free list (the page
+    /// moved back to RAM for good); leave it unset for read-shared
+    /// prefix slots.
+    pub fn restore_table(
+        &mut self,
+        pool: &mut BlockPool,
+        slots: &[u64],
+        free_slots: bool,
+    ) -> Result<Vec<usize>> {
+        let mut table = Vec::with_capacity(slots.len());
+        let mut failed: Option<Error> = None;
+        for &slot in slots {
+            let bytes = match self.spill.read_slot(slot) {
+                Ok(b) => b,
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            };
+            let id = match pool.try_alloc() {
+                Some(id) => id,
+                None => {
+                    failed = Some(Error::config("kv spill: pool exhausted mid-restore"));
+                    break;
+                }
+            };
+            if let Err(e) = pool.import_block(id, &bytes) {
+                pool.release(id);
+                failed = Some(e);
+                break;
+            }
+            table.push(id);
+            self.block_restores += 1;
+        }
+        if let Some(e) = failed {
+            for &id in &table {
+                pool.release(id);
+            }
+            self.restore_failures += 1;
+            return Err(e);
+        }
+        if free_slots {
+            self.free_slots(slots);
+        }
+        Ok(table)
+    }
+
+    /// Return a batch of slots to the free list.
+    pub fn free_slots(&mut self, slots: &[u64]) {
+        for &s in slots {
+            self.spill.free_slot(s);
+        }
+    }
+
+    /// Count one scheduler preemption / one resumed sequence.
+    pub fn note_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    pub fn note_resume(&mut self) {
+        self.resumes += 1;
+    }
+
+    // -- sessions ----------------------------------------------------------
+
+    /// Park a finished-or-disconnected session's spilled state.  A
+    /// same-id session already parked is replaced (its slots freed) —
+    /// last writer wins, exactly like a client re-running a turn.
+    pub fn store_session(&mut self, id: String, entry: SessionEntry) {
+        if let Some(old) = self.sessions.insert(id, entry) {
+            self.free_slots(&old.slots);
+        }
+    }
+
+    /// Peek a parked session (resume admission checks the prompt
+    /// extends the stored history before committing).
+    pub fn session(&self, id: &str) -> Option<&SessionEntry> {
+        self.sessions.get(id)
+    }
+
+    /// Claim a parked session for resume; the caller now owns its slots.
+    pub fn take_session(&mut self, id: &str) -> Option<SessionEntry> {
+        let e = self.sessions.remove(id);
+        if e.is_some() {
+            self.session_resumes += 1;
+        }
+        e
+    }
+
+    /// Discard a parked session and free its slots.
+    pub fn drop_session(&mut self, id: &str) {
+        if let Some(e) = self.sessions.remove(id) {
+            self.free_slots(&e.slots);
+        }
+    }
+
+    // -- prefix store ------------------------------------------------------
+
+    /// Whether the content-keyed prefix store is enabled.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Longest stored page run matching `prompt`'s leading full pages:
+    /// returns the slots, ascending page order (empty = no match).  Each
+    /// matched page is verified against the *full* stored token prefix,
+    /// so a match is exact by construction.  Counts one hit or miss when
+    /// the store is enabled and the prompt has at least one full page.
+    pub fn prefix_match(&mut self, prompt: &[i32], block_size: usize) -> Vec<u64> {
+        let Some(nodes) = &self.prefix else { return Vec::new() };
+        if prompt.len() < block_size {
+            return Vec::new();
+        }
+        let mut slots = Vec::new();
+        let mut key = 0u64;
+        let mut upto = block_size;
+        while upto <= prompt.len() {
+            key = chain_key(key, &prompt[upto - block_size..upto]);
+            match nodes.get(&key) {
+                Some(n) if n.prefix == prompt[..upto] => slots.push(n.slot),
+                _ => break,
+            }
+            upto += block_size;
+        }
+        if slots.is_empty() {
+            self.prefix_misses += 1;
+        } else {
+            self.prefix_hits += 1;
+        }
+        slots
+    }
+
+    /// Publish the leading `pages` fully committed prompt pages of a
+    /// running sequence (called after `seal_committed`, so under a
+    /// quantized layout the exported pages are sealed).  Pages already
+    /// published under the same chain key are skipped; new pages are
+    /// budget-gated (insertion simply stops when the slot budget is
+    /// full).  Returns how many leading pages are now covered, which the
+    /// scheduler remembers per sequence to avoid re-walking every tick.
+    pub fn publish_prefix(
+        &mut self,
+        pool: &BlockPool,
+        prompt: &[i32],
+        table: &[usize],
+        pages: usize,
+    ) -> usize {
+        if self.prefix.is_none() {
+            return 0;
+        }
+        let bs = pool.block_size();
+        let mut key = 0u64;
+        let mut done = 0usize;
+        for k in 0..pages.min(table.len()) {
+            let upto = (k + 1) * bs;
+            if upto > prompt.len() {
+                break;
+            }
+            key = chain_key(key, &prompt[upto - bs..upto]);
+            let nodes = self.prefix.as_ref().unwrap();
+            if !nodes.contains_key(&key) {
+                if self.spill.available() == 0 {
+                    break;
+                }
+                let Ok(slot) = self.spill.write_slot(&pool.export_block(table[k])) else {
+                    break;
+                };
+                self.prefix
+                    .as_mut()
+                    .unwrap()
+                    .insert(key, PrefixNode { slot, prefix: prompt[..upto].to_vec() });
+            }
+            done = k + 1;
+        }
+        done
+    }
+
+    /// Count one prefix promotion of `secs` wall-clock.
+    pub fn note_promote(&mut self, secs: f64) {
+        self.promotes += 1;
+        self.promote_secs_total += secs;
+    }
+
+    /// Snapshot (the scheduler fills in `suspended`).
+    pub fn stats(&self) -> TierStats {
+        let s = self.spill.stats();
+        TierStats {
+            spilled_blocks: s.slots_used,
+            spilled_bytes: s.bytes_used,
+            slots_resident: s.slots_resident,
+            slots_total: s.slots_total,
+            spill_writes: s.writes,
+            spill_reads: s.reads,
+            preemptions: self.preemptions,
+            resumes: self.resumes,
+            suspended: 0,
+            block_restores: self.block_restores,
+            restore_failures: self.restore_failures,
+            sessions_stored: self.sessions.len(),
+            session_resumes: self.session_resumes,
+            prefix_pages: self.prefix.as_ref().map_or(0, |m| m.len()),
+            prefix_hits: self.prefix_hits,
+            prefix_misses: self.prefix_misses,
+            promotes: self.promotes,
+            promote_secs_total: self.promote_secs_total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::block::KvLayout;
+    use crate::serve::paged::PagedKvCache;
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("repro-tier-{}-{name}.bin", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    fn filled_pool(layout: KvLayout) -> (BlockPool, PagedKvCache) {
+        let (layers, d, bs) = (2usize, 8usize, 4usize);
+        let mut pool = BlockPool::with_layout(layers, d, bs, 8, layout);
+        let mut c = PagedKvCache::new(&pool);
+        c.reserve(7, &mut pool).unwrap();
+        for layer in 0..layers {
+            let k: Vec<f32> = (0..7 * d).map(|i| (i as f32 * 0.9 + layer as f32).sin()).collect();
+            let v: Vec<f32> = (0..7 * d).map(|i| (i as f32 * 0.4 - layer as f32).cos()).collect();
+            c.write_rows(&mut pool, layer, &k, &v).unwrap();
+        }
+        c.advance(7);
+        c.seal_committed(&mut pool);
+        (pool, c)
+    }
+
+    #[test]
+    fn spill_restore_roundtrip_preserves_bytes() {
+        for layout in [
+            KvLayout::F32,
+            KvLayout::Quant { bits: 8, group: 8 },
+            KvLayout::Quant { bits: 4, group: 8 },
+        ] {
+            let (mut pool, mut c) = filled_pool(layout);
+            let path = tmp(&format!("rt{}", pool.kv_bits()));
+            let mut tier = TieredKv::new(&path, &pool, 0, false).unwrap();
+            let before: Vec<Vec<u8>> =
+                c.table().iter().map(|&id| pool.export_block(id)).collect();
+
+            let slots = tier.spill_table(&pool, c.table()).unwrap();
+            c.release_all(&mut pool);
+            assert_eq!(tier.stats().spilled_blocks, 2);
+
+            let table = tier.restore_table(&mut pool, &slots, true).unwrap();
+            let c2 = PagedKvCache::from_parts(&pool, table, 7);
+            let after: Vec<Vec<u8>> =
+                c2.table().iter().map(|&id| pool.export_block(id)).collect();
+            assert_eq!(before, after, "restored pages must be byte-identical ({layout:?})");
+            assert_eq!(tier.stats().spilled_blocks, 0, "slots freed after restore");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn sessions_park_and_resume_once() {
+        let (pool, _c) = filled_pool(KvLayout::F32);
+        let path = tmp("sess");
+        let mut tier = TieredKv::new(&path, &pool, 0, false).unwrap();
+        tier.store_session(
+            "a".into(),
+            SessionEntry { tokens: vec![1, 2, 3], kv_len: 2, slots: vec![], adapter: None },
+        );
+        assert_eq!(tier.stats().sessions_stored, 1);
+        assert!(tier.session("a").is_some());
+        let e = tier.take_session("a").unwrap();
+        assert_eq!(e.tokens, vec![1, 2, 3]);
+        assert!(tier.take_session("a").is_none(), "claimed once");
+        assert_eq!(tier.stats().session_resumes, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefix_store_publishes_and_matches_exactly() {
+        let (pool, c) = filled_pool(KvLayout::Quant { bits: 8, group: 8 });
+        let path = tmp("prefix");
+        let mut tier = TieredKv::new(&path, &pool, 0, true).unwrap();
+        let prompt: Vec<i32> = (0..7).collect();
+
+        // only the one fully committed page (bs 4, len 7) is publishable
+        let done = tier.publish_prefix(&pool, &prompt, c.table(), 1);
+        assert_eq!(done, 1);
+        assert_eq!(tier.stats().prefix_pages, 1);
+        // republish is a no-op
+        assert_eq!(tier.publish_prefix(&pool, &prompt, c.table(), 1), 1);
+        assert_eq!(tier.stats().prefix_pages, 1);
+
+        // same leading page matches, regardless of what follows
+        assert_eq!(tier.prefix_match(&[0, 1, 2, 3, 9, 9], 4).len(), 1);
+        // different token in the covered range: no match (exact verify)
+        assert!(tier.prefix_match(&[0, 1, 2, 9, 9, 9], 4).is_empty());
+        // shorter than a page: no consult
+        assert!(tier.prefix_match(&[0, 1, 2], 4).is_empty());
+        let s = tier.stats();
+        assert_eq!((s.prefix_hits, s.prefix_misses), (1, 1));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,308 @@
+//! The spill file: a flat, slot-granular second tier for KV pages.
+//!
+//! A [`SpillFile`] stores [`crate::serve::BlockPool::export_block`]
+//! records — one KV page per slot — in a single append/recycle file.
+//! Slots are fixed-size (the pool's `max_export_bytes`, so a staged f32
+//! page and a sealed quantized page share one geometry), addressed by a
+//! dense `u64` id, and recycled through an in-memory free list.  The
+//! file is truncated at boot: the tier is a *spill* target (an extension
+//! of RAM for the current process), not a database — nothing in it is
+//! meaningful across restarts, which is why no on-disk allocation state
+//! exists.
+//!
+//! ## On-disk format
+//!
+//! ```text
+//! header (64 bytes):  "APIQSPIL" | version u32 LE | slot_bytes u64 LE | zero pad
+//! slot i at 64 + i * (8 + slot_bytes):
+//!                     crc32 u32 LE | payload_len u32 LE | payload | pad
+//! ```
+//!
+//! Every read verifies the stored CRC32 (same table as the checkpoint
+//! trailers) before handing bytes back; a mismatch — or a fired
+//! `spill_io` fault point — surfaces as an error the scheduler turns
+//! into an `internal` finish for the one affected sequence.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::model::checkpoint::crc32;
+use crate::obs::{FaultPlan, FaultPoint};
+
+const MAGIC: &[u8; 8] = b"APIQSPIL";
+const VERSION: u32 = 1;
+const HEADER_BYTES: u64 = 64;
+/// Per-slot on-disk prefix: CRC32 + payload length.
+const SLOT_HEADER: usize = 8;
+
+/// Aggregate spill-file statistics (stats frame + Prometheus).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpillStats {
+    /// Slot capacity (0 = unbounded).
+    pub slots_total: usize,
+    /// Slots ever created (file extent).
+    pub slots_resident: usize,
+    /// Slots currently holding a live page.
+    pub slots_used: usize,
+    /// Live payload bytes on disk.
+    pub bytes_used: u64,
+    /// Slot writes so far.
+    pub writes: u64,
+    /// Slot reads so far (successful or not).
+    pub reads: u64,
+}
+
+/// Slot-granular spill file (format in the module docs).
+pub struct SpillFile {
+    file: File,
+    /// Max payload bytes one slot can hold.
+    slot_bytes: usize,
+    /// Slot budget; 0 = grow without bound.
+    max_slots: usize,
+    /// Slots ever appended (dense ids `0..next_slot`).
+    next_slot: u64,
+    free: Vec<u64>,
+    /// Live payload length per slot id (0 = free).
+    lens: Vec<u32>,
+    bytes_used: u64,
+    writes: u64,
+    reads: u64,
+    fault: Option<Arc<FaultPlan>>,
+}
+
+impl SpillFile {
+    /// Create (truncating) the spill file at `path` with `slot_bytes`
+    /// payload capacity per slot and a budget of `max_slots` slots
+    /// (0 = unbounded).
+    pub fn create(path: &str, slot_bytes: usize, max_slots: usize) -> Result<SpillFile> {
+        if slot_bytes == 0 {
+            return Err(Error::config("kv spill: slot size must be nonzero"));
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .map_err(|e| Error::config(format!("kv spill: cannot create '{path}': {e}")))?;
+        let mut header = [0u8; HEADER_BYTES as usize];
+        header[..8].copy_from_slice(MAGIC);
+        header[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        header[12..20].copy_from_slice(&(slot_bytes as u64).to_le_bytes());
+        file.write_all(&header)
+            .map_err(|e| Error::config(format!("kv spill: header write failed: {e}")))?;
+        Ok(SpillFile {
+            file,
+            slot_bytes,
+            max_slots,
+            next_slot: 0,
+            free: Vec::new(),
+            lens: Vec::new(),
+            bytes_used: 0,
+            writes: 0,
+            reads: 0,
+            fault: None,
+        })
+    }
+
+    /// Arm the `spill_io` fault-injection point (`--fault spill_io:...`).
+    pub fn set_fault(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
+    }
+
+    /// Max payload bytes one slot holds.
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    /// Slots `write_slot` could hand out right now without exceeding the
+    /// budget (`usize::MAX` when unbounded).
+    pub fn available(&self) -> usize {
+        if self.max_slots == 0 {
+            usize::MAX
+        } else {
+            self.free.len() + self.max_slots.saturating_sub(self.next_slot as usize)
+        }
+    }
+
+    fn offset(&self, slot: u64) -> u64 {
+        HEADER_BYTES + slot * (SLOT_HEADER + self.slot_bytes) as u64
+    }
+
+    /// Store one page record, recycling a freed slot when possible.
+    /// Errors when the payload exceeds the slot size or the slot budget
+    /// is exhausted — the caller backs out of the spill (the sequence
+    /// finishes the way it would have without a tier).
+    pub fn write_slot(&mut self, payload: &[u8]) -> Result<u64> {
+        if payload.len() > self.slot_bytes {
+            return Err(Error::config(format!(
+                "kv spill: page record of {} bytes exceeds slot size {}",
+                payload.len(),
+                self.slot_bytes
+            )));
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                if self.max_slots > 0 && self.next_slot as usize >= self.max_slots {
+                    return Err(Error::config(format!(
+                        "kv spill: slot budget exhausted ({} slots)",
+                        self.max_slots
+                    )));
+                }
+                let s = self.next_slot;
+                self.next_slot += 1;
+                self.lens.push(0);
+                s
+            }
+        };
+        let mut rec = Vec::with_capacity(SLOT_HEADER + payload.len());
+        rec.extend_from_slice(&crc32(payload).to_le_bytes());
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(payload);
+        let off = self.offset(slot);
+        let res = self
+            .file
+            .seek(SeekFrom::Start(off))
+            .and_then(|_| self.file.write_all(&rec));
+        if let Err(e) = res {
+            self.free.push(slot);
+            return Err(Error::config(format!("kv spill: slot {slot} write failed: {e}")));
+        }
+        self.lens[slot as usize] = payload.len() as u32;
+        self.bytes_used += payload.len() as u64;
+        self.writes += 1;
+        Ok(slot)
+    }
+
+    /// Read one page record back, verifying its CRC32.  The slot stays
+    /// live — callers pair this with [`SpillFile::free_slot`] when the
+    /// page moves back to RAM for good (suspend/resume), and leave it
+    /// live for shared read-many records (prefix store).  Evaluates the
+    /// `spill_io` fault point: a fired fault reports as a CRC-style
+    /// corruption error.
+    pub fn read_slot(&mut self, slot: u64) -> Result<Vec<u8>> {
+        self.reads += 1;
+        if let Some(f) = &self.fault {
+            if f.fires(FaultPoint::SpillIo) {
+                return Err(Error::config(format!(
+                    "kv spill: slot {slot} read failed (injected fault)"
+                )));
+            }
+        }
+        if slot >= self.next_slot || self.lens[slot as usize] == 0 {
+            return Err(Error::config(format!("kv spill: read of dead slot {slot}")));
+        }
+        let off = self.offset(slot);
+        let mut head = [0u8; SLOT_HEADER];
+        self.file
+            .seek(SeekFrom::Start(off))
+            .and_then(|_| self.file.read_exact(&mut head))
+            .map_err(|e| Error::config(format!("kv spill: slot {slot} read failed: {e}")))?;
+        let want = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+        let len = u32::from_le_bytes([head[4], head[5], head[6], head[7]]) as usize;
+        if len > self.slot_bytes {
+            return Err(Error::config(format!(
+                "kv spill: slot {slot} header claims {len} bytes (slot size {})",
+                self.slot_bytes
+            )));
+        }
+        let mut payload = vec![0u8; len];
+        self.file
+            .read_exact(&mut payload)
+            .map_err(|e| Error::config(format!("kv spill: slot {slot} read failed: {e}")))?;
+        let got = crc32(&payload);
+        if got != want {
+            return Err(Error::config(format!(
+                "kv spill: slot {slot} CRC32 mismatch (stored {want:#010x}, computed \
+                 {got:#010x}) — record corrupt"
+            )));
+        }
+        Ok(payload)
+    }
+
+    /// Return `slot` to the free list.
+    pub fn free_slot(&mut self, slot: u64) {
+        debug_assert!(slot < self.next_slot, "free of an unknown slot");
+        let len = std::mem::take(&mut self.lens[slot as usize]);
+        debug_assert!(len > 0, "double free of slot {slot}");
+        self.bytes_used -= len as u64;
+        self.free.push(slot);
+    }
+
+    /// Snapshot of slot occupancy and traffic counters.
+    pub fn stats(&self) -> SpillStats {
+        SpillStats {
+            slots_total: self.max_slots,
+            slots_resident: self.next_slot as usize,
+            slots_used: self.next_slot as usize - self.free.len(),
+            bytes_used: self.bytes_used,
+            writes: self.writes,
+            reads: self.reads,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("repro-spill-{}-{name}.bin", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn write_read_free_recycle() {
+        let path = tmp("basic");
+        let mut f = SpillFile::create(&path, 64, 2).unwrap();
+        let a = f.write_slot(&[1, 2, 3]).unwrap();
+        let b = f.write_slot(&vec![9u8; 64]).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(f.read_slot(a).unwrap(), vec![1, 2, 3]);
+        assert_eq!(f.read_slot(b).unwrap(), vec![9u8; 64]);
+        assert!(f.write_slot(&[0]).is_err(), "budget of 2 slots is exhausted");
+        assert!(f.write_slot(&vec![0u8; 65]).is_err(), "oversized payload rejected");
+
+        f.free_slot(a);
+        let c = f.write_slot(&[7, 7]).unwrap();
+        assert_eq!(c, a, "freed slot is recycled, not grown");
+        assert_eq!(f.read_slot(c).unwrap(), vec![7, 7]);
+        let s = f.stats();
+        assert_eq!((s.slots_resident, s.slots_used), (2, 2));
+        assert_eq!(s.bytes_used, 64 + 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let path = tmp("corrupt");
+        let mut f = SpillFile::create(&path, 32, 0).unwrap();
+        let a = f.write_slot(&[5u8; 16]).unwrap();
+        // flip one payload byte behind the CRC's back
+        let mut raw = std::fs::read(&path).unwrap();
+        let off = 64 + 8 + 3;
+        raw[off] ^= 0xff;
+        std::fs::write(&path, &raw).unwrap();
+        // swap the live handle for one on the rewritten file
+        f.file = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+        let err = f.read_slot(a).unwrap_err().to_string();
+        assert!(err.contains("CRC32 mismatch"), "got: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spill_io_fault_fails_reads_deterministically() {
+        let path = tmp("fault");
+        let mut f = SpillFile::create(&path, 16, 0).unwrap();
+        f.set_fault(Arc::new(FaultPlan::parse("spill_io:@2:3").unwrap()));
+        let a = f.write_slot(&[1]).unwrap();
+        assert!(f.read_slot(a).is_ok(), "1st read clean");
+        assert!(f.read_slot(a).is_err(), "2nd read injected to fail");
+        assert!(f.read_slot(a).is_ok(), "one-shot fault clears");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -98,6 +98,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize, adapter: Option<&str>) -> Gen
         adapter: adapter.map(String::from),
         queued_at: std::time::Instant::now(),
         deadline: None,
+        session: None,
     }
 }
 

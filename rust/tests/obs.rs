@@ -58,6 +58,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         adapter: None,
         queued_at: std::time::Instant::now(),
         deadline: None,
+        session: None,
     }
 }
 
@@ -188,7 +189,7 @@ fn tick_record_roundtrips_through_journal_json() {
     let rec = TickRecord {
         seq: 42,
         at_secs: 1.25, // exact in the journal's µs rounding
-        phase_ns: [100, 2000, 0, 30_000, 400_000, 5_000_000, 60],
+        phase_ns: [100, 2000, 0, 30_000, 400_000, 5_000_000, 60, 700],
         batch: 3,
         pending: 2,
         admitted: 1,

@@ -67,6 +67,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         adapter: None,
         queued_at: Instant::now(),
         deadline: None,
+        session: None,
     }
 }
 

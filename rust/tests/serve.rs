@@ -173,6 +173,7 @@ fn req(key: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
         adapter: None,
         queued_at: std::time::Instant::now(),
         deadline: None,
+        session: None,
     }
 }
 

@@ -1,0 +1,428 @@
+//! Tiered-KV integration tests: spill -> restore byte identity across
+//! every page layout, forced preempt-to-spill decode that stays bitwise
+//! identical to a memory-only run at several page sizes, session
+//! suspend/resume matching a never-suspended continuation token for
+//! token, prefix-store hits across requests with zero re-prefill, and
+//! injected `spill_io` faults contained to single sequences.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use repro::data::{Batcher, ZipfMarkovCorpus};
+use repro::infer::PackedModel;
+use repro::model::{ParamStore, TINY};
+use repro::obs::FaultPlan;
+use repro::quant::QuantSpec;
+use repro::serve::scheduler::{FinishReason, GenRequest, StepEvent};
+use repro::serve::{
+    BlockPool, KvLayout, PagedKvCache, RequestStats, SchedConfig, Scheduler, SpillFile, TieredKv,
+};
+use repro::tensor::{IntTensor, Rng, Tensor};
+
+/// Open-clip qparams with live (random) LoRA B so adapters contribute.
+fn open_qparams_with_lora(spec: QuantSpec, rank: usize, seed: u64) -> ParamStore {
+    let mut qp = TINY.init_qparams(spec, rank, false, seed);
+    let mut rng = Rng::new(seed ^ 0x10FA);
+    for key in qp.keys().cloned().collect::<Vec<_>>() {
+        if key.ends_with(".gamma") || key.ends_with(".beta") {
+            for v in qp.get_mut(&key).unwrap().data_mut() {
+                *v = 30.0;
+            }
+        } else if key.ends_with(".lora_b") {
+            let shape = qp.get(&key).unwrap().shape().to_vec();
+            qp.insert(key, Tensor::randn(&shape, 0.05, &mut rng));
+        }
+    }
+    qp
+}
+
+fn packed_tiny(seed: u64) -> PackedModel {
+    let spec = QuantSpec::new(2, 64);
+    let params = TINY.init_params(seed);
+    let qp = open_qparams_with_lora(spec, 4, seed ^ 0xAD);
+    PackedModel::build(TINY, &params, Some(&qp), spec, 1.0).unwrap()
+}
+
+fn tiny_prompt(batch: usize, len: usize, seed: u64) -> IntTensor {
+    let corpus = ZipfMarkovCorpus::new(TINY.vocab, seed);
+    Batcher::new(batch, len).lm_batch(&corpus, &mut Rng::new(seed ^ 0x77)).tokens
+}
+
+fn req(key: u64, prompt: Vec<i32>, max_new: usize, session: Option<&str>) -> GenRequest {
+    GenRequest {
+        key,
+        id: format!("r{key}"),
+        prompt,
+        max_new,
+        sampling: None,
+        stop: None,
+        adapter: None,
+        queued_at: std::time::Instant::now(),
+        deadline: None,
+        session: session.map(String::from),
+    }
+}
+
+fn drain(sched: &mut Scheduler<'_>) -> Vec<StepEvent> {
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while sched.has_work() {
+        events.extend(sched.step().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to converge");
+    }
+    events
+}
+
+fn gen_tokens(events: &[StepEvent], key: u64) -> Vec<i32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Token { key: k, token, .. } if *k == key => Some(*token),
+            _ => None,
+        })
+        .collect()
+}
+
+fn done_stats(events: &[StepEvent], key: u64) -> (FinishReason, RequestStats) {
+    events
+        .iter()
+        .find_map(|e| match e {
+            StepEvent::Done { key: k, finish, stats, .. } if *k == key => Some((*finish, *stats)),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("request {key} never finished"))
+}
+
+/// Terminal event per key: `Ok(finish)` for `Done`, `Err(code)` for
+/// `Rejected`.  Panics on a key reaching two terminals.
+fn terminals(events: &[StepEvent]) -> HashMap<u64, Result<FinishReason, &'static str>> {
+    let mut out = HashMap::new();
+    for e in events {
+        let (k, t) = match e {
+            StepEvent::Done { key, finish, .. } => (*key, Ok(*finish)),
+            StepEvent::Rejected { key, code, .. } => (*key, Err(*code)),
+            StepEvent::Token { .. } => continue,
+        };
+        assert!(out.insert(k, t).is_none(), "request {k} reached two terminal events");
+    }
+    out
+}
+
+fn tmp(name: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("repro-tiered-{}-{name}.bin", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Attach a fresh unbounded tier to `sched`, spilling to a temp file.
+fn attach_tier(sched: &mut Scheduler<'_>, name: &str, prefix: bool) -> String {
+    let path = tmp(name);
+    let tier = TieredKv::new(&path, sched.pool(), 0, prefix).unwrap();
+    sched.attach_tier(tier);
+    path
+}
+
+// ---------------------------------------------------------------------------
+// spill -> restore byte identity, all layouts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spill_restore_is_byte_identical_for_f32_and_quant_layouts() {
+    for (li, layout) in [
+        KvLayout::F32,
+        KvLayout::Quant { bits: 8, group: 8 },
+        KvLayout::Quant { bits: 4, group: 8 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let (layers, d, bs) = (2usize, 8usize, 4usize);
+        let mut pool = BlockPool::with_layout(layers, d, bs, 8, layout);
+        let mut cache = PagedKvCache::new(&pool);
+        cache.reserve(7, &mut pool).unwrap();
+        for layer in 0..layers {
+            let k: Vec<f32> =
+                (0..7 * d).map(|i| (i as f32 * 0.9 + layer as f32).sin()).collect();
+            let v: Vec<f32> =
+                (0..7 * d).map(|i| (i as f32 * 0.4 - layer as f32).cos()).collect();
+            cache.write_rows(&mut pool, layer, &k, &v).unwrap();
+        }
+        cache.advance(7);
+        // 7 positions over 4-position pages: one sealed page (under the
+        // quant layouts) + one staged partial tail.
+        cache.seal_committed(&mut pool);
+
+        let path = tmp(&format!("roundtrip-{li}"));
+        let mut spill = SpillFile::create(&path, pool.max_export_bytes(), 0).unwrap();
+        let before: Vec<Vec<u8>> =
+            cache.table().iter().map(|&id| pool.export_block(id)).collect();
+        let slots: Vec<u64> =
+            before.iter().map(|rec| spill.write_slot(rec).unwrap()).collect();
+
+        // Restore into a second cache whose pages are first overwritten
+        // with garbage (released blocks keep stale bytes, which would
+        // make a no-op import pass) — the re-export matching proves the
+        // file round-trip is verbatim, staged or sealed, at any width.
+        cache.release_all(&mut pool);
+        let mut cache2 = PagedKvCache::new(&pool);
+        cache2.reserve(7, &mut pool).unwrap();
+        let junk = vec![1.25f32; 7 * d];
+        for layer in 0..layers {
+            cache2.write_rows(&mut pool, layer, &junk, &junk).unwrap();
+        }
+        cache2.advance(7);
+        cache2.seal_committed(&mut pool);
+        for (i, (&slot, &id)) in slots.iter().zip(cache2.table()).enumerate() {
+            let rec = spill.read_slot(slot).unwrap();
+            assert_eq!(rec, before[i], "layout {li}: file altered record {i}");
+            pool.import_block(id, &rec).unwrap();
+        }
+        for (i, &id) in cache2.table().iter().enumerate() {
+            assert_eq!(
+                pool.export_block(id),
+                before[i],
+                "layout {li}: restored page {i} not byte-identical"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// forced spill decode == memory-only decode, bitwise, several page sizes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_spill_decode_is_bitwise_identical_to_memory_only() {
+    let model = packed_tiny(31);
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|i| tiny_prompt(1, 5 + i, 131 + i as u64).data().to_vec())
+        .collect();
+    let max_new = |i: usize| 8 + i;
+
+    for bs in [1usize, 7, 64] {
+        // A: memory-only oracle with an auto-sized (ample) budget.
+        let ample = SchedConfig {
+            max_batch: 3,
+            max_new_cap: 32,
+            max_prompt: 64,
+            kv_block: bs,
+            ..Default::default()
+        };
+        let mut plain = Scheduler::new(&model, ample);
+        for (i, p) in prompts.iter().enumerate() {
+            plain.submit(req(i as u64, p.clone(), max_new(i), None));
+        }
+        let ev_a = drain(&mut plain);
+
+        // B: a budget one block past the longest single sequence — any
+        // one request fits (so resume always can), but three running
+        // concurrently MUST preempt-to-spill and resume from disk.  At
+        // kv_block 64 this is 2 blocks for three 1-block sequences: the
+        // third backs off at admission, then Hook-A-preempts an active
+        // victim the next tick.
+        let worst = 7 + max_new(2); // longest prompt + its new tokens
+        let tight = SchedConfig {
+            kv_blocks_total: worst.div_ceil(bs) + 1,
+            ..ample
+        };
+        let mut tiered = Scheduler::new(&model, tight);
+        attach_tier(&mut tiered, &format!("bitwise-{bs}"), false);
+        for (i, p) in prompts.iter().enumerate() {
+            tiered.submit(req(i as u64, p.clone(), max_new(i), None));
+        }
+        let ev_b = drain(&mut tiered);
+
+        let stats = tiered.tier_stats().expect("tier attached");
+        assert!(
+            stats.preemptions > 0,
+            "kv_block {bs}: budget never forced a spill — the scenario is vacuous"
+        );
+        assert_eq!(stats.resumes, stats.preemptions, "every spilled sequence resumed");
+        assert_eq!(stats.restore_failures, 0);
+        assert_eq!(stats.spilled_blocks, 0, "all slots freed after the run");
+
+        for key in 0..3u64 {
+            let (fa, _) = done_stats(&ev_a, key);
+            let (fb, _) = done_stats(&ev_b, key);
+            assert!(matches!(fa, FinishReason::Length));
+            assert!(
+                matches!(fb, FinishReason::Length),
+                "kv_block {bs}: request {key} finished {fb:?} under the tier, not length"
+            );
+            let a = gen_tokens(&ev_a, key);
+            let b = gen_tokens(&ev_b, key);
+            assert!(!a.is_empty(), "request {key} produced no tokens");
+            assert_eq!(
+                a, b,
+                "kv_block {bs}: spill/restore changed request {key}'s token stream"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// session suspend/resume == never-suspended continuation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_resume_continues_bitwise_with_zero_reprefill() {
+    let model = packed_tiny(47);
+    let cfg = SchedConfig {
+        max_batch: 2,
+        max_new_cap: 32,
+        max_prompt: 64,
+        kv_block: 4,
+        ..Default::default()
+    };
+    let prompt = tiny_prompt(1, 6, 211).data().to_vec();
+
+    // Oracle: one request generating the full budget in one sitting.
+    let mut plain = Scheduler::new(&model, cfg);
+    plain.submit(req(0, prompt.clone(), 12, None));
+    let gen_all = gen_tokens(&drain(&mut plain), 0);
+    assert_eq!(gen_all.len(), 12);
+
+    // Session: half the budget, park, then continue under the same id
+    // with the prompt extended by everything generated so far.
+    let mut sched = Scheduler::new(&model, cfg);
+    attach_tier(&mut sched, "session", false);
+    sched.submit(req(1, prompt.clone(), 6, Some("alice")));
+    let ev1 = drain(&mut sched);
+    let gen_a = gen_tokens(&ev1, 1);
+    assert_eq!(gen_a.len(), 6);
+    let stats = sched.tier_stats().unwrap();
+    assert_eq!(stats.sessions_stored, 1, "finished session must park on the tier");
+    assert!(stats.spilled_blocks > 0, "parked session holds spill slots");
+
+    let mut prompt2 = prompt.clone();
+    prompt2.extend(gen_a.iter().copied());
+    sched.submit(req(2, prompt2.clone(), 6, Some("alice")));
+    let ev2 = drain(&mut sched);
+    let gen_b = gen_tokens(&ev2, 2);
+    assert_eq!(gen_b.len(), 6);
+
+    let (finish, rstats) = done_stats(&ev2, 2);
+    assert!(matches!(finish, FinishReason::Length));
+    assert_eq!(
+        rstats.shared_prefix_tokens,
+        prompt2.len() - 1,
+        "resume must restore every reusable position (zero re-prefill)"
+    );
+    let stats = sched.tier_stats().unwrap();
+    assert_eq!(stats.session_resumes, 1);
+    assert_eq!(stats.restore_failures, 0);
+
+    let mut joined = gen_a;
+    joined.extend(gen_b);
+    assert_eq!(joined, gen_all, "suspend/resume changed the token stream");
+}
+
+// ---------------------------------------------------------------------------
+// prefix store: hit across requests, zero re-prefill of stored pages
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_store_serves_whole_pages_across_requests() {
+    let model = packed_tiny(53);
+    // f32 layout: a promoted page is byte-identical to the donor's, so
+    // the second stream must match the first bitwise.  (Quantized
+    // layouts promote SEALED pages where a fresh prefill would stage
+    // f32 rows — bit equality intentionally only holds at kv_bits 16;
+    // see README "Tiered KV".)
+    let cfg = SchedConfig {
+        max_batch: 2,
+        max_new_cap: 32,
+        max_prompt: 64,
+        kv_block: 4,
+        ..Default::default()
+    };
+    // 9 prompt positions over 4-position pages: two whole pages (8
+    // positions) are publishable; the 9th always prefills fresh.
+    let prompt = tiny_prompt(1, 9, 307).data().to_vec();
+
+    let mut sched = Scheduler::new(&model, cfg);
+    attach_tier(&mut sched, "prefix", true);
+    sched.submit(req(0, prompt.clone(), 6, None));
+    let ev1 = drain(&mut sched);
+    let (_, s1) = done_stats(&ev1, 0);
+    assert_eq!(s1.shared_prefix_tokens, 0, "first request has no donor");
+    let stats = sched.tier_stats().unwrap();
+    assert_eq!(stats.prefix_pages, 2, "two whole prompt pages published");
+
+    // Second request, same prompt, after the first fully evicted — the
+    // only donor is the persistent store.
+    sched.submit(req(1, prompt.clone(), 6, None));
+    let ev2 = drain(&mut sched);
+    let (_, s2) = done_stats(&ev2, 1);
+    assert_eq!(
+        s2.shared_prefix_tokens, 8,
+        "stored pages must map in place of re-prefilling"
+    );
+    assert_eq!(gen_tokens(&ev2, 1), gen_tokens(&ev1, 0), "promoted pages changed the stream");
+
+    let stats = sched.tier_stats().unwrap();
+    assert!(stats.prefix_hits >= 1, "store lookup must count a hit");
+    assert!(stats.promotes >= 1, "promotion must be counted");
+    assert_eq!(stats.restore_failures, 0);
+    // Prefix records are read-shared forever: promotion leaves them live.
+    assert_eq!(stats.prefix_pages, 2);
+}
+
+// ---------------------------------------------------------------------------
+// injected spill_io fault: contained to the affected sequence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spill_io_fault_fails_only_the_restored_sequence() {
+    let model = packed_tiny(67);
+    let bs = 4usize;
+    let cfg = SchedConfig {
+        max_batch: 3,
+        max_new_cap: 32,
+        max_prompt: 64,
+        kv_block: bs,
+        // Roughly one sequence's worth of pages — forces preemption.
+        kv_blocks_total: (7 + 10).div_ceil(bs) + 2,
+        ..Default::default()
+    };
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|i| tiny_prompt(1, 5 + i, 401 + i as u64).data().to_vec())
+        .collect();
+
+    let mut sched = Scheduler::new(&model, cfg);
+    attach_tier(&mut sched, "fault", false);
+    // Every spill READ fails; writes are untouched, so sequences still
+    // preempt to disk and then fail to come back.
+    sched.set_fault(Arc::new(FaultPlan::parse("spill_io:1.0:7").unwrap()));
+    for (i, p) in prompts.iter().enumerate() {
+        sched.submit(req(i as u64, p.clone(), 8 + i, None));
+    }
+    let events = drain(&mut sched);
+
+    let stats = sched.tier_stats().unwrap();
+    assert!(stats.preemptions > 0, "budget never forced a spill");
+    assert!(stats.restore_failures > 0, "armed fault never fired on a restore");
+
+    // Exactly one terminal event per request: restore victims answer an
+    // `internal` error, everyone else completes normally.
+    let term = terminals(&events);
+    assert_eq!(term.len(), 3, "every request reaches a terminal event");
+    let mut failed = 0;
+    for (key, t) in &term {
+        match t {
+            Ok(FinishReason::Length) => {}
+            Ok(f) => panic!("request {key} finished {f:?} — fault must not leak into survivors"),
+            Err(code) => {
+                assert_eq!(*code, "internal", "request {key}: wrong error taxonomy");
+                failed += 1;
+            }
+        }
+    }
+    assert_eq!(
+        failed as u64, stats.restore_failures,
+        "each failed restore maps to exactly one internal finish"
+    );
+    assert!(failed < 3, "at least the never-preempted sequence survives");
+}
